@@ -1,0 +1,80 @@
+//! BTrDB-style dashboard: windowed aggregation of µPMU telemetry at
+//! multiple resolutions, with the PULSE-offloaded sum path and the
+//! window_agg XLA artifact for fine-grained rendering (the Mr.-Plotter
+//! use case the paper cites).
+//!
+//!     make artifacts && cargo run --release --example btrdb_dashboard
+
+use pulse::apps::BtrDbApp;
+use pulse::rack::{Rack, RackConfig};
+use pulse::runtime::PjrtRuntime;
+
+const SEC: i64 = 1_000_000_000;
+
+fn spark(frac: f64) -> &'static str {
+    const BARS: [&str; 8] =
+        ["▁", "▂", "▃", "▄", "▅", "▆", "▇", "█"];
+    BARS[((frac.clamp(0.0, 1.0) * 7.0).round()) as usize]
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rack = Rack::new(RackConfig {
+        nodes: 4,
+        node_capacity: 512 << 20,
+        granularity: 1 << 20,
+        ..Default::default()
+    });
+    // ~8.3 minutes of 120 Hz voltage telemetry
+    let app = BtrDbApp::build(&mut rack, 60_000, 42);
+    println!(
+        "ingested {} µPMU samples ({:.1} min @120 Hz)\n",
+        app.samples.len(),
+        app.samples.len() as f64 / 120.0 / 60.0
+    );
+
+    // multi-resolution window means via offloaded aggregation
+    for win_s in [1i64, 2, 4, 8] {
+        let w = win_s * SEC;
+        print!("{win_s}s windows  ");
+        let mut means = Vec::new();
+        for k in 0..32 {
+            let s = app.window_sum(&mut rack, k * w, w);
+            means.push(s.mean_mv);
+        }
+        let lo = means.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = means.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        for m in &means {
+            print!("{}", spark((m - lo) / (hi - lo + 1e-9)));
+        }
+        println!("  [{:.2} .. {:.2}] V", lo / 1e3, hi / 1e3);
+    }
+
+    // fine-grained tile through the AOT XLA artifact (L1 Pallas kernel
+    // executing under the Rust PJRT client)
+    let rt = PjrtRuntime::new(PjrtRuntime::default_dir())?;
+    let exe = rt.load_window_agg(4096, 64)?;
+    let tile = app.render_tile(&exe, 0)?;
+    println!("\nXLA render tile (4096 samples, 64-sample windows):");
+    print!("  min  ");
+    let (lo, hi) = (119.0f32, 121.0f32);
+    for w in 0..64 {
+        print!("{}", spark(((tile.min[w] - lo) / (hi - lo)) as f64));
+    }
+    println!();
+    print!("  max  ");
+    for w in 0..64 {
+        print!("{}", spark(((tile.max[w] - lo) / (hi - lo)) as f64));
+    }
+    println!();
+    println!(
+        "  mean voltage {:.2} V across the tile",
+        tile.mean.iter().sum::<f32>() / 64.0
+    );
+
+    // verify against host reference
+    let got = app.window_sum(&mut rack, 0, 2 * SEC);
+    let want = app.host_window_sum(0, 2 * SEC);
+    assert_eq!(got, want);
+    println!("\noffloaded aggregation ≡ host reference ✓");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Distributed pointer traversals (paper §5): watch a single traversal
+//! hop across memory nodes via in-network re-routing, and compare
+//! PULSE vs PULSE-ACC (return-to-CPU) timing.
+//!
+//!     cargo run --release --example distributed_traversal
+
+use pulse::ds::ForwardList;
+use pulse::isa::SP_WORDS;
+use pulse::rack::{Op, Rack, RackConfig};
+
+fn build(in_network: bool) -> (Rack, ForwardList) {
+    let mut rack = Rack::new(RackConfig {
+        nodes: 4,
+        node_capacity: 64 << 20,
+        granularity: 4096, // 4 KB slabs: aggressive fragmentation
+        in_network_routing: in_network,
+        ..Default::default()
+    });
+    let mut list = ForwardList::new();
+    for i in 0..5_000 {
+        list.push(&mut rack, i);
+    }
+    (rack, list)
+}
+
+fn main() {
+    // --- functional: where does one traversal go? -----------------------
+    let (mut rack, list) = build(true);
+    println!("list of 5000 nodes over 4 KB slabs on 4 memory nodes\n");
+
+    let owners: Vec<_> = {
+        let mut v = Vec::new();
+        let mut cur = list.head;
+        for _ in 0..12 {
+            let node = rack.alloc.owner(cur).unwrap();
+            v.push((cur, node));
+            let mut buf = [0i64; 2];
+            rack.read_words(cur, &mut buf);
+            cur = buf[1] as u64;
+        }
+        v
+    };
+    println!("first 12 hops of the chain:");
+    for (addr, node) in owners {
+        println!("  {addr:#012x} -> memory node {node}");
+    }
+
+    let before = rack.switch.stats.reroutes;
+    let found = list.find(&mut rack, 4_900);
+    println!(
+        "\nfind(4900): {:?}, switch re-routed the request {} times \
+         (no CPU involvement)",
+        found.is_some(),
+        rack.switch.stats.reroutes - before
+    );
+
+    // --- timed: PULSE vs PULSE-ACC (Fig. 9) ------------------------------
+    let run = |in_network: bool| {
+        let (mut rack, list) = build(in_network);
+        let prog = list.find_program();
+        let head = list.head;
+        let mut n = 0;
+        let report = rack.serve(
+            move |_| {
+                n += 1;
+                if n > 100 {
+                    return None;
+                }
+                let mut sp = [0i64; SP_WORDS];
+                sp[0] = 4000 + (n % 900);
+                Some(Op::new(prog.clone(), head, sp))
+            },
+            4,
+        );
+        report
+    };
+    let pulse = run(true);
+    let acc = run(false);
+    println!("\nFig. 9 shape — deep traversals (≈4000 hops):");
+    println!(
+        "  PULSE     : mean {:.1} µs  (in-network re-routing)",
+        pulse.latency.mean() / 1e3
+    );
+    println!(
+        "  PULSE-ACC : mean {:.1} µs  ({:.2}x)",
+        acc.latency.mean() / 1e3,
+        acc.latency.mean() / pulse.latency.mean()
+    );
+    println!(
+        "  cross-node requests: {} / {}",
+        pulse.cross_node_requests, pulse.completed
+    );
+}

@@ -1,0 +1,98 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` serialization) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.
+
+Run once at build time (``make artifacts``): Python never executes on the
+request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+# The PULSE ISA is 64-bit; everything in the logic kernel is i64.
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import isa  # noqa: E402
+
+# Batch sizes the accelerator engine may use. 32 matches one workspace
+# block; 256 amortizes PJRT dispatch for throughput runs.
+LOGIC_BATCHES = (32, 256)
+# (N, window) shapes for the BTrDB finalize kernel. 4096x64 covers the
+# paper's 1 s..8 s windows at 120 Hz µPMU rate after leaf packing.
+WINDOW_SHAPES = ((4096, 64), (4096, 8))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_logic(batch: int) -> str:
+    lowered = jax.jit(model.logic_batch_step).lower(
+        *model.example_args_logic(batch))
+    return to_hlo_text(lowered)
+
+
+def lower_window(n: int, window: int) -> str:
+    fn = lambda v: model.window_aggregate(v, window=window)  # noqa: E731
+    lowered = jax.jit(fn).lower(*model.example_args_window(n, window))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "isa": {
+            "nreg": isa.NREG,
+            "sp_words": isa.SP_WORDS,
+            "data_words": isa.DATA_WORDS,
+            "max_instrs": isa.MAX_INSTRS,
+        },
+        "artifacts": {},
+    }
+
+    for batch in LOGIC_BATCHES:
+        name = "logic_step.hlo.txt" if batch == 32 else (
+            f"logic_step_b{batch}.hlo.txt")
+        text = lower_logic(batch)
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "kind": "logic_step", "batch": batch}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for n, window in WINDOW_SHAPES:
+        name = ("window_agg.hlo.txt" if (n, window) == (4096, 64)
+                else f"window_agg_n{n}_w{window}.hlo.txt")
+        text = lower_window(n, window)
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "kind": "window_agg", "n": n, "window": window}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""PULSE ISA definition (Python mirror).
+
+This module is the single Python-side source of truth for the PULSE
+instruction set (paper §4.1, Table 2). The Rust coordinator has an
+identical definition in ``rust/src/isa/op.rs``; the two are cross-checked
+by the integration tests (random verified programs executed by the native
+Rust interpreter and by the AOT-compiled XLA artifact must produce
+bit-identical workspaces).
+
+Semantics summary
+-----------------
+* 16 general-purpose i64 registers; ``r0`` is ``cur_ptr`` by convention.
+* A 32-word (256 B) ``data`` window: the single aggregated LOAD the memory
+  pipeline performs at the start of each iteration (paper §4.1).
+* A 32-word (256 B) ``scratch_pad`` window: the iterator's persistent
+  state / continuation (paper §3).
+* Arithmetic is two's-complement wrapping i64. ``DIV`` is C-style
+  truncated signed division; divisor 0 traps, ``i64::MIN / -1`` wraps.
+* Only *forward* jumps are legal (paper §4.1, eBPF-style), so any verified
+  program executes at most ``n_instrs`` steps — this is what makes the
+  batched lock-step interpreter exact.
+* Terminals: ``NEXT`` ends the iteration (next ``cur_ptr`` must be in
+  ``r0``), ``RET`` ends the traversal and yields the scratch_pad, ``TRAP``
+  aborts (protection/translation-failure analogue).
+"""
+
+NREG = 16
+SP_WORDS = 32  # 256 B scratchpad, 8 B words
+DATA_WORDS = 32  # 256 B aggregated load window
+MAX_INSTRS = 64
+
+# --- opcodes -------------------------------------------------------------
+NOP = 0
+LDD = 1    # r[a] = data[imm]           (static word offset)
+LDX = 2    # r[a] = data[r[b] + imm]    (dynamic; OOB -> TRAP)
+STD = 3    # data[imm] = r[a]
+STX = 4    # data[r[b] + imm] = r[a]    (dynamic; OOB -> TRAP)
+SPL = 5    # r[a] = sp[imm]
+SPLX = 6   # r[a] = sp[r[b] + imm]      (dynamic; OOB -> TRAP)
+SPS = 7    # sp[imm] = r[a]
+SPSX = 8   # sp[r[b] + imm] = r[a]      (dynamic; OOB -> TRAP)
+MOV = 9    # r[a] = r[b]
+MOVI = 10  # r[a] = imm
+ADD = 11   # r[a] = r[b] + r[c]
+SUB = 12
+MUL = 13
+DIV = 14   # divisor 0 -> TRAP
+AND = 15
+OR = 16
+XOR = 17
+NOT = 18   # r[a] = ~r[b]
+SHL = 19   # r[a] = r[b] << (imm & 63)
+SHR = 20   # r[a] = (u64)r[b] >> (imm & 63)
+ADDI = 21  # r[a] = r[b] + imm
+JEQ = 22   # if r[a] == r[b]: pc = imm  (imm > pc)
+JNE = 23
+JLT = 24   # signed
+JLE = 25
+JGT = 26
+JGE = 27
+JMP = 28   # pc = imm (forward)
+NEXT = 29  # end of iteration; r0 holds next cur_ptr
+RET = 30   # end of traversal; scratch_pad is the result
+TRAP = 31  # explicit failure
+
+N_OPCODES = 32
+
+# --- status codes (one per workspace lane) -------------------------------
+ST_RUNNING = 0
+ST_NEXT_ITER = 1
+ST_RETURN = 2
+ST_TRAP = 3
+
+_JUMPS = (JEQ, JNE, JLT, JLE, JGT, JGE, JMP)
+_TERMINALS = (NEXT, RET, TRAP)
+
+OP_NAMES = {
+    NOP: "NOP", LDD: "LDD", LDX: "LDX", STD: "STD", STX: "STX",
+    SPL: "SPL", SPLX: "SPLX", SPS: "SPS", SPSX: "SPSX", MOV: "MOV",
+    MOVI: "MOVI", ADD: "ADD", SUB: "SUB", MUL: "MUL", DIV: "DIV",
+    AND: "AND", OR: "OR", XOR: "XOR", NOT: "NOT", SHL: "SHL",
+    SHR: "SHR", ADDI: "ADDI", JEQ: "JEQ", JNE: "JNE", JLT: "JLT",
+    JLE: "JLE", JGT: "JGT", JGE: "JGE", JMP: "JMP", NEXT: "NEXT",
+    RET: "RET", TRAP: "TRAP",
+}
+
+
+def verify(program):
+    """Mirror of the Rust verifier (``rust/src/isa/verify.rs``).
+
+    ``program`` is a list of ``(op, a, b, c, imm)`` tuples. Raises
+    ``ValueError`` on the first violation. Returns the program unchanged
+    on success so it can be used inline.
+    """
+    n = len(program)
+    if n == 0:
+        raise ValueError("empty program")
+    if n > MAX_INSTRS:
+        raise ValueError(f"program too long: {n} > {MAX_INSTRS}")
+    for pc, (op, a, b, c, imm) in enumerate(program):
+        if not (0 <= op < N_OPCODES):
+            raise ValueError(f"pc={pc}: bad opcode {op}")
+        for r, used in ((a, _uses_a(op)), (b, _uses_b(op)), (c, _uses_c(op))):
+            if used and not (0 <= r < NREG):
+                raise ValueError(f"pc={pc}: register {r} out of range")
+        if op in (LDD, STD) and not (0 <= imm < DATA_WORDS):
+            raise ValueError(f"pc={pc}: data offset {imm} out of window")
+        if op in (SPL, SPS) and not (0 <= imm < SP_WORDS):
+            raise ValueError(f"pc={pc}: sp offset {imm} out of window")
+        if op in _JUMPS:
+            if not (pc < imm <= n):
+                raise ValueError(
+                    f"pc={pc}: jump target {imm} not strictly forward"
+                )
+    # Every straight-line fall-through must hit a terminal before the end.
+    last_op = program[-1][0]
+    if last_op not in _TERMINALS:
+        raise ValueError("program does not end in NEXT/RET/TRAP")
+    return program
+
+
+def _uses_a(op):
+    return op not in (NOP, JMP, NEXT, RET, TRAP)
+
+
+def _uses_b(op):
+    return op in (LDX, STX, SPLX, SPSX, MOV, ADD, SUB, MUL, DIV, AND, OR,
+                  XOR, NOT, SHL, SHR, ADDI, JEQ, JNE, JLT, JLE, JGT, JGE)
+
+
+def _uses_c(op):
+    return op in (ADD, SUB, MUL, DIV, AND, OR, XOR)
+
+
+def pack_program(program, max_instrs=MAX_INSTRS):
+    """Pack a verified program into the dense array form consumed by the
+    kernels: ``ops[max_instrs, 4] int32`` (op, a, b, c) and
+    ``imm[max_instrs] int64``. Slots past the end are TRAP so a runaway
+    pc is caught rather than silently NOP-ing.
+    """
+    import numpy as np
+
+    ops = np.zeros((max_instrs, 4), dtype=np.int32)
+    imm = np.zeros((max_instrs,), dtype=np.int64)
+    ops[:, 0] = TRAP
+    for i, (op, a, b, c, im) in enumerate(program):
+        ops[i] = (op, a, b, c)
+        imm[i] = np.int64(np.uint64(im & 0xFFFFFFFFFFFFFFFF))
+    return ops, imm

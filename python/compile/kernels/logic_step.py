@@ -1,0 +1,216 @@
+"""Pallas kernel: batched PULSE logic-pipeline step.
+
+One SIMD lane per accelerator *workspace* (paper §4.2): the lane carries
+``regs[16]``, ``scratch_pad[32]`` and the 256 B ``data`` window fetched by
+the memory pipeline. The kernel executes one full iterator *iteration* of
+the (verified) PULSE program in lock-step across the batch and reports a
+terminal status per lane (NEXT_ITER / RETURN / TRAP).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's logic
+pipeline is FPGA RTL. On a TPU-style target the same insight — a
+restricted ISA with *forward-only* jumps, hence execution length ≤ program
+length — maps to a vectorized lock-step interpreter: per-lane ``pc`` is a
+vector, opcode dispatch is a select tree (no divergence), and the
+workspace tile for a block of lanes lives in VMEM
+(B_blk × (16+32+32) × 8 B ≈ 20 KB at B_blk = 32). No MXU use: the kernel
+is VPU-bound by construction, mirroring Property 2 (t_c ≤ η·t_d).
+
+The kernel must be lowered with ``interpret=True`` (CPU PJRT cannot run
+Mosaic custom-calls); numerics are identical either way.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import isa
+
+I64 = jnp.int64
+I32 = jnp.int32
+
+
+def _onehot_write(buf, idx, val, enable):
+    """buf[b, idx[b]] = val[b] where enable[b], via one-hot select.
+
+    buf: [B, W] i64, idx: [B] i32/i64, val: [B] i64, enable: [B] bool.
+    Scatter-free (TPU/VPU friendly) because W is a small constant.
+    """
+    w = buf.shape[1]
+    hot = (jnp.arange(w, dtype=I32)[None, :] == idx.astype(I32)[:, None])
+    hot = hot & enable[:, None]
+    return jnp.where(hot, val[:, None], buf)
+
+
+def _gather_lane(buf, idx):
+    """val[b] = buf[b, idx[b]] with idx clipped (validity checked by
+    caller)."""
+    w = buf.shape[1]
+    safe = jnp.clip(idx, 0, w - 1).astype(I32)
+    return jnp.take_along_axis(buf, safe[:, None], axis=1)[:, 0]
+
+
+def logic_step_kernel(ops_ref, imm_ref, regs_ref, sp_ref, data_ref,
+                      regs_out, sp_out, data_out, status_out):
+    """Pallas kernel body. Block = whole batch tile.
+
+    ops: [MAX_INSTRS, 4] i32 — (op, a, b, c) per slot (TRAP-padded).
+    imm: [MAX_INSTRS] i64.
+    regs/sp/data: [B, 16/32/32] i64. status: [B] i32.
+    """
+    ops = ops_ref[...]
+    imm = imm_ref[...]
+    regs0 = regs_ref[...]
+    sp0 = sp_ref[...]
+    data0 = data_ref[...]
+    bsz = regs0.shape[0]
+
+    pc0 = jnp.zeros((bsz,), I32)
+    st0 = jnp.full((bsz,), isa.ST_RUNNING, I32)
+
+    def step(_, carry):
+        pc, st, regs, sp, data = carry
+        live = st == isa.ST_RUNNING
+
+        # Fetch (runaway pc is clipped; the MAX_INSTRS-1 slot is TRAP for
+        # any verified program shorter than the container, and verified
+        # programs end in a terminal anyway).
+        safe_pc = jnp.clip(pc, 0, isa.MAX_INSTRS - 1)
+        field = jnp.take(ops, safe_pc, axis=0)          # [B, 4]
+        op, a, b, c = field[:, 0], field[:, 1], field[:, 2], field[:, 3]
+        im = jnp.take(imm, safe_pc, axis=0)             # [B] i64
+
+        ra = _gather_lane(regs, a)
+        rb = _gather_lane(regs, b)
+        rc = _gather_lane(regs, c)
+
+        # ---- dynamic window indices -------------------------------------
+        dyn_idx = rb + im                                # LDX/STX/SPLX/SPSX
+        data_oob = (dyn_idx < 0) | (dyn_idx >= isa.DATA_WORDS)
+        sp_oob = (dyn_idx < 0) | (dyn_idx >= isa.SP_WORDS)
+
+        # ---- loads -------------------------------------------------------
+        ld_static = _gather_lane(data, im)               # LDD
+        ld_dyn = _gather_lane(data, dyn_idx)             # LDX
+        sp_static = _gather_lane(sp, im)                 # SPL
+        sp_dyn = _gather_lane(sp, dyn_idx)               # SPLX
+
+        # ---- ALU ----------------------------------------------------------
+        shamt = (im & 63).astype(I32)
+        div_zero = rc == 0
+        safe_rc = jnp.where(div_zero, jnp.int64(1), rc)
+        # C-style truncated division; i64::MIN / -1 wraps to i64::MIN,
+        # which is exactly what negation does in two's complement.
+        q = jax.lax.div(rb, jnp.where(safe_rc == -1, jnp.int64(1), safe_rc))
+        q = jnp.where(safe_rc == -1, -rb, q)
+
+        alu = [
+            (isa.MOV, rb),
+            (isa.MOVI, im),
+            (isa.ADD, rb + rc),
+            (isa.SUB, rb - rc),
+            (isa.MUL, rb * rc),
+            (isa.DIV, q),
+            (isa.AND, rb & rc),
+            (isa.OR, rb | rc),
+            (isa.XOR, rb ^ rc),
+            (isa.NOT, ~rb),
+            (isa.SHL, rb << shamt.astype(I64)),
+            (isa.SHR, jax.lax.shift_right_logical(rb, shamt.astype(I64))),
+            (isa.ADDI, rb + im),
+            (isa.LDD, ld_static),
+            (isa.LDX, ld_dyn),
+            (isa.SPL, sp_static),
+            (isa.SPLX, sp_dyn),
+        ]
+        reg_val = jnp.zeros((bsz,), I64)
+        reg_write = jnp.zeros((bsz,), bool)
+        for code, val in alu:
+            hit = op == code
+            reg_val = jnp.where(hit, val, reg_val)
+            reg_write = reg_write | hit
+
+        # ---- traps ---------------------------------------------------------
+        trap = (
+            ((op == isa.LDX) | (op == isa.STX)) & data_oob
+            | ((op == isa.SPLX) | (op == isa.SPSX)) & sp_oob
+            | (op == isa.DIV) & div_zero
+            | (op == isa.TRAP)
+            | (pc >= isa.MAX_INSTRS)
+        )
+        trap = trap & live
+
+        # ---- register writeback --------------------------------------------
+        do_write = reg_write & live & ~trap
+        regs = _onehot_write(regs, a, reg_val, do_write)
+
+        # ---- stores ----------------------------------------------------------
+        data = _onehot_write(
+            data, im.astype(I32), ra, (op == isa.STD) & live & ~trap)
+        data = _onehot_write(
+            data, dyn_idx.astype(I32), ra, (op == isa.STX) & live & ~trap)
+        sp = _onehot_write(
+            sp, im.astype(I32), ra, (op == isa.SPS) & live & ~trap)
+        sp = _onehot_write(
+            sp, dyn_idx.astype(I32), ra, (op == isa.SPSX) & live & ~trap)
+
+        # ---- branches / pc --------------------------------------------------
+        taken = (
+            ((op == isa.JEQ) & (ra == rb))
+            | ((op == isa.JNE) & (ra != rb))
+            | ((op == isa.JLT) & (ra < rb))
+            | ((op == isa.JLE) & (ra <= rb))
+            | ((op == isa.JGT) & (ra > rb))
+            | ((op == isa.JGE) & (ra >= rb))
+            | (op == isa.JMP)
+        )
+        pc_next = jnp.where(taken, im.astype(I32), pc + 1)
+
+        # ---- terminals -------------------------------------------------------
+        st = jnp.where(trap, isa.ST_TRAP, st)
+        st = jnp.where(
+            live & ~trap & (op == isa.NEXT), isa.ST_NEXT_ITER, st)
+        st = jnp.where(live & ~trap & (op == isa.RET), isa.ST_RETURN, st)
+
+        pc = jnp.where(live, pc_next, pc)
+        return pc, st, regs, sp, data
+
+    # Forward-only jumps => at most MAX_INSTRS dynamic steps.
+    _, st, regs, sp, data = jax.lax.fori_loop(
+        0, isa.MAX_INSTRS, step, (pc0, st0, regs0, sp0, data0))
+
+    # Lanes that never reached a terminal (impossible for verified
+    # programs, possible for adversarial input) report TRAP.
+    st = jnp.where(st == isa.ST_RUNNING, isa.ST_TRAP, st)
+
+    regs_out[...] = regs
+    sp_out[...] = sp
+    data_out[...] = data
+    status_out[...] = st
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def logic_step(ops, imm, regs, sp, data, *, batch=None):
+    """Batched logic-pipeline step: pallas_call wrapper.
+
+    Args:
+        ops: [MAX_INSTRS, 4] i32; imm: [MAX_INSTRS] i64.
+        regs: [B, NREG] i64; sp: [B, SP_WORDS] i64; data: [B, DATA_WORDS]
+        i64.
+
+    Returns:
+        (regs', sp', data', status) — status [B] i32.
+    """
+    bsz = batch if batch is not None else regs.shape[0]
+    out_shape = (
+        jax.ShapeDtypeStruct((bsz, isa.NREG), I64),
+        jax.ShapeDtypeStruct((bsz, isa.SP_WORDS), I64),
+        jax.ShapeDtypeStruct((bsz, isa.DATA_WORDS), I64),
+        jax.ShapeDtypeStruct((bsz,), I32),
+    )
+    return pl.pallas_call(
+        logic_step_kernel,
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(ops, imm, regs, sp, data)

@@ -1,0 +1,157 @@
+"""Sample PULSE programs used by the Python tests.
+
+These mirror the paper's ported data structures (Appendix B): the
+linked-list ``std::find`` (Listing 5), the hash-bucket chain walk
+(Listing 3/7), and the BST ``lower_bound`` walk (Listing 11). The Rust
+compiler (``rust/src/compiler``) emits equivalent code from the iterator
+DSL; here they are hand-assembled to keep the Python layer self-contained.
+
+Memory layout convention (8 B-aligned words inside the 256 B data
+window; the memory pipeline fetched ``data`` starting at ``cur_ptr``):
+
+list node     [0]=key  [1]=value [2]=next
+bst node      [0]=key  [1]=value [2]=left  [3]=right
+"""
+
+from . import isa
+
+I = isa
+
+# Register conventions shared with rust/src/compiler/lower.rs
+R_CUR = 0       # cur_ptr (r0 by convention, paper §4.2 workspace)
+R_T0 = 1        # temporaries
+R_T1 = 2
+R_T2 = 3
+R_ZERO = 15     # holds 0 when needed
+
+# Scratchpad word conventions
+SP_KEY = 0      # search key
+SP_RESULT = 1   # result value / found node pointer
+SP_FLAG = 2     # KEY_NOT_FOUND marker etc.
+SP_ACC = 3      # running aggregate (sum)
+SP_CNT = 4      # running count
+
+KEY_NOT_FOUND = 0x7FFFFFFFFFFFFFFF
+
+
+def list_find():
+    """unordered-map/list find: walk ->next until key matches or null.
+
+    Mirrors paper Listing 3/5. Per iteration:
+        key   = sp[SP_KEY]
+        nkey  = data[0]; nval = data[1]; nnext = data[2]
+        if nkey == key: sp[RESULT] = nval; RET
+        if nnext == 0:  sp[FLAG] = KEY_NOT_FOUND; RET
+        r0 = nnext; NEXT
+    """
+    p = [
+        (I.SPL, R_T0, 0, 0, SP_KEY),        # 0: t0 = key
+        (I.LDD, R_T1, 0, 0, 0),             # 1: t1 = node.key
+        (I.JNE, R_T0, R_T1, 0, 6),          # 2: not equal -> 6
+        (I.LDD, R_T2, 0, 0, 1),             # 3: t2 = node.value
+        (I.SPS, R_T2, 0, 0, SP_RESULT),     # 4: sp[RESULT] = value
+        (I.RET, 0, 0, 0, 0),                # 5: found
+        (I.LDD, R_T2, 0, 0, 2),             # 6: t2 = node.next
+        (I.MOVI, R_ZERO, 0, 0, 0),          # 7: zero = 0
+        (I.JNE, R_T2, R_ZERO, 0, 12),       # 8: next != 0 -> 12
+        (I.MOVI, R_T0, 0, 0, KEY_NOT_FOUND),  # 9: t0 = NOT_FOUND
+        (I.SPS, R_T0, 0, 0, SP_FLAG),       # 10: sp[FLAG] = NOT_FOUND
+        (I.RET, 0, 0, 0, 0),                # 11: not found
+        (I.MOV, R_CUR, R_T2, 0, 0),         # 12: cur = next
+        (I.NEXT, 0, 0, 0, 0),               # 13: next iteration
+    ]
+    return I.verify(p)
+
+
+def bst_lower_bound():
+    """std::map find / _M_lower_bound (paper Listing 11).
+
+    sp[SP_KEY] = search key, sp[SP_RESULT] = best-so-far (y).
+    Per iteration on node x (data window at cur_ptr):
+        if x.key <= key is FALSE (x.key > key): x = x.left? (paper's STL
+        code: key <= x.key means descend left recording y)
+    We implement: if key <= x.key { y = x; x = x.left } else { x = x.right }
+    Terminate with RET when x == 0 (checked at iteration start on the
+    *next* pointer, since a null cur_ptr never reaches the accelerator:
+    the compiler emits the null check before NEXT).
+    """
+    p = [
+        (I.SPL, R_T0, 0, 0, SP_KEY),      # 0: t0 = key
+        (I.LDD, R_T1, 0, 0, 0),           # 1: t1 = x.key
+        (I.JGT, R_T0, R_T1, 0, 6),        # 2: key > x.key -> right @6
+        (I.SPS, R_CUR, 0, 0, SP_RESULT),  # 3: y = x
+        (I.LDD, R_T2, 0, 0, 2),           # 4: t2 = x.left
+        (I.JMP, 0, 0, 0, 7),              # 5: -> null check
+        (I.LDD, R_T2, 0, 0, 3),           # 6: t2 = x.right
+        (I.MOVI, R_ZERO, 0, 0, 0),        # 7: zero = 0
+        (I.JNE, R_T2, R_ZERO, 0, 10),     # 8: t2 != 0 -> descend @10
+        (I.RET, 0, 0, 0, 0),              # 9: x == null: y is the answer
+        (I.MOV, R_CUR, R_T2, 0, 0),       # 10: cur = child
+        (I.NEXT, 0, 0, 0, 0),             # 11
+    ]
+    return I.verify(p)
+
+
+def list_sum():
+    """Stateful aggregation along a list: sp[ACC] += node.value,
+    sp[CNT] += 1; stop at null next (BTrDB-style running aggregate)."""
+    p = [
+        (I.SPL, R_T0, 0, 0, SP_ACC),     # 0: t0 = acc
+        (I.LDD, R_T1, 0, 0, 1),          # 1: t1 = node.value
+        (I.ADD, R_T0, R_T0, R_T1, 0),    # 2: acc += value
+        (I.SPS, R_T0, 0, 0, SP_ACC),     # 3
+        (I.SPL, R_T0, 0, 0, SP_CNT),     # 4: t0 = cnt
+        (I.MOVI, R_T1, 0, 0, 1),         # 5
+        (I.ADD, R_T0, R_T0, R_T1, 0),    # 6: cnt += 1
+        (I.SPS, R_T0, 0, 0, SP_CNT),     # 7
+        (I.LDD, R_T2, 0, 0, 2),          # 8: t2 = node.next
+        (I.MOVI, R_ZERO, 0, 0, 0),       # 9
+        (I.JNE, R_T2, R_ZERO, 0, 12),    # 10: next != 0 -> 12
+        (I.RET, 0, 0, 0, 0),             # 11: end of list
+        (I.MOV, R_CUR, R_T2, 0, 0),      # 12
+        (I.NEXT, 0, 0, 0, 0),            # 13
+    ]
+    return I.verify(p)
+
+
+def alu_torture():
+    """Straight-line ALU coverage program (no memory traffic) used by the
+    kernel-vs-ref tests: exercises every ALU opcode once."""
+    p = [
+        (I.MOVI, 1, 0, 0, 7),             # r1 = 7
+        (I.MOVI, 2, 0, 0, -3),            # r2 = -3
+        (I.ADD, 3, 1, 2, 0),              # r3 = 4
+        (I.SUB, 4, 1, 2, 0),              # r4 = 10
+        (I.MUL, 5, 1, 2, 0),              # r5 = -21
+        (I.DIV, 6, 5, 1, 0),              # r6 = -3
+        (I.AND, 7, 1, 4, 0),              # r7 = 7 & 10 = 2
+        (I.OR, 8, 1, 4, 0),               # r8 = 15
+        (I.XOR, 9, 1, 4, 0),              # r9 = 13
+        (I.NOT, 10, 1, 0, 0),             # r10 = ~7 = -8
+        (I.SHL, 11, 1, 0, 4),             # r11 = 112
+        (I.SHR, 12, 2, 0, 60),            # r12 = (u64)(-3) >> 60 = 15
+        (I.ADDI, 13, 1, 0, 100),          # r13 = 107
+        (I.MOV, 14, 13, 0, 0),            # r14 = 107
+        (I.SPS, 3, 0, 0, 0),
+        (I.SPS, 4, 0, 0, 1),
+        (I.SPS, 5, 0, 0, 2),
+        (I.SPS, 6, 0, 0, 3),
+        (I.SPS, 7, 0, 0, 4),
+        (I.SPS, 8, 0, 0, 5),
+        (I.SPS, 9, 0, 0, 6),
+        (I.SPS, 10, 0, 0, 7),
+        (I.SPS, 11, 0, 0, 8),
+        (I.SPS, 12, 0, 0, 9),
+        (I.SPS, 13, 0, 0, 10),
+        (I.SPS, 14, 0, 0, 11),
+        (I.RET, 0, 0, 0, 0),
+    ]
+    return I.verify(p)
+
+
+ALL = {
+    "list_find": list_find,
+    "bst_lower_bound": bst_lower_bound,
+    "list_sum": list_sum,
+    "alu_torture": alu_torture,
+}

@@ -1,0 +1,182 @@
+"""Pure-Python/numpy oracles for the PULSE kernels.
+
+``ref_logic_step`` executes one iterator *iteration* (one logic-pipeline
+pass, paper §4.2) per batch lane with exact Python-integer arithmetic
+(explicitly reduced mod 2**64), making it the trusted reference for both
+the Pallas kernel (pytest, this tree) and the Rust native interpreter
+(cross-checked through the AOT artifact from ``cargo test``).
+
+``ref_window_agg`` is the jnp-free oracle for the BTrDB window-aggregation
+kernel.
+"""
+
+import numpy as np
+
+from . import isa
+
+_MASK = (1 << 64) - 1
+_SIGN = 1 << 63
+
+
+def _wrap(v):
+    """Reduce a Python int to signed-64 two's complement."""
+    v &= _MASK
+    return v - (1 << 64) if v & _SIGN else v
+
+
+def _sdiv(a, b):
+    """C-style truncated signed division (matches Rust wrapping_div)."""
+    if b == 0:
+        raise ZeroDivisionError
+    q = abs(a) // abs(b)
+    if (a < 0) != (b < 0):
+        q = -q
+    return _wrap(q)
+
+
+def ref_logic_step_lane(program, regs, sp, data):
+    """Execute one iteration for a single lane.
+
+    Args:
+        program: list of (op, a, b, c, imm) tuples (verified).
+        regs, sp, data: lists of Python ints (signed-64 range).
+
+    Returns:
+        (regs, sp, data, status) with status in {NEXT_ITER, RETURN, TRAP}.
+    """
+    regs = [int(v) for v in regs]
+    sp = [int(v) for v in sp]
+    data = [int(v) for v in data]
+    n = len(program)
+    pc = 0
+    steps = 0
+    I = isa
+    while True:
+        steps += 1
+        if steps > isa.MAX_INSTRS + 1:
+            # Unreachable for verified programs (forward jumps only).
+            return regs, sp, data, I.ST_TRAP
+        if pc >= n:
+            return regs, sp, data, I.ST_TRAP
+        op, a, b, c, imm = program[pc]
+        imm = _wrap(imm)
+        nxt = pc + 1
+        if op == I.NOP:
+            pass
+        elif op == I.LDD:
+            regs[a] = data[imm]
+        elif op == I.LDX:
+            idx = _wrap(regs[b] + imm)
+            if not 0 <= idx < isa.DATA_WORDS:
+                return regs, sp, data, I.ST_TRAP
+            regs[a] = data[idx]
+        elif op == I.STD:
+            data[imm] = regs[a]
+        elif op == I.STX:
+            idx = _wrap(regs[b] + imm)
+            if not 0 <= idx < isa.DATA_WORDS:
+                return regs, sp, data, I.ST_TRAP
+            data[idx] = regs[a]
+        elif op == I.SPL:
+            regs[a] = sp[imm]
+        elif op == I.SPLX:
+            idx = _wrap(regs[b] + imm)
+            if not 0 <= idx < isa.SP_WORDS:
+                return regs, sp, data, I.ST_TRAP
+            regs[a] = sp[idx]
+        elif op == I.SPS:
+            sp[imm] = regs[a]
+        elif op == I.SPSX:
+            idx = _wrap(regs[b] + imm)
+            if not 0 <= idx < isa.SP_WORDS:
+                return regs, sp, data, I.ST_TRAP
+            sp[idx] = regs[a]
+        elif op == I.MOV:
+            regs[a] = regs[b]
+        elif op == I.MOVI:
+            regs[a] = imm
+        elif op == I.ADD:
+            regs[a] = _wrap(regs[b] + regs[c])
+        elif op == I.SUB:
+            regs[a] = _wrap(regs[b] - regs[c])
+        elif op == I.MUL:
+            regs[a] = _wrap(regs[b] * regs[c])
+        elif op == I.DIV:
+            if regs[c] == 0:
+                return regs, sp, data, I.ST_TRAP
+            regs[a] = _sdiv(regs[b], regs[c])
+        elif op == I.AND:
+            regs[a] = _wrap(regs[b] & regs[c])
+        elif op == I.OR:
+            regs[a] = _wrap(regs[b] | regs[c])
+        elif op == I.XOR:
+            regs[a] = _wrap(regs[b] ^ regs[c])
+        elif op == I.NOT:
+            regs[a] = _wrap(~regs[b])
+        elif op == I.SHL:
+            regs[a] = _wrap(regs[b] << (imm & 63))
+        elif op == I.SHR:
+            regs[a] = _wrap((regs[b] & _MASK) >> (imm & 63))
+        elif op == I.ADDI:
+            regs[a] = _wrap(regs[b] + imm)
+        elif op in (I.JEQ, I.JNE, I.JLT, I.JLE, I.JGT, I.JGE):
+            x, y = regs[a], regs[b]
+            taken = {
+                I.JEQ: x == y, I.JNE: x != y, I.JLT: x < y,
+                I.JLE: x <= y, I.JGT: x > y, I.JGE: x >= y,
+            }[op]
+            if taken:
+                nxt = imm
+        elif op == I.JMP:
+            nxt = imm
+        elif op == I.NEXT:
+            return regs, sp, data, I.ST_NEXT_ITER
+        elif op == I.RET:
+            return regs, sp, data, I.ST_RETURN
+        elif op == I.TRAP:
+            return regs, sp, data, I.ST_TRAP
+        else:
+            return regs, sp, data, I.ST_TRAP
+        pc = nxt
+
+
+def ref_logic_step(program, regs, sp, data):
+    """Batched oracle: numpy arrays in, numpy arrays out.
+
+    regs: [B, NREG] int64; sp: [B, SP_WORDS] int64; data: [B, DATA_WORDS]
+    int64. Returns (regs, sp, data, status[B] int32).
+    """
+    regs = np.asarray(regs, dtype=np.int64)
+    sp = np.asarray(sp, dtype=np.int64)
+    data = np.asarray(data, dtype=np.int64)
+    bsz = regs.shape[0]
+    out_r = np.empty_like(regs)
+    out_s = np.empty_like(sp)
+    out_d = np.empty_like(data)
+    out_st = np.empty((bsz,), dtype=np.int32)
+    for i in range(bsz):
+        r, s, d, st = ref_logic_step_lane(
+            program, regs[i].tolist(), sp[i].tolist(), data[i].tolist()
+        )
+        out_r[i] = np.array([_wrap(v) for v in r], dtype=np.int64)
+        out_s[i] = np.array([_wrap(v) for v in s], dtype=np.int64)
+        out_d[i] = np.array([_wrap(v) for v in d], dtype=np.int64)
+        out_st[i] = st
+    return out_r, out_s, out_d, out_st
+
+
+def ref_window_agg(values, window):
+    """Oracle for the BTrDB window-aggregation kernel.
+
+    values: [N] float32 with N % window == 0. Returns (sum, min, max),
+    each [N // window] float32.
+    """
+    values = np.asarray(values, dtype=np.float32)
+    n = values.shape[0]
+    assert n % window == 0, "N must be a multiple of the window size"
+    v = values.reshape(n // window, window)
+    return (
+        v.sum(axis=1, dtype=np.float32),
+        v.min(axis=1),
+        v.max(axis=1),
+    )

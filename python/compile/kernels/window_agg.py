@@ -1,0 +1,64 @@
+"""Pallas kernel: BTrDB stateful window aggregation.
+
+BTrDB (paper §6, Table 3) runs stateful aggregations — sum / average /
+min / max — over fixed-resolution time windows of µPMU readings. On the
+real system the aggregation happens inside the iterator's scratch_pad as
+the B+Tree leaves are traversed; the CPU-node frontend then renders the
+per-window statistics. This kernel is the batched "finalize" stage used
+by the BTrDB app and benches: given a dense tile of leaf values it
+produces per-window (sum, min, max); mean is sum / count at L2.
+
+Layout: values [N] f32 with N = n_windows * window; grid over window
+blocks so each program instance reduces WINDOW values for BLOCK_WINDOWS
+windows — a [BLOCK_WINDOWS, WINDOW] f32 VMEM tile (64 × 64 × 4 B = 16 KB
+by default).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+DEFAULT_BLOCK_WINDOWS = 64
+
+
+def window_agg_kernel(vals_ref, sum_ref, min_ref, max_ref):
+    """One grid step: reduce a [BLOCK_WINDOWS, WINDOW] tile."""
+    v = vals_ref[...]
+    sum_ref[...] = jnp.sum(v, axis=1, dtype=F32)
+    min_ref[...] = jnp.min(v, axis=1)
+    max_ref[...] = jnp.max(v, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_windows"))
+def window_agg(values, *, window, block_windows=DEFAULT_BLOCK_WINDOWS):
+    """Aggregate ``values`` ([N] f32, N % window == 0) into per-window
+    (sum, min, max), each [N // window] f32."""
+    n = values.shape[0]
+    assert n % window == 0, "N must be a multiple of window"
+    n_windows = n // window
+    bw = min(block_windows, n_windows)
+    assert n_windows % bw == 0, "n_windows must be a multiple of the block"
+    tiles = values.reshape(n_windows, window)
+
+    grid = (n_windows // bw,)
+    out_shape = (
+        jax.ShapeDtypeStruct((n_windows,), F32),
+        jax.ShapeDtypeStruct((n_windows,), F32),
+        jax.ShapeDtypeStruct((n_windows,), F32),
+    )
+    return pl.pallas_call(
+        window_agg_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bw, window), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((bw,), lambda i: (i,)),
+            pl.BlockSpec((bw,), lambda i: (i,)),
+            pl.BlockSpec((bw,), lambda i: (i,)),
+        ),
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(tiles)

@@ -1,0 +1,59 @@
+"""L2: the JAX compute graphs PULSE lowers to HLO artifacts.
+
+The request path lives in Rust (L3). These functions are traced once by
+``aot.py`` and shipped to ``artifacts/*.hlo.txt``; the Rust runtime
+(``rust/src/runtime``) compiles each artifact with the PJRT CPU client at
+startup and invokes it from the accelerator's logic-pipeline engine.
+
+Exported graphs
+---------------
+``logic_batch_step``   one logic-pipeline pass over a batch of workspaces
+                       (calls the L1 Pallas interpreter kernel).
+``window_aggregate``   BTrDB per-window sum/min/max + mean finalize
+                       (calls the L1 window_agg kernel).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import isa
+from .kernels.logic_step import logic_step
+from .kernels.window_agg import window_agg
+
+
+def logic_batch_step(ops, imm, regs, sp, data):
+    """One batched logic-pipeline step.
+
+    Shapes: ops [MAX_INSTRS,4] i32, imm [MAX_INSTRS] i64,
+    regs [B,16] i64, sp [B,32] i64, data [B,32] i64.
+    Returns (regs', sp', data', status[B] i32, next_ptr[B] i64) — the
+    next pointer is regs'[:, 0] (r0 == cur_ptr by convention), split out
+    so the Rust scheduler can route fetches without touching the full
+    register file.
+    """
+    regs2, sp2, data2, status = logic_step(ops, imm, regs, sp, data)
+    next_ptr = regs2[:, 0]
+    return regs2, sp2, data2, status, next_ptr
+
+
+def window_aggregate(values, *, window):
+    """Per-window (sum, mean, min, max) over a dense f32 leaf tile."""
+    s, mn, mx = window_agg(values, window=window)
+    mean = s / jnp.float32(window)
+    return s, mean, mn, mx
+
+
+def example_args_logic(batch):
+    """ShapeDtypeStructs for lowering logic_batch_step at a batch size."""
+    return (
+        jax.ShapeDtypeStruct((isa.MAX_INSTRS, 4), jnp.int32),
+        jax.ShapeDtypeStruct((isa.MAX_INSTRS,), jnp.int64),
+        jax.ShapeDtypeStruct((batch, isa.NREG), jnp.int64),
+        jax.ShapeDtypeStruct((batch, isa.SP_WORDS), jnp.int64),
+        jax.ShapeDtypeStruct((batch, isa.DATA_WORDS), jnp.int64),
+    )
+
+
+def example_args_window(n, window):
+    del window
+    return (jax.ShapeDtypeStruct((n,), jnp.float32),)

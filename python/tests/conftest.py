@@ -1,0 +1,4 @@
+import jax
+
+# The PULSE ISA is 64-bit: enable x64 before any kernel import traces.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,93 @@
+"""Verifier + encoding unit tests for the Python ISA mirror."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import isa, programs
+
+I = isa
+
+
+class TestVerify:
+    def test_accepts_all_sample_programs(self):
+        for name, fn in programs.ALL.items():
+            prog = fn()
+            assert isa.verify(prog) is prog, name
+
+    def test_rejects_empty(self):
+        with pytest.raises(ValueError, match="empty"):
+            isa.verify([])
+
+    def test_rejects_too_long(self):
+        prog = [(I.NOP, 0, 0, 0, 0)] * (isa.MAX_INSTRS) + [
+            (I.RET, 0, 0, 0, 0)]
+        with pytest.raises(ValueError, match="too long"):
+            isa.verify(prog)
+
+    def test_rejects_bad_opcode(self):
+        with pytest.raises(ValueError, match="bad opcode"):
+            isa.verify([(99, 0, 0, 0, 0), (I.RET, 0, 0, 0, 0)])
+
+    def test_rejects_register_out_of_range(self):
+        with pytest.raises(ValueError, match="register"):
+            isa.verify([(I.MOVI, 16, 0, 0, 1), (I.RET, 0, 0, 0, 0)])
+
+    def test_rejects_backward_jump(self):
+        prog = [
+            (I.NOP, 0, 0, 0, 0),
+            (I.JMP, 0, 0, 0, 0),  # backward
+            (I.RET, 0, 0, 0, 0),
+        ]
+        with pytest.raises(ValueError, match="forward"):
+            isa.verify(prog)
+
+    def test_rejects_self_jump(self):
+        prog = [(I.JMP, 0, 0, 0, 0), (I.RET, 0, 0, 0, 0)]
+        with pytest.raises(ValueError, match="forward"):
+            isa.verify(prog)
+
+    def test_rejects_jump_past_end(self):
+        prog = [(I.JMP, 0, 0, 0, 5), (I.RET, 0, 0, 0, 0)]
+        with pytest.raises(ValueError, match="forward"):
+            isa.verify(prog)
+
+    def test_jump_to_one_past_end_allowed(self):
+        # Target == n is the "fall off the end" slot; the interpreter
+        # traps there, and the verifier permits it (it is still forward).
+        prog = [(I.JMP, 0, 0, 0, 2), (I.RET, 0, 0, 0, 0)]
+        isa.verify(prog)
+
+    def test_rejects_static_data_offset_oob(self):
+        prog = [(I.LDD, 1, 0, 0, isa.DATA_WORDS), (I.RET, 0, 0, 0, 0)]
+        with pytest.raises(ValueError, match="data offset"):
+            isa.verify(prog)
+
+    def test_rejects_static_sp_offset_oob(self):
+        prog = [(I.SPS, 1, 0, 0, isa.SP_WORDS), (I.RET, 0, 0, 0, 0)]
+        with pytest.raises(ValueError, match="sp offset"):
+            isa.verify(prog)
+
+    def test_rejects_nonterminal_tail(self):
+        prog = [(I.MOVI, 1, 0, 0, 1), (I.NOP, 0, 0, 0, 0)]
+        with pytest.raises(ValueError, match="NEXT/RET/TRAP"):
+            isa.verify(prog)
+
+
+class TestPack:
+    def test_pads_with_trap(self):
+        prog = programs.list_find()
+        ops, imm = isa.pack_program(prog)
+        assert ops.shape == (isa.MAX_INSTRS, 4)
+        assert imm.shape == (isa.MAX_INSTRS,)
+        assert (ops[len(prog):, 0] == I.TRAP).all()
+
+    def test_preserves_fields(self):
+        prog = [(I.ADDI, 3, 4, 0, -17), (I.RET, 0, 0, 0, 0)]
+        ops, imm = isa.pack_program(prog)
+        assert tuple(ops[0]) == (I.ADDI, 3, 4, 0)
+        assert imm[0] == -17
+
+    def test_negative_imm_round_trips(self):
+        prog = [(I.MOVI, 1, 0, 0, -(2**63)), (I.RET, 0, 0, 0, 0)]
+        _, imm = isa.pack_program(prog)
+        assert imm[0] == np.int64(-(2**63))

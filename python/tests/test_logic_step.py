@@ -1,0 +1,361 @@
+"""Pallas logic_step kernel vs pure-Python oracle: directed tests."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import isa, programs
+from compile.kernels.logic_step import logic_step
+from compile.kernels.ref import ref_logic_step, ref_logic_step_lane
+
+I = isa
+
+
+def run_both(prog, regs, sp, data):
+    ops, imm = isa.pack_program(prog)
+    kr, ks, kd, kst = logic_step(ops, imm, regs, sp, data)
+    rr, rs, rd, rst = ref_logic_step(prog, regs, sp, data)
+    np.testing.assert_array_equal(np.asarray(kst), rst)
+    np.testing.assert_array_equal(np.asarray(kr), rr)
+    np.testing.assert_array_equal(np.asarray(ks), rs)
+    np.testing.assert_array_equal(np.asarray(kd), rd)
+    return rr, rs, rd, rst
+
+
+def blank(b=1):
+    return (
+        np.zeros((b, isa.NREG), dtype=np.int64),
+        np.zeros((b, isa.SP_WORDS), dtype=np.int64),
+        np.zeros((b, isa.DATA_WORDS), dtype=np.int64),
+    )
+
+
+class TestALU:
+    def test_alu_torture_matches(self):
+        regs, sp, data = blank(3)
+        _, rs, _, rst = run_both(programs.alu_torture(), regs, sp, data)
+        assert (rst == I.ST_RETURN).all()
+        expect = [4, 10, -21, -3, 2, 15, 13, -8, 112, 15, 107, 107]
+        assert rs[0, :12].tolist() == expect
+
+    @pytest.mark.parametrize("x,y,op,expect", [
+        (7, -3, I.ADD, 4),
+        (7, -3, I.SUB, 10),
+        (7, -3, I.MUL, -21),
+        (-21, 7, I.DIV, -3),
+        (22, 7, I.DIV, 3),      # truncation toward zero
+        (-22, 7, I.DIV, -4 + 1),  # -22/7 = -3 (trunc), not -4 (floor)
+        (22, -7, I.DIV, -3),
+        (0x0F, 0x05, I.AND, 0x05),
+        (0x0F, 0x10, I.OR, 0x1F),
+        (0x0F, 0x05, I.XOR, 0x0A),
+    ])
+    def test_binop(self, x, y, op, expect):
+        prog = I.verify([
+            (I.MOVI, 1, 0, 0, x),
+            (I.MOVI, 2, 0, 0, y),
+            (op, 3, 1, 2, 0),
+            (I.SPS, 3, 0, 0, 0),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        regs, sp, data = blank()
+        _, rs, _, rst = run_both(prog, regs, sp, data)
+        assert rst[0] == I.ST_RETURN
+        assert rs[0, 0] == expect
+
+    def test_wrapping_add_overflow(self):
+        prog = I.verify([
+            (I.MOVI, 1, 0, 0, 2**63 - 1),
+            (I.MOVI, 2, 0, 0, 1),
+            (I.ADD, 3, 1, 2, 0),
+            (I.SPS, 3, 0, 0, 0),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        regs, sp, data = blank()
+        _, rs, _, _ = run_both(prog, regs, sp, data)
+        assert rs[0, 0] == -(2**63)
+
+    def test_wrapping_mul(self):
+        prog = I.verify([
+            (I.MOVI, 1, 0, 0, 2**40),
+            (I.MUL, 2, 1, 1, 0),
+            (I.SPS, 2, 0, 0, 0),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        regs, sp, data = blank()
+        _, rs, _, _ = run_both(prog, regs, sp, data)
+        assert rs[0, 0] == (2**80) % (2**64)  # == 0? no: 2^80 mod 2^64 = 0
+        assert rs[0, 0] == 0
+
+    def test_div_min_by_minus_one_wraps(self):
+        prog = I.verify([
+            (I.MOVI, 1, 0, 0, -(2**63)),
+            (I.MOVI, 2, 0, 0, -1),
+            (I.DIV, 3, 1, 2, 0),
+            (I.SPS, 3, 0, 0, 0),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        regs, sp, data = blank()
+        _, rs, _, rst = run_both(prog, regs, sp, data)
+        assert rst[0] == I.ST_RETURN
+        assert rs[0, 0] == -(2**63)
+
+    def test_shifts(self):
+        prog = I.verify([
+            (I.MOVI, 1, 0, 0, -1),
+            (I.SHR, 2, 1, 0, 1),    # logical: 0x7FFF...
+            (I.SHL, 3, 1, 0, 63),   # 0x8000...
+            (I.SPS, 2, 0, 0, 0),
+            (I.SPS, 3, 0, 0, 1),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        regs, sp, data = blank()
+        _, rs, _, _ = run_both(prog, regs, sp, data)
+        assert rs[0, 0] == 2**63 - 1
+        assert rs[0, 1] == -(2**63)
+
+
+class TestTraps:
+    def test_div_by_zero_traps(self):
+        prog = I.verify([
+            (I.MOVI, 1, 0, 0, 5),
+            (I.MOVI, 2, 0, 0, 0),
+            (I.DIV, 3, 1, 2, 0),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        regs, sp, data = blank()
+        _, _, _, rst = run_both(prog, regs, sp, data)
+        assert rst[0] == I.ST_TRAP
+
+    def test_dynamic_data_oob_traps(self):
+        prog = I.verify([
+            (I.MOVI, 1, 0, 0, isa.DATA_WORDS),
+            (I.LDX, 2, 1, 0, 0),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        regs, sp, data = blank()
+        _, _, _, rst = run_both(prog, regs, sp, data)
+        assert rst[0] == I.ST_TRAP
+
+    def test_dynamic_negative_index_traps(self):
+        prog = I.verify([
+            (I.MOVI, 1, 0, 0, -1),
+            (I.SPLX, 2, 1, 0, 0),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        regs, sp, data = blank()
+        _, _, _, rst = run_both(prog, regs, sp, data)
+        assert rst[0] == I.ST_TRAP
+
+    def test_dynamic_store_oob_does_not_write(self):
+        prog = I.verify([
+            (I.MOVI, 1, 0, 0, 123),
+            (I.MOVI, 2, 0, 0, isa.SP_WORDS + 3),
+            (I.SPSX, 1, 2, 0, 0),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        regs, sp, data = blank()
+        _, rs, _, rst = run_both(prog, regs, sp, data)
+        assert rst[0] == I.ST_TRAP
+        assert (rs == 0).all()
+
+    def test_explicit_trap(self):
+        prog = I.verify([(I.TRAP, 0, 0, 0, 0)])
+        regs, sp, data = blank()
+        _, _, _, rst = run_both(prog, regs, sp, data)
+        assert rst[0] == I.ST_TRAP
+
+    def test_jump_off_end_traps(self):
+        # JMP to n (one past the end) lands on TRAP padding.
+        prog = I.verify([
+            (I.JMP, 0, 0, 0, 2),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        regs, sp, data = blank()
+        _, _, _, rst = run_both(prog, regs, sp, data)
+        assert rst[0] == I.ST_TRAP
+
+
+class TestBranches:
+    @pytest.mark.parametrize("op,x,y,taken", [
+        (I.JEQ, 5, 5, True), (I.JEQ, 5, 6, False),
+        (I.JNE, 5, 6, True), (I.JNE, 5, 5, False),
+        (I.JLT, -1, 0, True), (I.JLT, 0, 0, False),
+        (I.JLE, 0, 0, True), (I.JLE, 1, 0, False),
+        (I.JGT, 1, 0, True), (I.JGT, 0, 0, False),
+        (I.JGE, 0, 0, True), (I.JGE, -1, 0, False),
+    ])
+    def test_branch_semantics(self, op, x, y, taken):
+        prog = I.verify([
+            (I.MOVI, 1, 0, 0, x),      # 0
+            (I.MOVI, 2, 0, 0, y),      # 1
+            (op, 1, 2, 0, 5),          # 2: taken -> 5
+            (I.MOVI, 3, 0, 0, 111),    # 3: fallthrough marker
+            (I.JMP, 0, 0, 0, 6),       # 4
+            (I.MOVI, 3, 0, 0, 222),    # 5: taken marker
+            (I.SPS, 3, 0, 0, 0),       # 6
+            (I.RET, 0, 0, 0, 0),       # 7
+        ])
+        regs, sp, data = blank()
+        _, rs, _, _ = run_both(prog, regs, sp, data)
+        assert rs[0, 0] == (222 if taken else 111)
+
+    def test_signed_comparison_across_zero(self):
+        # -2**63 < anything positive (signed), though huge unsigned.
+        prog = I.verify([
+            (I.MOVI, 1, 0, 0, -(2**63)),
+            (I.MOVI, 2, 0, 0, 1),
+            (I.JLT, 1, 2, 0, 5),
+            (I.TRAP, 0, 0, 0, 0),
+            (I.TRAP, 0, 0, 0, 0),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        regs, sp, data = blank()
+        _, _, _, rst = run_both(prog, regs, sp, data)
+        assert rst[0] == I.ST_RETURN
+
+
+class TestIteratorPrograms:
+    """Multi-iteration traversal simulated by re-feeding data windows,
+    exactly as the memory pipeline does (paper §4.2)."""
+
+    def drive(self, prog, heap, start, sp_init, max_iters=64):
+        """heap: dict addr -> list of DATA_WORDS ints (a node image)."""
+        regs = np.zeros((1, isa.NREG), dtype=np.int64)
+        sp = np.zeros((1, isa.SP_WORDS), dtype=np.int64)
+        sp[0, :len(sp_init)] = sp_init
+        regs[0, 0] = start
+        ops, imm = isa.pack_program(prog)
+        iters = 0
+        cur = start
+        while iters < max_iters:
+            iters += 1
+            data = np.zeros((1, isa.DATA_WORDS), dtype=np.int64)
+            node = heap[cur]
+            data[0, :len(node)] = node
+            kr, ks, kd, kst = logic_step(ops, imm, regs, sp, data)
+            rr, rs, rd, rst = ref_logic_step(prog, regs, sp, data)
+            np.testing.assert_array_equal(np.asarray(kr), rr)
+            np.testing.assert_array_equal(np.asarray(ks), rs)
+            np.testing.assert_array_equal(np.asarray(kst), rst)
+            regs, sp = rr.copy(), rs.copy()
+            st = int(rst[0])
+            if st == I.ST_NEXT_ITER:
+                cur = int(regs[0, 0])
+                continue
+            return st, sp[0], iters
+        raise AssertionError("traversal did not terminate")
+
+    def make_list(self, kvs, base=0x1000):
+        heap = {}
+        addrs = [base + 32 * i for i in range(len(kvs))]
+        for i, (k, v) in enumerate(kvs):
+            nxt = addrs[i + 1] if i + 1 < len(kvs) else 0
+            heap[addrs[i]] = [k, v, nxt]
+        return heap, addrs[0]
+
+    def test_list_find_hit(self):
+        heap, start = self.make_list([(1, 10), (2, 20), (3, 30)])
+        st, sp, iters = self.drive(
+            programs.list_find(), heap, start, [2])
+        assert st == I.ST_RETURN
+        assert sp[programs.SP_RESULT] == 20
+        assert iters == 2
+
+    def test_list_find_miss(self):
+        heap, start = self.make_list([(1, 10), (2, 20), (3, 30)])
+        st, sp, iters = self.drive(
+            programs.list_find(), heap, start, [99])
+        assert st == I.ST_RETURN
+        assert sp[programs.SP_FLAG] == programs.KEY_NOT_FOUND
+        assert iters == 3
+
+    def test_list_sum(self):
+        heap, start = self.make_list([(i, 10 * i) for i in range(1, 9)])
+        st, sp, iters = self.drive(programs.list_sum(), heap, start, [])
+        assert st == I.ST_RETURN
+        assert sp[programs.SP_ACC] == sum(10 * i for i in range(1, 9))
+        assert sp[programs.SP_CNT] == 8
+        assert iters == 8
+
+    def make_bst(self, keys, base=0x2000):
+        """Build a BST; node = [key, value, left, right]."""
+        heap = {}
+        nodes = {}
+
+        def alloc(k):
+            a = base + 32 * len(nodes)
+            nodes[k] = a
+            heap[a] = [k, k * 100, 0, 0]
+            return a
+
+        root = None
+        for k in keys:
+            a = alloc(k)
+            if root is None:
+                root = a
+                continue
+            cur = root
+            while True:
+                ck = heap[cur][0]
+                if k < ck:
+                    if heap[cur][2] == 0:
+                        heap[cur][2] = a
+                        break
+                    cur = heap[cur][2]
+                else:
+                    if heap[cur][3] == 0:
+                        heap[cur][3] = a
+                        break
+                    cur = heap[cur][3]
+        return heap, root
+
+    @pytest.mark.parametrize("needle", [1, 4, 7, 10, 13])
+    def test_bst_lower_bound_finds_key(self, needle):
+        keys = [8, 4, 12, 2, 6, 10, 14, 1, 3, 5, 7, 9, 11, 13]
+        heap, root = self.make_bst(keys)
+        st, sp, _ = self.drive(
+            programs.bst_lower_bound(), heap, root, [needle])
+        assert st == I.ST_RETURN
+        node_addr = sp[programs.SP_RESULT]
+        assert node_addr != 0
+        assert heap[int(node_addr)][0] == needle
+
+
+class TestBatching:
+    def test_lanes_are_independent(self):
+        """Divergent lanes (found / not-found / trapped) in one batch."""
+        prog = I.verify([
+            (I.SPL, 1, 0, 0, 0),
+            (I.MOVI, 2, 0, 0, 10),
+            (I.DIV, 3, 2, 1, 0),      # traps when sp[0] == 0
+            (I.SPS, 3, 0, 0, 1),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        b = 8
+        regs = np.zeros((b, isa.NREG), dtype=np.int64)
+        sp = np.zeros((b, isa.SP_WORDS), dtype=np.int64)
+        data = np.zeros((b, isa.DATA_WORDS), dtype=np.int64)
+        sp[:, 0] = [0, 1, 2, 5, 0, 10, -2, 3]
+        rr, rs, rd, rst = run_both(prog, regs, sp, data)
+        for i, d in enumerate([0, 1, 2, 5, 0, 10, -2, 3]):
+            if d == 0:
+                assert rst[i] == I.ST_TRAP
+            else:
+                assert rst[i] == I.ST_RETURN
+                assert rs[i, 1] == int(np.trunc(10 / d))
+
+    @pytest.mark.parametrize("b", [1, 2, 32, 256])
+    def test_batch_sizes(self, b):
+        regs = np.zeros((b, isa.NREG), dtype=np.int64)
+        sp = np.zeros((b, isa.SP_WORDS), dtype=np.int64)
+        data = np.zeros((b, isa.DATA_WORDS), dtype=np.int64)
+        sp[:, 0] = np.arange(b)
+        prog = I.verify([
+            (I.SPL, 1, 0, 0, 0),
+            (I.ADDI, 1, 1, 0, 1000),
+            (I.SPS, 1, 0, 0, 1),
+            (I.RET, 0, 0, 0, 0),
+        ])
+        _, rs, _, rst = run_both(prog, regs, sp, data)
+        assert (rst == I.ST_RETURN).all()
+        np.testing.assert_array_equal(rs[:, 1], np.arange(b) + 1000)

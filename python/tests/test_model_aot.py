@@ -1,0 +1,64 @@
+"""L2 model wrappers + AOT lowering sanity."""
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import isa, programs
+
+
+class TestModel:
+    def test_logic_batch_step_next_ptr(self):
+        prog = programs.list_find()
+        ops, imm = isa.pack_program(prog)
+        b = 4
+        regs = np.zeros((b, isa.NREG), dtype=np.int64)
+        sp = np.zeros((b, isa.SP_WORDS), dtype=np.int64)
+        data = np.zeros((b, isa.DATA_WORDS), dtype=np.int64)
+        sp[:, 0] = 42  # search key, will not match
+        data[:, 0] = 7  # node.key
+        data[:, 2] = 0xBEEF0  # node.next
+        r, s, d, st, nxt = model.logic_batch_step(ops, imm, regs, sp, data)
+        assert (np.asarray(st) == isa.ST_NEXT_ITER).all()
+        assert (np.asarray(nxt) == 0xBEEF0).all()
+        np.testing.assert_array_equal(np.asarray(nxt), np.asarray(r)[:, 0])
+
+    def test_window_aggregate_mean(self):
+        v = np.arange(256, dtype=np.float32)
+        s, mean, mn, mx = model.window_aggregate(v, window=64)
+        np.testing.assert_allclose(
+            np.asarray(mean), v.reshape(4, 64).mean(axis=1), rtol=1e-6)
+
+
+class TestAOT:
+    def test_lower_logic_produces_hlo_text(self):
+        text = aot.lower_logic(32)
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # 5 outputs: regs, sp, data, status, next_ptr
+        assert "s64[32,16]" in text
+
+    def test_lower_window_produces_hlo_text(self):
+        text = aot.lower_window(4096, 64)
+        assert "HloModule" in text
+        assert "f32[64]" in text
+
+    def test_lowered_text_is_parseable_back(self):
+        """Round-trip through the XLA HLO text parser — the exact path
+        the Rust runtime uses (HloModuleProto::from_text)."""
+        from jax._src.lib import xla_client as xc
+        text = aot.lower_window(4096, 64)
+        # The python client exposes the parser through
+        # XlaComputation(text)-equivalent: re-parse via
+        # hlo_module_from_text if available; otherwise assert structure.
+        parse = getattr(xc._xla, "hlo_module_from_text", None)
+        if parse is None:
+            pytest.skip("hlo_module_from_text not exposed in this jaxlib")
+        mod = parse(text)
+        assert mod is not None
+
+    def test_batch_shapes_differ(self):
+        t32 = aot.lower_logic(32)
+        t256 = aot.lower_logic(256)
+        assert "s64[32,16]" in t32
+        assert "s64[256,16]" in t256

@@ -1,0 +1,62 @@
+"""window_agg Pallas kernel vs numpy oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import ref_window_agg
+from compile.kernels.window_agg import window_agg
+
+
+def check(values, window, block_windows=64):
+    values = np.asarray(values, dtype=np.float32)
+    s, mn, mx = window_agg(
+        jnp.asarray(values), window=window, block_windows=block_windows)
+    rs, rmn, rmx = ref_window_agg(values, window)
+    np.testing.assert_allclose(np.asarray(s), rs, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(mn), rmn)
+    np.testing.assert_array_equal(np.asarray(mx), rmx)
+
+
+class TestWindowAgg:
+    @pytest.mark.parametrize("n,w", [
+        (64, 8), (4096, 64), (4096, 8), (1024, 1024), (128, 2), (64, 64),
+    ])
+    def test_shapes(self, n, w):
+        rng = np.random.default_rng(n * 31 + w)
+        check(rng.normal(scale=100.0, size=(n,)), w)
+
+    def test_constant_input(self):
+        check(np.full((512,), 3.25), 64)
+
+    def test_negative_values(self):
+        check(-np.abs(np.random.default_rng(7).normal(size=(256,))), 8)
+
+    def test_single_window(self):
+        v = np.arange(64, dtype=np.float32)
+        s, mn, mx = window_agg(jnp.asarray(v), window=64)
+        assert float(s[0]) == float(v.sum())
+        assert float(mn[0]) == 0.0
+        assert float(mx[0]) == 63.0
+
+    def test_block_smaller_than_windows(self):
+        check(np.random.default_rng(9).normal(size=(4096,)), 16,
+              block_windows=32)
+
+    def test_monotone_ramp_min_max(self):
+        v = np.arange(4096, dtype=np.float32)
+        s, mn, mx = window_agg(jnp.asarray(v), window=64)
+        np.testing.assert_array_equal(
+            np.asarray(mn), v.reshape(64, 64)[:, 0])
+        np.testing.assert_array_equal(
+            np.asarray(mx), v.reshape(64, 64)[:, -1])
+
+    def test_pmu_like_signal(self):
+        """µPMU-like: 120 Hz sinusoid + noise, windows of 1 s (120
+        samples won't divide; use the packed 64-leaf layout as the app
+        does)."""
+        rng = np.random.default_rng(42)
+        t = np.arange(4096, dtype=np.float32)
+        v = 120.0 * np.sin(2 * np.pi * t / 120.0) + rng.normal(
+            scale=0.5, size=(4096,)).astype(np.float32)
+        check(v, 64)

@@ -1,0 +1,242 @@
+//! Appendix C.2 sensitivity studies:
+//!   * access pattern (Zipf vs uniform, with/without library cache);
+//!   * write fraction (write-back path vs read-only);
+//!   * traversal length (linked-list latency linearity);
+//!   * allocation policy (partitioned vs random, 2 nodes);
+//!   * number of memory pipelines needed to saturate node bandwidth.
+
+use pulse::accel::{AccelConfig, AccelSim, IterTrace};
+use pulse::bench_support::{bench_rack, fmt_us, Table};
+use pulse::ds::{BPlusTree, ForwardList, HashMapDs};
+use pulse::isa::SP_WORDS;
+use pulse::mem::AllocPolicy;
+use pulse::rack::{Op, Rack, RackConfig};
+use pulse::sim::LatencyModel;
+use pulse::util::prng::Rng;
+use pulse::workloads::{YcsbOp, YcsbSpec, YcsbWorkload};
+
+fn main() {
+    access_pattern();
+    write_fraction();
+    traversal_length();
+    allocation_policy();
+    memory_pipelines();
+}
+
+/// Zipf vs uniform, with a warm library cache at the CPU node.
+fn access_pattern() {
+    let mut tbl = Table::new(
+        "Access pattern: library cache effect (1 node, warm cache)",
+        &["pattern", "mean lat us", "cache-hit iters", "offloads"],
+    );
+    for (name, zipf) in [("zipfian", true), ("uniform", false)] {
+        let mut cfg = RackConfig {
+            nodes: 1,
+            node_capacity: 512 << 20,
+            granularity: 1 << 20,
+            ..Default::default()
+        };
+        cfg.dispatch.cache_bytes = 4 << 20;
+        let mut rack = Rack::new(cfg);
+        let mut m = HashMapDs::build(&mut rack, 8192);
+        for k in 0..8192 {
+            m.insert(&mut rack, k, k);
+        }
+        // warm: library caches the images it wrote (§2.3)
+        for k in 0..8192i64 {
+            let b = m.bucket_ptr(k);
+            let mut img = [0i64; 3];
+            rack.read_words(b, &mut img);
+            rack.dispatch.cache.insert(b, &img);
+            if img[2] != 0 {
+                let mut c = [0i64; 3];
+                rack.read_words(img[2] as u64, &mut c);
+                rack.dispatch.cache.insert(img[2] as u64, &c);
+            }
+        }
+        let mut w = YcsbWorkload::new(YcsbSpec::C, 8192, zipf, 3);
+        let prog = m.find_program();
+        let buckets: Vec<u64> =
+            (0..8192).map(|k| m.bucket_ptr(k)).collect();
+        let mut ops = move |i: u64| {
+            if i >= 1000 {
+                return None;
+            }
+            let k = match w.next_op() {
+                YcsbOp::Read(k) => k as i64,
+                _ => 0,
+            };
+            let mut sp = [0i64; SP_WORDS];
+            sp[0] = k;
+            Some(Op::new(prog.clone(), buckets[k as usize], sp))
+        };
+        let rep = rack.serve(move |i| ops(i), 8);
+        tbl.row(&[
+            name.to_string(),
+            fmt_us(rep.latency.mean()),
+            rack.dispatch.stats.cache_hit_iters.to_string(),
+            rack.dispatch.stats.offloaded.to_string(),
+        ]);
+    }
+    tbl.print();
+    tbl.save_csv("appendix_access_pattern");
+}
+
+/// Write fraction sweep: offloaded update-in-place vs read.
+fn write_fraction() {
+    let mut tbl = Table::new(
+        "Writes: offloaded update-in-place (write-back path)",
+        &["write %", "mean lat us", "tput kops/s"],
+    );
+    for wr_pct in [0u64, 10, 25, 50] {
+        let mut rack = bench_rack(1, 1 << 20);
+        let mut m = HashMapDs::build(&mut rack, 2048);
+        for k in 0..2048 {
+            m.insert(&mut rack, k, k);
+        }
+        let find = m.find_program();
+        let update = m.update_program();
+        let buckets: Vec<u64> =
+            (0..2048).map(|k| m.bucket_ptr(k)).collect();
+        let mut rng = Rng::new(5);
+        let mut ops = move |i: u64| {
+            if i >= 800 {
+                return None;
+            }
+            let k = rng.below(2048) as i64;
+            let mut sp = [0i64; SP_WORDS];
+            sp[0] = k;
+            if rng.below(100) < wr_pct {
+                sp[1] = k * 10;
+                Some(Op::new(update.clone(), buckets[k as usize], sp))
+            } else {
+                Some(Op::new(find.clone(), buckets[k as usize], sp))
+            }
+        };
+        let rep = rack.serve(move |i| ops(i), 16);
+        tbl.row(&[
+            wr_pct.to_string(),
+            fmt_us(rep.latency.mean()),
+            format!("{:.1}", rep.tput_ops_per_s / 1e3),
+        ]);
+    }
+    tbl.print();
+    tbl.save_csv("appendix_writes");
+}
+
+/// Linked-list latency scales linearly in traversal length.
+fn traversal_length() {
+    let mut tbl = Table::new(
+        "Traversal length: linked-list walk (single node)",
+        &["nodes traversed", "mean lat us", "ns/hop"],
+    );
+    let mut rack = bench_rack(1, 8 << 20);
+    let mut list = ForwardList::new();
+    for i in 0..6000 {
+        list.push(&mut rack, i);
+    }
+    let prog = list.sum_program();
+    for len in [100u64, 500, 1000, 2000, 4000] {
+        // sum the first `len` nodes by bounding max_iters
+        let mut cfg_rack = bench_rack(1, 8 << 20);
+        let mut l2 = ForwardList::new();
+        for i in 0..len {
+            l2.push(&mut cfg_rack, i as i64);
+        }
+        let head = l2.head;
+        let p = prog.clone();
+        let mut sent = 0;
+        let rep = cfg_rack.serve(
+            move |_| {
+                sent += 1;
+                if sent > 20 {
+                    return None;
+                }
+                Some(Op::new(p.clone(), head, [0i64; SP_WORDS]))
+            },
+            1,
+        );
+        tbl.row(&[
+            len.to_string(),
+            fmt_us(rep.latency.mean()),
+            format!("{:.0}", rep.latency.mean() / len as f64),
+        ]);
+    }
+    tbl.print();
+    tbl.save_csv("appendix_traversal_length");
+}
+
+/// Partitioned vs random allocation for distributed B+Trees.
+fn allocation_policy() {
+    let mut tbl = Table::new(
+        "Allocation policy: B+Tree lookups, 2 nodes, 64 KB slabs",
+        &["policy", "mean lat us", "cross-node reqs"],
+    );
+    for (name, policy) in [
+        ("partitioned", AllocPolicy::Contiguous),
+        ("uniform", AllocPolicy::RoundRobin),
+        ("random", AllocPolicy::Random),
+    ] {
+        let mut cfg = RackConfig {
+            nodes: 2,
+            node_capacity: 512 << 20,
+            granularity: 64 << 10,
+            policy,
+            ..Default::default()
+        };
+        cfg.seed = 11;
+        let mut rack = Rack::new(cfg);
+        let pairs: Vec<(i64, i64)> =
+            (0..60_000).map(|i| (i, i)).collect();
+        let t = BPlusTree::build_sorted(&mut rack, &pairs, 7);
+        let prog = t.get_program();
+        let root = t.root;
+        let mut rng = Rng::new(3);
+        let mut ops = move |i: u64| {
+            if i >= 300 {
+                return None;
+            }
+            let mut sp = [0i64; SP_WORDS];
+            sp[0] = rng.below(60_000) as i64;
+            Some(Op::new(prog.clone(), root, sp))
+        };
+        let rep = rack.serve(move |i| ops(i), 4);
+        tbl.row(&[
+            name.to_string(),
+            fmt_us(rep.latency.mean()),
+            rep.cross_node_requests.to_string(),
+        ]);
+    }
+    tbl.print();
+    tbl.save_csv("appendix_alloc_policy");
+}
+
+/// Memory pipelines needed to saturate the node's 25 GB/s.
+fn memory_pipelines() {
+    let mut tbl = Table::new(
+        "Memory pipelines vs achieved bandwidth (linked-list walk)",
+        &["n mem pipes", "GB/s", "of 25 GB/s"],
+    );
+    let tr = vec![IterTrace { words: 32, instrs: 4, dirty: false }; 64];
+    for n in [1usize, 2, 4, 8] {
+        let cfg = AccelConfig { m_logic: 1, n_mem: n, coupled: false };
+        let mut sim = AccelSim::new(cfg, LatencyModel::default());
+        let visits: Vec<_> = (0..256)
+            .map(|i| pulse::accel::des::VisitSpec {
+                arrive: i,
+                trace: tr.clone(),
+            })
+            .collect();
+        let done = sim.run(&visits);
+        let makespan = *done.iter().max().unwrap() as f64;
+        let bytes = 256.0 * 64.0 * 32.0 * 8.0;
+        let gbps = bytes / makespan;
+        tbl.row(&[
+            n.to_string(),
+            format!("{gbps:.1}"),
+            format!("{:.0}%", gbps / 25.0 * 100.0),
+        ]);
+    }
+    tbl.print();
+    tbl.save_csv("appendix_mem_pipelines");
+}

@@ -1,0 +1,62 @@
+//! Fig. 10: latency breakdown inside the PULSE accelerator for one
+//! WebService request iteration (calibrated constants + measured
+//! end-to-end composition check against the DES).
+
+use pulse::bench_support::Table;
+use pulse::rack::{Op, Rack, RackConfig};
+use pulse::sim::LatencyModel;
+
+fn main() {
+    let m = LatencyModel::default();
+    let mut tbl = Table::new(
+        "Fig. 10: accelerator latency breakdown (WebService)",
+        &["component", "ns"],
+    );
+    tbl.row(&["network stack (in)".into(), format!("{}", m.accel_net_stack_ns)]);
+    tbl.row(&["scheduler".into(), format!("{}", m.accel_sched_ns)]);
+    tbl.row(&["TCAM translation".into(), format!("{}", m.accel_tcam_ns)]);
+    tbl.row(&["memory controller".into(), format!("{}", m.accel_memctrl_ns)]);
+    tbl.row(&["interconnect".into(), format!("{}", m.accel_interconnect_ns)]);
+    tbl.row(&["logic (≈3 instr/iter eff.)".into(), "10".into()]);
+    tbl.row(&["network stack (out)".into(), format!("{}", m.accel_net_stack_ns)]);
+    tbl.print();
+    tbl.save_csv("fig10_breakdown");
+
+    // composition check: a single-iteration request through the DES
+    // should cost ≈ 2·net_stack + sched + tcam+memctl+interconnect+
+    // logic + network path.
+    let mut rack = Rack::new(RackConfig {
+        nodes: 1,
+        node_capacity: 64 << 20,
+        granularity: 1 << 20,
+        ..Default::default()
+    });
+    let mut m2 = pulse::ds::HashMapDs::build(&mut rack, 64);
+    m2.insert(&mut rack, 7, 70);
+    let prog = m2.find_program();
+    let bucket = m2.bucket_ptr(7);
+    let mut sent = false;
+    let report = rack.serve(
+        move |_| {
+            if sent {
+                None
+            } else {
+                sent = true;
+                let mut sp = [0i64; 32];
+                sp[0] = 7;
+                Some(Op::new(prog.clone(), bucket, sp))
+            }
+        },
+        1,
+    );
+    let total = report.latency.mean();
+    let net = 2.0
+        * (m.host_net_stack_ns
+            + 2.0 * m.net_hop_ns
+            + m.switch_pipeline_ns);
+    println!(
+        "\nDES single-request end-to-end: {total:.0} ns \
+         (network path ≈ {net:.0} ns, accelerator ≈ {:.0} ns)",
+        total - net
+    );
+}

@@ -1,0 +1,70 @@
+//! Fig. 8: energy per operation at memory-bandwidth-saturating load.
+//! Expected shape: PULSE 4.5–5× below RPC; PULSE-ASIC a further ~6.3–7×;
+//! RPC-ARM can exceed RPC (WebService).
+
+use pulse::accel::AccelConfig;
+use pulse::baselines::{RpcKind, RpcModel};
+use pulse::bench_support::{bench_rack, build_app, stats_from_report, Table};
+use pulse::energy::{EnergySystem, PowerModel};
+
+fn main() {
+    let mut tbl = Table::new(
+        "Fig. 8: energy per operation, µJ",
+        &["app", "PULSE", "PULSE-ASIC", "RPC", "RPC-ARM", "Cache+RPC"],
+    );
+    let power = PowerModel::default();
+    let cfg = AccelConfig::paper_default();
+
+    for app_name in ["webservice", "wiredtiger", "btrdb"] {
+        let mut rack = bench_rack(4, 64 << 10);
+        let app = build_app(&mut rack, app_name, 7);
+        let rep = app.serve(&mut rack, 600, 256, true, 2, 11);
+        let stats = stats_from_report(
+            &rep,
+            app.words_per_iter(),
+            app.resp_bytes(),
+            app.cpu_post_ns(),
+        );
+        // per-node throughputs at saturation
+        let pulse_tput = rep.tput_ops_per_s / 4.0;
+        let rpc_tput =
+            RpcModel::new(RpcKind::Rpc).tput_ops_per_s(&stats, 1);
+        let arm_tput =
+            RpcModel::new(RpcKind::RpcArm).tput_ops_per_s(&stats, 1);
+        let crpc_tput =
+            RpcModel::new(RpcKind::CacheRpc).tput_ops_per_s(&stats, 1);
+
+        let e = |sys, tput| {
+            format!(
+                "{:.2}",
+                power.energy_per_op_uj(sys, &cfg, tput)
+            )
+        };
+        tbl.row(&[
+            app_name.to_string(),
+            e(EnergySystem::Pulse, pulse_tput),
+            e(EnergySystem::PulseAsic, pulse_tput),
+            e(EnergySystem::Rpc, rpc_tput),
+            e(EnergySystem::RpcArm, arm_tput),
+            e(EnergySystem::CacheRpc, crpc_tput),
+        ]);
+    }
+    tbl.print();
+    tbl.save_csv("fig8_energy");
+
+    // node-power summary for the record
+    println!("\nnode power model (W):");
+    println!(
+        "  PULSE FPGA {:.1}  PULSE-ASIC {:.1}  RPC(Xeon) {:.1}  ARM {:.1}",
+        power.pulse_node_w(&cfg),
+        power.pulse_asic_node_w(&cfg),
+        power.rpc_node_w(),
+        power.arm_node_w()
+    );
+    println!(
+        "  equal-throughput energy ratio RPC/PULSE = {:.1}x, \
+         PULSE/ASIC = {:.1}x",
+        power.rpc_node_w() / power.pulse_node_w(&cfg),
+        power.pulse_node_w(&cfg) / power.pulse_asic_node_w(&cfg)
+    );
+}

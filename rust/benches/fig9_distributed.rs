@@ -1,0 +1,84 @@
+//! Fig. 9: impact of in-network distributed traversals — PULSE vs
+//! PULSE-ACC (which returns to the CPU node on every crossing).
+//! Expected: identical at 1 node; ACC 1.02–1.15× higher latency at 2
+//! nodes; identical throughput (memory-bandwidth bound either way).
+
+use pulse::bench_support::{fmt_kops, fmt_us, Table};
+use pulse::rack::{Rack, RackConfig};
+use pulse::workloads::{YcsbSpec, YcsbWorkload};
+
+fn run(app: &str, nodes: usize, in_network: bool) -> (f64, f64, u64) {
+    let mut cfg = RackConfig {
+        nodes,
+        node_capacity: 1 << 30,
+        granularity: 64 << 10,
+        in_network_routing: in_network,
+        ..Default::default()
+    };
+    cfg.seed = 7;
+    let mut rack = Rack::new(cfg);
+    match app {
+        "wiredtiger" => {
+            let a = pulse::apps::WiredTigerApp::build(&mut rack, 60_000, 5);
+            let w = YcsbWorkload::new(YcsbSpec::E, 60_000, true, 9)
+                .with_max_scan(60);
+            let mut lat_ops = a.op_stream(w, 200);
+            let lat = rack.serve(move |i| lat_ops(i), 2);
+            let w2 = YcsbWorkload::new(YcsbSpec::E, 60_000, true, 9)
+                .with_max_scan(60);
+            let mut tput_ops = a.op_stream(w2, 600);
+            let tput = rack.serve(move |i| tput_ops(i), 128);
+            (
+                lat.latency.mean(),
+                tput.tput_ops_per_s,
+                lat.cross_node_requests,
+            )
+        }
+        _ => {
+            let a = pulse::apps::BtrDbApp::build(&mut rack, 40_000, 5);
+            let mut lat_ops =
+                a.op_stream(2 * pulse::bench_support::SEC, 200, 9);
+            let lat = rack.serve(move |i| lat_ops(i), 2);
+            let mut tput_ops =
+                a.op_stream(2 * pulse::bench_support::SEC, 600, 11);
+            let tput = rack.serve(move |i| tput_ops(i), 128);
+            (
+                lat.latency.mean(),
+                tput.tput_ops_per_s,
+                lat.cross_node_requests,
+            )
+        }
+    }
+}
+
+fn main() {
+    let mut tbl = Table::new(
+        "Fig. 9: PULSE vs PULSE-ACC",
+        &[
+            "app",
+            "nodes",
+            "PULSE lat us",
+            "ACC lat us",
+            "ACC/PULSE",
+            "PULSE kops",
+            "ACC kops",
+        ],
+    );
+    for app in ["wiredtiger", "btrdb"] {
+        for nodes in [1usize, 2] {
+            let (pl, pt, _cross) = run(app, nodes, true);
+            let (al, at, _) = run(app, nodes, false);
+            tbl.row(&[
+                app.to_string(),
+                nodes.to_string(),
+                fmt_us(pl),
+                fmt_us(al),
+                format!("{:.2}", al / pl),
+                fmt_kops(pt),
+                fmt_kops(at),
+            ]);
+        }
+    }
+    tbl.print();
+    tbl.save_csv("fig9_pulse_vs_acc");
+}

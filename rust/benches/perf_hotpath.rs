@@ -1,0 +1,125 @@
+//! §Perf hot-path microbenchmarks (wall-clock, not virtual time):
+//!   * native logic-pipeline interpreter (iterations/s);
+//!   * full rack DES serving rate (DES events are the L3 hot loop);
+//!   * XLA batched logic engine (lane-iterations/s through PJRT).
+//! Results go to EXPERIMENTS.md §Perf; see DESIGN.md §6 for targets.
+
+use pulse::accel::XlaBatchEngine;
+use pulse::bench_support::{bench_rack, build_app, Table};
+use pulse::interp::{logic_pass, Workspace};
+use pulse::isa::Status;
+use pulse::runtime::PjrtRuntime;
+use pulse::util::prng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let mut tbl = Table::new(
+        "§Perf hot paths (wall clock)",
+        &["path", "metric", "value"],
+    );
+
+    // 1. native interpreter: steady-state chain walk
+    {
+        let p = pulse::testgen::list_find_program();
+        let mut w = Workspace::new();
+        w.sp[0] = 1; // never matches data below -> walks forever
+        w.data[0] = 0;
+        w.data[2] = 0x1000;
+        let rounds = 3_000_000u64;
+        let t0 = Instant::now();
+        let mut acc = 0u64;
+        for _ in 0..rounds {
+            w.regs = [0; pulse::isa::NREG];
+            w.regs[0] = 0x1000;
+            let r = logic_pass(&p, &mut w);
+            acc += r.steps as u64;
+            debug_assert_eq!(r.status, Status::NextIter);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        tbl.row(&[
+            "native interpreter".into(),
+            "logic passes/s".into(),
+            format!("{:.1}M (checksum {})", rounds as f64 / dt / 1e6, acc % 97),
+        ]);
+        tbl.row(&[
+            "native interpreter".into(),
+            "instr/s".into(),
+            format!("{:.0}M", acc as f64 / dt / 1e6),
+        ]);
+    }
+
+    // 2. rack DES end-to-end serving rate (wall clock)
+    {
+        let mut rack = bench_rack(4, 64 << 10);
+        let app = build_app(&mut rack, "wiredtiger", 7);
+        let t0 = Instant::now();
+        let rep = app.serve(&mut rack, 3_000, 128, true, 2, 13);
+        let dt = t0.elapsed().as_secs_f64();
+        tbl.row(&[
+            "rack DES".into(),
+            "ops/s (wall)".into(),
+            format!("{:.0}k", rep.completed as f64 / dt / 1e3),
+        ]);
+        tbl.row(&[
+            "rack DES".into(),
+            "iterations/s (wall)".into(),
+            format!("{:.2}M", rep.total_iters as f64 / dt / 1e6),
+        ]);
+        tbl.row(&[
+            "rack DES".into(),
+            "sim speed (virtual/wall)".into(),
+            format!(
+                "{:.2}x",
+                rep.makespan_ns as f64 / 1e9 / dt
+            ),
+        ]);
+    }
+
+    // 3. XLA batched logic engine via PJRT
+    match PjrtRuntime::new(PjrtRuntime::default_dir())
+        .and_then(|rt| rt.load_logic_step(256))
+    {
+        Ok(exe) => {
+            let eng = XlaBatchEngine::xla(&exe);
+            let p = pulse::testgen::list_find_program();
+            let mut rng = Rng::new(2);
+            let ws: Vec<Workspace> = (0..256)
+                .map(|_| {
+                    let mut w = pulse::testgen::random_workspace(&mut rng);
+                    w.data[2] = 0; // ensure termination
+                    w
+                })
+                .collect();
+            // warm-up
+            let _ = eng.step(&p, &mut ws.clone()).unwrap();
+            let rounds = 50;
+            let t0 = Instant::now();
+            for _ in 0..rounds {
+                let mut batch = ws.clone();
+                let _ = eng.step(&p, &mut batch).unwrap();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let lane_passes = rounds as f64 * 256.0;
+            tbl.row(&[
+                "XLA engine (b=256)".into(),
+                "lane passes/s".into(),
+                format!("{:.0}k", lane_passes / dt / 1e3),
+            ]);
+            tbl.row(&[
+                "XLA engine (b=256)".into(),
+                "batch call latency".into(),
+                format!("{:.2} ms", dt / rounds as f64 * 1e3),
+            ]);
+        }
+        Err(e) => {
+            tbl.row(&[
+                "XLA engine".into(),
+                "skipped".into(),
+                format!("{e:#}"),
+            ]);
+        }
+    }
+
+    tbl.print();
+    tbl.save_csv("perf_hotpath");
+}

@@ -1,0 +1,111 @@
+//! Table 4: coupled (multi-core) vs PULSE's disaggregated pipelines —
+//! FPGA area (LUT/BRAM %) and WebService throughput/latency for every
+//! (m, n) combination the paper measured.
+//! Expected shape: disaggregated 1L+4M tracks coupled 4×4 throughput at
+//! substantially less area, with a small latency penalty.
+
+use pulse::accel::{AccelConfig, AccelSim, AreaModel, IterTrace};
+use pulse::bench_support::Table;
+use pulse::sim::LatencyModel;
+
+fn webservice_trace() -> Vec<IterTrace> {
+    // Table 3: ~48 iterations per request, small hash-chain nodes.
+    vec![IterTrace { words: 3, instrs: 14, dirty: false }; 48]
+}
+
+fn measure(cfg: AccelConfig) -> (f64, f64) {
+    let mut sim = AccelSim::new(cfg, LatencyModel::default());
+    let tr = webservice_trace();
+    let visits: Vec<_> = (0..256)
+        .map(|i| pulse::accel::des::VisitSpec {
+            arrive: i * 100,
+            trace: tr.clone(),
+        })
+        .collect();
+    let done = sim.run(&visits);
+    let makespan = *done.iter().max().unwrap() as f64;
+    let tput_mops = 256.0 / (makespan / 1e9) / 1e6;
+    // single-request latency on an idle accelerator
+    let mut idle = AccelSim::new(cfg, LatencyModel::default());
+    let lat_us = idle.schedule_visit(0, &tr) as f64 / 1e3;
+    (tput_mops, lat_us)
+}
+
+fn main() {
+    let area = AreaModel::fit();
+    let mut tbl = Table::new(
+        "Table 4: coupled vs disaggregated",
+        &["design", "m", "n", "LUT %", "BRAM %", "tput Mops/s", "lat us"],
+    );
+
+    let mut base_tput = None;
+    for k in 1..=4usize {
+        let cfg = AccelConfig { m_logic: k, n_mem: k, coupled: true };
+        let a = area.area(&cfg);
+        let (t, l) = measure(cfg);
+        if k == 1 {
+            base_tput = Some(t);
+        }
+        tbl.row(&[
+            "coupled".into(),
+            k.to_string(),
+            k.to_string(),
+            format!("{:.2}", a.lut_pct),
+            format!("{:.2}", a.bram_pct),
+            format!(
+                "{:.2} ({:+.0}%)",
+                t,
+                (t / base_tput.unwrap() - 1.0) * 100.0
+            ),
+            format!("{l:.2}"),
+        ]);
+    }
+    for m in 1..=4usize {
+        for n in 1..=4usize {
+            let cfg = AccelConfig { m_logic: m, n_mem: n, coupled: false };
+            let a = area.area(&cfg);
+            let (t, l) = measure(cfg);
+            tbl.row(&[
+                "PULSE".into(),
+                m.to_string(),
+                n.to_string(),
+                format!("{:.2}", a.lut_pct),
+                format!("{:.2}", a.bram_pct),
+                format!(
+                    "{:.2} ({:+.0}%)",
+                    t,
+                    (t / base_tput.unwrap() - 1.0) * 100.0
+                ),
+                format!("{l:.2}"),
+            ]);
+        }
+    }
+    tbl.print();
+    tbl.save_csv("table4_ablation");
+
+    // headline: 1L+4M vs coupled 4x4
+    let (t_pulse, l_pulse) = measure(AccelConfig {
+        m_logic: 1,
+        n_mem: 4,
+        coupled: false,
+    });
+    let (t_cpl, l_cpl) = measure(AccelConfig {
+        m_logic: 4,
+        n_mem: 4,
+        coupled: true,
+    });
+    let a_pulse = area.area(&AccelConfig {
+        m_logic: 1,
+        n_mem: 4,
+        coupled: false,
+    });
+    let a_cpl =
+        area.area(&AccelConfig { m_logic: 4, n_mem: 4, coupled: true });
+    println!(
+        "\nheadline: PULSE 1L+4M = {:.0}% of coupled-4x4 throughput \
+         at {:.0}% less LUT area, {:+.0}% latency",
+        t_pulse / t_cpl * 100.0,
+        (1.0 - a_pulse.lut_pct / a_cpl.lut_pct) * 100.0,
+        (l_pulse / l_cpl - 1.0) * 100.0
+    );
+}

@@ -1,0 +1,413 @@
+//! Discrete-event timing model of the accelerator's pipeline resources.
+//!
+//! Replays functional traces (`IterTrace`) against m logic + n memory
+//! pipelines with the paper's multiplexing scheduler (Fig. 4 / Algorithm
+//! 1): each iteration is a memory phase (any free memory pipeline)
+//! followed by a dependent logic phase (any free logic pipeline);
+//! different iterators overlap freely. The workspace count (m + n)
+//! bounds admission (§4.2). Coupled (multi-core, Table 4) mode fuses
+//! each logic+memory pair into a core that a request occupies for the
+//! whole iteration — the under-utilization Fig. 4 (top) illustrates.
+//!
+//! This is a true event-driven simulation (not greedy reservation), so
+//! later arrivals backfill pipeline idle gaps exactly as the hardware
+//! scheduler does.
+
+use super::{AccelConfig, IterTrace};
+use crate::sim::{EventQueue, LatencyModel, Ns};
+use std::collections::VecDeque;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PipeStats {
+    pub mem_busy_ns: u64,
+    pub logic_busy_ns: u64,
+    pub visits: u64,
+    pub iterations: u64,
+    /// Completion time of the latest visit (makespan).
+    pub makespan_ns: Ns,
+}
+
+impl PipeStats {
+    /// Utilization of the memory pipelines over the makespan.
+    pub fn mem_util(&self, n_mem: usize) -> f64 {
+        if self.makespan_ns == 0 {
+            return 0.0;
+        }
+        self.mem_busy_ns as f64 / (self.makespan_ns as f64 * n_mem as f64)
+    }
+
+    pub fn logic_util(&self, m_logic: usize) -> f64 {
+        if self.makespan_ns == 0 {
+            return 0.0;
+        }
+        self.logic_busy_ns as f64
+            / (self.makespan_ns as f64 * m_logic as f64)
+    }
+}
+
+/// One visit to schedule: arrival time + functional trace.
+#[derive(Debug, Clone)]
+pub struct VisitSpec {
+    pub arrive: Ns,
+    pub trace: Vec<IterTrace>,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrive(usize),
+    MemDone(usize),
+    LogicDone(usize),
+    CoreDone(usize),
+}
+
+struct VisitState {
+    trace: Vec<IterTrace>,
+    iter: usize,
+    done_at: Option<Ns>,
+}
+
+/// Counting resource with FIFO waiters.
+struct ResPool {
+    free: usize,
+    wait: VecDeque<usize>,
+}
+
+impl ResPool {
+    fn new(k: usize) -> Self {
+        Self { free: k, wait: VecDeque::new() }
+    }
+}
+
+#[derive(Debug)]
+pub struct AccelSim {
+    cfg: AccelConfig,
+    lat: LatencyModel,
+    pub stats: PipeStats,
+}
+
+impl AccelSim {
+    pub fn new(cfg: AccelConfig, lat: LatencyModel) -> Self {
+        assert!(
+            !cfg.coupled || cfg.m_logic == cfg.n_mem,
+            "coupled mode requires m == n"
+        );
+        Self { cfg, lat, stats: PipeStats::default() }
+    }
+
+    pub fn cfg(&self) -> AccelConfig {
+        self.cfg
+    }
+
+    fn mem_dur(&self, it: &IterTrace) -> Ns {
+        self.lat.mem_pipe_ns(it.words as usize, it.dirty)
+    }
+
+    fn logic_dur(&self, it: &IterTrace) -> Ns {
+        self.lat.logic_ns(it.instrs).max(1)
+    }
+
+    /// Simulate all visits; returns per-visit departure times (response
+    /// leaving the accelerator's network stack), parallel to `visits`.
+    pub fn run(&mut self, visits: &[VisitSpec]) -> Vec<Ns> {
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut vs: Vec<VisitState> = visits
+            .iter()
+            .map(|v| VisitState {
+                trace: v.trace.clone(),
+                iter: 0,
+                done_at: None,
+            })
+            .collect();
+
+        let ns_in = self.lat.accel_net_stack_ns as Ns;
+        let sched = self.lat.accel_sched_ns as Ns;
+
+        let mut workspaces = ResPool::new(self.cfg.workspaces());
+        let mut mem = ResPool::new(self.cfg.n_mem);
+        let mut logic = ResPool::new(self.cfg.m_logic);
+        let mut cores = ResPool::new(self.cfg.n_mem); // coupled mode
+
+        for (i, v) in visits.iter().enumerate() {
+            q.push(v.arrive + ns_in, Ev::Arrive(i));
+        }
+
+        macro_rules! start_iter {
+            ($now:expr, $vid:expr, $q:expr) => {{
+                let vid = $vid;
+                if self.cfg.coupled {
+                    if cores.free > 0 {
+                        cores.free -= 1;
+                        let it = vs[vid].trace[vs[vid].iter];
+                        let dur = self.mem_dur(&it) + self.logic_dur(&it);
+                        self.stats.mem_busy_ns += self.mem_dur(&it);
+                        self.stats.logic_busy_ns += self.logic_dur(&it);
+                        $q.push($now + dur, Ev::CoreDone(vid));
+                    } else {
+                        cores.wait.push_back(vid);
+                    }
+                } else if mem.free > 0 {
+                    mem.free -= 1;
+                    let dur = self.mem_dur(&vs[vid].trace[vs[vid].iter]);
+                    self.stats.mem_busy_ns += dur;
+                    $q.push($now + dur, Ev::MemDone(vid));
+                } else {
+                    mem.wait.push_back(vid);
+                }
+            }};
+        }
+
+        macro_rules! finish_visit {
+            ($now:expr, $vid:expr, $q:expr) => {{
+                let vid = $vid;
+                vs[vid].done_at = Some($now + ns_in);
+                self.stats.visits += 1;
+                self.stats.makespan_ns =
+                    self.stats.makespan_ns.max($now + ns_in);
+                // release the workspace; admit a waiter
+                if let Some(w) = workspaces.wait.pop_front() {
+                    start_iter!($now + sched, w, $q);
+                } else {
+                    workspaces.free += 1;
+                }
+            }};
+        }
+
+        while let Some((now, ev)) = q.pop() {
+            match ev {
+                Ev::Arrive(vid) => {
+                    if vs[vid].trace.is_empty() {
+                        // zero-iteration visit (e.g. immediate bounce)
+                        vs[vid].done_at = Some(now + ns_in);
+                        self.stats.visits += 1;
+                        self.stats.makespan_ns =
+                            self.stats.makespan_ns.max(now + ns_in);
+                        continue;
+                    }
+                    if workspaces.free > 0 {
+                        workspaces.free -= 1;
+                        start_iter!(now + sched, vid, q);
+                    } else {
+                        workspaces.wait.push_back(vid);
+                    }
+                }
+                Ev::MemDone(vid) => {
+                    // free the memory pipeline; hand to next waiter
+                    if let Some(w) = mem.wait.pop_front() {
+                        let dur = self.mem_dur(&vs[w].trace[vs[w].iter]);
+                        self.stats.mem_busy_ns += dur;
+                        q.push(now + dur, Ev::MemDone(w));
+                    } else {
+                        mem.free += 1;
+                    }
+                    // this visit proceeds to its logic phase
+                    if logic.free > 0 {
+                        logic.free -= 1;
+                        let dur =
+                            self.logic_dur(&vs[vid].trace[vs[vid].iter]);
+                        self.stats.logic_busy_ns += dur;
+                        q.push(now + dur, Ev::LogicDone(vid));
+                    } else {
+                        logic.wait.push_back(vid);
+                    }
+                }
+                Ev::LogicDone(vid) => {
+                    if let Some(w) = logic.wait.pop_front() {
+                        let dur = self.logic_dur(&vs[w].trace[vs[w].iter]);
+                        self.stats.logic_busy_ns += dur;
+                        q.push(now + dur, Ev::LogicDone(w));
+                    } else {
+                        logic.free += 1;
+                    }
+                    self.stats.iterations += 1;
+                    vs[vid].iter += 1;
+                    if vs[vid].iter < vs[vid].trace.len() {
+                        start_iter!(now + sched, vid, q);
+                    } else {
+                        finish_visit!(now, vid, q);
+                    }
+                }
+                Ev::CoreDone(vid) => {
+                    if let Some(w) = cores.wait.pop_front() {
+                        let it = vs[w].trace[vs[w].iter];
+                        let dur = self.mem_dur(&it) + self.logic_dur(&it);
+                        self.stats.mem_busy_ns += self.mem_dur(&it);
+                        self.stats.logic_busy_ns += self.logic_dur(&it);
+                        q.push(now + dur, Ev::CoreDone(w));
+                    } else {
+                        cores.free += 1;
+                    }
+                    self.stats.iterations += 1;
+                    vs[vid].iter += 1;
+                    if vs[vid].iter < vs[vid].trace.len() {
+                        start_iter!(now + sched, vid, q);
+                    } else {
+                        finish_visit!(now, vid, q);
+                    }
+                }
+            }
+        }
+
+        vs.into_iter().map(|v| v.done_at.expect("visit unfinished")).collect()
+    }
+
+    /// Convenience: single visit, returning its departure time.
+    pub fn schedule_visit(&mut self, arrive: Ns, trace: &[IterTrace]) -> Ns {
+        self.run(&[VisitSpec { arrive, trace: trace.to_vec() }])[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(iters: usize, words: u8, instrs: u32) -> Vec<IterTrace> {
+        vec![IterTrace { words, instrs, dirty: false }; iters]
+    }
+
+    fn lat() -> LatencyModel {
+        LatencyModel::default()
+    }
+
+    fn burst(n: usize, tr: &[IterTrace]) -> Vec<VisitSpec> {
+        (0..n)
+            .map(|_| VisitSpec { arrive: 0, trace: tr.to_vec() })
+            .collect()
+    }
+
+    #[test]
+    fn single_visit_latency_composition() {
+        let mut sim = AccelSim::new(
+            AccelConfig { m_logic: 1, n_mem: 1, coupled: false },
+            lat(),
+        );
+        let t = sim.schedule_visit(0, &trace(1, 3, 10));
+        let l = lat();
+        let expect = (2.0 * l.accel_net_stack_ns + l.accel_sched_ns) as Ns
+            + l.mem_pipe_ns(3, false)
+            + l.logic_ns(10);
+        assert_eq!(t, expect);
+    }
+
+    #[test]
+    fn disaggregated_overlaps_memory_phases() {
+        let tr = trace(4, 32, 4);
+        let mut dis = AccelSim::new(
+            AccelConfig { m_logic: 1, n_mem: 2, coupled: false },
+            lat(),
+        );
+        let d = dis.run(&burst(4, &tr));
+        let mut cpl = AccelSim::new(
+            AccelConfig { m_logic: 1, n_mem: 1, coupled: true },
+            lat(),
+        );
+        let c = cpl.run(&burst(4, &tr));
+        assert!(
+            d.iter().max() < c.iter().max(),
+            "disagg {:?} coupled {:?}",
+            d.iter().max(),
+            c.iter().max()
+        );
+    }
+
+    #[test]
+    fn eta_matched_load_saturates_memory_pipelines() {
+        // t_c = 0.5 t_d with m=1, n=2 (η = 0.5): steady stream keeps
+        // memory pipelines nearly fully busy (Fig. 4 bottom).
+        let l = lat();
+        let words = 32usize;
+        let mem_ns = l.mem_pipe_ns(words, false);
+        let instrs = (mem_ns / 2 / l.accel_instr_ns as u64) as u32;
+        let tr = trace(64, words as u8, instrs);
+        let mut sim = AccelSim::new(
+            AccelConfig { m_logic: 1, n_mem: 2, coupled: false },
+            lat(),
+        );
+        sim.run(&burst(8, &tr));
+        let mem_util = sim.stats.mem_util(2);
+        assert!(mem_util > 0.8, "mem util {mem_util}");
+        let logic_util = sim.stats.logic_util(1);
+        assert!(logic_util > 0.7, "logic util {logic_util}");
+    }
+
+    #[test]
+    fn more_memory_pipelines_increase_throughput() {
+        let tr = trace(8, 32, 8);
+        let make = |n_mem: usize| {
+            let mut sim = AccelSim::new(
+                AccelConfig { m_logic: 1, n_mem, coupled: false },
+                lat(),
+            );
+            *sim.run(&burst(32, &tr)).iter().max().unwrap()
+        };
+        let t1 = make(1);
+        let t2 = make(2);
+        let t4 = make(4);
+        assert!(t2 < t1);
+        assert!(t4 < t2);
+        let speedup = t1 as f64 / t4 as f64;
+        assert!(speedup > 2.5, "speedup {speedup}");
+    }
+
+    #[test]
+    fn workspace_bound_limits_concurrency() {
+        // m+n = 2 workspaces; 6 long visits cannot all be in flight.
+        let cfg = AccelConfig { m_logic: 1, n_mem: 1, coupled: false };
+        let mut sim = AccelSim::new(cfg, lat());
+        let tr = trace(16, 32, 8);
+        let done = sim.run(&burst(6, &tr));
+        let mut sorted = done.clone();
+        sorted.sort_unstable();
+        // strictly staged completion waves
+        assert!(sorted[5] > sorted[1]);
+        assert!(sorted[5] as f64 > 2.5 * sorted[0] as f64);
+    }
+
+    #[test]
+    fn coupled_equals_disagg_for_single_request() {
+        let tr = trace(5, 16, 12);
+        let mut dis = AccelSim::new(
+            AccelConfig { m_logic: 1, n_mem: 1, coupled: false },
+            lat(),
+        );
+        let mut cpl = AccelSim::new(
+            AccelConfig { m_logic: 1, n_mem: 1, coupled: true },
+            lat(),
+        );
+        assert_eq!(
+            dis.schedule_visit(0, &tr),
+            cpl.schedule_visit(0, &tr)
+        );
+    }
+
+    #[test]
+    fn zero_iteration_visit_passes_through() {
+        let mut sim = AccelSim::new(AccelConfig::paper_default(), lat());
+        let t = sim.schedule_visit(100, &[]);
+        let l = lat();
+        assert_eq!(t, 100 + 2 * l.accel_net_stack_ns as Ns);
+    }
+
+    #[test]
+    fn paper_table4_shape_disagg_matches_coupled_throughput_less_area() {
+        // WebService-like load: t_c/t_d ≈ 0.06 (Table 3). Disaggregated
+        // 1L+4M should be within a few % of coupled 4x4 throughput.
+        let l = lat();
+        let tr = trace(48, 8, 3); // hash chain walk
+        let reqs = burst(64, &tr);
+        let mut dis = AccelSim::new(
+            AccelConfig { m_logic: 1, n_mem: 4, coupled: false },
+            l.clone(),
+        );
+        let d = *dis.run(&reqs).iter().max().unwrap();
+        let mut cpl = AccelSim::new(
+            AccelConfig { m_logic: 4, n_mem: 4, coupled: true },
+            l,
+        );
+        let c = *cpl.run(&reqs).iter().max().unwrap();
+        let ratio = d as f64 / c as f64;
+        assert!(
+            ratio < 1.15,
+            "1L+4M should track coupled 4x4: ratio {ratio}"
+        );
+    }
+}

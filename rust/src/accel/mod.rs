@@ -1,0 +1,396 @@
+//! The PULSE accelerator (paper §4.2): disaggregated logic + memory
+//! pipelines, per-iterator workspaces, and the multiplexing scheduler.
+//!
+//! Split into:
+//! * functional execution (`visit`) — really runs the ISA against the
+//!   node's DRAM through the TCAM range table, producing the traversal
+//!   result plus a per-iteration timing trace;
+//! * timing (`des::AccelSim`) — replays traces against the m logic /
+//!   n memory pipeline resources (or the coupled multi-core layout for
+//!   the Table 4 ablation) on the virtual clock;
+//! * `area` — LUT/BRAM model (Table 4 calibration).
+//!
+//! The logic pipeline has two interchangeable engines: the native Rust
+//! interpreter (`interp::logic_pass`) and the AOT XLA artifact
+//! (`runtime::LogicStepExe`, used via `XlaBatchEngine`) — bit-identical
+//! by test.
+
+pub mod area;
+pub mod des;
+pub mod xla_engine;
+
+pub use area::AreaModel;
+pub use des::{AccelSim, PipeStats};
+pub use xla_engine::XlaBatchEngine;
+
+use crate::interp::{logic_pass, Workspace};
+use crate::isa::{Status, DATA_WORDS};
+use crate::mem::translate::TranslateError;
+use crate::mem::{NodeId, RangeTable, Region};
+use crate::net::TraversalMsg;
+
+/// Pipeline configuration of one accelerator.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelConfig {
+    /// Logic pipelines (m).
+    pub m_logic: usize,
+    /// Memory pipelines (n).
+    pub n_mem: usize,
+    /// Coupled (multi-core) mode for the Table 4 ablation: logic+memory
+    /// pairs fused into cores; requires m_logic == n_mem.
+    pub coupled: bool,
+}
+
+impl AccelConfig {
+    /// Paper default: η = 0.75 ⇒ 3 logic + 4 memory pipelines (§4.2
+    /// Implementation).
+    pub fn paper_default() -> Self {
+        Self { m_logic: 3, n_mem: 4, coupled: false }
+    }
+
+    pub fn eta(&self) -> f64 {
+        self.m_logic as f64 / self.n_mem as f64
+    }
+
+    /// Workspace count: m + n suffices for any schedule (paper §4.2).
+    pub fn workspaces(&self) -> usize {
+        self.m_logic + self.n_mem
+    }
+}
+
+/// Per-iteration timing trace entry, consumed by the DES.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IterTrace {
+    /// Words fetched by the aggregated LOAD.
+    pub words: u8,
+    /// Dynamic instructions executed by the logic pipeline.
+    pub instrs: u32,
+    /// Whether the data window was written back.
+    pub dirty: bool,
+}
+
+/// How a visit to this memory node ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VisitEnd {
+    /// Traversal finished (Return) or faulted (Trap).
+    Done(Status),
+    /// `cur_ptr` is not resident here — bounce to the switch (paper §5).
+    NotLocal,
+    /// Iteration budget exhausted — yield to the CPU node (paper §3).
+    Yield,
+}
+
+#[derive(Debug, Clone)]
+pub struct VisitOutcome {
+    pub end: VisitEnd,
+    /// Iterations executed during this visit.
+    pub iters: u32,
+    pub trace: Vec<IterTrace>,
+}
+
+/// One memory node's accelerator: DRAM + TCAM + functional engine.
+#[derive(Debug)]
+pub struct Accelerator {
+    pub node: NodeId,
+    pub region: Region,
+    pub table: RangeTable,
+    pub cfg: AccelConfig,
+    /// Reused workspace to avoid per-visit allocation (hot path).
+    ws: Workspace,
+    /// Counters.
+    pub iterations: u64,
+    pub traps: u64,
+    pub bounces: u64,
+}
+
+impl Accelerator {
+    pub fn new(
+        node: NodeId,
+        region: Region,
+        table: RangeTable,
+        cfg: AccelConfig,
+    ) -> Self {
+        Self {
+            node,
+            region,
+            table,
+            cfg,
+            ws: Workspace::new(),
+            iterations: 0,
+            traps: 0,
+            bounces: 0,
+        }
+    }
+
+    /// Execute iterations of `msg`'s traversal while the pointer stays
+    /// local and the budget lasts. Updates `msg` in place (cur_ptr, sp,
+    /// iters_done) so it can be bounced/forwarded verbatim — request and
+    /// response share the format (paper §5).
+    pub fn visit(&mut self, msg: &mut TraversalMsg) -> VisitOutcome {
+        let program = msg.program.clone();
+        let words = program.load_words as usize;
+        let mut trace = Vec::with_capacity(8);
+        let mut iters = 0u32;
+
+        // Restore migrated state: scratchpad + cur_ptr only (registers
+        // are per-iteration scratch — the cross-node contract, §5).
+        self.ws.sp.copy_from_slice(&msg.sp);
+
+        loop {
+            if msg.iters_done >= msg.max_iters {
+                msg.sp.copy_from_slice(&self.ws.sp);
+                return VisitOutcome { end: VisitEnd::Yield, iters, trace };
+            }
+            // Memory pipeline: translate + aggregated load (§4.2).
+            let local = match self.table.translate(
+                msg.cur_ptr,
+                (words * 8) as u64,
+                false,
+            ) {
+                Ok(off) => off,
+                Err(TranslateError::NotLocal) => {
+                    msg.sp.copy_from_slice(&self.ws.sp);
+                    msg.node_crossings += 1;
+                    self.bounces += 1;
+                    return VisitOutcome {
+                        end: VisitEnd::NotLocal,
+                        iters,
+                        trace,
+                    };
+                }
+                Err(TranslateError::Protection) => {
+                    msg.sp.copy_from_slice(&self.ws.sp);
+                    self.traps += 1;
+                    return VisitOutcome {
+                        end: VisitEnd::Done(Status::Trap),
+                        iters,
+                        trace,
+                    };
+                }
+            };
+            self.ws.data[..words].iter_mut().for_each(|w| *w = 0);
+            self.region.read_words(local, &mut self.ws.data[..words]);
+            if words < DATA_WORDS {
+                self.ws.data[words..].iter_mut().for_each(|w| *w = 0);
+            }
+
+            // Logic pipeline: one pass. Registers reset each iteration;
+            // r0 = cur_ptr.
+            self.ws.regs = [0; crate::isa::NREG];
+            self.ws.set_cur_ptr(msg.cur_ptr);
+            let pass = logic_pass(&program, &mut self.ws);
+            iters += 1;
+            msg.iters_done += 1;
+            self.iterations += 1;
+            trace.push(IterTrace {
+                words: program.load_words,
+                instrs: pass.steps,
+                dirty: program.writes_data,
+            });
+
+            // Write-back for mutating traversals.
+            if program.writes_data {
+                if let Ok(off) = self.table.translate(
+                    msg.cur_ptr,
+                    (words * 8) as u64,
+                    true,
+                ) {
+                    self.region.write_words(off, &self.ws.data[..words]);
+                } else {
+                    msg.sp.copy_from_slice(&self.ws.sp);
+                    self.traps += 1;
+                    return VisitOutcome {
+                        end: VisitEnd::Done(Status::Trap),
+                        iters,
+                        trace,
+                    };
+                }
+            }
+
+            match pass.status {
+                Status::NextIter => {
+                    msg.cur_ptr = self.ws.cur_ptr();
+                    continue;
+                }
+                Status::Return => {
+                    msg.sp.copy_from_slice(&self.ws.sp);
+                    return VisitOutcome {
+                        end: VisitEnd::Done(Status::Return),
+                        iters,
+                        trace,
+                    };
+                }
+                Status::Trap | Status::Running => {
+                    msg.sp.copy_from_slice(&self.ws.sp);
+                    self.traps += 1;
+                    return VisitOutcome {
+                        end: VisitEnd::Done(Status::Trap),
+                        iters,
+                        trace,
+                    };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::SP_WORDS;
+    use crate::mem::translate::Perms;
+    use crate::net::RequestId;
+
+    /// Build a node with a linked list laid out at 0x1000.
+    fn node_with_list(kvs: &[(i64, i64)]) -> (Accelerator, u64) {
+        let mut region = Region::new(1 << 20);
+        let mut table = RangeTable::new(64);
+        table.insert(0x1000, 0x10000, 0, Perms::RW).unwrap();
+        let base = 0x1000u64;
+        for (i, &(k, v)) in kvs.iter().enumerate() {
+            let addr = base + (i as u64) * 32;
+            let next = if i + 1 < kvs.len() {
+                base + (i as u64 + 1) * 32
+            } else {
+                0
+            };
+            // local offset == addr - 0x1000
+            region.write_words(addr - 0x1000, &[k, v, next as i64]);
+        }
+        let accel = Accelerator::new(
+            0,
+            region,
+            table,
+            AccelConfig::paper_default(),
+        );
+        (accel, base)
+    }
+
+    fn find_msg(start: u64, key: i64) -> TraversalMsg {
+        let mut sp = [0i64; SP_WORDS];
+        sp[0] = key;
+        TraversalMsg::request(
+            RequestId { cpu_node: 0, seq: 1 },
+            crate::testgen::list_find_program(),
+            start,
+            sp,
+            64,
+        )
+    }
+
+    #[test]
+    fn local_traversal_finds_key() {
+        let (mut accel, start) = node_with_list(&[(1, 10), (2, 20), (3, 30)]);
+        let mut msg = find_msg(start, 3);
+        let out = accel.visit(&mut msg);
+        assert_eq!(out.end, VisitEnd::Done(Status::Return));
+        assert_eq!(out.iters, 3);
+        assert_eq!(msg.sp[1], 30);
+        assert_eq!(out.trace.len(), 3);
+        assert!(out.trace.iter().all(|t| t.words == 3 && !t.dirty));
+    }
+
+    #[test]
+    fn miss_returns_not_found() {
+        let (mut accel, start) = node_with_list(&[(1, 10), (2, 20)]);
+        let mut msg = find_msg(start, 9);
+        let out = accel.visit(&mut msg);
+        assert_eq!(out.end, VisitEnd::Done(Status::Return));
+        assert_eq!(msg.sp[2], i64::MAX);
+    }
+
+    #[test]
+    fn non_local_pointer_bounces_with_state() {
+        let (mut accel, start) = node_with_list(&[(1, 10)]);
+        // point the tail at a remote address
+        accel.region.write_words(16, &[0x0900_0000i64]);
+        let mut msg = find_msg(start, 9);
+        let out = accel.visit(&mut msg);
+        assert_eq!(out.end, VisitEnd::NotLocal);
+        assert_eq!(msg.cur_ptr, 0x0900_0000);
+        assert_eq!(msg.iters_done, 1);
+        assert_eq!(msg.node_crossings, 1);
+        assert_eq!(accel.bounces, 1);
+    }
+
+    #[test]
+    fn iteration_budget_yields() {
+        let kvs: Vec<_> = (0..10).map(|i| (i as i64, i as i64)).collect();
+        let (mut accel, start) = node_with_list(&kvs);
+        let mut msg = find_msg(start, 99);
+        msg.max_iters = 4;
+        let out = accel.visit(&mut msg);
+        assert_eq!(out.end, VisitEnd::Yield);
+        assert_eq!(msg.iters_done, 4);
+        // continuation: budget refreshed by the CPU node
+        msg.max_iters = 64;
+        let out = accel.visit(&mut msg);
+        assert_eq!(out.end, VisitEnd::Done(Status::Return));
+        assert_eq!(msg.sp[2], i64::MAX); // not found after full walk
+        assert_eq!(msg.iters_done, 10);
+    }
+
+    #[test]
+    fn trap_on_protection_fault() {
+        let (mut accel, start) = node_with_list(&[(1, 10)]);
+        // a read-only range the program will try to walk into
+        accel.table.insert(0x100000, 0x1000, 0x20000, Perms::RO).unwrap();
+        // write-back program (stores into the window)
+        let mut a = crate::isa::Asm::new();
+        a.movi(1, 7);
+        a.std_(1, 0);
+        a.ret();
+        let p = a.finish(1).unwrap();
+        let mut msg = TraversalMsg::request(
+            RequestId { cpu_node: 0, seq: 2 },
+            p,
+            0x100000,
+            [0i64; SP_WORDS],
+            8,
+        );
+        let out = accel.visit(&mut msg);
+        assert_eq!(out.end, VisitEnd::Done(Status::Trap));
+        assert_eq!(accel.traps, 1);
+        let _ = start;
+    }
+
+    #[test]
+    fn stateful_sum_survives_yield_boundary() {
+        // list_sum accumulates in sp[3] — splitting the traversal across
+        // budget boundaries must not change the result.
+        let kvs: Vec<_> = (1..=8).map(|i| (i as i64, 10 * i as i64)).collect();
+        let (mut accel, start) = node_with_list(&kvs);
+        let p = {
+            let mut a = crate::isa::Asm::new();
+            let done = a.label();
+            a.spl(1, 3);
+            a.ldd(2, 1);
+            a.add(1, 1, 2);
+            a.sps(1, 3);
+            a.ldd(3, 2);
+            a.movi(4, 0);
+            a.jeq(3, 4, done);
+            a.mov(0, 3);
+            a.next();
+            a.bind(done);
+            a.ret();
+            a.finish(3).unwrap()
+        };
+        let mut msg = TraversalMsg::request(
+            RequestId { cpu_node: 0, seq: 3 },
+            p,
+            start,
+            [0i64; SP_WORDS],
+            3,
+        );
+        loop {
+            let out = accel.visit(&mut msg);
+            match out.end {
+                VisitEnd::Yield => msg.max_iters += 3,
+                VisitEnd::Done(Status::Return) => break,
+                e => panic!("unexpected {e:?}"),
+            }
+        }
+        assert_eq!(msg.sp[3], (1..=8).map(|i| 10 * i).sum::<i64>());
+    }
+}

@@ -1,0 +1,233 @@
+//! BTrDB-like time-series database (paper §6: windowed aggregation over
+//! µPMU voltage/current/phase readings; 1 s – 8 s windows).
+//!
+//! Samples are keyed by timestamp in a B+Tree with time-ordered leaves.
+//! A window query is the three-part pipeline:
+//!   1. offloaded locate to the window's first leaf;
+//!   2. offloaded leaf-chain *sum* aggregation (PULSE iterator);
+//!   3. CPU-side finalize — mean from the fixed sample rate, min/max
+//!      through the `window_agg` XLA artifact when fine-grained
+//!      rendering is requested (the L1 Pallas kernel running under the
+//!      Rust PJRT client — never Python).
+
+use crate::ds::bplustree::{BPlusTree, FANOUT};
+use crate::ds::{SP_ACC_SUM, SP_KEY};
+use crate::isa::SP_WORDS;
+use crate::rack::{Op, Rack, Stage, StartAddr};
+use crate::runtime::WindowAggExe;
+use crate::workloads::timeseries::{PmuSample, PmuSource};
+
+use super::WorkloadProfile;
+
+pub struct BtrDbApp {
+    pub tree: BPlusTree,
+    pub samples: Vec<PmuSample>,
+    pub dt_ns: i64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowStats {
+    pub sum_mv: i64,
+    pub count: i64,
+    pub mean_mv: f64,
+}
+
+impl BtrDbApp {
+    /// Ingest `n` µPMU samples (time-ordered bulk load, as BTrDB does).
+    pub fn build(rack: &mut Rack, n: usize, seed: u64) -> Self {
+        let mut src = PmuSource::new(seed);
+        let samples = src.take(n);
+        let pairs: Vec<(i64, i64)> = samples
+            .iter()
+            .map(|s| (s.t_ns, s.voltage_mv))
+            .collect();
+        let tree = BPlusTree::build_sorted(rack, &pairs, FANOUT);
+        Self { tree, samples, dt_ns: src.dt_ns }
+    }
+
+    /// Functional windowed aggregate over [t0, t0 + window_ns).
+    pub fn window_sum(&self, rack: &mut Rack, t0: i64, window_ns: i64) -> WindowStats {
+        let hi = t0 + window_ns - 1;
+        let sum = self.tree.sum_range(rack, t0, hi);
+        let count = self
+            .samples
+            .iter()
+            .filter(|s| s.t_ns >= t0 && s.t_ns <= hi)
+            .count() as i64;
+        WindowStats {
+            sum_mv: sum,
+            count,
+            mean_mv: if count > 0 { sum as f64 / count as f64 } else { 0.0 },
+        }
+    }
+
+    /// Host-side reference.
+    pub fn host_window_sum(&self, t0: i64, window_ns: i64) -> WindowStats {
+        let hi = t0 + window_ns - 1;
+        let mut sum = 0i64;
+        let mut count = 0i64;
+        for s in &self.samples {
+            if s.t_ns >= t0 && s.t_ns <= hi {
+                sum += s.voltage_mv;
+                count += 1;
+            }
+        }
+        WindowStats {
+            sum_mv: sum,
+            count,
+            mean_mv: if count > 0 { sum as f64 / count as f64 } else { 0.0 },
+        }
+    }
+
+    /// Fine-grained per-window (sum, mean, min, max) over a dense tile
+    /// of 4096 samples starting at `start_idx`, through the AOT XLA
+    /// window_agg artifact (the Mr.-Plotter-style rendering path).
+    pub fn render_tile(
+        &self,
+        exe: &WindowAggExe,
+        start_idx: usize,
+    ) -> anyhow::Result<crate::runtime::WindowAggOut> {
+        let n = exe.n;
+        anyhow::ensure!(
+            start_idx + n <= self.samples.len(),
+            "tile out of range"
+        );
+        let values: Vec<f32> = self.samples[start_idx..start_idx + n]
+            .iter()
+            .map(|s| s.voltage_mv as f32 / 1000.0)
+            .collect();
+        exe.run(&values)
+    }
+
+    /// DES op: locate + aggregate for one window query.
+    pub fn make_op(&self, t0: i64, window_ns: i64) -> Op {
+        let hi = t0 + window_ns - 1;
+        let mut sp1 = [0i64; SP_WORDS];
+        sp1[SP_KEY as usize] = t0;
+        let s1 = Stage::new(
+            self.tree.locate_program(),
+            self.tree.root,
+            sp1,
+        );
+        let mut s2 = Stage::new(
+            self.tree.sum_program(),
+            0,
+            [0i64; SP_WORDS],
+        );
+        s2.start = StartAddr::FromPrevSp(crate::ds::SP_RESULT);
+        s2.sp[SP_KEY as usize] = hi;
+        s2.sp[SP_ACC_SUM as usize] = 0;
+        Op { stages: vec![s1, s2], cpu_post_ns: 200 }
+    }
+
+    /// Window queries at a given resolution (paper: 1 s to 8 s).
+    pub fn op_stream(
+        &self,
+        window_ns: i64,
+        count: u64,
+        seed: u64,
+    ) -> impl FnMut(u64) -> Option<Op> + '_ {
+        let mut rng = crate::util::prng::Rng::with_stream(seed, 0xB7D);
+        let span = self.samples.last().map(|s| s.t_ns).unwrap_or(0);
+        move |i| {
+            if i >= count {
+                return None;
+            }
+            let max_t0 = (span - window_ns).max(1);
+            let t0 = rng.below(max_t0 as u64) as i64;
+            Some(self.make_op(t0, window_ns))
+        }
+    }
+
+    /// Iterations a window of `window_ns` takes ≈ leaves + tree depth
+    /// (Table 3 reports 38–227 for 1 s – 8 s).
+    pub fn profile(&self, window_ns: i64) -> WorkloadProfile {
+        let samples = window_ns as f64 / self.dt_ns as f64;
+        WorkloadProfile {
+            name: "BTrDB",
+            ratio: self.tree.sum_program().ratio(),
+            avg_iters: samples / FANOUT as f64 + 4.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rack::RackConfig;
+
+    fn rack() -> Rack {
+        Rack::new(RackConfig {
+            nodes: 2,
+            node_capacity: 256 << 20,
+            granularity: 4 << 20,
+            ..Default::default()
+        })
+    }
+
+    const SEC: i64 = 1_000_000_000;
+
+    #[test]
+    fn window_sum_matches_host() {
+        let mut r = rack();
+        let app = BtrDbApp::build(&mut r, 4000, 1);
+        for (t0, w) in [(0, SEC), (3 * SEC, SEC), (5 * SEC, 2 * SEC)] {
+            let got = app.window_sum(&mut r, t0, w);
+            let want = app.host_window_sum(t0, w);
+            assert_eq!(got, want, "window {t0}+{w}");
+            assert!(want.count > 100, "window too small: {}", want.count);
+        }
+    }
+
+    #[test]
+    fn mean_is_near_nominal_voltage() {
+        let mut r = rack();
+        let app = BtrDbApp::build(&mut r, 2000, 2);
+        let s = app.window_sum(&mut r, 0, 8 * SEC);
+        assert!(
+            (s.mean_mv - 120_000.0).abs() < 5_000.0,
+            "mean {}",
+            s.mean_mv
+        );
+    }
+
+    #[test]
+    fn des_window_queries_complete() {
+        let mut r = rack();
+        let app = BtrDbApp::build(&mut r, 8000, 3);
+        let mut ops = app.op_stream(SEC, 50, 9);
+        let report = r.serve(move |i| ops(i), 4);
+        assert_eq!(report.completed, 50);
+        assert_eq!(report.trapped, 0);
+        // 1 s window ≈ 120 samples / 7 per leaf ≈ 17 leaves + descend
+        assert!(
+            report.total_iters > 50 * 15,
+            "iters {}",
+            report.total_iters
+        );
+    }
+
+    #[test]
+    fn larger_windows_take_longer() {
+        let mut r = rack();
+        let app = BtrDbApp::build(&mut r, 16000, 4);
+        let lat_of = |r: &mut Rack, w| {
+            let mut ops = app.op_stream(w, 30, 11);
+            let rep = r.serve(move |i| ops(i), 1);
+            rep.latency.mean()
+        };
+        let l1 = lat_of(&mut r, SEC);
+        let l8 = lat_of(&mut r, 8 * SEC);
+        assert!(l8 > 2.0 * l1, "1s {l1} vs 8s {l8}");
+    }
+
+    #[test]
+    fn profile_iterations_match_table3_band() {
+        let mut r = rack();
+        let app = BtrDbApp::build(&mut r, 2000, 5);
+        let p1 = app.profile(SEC);
+        let p8 = app.profile(8 * SEC);
+        assert!(p1.avg_iters > 15.0 && p1.avg_iters < 60.0);
+        assert!(p8.avg_iters > 100.0 && p8.avg_iters < 300.0);
+    }
+}

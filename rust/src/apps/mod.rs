@@ -1,0 +1,28 @@
+//! The paper's three evaluation applications (§6, Table 3):
+//!
+//! * `WebService` — user-ID hash index + 8 KB objects, AES-CTR encrypt +
+//!   DEFLATE compress on the CPU node, driven by YCSB A/B/C;
+//! * `WiredTiger` — B+Tree storage engine, YCSB-E range scans;
+//! * `BTrDB` — time-series store over µPMU data with windowed
+//!   sum/mean/min/max aggregation (1 s – 8 s windows).
+//!
+//! Each app exposes (a) functional request execution for correctness,
+//! (b) an `Op` generator feeding the rack DES for the Fig. 7/8/9
+//! experiments, and (c) its Table 3 workload profile (t_c/t_d ratio +
+//! iterations per request).
+
+pub mod btrdb;
+pub mod webservice;
+pub mod wiredtiger;
+
+pub use btrdb::BtrDbApp;
+pub use webservice::WebServiceApp;
+pub use wiredtiger::WiredTigerApp;
+
+/// Table 3-style workload profile, printed by the fig7 bench.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadProfile {
+    pub name: &'static str,
+    pub ratio: f64,
+    pub avg_iters: f64,
+}

@@ -1,0 +1,187 @@
+//! WiredTiger-like storage engine (paper §6: MongoDB's backend, B+Tree
+//! NoSQL index, YCSB-E range queries over 8 B keys / 240 B values).
+//!
+//! Records live as 240 B blobs in disaggregated memory; the B+Tree maps
+//! key → record address. A YCSB-E scan is the two-stage offload chain:
+//! locate-traversal to the covering leaf, then the scan-traversal
+//! emitting record addresses into the scratchpad (with continuation
+//! rounds for long scans), then the record payloads ride back
+//! (`object_read_bytes`).
+
+use crate::ds::bplustree::BPlusTree;
+use crate::ds::{SP_CURSOR, SP_KEY, SP_RESULT};
+use crate::isa::SP_WORDS;
+use crate::mem::GAddr;
+use crate::rack::{Op, Rack, Stage, StartAddr};
+use crate::util::prng::Rng;
+use crate::workloads::{YcsbOp, YcsbWorkload};
+
+use super::WorkloadProfile;
+
+pub const RECORD_BYTES: usize = 240;
+
+pub struct WiredTigerApp {
+    pub tree: BPlusTree,
+    pub keys: u64,
+}
+
+impl WiredTigerApp {
+    pub fn build(rack: &mut Rack, keys: u64, seed: u64) -> Self {
+        let mut rng = Rng::with_stream(seed, 0x717);
+        let mut record = vec![0i64; RECORD_BYTES / 8];
+        let mut pairs = Vec::with_capacity(keys as usize);
+        for k in 0..keys {
+            let addr = rack.alloc(RECORD_BYTES as u64);
+            for w in record.iter_mut() {
+                *w = rng.next_i64();
+            }
+            rack.write_words(addr, &record);
+            pairs.push((k as i64, addr as i64));
+        }
+        let tree = BPlusTree::build_sorted(rack, &pairs, 7);
+        Self { tree, keys }
+    }
+
+    /// Functional range query: record addresses for `count` keys from
+    /// `start`.
+    pub fn scan(&self, rack: &mut Rack, start: i64, count: usize) -> Vec<GAddr> {
+        self.tree
+            .scan(rack, start, count)
+            .into_iter()
+            .map(|v| v as GAddr)
+            .collect()
+    }
+
+    pub fn get(&self, rack: &mut Rack, key: i64) -> Option<GAddr> {
+        self.tree.get(rack, key).map(|v| v as GAddr)
+    }
+
+    /// DES op for a YCSB-E request.
+    pub fn make_op(&self, ycsb: &YcsbOp) -> Op {
+        match *ycsb {
+            YcsbOp::Scan(start, len) => {
+                let start = (start % self.keys) as i64;
+                // stage 1: locate the covering leaf
+                let mut sp1 = [0i64; SP_WORDS];
+                sp1[SP_KEY as usize] = start;
+                let s1 = Stage::new(
+                    self.tree.locate_program(),
+                    self.tree.root,
+                    sp1,
+                );
+                // stage 2: scan `len` records, repeating on continuation
+                let mut s2 = Stage::new(
+                    self.tree.scan_program(),
+                    0,
+                    [0i64; SP_WORDS],
+                );
+                s2.start = StartAddr::FromPrevSp(SP_RESULT);
+                s2.sp[2] = len as i64; // remaining
+                s2.carry_sp = false;
+                s2.sp_overrides = vec![(3, 0), (SP_CURSOR, 0)];
+                s2.repeat_while = Some((SP_RESULT, 2));
+                s2.object_read_bytes = (len * RECORD_BYTES) as u32;
+                Op { stages: vec![s1, s2], cpu_post_ns: 0 }
+            }
+            YcsbOp::Read(k) | YcsbOp::Update(k) | YcsbOp::Insert(k) => {
+                // YCSB-E inserts modeled as point lookups of the
+                // insertion position (leaf split handled host-side).
+                let k = (k % self.keys) as i64;
+                let mut sp = [0i64; SP_WORDS];
+                sp[SP_KEY as usize] = k;
+                let mut st = Stage::new(
+                    self.tree.get_program(),
+                    self.tree.root,
+                    sp,
+                );
+                st.object_read_bytes = RECORD_BYTES as u32;
+                Op { stages: vec![st], cpu_post_ns: 0 }
+            }
+        }
+    }
+
+    pub fn op_stream(
+        &self,
+        mut workload: YcsbWorkload,
+        count: u64,
+    ) -> impl FnMut(u64) -> Option<Op> + '_ {
+        move |i| {
+            if i >= count {
+                return None;
+            }
+            Some(self.make_op(&workload.next_op()))
+        }
+    }
+
+    pub fn profile(&self) -> WorkloadProfile {
+        WorkloadProfile {
+            name: "WiredTiger",
+            ratio: self.tree.get_program().ratio(),
+            avg_iters: 25.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rack::RackConfig;
+    use crate::workloads::YcsbSpec;
+
+    fn rack() -> Rack {
+        Rack::new(RackConfig {
+            nodes: 2,
+            node_capacity: 256 << 20,
+            granularity: 4 << 20,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn scan_returns_contiguous_records() {
+        let mut r = rack();
+        let app = WiredTigerApp::build(&mut r, 2000, 1);
+        let recs = app.scan(&mut r, 500, 20);
+        assert_eq!(recs.len(), 20);
+        // addresses must match point lookups
+        for (i, &addr) in recs.iter().enumerate() {
+            assert_eq!(
+                app.get(&mut r, 500 + i as i64),
+                Some(addr),
+                "key {}",
+                500 + i as i64
+            );
+        }
+    }
+
+    #[test]
+    fn ycsb_e_serves_through_the_rack() {
+        let mut r = rack();
+        let app = WiredTigerApp::build(&mut r, 5000, 2);
+        let w = YcsbWorkload::new(YcsbSpec::E, 5000, true, 7)
+            .with_max_scan(40);
+        let mut ops = app.op_stream(w, 100);
+        let report = r.serve(move |i| ops(i), 4);
+        assert_eq!(report.completed, 100);
+        assert_eq!(report.trapped, 0);
+        // scans traverse many leaves: iterations per op >> 1
+        assert!(
+            report.total_iters > 400,
+            "iters {}",
+            report.total_iters
+        );
+    }
+
+    #[test]
+    fn functional_op_matches_ds_scan() {
+        let mut r = rack();
+        let app = WiredTigerApp::build(&mut r, 1000, 3);
+        let op = app.make_op(&YcsbOp::Scan(100, 15));
+        let sp = r.run_op_functional(&op);
+        // after the final stage, emitted count for the last round is in
+        // sp[3]; total correctness is checked via ds::scan
+        assert!(sp[3] > 0);
+        let recs = app.scan(&mut r, 100, 15);
+        assert_eq!(recs.len(), 15);
+    }
+}

@@ -1,0 +1,35 @@
+//! Compared systems (paper §6): Cache (Fastswap-like swap), RPC (memnode
+//! CPU), RPC-ARM (BlueField-2-like wimpy cores), Cache+RPC (AIFM-like),
+//! and PULSE-ACC (a `RackConfig` flag, not a module).
+//!
+//! PULSE itself is measured with the full rack DES; the baselines share
+//! the *same functional memory layout and traversals* (traces collected
+//! through the rack) but time them with each system's execution model,
+//! calibrated from the paper's testbed description (§6) and prior
+//! systems' published numbers. See DESIGN.md §2.
+
+pub mod cache;
+pub mod rpc;
+
+pub use cache::{trace_op, CachedSwapSim, TraceStats};
+pub use rpc::{RpcKind, RpcModel, SystemMetrics};
+
+/// Aggregate workload statistics extracted from functional traces —
+/// the interface between the apps and the baseline timing models.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkloadStats {
+    /// average traversal iterations per logical op
+    pub avg_iters: f64,
+    /// 8 B words fetched per iteration
+    pub words_per_iter: f64,
+    /// request wire bytes (program + scratchpad + headers)
+    pub req_bytes: f64,
+    /// response payload (scratchpad + bulk object reads)
+    pub resp_bytes: f64,
+    /// average memory-node crossings per op (distributed traversals)
+    pub avg_crossings: f64,
+    /// CPU post-processing per op (encrypt/compress etc.)
+    pub cpu_post_ns: f64,
+    /// number of logical ops measured
+    pub ops: u64,
+}

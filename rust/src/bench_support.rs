@@ -1,0 +1,189 @@
+//! Shared harness for the paper-figure benches (`rust/benches/*.rs`,
+//! built with `harness = false`): table printing + CSV emission under
+//! `bench_out/`, and the workload-stats extraction shared by the
+//! baseline models.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::apps::{BtrDbApp, WebServiceApp, WiredTigerApp};
+use crate::baselines::WorkloadStats;
+use crate::rack::{Rack, RackConfig, ServeReport};
+use crate::workloads::{YcsbSpec, YcsbWorkload};
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let mut line = String::new();
+        for (h, w) in self.header.iter().zip(&widths) {
+            let _ = write!(line, "{h:>w$}  ");
+        }
+        println!("{line}");
+        for r in &self.rows {
+            let mut line = String::new();
+            for (c, w) in r.iter().zip(&widths) {
+                let _ = write!(line, "{c:>w$}  ");
+            }
+            println!("{line}");
+        }
+    }
+
+    /// Write the table as CSV under `bench_out/<name>.csv`.
+    pub fn save_csv(&self, name: &str) {
+        let dir = Path::new("bench_out");
+        let _ = std::fs::create_dir_all(dir);
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        let path = dir.join(format!("{name}.csv"));
+        if std::fs::write(&path, out).is_ok() {
+            println!("[saved {}]", path.display());
+        }
+    }
+}
+
+pub fn fmt_us(ns: f64) -> String {
+    format!("{:.1}", ns / 1e3)
+}
+
+pub fn fmt_kops(ops: f64) -> String {
+    format!("{:.1}", ops / 1e3)
+}
+
+/// Standard rack config used across benches.
+pub fn bench_rack(nodes: usize, granularity: u64) -> Rack {
+    Rack::new(RackConfig {
+        nodes,
+        node_capacity: 1 << 30,
+        granularity,
+        ..Default::default()
+    })
+}
+
+/// Extract baseline-model workload stats from a PULSE serve report.
+pub fn stats_from_report(
+    rep: &ServeReport,
+    words_per_iter: f64,
+    resp_bytes: f64,
+    cpu_post_ns: f64,
+) -> WorkloadStats {
+    let ops = rep.completed.max(1);
+    WorkloadStats {
+        avg_iters: rep.total_iters as f64 / ops as f64,
+        words_per_iter,
+        req_bytes: 420.0,
+        resp_bytes,
+        avg_crossings: rep.crossings.mean(),
+        cpu_post_ns,
+        ops,
+    }
+}
+
+/// App handle bundling the built application with its op stream maker.
+pub enum BenchApp {
+    Web(WebServiceApp),
+    Wt(WiredTigerApp),
+    Bt(BtrDbApp),
+}
+
+pub const SEC: i64 = 1_000_000_000;
+
+/// Build one of the three paper apps at bench scale.
+pub fn build_app(rack: &mut Rack, which: &str, seed: u64) -> BenchApp {
+    match which {
+        "webservice" => {
+            BenchApp::Web(WebServiceApp::build(rack, 2_000, seed))
+        }
+        "wiredtiger" => {
+            BenchApp::Wt(WiredTigerApp::build(rack, 60_000, seed))
+        }
+        "btrdb" => BenchApp::Bt(BtrDbApp::build(rack, 40_000, seed)),
+        _ => panic!("unknown app {which}"),
+    }
+}
+
+impl BenchApp {
+    /// Serve `n` ops with the given concurrency; zipf toggles the key
+    /// chooser; `window_s` applies to BTrDB.
+    pub fn serve(
+        &self,
+        rack: &mut Rack,
+        n: u64,
+        conc: usize,
+        zipf: bool,
+        window_s: i64,
+        seed: u64,
+    ) -> ServeReport {
+        match self {
+            BenchApp::Web(app) => {
+                let w =
+                    YcsbWorkload::new(YcsbSpec::B, app.users, zipf, seed);
+                let mut ops = app.op_stream(w, n);
+                rack.serve(move |i| ops(i), conc)
+            }
+            BenchApp::Wt(app) => {
+                let w = YcsbWorkload::new(YcsbSpec::E, app.keys, zipf, seed)
+                    .with_max_scan(100);
+                let mut ops = app.op_stream(w, n);
+                rack.serve(move |i| ops(i), conc)
+            }
+            BenchApp::Bt(app) => {
+                let mut ops = app.op_stream(window_s * SEC, n, seed);
+                rack.serve(move |i| ops(i), conc)
+            }
+        }
+    }
+
+    pub fn words_per_iter(&self) -> f64 {
+        match self {
+            BenchApp::Web(_) => 3.0,
+            _ => 18.0,
+        }
+    }
+
+    pub fn resp_bytes(&self) -> f64 {
+        match self {
+            BenchApp::Web(_) => 8192.0 + 300.0,
+            BenchApp::Wt(_) => 50.0 * 240.0 + 300.0,
+            BenchApp::Bt(_) => 300.0,
+        }
+    }
+
+    pub fn cpu_post_ns(&self) -> f64 {
+        match self {
+            BenchApp::Web(app) => app.post_ns as f64,
+            _ => 200.0,
+        }
+    }
+}

@@ -1,0 +1,478 @@
+//! Structured iterator builder: the DSL surface of the PULSE compiler.
+
+use super::CompiledIter;
+use crate::isa::{Asm, Program, VerifyError, DATA_WORDS, NREG, SP_WORDS};
+
+/// A value handle — a register holding a computed value. Copy-type and
+/// immutable-by-convention (re-assignments produce new handles), which
+/// keeps lowering trivially SSA-ish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Val(u8);
+
+/// A forward block label (see `IterBuilder::make_label`).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockLabel(crate::isa::asm::Label);
+
+/// Structured builder for one iterator body (`next()` + `end()` fused,
+/// as the accelerator executes them: compute, then either advance via
+/// `advance()` or finish via `ret()`).
+pub struct IterBuilder {
+    asm: Asm,
+    next_reg: u8,
+    max_field: i64,
+    writes: bool,
+}
+
+impl Default for IterBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IterBuilder {
+    pub fn new() -> Self {
+        Self { asm: Asm::new(), next_reg: 1, max_field: 0, writes: false }
+    }
+
+    fn alloc(&mut self) -> Val {
+        assert!(
+            (self.next_reg as usize) < NREG,
+            "iterator body needs more than {} temporaries",
+            NREG - 2
+        );
+        let v = Val(self.next_reg);
+        self.next_reg += 1;
+        v
+    }
+
+    /// The current pointer (r0).
+    pub fn cur_ptr(&mut self) -> Val {
+        let v = self.alloc();
+        self.asm.mov(v.0, 0);
+        v
+    }
+
+    pub fn imm(&mut self, k: i64) -> Val {
+        let v = self.alloc();
+        self.asm.movi(v.0, k);
+        v
+    }
+
+    /// `data[word]` — a field of the node at `cur_ptr` (word = byte
+    /// offset / 8). Tracked for load aggregation.
+    pub fn field(&mut self, word: u32) -> Val {
+        assert!((word as usize) < DATA_WORDS);
+        self.max_field = self.max_field.max(word as i64);
+        let v = self.alloc();
+        self.asm.ldd(v.0, word as i64);
+        v
+    }
+
+    /// `data[idx + base]` with a runtime index (e.g. B-Tree key arrays).
+    /// `span_hint` is the largest word the access may reach — required
+    /// for load aggregation.
+    pub fn field_dyn(&mut self, idx: Val, base: u32, span_hint: u32) -> Val {
+        assert!((span_hint as usize) < DATA_WORDS);
+        self.max_field = self.max_field.max(span_hint as i64);
+        let v = self.alloc();
+        self.asm.ldx(v.0, idx.0, base as i64);
+        v
+    }
+
+    /// Store to a node field (marks the traversal as mutating).
+    pub fn store_field(&mut self, word: u32, v: Val) {
+        assert!((word as usize) < DATA_WORDS);
+        self.max_field = self.max_field.max(word as i64);
+        self.writes = true;
+        self.asm.std_(v.0, word as i64);
+    }
+
+    pub fn store_field_dyn(&mut self, idx: Val, base: u32, span_hint: u32, v: Val) {
+        assert!((span_hint as usize) < DATA_WORDS);
+        self.max_field = self.max_field.max(span_hint as i64);
+        self.writes = true;
+        self.asm.stx(v.0, idx.0, base as i64);
+    }
+
+    /// Scratchpad read / write (the iterator's persistent state, §3).
+    pub fn sp(&mut self, word: u32) -> Val {
+        assert!((word as usize) < SP_WORDS);
+        let v = self.alloc();
+        self.asm.spl(v.0, word as i64);
+        v
+    }
+
+    pub fn sp_store(&mut self, word: u32, v: Val) {
+        assert!((word as usize) < SP_WORDS);
+        self.asm.sps(v.0, word as i64);
+    }
+
+    pub fn sp_dyn(&mut self, idx: Val, base: u32) -> Val {
+        let v = self.alloc();
+        self.asm.splx(v.0, idx.0, base as i64);
+        v
+    }
+
+    pub fn sp_store_dyn(&mut self, idx: Val, base: u32, v: Val) {
+        self.asm.spsx(v.0, idx.0, base as i64);
+    }
+
+    // ---- arithmetic ------------------------------------------------------
+    pub fn add(&mut self, a: Val, b: Val) -> Val {
+        let v = self.alloc();
+        self.asm.add(v.0, a.0, b.0);
+        v
+    }
+
+    pub fn sub(&mut self, a: Val, b: Val) -> Val {
+        let v = self.alloc();
+        self.asm.sub(v.0, a.0, b.0);
+        v
+    }
+
+    pub fn mul(&mut self, a: Val, b: Val) -> Val {
+        let v = self.alloc();
+        self.asm.mul(v.0, a.0, b.0);
+        v
+    }
+
+    pub fn div(&mut self, a: Val, b: Val) -> Val {
+        let v = self.alloc();
+        self.asm.div(v.0, a.0, b.0);
+        v
+    }
+
+    pub fn and(&mut self, a: Val, b: Val) -> Val {
+        let v = self.alloc();
+        self.asm.and(v.0, a.0, b.0);
+        v
+    }
+
+    pub fn addi(&mut self, a: Val, k: i64) -> Val {
+        let v = self.alloc();
+        self.asm.addi(v.0, a.0, k);
+        v
+    }
+
+    pub fn shl(&mut self, a: Val, k: i64) -> Val {
+        let v = self.alloc();
+        self.asm.shl(v.0, a.0, k);
+        v
+    }
+
+    pub fn shr(&mut self, a: Val, k: i64) -> Val {
+        let v = self.alloc();
+        self.asm.shr(v.0, a.0, k);
+        v
+    }
+
+    /// Overwrite an existing handle (for loop-carried updates inside
+    /// `for_fixed`; use sparingly).
+    pub fn assign(&mut self, dst: Val, src: Val) {
+        self.asm.mov(dst.0, src.0);
+    }
+
+    /// In-place `dst += k` (single ADDI; loop counters in unrolled
+    /// scans — saves a temp + a MOV over `addi` + `assign`).
+    pub fn add_assign(&mut self, dst: Val, k: i64) {
+        self.asm.addi(dst.0, dst.0, k);
+    }
+
+    /// In-place `dst += src` (single 3-reg ADD).
+    pub fn add_to(&mut self, dst: Val, src: Val) {
+        self.asm.add(dst.0, dst.0, src.0);
+    }
+
+    pub fn assign_imm(&mut self, dst: Val, k: i64) {
+        self.asm.movi(dst.0, k);
+    }
+
+    // ---- structured control (forward-only by construction) ---------------
+    fn if_impl(
+        &mut self,
+        invert_jump: impl FnOnce(&mut Asm, crate::isa::asm::Label),
+        then: impl FnOnce(&mut Self),
+    ) {
+        let skip = self.asm.label();
+        invert_jump(&mut self.asm, skip);
+        then(self);
+        self.asm.bind(skip);
+    }
+
+    pub fn if_eq(&mut self, a: Val, b: Val, then: impl FnOnce(&mut Self)) {
+        self.if_impl(|asm, l| { asm.jne(a.0, b.0, l); }, then);
+    }
+
+    pub fn if_ne(&mut self, a: Val, b: Val, then: impl FnOnce(&mut Self)) {
+        self.if_impl(|asm, l| { asm.jeq(a.0, b.0, l); }, then);
+    }
+
+    pub fn if_lt(&mut self, a: Val, b: Val, then: impl FnOnce(&mut Self)) {
+        self.if_impl(|asm, l| { asm.jge(a.0, b.0, l); }, then);
+    }
+
+    pub fn if_le(&mut self, a: Val, b: Val, then: impl FnOnce(&mut Self)) {
+        self.if_impl(|asm, l| { asm.jgt(a.0, b.0, l); }, then);
+    }
+
+    pub fn if_gt(&mut self, a: Val, b: Val, then: impl FnOnce(&mut Self)) {
+        self.if_impl(|asm, l| { asm.jle(a.0, b.0, l); }, then);
+    }
+
+    pub fn if_ge(&mut self, a: Val, b: Val, then: impl FnOnce(&mut Self)) {
+        self.if_impl(|asm, l| { asm.jlt(a.0, b.0, l); }, then);
+    }
+
+    /// if/else; both arms must be terminal-free straight-line blocks or
+    /// end with ret()/advance() in *both* arms.
+    pub fn if_else_lt(
+        &mut self,
+        a: Val,
+        b: Val,
+        then: impl FnOnce(&mut Self),
+        els: impl FnOnce(&mut Self),
+    ) {
+        let else_l = self.asm.label();
+        let end_l = self.asm.label();
+        self.asm.jge(a.0, b.0, else_l);
+        then(self);
+        self.asm.jmp(end_l);
+        self.asm.bind(else_l);
+        els(self);
+        self.asm.bind(end_l);
+    }
+
+    // ---- shared exit blocks (forward-only, one bind per label) -----------
+    /// A forward label for shared exit blocks in unrolled scans; jump to
+    /// it from many sites with `br_*`, bind it once at the end.
+    pub fn make_label(&mut self) -> BlockLabel {
+        BlockLabel(self.asm.label())
+    }
+
+    pub fn bind_label(&mut self, l: BlockLabel) {
+        self.asm.bind(l.0);
+    }
+
+    pub fn br_gt(&mut self, a: Val, b: Val, l: &BlockLabel) {
+        self.asm.jgt(a.0, b.0, l.0);
+    }
+
+    pub fn br_ge(&mut self, a: Val, b: Val, l: &BlockLabel) {
+        self.asm.jge(a.0, b.0, l.0);
+    }
+
+    pub fn br_eq(&mut self, a: Val, b: Val, l: &BlockLabel) {
+        self.asm.jeq(a.0, b.0, l.0);
+    }
+
+    pub fn br_always(&mut self, l: &BlockLabel) {
+        self.asm.jmp(l.0);
+    }
+
+    /// Bounded loop, unrolled at compile time (the paper's "loops that
+    /// can be unrolled to a fixed number of instructions", §3). The body
+    /// receives the iteration constant.
+    pub fn for_fixed(&mut self, n: usize, mut body: impl FnMut(&mut Self, usize)) {
+        for k in 0..n {
+            body(self, k);
+        }
+    }
+
+    /// Reserve a mutable temporary initialized to an immediate —
+    /// loop-carried variables for `for_fixed`.
+    pub fn var(&mut self, init: i64) -> Val {
+        self.imm(init)
+    }
+
+    /// Register-pressure control for unrolled loops: snapshot the
+    /// allocator, then release everything allocated after the snapshot
+    /// (handles created in-between must not be used afterwards).
+    pub fn temp_mark(&self) -> u8 {
+        self.next_reg
+    }
+
+    pub fn temp_release(&mut self, mark: u8) {
+        debug_assert!(mark <= self.next_reg);
+        self.next_reg = mark;
+    }
+
+    // ---- terminals --------------------------------------------------------
+    /// End this iteration, continuing at `next` (emits `r0 = next; NEXT`).
+    pub fn advance(&mut self, next: Val) {
+        self.asm.mov(0, next.0);
+        self.asm.next();
+    }
+
+    /// End the traversal; the scratchpad is returned to the caller.
+    pub fn ret(&mut self) {
+        self.asm.ret();
+    }
+
+    pub fn trap(&mut self) {
+        self.asm.trap();
+    }
+
+    /// Lower + verify. `load_words` is inferred from the aggregated
+    /// field accesses.
+    pub fn finish(self) -> Result<CompiledIter, VerifyError> {
+        let load_words = (self.max_field + 1).clamp(1, DATA_WORDS as i64) as u8;
+        let program: Program = self.asm.finish(load_words)?;
+        Ok(CompiledIter::new(program))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::{logic_pass, Workspace};
+    use crate::isa::Status;
+
+    /// The canonical hash-bucket chain walk (paper Listing 3) written in
+    /// the DSL.
+    fn build_list_find() -> CompiledIter {
+        let mut b = IterBuilder::new();
+        let key = b.sp(0);
+        let nkey = b.field(0);
+        b.if_eq(key, nkey, |b| {
+            let val = b.field(1);
+            b.sp_store(1, val);
+            b.ret();
+        });
+        let next = b.field(2);
+        let zero = b.imm(0);
+        b.if_eq(next, zero, |b| {
+            let nf = b.imm(i64::MAX);
+            b.sp_store(2, nf);
+            b.ret();
+        });
+        b.advance(next);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn load_aggregation_infers_window() {
+        let it = build_list_find();
+        assert_eq!(it.program.load_words, 3); // fields 0..=2
+        assert!(!it.program.writes_data);
+    }
+
+    #[test]
+    fn list_find_lowering_executes_correctly() {
+        let it = build_list_find();
+        // found case
+        let mut w = Workspace::new();
+        w.sp[0] = 5;
+        w.data[0] = 5;
+        w.data[1] = 99;
+        let r = logic_pass(&it.program, &mut w);
+        assert_eq!(r.status, Status::Return);
+        assert_eq!(w.sp[1], 99);
+        // walk case
+        let mut w = Workspace::new();
+        w.sp[0] = 5;
+        w.data[0] = 4;
+        w.data[2] = 0xBEEF;
+        let r = logic_pass(&it.program, &mut w);
+        assert_eq!(r.status, Status::NextIter);
+        assert_eq!(w.cur_ptr(), 0xBEEF);
+        // not-found case
+        let mut w = Workspace::new();
+        w.sp[0] = 5;
+        w.data[0] = 4;
+        w.data[2] = 0;
+        let r = logic_pass(&it.program, &mut w);
+        assert_eq!(r.status, Status::Return);
+        assert_eq!(w.sp[2], i64::MAX);
+    }
+
+    #[test]
+    fn offloadability_matches_cost_model() {
+        let it = build_list_find();
+        assert!(it.offloadable(0.75));
+        assert!(it.ratio() < 0.5);
+        // a compute-monster body is rejected
+        let mut b = IterBuilder::new();
+        let x = b.imm(3);
+        let mark = b.temp_mark();
+        for _ in 0..11 {
+            let y = b.mul(x, x);
+            let z = b.add(y, x);
+            b.assign(x, z);
+            b.temp_release(mark); // reuse temps across unrolled steps
+        }
+        b.sp_store(0, x);
+        b.ret();
+        let it = b.finish().unwrap();
+        assert!(!it.offloadable(0.75), "ratio {}", it.ratio());
+    }
+
+    #[test]
+    fn if_else_both_arms() {
+        let mut b = IterBuilder::new();
+        let x = b.sp(0);
+        let y = b.sp(1);
+        b.if_else_lt(
+            x,
+            y,
+            |b| {
+                let m = b.imm(111);
+                b.sp_store(2, m);
+            },
+            |b| {
+                let m = b.imm(222);
+                b.sp_store(2, m);
+            },
+        );
+        b.ret();
+        let it = b.finish().unwrap();
+        for (x, y, want) in [(1, 5, 111), (5, 1, 222), (3, 3, 222)] {
+            let mut w = Workspace::new();
+            w.sp[0] = x;
+            w.sp[1] = y;
+            logic_pass(&it.program, &mut w);
+            assert_eq!(w.sp[2], want, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn for_fixed_unrolls_btree_scan() {
+        // find first of 4 keys >= needle; sp[1] = index.
+        let mut b = IterBuilder::new();
+        let needle = b.sp(0);
+        let idx = b.var(4); // sentinel: "none"
+        let mark = b.temp_mark();
+        b.for_fixed(4, |b, k| {
+            let key = b.field(4 + k as u32);
+            let kk = b.imm(k as i64);
+            // only record the first hit: idx == 4 && key >= needle
+            let four = b.imm(4);
+            b.if_eq(idx, four, |b| {
+                b.if_ge(key, needle, |b| {
+                    b.assign(idx, kk);
+                });
+            });
+            b.temp_release(mark); // reuse unrolled temps
+        });
+        b.sp_store(1, idx);
+        b.ret();
+        let it = b.finish().unwrap();
+        assert_eq!(it.program.load_words, 8);
+
+        let mut w = Workspace::new();
+        w.sp[0] = 25;
+        w.data[4..8].copy_from_slice(&[10, 20, 30, 40]);
+        let r = logic_pass(&it.program, &mut w);
+        assert_eq!(r.status, Status::Return);
+        assert_eq!(w.sp[1], 2);
+    }
+
+    #[test]
+    fn store_marks_writes() {
+        let mut b = IterBuilder::new();
+        let v = b.imm(1);
+        b.store_field(0, v);
+        b.ret();
+        let it = b.finish().unwrap();
+        assert!(it.program.writes_data);
+    }
+}

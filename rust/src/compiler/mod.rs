@@ -1,0 +1,48 @@
+//! The PULSE "dispatch-engine compiler" (paper §3 + §4.1).
+//!
+//! Data-structure library developers express `next()`/`end()` through
+//! the structured `IterBuilder` DSL; lowering performs the paper's
+//! analyses:
+//!
+//! * **Load aggregation** — every `field(k)` access is tracked and the
+//!   per-iteration aggregated LOAD size (`load_words`, ≤ 256 B) is
+//!   inferred, so `cur_ptr->key`, `->value`, `->next` cost one fetch.
+//! * **Bounded computation** — only structured *forward* control flow is
+//!   expressible (`if_*` blocks, `for_fixed` unrolled loops); the
+//!   verifier re-checks the invariants.
+//! * **Offloadability** — `CostModel::offloadable` implements the
+//!   `t_c ≤ η·t_d` test; non-offloadable code falls back to CPU-side
+//!   execution with remote reads (`dispatch::Engine`).
+//!
+//! This plays the role of the paper's LLVM (Sparc backend) passes; see
+//! DESIGN.md §2 for the substitution note.
+
+pub mod builder;
+
+pub use builder::{IterBuilder, Val};
+
+use crate::isa::{CostModel, Program};
+
+/// A compiled iterator: the offloadable program plus its cost estimate.
+#[derive(Debug, Clone)]
+pub struct CompiledIter {
+    pub program: Program,
+    pub t_c_ns: f64,
+    pub t_d_ns: f64,
+}
+
+impl CompiledIter {
+    pub fn new(program: Program) -> Self {
+        let cost = CostModel::default().cost(&program);
+        Self { program, t_c_ns: cost.t_c_ns, t_d_ns: cost.t_d_ns }
+    }
+
+    /// The paper's offload predicate (§4.1).
+    pub fn offloadable(&self, eta: f64) -> bool {
+        self.t_c_ns <= eta * self.t_d_ns
+    }
+
+    pub fn ratio(&self) -> f64 {
+        self.t_c_ns / self.t_d_ns
+    }
+}

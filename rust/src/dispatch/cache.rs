@@ -1,0 +1,241 @@
+//! Object cache of node images at the CPU node (AIFM-style library
+//! cache, paper §2.3 / Appendix C.2).
+//!
+//! Clock (second-chance) eviction: O(1) insert/get at the 2 GB scales
+//! the paper evaluates. Keys are node addresses; values are the node's
+//! aggregated-load image (≤ 32 words).
+
+use crate::mem::GAddr;
+use std::collections::HashMap;
+
+#[derive(Debug)]
+struct Slot {
+    addr: GAddr,
+    image: Vec<i64>,
+    referenced: bool,
+}
+
+#[derive(Debug)]
+pub struct ObjectCache {
+    capacity_bytes: u64,
+    used_bytes: u64,
+    slots: Vec<Option<Slot>>,
+    index: HashMap<GAddr, usize>,
+    hand: usize,
+    free: Vec<usize>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// Approximate per-entry overhead (hash entry + slot bookkeeping).
+const ENTRY_OVERHEAD: u64 = 64;
+
+impl ObjectCache {
+    pub fn new(capacity_bytes: u64) -> Self {
+        Self {
+            capacity_bytes,
+            used_bytes: 0,
+            slots: Vec::new(),
+            index: HashMap::new(),
+            hand: 0,
+            free: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    fn entry_size(image_words: usize) -> u64 {
+        ENTRY_OVERHEAD + (image_words * 8) as u64
+    }
+
+    pub fn get(&mut self, addr: GAddr) -> Option<&[i64]> {
+        match self.index.get(&addr) {
+            Some(&i) => {
+                self.hits += 1;
+                let slot = self.slots[i].as_mut().unwrap();
+                slot.referenced = true;
+                Some(&self.slots[i].as_ref().unwrap().image)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn contains(&self, addr: GAddr) -> bool {
+        self.index.contains_key(&addr)
+    }
+
+    pub fn insert(&mut self, addr: GAddr, image: &[i64]) {
+        if self.capacity_bytes == 0 {
+            return;
+        }
+        let size = Self::entry_size(image.len());
+        if size > self.capacity_bytes {
+            return;
+        }
+        if let Some(&i) = self.index.get(&addr) {
+            // update in place
+            let slot = self.slots[i].as_mut().unwrap();
+            self.used_bytes -= Self::entry_size(slot.image.len());
+            slot.image = image.to_vec();
+            slot.referenced = true;
+            self.used_bytes += size;
+            self.evict_to_fit();
+            return;
+        }
+        let idx = if let Some(i) = self.free.pop() {
+            i
+        } else {
+            self.slots.push(None);
+            self.slots.len() - 1
+        };
+        self.slots[idx] = Some(Slot {
+            addr,
+            image: image.to_vec(),
+            referenced: true,
+        });
+        self.index.insert(addr, idx);
+        self.used_bytes += size;
+        self.evict_to_fit();
+    }
+
+    pub fn invalidate(&mut self, addr: GAddr) {
+        if let Some(i) = self.index.remove(&addr) {
+            if let Some(slot) = self.slots[i].take() {
+                self.used_bytes -= Self::entry_size(slot.image.len());
+            }
+            self.free.push(i);
+        }
+    }
+
+    fn evict_to_fit(&mut self) {
+        let mut spins = 0usize;
+        while self.used_bytes > self.capacity_bytes
+            && !self.slots.is_empty()
+        {
+            self.hand = (self.hand + 1) % self.slots.len();
+            let Some(slot) = self.slots[self.hand].as_mut() else {
+                spins += 1;
+                if spins > 2 * self.slots.len() + 2 {
+                    break;
+                }
+                continue;
+            };
+            if slot.referenced {
+                slot.referenced = false;
+                spins += 1;
+                if spins > 2 * self.slots.len() + 2 {
+                    // all referenced: force-evict current
+                    let s = self.slots[self.hand].take().unwrap();
+                    self.index.remove(&s.addr);
+                    self.used_bytes -= Self::entry_size(s.image.len());
+                    self.free.push(self.hand);
+                    self.evictions += 1;
+                    spins = 0;
+                }
+                continue;
+            }
+            let s = self.slots[self.hand].take().unwrap();
+            self.index.remove(&s.addr);
+            self.used_bytes -= Self::entry_size(s.image.len());
+            self.free.push(self.hand);
+            self.evictions += 1;
+            spins = 0;
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_round_trip() {
+        let mut c = ObjectCache::new(1 << 16);
+        c.insert(0x1000, &[1, 2, 3]);
+        assert_eq!(c.get(0x1000), Some(&[1i64, 2, 3][..]));
+        assert_eq!(c.get(0x2000), None);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn update_replaces_image() {
+        let mut c = ObjectCache::new(1 << 16);
+        c.insert(0x1000, &[1]);
+        c.insert(0x1000, &[9, 9]);
+        assert_eq!(c.get(0x1000), Some(&[9i64, 9][..]));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn eviction_respects_capacity() {
+        // room for ~4 entries of 3 words (64 + 24 = 88 bytes each)
+        let mut c = ObjectCache::new(360);
+        for i in 0..16u64 {
+            c.insert(0x1000 + i * 0x100, &[i as i64, 0, 0]);
+        }
+        assert!(c.len() <= 4, "len {}", c.len());
+        assert!(c.evictions >= 12);
+    }
+
+    #[test]
+    fn clock_favors_hot_entries() {
+        let mut c = ObjectCache::new(500); // ~6 entries
+        c.insert(0x1000, &[42]);
+        // touch the hot entry before every insert of a cold one; clock
+        // (second chance) should keep it resident most of the time.
+        let mut hot_hits = 0;
+        for j in 0..200u64 {
+            if c.get(0x1000).is_some() {
+                hot_hits += 1;
+            } else {
+                c.insert(0x1000, &[42]); // refill after unlucky eviction
+            }
+            c.insert(0x9000 + j * 0x100, &[j as i64]);
+        }
+        assert!(hot_hits > 120, "hot entry hit only {hot_hits}/200");
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = ObjectCache::new(0);
+        c.insert(0x1000, &[1]);
+        assert!(c.is_empty());
+        assert_eq!(c.get(0x1000), None);
+    }
+
+    #[test]
+    fn invalidate_frees_space() {
+        let mut c = ObjectCache::new(1 << 16);
+        c.insert(0x1000, &[1, 2, 3, 4]);
+        c.invalidate(0x1000);
+        assert!(!c.contains(0x1000));
+        assert_eq!(c.used_bytes, 0);
+    }
+}

@@ -1,0 +1,430 @@
+//! CPU-node dispatch engine (paper §4.1).
+//!
+//! Responsibilities:
+//! * offload decision per compiled iterator (`t_c ≤ η·t_d`);
+//! * request construction (request id = CPU node id + local counter);
+//! * timeout-based retransmission over the lossy transport;
+//! * continuation of yielded traversals (max-iteration bound, §3);
+//! * the AIFM-style transparent library cache (§2.3 "adapts the caching
+//!   scheme from prior work [127]"): hot node images cached at the CPU
+//!   node let the engine run iterations locally and offload only the
+//!   cold remainder (Appendix C.2 access-pattern study).
+
+pub mod cache;
+
+pub use cache::ObjectCache;
+
+use crate::compiler::CompiledIter;
+use crate::interp::{logic_pass, Workspace};
+use crate::isa::{CostModel, Status, SP_WORDS};
+use crate::net::{RequestId, TraversalMsg};
+use crate::sim::Ns;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy)]
+pub struct DispatchConfig {
+    /// Accelerator η used for the offload decision.
+    pub eta: f64,
+    /// Per-request iteration budget before yield (§3).
+    pub max_iters: u32,
+    /// Retransmit timeout.
+    pub timeout_ns: Ns,
+    /// Library-cache capacity in bytes (0 = disabled).
+    pub cache_bytes: u64,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        Self {
+            eta: 0.75,
+            max_iters: 4096,
+            timeout_ns: 2_000_000, // 2 ms
+            cache_bytes: 0,
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DispatchStats {
+    pub offloaded: u64,
+    pub local_fallback: u64,
+    pub retransmits: u64,
+    pub continuations: u64,
+    pub cache_hit_iters: u64,
+    pub cache_miss_iters: u64,
+}
+
+/// What to do with a submitted traversal.
+#[derive(Debug)]
+pub enum Disposition {
+    /// Ship to the accelerator via the switch.
+    Offload(TraversalMsg),
+    /// Completed entirely from the CPU-side cache.
+    CompletedLocally { sp: [i64; SP_WORDS], iters: u32 },
+    /// Iterator not offloadable (t_c > η·t_d): the caller must run it on
+    /// the CPU with remote reads (one round trip per pointer hop).
+    RunOnCpu,
+}
+
+#[derive(Debug)]
+struct Pending {
+    msg: TraversalMsg,
+    sent_at: Ns,
+}
+
+#[derive(Debug)]
+pub struct DispatchEngine {
+    pub cpu_node: u16,
+    cfg: DispatchConfig,
+    cost: CostModel,
+    seq: u64,
+    pending: HashMap<RequestId, Pending>,
+    pub cache: ObjectCache,
+    pub stats: DispatchStats,
+    ws: Workspace,
+}
+
+impl DispatchEngine {
+    pub fn new(cpu_node: u16, cfg: DispatchConfig) -> Self {
+        Self {
+            cpu_node,
+            cost: CostModel::default(),
+            seq: 0,
+            pending: HashMap::new(),
+            cache: ObjectCache::new(cfg.cache_bytes),
+            cfg,
+            stats: DispatchStats::default(),
+            ws: Workspace::new(),
+        }
+    }
+
+    pub fn cfg(&self) -> DispatchConfig {
+        self.cfg
+    }
+
+    /// Submit a traversal. Runs the offload test, then walks the cached
+    /// prefix locally; offloads the remainder (or completes locally).
+    pub fn submit(
+        &mut self,
+        iter: &CompiledIter,
+        start: u64,
+        sp: [i64; SP_WORDS],
+        now: Ns,
+    ) -> Disposition {
+        if !self.cost.offloadable(&iter.program, self.cfg.eta) {
+            self.stats.local_fallback += 1;
+            return Disposition::RunOnCpu;
+        }
+        let id = RequestId { cpu_node: self.cpu_node, seq: self.seq };
+        self.seq += 1;
+        let mut msg = TraversalMsg::request(
+            id,
+            iter.program.clone(),
+            start,
+            sp,
+            self.cfg.max_iters,
+        );
+
+        // Library cache: execute iterations locally while node images
+        // are cached.
+        if self.cache.capacity() > 0
+            && self.walk_cached(&mut msg).is_some()
+        {
+            return Disposition::CompletedLocally {
+                sp: msg.sp,
+                iters: msg.iters_done,
+            };
+        }
+
+        self.stats.offloaded += 1;
+        self.pending
+            .insert(id, Pending { msg: msg.clone(), sent_at: now });
+        Disposition::Offload(msg)
+    }
+
+    /// Walk iterations from the cache; returns Some(status) if the whole
+    /// traversal completed locally, None when it must be offloaded from
+    /// the current `msg` state.
+    fn walk_cached(&mut self, msg: &mut TraversalMsg) -> Option<Status> {
+        let words = msg.program.load_words as usize;
+        loop {
+            if msg.iters_done >= msg.max_iters {
+                return Some(Status::Return); // budget spent locally
+            }
+            let Some(image) = self.cache.get(msg.cur_ptr) else {
+                if msg.iters_done > 0 {
+                    self.stats.cache_miss_iters += 1;
+                }
+                return None;
+            };
+            // Mutating traversals cannot run out of the read cache.
+            if msg.program.writes_data {
+                return None;
+            }
+            self.stats.cache_hit_iters += 1;
+            self.ws.sp.copy_from_slice(&msg.sp);
+            self.ws.regs = [0; crate::isa::NREG];
+            self.ws.set_cur_ptr(msg.cur_ptr);
+            self.ws.data[..words.min(image.len())]
+                .copy_from_slice(&image[..words.min(image.len())]);
+            self.ws.data[words.min(image.len())..]
+                .iter_mut()
+                .for_each(|w| *w = 0);
+            let pass = logic_pass(&msg.program, &mut self.ws);
+            msg.iters_done += 1;
+            msg.sp.copy_from_slice(&self.ws.sp);
+            match pass.status {
+                Status::NextIter => {
+                    msg.cur_ptr = self.ws.cur_ptr();
+                }
+                s => return Some(s),
+            }
+        }
+    }
+
+    /// A response arrived: clear the pending slot. Returns the final
+    /// scratchpad for completed traversals, or the continuation request
+    /// when the traversal yielded (budget) and must be re-issued.
+    pub fn on_response(
+        &mut self,
+        mut msg: TraversalMsg,
+        now: Ns,
+    ) -> ResponseAction {
+        self.pending.remove(&msg.id);
+        match msg.status {
+            Status::Return | Status::Trap => ResponseAction::Done {
+                id: msg.id,
+                status: msg.status,
+                sp: msg.sp,
+                iters: msg.iters_done,
+                crossings: msg.node_crossings,
+            },
+            _ => {
+                // Yielded: grant a fresh budget and re-issue from the
+                // embedded continuation state (paper §3).
+                self.stats.continuations += 1;
+                msg.kind = crate::net::MsgKind::Request;
+                msg.max_iters += self.cfg.max_iters;
+                msg.status = Status::Running;
+                self.pending.insert(
+                    msg.id,
+                    Pending { msg: msg.clone(), sent_at: now },
+                );
+                ResponseAction::Continue(msg)
+            }
+        }
+    }
+
+    /// Collect requests whose timeout expired (packet was dropped) for
+    /// retransmission. Updates their send timestamps.
+    pub fn collect_retransmits(&mut self, now: Ns) -> Vec<TraversalMsg> {
+        let mut out = Vec::new();
+        for p in self.pending.values_mut() {
+            if now.saturating_sub(p.sent_at) >= self.cfg.timeout_ns {
+                p.sent_at = now;
+                self.stats.retransmits += 1;
+                out.push(p.msg.clone());
+            }
+        }
+        out
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+/// Result of processing a response.
+#[derive(Debug)]
+pub enum ResponseAction {
+    Done {
+        id: RequestId,
+        status: Status,
+        sp: [i64; SP_WORDS],
+        iters: u32,
+        crossings: u32,
+    },
+    /// Re-issue this continuation request.
+    Continue(TraversalMsg),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::IterBuilder;
+
+    fn list_find_iter() -> CompiledIter {
+        let mut b = IterBuilder::new();
+        let key = b.sp(0);
+        let nkey = b.field(0);
+        b.if_eq(key, nkey, |b| {
+            let val = b.field(1);
+            b.sp_store(1, val);
+            b.ret();
+        });
+        let next = b.field(2);
+        let zero = b.imm(0);
+        b.if_eq(next, zero, |b| {
+            let nf = b.imm(i64::MAX);
+            b.sp_store(2, nf);
+            b.ret();
+        });
+        b.advance(next);
+        b.finish().unwrap()
+    }
+
+    fn compute_heavy_iter() -> CompiledIter {
+        let mut b = IterBuilder::new();
+        let x = b.imm(3);
+        let mark = b.temp_mark();
+        for _ in 0..12 {
+            let y = b.mul(x, x);
+            let z = b.add(y, x);
+            b.assign(x, z);
+            b.temp_release(mark);
+        }
+        b.sp_store(0, x);
+        b.ret();
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn offloads_memory_bound_iterators() {
+        let mut d = DispatchEngine::new(0, DispatchConfig::default());
+        let it = list_find_iter();
+        match d.submit(&it, 0x1000, [0; SP_WORDS], 0) {
+            Disposition::Offload(msg) => {
+                assert_eq!(msg.cur_ptr, 0x1000);
+                assert_eq!(msg.id.seq, 0);
+            }
+            other => panic!("expected offload, got {other:?}"),
+        }
+        assert_eq!(d.stats.offloaded, 1);
+        assert_eq!(d.pending_count(), 1);
+    }
+
+    #[test]
+    fn rejects_compute_heavy_iterators() {
+        let mut d = DispatchEngine::new(0, DispatchConfig::default());
+        let it = compute_heavy_iter();
+        assert!(matches!(
+            d.submit(&it, 0x1000, [0; SP_WORDS], 0),
+            Disposition::RunOnCpu
+        ));
+        assert_eq!(d.stats.local_fallback, 1);
+    }
+
+    #[test]
+    fn request_ids_are_sequential() {
+        let mut d = DispatchEngine::new(7, DispatchConfig::default());
+        let it = list_find_iter();
+        for want in 0..3 {
+            if let Disposition::Offload(m) =
+                d.submit(&it, 0x1000, [0; SP_WORDS], 0)
+            {
+                assert_eq!(m.id.cpu_node, 7);
+                assert_eq!(m.id.seq, want);
+            } else {
+                panic!()
+            }
+        }
+    }
+
+    #[test]
+    fn retransmit_after_timeout() {
+        let mut cfg = DispatchConfig::default();
+        cfg.timeout_ns = 1000;
+        let mut d = DispatchEngine::new(0, cfg);
+        let it = list_find_iter();
+        let _ = d.submit(&it, 0x1000, [0; SP_WORDS], 0);
+        assert!(d.collect_retransmits(500).is_empty());
+        let r = d.collect_retransmits(1500);
+        assert_eq!(r.len(), 1);
+        assert_eq!(d.stats.retransmits, 1);
+        // timer reset: not immediately re-collected
+        assert!(d.collect_retransmits(1600).is_empty());
+    }
+
+    #[test]
+    fn response_completes_pending() {
+        let mut d = DispatchEngine::new(0, DispatchConfig::default());
+        let it = list_find_iter();
+        let msg = match d.submit(&it, 0x1000, [0; SP_WORDS], 0) {
+            Disposition::Offload(m) => m,
+            _ => panic!(),
+        };
+        let resp = msg.into_response(Status::Return);
+        match d.on_response(resp, 10) {
+            ResponseAction::Done { status, .. } => {
+                assert_eq!(status, Status::Return)
+            }
+            _ => panic!(),
+        }
+        assert_eq!(d.pending_count(), 0);
+    }
+
+    #[test]
+    fn yielded_response_continues_with_fresh_budget() {
+        let mut cfg = DispatchConfig::default();
+        cfg.max_iters = 8;
+        let mut d = DispatchEngine::new(0, cfg);
+        let it = list_find_iter();
+        let msg = match d.submit(&it, 0x1000, [0; SP_WORDS], 0) {
+            Disposition::Offload(m) => m,
+            _ => panic!(),
+        };
+        let mut y = msg;
+        y.kind = crate::net::MsgKind::Response;
+        y.iters_done = 8;
+        y.status = Status::Running; // yield marker
+        match d.on_response(y, 10) {
+            ResponseAction::Continue(c) => {
+                assert_eq!(c.max_iters, 16);
+                assert_eq!(c.iters_done, 8);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(d.stats.continuations, 1);
+        assert_eq!(d.pending_count(), 1);
+    }
+
+    #[test]
+    fn cache_serves_full_traversal_locally() {
+        let mut cfg = DispatchConfig::default();
+        cfg.cache_bytes = 1 << 20;
+        let mut d = DispatchEngine::new(0, cfg);
+        let it = list_find_iter();
+        // two-node chain cached: 0x1000 -> 0x2000(key=5)
+        d.cache.insert(0x1000, &[1, 11, 0x2000]);
+        d.cache.insert(0x2000, &[5, 55, 0]);
+        let mut sp = [0i64; SP_WORDS];
+        sp[0] = 5;
+        match d.submit(&it, 0x1000, sp, 0) {
+            Disposition::CompletedLocally { sp, iters } => {
+                assert_eq!(sp[1], 55);
+                assert_eq!(iters, 2);
+            }
+            other => panic!("expected local completion, got {other:?}"),
+        }
+        assert_eq!(d.stats.cache_hit_iters, 2);
+        assert_eq!(d.stats.offloaded, 0);
+    }
+
+    #[test]
+    fn cache_prefix_then_offload_remainder() {
+        let mut cfg = DispatchConfig::default();
+        cfg.cache_bytes = 1 << 20;
+        let mut d = DispatchEngine::new(0, cfg);
+        let it = list_find_iter();
+        d.cache.insert(0x1000, &[1, 11, 0x2000]); // only head cached
+        let mut sp = [0i64; SP_WORDS];
+        sp[0] = 5;
+        match d.submit(&it, 0x1000, sp, 0) {
+            Disposition::Offload(m) => {
+                assert_eq!(m.cur_ptr, 0x2000); // continues from the miss
+                assert_eq!(m.iters_done, 1);
+            }
+            other => panic!("expected offload, got {other:?}"),
+        }
+    }
+}

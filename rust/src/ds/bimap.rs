@@ -1,0 +1,65 @@
+//! Boost `bimap` on disaggregated memory (paper Appendix B.2, Listings
+//! 6–7): bidirectional map realized as two hash indexes over shared
+//! pairs; both directions use the same chain-walk program as
+//! `unordered_map` (Table 5: same internal function).
+
+use super::hashmap::HashMapDs;
+use crate::rack::Rack;
+
+pub struct Bimap {
+    left: HashMapDs,  // key -> value
+    right: HashMapDs, // value -> key
+    pub len: usize,
+}
+
+impl Bimap {
+    pub fn build(rack: &mut Rack, buckets: usize) -> Self {
+        Self {
+            left: HashMapDs::build(rack, buckets),
+            right: HashMapDs::build(rack, buckets),
+            len: 0,
+        }
+    }
+
+    /// Insert a (left, right) pair; both directions become queryable.
+    pub fn insert(&mut self, rack: &mut Rack, l: i64, r: i64) {
+        self.left.insert(rack, l, r);
+        self.right.insert(rack, r, l);
+        self.len += 1;
+    }
+
+    /// Offloaded left→right lookup.
+    pub fn get_by_left(&self, rack: &mut Rack, l: i64) -> Option<i64> {
+        self.left.get(rack, l)
+    }
+
+    /// Offloaded right→left lookup.
+    pub fn get_by_right(&self, rack: &mut Rack, r: i64) -> Option<i64> {
+        self.right.get(rack, r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rack::RackConfig;
+
+    #[test]
+    fn bidirectional_lookup() {
+        let mut rk = Rack::new(RackConfig {
+            nodes: 2,
+            node_capacity: 32 << 20,
+            granularity: 1 << 20,
+            ..Default::default()
+        });
+        let mut bm = Bimap::build(&mut rk, 64);
+        for i in 0..200 {
+            bm.insert(&mut rk, i, 10_000 + i);
+        }
+        assert_eq!(bm.get_by_left(&mut rk, 42), Some(10_042));
+        assert_eq!(bm.get_by_right(&mut rk, 10_042), Some(42));
+        assert_eq!(bm.get_by_left(&mut rk, 999), None);
+        assert_eq!(bm.get_by_right(&mut rk, 999), None);
+        assert_eq!(bm.len, 200);
+    }
+}

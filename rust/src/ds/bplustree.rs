@@ -1,0 +1,541 @@
+//! B+Tree with linked leaves — the index behind the WiredTiger and
+//! BTrDB applications (paper §6, Table 3).
+//!
+//! Layout (FANOUT = 7, nodes fill 18 words ≈ 144 B of the 256 B window):
+//!   internal: `[tag=0, nk, keys[7] (2..9), children[8] (9..17)]`
+//!   leaf:     `[tag=1, nk, keys[7] (2..9), values[7] (9..16), next (17)]`
+//! Keys are `i64::MAX`-padded so unrolled scans need no bound checks.
+//!
+//! Offloaded iterators:
+//!  * `get_iter`      — full descend + in-leaf exact match (one request);
+//!  * `locate_iter`   — descend only, returns the leaf address;
+//!  * `scan_iter`     — range scan: one record per iteration into the
+//!                      scratchpad buffer, yielding every `SP_BUF_LEN`
+//!                      records (WiredTiger YCSB-E);
+//!  * `sum_iter`      — leaf-chain aggregation `sum(values | key <= hi)`
+//!                      (BTrDB windowed aggregates; count derives from
+//!                      the window, min/max finalize through the
+//!                      window_agg XLA artifact).
+
+use std::sync::Arc;
+
+use super::{KEY_NOT_FOUND, SP_ACC_SUM, SP_BUF_BASE, SP_BUF_LEN, SP_CURSOR, SP_FLAG, SP_KEY, SP_RESULT};
+use crate::compiler::{CompiledIter, IterBuilder};
+use crate::isa::{Status, SP_WORDS};
+use crate::mem::GAddr;
+use crate::rack::Rack;
+
+pub const FANOUT: usize = 7;
+pub const NODE_WORDS: usize = 18;
+const KEYS: u32 = 2;
+const VALS: u32 = 9; // leaf values / internal children
+const NEXT: u32 = 17;
+
+/// Count-of-smaller-or-equal scan over the 7 key slots; returns the
+/// index register. Separators are "min key of right child", so
+/// `idx = |{j : keys[j] <= needle}|` picks the covering child, and at a
+/// leaf `keys[idx-1] == needle` detects exact presence.
+fn emit_key_scan(b: &mut IterBuilder, needle: crate::compiler::Val) -> crate::compiler::Val {
+    let idx = b.var(0);
+    let mark = b.temp_mark();
+    b.for_fixed(FANOUT, |b, j| {
+        let k = b.field(KEYS + j as u32);
+        b.if_le(k, needle, |b| b.add_assign(idx, 1));
+        b.temp_release(mark);
+    });
+    idx
+}
+
+/// Full point lookup in one program (paper Table 3 row: WiredTiger).
+pub fn get_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let needle = b.sp(SP_KEY);
+    let idx = emit_key_scan(&mut b, needle);
+    let tag = b.field(0);
+    let one = b.imm(1);
+    b.if_ne(tag, one, |b| {
+        // internal: descend into children[idx]
+        let child = b.field_dyn(idx, VALS, NODE_WORDS as u32 - 1);
+        b.advance(child);
+    });
+    // leaf: exact match at idx-1
+    let zero = b.imm(0);
+    b.if_ne(idx, zero, |b| {
+        let im1 = b.addi(idx, -1);
+        let k = b.field_dyn(im1, KEYS, 8);
+        b.if_eq(k, needle, |b| {
+            let v = b.field_dyn(im1, VALS, 15);
+            b.sp_store(SP_RESULT, v);
+            let z = b.imm(0);
+            b.sp_store(SP_FLAG, z);
+            b.ret();
+        });
+    });
+    let nf = b.imm(KEY_NOT_FOUND);
+    b.sp_store(SP_FLAG, nf);
+    b.ret();
+    b.finish().expect("bplus get")
+}
+
+/// Descend-only: sp[RESULT] = covering leaf address.
+pub fn locate_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let tag = b.field(0);
+    let one = b.imm(1);
+    b.if_eq(tag, one, |b| {
+        let me = b.cur_ptr();
+        b.sp_store(SP_RESULT, me);
+        b.ret();
+    });
+    let needle = b.sp(SP_KEY);
+    let idx = emit_key_scan(&mut b, needle);
+    let child = b.field_dyn(idx, VALS, NODE_WORDS as u32 - 1);
+    b.advance(child);
+    b.finish().expect("bplus locate")
+}
+
+/// Range scan starting *at a leaf*: emits one record per iteration into
+/// sp[8..32], maintaining sp[CURSOR] = in-leaf index, sp[2] = remaining
+/// records, sp[3] = emitted count. Returns (yields) when the scratchpad
+/// buffer fills or `remaining` hits zero; the CPU node re-issues the
+/// continuation (paper §3 bounded execution).
+pub fn scan_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let i = b.sp(SP_CURSOR);
+    {
+        let mark = b.temp_mark();
+        let seven = b.imm(FANOUT as i64);
+        // advance to the next leaf when the cursor walks off this one
+        b.if_ge(i, seven, |b| {
+            let nxt = b.field(NEXT);
+            let z = b.imm(0);
+            b.if_eq(nxt, z, |b| b.ret());
+            b.sp_store(SP_CURSOR, z);
+            b.advance(nxt);
+        });
+        b.temp_release(mark);
+    }
+    let k = b.field_dyn(i, KEYS, 8);
+    {
+        let mark = b.temp_mark();
+        let maxpad = b.imm(i64::MAX);
+        b.if_eq(k, maxpad, |b| {
+            // padding: jump to next leaf on the next iteration
+            let seven = b.imm(FANOUT as i64);
+            b.sp_store(SP_CURSOR, seven);
+            let me = b.cur_ptr();
+            b.advance(me);
+        });
+        b.temp_release(mark);
+    }
+    let v = b.field_dyn(i, VALS, 15);
+    let oc = b.sp(3);
+    b.sp_store_dyn(oc, SP_BUF_BASE, v);
+    let oc2 = b.addi(oc, 1);
+    b.sp_store(3, oc2);
+    {
+        let mark = b.temp_mark();
+        let i2 = b.addi(i, 1);
+        b.sp_store(SP_CURSOR, i2);
+        b.temp_release(mark);
+    }
+    let rem = b.sp(2);
+    let rem2 = b.addi(rem, -1);
+    b.sp_store(2, rem2);
+    {
+        // publish the continuation point (current leaf) so the CPU node
+        // can resume after a yield — sp + cur_ptr are the whole iterator
+        // state (paper §5).
+        let mark = b.temp_mark();
+        let me = b.cur_ptr();
+        b.sp_store(SP_RESULT, me);
+        b.temp_release(mark);
+        let z = b.imm(0);
+        b.if_le(rem2, z, |b| b.ret());
+        b.temp_release(mark);
+        let cap = b.imm(SP_BUF_LEN as i64);
+        b.if_ge(oc2, cap, |b| b.ret());
+        b.temp_release(mark);
+    }
+    let me = b.cur_ptr();
+    b.advance(me);
+    b.finish().expect("bplus scan")
+}
+
+/// Leaf-chain sum of values with key <= sp[KEY] (hi bound), starting at
+/// a leaf whose keys are all within range (the CPU node handles the
+/// partial boundary leaf). Accumulates into sp[ACC_SUM].
+pub fn sum_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let hi = b.sp(SP_KEY);
+    let sum = b.sp(SP_ACC_SUM);
+    let done = b.make_label();
+    let mark = b.temp_mark();
+    b.for_fixed(FANOUT, |b, j| {
+        let k = b.field(KEYS + j as u32);
+        // key > hi (incl. MAX padding) => finish via the shared exit
+        b.br_gt(k, hi, &done);
+        let v = b.field(VALS + j as u32);
+        b.add_to(sum, v);
+        b.temp_release(mark);
+    });
+    b.sp_store(SP_ACC_SUM, sum);
+    let nxt = b.field(NEXT);
+    let z = b.imm(0);
+    b.if_eq(nxt, z, |b| b.ret());
+    b.advance(nxt);
+    b.bind_label(done);
+    b.sp_store(SP_ACC_SUM, sum);
+    b.ret();
+    b.finish().expect("bplus sum")
+}
+
+pub struct BPlusTree {
+    pub root: GAddr,
+    pub first_leaf: GAddr,
+    pub len: usize,
+    get_p: Arc<CompiledIter>,
+    locate_p: Arc<CompiledIter>,
+    scan_p: Arc<CompiledIter>,
+    sum_p: Arc<CompiledIter>,
+}
+
+impl BPlusTree {
+    /// Bulk-build from sorted unique (key, value) pairs with the given
+    /// leaf fill factor (records per leaf, <= FANOUT).
+    pub fn build_sorted(
+        rack: &mut Rack,
+        pairs: &[(i64, i64)],
+        fill: usize,
+    ) -> Self {
+        assert!(!pairs.is_empty());
+        let fill = fill.clamp(1, FANOUT);
+        let mut leaves: Vec<(i64, GAddr)> = Vec::new();
+        let mut prev: Option<GAddr> = None;
+        for chunk in pairs.chunks(fill) {
+            let addr = rack.alloc((NODE_WORDS * 8) as u64);
+            let mut node = [0i64; NODE_WORDS];
+            node[0] = 1;
+            node[1] = chunk.len() as i64;
+            for j in 0..FANOUT {
+                node[KEYS as usize + j] =
+                    chunk.get(j).map(|p| p.0).unwrap_or(i64::MAX);
+                node[VALS as usize + j] =
+                    chunk.get(j).map(|p| p.1).unwrap_or(0);
+            }
+            rack.write_words(addr, &node);
+            if let Some(p) = prev {
+                let mut pn = [0i64; NODE_WORDS];
+                rack.read_words(p, &mut pn);
+                pn[NEXT as usize] = addr as i64;
+                rack.write_words(p, &pn);
+            }
+            prev = Some(addr);
+            leaves.push((chunk[0].0, addr));
+        }
+        let first_leaf = leaves[0].1;
+        let mut level = leaves;
+        while level.len() > 1 {
+            let mut next_level: Vec<(i64, GAddr)> = Vec::new();
+            for group in level.chunks(FANOUT + 1) {
+                let addr = rack.alloc((NODE_WORDS * 8) as u64);
+                let mut node = [0i64; NODE_WORDS];
+                node[0] = 0;
+                node[1] = (group.len() - 1) as i64;
+                for j in 0..FANOUT {
+                    node[KEYS as usize + j] = group
+                        .get(j + 1)
+                        .map(|g| g.0)
+                        .unwrap_or(i64::MAX);
+                }
+                for (j, g) in group.iter().enumerate() {
+                    node[VALS as usize + j] = g.1 as i64;
+                }
+                rack.write_words(addr, &node);
+                next_level.push((group[0].0, addr));
+            }
+            level = next_level;
+        }
+        Self {
+            root: level[0].1,
+            first_leaf,
+            len: pairs.len(),
+            get_p: Arc::new(get_iter()),
+            locate_p: Arc::new(locate_iter()),
+            scan_p: Arc::new(scan_iter()),
+            sum_p: Arc::new(sum_iter()),
+        }
+    }
+
+    pub fn get_program(&self) -> Arc<CompiledIter> {
+        self.get_p.clone()
+    }
+
+    pub fn locate_program(&self) -> Arc<CompiledIter> {
+        self.locate_p.clone()
+    }
+
+    pub fn scan_program(&self) -> Arc<CompiledIter> {
+        self.scan_p.clone()
+    }
+
+    pub fn sum_program(&self) -> Arc<CompiledIter> {
+        self.sum_p.clone()
+    }
+
+    /// Offloaded point lookup (single request).
+    pub fn get(&self, rack: &mut Rack, key: i64) -> Option<i64> {
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = key;
+        let (_st, sp, _) = rack.traverse(&self.get_p, self.root, sp);
+        (sp[SP_FLAG as usize] != KEY_NOT_FOUND)
+            .then_some(sp[SP_RESULT as usize])
+    }
+
+    /// Offloaded locate: covering leaf for `key`.
+    pub fn locate(&self, rack: &mut Rack, key: i64) -> GAddr {
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = key;
+        let (_st, sp, _) = rack.traverse(&self.locate_p, self.root, sp);
+        sp[SP_RESULT as usize] as GAddr
+    }
+
+    /// Offloaded range scan: up to `count` values from the first key
+    /// >= `start` (YCSB-E). Issues continuations as the scratchpad
+    /// buffer fills.
+    pub fn scan(&self, rack: &mut Rack, start: i64, count: usize) -> Vec<i64> {
+        let leaf = self.locate(rack, start);
+        if leaf == 0 {
+            return Vec::new();
+        }
+        // in-leaf cursor: first index with key >= start
+        let mut node = [0i64; NODE_WORDS];
+        rack.read_words(leaf, &mut node);
+        let mut cursor = 0i64;
+        while (cursor as usize) < FANOUT
+            && node[KEYS as usize + cursor as usize] < start
+        {
+            cursor += 1;
+        }
+        let mut out = Vec::with_capacity(count);
+        let mut cur_leaf = leaf;
+        let mut remaining = count as i64;
+        while remaining > 0 && cur_leaf != 0 {
+            let mut sp = [0i64; SP_WORDS];
+            sp[SP_CURSOR as usize] = cursor;
+            sp[2] = remaining;
+            sp[3] = 0;
+            sp[SP_RESULT as usize] = 0;
+            let (st, sp, _) = rack.traverse(&self.scan_p, cur_leaf, sp);
+            let emitted = sp[3] as usize;
+            out.extend_from_slice(
+                &sp[SP_BUF_BASE as usize..SP_BUF_BASE as usize + emitted],
+            );
+            if st != Status::Return || emitted == 0 {
+                break;
+            }
+            remaining -= emitted as i64;
+            // continuation state travels in the scratchpad: the leaf the
+            // scan stopped on (SP_RESULT; 0 ⇒ end of chain) + cursor.
+            cur_leaf = sp[SP_RESULT as usize] as GAddr;
+            cursor = sp[SP_CURSOR as usize];
+        }
+        out.truncate(count);
+        out
+    }
+
+    /// Offloaded aggregation: sum of values with lo <= key <= hi.
+    /// Boundary leaf handled at the CPU node (partial range), then the
+    /// leaf chain aggregates on the accelerators.
+    pub fn sum_range(&self, rack: &mut Rack, lo: i64, hi: i64) -> i64 {
+        let leaf = self.locate(rack, lo);
+        if leaf == 0 {
+            return 0;
+        }
+        let mut node = [0i64; NODE_WORDS];
+        rack.read_words(leaf, &mut node);
+        let mut sum = 0i64;
+        for j in 0..FANOUT {
+            let k = node[KEYS as usize + j];
+            if k >= lo && k <= hi && k != i64::MAX {
+                sum = sum.wrapping_add(node[VALS as usize + j]);
+            }
+        }
+        let next = node[NEXT as usize] as GAddr;
+        if next == 0 || node[KEYS as usize + FANOUT - 1] > hi {
+            return sum;
+        }
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = hi;
+        sp[SP_ACC_SUM as usize] = 0;
+        let (_st, sp, _) = rack.traverse(&self.sum_p, next, sp);
+        sum.wrapping_add(sp[SP_ACC_SUM as usize])
+    }
+
+    /// Host reference lookup.
+    pub fn host_get(&self, rack: &mut Rack, key: i64) -> Option<i64> {
+        let mut cur = self.root;
+        loop {
+            let mut node = [0i64; NODE_WORDS];
+            rack.read_words(cur, &mut node);
+            if node[0] == 1 {
+                for j in 0..FANOUT {
+                    if node[KEYS as usize + j] == key {
+                        return Some(node[VALS as usize + j]);
+                    }
+                }
+                return None;
+            }
+            let mut idx = 0usize;
+            while idx < FANOUT && node[KEYS as usize + idx] <= key {
+                idx += 1;
+            }
+            cur = node[VALS as usize + idx] as GAddr;
+        }
+    }
+
+    /// Host reference range sum.
+    pub fn host_sum_range(&self, rack: &mut Rack, lo: i64, hi: i64) -> i64 {
+        let mut cur = self.first_leaf;
+        let mut sum = 0i64;
+        while cur != 0 {
+            let mut node = [0i64; NODE_WORDS];
+            rack.read_words(cur, &mut node);
+            for j in 0..FANOUT {
+                let k = node[KEYS as usize + j];
+                if k != i64::MAX && k >= lo && k <= hi {
+                    sum = sum.wrapping_add(node[VALS as usize + j]);
+                }
+            }
+            if node[KEYS as usize] > hi {
+                break;
+            }
+            cur = node[NEXT as usize] as GAddr;
+        }
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rack::RackConfig;
+
+    fn rack() -> Rack {
+        Rack::new(RackConfig {
+            nodes: 2,
+            node_capacity: 64 << 20,
+            granularity: 1 << 20,
+            ..Default::default()
+        })
+    }
+
+    fn tree(rack: &mut Rack, n: i64) -> BPlusTree {
+        let pairs: Vec<(i64, i64)> =
+            (0..n).map(|i| (i * 2, i * 20)).collect();
+        BPlusTree::build_sorted(rack, &pairs, FANOUT)
+    }
+
+    #[test]
+    fn point_lookup_single_request() {
+        let mut r = rack();
+        let t = tree(&mut r, 2000);
+        for i in (0..2000).step_by(37) {
+            assert_eq!(t.get(&mut r, i * 2), Some(i * 20), "key {}", i * 2);
+            assert_eq!(t.get(&mut r, i * 2 + 1), None);
+        }
+    }
+
+    #[test]
+    fn offloaded_matches_host() {
+        let mut r = rack();
+        let t = tree(&mut r, 500);
+        for k in 0..1100 {
+            assert_eq!(t.get(&mut r, k), t.host_get(&mut r, k), "key {k}");
+        }
+    }
+
+    #[test]
+    fn locate_returns_covering_leaf() {
+        let mut r = rack();
+        let t = tree(&mut r, 100);
+        let leaf = t.locate(&mut r, 50);
+        assert_ne!(leaf, 0);
+        let mut node = [0i64; NODE_WORDS];
+        r.read_words(leaf, &mut node);
+        assert_eq!(node[0], 1);
+        // the covering leaf's key range includes 50
+        assert!(node[KEYS as usize] <= 50);
+    }
+
+    #[test]
+    fn range_scan_returns_expected_values() {
+        let mut r = rack();
+        let t = tree(&mut r, 300);
+        // keys 0,2,..; scan 10 from key 100 => values for keys 100..118
+        let got = t.scan(&mut r, 100, 10);
+        let want: Vec<i64> = (50..60).map(|i| i * 20).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn range_scan_spans_many_leaves_with_continuations() {
+        let mut r = rack();
+        let t = tree(&mut r, 500);
+        let got = t.scan(&mut r, 0, 100); // > SP_BUF_LEN => continuations
+        let want: Vec<i64> = (0..100).map(|i| i * 20).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scan_clamps_at_end_of_tree() {
+        let mut r = rack();
+        let t = tree(&mut r, 20);
+        let got = t.scan(&mut r, 30, 50);
+        let want: Vec<i64> = (15..20).map(|i| i * 20).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn sum_range_matches_host() {
+        let mut r = rack();
+        let t = tree(&mut r, 400);
+        for (lo, hi) in [(0, 798), (100, 500), (301, 303), (700, 9999)] {
+            assert_eq!(
+                t.sum_range(&mut r, lo, hi),
+                t.host_sum_range(&mut r, lo, hi),
+                "range {lo}..{hi}"
+            );
+        }
+    }
+
+    #[test]
+    fn programs_offloadable_at_paper_ratios() {
+        for (name, it) in [
+            ("get", get_iter()),
+            ("locate", locate_iter()),
+            ("scan", scan_iter()),
+            ("sum", sum_iter()),
+        ] {
+            assert!(
+                it.offloadable(0.75),
+                "{name} ratio {} too high",
+                it.ratio()
+            );
+        }
+        // Table 3: B+Tree point ops ≈ 0.63, BTrDB aggregation ≈ 0.71
+        let g = get_iter().ratio();
+        assert!(g > 0.4 && g <= 0.75, "get ratio {g}");
+    }
+
+    #[test]
+    fn partial_fill_leaves() {
+        let mut r = rack();
+        let pairs: Vec<(i64, i64)> = (0..100).map(|i| (i, i)).collect();
+        let t = BPlusTree::build_sorted(&mut r, &pairs, 4); // half-full
+        for i in 0..100 {
+            assert_eq!(t.get(&mut r, i), Some(i));
+        }
+        assert_eq!(t.scan(&mut r, 10, 5), vec![10, 11, 12, 13, 14]);
+    }
+}

@@ -1,0 +1,222 @@
+//! Google cpp-btree on disaggregated memory (paper Appendix B.3,
+//! Listings 8–9: `internal_locate_plain_compare`).
+//!
+//! Node layout (kNodeValues = 8):
+//!   `[is_leaf, num_keys, keys[8] (2..10), child[9] (10..19)]`  — internal
+//!   `[is_leaf, num_keys, keys[8] (2..10), values[8] (10..18)]` — leaf
+//! Keys are padded with `i64::MAX` past `num_keys` so the unrolled scan
+//! needs no bound check (needle ≤ MAX always breaks at the first pad).
+//!
+//! Exactly like Listing 9, the offloaded iterator *returns the leaf
+//! pointer*; the host completes the final in-leaf search with one read.
+
+use std::sync::Arc;
+
+use super::{SP_KEY, SP_RESULT};
+use crate::compiler::{CompiledIter, IterBuilder};
+use crate::isa::SP_WORDS;
+use crate::mem::GAddr;
+use crate::rack::Rack;
+
+pub const FANOUT: usize = 8;
+const NODE_WORDS: usize = 2 + FANOUT + FANOUT + 1; // 19
+
+/// Listing 9: descend by `first i with needle <= keys[i]`, return
+/// cur_ptr when is_leaf.
+pub fn locate_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let tag = b.field(0);
+    let one = b.imm(1);
+    b.if_eq(tag, one, |b| {
+        let me = b.cur_ptr();
+        b.sp_store(SP_RESULT, me);
+        b.ret();
+    });
+    let needle = b.sp(SP_KEY);
+    let idx = b.var(0);
+    let mark = b.temp_mark();
+    b.for_fixed(FANOUT, |b, j| {
+        let k = b.field(2 + j as u32);
+        // child[idx] with idx = |{j : keys[j] <= needle}| — separators
+        // are min-of-right-child, so equality descends right. Guarding
+        // each increment (instead of breaking) is equivalent because the
+        // build keeps keys sorted.
+        b.if_le(k, needle, |b| b.add_assign(idx, 1));
+        b.temp_release(mark);
+    });
+    let child = b.field_dyn(idx, 10, (NODE_WORDS - 1) as u32);
+    b.advance(child);
+    b.finish().expect("btree locate")
+}
+
+pub struct GoogleBtree {
+    pub root: GAddr,
+    pub len: usize,
+    height: usize,
+    locate: Arc<CompiledIter>,
+}
+
+impl GoogleBtree {
+    /// Bulk-build from sorted (key, value) pairs.
+    pub fn build_sorted(rack: &mut Rack, pairs: &[(i64, i64)]) -> Self {
+        assert!(!pairs.is_empty());
+        // leaves
+        let mut level: Vec<(i64, GAddr)> = Vec::new(); // (min key, addr)
+        for chunk in pairs.chunks(FANOUT) {
+            let addr = rack.alloc((NODE_WORDS * 8) as u64);
+            let mut node = [0i64; NODE_WORDS];
+            node[0] = 1;
+            node[1] = chunk.len() as i64;
+            for j in 0..FANOUT {
+                node[2 + j] =
+                    chunk.get(j).map(|p| p.0).unwrap_or(i64::MAX);
+                node[10 + j] = chunk.get(j).map(|p| p.1).unwrap_or(0);
+            }
+            rack.write_words(addr, &node);
+            level.push((chunk[0].0, addr));
+        }
+        let mut height = 1;
+        while level.len() > 1 {
+            let mut next: Vec<(i64, GAddr)> = Vec::new();
+            for group in level.chunks(FANOUT + 1) {
+                let addr = rack.alloc((NODE_WORDS * 8) as u64);
+                let mut node = [0i64; NODE_WORDS];
+                node[0] = 0;
+                node[1] = (group.len() - 1) as i64;
+                for j in 0..FANOUT {
+                    // separator j = min key of child j+1
+                    node[2 + j] = group
+                        .get(j + 1)
+                        .map(|g| g.0)
+                        .unwrap_or(i64::MAX);
+                }
+                for (j, g) in group.iter().enumerate() {
+                    node[10 + j] = g.1 as i64;
+                }
+                rack.write_words(addr, &node);
+                next.push((group[0].0, addr));
+            }
+            level = next;
+            height += 1;
+        }
+        Self {
+            root: level[0].1,
+            len: pairs.len(),
+            height,
+            locate: Arc::new(locate_iter()),
+        }
+    }
+
+    pub fn locate_program(&self) -> Arc<CompiledIter> {
+        self.locate.clone()
+    }
+
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    /// Offloaded locate + host-side in-leaf search (Listing 8/9 split).
+    pub fn get(&self, rack: &mut Rack, key: i64) -> Option<i64> {
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = key;
+        let (_st, sp, _) = rack.traverse(&self.locate, self.root, sp);
+        let leaf = sp[SP_RESULT as usize] as GAddr;
+        if leaf == 0 {
+            return None;
+        }
+        let mut node = [0i64; NODE_WORDS];
+        rack.read_words(leaf, &mut node);
+        let nk = node[1] as usize;
+        for j in 0..nk {
+            if node[2 + j] == key {
+                return Some(node[10 + j]);
+            }
+        }
+        None
+    }
+
+    /// Host full descend (reference).
+    pub fn host_get(&self, rack: &mut Rack, key: i64) -> Option<i64> {
+        let mut cur = self.root;
+        loop {
+            let mut node = [0i64; NODE_WORDS];
+            rack.read_words(cur, &mut node);
+            if node[0] == 1 {
+                let nk = node[1] as usize;
+                for j in 0..nk {
+                    if node[2 + j] == key {
+                        return Some(node[10 + j]);
+                    }
+                }
+                return None;
+            }
+            // same convention as the iterator: count of separators <= key
+            let mut i = 0;
+            while i < FANOUT && node[2 + i] <= key {
+                i += 1;
+            }
+            cur = node[10 + i] as GAddr;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rack::RackConfig;
+
+    fn rack() -> Rack {
+        Rack::new(RackConfig {
+            nodes: 2,
+            node_capacity: 32 << 20,
+            granularity: 1 << 20,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn bulk_build_and_get() {
+        let mut r = rack();
+        let pairs: Vec<(i64, i64)> =
+            (0..1000).map(|i| (i * 2, i * 20)).collect();
+        let t = GoogleBtree::build_sorted(&mut r, &pairs);
+        assert!(t.height() >= 3);
+        for i in 0..1000 {
+            assert_eq!(t.get(&mut r, i * 2), Some(i * 20), "key {}", i * 2);
+            assert_eq!(t.get(&mut r, i * 2 + 1), None);
+        }
+    }
+
+    #[test]
+    fn offloaded_matches_host() {
+        let mut r = rack();
+        let pairs: Vec<(i64, i64)> =
+            (0..500).map(|i| (i * 3 + 7, i)).collect();
+        let t = GoogleBtree::build_sorted(&mut r, &pairs);
+        for k in 0..1600 {
+            assert_eq!(t.get(&mut r, k), t.host_get(&mut r, k), "key {k}");
+        }
+    }
+
+    #[test]
+    fn single_leaf_tree() {
+        let mut r = rack();
+        let t =
+            GoogleBtree::build_sorted(&mut r, &[(5, 50), (7, 70), (9, 90)]);
+        assert_eq!(t.height(), 1);
+        assert_eq!(t.get(&mut r, 7), Some(70));
+        assert_eq!(t.get(&mut r, 8), None);
+    }
+
+    #[test]
+    fn locate_program_ratio_matches_table3() {
+        let it = locate_iter();
+        assert!(it.offloadable(0.75), "ratio {}", it.ratio());
+        // Table 3: B+Tree family t_c/t_d ≈ 0.6-0.7
+        assert!(
+            it.ratio() > 0.35 && it.ratio() < 0.75,
+            "ratio {}",
+            it.ratio()
+        );
+    }
+}

@@ -1,0 +1,315 @@
+//! Boost `unordered_map` / `unordered_set` on disaggregated memory
+//! (paper §3 Listings 2–3, Appendix B.2).
+//!
+//! Layout: a bucket array of *sentinel nodes* (`[SENTINEL_KEY, 0, head]`)
+//! followed by chain nodes `[key, value, next]`. `init()` runs at the
+//! CPU node (paper §3): it hashes the key and computes the bucket
+//! sentinel's address; the offloaded program then walks the sentinel +
+//! chain uniformly. This mirrors `bucket_ptr(hash(key))` in Listing 3.
+
+use std::sync::Arc;
+
+use super::{KEY_NOT_FOUND, SP_FLAG, SP_KEY, SP_RESULT};
+use crate::compiler::{CompiledIter, IterBuilder};
+use crate::isa::SP_WORDS;
+use crate::mem::GAddr;
+use crate::rack::Rack;
+use crate::util::zipf::fnv1a_64;
+
+/// Sentinel key no application key may use.
+const SENTINEL: i64 = i64::MIN;
+
+const NODE_WORDS: usize = 3;
+
+pub struct HashMapDs {
+    pub buckets: usize,
+    /// buckets per node shard; bucket b lives on shard b / per_node.
+    per_node: usize,
+    shard_bases: Vec<GAddr>,
+    pub len: usize,
+    find: Arc<CompiledIter>,
+    update: Arc<CompiledIter>,
+}
+
+/// Chain-walk program (shared by map/set/bimap): compare sp[KEY] with
+/// node key; on match store value + node addr; else follow next.
+/// The bucket sentinel's key never matches, so it walks through.
+pub fn chain_find_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let needle = b.sp(SP_KEY);
+    let key = b.field(0);
+    b.if_eq(needle, key, |b| {
+        let val = b.field(1);
+        b.sp_store(SP_RESULT, val);
+        let zero = b.imm(0);
+        b.sp_store(SP_FLAG, zero);
+        b.ret();
+    });
+    let next = b.field(2);
+    let zero = b.imm(0);
+    b.if_eq(next, zero, |b| {
+        let nf = b.imm(KEY_NOT_FOUND);
+        b.sp_store(SP_FLAG, nf);
+        b.ret();
+    });
+    b.advance(next);
+    b.finish().expect("chain find")
+}
+
+/// Mutating chain walk: overwrite the value in place on match (YCSB
+/// update operations; exercises the write-back path, Appendix C.2).
+pub fn chain_update_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let needle = b.sp(SP_KEY);
+    let key = b.field(0);
+    b.if_eq(needle, key, |b| {
+        let newval = b.sp(SP_RESULT);
+        b.store_field(1, newval);
+        let zero = b.imm(0);
+        b.sp_store(SP_FLAG, zero);
+        b.ret();
+    });
+    let next = b.field(2);
+    let zero = b.imm(0);
+    b.if_eq(next, zero, |b| {
+        let nf = b.imm(KEY_NOT_FOUND);
+        b.sp_store(SP_FLAG, nf);
+        b.ret();
+    });
+    b.advance(next);
+    b.finish().expect("chain update")
+}
+
+impl HashMapDs {
+    /// Allocate the bucket array (sentinel nodes) eagerly. The array is
+    /// *partitioned across memory nodes by primary key* (paper §6.1:
+    /// "the hash table is partitioned across memory nodes based on
+    /// primary keys"), so bucket traffic spreads over all accelerators.
+    pub fn build(rack: &mut Rack, buckets: usize) -> Self {
+        let nodes = rack.cfg.nodes;
+        let stride = (NODE_WORDS * 8) as u64;
+        let per_node = buckets.div_ceil(nodes);
+        let mut shard_bases = Vec::with_capacity(nodes);
+        for n in 0..nodes {
+            let base = rack.alloc_on(n as u16, per_node as u64 * stride);
+            for i in 0..per_node {
+                rack.write_words(
+                    base + i as u64 * stride,
+                    &[SENTINEL, 0, 0],
+                );
+            }
+            shard_bases.push(base);
+        }
+        Self {
+            buckets,
+            per_node,
+            shard_bases,
+            len: 0,
+            find: Arc::new(chain_find_iter()),
+            update: Arc::new(chain_update_iter()),
+        }
+    }
+
+    pub fn find_program(&self) -> Arc<CompiledIter> {
+        self.find.clone()
+    }
+
+    pub fn update_program(&self) -> Arc<CompiledIter> {
+        self.update.clone()
+    }
+
+    /// `init()`: CPU-side start-pointer computation (paper §3).
+    pub fn bucket_ptr(&self, key: i64) -> GAddr {
+        let h = (fnv1a_64(key as u64) % self.buckets as u64) as usize;
+        let shard = h / self.per_node;
+        let slot = h % self.per_node;
+        self.shard_bases[shard] + (slot * NODE_WORDS * 8) as u64
+    }
+
+    /// Host-path insert (new nodes are pushed at the chain head, after
+    /// the sentinel).
+    pub fn insert(&mut self, rack: &mut Rack, key: i64, value: i64) {
+        assert_ne!(key, SENTINEL);
+        let bucket = self.bucket_ptr(key);
+        let mut sent = [0i64; NODE_WORDS];
+        rack.read_words(bucket, &mut sent);
+        // update in place if the key exists
+        let mut cur = sent[2] as GAddr;
+        while cur != 0 {
+            let mut node = [0i64; NODE_WORDS];
+            rack.read_words(cur, &mut node);
+            if node[0] == key {
+                node[1] = value;
+                rack.write_words(cur, &node);
+                return;
+            }
+            cur = node[2] as GAddr;
+        }
+        // chain nodes co-locate with their bucket (paper §6.1: "the
+        // linked list for a hash bucket resides in a single memory
+        // node"), so hash lookups never cross nodes.
+        let node = rack.alloc.owner(bucket).expect("bucket unmapped");
+        let addr = rack.alloc_on(node, (NODE_WORDS * 8) as u64);
+        rack.write_words(addr, &[key, value, sent[2]]);
+        sent[2] = addr as i64;
+        rack.write_words(bucket, &sent);
+        self.len += 1;
+    }
+
+    /// Offloaded find.
+    pub fn get(&self, rack: &mut Rack, key: i64) -> Option<i64> {
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = key;
+        let (_st, sp, _) =
+            rack.traverse(&self.find, self.bucket_ptr(key), sp);
+        (sp[SP_FLAG as usize] != KEY_NOT_FOUND)
+            .then_some(sp[SP_RESULT as usize])
+    }
+
+    /// Offloaded update-in-place; returns false if the key is absent.
+    pub fn update(&self, rack: &mut Rack, key: i64, value: i64) -> bool {
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = key;
+        sp[SP_RESULT as usize] = value;
+        let (_st, sp, _) =
+            rack.traverse(&self.update, self.bucket_ptr(key), sp);
+        sp[SP_FLAG as usize] != KEY_NOT_FOUND
+    }
+
+    /// Host reference walk.
+    pub fn host_get(&self, rack: &mut Rack, key: i64) -> Option<i64> {
+        let mut cur = self.bucket_ptr(key);
+        loop {
+            let mut node = [0i64; NODE_WORDS];
+            rack.read_words(cur, &mut node);
+            if node[0] == key {
+                return Some(node[1]);
+            }
+            if node[2] == 0 {
+                return None;
+            }
+            cur = node[2] as GAddr;
+        }
+    }
+}
+
+/// Boost `unordered_set`: a map with unit values.
+pub struct HashSetDs {
+    inner: HashMapDs,
+}
+
+impl HashSetDs {
+    pub fn build(rack: &mut Rack, buckets: usize) -> Self {
+        Self { inner: HashMapDs::build(rack, buckets) }
+    }
+
+    pub fn insert(&mut self, rack: &mut Rack, key: i64) {
+        self.inner.insert(rack, key, 1);
+    }
+
+    pub fn contains(&self, rack: &mut Rack, key: i64) -> bool {
+        self.inner.get(rack, key).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rack::RackConfig;
+
+    fn rack() -> Rack {
+        Rack::new(RackConfig {
+            nodes: 2,
+            node_capacity: 32 << 20,
+            granularity: 1 << 20,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn insert_get_round_trip() {
+        let mut r = rack();
+        let mut m = HashMapDs::build(&mut r, 64);
+        for i in 0..500 {
+            m.insert(&mut r, i, i * 2);
+        }
+        for i in 0..500 {
+            assert_eq!(m.get(&mut r, i), Some(i * 2), "key {i}");
+        }
+        assert_eq!(m.get(&mut r, 1000), None);
+        assert_eq!(m.len, 500);
+    }
+
+    #[test]
+    fn collision_chains_work() {
+        let mut r = rack();
+        // 1 bucket: everything collides into one chain
+        let mut m = HashMapDs::build(&mut r, 1);
+        for i in 0..50 {
+            m.insert(&mut r, i, 100 + i);
+        }
+        for i in 0..50 {
+            assert_eq!(m.get(&mut r, i), Some(100 + i));
+        }
+        assert_eq!(m.get(&mut r, 50), None);
+    }
+
+    #[test]
+    fn insert_overwrites() {
+        let mut r = rack();
+        let mut m = HashMapDs::build(&mut r, 16);
+        m.insert(&mut r, 7, 1);
+        m.insert(&mut r, 7, 2);
+        assert_eq!(m.get(&mut r, 7), Some(2));
+        assert_eq!(m.len, 1);
+    }
+
+    #[test]
+    fn offloaded_update_writes_back() {
+        let mut r = rack();
+        let mut m = HashMapDs::build(&mut r, 16);
+        m.insert(&mut r, 7, 1);
+        assert!(m.update(&mut r, 7, 42));
+        assert_eq!(m.host_get(&mut r, 7), Some(42));
+        assert!(!m.update(&mut r, 8, 9));
+    }
+
+    #[test]
+    fn offloaded_matches_host() {
+        let mut r = rack();
+        let mut m = HashMapDs::build(&mut r, 32);
+        for i in 0..200 {
+            m.insert(&mut r, i * 3, i);
+        }
+        for k in 0..600 {
+            assert_eq!(m.get(&mut r, k), m.host_get(&mut r, k), "key {k}");
+        }
+    }
+
+    #[test]
+    fn hashset_contains() {
+        let mut r = rack();
+        let mut s = HashSetDs::build(&mut r, 32);
+        for i in (0..100).step_by(2) {
+            s.insert(&mut r, i);
+        }
+        assert!(s.contains(&mut r, 42));
+        assert!(!s.contains(&mut r, 43));
+        assert_eq!(s.len(), 50);
+    }
+
+    #[test]
+    fn programs_offloadable_with_low_ratio() {
+        let it = chain_find_iter();
+        assert!(it.offloadable(0.75));
+        assert!(it.ratio() < 0.5, "hash chain ratio {}", it.ratio());
+    }
+}

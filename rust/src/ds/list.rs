@@ -1,0 +1,293 @@
+//! STL `std::list` / `std::forward_list` on disaggregated memory
+//! (paper Appendix B.1, Listings 4–5).
+//!
+//! Node layouts:
+//!   forward_list: `[value, next]`          (2 words)
+//!   list:         `[value, next, prev]`    (3 words)
+//!
+//! `std::find(first, last, value)` walks `next` until the value matches
+//! or the list ends — both list types share the same internal function,
+//! exactly as the paper's Table 5 notes.
+
+use std::sync::Arc;
+
+use super::{KEY_NOT_FOUND, SP_ACC_CNT, SP_ACC_SUM, SP_FLAG, SP_KEY, SP_RESULT};
+use crate::compiler::{CompiledIter, IterBuilder};
+use crate::isa::SP_WORDS;
+use crate::mem::GAddr;
+use crate::rack::Rack;
+
+pub struct ForwardList {
+    pub head: GAddr,
+    tail: GAddr,
+    pub len: usize,
+    find: Arc<CompiledIter>,
+    sum: Arc<CompiledIter>,
+}
+
+pub struct LinkedList {
+    pub head: GAddr,
+    tail: GAddr,
+    pub len: usize,
+    find: Arc<CompiledIter>,
+}
+
+/// `std::find` over `[value, next, ..]` nodes: sp[RESULT] = node addr on
+/// hit, sp[FLAG] = KEY_NOT_FOUND on miss.
+pub fn find_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let needle = b.sp(SP_KEY);
+    let val = b.field(0);
+    b.if_eq(needle, val, |b| {
+        let me = b.cur_ptr();
+        b.sp_store(SP_RESULT, me);
+        b.ret();
+    });
+    let next = b.field(1);
+    let zero = b.imm(0);
+    b.if_eq(next, zero, |b| {
+        let nf = b.imm(KEY_NOT_FOUND);
+        b.sp_store(SP_FLAG, nf);
+        b.ret();
+    });
+    b.advance(next);
+    b.finish().expect("list find iterator")
+}
+
+/// Stateful aggregation along the chain (traversal-length study,
+/// Appendix C.2): sp[SUM] += value, sp[CNT] += 1.
+pub fn sum_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let acc = b.sp(SP_ACC_SUM);
+    let val = b.field(0);
+    let acc2 = b.add(acc, val);
+    b.sp_store(SP_ACC_SUM, acc2);
+    let cnt = b.sp(SP_ACC_CNT);
+    let cnt2 = b.addi(cnt, 1);
+    b.sp_store(SP_ACC_CNT, cnt2);
+    let next = b.field(1);
+    let zero = b.imm(0);
+    b.if_eq(next, zero, |b| b.ret());
+    b.advance(next);
+    b.finish().expect("list sum iterator")
+}
+
+impl ForwardList {
+    pub fn new() -> Self {
+        Self {
+            head: 0,
+            tail: 0,
+            len: 0,
+            find: Arc::new(find_iter()),
+            sum: Arc::new(sum_iter()),
+        }
+    }
+
+    pub fn find_program(&self) -> Arc<CompiledIter> {
+        self.find.clone()
+    }
+
+    pub fn sum_program(&self) -> Arc<CompiledIter> {
+        self.sum.clone()
+    }
+
+    /// push_back (host path).
+    pub fn push(&mut self, rack: &mut Rack, value: i64) -> GAddr {
+        let addr = rack.alloc(16);
+        rack.write_words(addr, &[value, 0]);
+        if self.head == 0 {
+            self.head = addr;
+        } else {
+            let mut node = [0i64; 2];
+            rack.read_words(self.tail, &mut node);
+            node[1] = addr as i64;
+            rack.write_words(self.tail, &node);
+        }
+        self.tail = addr;
+        self.len += 1;
+        addr
+    }
+
+    /// Offloaded `std::find`.
+    pub fn find(&self, rack: &mut Rack, value: i64) -> Option<GAddr> {
+        if self.head == 0 {
+            return None;
+        }
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = value;
+        let (_st, sp, _iters) = rack.traverse(&self.find, self.head, sp);
+        if sp[SP_FLAG as usize] == KEY_NOT_FOUND {
+            None
+        } else {
+            Some(sp[SP_RESULT as usize] as GAddr)
+        }
+    }
+
+    /// Offloaded whole-list sum; returns (sum, count).
+    pub fn sum(&self, rack: &mut Rack) -> (i64, i64) {
+        if self.head == 0 {
+            return (0, 0);
+        }
+        let sp = [0i64; SP_WORDS];
+        let (_st, sp, _iters) = rack.traverse(&self.sum, self.head, sp);
+        (sp[SP_ACC_SUM as usize], sp[SP_ACC_CNT as usize])
+    }
+
+    /// Host-side reference walk (for verification).
+    pub fn host_find(&self, rack: &mut Rack, value: i64) -> Option<GAddr> {
+        let mut cur = self.head;
+        while cur != 0 {
+            let mut node = [0i64; 2];
+            rack.read_words(cur, &mut node);
+            if node[0] == value {
+                return Some(cur);
+            }
+            cur = node[1] as GAddr;
+        }
+        None
+    }
+}
+
+impl Default for ForwardList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LinkedList {
+    pub fn new() -> Self {
+        Self { head: 0, tail: 0, len: 0, find: Arc::new(find_iter()) }
+    }
+
+    pub fn find_program(&self) -> Arc<CompiledIter> {
+        self.find.clone()
+    }
+
+    pub fn push_back(&mut self, rack: &mut Rack, value: i64) -> GAddr {
+        let addr = rack.alloc(24);
+        rack.write_words(addr, &[value, 0, self.tail as i64]);
+        if self.head == 0 {
+            self.head = addr;
+        } else {
+            let mut node = [0i64; 3];
+            rack.read_words(self.tail, &mut node);
+            node[1] = addr as i64;
+            rack.write_words(self.tail, &node);
+        }
+        self.tail = addr;
+        self.len += 1;
+        addr
+    }
+
+    /// `std::find` — identical program to forward_list (shared internal
+    /// function, Table 5).
+    pub fn find(&self, rack: &mut Rack, value: i64) -> Option<GAddr> {
+        if self.head == 0 {
+            return None;
+        }
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = value;
+        let (_st, sp, _) = rack.traverse(&self.find, self.head, sp);
+        if sp[SP_FLAG as usize] == KEY_NOT_FOUND {
+            None
+        } else {
+            Some(sp[SP_RESULT as usize] as GAddr)
+        }
+    }
+}
+
+impl Default for LinkedList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rack::RackConfig;
+
+    fn rack() -> Rack {
+        Rack::new(RackConfig {
+            nodes: 2,
+            node_capacity: 8 << 20,
+            granularity: 1 << 20,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn forward_list_find_hit_and_miss() {
+        let mut r = rack();
+        let mut l = ForwardList::new();
+        let addrs: Vec<_> =
+            (0..50).map(|i| l.push(&mut r, i * 10)).collect();
+        assert_eq!(l.find(&mut r, 250), Some(addrs[25]));
+        assert_eq!(l.find(&mut r, 251), None);
+        assert_eq!(l.find(&mut r, 0), Some(addrs[0]));
+        assert_eq!(l.find(&mut r, 490), Some(addrs[49]));
+    }
+
+    #[test]
+    fn offloaded_matches_host_walk() {
+        let mut r = rack();
+        let mut l = ForwardList::new();
+        for i in 0..100 {
+            l.push(&mut r, (i * 7) % 31);
+        }
+        for v in 0..35 {
+            assert_eq!(
+                l.find(&mut r, v),
+                l.host_find(&mut r, v),
+                "value {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn sum_aggregates_whole_list() {
+        let mut r = rack();
+        let mut l = ForwardList::new();
+        for i in 1..=100 {
+            l.push(&mut r, i);
+        }
+        assert_eq!(l.sum(&mut r), (5050, 100));
+    }
+
+    #[test]
+    fn linked_list_find() {
+        let mut r = rack();
+        let mut l = LinkedList::new();
+        let addrs: Vec<_> =
+            (0..20).map(|i| l.push_back(&mut r, i)).collect();
+        assert_eq!(l.find(&mut r, 13), Some(addrs[13]));
+        assert_eq!(l.find(&mut r, 99), None);
+    }
+
+    #[test]
+    fn list_spans_memory_nodes() {
+        let mut r = Rack::new(RackConfig {
+            nodes: 4,
+            node_capacity: 8 << 20,
+            granularity: 4096, // tiny slabs force node crossings
+            ..Default::default()
+        });
+        let mut l = ForwardList::new();
+        let addrs: Vec<_> = (0..2000).map(|i| l.push(&mut r, i)).collect();
+        // nodes should really be spread
+        let owners: std::collections::BTreeSet<_> = addrs
+            .iter()
+            .map(|&a| r.alloc.owner(a).unwrap())
+            .collect();
+        assert!(owners.len() >= 2, "placement not distributed");
+        // distributed traversal still correct
+        assert_eq!(l.find(&mut r, 1777), Some(addrs[1777]));
+        assert_eq!(l.find(&mut r, 2001), None);
+    }
+
+    #[test]
+    fn programs_are_offloadable() {
+        assert!(find_iter().offloadable(0.75));
+        assert!(sum_iter().offloadable(0.75));
+    }
+}

@@ -1,0 +1,53 @@
+//! Data structures ported to the PULSE iterator model (paper §3,
+//! Table 1/Table 5, Appendix B): 13 structures across the STL / Boost /
+//! Google-BTree families, plus the B+Tree that backs the WiredTiger and
+//! BTrDB applications.
+//!
+//! Each structure provides:
+//! * host-side build/mutation through the `Rack` (allocation + writes go
+//!   through the normal translation path);
+//! * compiled PULSE iterator(s) for its traversals (via the
+//!   `compiler::IterBuilder` DSL — the analogue of the paper's C++ →
+//!   LLVM → PULSE-ISA flow);
+//! * a `verify` helper used by tests to compare offloaded results
+//!   against a host-side reference walk.
+//!
+//! Layouts use 8 B words; word 0 of every node is the first field the
+//! aggregated LOAD fetches. Null pointers are encoded as 0.
+//!
+//! Scratchpad conventions (shared with `python/compile/kernels/
+//! programs.py`):
+//!   sp[0] = search key / argument
+//!   sp[1] = result value (or found-node pointer)
+//!   sp[2] = status flag (KEY_NOT_FOUND)
+//!   sp[3..8] = aggregation state (sum/min/max/count...)
+//!   sp[8..]  = bulk result buffer (range scans)
+
+pub mod bimap;
+pub mod bplustree;
+pub mod bst;
+pub mod btree;
+pub mod hashmap;
+pub mod list;
+
+pub use bimap::Bimap;
+pub use bplustree::BPlusTree;
+pub use bst::{BstKind, BstMap};
+pub use btree::GoogleBtree;
+pub use hashmap::{HashMapDs, HashSetDs};
+pub use list::{ForwardList, LinkedList};
+
+/// Scratchpad word conventions.
+pub const SP_KEY: u32 = 0;
+pub const SP_RESULT: u32 = 1;
+pub const SP_FLAG: u32 = 2;
+pub const SP_ACC_SUM: u32 = 3;
+pub const SP_ACC_CNT: u32 = 4;
+pub const SP_ACC_MIN: u32 = 5;
+pub const SP_ACC_MAX: u32 = 6;
+pub const SP_CURSOR: u32 = 7;
+pub const SP_BUF_BASE: u32 = 8;
+pub const SP_BUF_LEN: usize = 24;
+
+/// Sentinel for missing keys.
+pub const KEY_NOT_FOUND: i64 = i64::MAX;

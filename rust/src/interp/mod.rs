@@ -1,0 +1,316 @@
+//! Native logic-pipeline interpreter.
+//!
+//! Executes one iterator *iteration* (paper §4.2: the logic pipeline's
+//! pass between two data fetches) over a `Workspace`. Semantics are
+//! bit-identical to the Pallas kernel (`python/compile/kernels/
+//! logic_step.py`) and the Python oracle; the equivalence is enforced by
+//! `rust/tests/integration_runtime.rs` (vs the AOT XLA artifact) and
+//! `rust/tests/proptest_isa.rs`.
+//!
+//! This is also the accelerator's fast-path engine — see `accel::Engine`
+//! for the choice between `Native` and `Xla`.
+
+use crate::isa::{Instr, Op, Program, Status, DATA_WORDS, NREG, SP_WORDS};
+
+/// Per-iterator workspace (paper §4.2): `cur_ptr` (regs[0]),
+/// `scratch_pad`, and the `data` window loaded by the memory pipeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Workspace {
+    pub regs: [i64; NREG],
+    pub sp: [i64; SP_WORDS],
+    pub data: [i64; DATA_WORDS],
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self {
+            regs: [0; NREG],
+            sp: [0; SP_WORDS],
+            data: [0; DATA_WORDS],
+        }
+    }
+
+    pub fn cur_ptr(&self) -> u64 {
+        self.regs[0] as u64
+    }
+
+    pub fn set_cur_ptr(&mut self, p: u64) {
+        self.regs[0] = p as i64;
+    }
+
+    /// Scratchpad as raw bytes (wire format of requests/responses).
+    pub fn sp_bytes(&self) -> [u8; SP_WORDS * 8] {
+        let mut out = [0u8; SP_WORDS * 8];
+        for (i, w) in self.sp.iter().enumerate() {
+            out[i * 8..i * 8 + 8].copy_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn set_sp_bytes(&mut self, bytes: &[u8]) {
+        for (i, chunk) in bytes.chunks_exact(8).enumerate().take(SP_WORDS) {
+            self.sp[i] = i64::from_le_bytes(chunk.try_into().unwrap());
+        }
+    }
+}
+
+/// Result of one logic pass: terminal status + dynamic instruction count
+/// (the DES uses the count for t_c accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PassResult {
+    pub status: Status,
+    pub steps: u32,
+}
+
+/// Execute one iteration of `p` over `ws`. The caller (memory pipeline /
+/// test driver) must have filled `ws.data` with the aggregated load for
+/// `cur_ptr` beforehand.
+pub fn logic_pass(p: &Program, ws: &mut Workspace) -> PassResult {
+    let n = p.instrs.len();
+    let mut pc = 0usize;
+    let mut steps = 0u32;
+    loop {
+        steps += 1;
+        if pc >= n {
+            return PassResult { status: Status::Trap, steps };
+        }
+        let Instr { op, a, b, c, imm } = p.instrs[pc];
+        let (a, b, c) = (a as usize, b as usize, c as usize);
+        let mut next_pc = pc + 1;
+        match op {
+            Op::Nop => {}
+            Op::Ldd => ws.regs[a] = ws.data[imm as usize],
+            Op::Ldx => {
+                let idx = ws.regs[b].wrapping_add(imm);
+                if !(0..DATA_WORDS as i64).contains(&idx) {
+                    return PassResult { status: Status::Trap, steps };
+                }
+                ws.regs[a] = ws.data[idx as usize];
+            }
+            Op::Std => ws.data[imm as usize] = ws.regs[a],
+            Op::Stx => {
+                let idx = ws.regs[b].wrapping_add(imm);
+                if !(0..DATA_WORDS as i64).contains(&idx) {
+                    return PassResult { status: Status::Trap, steps };
+                }
+                ws.data[idx as usize] = ws.regs[a];
+            }
+            Op::Spl => ws.regs[a] = ws.sp[imm as usize],
+            Op::Splx => {
+                let idx = ws.regs[b].wrapping_add(imm);
+                if !(0..SP_WORDS as i64).contains(&idx) {
+                    return PassResult { status: Status::Trap, steps };
+                }
+                ws.regs[a] = ws.sp[idx as usize];
+            }
+            Op::Sps => ws.sp[imm as usize] = ws.regs[a],
+            Op::Spsx => {
+                let idx = ws.regs[b].wrapping_add(imm);
+                if !(0..SP_WORDS as i64).contains(&idx) {
+                    return PassResult { status: Status::Trap, steps };
+                }
+                ws.sp[idx as usize] = ws.regs[a];
+            }
+            Op::Mov => ws.regs[a] = ws.regs[b],
+            Op::Movi => ws.regs[a] = imm,
+            Op::Add => ws.regs[a] = ws.regs[b].wrapping_add(ws.regs[c]),
+            Op::Sub => ws.regs[a] = ws.regs[b].wrapping_sub(ws.regs[c]),
+            Op::Mul => ws.regs[a] = ws.regs[b].wrapping_mul(ws.regs[c]),
+            Op::Div => {
+                if ws.regs[c] == 0 {
+                    return PassResult { status: Status::Trap, steps };
+                }
+                ws.regs[a] = ws.regs[b].wrapping_div(ws.regs[c]);
+            }
+            Op::And => ws.regs[a] = ws.regs[b] & ws.regs[c],
+            Op::Or => ws.regs[a] = ws.regs[b] | ws.regs[c],
+            Op::Xor => ws.regs[a] = ws.regs[b] ^ ws.regs[c],
+            Op::Not => ws.regs[a] = !ws.regs[b],
+            Op::Shl => {
+                ws.regs[a] = ws.regs[b].wrapping_shl((imm & 63) as u32)
+            }
+            Op::Shr => {
+                ws.regs[a] =
+                    ((ws.regs[b] as u64) >> ((imm & 63) as u32)) as i64
+            }
+            Op::Addi => ws.regs[a] = ws.regs[b].wrapping_add(imm),
+            Op::Jeq | Op::Jne | Op::Jlt | Op::Jle | Op::Jgt | Op::Jge => {
+                let (x, y) = (ws.regs[a], ws.regs[b]);
+                let taken = match op {
+                    Op::Jeq => x == y,
+                    Op::Jne => x != y,
+                    Op::Jlt => x < y,
+                    Op::Jle => x <= y,
+                    Op::Jgt => x > y,
+                    Op::Jge => x >= y,
+                    _ => unreachable!(),
+                };
+                if taken {
+                    next_pc = imm as usize;
+                }
+            }
+            Op::Jmp => next_pc = imm as usize,
+            Op::Next => {
+                return PassResult { status: Status::NextIter, steps }
+            }
+            Op::Ret => return PassResult { status: Status::Return, steps },
+            Op::Trap => return PassResult { status: Status::Trap, steps },
+        }
+        pc = next_pc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Asm;
+
+    fn ws() -> Workspace {
+        Workspace::new()
+    }
+
+    #[test]
+    fn alu_semantics() {
+        let mut a = Asm::new();
+        a.movi(1, 7);
+        a.movi(2, -3);
+        a.add(3, 1, 2);
+        a.sub(4, 1, 2);
+        a.mul(5, 1, 2);
+        a.div(6, 5, 1);
+        a.and(7, 1, 4);
+        a.or(8, 1, 4);
+        a.xor(9, 1, 4);
+        a.not(10, 1);
+        a.shl(11, 1, 4);
+        a.shr(12, 2, 60);
+        a.addi(13, 1, 100);
+        a.ret();
+        let p = a.finish(1).unwrap();
+        let mut w = ws();
+        let r = logic_pass(&p, &mut w);
+        assert_eq!(r.status, Status::Return);
+        assert_eq!(
+            &w.regs[1..14],
+            &[7, -3, 4, 10, -21, -3, 2, 15, 13, !7, 112, 15, 107]
+        );
+    }
+
+    #[test]
+    fn wrapping_arithmetic() {
+        let mut a = Asm::new();
+        a.movi(1, i64::MAX);
+        a.movi(2, 1);
+        a.add(3, 1, 2);
+        a.movi(4, i64::MIN);
+        a.movi(5, -1);
+        a.div(6, 4, 5);
+        a.ret();
+        let p = a.finish(1).unwrap();
+        let mut w = ws();
+        assert_eq!(logic_pass(&p, &mut w).status, Status::Return);
+        assert_eq!(w.regs[3], i64::MIN);
+        assert_eq!(w.regs[6], i64::MIN); // MIN / -1 wraps
+    }
+
+    #[test]
+    fn div_zero_traps_without_commit() {
+        let mut a = Asm::new();
+        a.movi(1, 5);
+        a.movi(2, 0);
+        a.div(3, 1, 2);
+        a.sps(1, 0);
+        a.ret();
+        let p = a.finish(1).unwrap();
+        let mut w = ws();
+        let r = logic_pass(&p, &mut w);
+        assert_eq!(r.status, Status::Trap);
+        assert_eq!(w.sp[0], 0); // sps never executed
+        assert_eq!(r.steps, 3);
+    }
+
+    #[test]
+    fn dynamic_oob_traps() {
+        for (neg, win) in [(false, DATA_WORDS as i64), (true, -1)] {
+            let mut a = Asm::new();
+            a.movi(1, if neg { win } else { win });
+            a.ldx(2, 1, 0);
+            a.ret();
+            let p = a.finish(1).unwrap();
+            let mut w = ws();
+            assert_eq!(logic_pass(&p, &mut w).status, Status::Trap);
+        }
+    }
+
+    #[test]
+    fn next_iter_reports_cur_ptr() {
+        let mut a = Asm::new();
+        a.ldd(1, 2);
+        a.mov(0, 1);
+        a.next();
+        let p = a.finish(3).unwrap();
+        let mut w = ws();
+        w.data[2] = 0xABCD;
+        let r = logic_pass(&p, &mut w);
+        assert_eq!(r.status, Status::NextIter);
+        assert_eq!(w.cur_ptr(), 0xABCD);
+        assert_eq!(r.steps, 3);
+    }
+
+    #[test]
+    fn fall_off_end_traps() {
+        // jump one past the end
+        let mut a = Asm::new();
+        let end = a.label();
+        a.jmp(end);
+        a.ret();
+        a.bind(end);
+        // label binds after RET — jumping there falls off the program.
+        let p = a.finish(1).unwrap();
+        let mut w = ws();
+        assert_eq!(logic_pass(&p, &mut w).status, Status::Trap);
+    }
+
+    #[test]
+    fn sp_round_trip_bytes() {
+        let mut w = ws();
+        w.sp[0] = -1;
+        w.sp[31] = 0x0123456789ABCDEF;
+        let bytes = w.sp_bytes();
+        let mut w2 = ws();
+        w2.set_sp_bytes(&bytes);
+        assert_eq!(w.sp, w2.sp);
+    }
+
+    #[test]
+    fn dynamic_indexing_in_window() {
+        // B+Tree-style scan: data[4 + i] keys, find first >= needle.
+        let mut a = Asm::new();
+        let found = a.label();
+        let loop_done = a.label();
+        a.spl(1, 0); // needle
+        a.movi(2, 0); // i = 0
+        for _ in 0..4 {
+            a.ldx(3, 2, 4); // key_i = data[4 + i]
+            a.jge(3, 1, found);
+            a.addi(2, 2, 1);
+        }
+        a.jmp(loop_done);
+        a.bind(found);
+        a.bind(loop_done);
+        a.sps(2, 1);
+        a.ret();
+        let p = a.finish(8).unwrap();
+        let mut w = ws();
+        w.sp[0] = 25;
+        w.data[4..8].copy_from_slice(&[10, 20, 30, 40]);
+        assert_eq!(logic_pass(&p, &mut w).status, Status::Return);
+        assert_eq!(w.sp[1], 2); // first key >= 25 is index 2 (30)
+    }
+}

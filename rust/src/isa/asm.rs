@@ -1,0 +1,220 @@
+//! Assembler: an ergonomic builder for PULSE programs with labels.
+//!
+//! Data-structure iterator programs (and the compiler's lowering pass)
+//! build code through this API; it resolves forward labels and runs the
+//! verifier on `finish()`.
+
+use super::op::{Instr, Op};
+use super::program::Program;
+use super::verify::{verify, VerifyError};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Label(usize);
+
+#[derive(Debug, Default)]
+pub struct Asm {
+    instrs: Vec<Instr>,
+    /// label -> resolved pc (None until `bind`).
+    labels: Vec<Option<usize>>,
+    /// (instr index, label) fixups for forward references.
+    fixups: Vec<(usize, Label)>,
+}
+
+impl Asm {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn here(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// Create an unbound label (forward reference).
+    pub fn label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    /// Bind a label to the current position.
+    pub fn bind(&mut self, l: Label) {
+        assert!(self.labels[l.0].is_none(), "label bound twice");
+        self.labels[l.0] = Some(self.instrs.len());
+    }
+
+    fn push(&mut self, op: Op, a: u8, b: u8, c: u8, imm: i64) -> &mut Self {
+        self.instrs.push(Instr::new(op, a, b, c, imm));
+        self
+    }
+
+    fn push_jump(&mut self, op: Op, a: u8, b: u8, l: Label) -> &mut Self {
+        self.fixups.push((self.instrs.len(), l));
+        self.instrs.push(Instr::new(op, a, b, 0, 0));
+        self
+    }
+
+    // -- memory ------------------------------------------------------------
+    pub fn ldd(&mut self, dst: u8, off: i64) -> &mut Self {
+        self.push(Op::Ldd, dst, 0, 0, off)
+    }
+    pub fn ldx(&mut self, dst: u8, base: u8, off: i64) -> &mut Self {
+        self.push(Op::Ldx, dst, base, 0, off)
+    }
+    pub fn std_(&mut self, src: u8, off: i64) -> &mut Self {
+        self.push(Op::Std, src, 0, 0, off)
+    }
+    pub fn stx(&mut self, src: u8, base: u8, off: i64) -> &mut Self {
+        self.push(Op::Stx, src, base, 0, off)
+    }
+    pub fn spl(&mut self, dst: u8, off: i64) -> &mut Self {
+        self.push(Op::Spl, dst, 0, 0, off)
+    }
+    pub fn splx(&mut self, dst: u8, base: u8, off: i64) -> &mut Self {
+        self.push(Op::Splx, dst, base, 0, off)
+    }
+    pub fn sps(&mut self, src: u8, off: i64) -> &mut Self {
+        self.push(Op::Sps, src, 0, 0, off)
+    }
+    pub fn spsx(&mut self, src: u8, base: u8, off: i64) -> &mut Self {
+        self.push(Op::Spsx, src, base, 0, off)
+    }
+
+    // -- moves / ALU ---------------------------------------------------------
+    pub fn mov(&mut self, dst: u8, src: u8) -> &mut Self {
+        self.push(Op::Mov, dst, src, 0, 0)
+    }
+    pub fn movi(&mut self, dst: u8, imm: i64) -> &mut Self {
+        self.push(Op::Movi, dst, 0, 0, imm)
+    }
+    pub fn add(&mut self, dst: u8, x: u8, y: u8) -> &mut Self {
+        self.push(Op::Add, dst, x, y, 0)
+    }
+    pub fn sub(&mut self, dst: u8, x: u8, y: u8) -> &mut Self {
+        self.push(Op::Sub, dst, x, y, 0)
+    }
+    pub fn mul(&mut self, dst: u8, x: u8, y: u8) -> &mut Self {
+        self.push(Op::Mul, dst, x, y, 0)
+    }
+    pub fn div(&mut self, dst: u8, x: u8, y: u8) -> &mut Self {
+        self.push(Op::Div, dst, x, y, 0)
+    }
+    pub fn and(&mut self, dst: u8, x: u8, y: u8) -> &mut Self {
+        self.push(Op::And, dst, x, y, 0)
+    }
+    pub fn or(&mut self, dst: u8, x: u8, y: u8) -> &mut Self {
+        self.push(Op::Or, dst, x, y, 0)
+    }
+    pub fn xor(&mut self, dst: u8, x: u8, y: u8) -> &mut Self {
+        self.push(Op::Xor, dst, x, y, 0)
+    }
+    pub fn not(&mut self, dst: u8, src: u8) -> &mut Self {
+        self.push(Op::Not, dst, src, 0, 0)
+    }
+    pub fn shl(&mut self, dst: u8, src: u8, sh: i64) -> &mut Self {
+        self.push(Op::Shl, dst, src, 0, sh)
+    }
+    pub fn shr(&mut self, dst: u8, src: u8, sh: i64) -> &mut Self {
+        self.push(Op::Shr, dst, src, 0, sh)
+    }
+    pub fn addi(&mut self, dst: u8, src: u8, imm: i64) -> &mut Self {
+        self.push(Op::Addi, dst, src, 0, imm)
+    }
+
+    // -- control -----------------------------------------------------------
+    pub fn jeq(&mut self, x: u8, y: u8, l: Label) -> &mut Self {
+        self.push_jump(Op::Jeq, x, y, l)
+    }
+    pub fn jne(&mut self, x: u8, y: u8, l: Label) -> &mut Self {
+        self.push_jump(Op::Jne, x, y, l)
+    }
+    pub fn jlt(&mut self, x: u8, y: u8, l: Label) -> &mut Self {
+        self.push_jump(Op::Jlt, x, y, l)
+    }
+    pub fn jle(&mut self, x: u8, y: u8, l: Label) -> &mut Self {
+        self.push_jump(Op::Jle, x, y, l)
+    }
+    pub fn jgt(&mut self, x: u8, y: u8, l: Label) -> &mut Self {
+        self.push_jump(Op::Jgt, x, y, l)
+    }
+    pub fn jge(&mut self, x: u8, y: u8, l: Label) -> &mut Self {
+        self.push_jump(Op::Jge, x, y, l)
+    }
+    pub fn jmp(&mut self, l: Label) -> &mut Self {
+        self.push_jump(Op::Jmp, 0, 0, l)
+    }
+    pub fn next(&mut self) -> &mut Self {
+        self.push(Op::Next, 0, 0, 0, 0)
+    }
+    pub fn ret(&mut self) -> &mut Self {
+        self.push(Op::Ret, 0, 0, 0, 0)
+    }
+    pub fn trap(&mut self) -> &mut Self {
+        self.push(Op::Trap, 0, 0, 0, 0)
+    }
+
+    /// Resolve labels, build, verify.
+    pub fn finish(mut self, load_words: u8) -> Result<Program, VerifyError> {
+        for (idx, l) in std::mem::take(&mut self.fixups) {
+            let target = self.labels[l.0]
+                .unwrap_or_else(|| panic!("label {l:?} never bound"));
+            self.instrs[idx].imm = target as i64;
+        }
+        let p = Program::new(self.instrs, load_words);
+        verify(&p)?;
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_label_resolution() {
+        let mut a = Asm::new();
+        let found = a.label();
+        let done = a.label();
+        a.spl(1, 0);
+        a.ldd(2, 0);
+        a.jeq(1, 2, found);
+        a.movi(3, 0);
+        a.jmp(done);
+        a.bind(found);
+        a.movi(3, 1);
+        a.bind(done);
+        a.sps(3, 1);
+        a.ret();
+        let p = a.finish(3).unwrap();
+        assert_eq!(p.instrs[2].imm, 5); // jeq -> bind(found)
+        assert_eq!(p.instrs[4].imm, 6); // jmp -> bind(done)
+    }
+
+    #[test]
+    fn finish_runs_verifier() {
+        let mut a = Asm::new();
+        a.movi(1, 5);
+        // no terminal:
+        let err = a.finish(1).unwrap_err();
+        assert_eq!(err, VerifyError::NonTerminalTail);
+    }
+
+    #[test]
+    #[should_panic(expected = "never bound")]
+    fn unbound_label_panics() {
+        let mut a = Asm::new();
+        let l = a.label();
+        a.jmp(l);
+        a.ret();
+        let _ = a.finish(1);
+    }
+
+    #[test]
+    fn backward_label_rejected_by_verifier() {
+        let mut a = Asm::new();
+        let back = a.label();
+        a.bind(back);
+        a.movi(1, 0);
+        a.jmp(back);
+        a.ret();
+        assert!(a.finish(1).is_err());
+    }
+}

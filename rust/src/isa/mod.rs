@@ -1,0 +1,61 @@
+//! PULSE instruction set architecture (paper §4.1, Table 2).
+//!
+//! A stripped-down RISC ISA with only the operations needed for
+//! memory-centric pointer traversals: loads/stores against the per-
+//! iteration 256 B `data` window and the 256 B `scratch_pad`, ALU ops,
+//! register moves, *forward-only* conditional jumps (eBPF-style), and the
+//! terminals `NEXT_ITER` / `RETURN` / `TRAP`.
+//!
+//! This module is the Rust-side single source of truth; the Python mirror
+//! lives in `python/compile/kernels/isa.py` and the two are cross-checked
+//! by `rust/tests/integration_runtime.rs` (native interpreter vs the AOT
+//! XLA artifact) and the pytest suite (Pallas kernel vs oracle).
+
+pub mod asm;
+pub mod cost;
+pub mod op;
+pub mod program;
+pub mod verify;
+
+pub use asm::Asm;
+pub use cost::{CostModel, IterCost};
+pub use op::{Instr, Op};
+pub use program::{Program, ProgramId};
+pub use verify::{verify, VerifyError};
+
+/// Number of general-purpose 64-bit registers. `r0` is `cur_ptr`.
+pub const NREG: usize = 16;
+/// Scratchpad size in 8-byte words (256 B, paper §3).
+pub const SP_WORDS: usize = 32;
+/// Data window size in 8-byte words (256 B aggregated LOAD, paper §4.1).
+pub const DATA_WORDS: usize = 32;
+/// Maximum instructions per iteration (bounded computation, paper §3).
+pub const MAX_INSTRS: usize = 64;
+
+/// Register index conventions shared with the compiler + Python mirror.
+pub const R_CUR: u8 = 0;
+
+/// Lane status after a logic-pipeline pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(i32)]
+pub enum Status {
+    /// Still executing — never escapes a verified program's pass.
+    Running = 0,
+    /// Iteration finished; `r0` holds the next `cur_ptr`.
+    NextIter = 1,
+    /// Traversal finished; the scratchpad is the result.
+    Return = 2,
+    /// Fault (div-by-zero, window OOB, explicit TRAP, runaway pc).
+    Trap = 3,
+}
+
+impl Status {
+    pub fn from_i32(v: i32) -> Status {
+        match v {
+            0 => Status::Running,
+            1 => Status::NextIter,
+            2 => Status::Return,
+            _ => Status::Trap,
+        }
+    }
+}

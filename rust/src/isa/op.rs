@@ -1,0 +1,219 @@
+//! Opcodes + instruction encoding.
+
+/// PULSE opcode (paper Table 2, adapted restricted RISC subset).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Op {
+    Nop = 0,
+    /// `r[a] = data[imm]` — static word offset within the data window.
+    Ldd = 1,
+    /// `r[a] = data[r[b] + imm]` — dynamic; OOB traps.
+    Ldx = 2,
+    /// `data[imm] = r[a]`.
+    Std = 3,
+    /// `data[r[b] + imm] = r[a]` — dynamic; OOB traps.
+    Stx = 4,
+    /// `r[a] = sp[imm]`.
+    Spl = 5,
+    /// `r[a] = sp[r[b] + imm]` — dynamic; OOB traps.
+    Splx = 6,
+    /// `sp[imm] = r[a]`.
+    Sps = 7,
+    /// `sp[r[b] + imm] = r[a]` — dynamic; OOB traps.
+    Spsx = 8,
+    /// `r[a] = r[b]`.
+    Mov = 9,
+    /// `r[a] = imm`.
+    Movi = 10,
+    Add = 11,
+    Sub = 12,
+    Mul = 13,
+    /// Truncated signed division; divisor 0 traps; MIN/-1 wraps.
+    Div = 14,
+    And = 15,
+    Or = 16,
+    Xor = 17,
+    /// `r[a] = !r[b]` (bitwise).
+    Not = 18,
+    /// `r[a] = r[b] << (imm & 63)`.
+    Shl = 19,
+    /// `r[a] = ((u64) r[b]) >> (imm & 63)` (logical).
+    Shr = 20,
+    /// `r[a] = r[b] + imm`.
+    Addi = 21,
+    /// Forward conditional jumps: `if cmp(r[a], r[b]) pc = imm`.
+    Jeq = 22,
+    Jne = 23,
+    Jlt = 24,
+    Jle = 25,
+    Jgt = 26,
+    Jge = 27,
+    /// Unconditional forward jump.
+    Jmp = 28,
+    /// End of iteration; `r0` holds the next `cur_ptr`.
+    Next = 29,
+    /// End of traversal; scratchpad is the result.
+    Ret = 30,
+    /// Explicit fault.
+    Trap = 31,
+}
+
+pub const N_OPCODES: u8 = 32;
+
+impl Op {
+    pub fn from_u8(v: u8) -> Option<Op> {
+        if v < N_OPCODES {
+            // SAFETY: Op is repr(u8) with contiguous discriminants 0..32.
+            Some(unsafe { std::mem::transmute::<u8, Op>(v) })
+        } else {
+            None
+        }
+    }
+
+    pub fn is_jump(self) -> bool {
+        matches!(
+            self,
+            Op::Jeq | Op::Jne | Op::Jlt | Op::Jle | Op::Jgt | Op::Jge | Op::Jmp
+        )
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, Op::Next | Op::Ret | Op::Trap)
+    }
+
+    /// Whether this op touches the data window (used by the cost model:
+    /// these are the "memory" instructions fused into the aggregated
+    /// LOAD, paper §4.1).
+    pub fn touches_data(self) -> bool {
+        matches!(self, Op::Ldd | Op::Ldx | Op::Std | Op::Stx)
+    }
+
+    pub fn uses_a(self) -> bool {
+        !matches!(self, Op::Nop | Op::Jmp | Op::Next | Op::Ret | Op::Trap)
+    }
+
+    pub fn uses_b(self) -> bool {
+        matches!(
+            self,
+            Op::Ldx
+                | Op::Stx
+                | Op::Splx
+                | Op::Spsx
+                | Op::Mov
+                | Op::Add
+                | Op::Sub
+                | Op::Mul
+                | Op::Div
+                | Op::And
+                | Op::Or
+                | Op::Xor
+                | Op::Not
+                | Op::Shl
+                | Op::Shr
+                | Op::Addi
+                | Op::Jeq
+                | Op::Jne
+                | Op::Jlt
+                | Op::Jle
+                | Op::Jgt
+                | Op::Jge
+        )
+    }
+
+    pub fn uses_c(self) -> bool {
+        matches!(
+            self,
+            Op::Add | Op::Sub | Op::Mul | Op::Div | Op::And | Op::Or | Op::Xor
+        )
+    }
+}
+
+/// One instruction. 16-byte wire encoding: `op,a,b,c` bytes, 4 pad
+/// bytes, then `imm` as little-endian i64.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instr {
+    pub op: Op,
+    pub a: u8,
+    pub b: u8,
+    pub c: u8,
+    pub imm: i64,
+}
+
+impl Instr {
+    pub const WIRE_SIZE: usize = 16;
+
+    pub fn new(op: Op, a: u8, b: u8, c: u8, imm: i64) -> Self {
+        Self { op, a, b, c, imm }
+    }
+
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.push(self.op as u8);
+        out.push(self.a);
+        out.push(self.b);
+        out.push(self.c);
+        out.extend_from_slice(&[0u8; 4]);
+        out.extend_from_slice(&self.imm.to_le_bytes());
+    }
+
+    pub fn decode(buf: &[u8]) -> Option<Instr> {
+        if buf.len() < Self::WIRE_SIZE {
+            return None;
+        }
+        let op = Op::from_u8(buf[0])?;
+        let imm = i64::from_le_bytes(buf[8..16].try_into().ok()?);
+        Some(Instr { op, a: buf[1], b: buf[2], c: buf[3], imm })
+    }
+}
+
+impl std::fmt::Display for Instr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:?} a={} b={} c={} imm={}",
+            self.op, self.a, self.b, self.c, self.imm
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_round_trip() {
+        for v in 0..N_OPCODES {
+            let op = Op::from_u8(v).unwrap();
+            assert_eq!(op as u8, v);
+        }
+        assert!(Op::from_u8(N_OPCODES).is_none());
+        assert!(Op::from_u8(255).is_none());
+    }
+
+    #[test]
+    fn instr_wire_round_trip() {
+        let i = Instr::new(Op::Addi, 3, 7, 0, -1234567890123);
+        let mut buf = Vec::new();
+        i.encode(&mut buf);
+        assert_eq!(buf.len(), Instr::WIRE_SIZE);
+        assert_eq!(Instr::decode(&buf), Some(i));
+    }
+
+    #[test]
+    fn decode_rejects_short_and_bad_opcode() {
+        assert!(Instr::decode(&[0u8; 8]).is_none());
+        let mut buf = vec![200u8; 16];
+        buf[0] = 200;
+        assert!(Instr::decode(&buf).is_none());
+    }
+
+    #[test]
+    fn classification() {
+        assert!(Op::Jeq.is_jump());
+        assert!(!Op::Add.is_jump());
+        assert!(Op::Ret.is_terminal());
+        assert!(Op::Ldx.touches_data());
+        assert!(!Op::Spl.touches_data());
+        assert!(Op::Add.uses_c());
+        assert!(!Op::Addi.uses_c());
+    }
+}

@@ -1,0 +1,200 @@
+//! Program container + wire encoding.
+//!
+//! A `Program` is the unit shipped inside every offloaded request (paper
+//! §4.1: the dispatch engine "encapsulates the ISA instructions (code)
+//! along with the initial value of cur_ptr and scratch_pad into a network
+//! request"). Requests and responses carry the same format so a traversal
+//! can be continued on any memory node (paper §5).
+
+use super::op::{Instr, Op};
+use super::{DATA_WORDS, MAX_INSTRS};
+
+/// Stable identity of a verified program. Memory-node accelerators cache
+/// decoded programs by id so repeated requests skip re-decoding (and the
+/// XLA engine batches lanes of the same program).
+pub type ProgramId = u64;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+    /// Words of the data window the aggregated LOAD must fetch
+    /// (1..=DATA_WORDS). Computed by the compiler's load-aggregation
+    /// analysis (paper §4.1).
+    pub load_words: u8,
+    /// Whether any instruction stores to the data window — if so the
+    /// memory pipeline writes the window back at iteration end.
+    pub writes_data: bool,
+    id: ProgramId,
+}
+
+impl Program {
+    /// Build from parts; callers should run `verify` first (the
+    /// constructor only computes derived fields).
+    pub fn new(instrs: Vec<Instr>, load_words: u8) -> Self {
+        let writes_data = instrs
+            .iter()
+            .any(|i| matches!(i.op, Op::Std | Op::Stx));
+        let id = Self::fingerprint(&instrs, load_words);
+        Self { instrs, load_words, writes_data, id }
+    }
+
+    pub fn id(&self) -> ProgramId {
+        self.id
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// FNV-1a over the canonical encoding — deterministic across nodes.
+    fn fingerprint(instrs: &[Instr], load_words: u8) -> ProgramId {
+        let mut h: u64 = 0xCBF29CE484222325;
+        let mut push = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001B3);
+        };
+        push(load_words);
+        let mut buf = Vec::with_capacity(Instr::WIRE_SIZE);
+        for i in instrs {
+            buf.clear();
+            i.encode(&mut buf);
+            for &b in &buf {
+                push(b);
+            }
+        }
+        h
+    }
+
+    /// Wire encoding: `[n_instrs u16][load_words u8][flags u8]` then
+    /// `n` 16-byte instructions.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(4 + self.instrs.len() * Instr::WIRE_SIZE);
+        out.extend_from_slice(&(self.instrs.len() as u16).to_le_bytes());
+        out.push(self.load_words);
+        out.push(self.writes_data as u8);
+        for i in &self.instrs {
+            i.encode(&mut out);
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Option<Program> {
+        if buf.len() < 4 {
+            return None;
+        }
+        let n = u16::from_le_bytes([buf[0], buf[1]]) as usize;
+        let load_words = buf[2];
+        if n == 0 || n > MAX_INSTRS || load_words as usize > DATA_WORDS {
+            return None;
+        }
+        if buf.len() < 4 + n * Instr::WIRE_SIZE {
+            return None;
+        }
+        let mut instrs = Vec::with_capacity(n);
+        for k in 0..n {
+            let off = 4 + k * Instr::WIRE_SIZE;
+            instrs.push(Instr::decode(&buf[off..])?);
+        }
+        Some(Program::new(instrs, load_words))
+    }
+
+    pub fn wire_size(&self) -> usize {
+        4 + self.instrs.len() * Instr::WIRE_SIZE
+    }
+
+    /// Dense form consumed by the XLA engine: `[MAX_INSTRS*4]` i32 opcode
+    /// fields (TRAP-padded) + `[MAX_INSTRS]` i64 immediates — exactly the
+    /// arrays `pack_program` produces on the Python side.
+    pub fn pack(&self) -> (Vec<i32>, Vec<i64>) {
+        let mut ops = vec![0i32; MAX_INSTRS * 4];
+        let mut imm = vec![0i64; MAX_INSTRS];
+        for slot in 0..MAX_INSTRS {
+            ops[slot * 4] = Op::Trap as i32;
+        }
+        for (k, i) in self.instrs.iter().enumerate() {
+            ops[k * 4] = i.op as i32;
+            ops[k * 4 + 1] = i.a as i32;
+            ops[k * 4 + 2] = i.b as i32;
+            ops[k * 4 + 3] = i.c as i32;
+            imm[k] = i.imm;
+        }
+        (ops, imm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Program {
+        Program::new(
+            vec![
+                Instr::new(Op::Movi, 1, 0, 0, 42),
+                Instr::new(Op::Sps, 1, 0, 0, 0),
+                Instr::new(Op::Ret, 0, 0, 0, 0),
+            ],
+            3,
+        )
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let p = sample();
+        let buf = p.encode();
+        assert_eq!(buf.len(), p.wire_size());
+        let q = Program::decode(&buf).unwrap();
+        assert_eq!(p, q);
+        assert_eq!(p.id(), q.id());
+    }
+
+    #[test]
+    fn id_is_content_addressed() {
+        let p = sample();
+        let mut other = sample();
+        assert_eq!(p.id(), other.id());
+        other.instrs[0].imm = 43;
+        let other = Program::new(other.instrs, other.load_words);
+        assert_ne!(p.id(), other.id());
+    }
+
+    #[test]
+    fn writes_data_detected() {
+        assert!(!sample().writes_data);
+        let p = Program::new(
+            vec![
+                Instr::new(Op::Movi, 1, 0, 0, 1),
+                Instr::new(Op::Std, 1, 0, 0, 0),
+                Instr::new(Op::Ret, 0, 0, 0, 0),
+            ],
+            1,
+        );
+        assert!(p.writes_data);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Program::decode(&[]).is_none());
+        assert!(Program::decode(&[0, 0, 1, 0]).is_none()); // n == 0
+        let p = sample();
+        let mut buf = p.encode();
+        buf.truncate(buf.len() - 1);
+        assert!(Program::decode(&buf).is_none());
+    }
+
+    #[test]
+    fn pack_pads_with_trap() {
+        let p = sample();
+        let (ops, imm) = p.pack();
+        assert_eq!(ops.len(), MAX_INSTRS * 4);
+        assert_eq!(imm.len(), MAX_INSTRS);
+        assert_eq!(ops[0], Op::Movi as i32);
+        assert_eq!(imm[0], 42);
+        assert_eq!(ops[3 * 4], Op::Trap as i32);
+        assert_eq!(ops[(MAX_INSTRS - 1) * 4], Op::Trap as i32);
+    }
+}

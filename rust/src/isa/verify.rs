@@ -1,0 +1,238 @@
+//! Program verifier (paper §4.1): forward-only jumps, bounded length,
+//! in-window static offsets, register bounds, terminal tail.
+//!
+//! The forward-jump rule is what bounds per-iteration execution — any
+//! verified program executes at most `n_instrs` dynamic steps, which both
+//! the accelerator's cost model (t_c) and the lock-step XLA engine rely
+//! on. Mirrors `python/compile/kernels/isa.py::verify`.
+
+use super::op::{Instr, Op};
+use super::program::Program;
+use super::{DATA_WORDS, MAX_INSTRS, NREG, SP_WORDS};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VerifyError {
+    Empty,
+    TooLong { n: usize },
+    BadRegister { pc: usize, reg: u8 },
+    StaticOffsetOob { pc: usize, imm: i64, window: usize },
+    NonForwardJump { pc: usize, target: i64 },
+    NonTerminalTail,
+    LoadWordsOutOfRange { load_words: u8 },
+}
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VerifyError::Empty => write!(f, "empty program"),
+            VerifyError::TooLong { n } => {
+                write!(f, "program too long: {n} > {MAX_INSTRS}")
+            }
+            VerifyError::BadRegister { pc, reg } => {
+                write!(f, "pc={pc}: register {reg} out of range")
+            }
+            VerifyError::StaticOffsetOob { pc, imm, window } => {
+                write!(f, "pc={pc}: static offset {imm} outside window {window}")
+            }
+            VerifyError::NonForwardJump { pc, target } => {
+                write!(f, "pc={pc}: jump target {target} not strictly forward")
+            }
+            VerifyError::NonTerminalTail => {
+                write!(f, "program does not end in NEXT/RET/TRAP")
+            }
+            VerifyError::LoadWordsOutOfRange { load_words } => {
+                write!(f, "load_words {load_words} outside 1..={DATA_WORDS}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Verify a program; returns `Ok(())` or the first violation.
+pub fn verify(p: &Program) -> Result<(), VerifyError> {
+    let n = p.instrs.len();
+    if n == 0 {
+        return Err(VerifyError::Empty);
+    }
+    if n > MAX_INSTRS {
+        return Err(VerifyError::TooLong { n });
+    }
+    if p.load_words == 0 || p.load_words as usize > DATA_WORDS {
+        return Err(VerifyError::LoadWordsOutOfRange {
+            load_words: p.load_words,
+        });
+    }
+    for (pc, i) in p.instrs.iter().enumerate() {
+        check_regs(pc, i)?;
+        match i.op {
+            Op::Ldd | Op::Std => {
+                if i.imm < 0 || i.imm >= DATA_WORDS as i64 {
+                    return Err(VerifyError::StaticOffsetOob {
+                        pc,
+                        imm: i.imm,
+                        window: DATA_WORDS,
+                    });
+                }
+            }
+            Op::Spl | Op::Sps => {
+                if i.imm < 0 || i.imm >= SP_WORDS as i64 {
+                    return Err(VerifyError::StaticOffsetOob {
+                        pc,
+                        imm: i.imm,
+                        window: SP_WORDS,
+                    });
+                }
+            }
+            op if op.is_jump() => {
+                // Target n (one past the end) is allowed and traps at
+                // runtime — still strictly forward.
+                if i.imm <= pc as i64 || i.imm > n as i64 {
+                    return Err(VerifyError::NonForwardJump {
+                        pc,
+                        target: i.imm,
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    if !p.instrs[n - 1].op.is_terminal() {
+        return Err(VerifyError::NonTerminalTail);
+    }
+    Ok(())
+}
+
+fn check_regs(pc: usize, i: &Instr) -> Result<(), VerifyError> {
+    for (reg, used) in [
+        (i.a, i.op.uses_a()),
+        (i.b, i.op.uses_b()),
+        (i.c, i.op.uses_c()),
+    ] {
+        if used && reg as usize >= NREG {
+            return Err(VerifyError::BadRegister { pc, reg });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prog(instrs: Vec<Instr>) -> Program {
+        Program::new(instrs, 1)
+    }
+
+    #[test]
+    fn accepts_minimal_ret() {
+        let p = prog(vec![Instr::new(Op::Ret, 0, 0, 0, 0)]);
+        assert!(verify(&p).is_ok());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert_eq!(verify(&prog(vec![])), Err(VerifyError::Empty));
+    }
+
+    #[test]
+    fn rejects_too_long() {
+        let mut v = vec![Instr::new(Op::Nop, 0, 0, 0, 0); MAX_INSTRS];
+        v.push(Instr::new(Op::Ret, 0, 0, 0, 0));
+        assert!(matches!(
+            verify(&prog(v)),
+            Err(VerifyError::TooLong { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_backward_and_self_jump() {
+        let p = prog(vec![
+            Instr::new(Op::Nop, 0, 0, 0, 0),
+            Instr::new(Op::Jmp, 0, 0, 0, 0),
+            Instr::new(Op::Ret, 0, 0, 0, 0),
+        ]);
+        assert!(matches!(
+            verify(&p),
+            Err(VerifyError::NonForwardJump { pc: 1, .. })
+        ));
+        let p = prog(vec![
+            Instr::new(Op::Jmp, 0, 0, 0, 0),
+            Instr::new(Op::Ret, 0, 0, 0, 0),
+        ]);
+        assert!(matches!(
+            verify(&p),
+            Err(VerifyError::NonForwardJump { pc: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn allows_jump_one_past_end() {
+        let p = prog(vec![
+            Instr::new(Op::Jmp, 0, 0, 0, 2),
+            Instr::new(Op::Ret, 0, 0, 0, 0),
+        ]);
+        assert!(verify(&p).is_ok());
+    }
+
+    #[test]
+    fn rejects_register_oob() {
+        let p = prog(vec![
+            Instr::new(Op::Movi, 16, 0, 0, 1),
+            Instr::new(Op::Ret, 0, 0, 0, 0),
+        ]);
+        assert!(matches!(
+            verify(&p),
+            Err(VerifyError::BadRegister { reg: 16, .. })
+        ));
+        // unused fields may hold anything
+        let p = prog(vec![
+            Instr::new(Op::Movi, 1, 255, 255, 1),
+            Instr::new(Op::Ret, 0, 0, 0, 0),
+        ]);
+        assert!(verify(&p).is_ok());
+    }
+
+    #[test]
+    fn rejects_static_oob() {
+        let p = prog(vec![
+            Instr::new(Op::Ldd, 1, 0, 0, DATA_WORDS as i64),
+            Instr::new(Op::Ret, 0, 0, 0, 0),
+        ]);
+        assert!(matches!(
+            verify(&p),
+            Err(VerifyError::StaticOffsetOob { .. })
+        ));
+        let p = prog(vec![
+            Instr::new(Op::Sps, 1, 0, 0, -1),
+            Instr::new(Op::Ret, 0, 0, 0, 0),
+        ]);
+        assert!(matches!(
+            verify(&p),
+            Err(VerifyError::StaticOffsetOob { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_nonterminal_tail() {
+        let p = prog(vec![Instr::new(Op::Movi, 1, 0, 0, 1)]);
+        assert_eq!(verify(&p), Err(VerifyError::NonTerminalTail));
+    }
+
+    #[test]
+    fn rejects_bad_load_words() {
+        let p = Program::new(vec![Instr::new(Op::Ret, 0, 0, 0, 0)], 0);
+        assert!(matches!(
+            verify(&p),
+            Err(VerifyError::LoadWordsOutOfRange { .. })
+        ));
+        let p = Program::new(
+            vec![Instr::new(Op::Ret, 0, 0, 0, 0)],
+            DATA_WORDS as u8 + 1,
+        );
+        assert!(matches!(
+            verify(&p),
+            Err(VerifyError::LoadWordsOutOfRange { .. })
+        ));
+    }
+}

@@ -1,0 +1,25 @@
+//! PULSE: distributed pointer-traversal framework for rack-scale
+//! disaggregated memory — reproduction of Tang et al. (ASPLOS 2025).
+//!
+//! See DESIGN.md for the architecture and the hardware substitution map.
+
+pub mod interp;
+pub mod isa;
+pub mod mem;
+pub mod net;
+pub mod sim;
+pub mod util;
+pub mod runtime;
+pub mod testgen;
+pub mod accel;
+pub mod switch;
+pub mod compiler;
+pub mod dispatch;
+pub mod rack;
+pub mod ds;
+pub mod apps;
+pub mod workloads;
+pub mod baselines;
+pub mod cxl;
+pub mod energy;
+pub mod bench_support;

@@ -1,0 +1,194 @@
+//! `pulse` — leader binary / CLI for the PULSE reproduction.
+//!
+//! Subcommands:
+//!   serve    — closed-loop serving of an app workload on a simulated
+//!              rack, printing latency/throughput (the Fig. 7 row for
+//!              one configuration)
+//!   inspect  — compile a named data-structure iterator and print its
+//!              PULSE-ISA listing + cost-model verdict
+//!   selftest — verify the AOT XLA artifacts against the native
+//!              interpreter (three-layer contract)
+//!
+//! Examples:
+//!   pulse serve --app webservice --nodes 4 --ops 2000 --conc 32
+//!   pulse serve --app btrdb --window-s 4 --nodes 2
+//!   pulse inspect --iter bplustree-get
+//!   pulse selftest
+
+use pulse::apps::{BtrDbApp, WebServiceApp, WiredTigerApp};
+use pulse::rack::{Rack, RackConfig};
+use pulse::util::cli::Args;
+use pulse::workloads::{YcsbSpec, YcsbWorkload};
+
+const SEC: i64 = 1_000_000_000;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    match args.subcommand() {
+        Some("serve") => serve(&args),
+        Some("inspect") => inspect(&args),
+        Some("selftest") => selftest(),
+        _ => {
+            eprintln!(
+                "usage: pulse <serve|inspect|selftest> [--app webservice|\
+                 wiredtiger|btrdb] [--nodes N] [--ops N] [--conc N] \
+                 [--ycsb A|B|C|E] [--window-s S] [--uniform] \
+                 [--granularity BYTES] [--loss P] [--no-in-network] \
+                 [--iter NAME]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn rack_from(args: &Args) -> Rack {
+    let mut cfg = RackConfig {
+        nodes: args.usize_or("nodes", 4),
+        node_capacity: args.u64_or("node-capacity", 1 << 30),
+        granularity: args.u64_or("granularity", 8 << 20),
+        loss: args.f64_or("loss", 0.0),
+        in_network_routing: !args.flag("no-in-network"),
+        seed: args.u64_or("seed", 42),
+        ..Default::default()
+    };
+    cfg.dispatch.cache_bytes = args.u64_or("cache-bytes", 0);
+    Rack::new(cfg)
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let app_name = args.str_or("app", "webservice");
+    let ops_n = args.u64_or("ops", 2_000);
+    let conc = args.usize_or("conc", 32);
+    let zipf = !args.flag("uniform");
+    let seed = args.u64_or("seed", 42);
+    let mut rack = rack_from(args);
+
+    let report = match app_name.as_str() {
+        "webservice" => {
+            let users = args.u64_or("keys", 5_000);
+            let spec = match args.str_or("ycsb", "B").as_str() {
+                "A" => YcsbSpec::A,
+                "C" => YcsbSpec::C,
+                _ => YcsbSpec::B,
+            };
+            let app = WebServiceApp::build(&mut rack, users, seed);
+            let w = YcsbWorkload::new(spec, users, zipf, seed ^ 1);
+            let mut ops = app.op_stream(w, ops_n);
+            rack.serve(move |i| ops(i), conc)
+        }
+        "wiredtiger" => {
+            let keys = args.u64_or("keys", 100_000);
+            let app = WiredTigerApp::build(&mut rack, keys, seed);
+            let w = YcsbWorkload::new(YcsbSpec::E, keys, zipf, seed ^ 1)
+                .with_max_scan(args.usize_or("max-scan", 100));
+            let mut ops = app.op_stream(w, ops_n);
+            rack.serve(move |i| ops(i), conc)
+        }
+        "btrdb" => {
+            let samples = args.usize_or("keys", 60_000);
+            let app = BtrDbApp::build(&mut rack, samples, seed);
+            let win = args.u64_or("window-s", 1) as i64 * SEC;
+            let mut ops = app.op_stream(win, ops_n, seed ^ 1);
+            rack.serve(move |i| ops(i), conc)
+        }
+        other => anyhow::bail!("unknown app {other:?}"),
+    };
+
+    println!(
+        "app={app_name} nodes={} ops={} conc={conc}",
+        rack.cfg.nodes, report.completed
+    );
+    println!(
+        "latency: p50={:.1}us p99={:.1}us mean={:.1}us",
+        report.latency.p50() as f64 / 1e3,
+        report.latency.p99() as f64 / 1e3,
+        report.latency.mean() / 1e3
+    );
+    println!(
+        "throughput: {:.0} ops/s  (makespan {:.2} ms virtual, {:.0} ms wall)",
+        report.tput_ops_per_s,
+        report.makespan_ns as f64 / 1e6,
+        report.wall_ms
+    );
+    println!(
+        "iters/op={:.1} cross-node-reqs={} retransmits={} traps={}",
+        report.total_iters as f64 / report.completed.max(1) as f64,
+        report.cross_node_requests,
+        report.retransmits,
+        report.trapped
+    );
+    println!(
+        "switch: routed={} reroutes={}",
+        rack.switch.stats.routed_requests, rack.switch.stats.reroutes
+    );
+    Ok(())
+}
+
+fn inspect(args: &Args) -> anyhow::Result<()> {
+    let name = args.str_or("iter", "list-find");
+    let iter = match name.as_str() {
+        "list-find" => pulse::ds::list::find_iter(),
+        "list-sum" => pulse::ds::list::sum_iter(),
+        "chain-find" => pulse::ds::hashmap::chain_find_iter(),
+        "chain-update" => pulse::ds::hashmap::chain_update_iter(),
+        "bst-lower-bound" => pulse::ds::bst::lower_bound_iter(),
+        "btree-locate" => pulse::ds::btree::locate_iter(),
+        "bplustree-get" => pulse::ds::bplustree::get_iter(),
+        "bplustree-scan" => pulse::ds::bplustree::scan_iter(),
+        "bplustree-sum" => pulse::ds::bplustree::sum_iter(),
+        other => anyhow::bail!(
+            "unknown iterator {other:?} (try list-find, chain-find, \
+             bst-lower-bound, btree-locate, bplustree-get, \
+             bplustree-scan, bplustree-sum)"
+        ),
+    };
+    println!(
+        "{name}: {} instructions, loads {} words/iteration{}",
+        iter.program.len(),
+        iter.program.load_words,
+        if iter.program.writes_data { ", writes back" } else { "" }
+    );
+    println!(
+        "t_c={:.0}ns t_d={:.0}ns ratio={:.2} -> {}",
+        iter.t_c_ns,
+        iter.t_d_ns,
+        iter.ratio(),
+        if iter.offloadable(0.75) {
+            "OFFLOAD (t_c <= 0.75 t_d)"
+        } else {
+            "CPU fallback"
+        }
+    );
+    for (pc, i) in iter.program.instrs.iter().enumerate() {
+        println!("  {pc:2}: {i}");
+    }
+    Ok(())
+}
+
+fn selftest() -> anyhow::Result<()> {
+    use pulse::interp::logic_pass;
+    use pulse::runtime::PjrtRuntime;
+    use pulse::util::prng::Rng;
+
+    let rt = PjrtRuntime::new(PjrtRuntime::default_dir())?;
+    let exe = rt.load_logic_step(32)?;
+    let mut rng = Rng::new(0xDEC0DE);
+    for case in 0..20 {
+        let p = pulse::testgen::random_verified_program(&mut rng, 24);
+        let mut xla: Vec<_> = (0..32)
+            .map(|_| pulse::testgen::random_workspace(&mut rng))
+            .collect();
+        let mut native = xla.clone();
+        let st = exe.run(&p, &mut xla)?;
+        for (i, w) in native.iter_mut().enumerate() {
+            let r = logic_pass(&p, w);
+            anyhow::ensure!(
+                st[i] == r.status,
+                "case {case} lane {i}: status diverged"
+            );
+        }
+        anyhow::ensure!(xla == native, "case {case}: workspace diverged");
+    }
+    println!("selftest OK: XLA artifact = native interpreter (20 cases x 32 lanes)");
+    Ok(())
+}

@@ -1,0 +1,349 @@
+//! Rack-wide allocator over the disaggregated address space.
+//!
+//! Carves the global VA space into *slabs* of a configurable granularity
+//! (the paper studies 2 MB .. 1 GB, §2.1 Fig. 2b) and places each slab on
+//! a memory node per policy:
+//!
+//! * `Contiguous` — range-partition: fill node 0's share, then node 1 …
+//!   (the switch map stays tiny; matches the paper's default §5 layout).
+//! * `RoundRobin` — uniform interleaving (glibc-like "uniform" policy in
+//!   Appendix C.2).
+//! * `Random` — random node per slab (the appendix's "random allocation"
+//!   that is 3.7–10.8× worse for distributed traversals).
+//!
+//! Objects are bump-allocated inside the current slab; an allocation
+//! never straddles a slab boundary (so a single object is always on one
+//! node — pointer *chains*, not objects, cross nodes).
+
+use super::translate::{Perms, RangeMap, RangeTable};
+use super::{GAddr, NodeId, VA_BASE};
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    Contiguous,
+    RoundRobin,
+    Random,
+}
+
+#[derive(Debug)]
+struct Slab {
+    base: GAddr,
+    #[allow(dead_code)] // kept for debugging/placement introspection
+    node: NodeId,
+    used: u64,
+}
+
+#[derive(Debug)]
+pub struct RackAllocator {
+    granularity: u64,
+    policy: AllocPolicy,
+    nodes: usize,
+    node_capacity: u64,
+    /// Bytes of slab space handed to each node.
+    node_used: Vec<u64>,
+    /// Next local DRAM offset per node.
+    node_local_off: Vec<u64>,
+    current: Option<Slab>,
+    /// per-node open slab for app-directed placement (`alloc_on`).
+    current_on: Vec<Option<Slab>>,
+    next_va: GAddr,
+    next_node_rr: usize,
+    rng: Rng,
+    /// Switch-level coarse map built as slabs are placed.
+    pub switch_map: RangeMap,
+    /// Per-node slab records for installing accelerator TCAM entries.
+    pub node_ranges: Vec<Vec<(GAddr, u64, u64)>>,
+    pub slabs_allocated: u64,
+}
+
+impl RackAllocator {
+    pub fn new(
+        nodes: usize,
+        node_capacity: u64,
+        granularity: u64,
+        policy: AllocPolicy,
+        seed: u64,
+    ) -> Self {
+        assert!(nodes > 0 && granularity > 0);
+        Self {
+            granularity,
+            policy,
+            nodes,
+            node_capacity,
+            node_used: vec![0; nodes],
+            node_local_off: vec![0; nodes],
+            current: None,
+            current_on: (0..nodes).map(|_| None).collect(),
+            next_va: VA_BASE,
+            next_node_rr: 0,
+            rng: Rng::with_stream(seed, 0x5EED_A110C),
+            switch_map: RangeMap::new(),
+            node_ranges: vec![Vec::new(); nodes],
+            slabs_allocated: 0,
+        }
+    }
+
+    pub fn granularity(&self) -> u64 {
+        self.granularity
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn node_used(&self, node: NodeId) -> u64 {
+        self.node_used[node as usize]
+    }
+
+    fn pick_node(&mut self) -> NodeId {
+        match self.policy {
+            AllocPolicy::Contiguous => {
+                // first node with spare capacity
+                for n in 0..self.nodes {
+                    if self.node_used[n] + self.granularity
+                        <= self.node_capacity
+                    {
+                        return n as NodeId;
+                    }
+                }
+                panic!("rack out of memory");
+            }
+            AllocPolicy::RoundRobin => {
+                for _ in 0..self.nodes {
+                    let n = self.next_node_rr % self.nodes;
+                    self.next_node_rr += 1;
+                    if self.node_used[n] + self.granularity
+                        <= self.node_capacity
+                    {
+                        return n as NodeId;
+                    }
+                }
+                panic!("rack out of memory");
+            }
+            AllocPolicy::Random => {
+                for _ in 0..64 {
+                    let n = self.rng.below(self.nodes as u64) as usize;
+                    if self.node_used[n] + self.granularity
+                        <= self.node_capacity
+                    {
+                        return n as NodeId;
+                    }
+                }
+                // fall back to first-fit
+                for n in 0..self.nodes {
+                    if self.node_used[n] + self.granularity
+                        <= self.node_capacity
+                    {
+                        return n as NodeId;
+                    }
+                }
+                panic!("rack out of memory");
+            }
+        }
+    }
+
+    fn new_slab(&mut self) -> Slab {
+        let node = self.pick_node();
+        let base = self.next_va;
+        self.next_va += self.granularity;
+        let local = self.node_local_off[node as usize];
+        self.node_local_off[node as usize] += self.granularity;
+        self.node_used[node as usize] += self.granularity;
+        self.switch_map.insert(base, self.granularity, node);
+        self.node_ranges[node as usize].push((
+            base,
+            self.granularity,
+            local,
+        ));
+        self.slabs_allocated += 1;
+        Slab { base, node, used: 0 }
+    }
+
+    /// Allocate `size` bytes (8 B aligned). Never straddles a slab.
+    pub fn alloc(&mut self, size: u64) -> GAddr {
+        let size = size.div_ceil(8) * 8;
+        assert!(
+            size <= self.granularity,
+            "object {size} larger than slab {}",
+            self.granularity
+        );
+        let need_new = match &self.current {
+            None => true,
+            Some(s) => s.used + size > self.granularity,
+        };
+        if need_new {
+            self.current = Some(self.new_slab());
+        }
+        let s = self.current.as_mut().unwrap();
+        let addr = s.base + s.used;
+        s.used += size;
+        addr
+    }
+
+    /// Allocate on a caller-chosen node (app-directed partitioned
+    /// allocation, Appendix C.2). Each node keeps its own open slab so
+    /// interleaved placements don't leak slab space.
+    pub fn alloc_on(&mut self, node: NodeId, size: u64) -> GAddr {
+        let size = size.div_ceil(8) * 8;
+        assert!(
+            size <= self.granularity,
+            "object {size} larger than slab {}",
+            self.granularity
+        );
+        let need_new = match &self.current_on[node as usize] {
+            Some(s) => s.used + size > self.granularity,
+            None => true,
+        };
+        if need_new {
+            assert!(
+                self.node_used[node as usize] + self.granularity
+                    <= self.node_capacity,
+                "node {node} out of memory"
+            );
+            let base = self.next_va;
+            self.next_va += self.granularity;
+            let local = self.node_local_off[node as usize];
+            self.node_local_off[node as usize] += self.granularity;
+            self.node_used[node as usize] += self.granularity;
+            self.switch_map.insert(base, self.granularity, node);
+            self.node_ranges[node as usize].push((
+                base,
+                self.granularity,
+                local,
+            ));
+            self.slabs_allocated += 1;
+            self.current_on[node as usize] =
+                Some(Slab { base, node, used: 0 });
+        }
+        let s = self.current_on[node as usize].as_mut().unwrap();
+        let addr = s.base + s.used;
+        s.used += size;
+        addr
+    }
+
+    /// Which node owns an address (via the coarse map).
+    pub fn owner(&self, addr: GAddr) -> Option<NodeId> {
+        self.switch_map.lookup(addr)
+    }
+
+    /// Install all placed ranges into per-node TCAM tables.
+    pub fn build_node_tables(&self, capacity: usize) -> Vec<RangeTable> {
+        (0..self.nodes)
+            .map(|n| {
+                let mut t = RangeTable::new(capacity);
+                for &(base, len, local) in &self.node_ranges[n] {
+                    t.insert(base, len, local, Perms::RW)
+                        .expect("TCAM capacity too small for workload");
+                }
+                t
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1 << 20;
+
+    #[test]
+    fn contiguous_fills_nodes_in_order() {
+        let mut a =
+            RackAllocator::new(4, 4 * MB, MB, AllocPolicy::Contiguous, 1);
+        let mut owners = Vec::new();
+        for _ in 0..16 {
+            let addr = a.alloc(MB); // one slab per alloc
+            owners.push(a.owner(addr).unwrap());
+        }
+        assert_eq!(owners[..4], [0, 0, 0, 0]);
+        assert_eq!(owners[4..8], [1, 1, 1, 1]);
+        assert_eq!(owners[12..16], [3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn round_robin_interleaves() {
+        let mut a =
+            RackAllocator::new(4, 64 * MB, MB, AllocPolicy::RoundRobin, 1);
+        let owners: Vec<_> = (0..8)
+            .map(|_| {
+                let addr = a.alloc(MB);
+                a.owner(addr).unwrap()
+            })
+            .collect();
+        assert_eq!(owners, [0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn random_spreads() {
+        let mut a =
+            RackAllocator::new(4, 1024 * MB, MB, AllocPolicy::Random, 42);
+        let mut counts = [0usize; 4];
+        for _ in 0..200 {
+            let addr = a.alloc(MB);
+            counts[a.owner(addr).unwrap() as usize] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 20, "skewed random placement {counts:?}");
+        }
+    }
+
+    #[test]
+    fn objects_do_not_straddle_slabs() {
+        let mut a =
+            RackAllocator::new(2, 16 * MB, MB, AllocPolicy::RoundRobin, 1);
+        let mut last_slab = u64::MAX;
+        for _ in 0..5000 {
+            let addr = a.alloc(612); // odd size, 8B-rounded
+            let slab = (addr - VA_BASE) / MB;
+            let end_slab = (addr - VA_BASE + 616 - 1) / MB;
+            assert_eq!(slab, end_slab, "object straddles slab");
+            last_slab = last_slab.min(slab);
+        }
+    }
+
+    #[test]
+    fn alignment_is_8b() {
+        let mut a =
+            RackAllocator::new(1, 16 * MB, MB, AllocPolicy::Contiguous, 1);
+        for sz in [1u64, 7, 8, 9, 24, 100] {
+            let addr = a.alloc(sz);
+            assert_eq!(addr % 8, 0, "size {sz} gave unaligned {addr:#x}");
+        }
+    }
+
+    #[test]
+    fn alloc_on_places_on_requested_node() {
+        let mut a =
+            RackAllocator::new(4, 64 * MB, MB, AllocPolicy::Contiguous, 1);
+        for node in [2u16, 0, 3, 1] {
+            let addr = a.alloc_on(node, 128);
+            assert_eq!(a.owner(addr), Some(node));
+        }
+    }
+
+    #[test]
+    fn node_tables_translate_allocated_addrs() {
+        let mut a =
+            RackAllocator::new(2, 16 * MB, MB, AllocPolicy::RoundRobin, 1);
+        let addrs: Vec<_> = (0..100).map(|_| a.alloc(4096)).collect();
+        let mut tables = a.build_node_tables(1024);
+        for addr in addrs {
+            let node = a.owner(addr).unwrap() as usize;
+            assert!(tables[node].translate(addr, 8, true).is_ok());
+            let other = 1 - node;
+            assert!(tables[other].translate(addr, 8, false).is_err());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of memory")]
+    fn capacity_exhaustion_panics() {
+        let mut a =
+            RackAllocator::new(1, 2 * MB, MB, AllocPolicy::Contiguous, 1);
+        for _ in 0..3 {
+            a.alloc(MB);
+        }
+    }
+}

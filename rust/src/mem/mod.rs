@@ -1,0 +1,27 @@
+//! Disaggregated memory substrate: per-node DRAM regions, range-based
+//! address translation (the accelerator's TCAM, paper §4.2), the coarse
+//! switch-level range map (paper §5 hierarchical translation), and the
+//! rack allocator with the paper's allocation policies/granularities
+//! (§2.1 Fig. 2b, Appendix C.2 "allocation policy").
+
+pub mod alloc;
+pub mod region;
+pub mod translate;
+
+pub use alloc::{AllocPolicy, RackAllocator};
+pub use region::Region;
+pub use translate::{Perms, RangeMap, RangeTable};
+
+/// Global virtual address in the rack-wide disaggregated address space.
+/// Address 0 is NULL by convention (list terminators etc.).
+pub type GAddr = u64;
+
+/// Memory node identifier.
+pub type NodeId = u16;
+
+/// First valid virtual address (keeps NULL and low sentinels distinct).
+pub const VA_BASE: GAddr = 0x1000_0000;
+
+/// All data-structure nodes are 8 B aligned; the ISA addresses the data
+/// window in 8 B words.
+pub const WORD: u64 = 8;

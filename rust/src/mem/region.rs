@@ -1,0 +1,149 @@
+//! A memory node's DRAM: flat byte region with word accessors and
+//! bandwidth counters.
+//!
+//! The region is allocated lazily (grows in 2 MB steps up to capacity) so
+//! tests can declare large node capacities without committing RSS.
+
+use super::WORD;
+
+#[derive(Debug)]
+pub struct Region {
+    bytes: Vec<u8>,
+    capacity: usize,
+    /// Bandwidth accounting (Appendix C.1 utilization figures).
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+const GROW_STEP: usize = 2 << 20;
+
+impl Region {
+    pub fn new(capacity: usize) -> Self {
+        Self { bytes: Vec::new(), capacity, bytes_read: 0, bytes_written: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn committed(&self) -> usize {
+        self.bytes.len()
+    }
+
+    fn ensure(&mut self, end: usize) {
+        assert!(
+            end <= self.capacity,
+            "region access at {end} beyond capacity {}",
+            self.capacity
+        );
+        if self.bytes.len() < end {
+            let new_len = end.div_ceil(GROW_STEP) * GROW_STEP;
+            self.bytes.resize(new_len.min(self.capacity), 0);
+        }
+    }
+
+    /// Read `n_words` 8 B words at byte offset `off` into `out`.
+    pub fn read_words(&mut self, off: u64, out: &mut [i64]) {
+        let start = off as usize;
+        let end = start + out.len() * WORD as usize;
+        self.ensure(end);
+        for (i, w) in out.iter_mut().enumerate() {
+            let p = start + i * WORD as usize;
+            *w = i64::from_le_bytes(
+                self.bytes[p..p + 8].try_into().unwrap(),
+            );
+        }
+        self.bytes_read += (end - start) as u64;
+    }
+
+    pub fn write_words(&mut self, off: u64, words: &[i64]) {
+        let start = off as usize;
+        let end = start + words.len() * WORD as usize;
+        self.ensure(end);
+        for (i, w) in words.iter().enumerate() {
+            let p = start + i * WORD as usize;
+            self.bytes[p..p + 8].copy_from_slice(&w.to_le_bytes());
+        }
+        self.bytes_written += (end - start) as u64;
+    }
+
+    pub fn read_bytes(&mut self, off: u64, out: &mut [u8]) {
+        let start = off as usize;
+        let end = start + out.len();
+        self.ensure(end);
+        out.copy_from_slice(&self.bytes[start..end]);
+        self.bytes_read += out.len() as u64;
+    }
+
+    pub fn write_bytes(&mut self, off: u64, data: &[u8]) {
+        let start = off as usize;
+        let end = start + data.len();
+        self.ensure(end);
+        self.bytes[start..end].copy_from_slice(data);
+        self.bytes_written += data.len() as u64;
+    }
+
+    pub fn read_u64(&mut self, off: u64) -> u64 {
+        let mut w = [0i64; 1];
+        self.read_words(off, &mut w);
+        w[0] as u64
+    }
+
+    pub fn write_u64(&mut self, off: u64, v: u64) {
+        self.write_words(off, &[v as i64]);
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.bytes_read = 0;
+        self.bytes_written = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_round_trip() {
+        let mut r = Region::new(1 << 20);
+        r.write_words(64, &[1, -2, i64::MAX]);
+        let mut out = [0i64; 3];
+        r.read_words(64, &mut out);
+        assert_eq!(out, [1, -2, i64::MAX]);
+    }
+
+    #[test]
+    fn lazy_growth() {
+        let mut r = Region::new(64 << 20);
+        assert_eq!(r.committed(), 0);
+        r.write_u64(0, 42);
+        assert!(r.committed() >= 8);
+        assert!(r.committed() < 64 << 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond capacity")]
+    fn capacity_enforced() {
+        let mut r = Region::new(1024);
+        r.write_u64(1024, 1);
+    }
+
+    #[test]
+    fn counters_track_traffic() {
+        let mut r = Region::new(1 << 20);
+        r.write_words(0, &[0; 32]);
+        let mut buf = [0i64; 32];
+        r.read_words(0, &mut buf);
+        assert_eq!(r.bytes_written, 256);
+        assert_eq!(r.bytes_read, 256);
+        r.reset_counters();
+        assert_eq!(r.bytes_read, 0);
+    }
+
+    #[test]
+    fn bytes_and_words_interoperate() {
+        let mut r = Region::new(4096);
+        r.write_bytes(8, &0x1122334455667788u64.to_le_bytes());
+        assert_eq!(r.read_u64(8), 0x1122334455667788);
+    }
+}

@@ -1,0 +1,241 @@
+//! Hierarchical address translation (paper §4.2 + §5, Fig. 6).
+//!
+//! * `RangeTable` — the *fine* per-node table realized in TCAM on the
+//!   FPGA prototype: (base, len) → local DRAM offset + permissions. The
+//!   memory pipeline consults it on every aggregated LOAD; a miss means
+//!   "this pointer is not local" and bounces the request to the switch.
+//!   Capacity-bounded like real TCAM (prototype uses the Xilinx CAM IP).
+//! * `RangeMap` — the *coarse* switch map: range-partitioned VA space →
+//!   owning memory node. Only base addresses are kept at the switch to
+//!   minimize switch state (paper §5).
+//!
+//! Both use sorted ranges + binary search (the software analogue of
+//! parallel TCAM match).
+
+use super::{GAddr, NodeId};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Perms {
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Perms {
+    pub const RW: Perms = Perms { read: true, write: true };
+    pub const RO: Perms = Perms { read: true, write: false };
+}
+
+#[derive(Debug, Clone)]
+struct RangeEntry {
+    base: GAddr,
+    len: u64,
+    local_off: u64,
+    perms: Perms,
+}
+
+/// Per-node translation + protection table (TCAM model).
+#[derive(Debug)]
+pub struct RangeTable {
+    entries: Vec<RangeEntry>,
+    capacity: usize,
+    /// Diagnostic counters (Fig. 10 latency path hits).
+    pub lookups: u64,
+    pub misses: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TranslateError {
+    /// No covering range: pointer is not on this node (switch bounce).
+    NotLocal,
+    /// Covering range exists but denies the access (protection fault).
+    Protection,
+}
+
+impl RangeTable {
+    pub fn new(capacity: usize) -> Self {
+        Self { entries: Vec::new(), capacity, lookups: 0, misses: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Install a mapping. Ranges must not overlap (allocator invariant).
+    pub fn insert(
+        &mut self,
+        base: GAddr,
+        len: u64,
+        local_off: u64,
+        perms: Perms,
+    ) -> Result<(), &'static str> {
+        if self.entries.len() >= self.capacity {
+            return Err("TCAM capacity exceeded");
+        }
+        let idx = self.entries.partition_point(|e| e.base < base);
+        if let Some(prev) = idx.checked_sub(1).and_then(|i| self.entries.get(i)) {
+            if prev.base + prev.len > base {
+                return Err("overlapping range");
+            }
+        }
+        if let Some(next) = self.entries.get(idx) {
+            if base + len > next.base {
+                return Err("overlapping range");
+            }
+        }
+        self.entries.insert(
+            idx,
+            RangeEntry { base, len, local_off, perms },
+        );
+        Ok(())
+    }
+
+    /// Translate a global address for an access of `bytes` bytes.
+    pub fn translate(
+        &mut self,
+        addr: GAddr,
+        bytes: u64,
+        write: bool,
+    ) -> Result<u64, TranslateError> {
+        self.lookups += 1;
+        let idx = self.entries.partition_point(|e| e.base <= addr);
+        let Some(e) = idx.checked_sub(1).and_then(|i| self.entries.get(i))
+        else {
+            self.misses += 1;
+            return Err(TranslateError::NotLocal);
+        };
+        if addr + bytes > e.base + e.len {
+            self.misses += 1;
+            return Err(TranslateError::NotLocal);
+        }
+        if (write && !e.perms.write) || (!write && !e.perms.read) {
+            return Err(TranslateError::Protection);
+        }
+        Ok(e.local_off + (addr - e.base))
+    }
+
+    pub fn remove(&mut self, base: GAddr) -> bool {
+        if let Some(i) = self.entries.iter().position(|e| e.base == base) {
+            self.entries.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Coarse switch-level map: VA range → owning node.
+#[derive(Debug, Default, Clone)]
+pub struct RangeMap {
+    entries: Vec<(GAddr, u64, NodeId)>,
+}
+
+impl RangeMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn insert(&mut self, base: GAddr, len: u64, node: NodeId) {
+        let idx = self.entries.partition_point(|e| e.0 < base);
+        // Coalesce with the previous entry when contiguous + same node —
+        // keeps switch state minimal (paper §5: "only the base address to
+        // memory node mapping").
+        if idx > 0 {
+            let (pbase, plen, pnode) = self.entries[idx - 1];
+            if pnode == node && pbase + plen == base {
+                self.entries[idx - 1].1 += len;
+                return;
+            }
+        }
+        self.entries.insert(idx, (base, len, node));
+    }
+
+    pub fn lookup(&self, addr: GAddr) -> Option<NodeId> {
+        let idx = self.entries.partition_point(|e| e.0 <= addr);
+        let (base, len, node) = *idx.checked_sub(1).and_then(|i| self.entries.get(i))?;
+        (addr < base + len).then_some(node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn translate_hit_and_offset() {
+        let mut t = RangeTable::new(16);
+        t.insert(0x1000, 0x100, 0x8000, Perms::RW).unwrap();
+        assert_eq!(t.translate(0x1000, 8, false), Ok(0x8000));
+        assert_eq!(t.translate(0x10F8, 8, true), Ok(0x80F8));
+    }
+
+    #[test]
+    fn translate_miss_is_not_local() {
+        let mut t = RangeTable::new(16);
+        t.insert(0x1000, 0x100, 0, Perms::RW).unwrap();
+        assert_eq!(
+            t.translate(0x2000, 8, false),
+            Err(TranslateError::NotLocal)
+        );
+        assert_eq!(
+            t.translate(0x10FF, 8, false), // straddles the end
+            Err(TranslateError::NotLocal)
+        );
+        assert_eq!(t.misses, 2);
+    }
+
+    #[test]
+    fn protection_fault() {
+        let mut t = RangeTable::new(16);
+        t.insert(0x1000, 0x100, 0, Perms::RO).unwrap();
+        assert_eq!(t.translate(0x1000, 8, false), Ok(0));
+        assert_eq!(
+            t.translate(0x1000, 8, true),
+            Err(TranslateError::Protection)
+        );
+    }
+
+    #[test]
+    fn overlap_rejected() {
+        let mut t = RangeTable::new(16);
+        t.insert(0x1000, 0x100, 0, Perms::RW).unwrap();
+        assert!(t.insert(0x1080, 0x100, 0, Perms::RW).is_err());
+        assert!(t.insert(0x0F80, 0x100, 0, Perms::RW).is_err());
+        // adjacent is fine
+        assert!(t.insert(0x1100, 0x100, 0, Perms::RW).is_ok());
+    }
+
+    #[test]
+    fn capacity_bounded_like_tcam() {
+        let mut t = RangeTable::new(2);
+        t.insert(0x1000, 8, 0, Perms::RW).unwrap();
+        t.insert(0x2000, 8, 8, Perms::RW).unwrap();
+        assert!(t.insert(0x3000, 8, 16, Perms::RW).is_err());
+        assert!(t.remove(0x1000));
+        assert!(t.insert(0x3000, 8, 16, Perms::RW).is_ok());
+    }
+
+    #[test]
+    fn range_map_routes_and_coalesces() {
+        let mut m = RangeMap::new();
+        m.insert(0x0000, 0x1000, 0);
+        m.insert(0x1000, 0x1000, 0); // coalesces
+        m.insert(0x2000, 0x1000, 1);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.lookup(0x0500), Some(0));
+        assert_eq!(m.lookup(0x1FFF), Some(0));
+        assert_eq!(m.lookup(0x2000), Some(1));
+        assert_eq!(m.lookup(0x3000), None);
+    }
+}

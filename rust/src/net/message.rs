@@ -1,0 +1,203 @@
+//! Traversal request/response message.
+
+use crate::isa::{Program, Status, SP_WORDS};
+
+/// Request identity: CPU node id + per-node sequence number (paper §4.1:
+//  "embeds a request ID with the CPU node ID and a local request
+//  counter" for retransmission).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId {
+    pub cpu_node: u16,
+    pub seq: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum MsgKind {
+    /// CPU node -> switch -> memory node (or memnode -> switch -> memnode
+    /// for distributed continuation).
+    Request = 0,
+    /// Memory node -> switch -> CPU node, carrying the final scratchpad.
+    Response = 1,
+}
+
+/// The single message format used on every hop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraversalMsg {
+    pub kind: MsgKind,
+    pub id: RequestId,
+    pub program: Program,
+    pub cur_ptr: u64,
+    pub sp: [i64; SP_WORDS],
+    /// Iterations already executed (for the max-iteration bound, §3).
+    pub iters_done: u32,
+    /// Budget; exceeding it yields back to the CPU node.
+    pub max_iters: u32,
+    /// Terminal status (responses only; `Status::Running` while in
+    /// flight, which doubles as "continue on another node" when a
+    /// request bounces).
+    pub status: Status,
+    /// Memory-node hops this traversal has made (metrics: Fig. 2c CDF).
+    pub node_crossings: u32,
+}
+
+impl TraversalMsg {
+    pub fn request(
+        id: RequestId,
+        program: Program,
+        cur_ptr: u64,
+        sp: [i64; SP_WORDS],
+        max_iters: u32,
+    ) -> Self {
+        Self {
+            kind: MsgKind::Request,
+            id,
+            program,
+            cur_ptr,
+            sp,
+            iters_done: 0,
+            max_iters,
+            status: Status::Running,
+            node_crossings: 0,
+        }
+    }
+
+    /// Wire size in bytes (for link serialization accounting):
+    /// eth+ip+udp headers (42) + pulse header (32) + program + sp.
+    pub fn wire_size(&self) -> usize {
+        42 + 32 + self.program.wire_size() + SP_WORDS * 8
+    }
+
+    /// Serialize (used by the byte-level transport tests; the in-process
+    /// rack passes the struct directly but sizes/loss come from this).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_size());
+        out.push(self.kind as u8);
+        out.push(0); // pad
+        out.extend_from_slice(&self.id.cpu_node.to_le_bytes());
+        out.extend_from_slice(&self.id.seq.to_le_bytes());
+        out.extend_from_slice(&self.cur_ptr.to_le_bytes());
+        out.extend_from_slice(&self.iters_done.to_le_bytes());
+        out.extend_from_slice(&self.max_iters.to_le_bytes());
+        out.push(self.status as i32 as u8);
+        out.extend_from_slice(&self.node_crossings.to_le_bytes());
+        for w in &self.sp {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.extend_from_slice(&self.program.encode());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Option<Self> {
+        if buf.len() < 39 + SP_WORDS * 8 {
+            return None;
+        }
+        let kind = match buf[0] {
+            0 => MsgKind::Request,
+            1 => MsgKind::Response,
+            _ => return None,
+        };
+        let cpu_node = u16::from_le_bytes([buf[2], buf[3]]);
+        let seq = u64::from_le_bytes(buf[4..12].try_into().ok()?);
+        let cur_ptr = u64::from_le_bytes(buf[12..20].try_into().ok()?);
+        let iters_done = u32::from_le_bytes(buf[20..24].try_into().ok()?);
+        let max_iters = u32::from_le_bytes(buf[24..28].try_into().ok()?);
+        let status = Status::from_i32(buf[28] as i32);
+        let node_crossings =
+            u32::from_le_bytes(buf[29..33].try_into().ok()?);
+        let mut sp = [0i64; SP_WORDS];
+        let sp_off = 33;
+        for (i, w) in sp.iter_mut().enumerate() {
+            let p = sp_off + i * 8;
+            *w = i64::from_le_bytes(buf[p..p + 8].try_into().ok()?);
+        }
+        let program = Program::decode(&buf[sp_off + SP_WORDS * 8..])?;
+        Some(Self {
+            kind,
+            id: RequestId { cpu_node, seq },
+            program,
+            cur_ptr,
+            sp,
+            iters_done,
+            max_iters,
+            status,
+            node_crossings,
+        })
+    }
+
+    /// Turn an in-flight request into the response form, preserving all
+    /// traversal state (the formats are identical by design, §5).
+    pub fn into_response(mut self, status: Status) -> Self {
+        self.kind = MsgKind::Response;
+        self.status = status;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Asm;
+
+    fn sample_program() -> Program {
+        let mut a = Asm::new();
+        a.ldd(1, 2);
+        a.mov(0, 1);
+        a.next();
+        a.finish(3).unwrap()
+    }
+
+    fn sample_msg() -> TraversalMsg {
+        let mut sp = [0i64; SP_WORDS];
+        sp[0] = -7;
+        sp[31] = i64::MAX;
+        TraversalMsg::request(
+            RequestId { cpu_node: 3, seq: 12345 },
+            sample_program(),
+            0xDEAD_BEE0,
+            sp,
+            64,
+        )
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let m = sample_msg();
+        let buf = m.encode();
+        let back = TraversalMsg::decode(&buf).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn response_preserves_state() {
+        let m = sample_msg();
+        let cur = m.cur_ptr;
+        let r = m.clone().into_response(Status::Return);
+        assert_eq!(r.kind, MsgKind::Response);
+        assert_eq!(r.status, Status::Return);
+        assert_eq!(r.cur_ptr, cur);
+        assert_eq!(r.sp, m.sp);
+        // round-trips too
+        let back = TraversalMsg::decode(&r.encode()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn wire_size_matches_encoding_plus_headers() {
+        let m = sample_msg();
+        // encode() omits the 42B ethernet/ip/udp headers and the 32-byte
+        // header is compressed; wire_size is the on-link estimate.
+        assert!(m.wire_size() >= m.encode().len());
+        assert!(m.wire_size() < m.encode().len() + 64);
+    }
+
+    #[test]
+    fn decode_rejects_truncated() {
+        let m = sample_msg();
+        let buf = m.encode();
+        assert!(TraversalMsg::decode(&buf[..20]).is_none());
+        let mut bad = buf.clone();
+        bad[0] = 9;
+        assert!(TraversalMsg::decode(&bad).is_none());
+    }
+}

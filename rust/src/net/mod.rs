@@ -1,0 +1,13 @@
+//! Wire formats + simulated transport.
+//!
+//! PULSE requests and responses share one format (paper §4.2 network
+//! stack / §5): `{request id, program code, cur_ptr, scratch_pad,
+//! iteration budget}` — identical layouts are what let a memory node
+//! bounce an in-flight traversal to the switch for re-routing without
+//! CPU-node involvement.
+
+pub mod message;
+pub mod transport;
+
+pub use message::{MsgKind, RequestId, TraversalMsg};
+pub use transport::{Link, LinkStats};

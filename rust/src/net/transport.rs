@@ -1,0 +1,134 @@
+//! Simulated link: latency + serialization + loss + byte accounting.
+//!
+//! The rack is a single-process discrete-event simulation, so a link
+//! does not move bytes — it computes *when* a message arrives (or that
+//! it was dropped) and meters bandwidth for the utilization figures
+//! (Appendix C.1). Retransmission on loss is the dispatch engine's job
+//! (paper §4.1), exercised by `integration_distributed.rs`.
+
+use crate::sim::{LatencyModel, Ns};
+use crate::util::prng::Rng;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LinkStats {
+    pub messages: u64,
+    pub bytes: u64,
+    pub dropped: u64,
+}
+
+/// A unidirectional link segment (host->switch, switch->node, ...).
+#[derive(Debug)]
+pub struct Link {
+    /// Fixed one-way latency for this segment (propagation + stacks).
+    pub latency_ns: Ns,
+    /// Serialization bandwidth, bytes per ns.
+    pub bytes_per_ns: f64,
+    /// Packet loss probability.
+    pub loss: f64,
+    rng: Rng,
+    /// Time the head of the link is next free (serialization is the
+    /// contended resource — models NIC egress queueing).
+    next_free: Ns,
+    pub stats: LinkStats,
+}
+
+impl Link {
+    pub fn new(latency_ns: Ns, bytes_per_ns: f64, loss: f64, seed: u64) -> Self {
+        Self {
+            latency_ns,
+            bytes_per_ns,
+            loss,
+            rng: Rng::with_stream(seed, 0x11AE),
+            next_free: 0,
+            stats: LinkStats::default(),
+        }
+    }
+
+    pub fn from_model(m: &LatencyModel, loss: f64, seed: u64) -> Self {
+        Self::new(
+            (m.host_net_stack_ns + m.net_hop_ns) as Ns,
+            m.link_bytes_per_ns,
+            loss,
+            seed,
+        )
+    }
+
+    /// Send `bytes` at time `now`; returns arrival time or None if the
+    /// packet was dropped. Updates egress-queue occupancy and counters.
+    pub fn send(&mut self, now: Ns, bytes: usize) -> Option<Ns> {
+        self.stats.messages += 1;
+        self.stats.bytes += bytes as u64;
+        let ser = (bytes as f64 / self.bytes_per_ns).ceil() as Ns;
+        let start = now.max(self.next_free);
+        self.next_free = start + ser;
+        if self.loss > 0.0 && self.rng.chance(self.loss) {
+            self.stats.dropped += 1;
+            return None;
+        }
+        Some(start + ser + self.latency_ns)
+    }
+
+    /// Achieved goodput over an interval, bytes/ns.
+    pub fn goodput(&self, elapsed: Ns) -> f64 {
+        if elapsed == 0 {
+            0.0
+        } else {
+            self.stats.bytes as f64 / elapsed as f64
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.stats = LinkStats::default();
+        self.next_free = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_plus_serialization() {
+        let mut l = Link::new(1000, 12.5, 0.0, 1);
+        // 125 bytes at 12.5 B/ns = 10 ns serialization
+        assert_eq!(l.send(0, 125), Some(1010));
+    }
+
+    #[test]
+    fn egress_queueing_backs_up() {
+        let mut l = Link::new(1000, 12.5, 0.0, 1);
+        let a = l.send(0, 12_500).unwrap(); // 1000 ns ser
+        let b = l.send(0, 12_500).unwrap(); // queued behind the first
+        assert_eq!(a, 2000);
+        assert_eq!(b, 3000);
+        // after the queue drains, latency resets
+        let c = l.send(10_000, 125).unwrap();
+        assert_eq!(c, 11_010);
+    }
+
+    #[test]
+    fn loss_drops_expected_fraction() {
+        let mut l = Link::new(0, 1e9, 0.3, 7);
+        let mut dropped = 0;
+        for _ in 0..10_000 {
+            if l.send(0, 1).is_none() {
+                dropped += 1;
+            }
+        }
+        let frac = dropped as f64 / 10_000.0;
+        assert!((frac - 0.3).abs() < 0.03, "{frac}");
+        assert_eq!(l.stats.dropped, dropped);
+    }
+
+    #[test]
+    fn stats_meter_bytes() {
+        let mut l = Link::new(0, 12.5, 0.0, 1);
+        l.send(0, 100);
+        l.send(0, 200);
+        assert_eq!(l.stats.messages, 2);
+        assert_eq!(l.stats.bytes, 300);
+        assert!(l.goodput(100) > 0.0);
+        l.reset();
+        assert_eq!(l.stats.bytes, 0);
+    }
+}

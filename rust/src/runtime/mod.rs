@@ -1,0 +1,194 @@
+//! PJRT runtime: load the AOT HLO artifacts and execute them from Rust.
+//!
+//! This is the three-layer glue (DESIGN.md §3): `make artifacts` lowers
+//! the L2 JAX graphs (which call the L1 Pallas kernels) to HLO *text*;
+//! this module parses and compiles each artifact once with the PJRT CPU
+//! client and exposes typed entry points. Python never runs on the
+//! request path — the compiled executables are invoked directly from the
+//! accelerator's XLA engine and the BTrDB app.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::interp::Workspace;
+use crate::isa::{Program, Status, DATA_WORDS, MAX_INSTRS, NREG, SP_WORDS};
+
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+/// Compiled `logic_batch_step` artifact for a fixed batch size.
+pub struct LogicStepExe {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+}
+
+/// Compiled `window_aggregate` artifact for a fixed (n, window).
+pub struct WindowAggExe {
+    exe: xla::PjRtLoadedExecutable,
+    pub n: usize,
+    pub window: usize,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    /// Locate the artifacts directory: `$PULSE_ARTIFACTS`, then
+    /// `./artifacts`, then `CARGO_MANIFEST_DIR/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("PULSE_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        let local = PathBuf::from("artifacts");
+        if local.exists() {
+            return local;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn compile(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| {
+            format!(
+                "parsing {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))
+    }
+
+    /// Load a logic-step artifact (`logic_step.hlo.txt` is batch 32,
+    /// `logic_step_b256.hlo.txt` batch 256 — see `aot.py`).
+    pub fn load_logic_step(&self, batch: usize) -> Result<LogicStepExe> {
+        let name = if batch == 32 {
+            "logic_step.hlo.txt".to_string()
+        } else {
+            format!("logic_step_b{batch}.hlo.txt")
+        };
+        Ok(LogicStepExe { exe: self.compile(&name)?, batch })
+    }
+
+    pub fn load_window_agg(
+        &self,
+        n: usize,
+        window: usize,
+    ) -> Result<WindowAggExe> {
+        let name = if (n, window) == (4096, 64) {
+            "window_agg.hlo.txt".to_string()
+        } else {
+            format!("window_agg_n{n}_w{window}.hlo.txt")
+        };
+        Ok(WindowAggExe { exe: self.compile(&name)?, n, window })
+    }
+}
+
+impl LogicStepExe {
+    /// Execute one logic-pipeline pass over up to `batch` workspaces
+    /// running the same program (lanes past `ws.len()` are padding).
+    ///
+    /// Returns per-lane status; workspaces are updated in place —
+    /// bit-identical to `interp::logic_pass` (enforced by
+    /// `integration_runtime.rs`).
+    pub fn run(
+        &self,
+        program: &Program,
+        ws: &mut [Workspace],
+    ) -> Result<Vec<Status>> {
+        assert!(
+            ws.len() <= self.batch,
+            "{} workspaces > batch {}",
+            ws.len(),
+            self.batch
+        );
+        let (ops, imm) = program.pack();
+
+        let mut regs = vec![0i64; self.batch * NREG];
+        let mut sp = vec![0i64; self.batch * SP_WORDS];
+        let mut data = vec![0i64; self.batch * DATA_WORDS];
+        for (i, w) in ws.iter().enumerate() {
+            regs[i * NREG..(i + 1) * NREG].copy_from_slice(&w.regs);
+            sp[i * SP_WORDS..(i + 1) * SP_WORDS].copy_from_slice(&w.sp);
+            data[i * DATA_WORDS..(i + 1) * DATA_WORDS]
+                .copy_from_slice(&w.data);
+        }
+
+        let ops_l =
+            xla::Literal::vec1(&ops).reshape(&[MAX_INSTRS as i64, 4])?;
+        let imm_l = xla::Literal::vec1(&imm);
+        let regs_l = xla::Literal::vec1(&regs)
+            .reshape(&[self.batch as i64, NREG as i64])?;
+        let sp_l = xla::Literal::vec1(&sp)
+            .reshape(&[self.batch as i64, SP_WORDS as i64])?;
+        let data_l = xla::Literal::vec1(&data)
+            .reshape(&[self.batch as i64, DATA_WORDS as i64])?;
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[ops_l, imm_l, regs_l, sp_l, data_l])?
+            [0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (regs, sp, data, status,
+        // next_ptr).
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 5, "expected 5 outputs");
+        let regs_out: Vec<i64> = parts[0].to_vec()?;
+        let sp_out: Vec<i64> = parts[1].to_vec()?;
+        let data_out: Vec<i64> = parts[2].to_vec()?;
+        let status_out: Vec<i32> = parts[3].to_vec()?;
+
+        let mut statuses = Vec::with_capacity(ws.len());
+        for (i, w) in ws.iter_mut().enumerate() {
+            w.regs.copy_from_slice(&regs_out[i * NREG..(i + 1) * NREG]);
+            w.sp.copy_from_slice(&sp_out[i * SP_WORDS..(i + 1) * SP_WORDS]);
+            w.data.copy_from_slice(
+                &data_out[i * DATA_WORDS..(i + 1) * DATA_WORDS],
+            );
+            statuses.push(Status::from_i32(status_out[i]));
+        }
+        Ok(statuses)
+    }
+}
+
+impl WindowAggExe {
+    /// Aggregate `values` (len == n) into per-window
+    /// (sum, mean, min, max), each of length n/window.
+    pub fn run(&self, values: &[f32]) -> Result<WindowAggOut> {
+        anyhow::ensure!(
+            values.len() == self.n,
+            "expected {} values, got {}",
+            self.n,
+            values.len()
+        );
+        let v = xla::Literal::vec1(values);
+        let result =
+            self.exe.execute::<xla::Literal>(&[v])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 4, "expected 4 outputs");
+        Ok(WindowAggOut {
+            sum: parts[0].to_vec()?,
+            mean: parts[1].to_vec()?,
+            min: parts[2].to_vec()?,
+            max: parts[3].to_vec()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WindowAggOut {
+    pub sum: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub min: Vec<f32>,
+    pub max: Vec<f32>,
+}

@@ -1,0 +1,141 @@
+//! Virtual-time simulation substrate.
+//!
+//! The rack runs as a discrete-event simulation over a nanosecond
+//! virtual clock: hardware components contribute calibrated latencies
+//! (Fig. 10 of the paper for the accelerator; §6 setup for network/CPU),
+//! while all *functional* work (ISA execution, data-structure traversal,
+//! compression/encryption) really executes. Wall-clock performance of
+//! the hot paths is reported separately in EXPERIMENTS.md §Perf.
+
+pub mod latency;
+
+pub use latency::LatencyModel;
+
+/// Nanoseconds of virtual time.
+pub type Ns = u64;
+
+/// A monotonically advancing virtual clock.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Clock {
+    now: Ns,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Self { now: 0 }
+    }
+
+    pub fn now(&self) -> Ns {
+        self.now
+    }
+
+    pub fn advance(&mut self, dt: Ns) -> Ns {
+        self.now += dt;
+        self.now
+    }
+
+    /// Move the clock forward to `t` if `t` is later.
+    pub fn advance_to(&mut self, t: Ns) -> Ns {
+        self.now = self.now.max(t);
+        self.now
+    }
+}
+
+/// Min-heap event queue for the accelerator/rack DES.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    heap: std::collections::BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+#[derive(Debug)]
+struct Entry<T> {
+    at: Ns,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse for min-heap; seq breaks ties FIFO.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self { heap: std::collections::BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, at: Ns, payload: T) {
+        self.heap.push(Entry { at, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(Ns, T)> {
+        self.heap.pop().map(|e| (e.at, e.payload))
+    }
+
+    pub fn peek_time(&self) -> Option<Ns> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances() {
+        let mut c = Clock::new();
+        assert_eq!(c.now(), 0);
+        c.advance(100);
+        c.advance_to(50); // no-op backwards
+        assert_eq!(c.now(), 100);
+        c.advance_to(250);
+        assert_eq!(c.now(), 250);
+    }
+
+    #[test]
+    fn event_queue_orders_by_time_then_fifo() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a1");
+        q.push(10, "a2");
+        q.push(20, "b");
+        assert_eq!(q.pop(), Some((10, "a1")));
+        assert_eq!(q.pop(), Some((10, "a2")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.peek_time(), Some(30));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert!(q.is_empty());
+    }
+}

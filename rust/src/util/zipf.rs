@@ -1,0 +1,201 @@
+//! Zipfian key chooser (YCSB-style) + uniform chooser.
+//!
+//! Implements the Gray et al. "quick" Zipfian generator used by YCSB
+//! (`ZipfianGenerator`), including the scrambled variant that spreads the
+//! hot keys across the keyspace, and a plain uniform chooser. The paper's
+//! workloads (§6) use YCSB A/B/C/E with Zipf(0.99) and a uniform
+//! sensitivity study (Appendix Fig. 6).
+
+use super::prng::Rng;
+
+pub const YCSB_ZIPFIAN_CONSTANT: f64 = 0.99;
+
+/// Distribution over `[0, n)` item ranks.
+#[derive(Debug, Clone)]
+pub enum KeyChooser {
+    Uniform { n: u64 },
+    Zipfian(Zipfian),
+    ScrambledZipfian { inner: Zipfian, n: u64 },
+}
+
+impl KeyChooser {
+    pub fn uniform(n: u64) -> Self {
+        KeyChooser::Uniform { n }
+    }
+
+    pub fn zipfian(n: u64) -> Self {
+        KeyChooser::Zipfian(Zipfian::new(n, YCSB_ZIPFIAN_CONSTANT))
+    }
+
+    /// YCSB default: zipfian ranks scrambled over the keyspace with an
+    /// FNV-style hash so "hot" keys are not clustered.
+    pub fn scrambled_zipfian(n: u64) -> Self {
+        KeyChooser::ScrambledZipfian { inner: Zipfian::new(n, YCSB_ZIPFIAN_CONSTANT), n }
+    }
+
+    pub fn n(&self) -> u64 {
+        match self {
+            KeyChooser::Uniform { n } => *n,
+            KeyChooser::Zipfian(z) => z.n,
+            KeyChooser::ScrambledZipfian { n, .. } => *n,
+        }
+    }
+
+    pub fn next(&self, rng: &mut Rng) -> u64 {
+        match self {
+            KeyChooser::Uniform { n } => rng.below(*n),
+            KeyChooser::Zipfian(z) => z.next(rng),
+            KeyChooser::ScrambledZipfian { inner, n } => {
+                let rank = inner.next(rng);
+                fnv1a_64(rank) % n
+            }
+        }
+    }
+}
+
+#[inline]
+pub fn fnv1a_64(v: u64) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// Gray et al. Zipfian over `[0, n)`; rank 0 is the hottest.
+#[derive(Debug, Clone)]
+pub struct Zipfian {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipfian {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0);
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta))
+            / (1.0 - zeta2 / zetan);
+        Self { n, theta, alpha, zetan, eta, zeta2: zeta2 }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // Exact for small n; Euler–Maclaurin tail approximation for large
+        // n keeps construction O(1)-ish while staying within float noise
+        // of the exact sum (YCSB uses the exact sum; the approximation
+        // error is < 1e-9 relative for n >= 1e6).
+        const EXACT_LIMIT: u64 = 1_000_000;
+        let m = n.min(EXACT_LIMIT);
+        let mut sum = 0.0;
+        for i in 1..=m {
+            sum += 1.0 / (i as f64).powf(theta);
+        }
+        if n > m {
+            // integral tail: sum_{m+1..n} x^-theta ≈ (n^(1-θ) - m^(1-θ))/(1-θ)
+            let a = 1.0 - theta;
+            sum += ((n as f64).powf(a) - (m as f64).powf(a)) / a
+                + 0.5 * ((n as f64).powf(-theta) - (m as f64).powf(-theta));
+        }
+        sum
+    }
+
+    pub fn next(&self, rng: &mut Rng) -> u64 {
+        let u = rng.next_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let v = (self.n as f64
+            * (self.eta * u - self.eta + 1.0).powf(self.alpha))
+            as u64;
+        v.min(self.n - 1)
+    }
+
+    /// Expected probability of the hottest item (diagnostics).
+    pub fn p_top(&self) -> f64 {
+        1.0 / self.zetan
+    }
+
+    #[allow(dead_code)]
+    fn zeta2(&self) -> f64 {
+        self.zeta2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_is_skewed() {
+        let z = Zipfian::new(10_000, YCSB_ZIPFIAN_CONSTANT);
+        let mut rng = Rng::new(1);
+        let mut top10 = 0usize;
+        let trials = 50_000;
+        for _ in 0..trials {
+            if z.next(&mut rng) < 10 {
+                top10 += 1;
+            }
+        }
+        let frac = top10 as f64 / trials as f64;
+        // Zipf(0.99) over 10k keys: top-10 take a large chunk (~30-40%).
+        assert!(frac > 0.25, "top-10 fraction {frac}");
+    }
+
+    #[test]
+    fn zipf_in_range() {
+        let z = Zipfian::new(100, 0.99);
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            assert!(z.next(&mut rng) < 100);
+        }
+    }
+
+    #[test]
+    fn uniform_is_flat() {
+        let c = KeyChooser::uniform(100);
+        let mut rng = Rng::new(3);
+        let mut counts = [0u32; 100];
+        for _ in 0..100_000 {
+            counts[c.next(&mut rng) as usize] += 1;
+        }
+        let (mn, mx) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        assert!(mx < 2 * mn, "min {mn} max {mx}");
+    }
+
+    #[test]
+    fn scrambled_spreads_hot_keys() {
+        let c = KeyChooser::scrambled_zipfian(10_000);
+        let mut rng = Rng::new(4);
+        let mut lows = 0;
+        for _ in 0..10_000 {
+            if c.next(&mut rng) < 100 {
+                lows += 1;
+            }
+        }
+        // After scrambling, the low key range should hold ~1% of mass,
+        // not the Zipf head.
+        assert!(lows < 800, "lows {lows}");
+    }
+
+    #[test]
+    fn zeta_tail_approximation_close() {
+        let exact = Zipfian::zeta(1_000_000, 0.99);
+        let with_tail = Zipfian::zeta(2_000_000, 0.99);
+        assert!(with_tail > exact);
+        // spot value: zeta(1e6, 0.99) ≈ 15.39 (direct summation)
+        assert!((exact - 15.39).abs() < 0.1, "zeta {exact}");
+    }
+}

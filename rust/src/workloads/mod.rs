@@ -1,0 +1,10 @@
+//! Workload generators (paper §6): YCSB A/B/C/E with Zipf or uniform
+//! key choosers, and a synthetic OpenµPMU-style time-series source for
+//! BTrDB (voltage / current / phase at 120 Hz; the real LBNL dataset is
+//! unavailable — see DESIGN.md §2 substitution table).
+
+pub mod timeseries;
+pub mod ycsb;
+
+pub use timeseries::PmuSource;
+pub use ycsb::{YcsbOp, YcsbWorkload, YcsbSpec};

@@ -1,0 +1,185 @@
+//! YCSB core workloads A/B/C/E (Cooper et al., SoCC'10), as used in the
+//! paper's WebService (A/B/C) and WiredTiger (E) evaluations.
+
+use crate::util::prng::Rng;
+use crate::util::zipf::KeyChooser;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum YcsbOp {
+    Read(u64),
+    Update(u64),
+    /// Scan(start_key, record_count)
+    Scan(u64, usize),
+    Insert(u64),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum YcsbSpec {
+    /// 50% read / 50% update.
+    A,
+    /// 95% read / 5% update.
+    B,
+    /// 100% read.
+    C,
+    /// 95% scan / 5% insert.
+    E,
+}
+
+impl YcsbSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            YcsbSpec::A => "YCSB-A",
+            YcsbSpec::B => "YCSB-B",
+            YcsbSpec::C => "YCSB-C",
+            YcsbSpec::E => "YCSB-E",
+        }
+    }
+}
+
+pub struct YcsbWorkload {
+    spec: YcsbSpec,
+    chooser: KeyChooser,
+    rng: Rng,
+    insert_cursor: u64,
+    /// YCSB-E scan length: uniform in [1, max_scan].
+    max_scan: usize,
+}
+
+impl YcsbWorkload {
+    pub fn new(spec: YcsbSpec, keys: u64, zipfian: bool, seed: u64) -> Self {
+        let chooser = if zipfian {
+            KeyChooser::scrambled_zipfian(keys)
+        } else {
+            KeyChooser::uniform(keys)
+        };
+        Self {
+            spec,
+            chooser,
+            rng: Rng::with_stream(seed, 0x4C5B),
+            insert_cursor: keys,
+            max_scan: 100,
+        }
+    }
+
+    pub fn with_max_scan(mut self, max_scan: usize) -> Self {
+        self.max_scan = max_scan;
+        self
+    }
+
+    pub fn spec(&self) -> YcsbSpec {
+        self.spec
+    }
+
+    pub fn next_op(&mut self) -> YcsbOp {
+        let p = self.rng.next_f64();
+        match self.spec {
+            YcsbSpec::A => {
+                if p < 0.5 {
+                    YcsbOp::Read(self.chooser.next(&mut self.rng))
+                } else {
+                    YcsbOp::Update(self.chooser.next(&mut self.rng))
+                }
+            }
+            YcsbSpec::B => {
+                if p < 0.95 {
+                    YcsbOp::Read(self.chooser.next(&mut self.rng))
+                } else {
+                    YcsbOp::Update(self.chooser.next(&mut self.rng))
+                }
+            }
+            YcsbSpec::C => YcsbOp::Read(self.chooser.next(&mut self.rng)),
+            YcsbSpec::E => {
+                if p < 0.95 {
+                    let len = 1 + self.rng.below(self.max_scan as u64)
+                        as usize;
+                    YcsbOp::Scan(self.chooser.next(&mut self.rng), len)
+                } else {
+                    let k = self.insert_cursor;
+                    self.insert_cursor += 1;
+                    YcsbOp::Insert(k)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mix(spec: YcsbSpec, n: usize) -> (usize, usize, usize, usize) {
+        let mut w = YcsbWorkload::new(spec, 10_000, true, 7);
+        let (mut r, mut u, mut s, mut i) = (0, 0, 0, 0);
+        for _ in 0..n {
+            match w.next_op() {
+                YcsbOp::Read(_) => r += 1,
+                YcsbOp::Update(_) => u += 1,
+                YcsbOp::Scan(..) => s += 1,
+                YcsbOp::Insert(_) => i += 1,
+            }
+        }
+        (r, u, s, i)
+    }
+
+    #[test]
+    fn ycsb_a_is_half_updates() {
+        let (r, u, _, _) = mix(YcsbSpec::A, 10_000);
+        assert!((r as f64 - 5000.0).abs() < 300.0, "reads {r}");
+        assert_eq!(r + u, 10_000);
+    }
+
+    #[test]
+    fn ycsb_b_is_5pct_updates() {
+        let (_, u, _, _) = mix(YcsbSpec::B, 10_000);
+        assert!((u as f64 - 500.0).abs() < 150.0, "updates {u}");
+    }
+
+    #[test]
+    fn ycsb_c_is_read_only() {
+        let (r, _, _, _) = mix(YcsbSpec::C, 5_000);
+        assert_eq!(r, 5_000);
+    }
+
+    #[test]
+    fn ycsb_e_is_scans_plus_inserts() {
+        let (_, _, s, i) = mix(YcsbSpec::E, 10_000);
+        assert!(s > 9_000, "scans {s}");
+        assert!(i > 200, "inserts {i}");
+    }
+
+    #[test]
+    fn scan_lengths_bounded() {
+        let mut w = YcsbWorkload::new(YcsbSpec::E, 1000, true, 3)
+            .with_max_scan(50);
+        for _ in 0..1000 {
+            if let YcsbOp::Scan(_, len) = w.next_op() {
+                assert!((1..=50).contains(&len));
+            }
+        }
+    }
+
+    #[test]
+    fn inserts_use_fresh_keys() {
+        let mut w = YcsbWorkload::new(YcsbSpec::E, 100, true, 3);
+        let mut inserted = std::collections::HashSet::new();
+        for _ in 0..2000 {
+            if let YcsbOp::Insert(k) = w.next_op() {
+                assert!(k >= 100);
+                assert!(inserted.insert(k), "duplicate insert key {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_skews_reads() {
+        let mut w = YcsbWorkload::new(YcsbSpec::C, 100_000, true, 9);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..20_000 {
+            if let YcsbOp::Read(k) = w.next_op() {
+                *counts.entry(k).or_insert(0usize) += 1;
+            }
+        }
+        let max = counts.values().max().copied().unwrap_or(0);
+        assert!(max > 100, "hottest key only {max} hits");
+    }
+}

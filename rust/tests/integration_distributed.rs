@@ -1,0 +1,174 @@
+//! Distributed-traversal integration (paper §5 + Fig. 9): in-network
+//! re-routing vs PULSE-ACC, hierarchical translation consistency,
+//! stateful continuation across nodes, and allocation-policy effects
+//! (Appendix C.2).
+
+use pulse::ds::{BPlusTree, ForwardList};
+use pulse::isa::SP_WORDS;
+use pulse::mem::AllocPolicy;
+use pulse::rack::{Op, Rack, RackConfig};
+
+fn spread_cfg(nodes: usize) -> RackConfig {
+    RackConfig {
+        nodes,
+        node_capacity: 128 << 20,
+        granularity: 4096,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn stateful_aggregation_survives_node_crossings() {
+    // list_sum carries a running aggregate in the scratchpad; spreading
+    // the list over 4 nodes must not change the sum (the §5 migration
+    // property).
+    let sum_with_nodes = |nodes: usize| {
+        let mut r = Rack::new(spread_cfg(nodes));
+        let mut l = ForwardList::new();
+        for i in 1..=2000 {
+            l.push(&mut r, i);
+        }
+        l.sum(&mut r)
+    };
+    assert_eq!(sum_with_nodes(1), (2001000, 2000));
+    assert_eq!(sum_with_nodes(4), (2001000, 2000));
+}
+
+#[test]
+fn switch_reroutes_without_cpu_in_pulse_mode() {
+    let mut r = Rack::new(spread_cfg(4));
+    let mut l = ForwardList::new();
+    for i in 0..2000 {
+        l.push(&mut r, i);
+    }
+    let prog = l.find_program();
+    let head = l.head;
+    let mut n = 0;
+    let report = r.serve(
+        move |_| {
+            n += 1;
+            if n > 30 {
+                return None;
+            }
+            let mut sp = [0i64; SP_WORDS];
+            sp[0] = 1900; // deep target
+            Some(Op::new(prog.clone(), head, sp))
+        },
+        2,
+    );
+    assert_eq!(report.completed, 30);
+    assert!(r.switch.stats.reroutes > 0, "no in-network reroutes");
+}
+
+#[test]
+fn fig9_pulse_acc_latency_penalty_in_paper_band() {
+    // Fig. 9: identical single-node performance; 1.02–1.15× higher
+    // latency for PULSE-ACC at 2 nodes (some traversals bounce).
+    let run = |nodes: usize, in_network: bool| {
+        let mut cfg = spread_cfg(nodes);
+        cfg.in_network_routing = in_network;
+        cfg.granularity = 64 << 10;
+        let mut r = Rack::new(cfg);
+        let pairs: Vec<(i64, i64)> =
+            (0..20_000).map(|i| (i, i)).collect();
+        let t = BPlusTree::build_sorted(&mut r, &pairs, 7);
+        let prog = t.get_program();
+        let root = t.root;
+        let mut n = 0u64;
+        let report = r.serve(
+            move |_| {
+                n += 1;
+                if n > 200 {
+                    return None;
+                }
+                let mut sp = [0i64; SP_WORDS];
+                sp[0] = ((n * 97) % 20_000) as i64;
+                Some(Op::new(prog.clone(), root, sp))
+            },
+            4,
+        );
+        assert_eq!(report.completed, 200);
+        report.latency.mean()
+    };
+    let single_pulse = run(1, true);
+    let single_acc = run(1, false);
+    let ratio1 = single_acc / single_pulse;
+    assert!(
+        (0.98..1.02).contains(&ratio1),
+        "single-node should be identical: {ratio1}"
+    );
+    let two_pulse = run(2, true);
+    let two_acc = run(2, false);
+    let ratio2 = two_acc / two_pulse;
+    assert!(
+        (1.0..1.6).contains(&ratio2),
+        "2-node ACC penalty out of band: {ratio2}"
+    );
+}
+
+#[test]
+fn allocation_policy_changes_crossings_not_results() {
+    // Appendix C.2: random allocation costs 3.7–10.8× more for
+    // distributed traversals; results must be identical.
+    let run = |policy: AllocPolicy| {
+        let mut cfg = spread_cfg(2);
+        cfg.policy = policy;
+        cfg.granularity = 4096;
+        let mut r = Rack::new(cfg);
+        let pairs: Vec<(i64, i64)> =
+            (0..10_000).map(|i| (i, i * 2)).collect();
+        let t = BPlusTree::build_sorted(&mut r, &pairs, 7);
+        let mut results = Vec::new();
+        for probe in (0..10_000).step_by(501) {
+            results.push(t.get(&mut r, probe));
+        }
+        let bounces: u64 = r.memnodes.iter().map(|m| m.bounces).sum();
+        (results, bounces)
+    };
+    let (res_contig, bounce_contig) = run(AllocPolicy::Contiguous);
+    let (res_random, bounce_random) = run(AllocPolicy::Random);
+    assert_eq!(res_contig, res_random, "policy changed results!");
+    assert!(
+        bounce_random > bounce_contig,
+        "random placement should cross more: {bounce_random} vs {bounce_contig}"
+    );
+}
+
+#[test]
+fn finer_granularity_increases_crossings() {
+    // Fig. 2b: smaller allocation granularity => more cross-node
+    // traversals.
+    let crossings_at = |gran: u64| {
+        let mut cfg = spread_cfg(4);
+        cfg.granularity = gran;
+        let mut r = Rack::new(cfg);
+        let mut l = ForwardList::new();
+        for i in 0..4000 {
+            l.push(&mut r, i);
+        }
+        for probe in (0..4000).step_by(201) {
+            let _ = l.find(&mut r, probe);
+        }
+        r.memnodes.iter().map(|m| m.bounces).sum::<u64>()
+    };
+    let fine = crossings_at(4096);
+    let coarse = crossings_at(1 << 20);
+    assert!(
+        fine > coarse,
+        "4 KB slabs should cross more than 1 MB: {fine} vs {coarse}"
+    );
+}
+
+#[test]
+fn invalid_pointer_traps_and_notifies_cpu() {
+    let mut r = Rack::new(spread_cfg(2));
+    let mut l = ForwardList::new();
+    let a = l.push(&mut r, 1);
+    // corrupt the next pointer to an unmapped address
+    r.write_words(a, &[1, 0xDEAD_0000_0000i64]);
+    let prog = l.find_program();
+    let mut sp = [0i64; SP_WORDS];
+    sp[0] = 42; // won't match; walks into the corrupt pointer
+    let (st, _sp, _) = r.traverse(&prog, l.head, sp);
+    assert_eq!(st, pulse::isa::Status::Trap);
+}

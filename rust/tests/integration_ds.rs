@@ -1,0 +1,154 @@
+//! Data-structure integration: all 13 ported structures exercised
+//! through the offload path on a multi-node rack (paper Table 1/5).
+
+use pulse::ds::{
+    Bimap, BPlusTree, BstKind, BstMap, ForwardList, GoogleBtree,
+    HashMapDs, HashSetDs, LinkedList,
+};
+use pulse::rack::{Rack, RackConfig};
+
+fn rack() -> Rack {
+    Rack::new(RackConfig {
+        nodes: 4,
+        node_capacity: 128 << 20,
+        granularity: 256 << 10,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn stl_list_and_forward_list() {
+    let mut r = rack();
+    let mut fl = ForwardList::new();
+    let mut ll = LinkedList::new();
+    for i in 0..500 {
+        fl.push(&mut r, i * 2);
+        ll.push_back(&mut r, i * 2);
+    }
+    assert!(fl.find(&mut r, 444).is_some());
+    assert!(fl.find(&mut r, 445).is_none());
+    assert!(ll.find(&mut r, 444).is_some());
+    assert!(ll.find(&mut r, 445).is_none());
+    assert_eq!(fl.sum(&mut r), ((0..500).map(|i| i * 2).sum(), 500));
+}
+
+#[test]
+fn stl_map_set_multimap_multiset() {
+    // STL ordered containers share the lower_bound walk (Table 5).
+    let mut r = rack();
+    let mut map = BstMap::new(BstKind::Plain); // std::map / std::set
+    let mut multi = BstMap::new(BstKind::Plain); // multimap/multiset
+    for i in 0..300 {
+        map.insert(&mut r, i * 5, i);
+    }
+    multi.insert(&mut r, 7, 1);
+    multi.insert(&mut r, 7, 2); // duplicate key (multimap)
+    assert_eq!(map.get(&mut r, 100), Some(20));
+    assert_eq!(map.get(&mut r, 101), None);
+    assert_eq!(multi.get(&mut r, 7), Some(1)); // first equal key
+}
+
+#[test]
+fn boost_unordered_map_set_bimap() {
+    let mut r = rack();
+    let mut m = HashMapDs::build(&mut r, 64);
+    let mut s = HashSetDs::build(&mut r, 64);
+    let mut bm = Bimap::build(&mut r, 64);
+    for i in 0..400 {
+        m.insert(&mut r, i, i * i);
+        if i % 2 == 0 {
+            s.insert(&mut r, i);
+        }
+        bm.insert(&mut r, i, 100_000 + i);
+    }
+    assert_eq!(m.get(&mut r, 20), Some(400));
+    assert!(s.contains(&mut r, 20));
+    assert!(!s.contains(&mut r, 21));
+    assert_eq!(bm.get_by_left(&mut r, 33), Some(100_033));
+    assert_eq!(bm.get_by_right(&mut r, 100_033), Some(33));
+}
+
+#[test]
+fn boost_avl_splay_scapegoat() {
+    let mut r = rack();
+    for kind in [BstKind::Avl, BstKind::Splay, BstKind::Scapegoat] {
+        let mut t = BstMap::new(kind);
+        for i in 0..200 {
+            t.insert(&mut r, i, 1000 + i); // adversarial sorted order
+        }
+        for i in (0..200).step_by(17) {
+            assert_eq!(t.get(&mut r, i), Some(1000 + i), "{kind:?}");
+        }
+        assert_eq!(t.get(&mut r, 777), None, "{kind:?}");
+    }
+}
+
+#[test]
+fn google_btree_and_bplustree() {
+    let mut r = rack();
+    let pairs: Vec<(i64, i64)> = (0..3000).map(|i| (i * 2, i)).collect();
+    let gb = GoogleBtree::build_sorted(&mut r, &pairs);
+    let bp = BPlusTree::build_sorted(&mut r, &pairs, 7);
+    for probe in (0..6000).step_by(61) {
+        let want = (probe % 2 == 0 && probe < 6000)
+            .then(|| probe / 2)
+            .filter(|_| probe / 2 < 3000);
+        assert_eq!(gb.get(&mut r, probe), want, "btree {probe}");
+        assert_eq!(bp.get(&mut r, probe), want, "bplus {probe}");
+    }
+    // range ops are B+Tree-only
+    assert_eq!(
+        bp.scan(&mut r, 100, 5),
+        vec![50, 51, 52, 53, 54]
+    );
+}
+
+#[test]
+fn distributed_structures_cross_node_boundaries() {
+    // With tiny slabs every structure spans all 4 nodes; traversals
+    // must cross (and the accelerators must bounce through the switch).
+    let mut r = Rack::new(RackConfig {
+        nodes: 4,
+        node_capacity: 128 << 20,
+        granularity: 4096,
+        ..Default::default()
+    });
+    let pairs: Vec<(i64, i64)> = (0..5000).map(|i| (i, i * 3)).collect();
+    let bp = BPlusTree::build_sorted(&mut r, &pairs, 7);
+    for probe in (0..5000).step_by(97) {
+        assert_eq!(bp.get(&mut r, probe), Some(probe * 3));
+    }
+    let bounces: u64 = r.memnodes.iter().map(|m| m.bounces).sum();
+    assert!(bounces > 0, "no cross-node traversals happened");
+    // owners really differ
+    let owners: std::collections::BTreeSet<_> = (0..5000)
+        .step_by(111)
+        .filter_map(|k| {
+            let leaf = bp.locate(&mut r, k);
+            r.alloc.owner(leaf)
+        })
+        .collect();
+    assert!(owners.len() >= 3, "tree not spread: {owners:?}");
+}
+
+#[test]
+fn traversal_results_independent_of_node_count() {
+    let build_and_probe = |nodes: usize| -> Vec<Option<i64>> {
+        let mut r = Rack::new(RackConfig {
+            nodes,
+            node_capacity: 128 << 20,
+            granularity: 64 << 10,
+            ..Default::default()
+        });
+        let mut m = HashMapDs::build(&mut r, 128);
+        for i in 0..1000 {
+            m.insert(&mut r, i * 7 % 997, i);
+        }
+        (0..1000).map(|k| m.get(&mut r, k)).collect()
+    };
+    let r1 = build_and_probe(1);
+    let r2 = build_and_probe(2);
+    let r4 = build_and_probe(4);
+    assert_eq!(r1, r2);
+    assert_eq!(r2, r4);
+}

@@ -1,0 +1,130 @@
+//! Cross-layer equivalence: the AOT-compiled XLA artifact (L1 Pallas
+//! kernel lowered through L2 jax) must match the native Rust interpreter
+//! bit-for-bit, and the window-aggregation artifact must match a scalar
+//! reference. This is the three-layer contract of DESIGN.md §7.
+
+use pulse::interp::{logic_pass, Workspace};
+use pulse::isa::{Asm, Status};
+use pulse::runtime::PjrtRuntime;
+use pulse::util::prng::Rng;
+
+fn runtime() -> PjrtRuntime {
+    PjrtRuntime::new(PjrtRuntime::default_dir()).expect("pjrt client")
+}
+
+#[test]
+fn logic_step_artifact_matches_native_interpreter() {
+    let rt = runtime();
+    let exe = rt.load_logic_step(32).expect("artifact (make artifacts?)");
+    let p = pulse::testgen::list_find_program();
+
+    let mut rng = Rng::new(99);
+    let mut xla_ws: Vec<Workspace> = (0..32)
+        .map(|i| {
+            let mut w = Workspace::new();
+            w.sp[0] = (i % 4) as i64; // search keys
+            w.data[0] = rng.below(4) as i64; // node.key
+            w.data[1] = rng.next_i64(); // node.value
+            w.data[2] = if rng.chance(0.5) { rng.next_i64() } else { 0 };
+            w
+        })
+        .collect();
+    let mut native_ws = xla_ws.clone();
+
+    let statuses = exe.run(&p, &mut xla_ws).expect("xla run");
+    for (i, w) in native_ws.iter_mut().enumerate() {
+        let r = logic_pass(&p, w);
+        assert_eq!(statuses[i], r.status, "lane {i} status");
+    }
+    assert_eq!(xla_ws, native_ws, "workspace divergence");
+}
+
+#[test]
+fn logic_step_artifact_matches_on_random_programs() {
+    let rt = runtime();
+    let exe = rt.load_logic_step(32).expect("artifact");
+    let mut rng = Rng::new(7);
+
+    for case in 0..10 {
+        let p = pulse::testgen::random_verified_program(&mut rng, 20);
+        let mut xla_ws: Vec<Workspace> = (0..32)
+            .map(|_| pulse::testgen::random_workspace(&mut rng))
+            .collect();
+        let mut native_ws = xla_ws.clone();
+        let statuses = exe.run(&p, &mut xla_ws).expect("xla run");
+        for (i, w) in native_ws.iter_mut().enumerate() {
+            let r = logic_pass(&p, w);
+            assert_eq!(
+                statuses[i], r.status,
+                "case {case} lane {i} status (program: {p:?})"
+            );
+        }
+        assert_eq!(xla_ws, native_ws, "case {case} workspace divergence");
+    }
+}
+
+#[test]
+fn logic_step_b256_artifact_loads_and_runs() {
+    let rt = runtime();
+    let exe = rt.load_logic_step(256).expect("artifact");
+    let mut a = Asm::new();
+    a.spl(1, 0);
+    a.addi(1, 1, 1000);
+    a.sps(1, 1);
+    a.ret();
+    let p = a.finish(1).unwrap();
+    let mut ws: Vec<Workspace> = (0..256)
+        .map(|i| {
+            let mut w = Workspace::new();
+            w.sp[0] = i as i64;
+            w
+        })
+        .collect();
+    let st = exe.run(&p, &mut ws).unwrap();
+    assert!(st.iter().all(|&s| s == Status::Return));
+    for (i, w) in ws.iter().enumerate() {
+        assert_eq!(w.sp[1], i as i64 + 1000);
+    }
+}
+
+#[test]
+fn partial_batch_is_padded() {
+    let rt = runtime();
+    let exe = rt.load_logic_step(32).expect("artifact");
+    let mut a = Asm::new();
+    a.movi(1, 7);
+    a.sps(1, 0);
+    a.ret();
+    let p = a.finish(1).unwrap();
+    let mut ws: Vec<Workspace> = (0..5).map(|_| Workspace::new()).collect();
+    let st = exe.run(&p, &mut ws).unwrap();
+    assert_eq!(st.len(), 5);
+    assert!(ws.iter().all(|w| w.sp[0] == 7));
+}
+
+#[test]
+fn window_agg_artifact_matches_scalar_reference() {
+    let rt = runtime();
+    let exe = rt.load_window_agg(4096, 64).expect("artifact");
+    let mut rng = Rng::new(5);
+    let values: Vec<f32> = (0..4096)
+        .map(|_| (rng.next_normal() * 100.0) as f32)
+        .collect();
+    let out = exe.run(&values).unwrap();
+    assert_eq!(out.sum.len(), 64);
+    for w in 0..64 {
+        let chunk = &values[w * 64..(w + 1) * 64];
+        let sum: f32 = chunk.iter().sum();
+        let min = chunk.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(
+            (out.sum[w] - sum).abs() <= 1e-2 * sum.abs().max(1.0),
+            "w{w} sum {} vs {}",
+            out.sum[w],
+            sum
+        );
+        assert_eq!(out.min[w], min, "w{w} min");
+        assert_eq!(out.max[w], max, "w{w} max");
+        assert!((out.mean[w] - sum / 64.0).abs() <= 1e-2);
+    }
+}

@@ -1,0 +1,189 @@
+//! Property tests over the data-structure layer: offloaded traversals
+//! must agree with host-side reference walks for random operation
+//! sequences, regardless of allocation policy, granularity, node count
+//! or balancing discipline — the paper's core correctness contract
+//! (placement never changes results, only performance).
+
+use pulse::ds::{BPlusTree, BstKind, BstMap, ForwardList, HashMapDs};
+use pulse::mem::AllocPolicy;
+use pulse::rack::{Rack, RackConfig};
+use pulse::util::prng::Rng;
+use pulse::util::ptest::run_prop;
+use pulse::{prop_assert, prop_assert_eq};
+
+fn rack_with(rng: &mut Rng) -> Rack {
+    let nodes = *rng.choose(&[1usize, 2, 4]);
+    let granularity = *rng.choose(&[4096u64, 64 << 10, 1 << 20]);
+    let policy = *rng.choose(&[
+        AllocPolicy::Contiguous,
+        AllocPolicy::RoundRobin,
+        AllocPolicy::Random,
+    ]);
+    Rack::new(RackConfig {
+        nodes,
+        node_capacity: 64 << 20,
+        granularity,
+        policy,
+        seed: rng.next_u64(),
+        ..Default::default()
+    })
+}
+
+#[test]
+fn prop_hashmap_matches_reference_under_any_placement() {
+    run_prop("hashmap", 0x11AA, 25, |rng| {
+        let mut r = rack_with(rng);
+        let mut m = HashMapDs::build(&mut r, 32);
+        let mut reference = std::collections::HashMap::new();
+        for _ in 0..300 {
+            let k = rng.below(500) as i64;
+            let v = rng.next_i64() >> 8;
+            m.insert(&mut r, k, v);
+            reference.insert(k, v);
+        }
+        for k in 0..500i64 {
+            prop_assert_eq!(
+                m.get(&mut r, k),
+                reference.get(&k).copied(),
+                "key {}",
+                k
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_offloaded_update_visible_to_reads() {
+    run_prop("update-vis", 0x22BB, 20, |rng| {
+        let mut r = rack_with(rng);
+        let mut m = HashMapDs::build(&mut r, 16);
+        for k in 0..100 {
+            m.insert(&mut r, k, 0);
+        }
+        for _ in 0..200 {
+            let k = rng.below(100) as i64;
+            let v = rng.next_i64() >> 4;
+            prop_assert!(m.update(&mut r, k, v));
+            prop_assert_eq!(m.get(&mut r, k), Some(v));
+            prop_assert_eq!(m.host_get(&mut r, k), Some(v));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trees_match_reference_for_all_balancing_kinds() {
+    run_prop("trees", 0x33CC, 12, |rng| {
+        let kind = *rng.choose(&[
+            BstKind::Plain,
+            BstKind::Avl,
+            BstKind::Splay,
+            BstKind::Scapegoat,
+        ]);
+        let mut r = rack_with(rng);
+        let mut t = BstMap::new(kind);
+        let mut reference = std::collections::BTreeMap::new();
+        for _ in 0..150 {
+            let k = rng.below(400) as i64;
+            if let std::collections::btree_map::Entry::Vacant(e) =
+                reference.entry(k)
+            {
+                let v = rng.next_i64() >> 8;
+                e.insert(v);
+                t.insert(&mut r, k, v);
+            }
+        }
+        for k in 0..400i64 {
+            prop_assert_eq!(
+                t.get(&mut r, k),
+                reference.get(&k).copied(),
+                "{:?} key {}",
+                kind,
+                k
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bplustree_point_and_range_ops_agree() {
+    run_prop("bplus", 0x44DD, 12, |rng| {
+        let mut r = rack_with(rng);
+        let n = 200 + rng.below(800) as i64;
+        let pairs: Vec<(i64, i64)> =
+            (0..n).map(|i| (i * 3, rng.next_i64() >> 8)).collect();
+        let t = BPlusTree::build_sorted(&mut r, &pairs, 7);
+        // point lookups
+        for _ in 0..50 {
+            let probe = rng.below(3 * n as u64 + 10) as i64;
+            let want = pairs
+                .binary_search_by_key(&probe, |p| p.0)
+                .ok()
+                .map(|i| pairs[i].1);
+            prop_assert_eq!(t.get(&mut r, probe), want, "probe {}", probe);
+        }
+        // range scans
+        for _ in 0..10 {
+            let start_idx = rng.below(n as u64) as usize;
+            let count = 1 + rng.below(60) as usize;
+            let got = t.scan(&mut r, pairs[start_idx].0, count);
+            let want: Vec<i64> = pairs
+                [start_idx..(start_idx + count).min(pairs.len())]
+                .iter()
+                .map(|p| p.1)
+                .collect();
+            prop_assert_eq!(got, want, "scan {} +{}", start_idx, count);
+        }
+        // range sums
+        for _ in 0..10 {
+            let lo = rng.below(3 * n as u64) as i64;
+            let hi = lo + rng.below(600) as i64;
+            prop_assert_eq!(
+                t.sum_range(&mut r, lo, hi),
+                t.host_sum_range(&mut r, lo, hi),
+                "sum {}..{}",
+                lo,
+                hi
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_list_find_agnostic_to_granularity() {
+    // The same list contents must produce identical find results across
+    // slab granularities (which change node placement entirely).
+    run_prop("list-gran", 0x55EE, 10, |rng| {
+        let values: Vec<i64> =
+            (0..400).map(|_| rng.below(300) as i64).collect();
+        let probes: Vec<i64> =
+            (0..50).map(|_| rng.below(350) as i64).collect();
+        let mut results: Option<Vec<bool>> = None;
+        for gran in [4096u64, 1 << 20] {
+            let mut r = Rack::new(RackConfig {
+                nodes: 4,
+                node_capacity: 32 << 20,
+                granularity: gran,
+                policy: AllocPolicy::RoundRobin,
+                seed: 7,
+                ..Default::default()
+            });
+            let mut l = ForwardList::new();
+            for &v in &values {
+                l.push(&mut r, v);
+            }
+            let found: Vec<bool> = probes
+                .iter()
+                .map(|&p| l.find(&mut r, p).is_some())
+                .collect();
+            if let Some(prev) = &results {
+                prop_assert_eq!(prev.clone(), found.clone());
+            }
+            results = Some(found);
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,155 @@
+//! Property tests over the ISA core: verifier soundness, wire-format
+//! round trips, interpreter invariants (bounded steps, determinism,
+//! the scratchpad migration contract).
+
+use pulse::interp::logic_pass;
+use pulse::isa::{verify, Instr, Op, Program, Status, MAX_INSTRS};
+use pulse::testgen::{random_verified_program, random_workspace};
+use pulse::util::prng::Rng;
+use pulse::util::ptest::run_prop;
+use pulse::{prop_assert, prop_assert_eq};
+
+#[test]
+fn prop_verified_programs_terminate_within_length_bound() {
+    run_prop("terminate", 0xA11CE, 500, |rng| {
+        let p = random_verified_program(rng, MAX_INSTRS);
+        let mut ws = random_workspace(rng);
+        let r = logic_pass(&p, &mut ws);
+        // forward-only jumps: dynamic steps <= static length (+1 for
+        // the fall-off-the-end trap probe)
+        prop_assert!(
+            (r.steps as usize) <= p.len() + 1,
+            "steps {} > len {}",
+            r.steps,
+            p.len()
+        );
+        prop_assert!(r.status != Status::Running);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_program_wire_round_trip() {
+    run_prop("wire", 0xB0B, 300, |rng| {
+        let p = random_verified_program(rng, 32);
+        let buf = p.encode();
+        let q = Program::decode(&buf).ok_or("decode failed")?;
+        prop_assert_eq!(p, q);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_form_preserves_instructions() {
+    run_prop("pack", 0xCAFE, 200, |rng| {
+        let p = random_verified_program(rng, 24);
+        let (ops, imm) = p.pack();
+        for (k, i) in p.instrs.iter().enumerate() {
+            prop_assert_eq!(ops[k * 4], i.op as i32);
+            prop_assert_eq!(ops[k * 4 + 1], i.a as i32);
+            prop_assert_eq!(imm[k], i.imm);
+        }
+        // padding slots trap
+        for slot in p.len()..MAX_INSTRS {
+            prop_assert_eq!(ops[slot * 4], Op::Trap as i32);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_interpreter_is_deterministic() {
+    run_prop("deterministic", 0xD00D, 200, |rng| {
+        let p = random_verified_program(rng, 32);
+        let ws0 = random_workspace(rng);
+        let mut a = ws0.clone();
+        let mut b = ws0;
+        let ra = logic_pass(&p, &mut a);
+        let rb = logic_pass(&p, &mut b);
+        prop_assert_eq!(ra, rb);
+        prop_assert!(a == b, "workspaces diverged");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corrupt_programs_rejected_by_verifier() {
+    run_prop("mutation", 0x5EED, 300, |rng| {
+        let p = random_verified_program(rng, 16);
+        let mut instrs = p.instrs.clone();
+        let idx = rng.below(instrs.len() as u64) as usize;
+        match rng.below(3) {
+            0 => {
+                if idx == 0 {
+                    return Ok(()); // self-jump also rejected; skip
+                }
+                instrs[idx] = Instr::new(Op::Jmp, 0, 0, 0, 0); // backward
+            }
+            1 => instrs[idx] = Instr::new(Op::Movi, 200, 0, 0, 1),
+            _ => instrs[idx] = Instr::new(Op::Ldd, 1, 0, 0, 9999),
+        }
+        // re-terminate if we clobbered the tail terminal with a
+        // non-terminal? (Movi/Ldd at the tail also fails the tail rule,
+        // which still counts as rejection.)
+        let mutated = Program::new(instrs, p.load_words);
+        prop_assert!(
+            verify(&mutated).is_err(),
+            "verifier accepted a corrupt program at idx {}",
+            idx
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scratchpad_is_the_only_cross_iteration_state() {
+    // With registers reset (as the accelerator does before each pass)
+    // and identical r0/sp/data, outcomes must match — the §5 migration
+    // contract that lets traversals move between memory nodes.
+    run_prop("sp-contract", 0xFACE, 200, |rng| {
+        let p = random_verified_program(rng, 24);
+        let base = random_workspace(rng);
+        let mut a = base.clone();
+        let mut b = base.clone();
+        a.regs = [0; pulse::isa::NREG];
+        b.regs = [0; pulse::isa::NREG];
+        a.regs[0] = 0x1234;
+        b.regs[0] = 0x1234;
+        let ra = logic_pass(&p, &mut a);
+        let rb = logic_pass(&p, &mut b);
+        prop_assert_eq!(ra, rb);
+        prop_assert!(a.sp == b.sp && a.data == b.data);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_status_codes_round_trip_via_i32() {
+    let mut rng = Rng::new(1);
+    for _ in 0..100 {
+        let v = (rng.below(4)) as i32;
+        let s = Status::from_i32(v);
+        assert_eq!(s as i32, v);
+    }
+}
+
+#[test]
+fn prop_cost_model_monotone_in_length() {
+    use pulse::isa::CostModel;
+    run_prop("cost-monotone", 0x12345, 100, |rng| {
+        let p = random_verified_program(rng, 30);
+        let m = CostModel::default();
+        let c = m.cost(&p);
+        prop_assert!(c.t_c_ns > 0.0 && c.t_d_ns > 0.0);
+        // appending a NOP before the terminal increases t_c
+        let mut longer = p.instrs.clone();
+        let term = longer.pop().unwrap();
+        longer.push(Instr::new(Op::Nop, 0, 0, 0, 0));
+        longer.push(term);
+        if longer.len() <= MAX_INSTRS {
+            let p2 = Program::new(longer, p.load_words);
+            prop_assert!(m.cost(&p2).t_c_ns > c.t_c_ns);
+        }
+        Ok(())
+    });
+}
