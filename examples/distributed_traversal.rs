@@ -1,31 +1,38 @@
 //! Distributed pointer traversals (paper §5): watch a single traversal
 //! hop across memory nodes via in-network re-routing, and compare
-//! PULSE vs PULSE-ACC (return-to-CPU) timing.
+//! PULSE vs PULSE-ACC timing through the unified `TraversalBackend`
+//! trait (the same interface the figure benches drive every compared
+//! system through).
 //!
 //!     cargo run --release --example distributed_traversal
 
+use pulse::backend::TraversalBackend;
+use pulse::bench_support::make_backend;
 use pulse::ds::ForwardList;
 use pulse::isa::SP_WORDS;
 use pulse::rack::{Op, Rack, RackConfig};
 
-fn build(in_network: bool) -> (Rack, ForwardList) {
-    let mut rack = Rack::new(RackConfig {
+fn rack_cfg() -> RackConfig {
+    RackConfig {
         nodes: 4,
         node_capacity: 64 << 20,
         granularity: 4096, // 4 KB slabs: aggressive fragmentation
-        in_network_routing: in_network,
         ..Default::default()
-    });
+    }
+}
+
+fn build_list(rack: &mut Rack) -> ForwardList {
     let mut list = ForwardList::new();
     for i in 0..5_000 {
-        list.push(&mut rack, i);
+        list.push(rack, i);
     }
-    (rack, list)
+    list
 }
 
 fn main() {
     // --- functional: where does one traversal go? -----------------------
-    let (mut rack, list) = build(true);
+    let mut rack = Rack::new(rack_cfg());
+    let list = build_list(&mut rack);
     println!("list of 5000 nodes over 4 KB slabs on 4 memory nodes\n");
 
     let owners: Vec<_> = {
@@ -54,35 +61,34 @@ fn main() {
         rack.switch.stats.reroutes - before
     );
 
-    // --- timed: PULSE vs PULSE-ACC (Fig. 9) ------------------------------
-    let run = |in_network: bool| {
-        let (mut rack, list) = build(in_network);
+    // --- timed: PULSE vs PULSE-ACC (Fig. 9) through the trait -----------
+    // Both systems are `TraversalBackend`s; the same pre-materialized
+    // batch goes through each via the open-loop `serve_batch` path.
+    let run = |kind: &str| {
+        let mut backend = make_backend(kind, rack_cfg());
+        let list = build_list(backend.rack_mut());
         let prog = list.find_program();
-        let head = list.head;
-        let mut n = 0;
-        let report = rack.serve(
-            move |_| {
-                n += 1;
-                if n > 100 {
-                    return None;
-                }
+        let ops: Vec<Op> = (1..=100i64)
+            .map(|n| {
                 let mut sp = [0i64; SP_WORDS];
                 sp[0] = 4000 + (n % 900);
-                Some(Op::new(prog.clone(), head, sp))
-            },
-            4,
-        );
-        report
+                Op::new(prog.clone(), list.head, sp)
+            })
+            .collect();
+        let report = backend.serve_batch(&ops, 4);
+        (report, backend.metrics())
     };
-    let pulse = run(true);
-    let acc = run(false);
+    let (pulse, pm) = run("pulse");
+    let (acc, am) = run("pulse-acc");
     println!("\nFig. 9 shape — deep traversals (≈4000 hops):");
     println!(
-        "  PULSE     : mean {:.1} µs  (in-network re-routing)",
+        "  {:<10}: mean {:.1} µs  (in-network re-routing)",
+        pm.name,
         pulse.latency.mean() / 1e3
     );
     println!(
-        "  PULSE-ACC : mean {:.1} µs  ({:.2}x)",
+        "  {:<10}: mean {:.1} µs  ({:.2}x)",
+        am.name,
         acc.latency.mean() / 1e3,
         acc.latency.mean() / pulse.latency.mean()
     );

@@ -1,11 +1,14 @@
 //! Appendix C.1 (Fig. 2 extended): network and memory bandwidth
-//! utilization. Expected shape: PULSE/RPC sustain high memory-bandwidth
+//! utilization, measured through the `TraversalBackend` trait's batched
+//! serving path. Expected shape: PULSE/RPC sustain high memory-bandwidth
 //! use; the swap-cache baseline trickles (<1 Gbps network); WebService
 //! becomes network-bound at 3–4 nodes due to its 8 KB responses.
 
-use pulse::bench_support::{bench_rack, build_app, Table};
+use pulse::backend::TraversalBackend;
+use pulse::bench_support::{build_app, make_backend, Table};
+use pulse::rack::RackConfig;
 
-fn main() {
+fn main() -> std::io::Result<()> {
     let mut tbl = Table::new(
         "Appendix Fig. 2: PULSE bandwidth utilization",
         &[
@@ -19,9 +22,11 @@ fn main() {
     );
     for app_name in ["webservice", "wiredtiger", "btrdb"] {
         for nodes in [1usize, 2, 3, 4] {
-            let mut rack = bench_rack(nodes, 64 << 10);
-            let app = build_app(&mut rack, app_name, 7);
-            let rep = app.serve(&mut rack, 800, 256, true, 2, 11);
+            let mut backend =
+                make_backend("pulse", RackConfig::bench(nodes, 64 << 10));
+            let app = build_app(backend.rack_mut(), app_name, 7);
+            let ops = app.materialize_ops(800, true, 2, 11);
+            let rep = backend.serve_batch(&ops, 256);
             let mem_gbps = rep.mem_bytes as f64
                 / rep.makespan_ns.max(1) as f64;
             let net_gbps = rep.net_bytes as f64 * 8.0
@@ -37,9 +42,10 @@ fn main() {
         }
     }
     tbl.print();
-    tbl.save_csv("appendix_bandwidth");
+    tbl.save_csv("appendix_bandwidth")?;
     println!(
         "\n(swap-cache comparison: its fault pipeline sustains only a \
          few Gbps — see fig7's Cache throughput column)"
     );
+    Ok(())
 }

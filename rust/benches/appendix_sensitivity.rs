@@ -79,7 +79,7 @@ fn access_pattern() {
         ]);
     }
     tbl.print();
-    tbl.save_csv("appendix_access_pattern");
+    tbl.save_csv("appendix_access_pattern").expect("write bench_out CSV");
 }
 
 /// Write fraction sweep: offloaded update-in-place vs read.
@@ -121,7 +121,7 @@ fn write_fraction() {
         ]);
     }
     tbl.print();
-    tbl.save_csv("appendix_writes");
+    tbl.save_csv("appendix_writes").expect("write bench_out CSV");
 }
 
 /// Linked-list latency scales linearly in traversal length.
@@ -163,7 +163,7 @@ fn traversal_length() {
         ]);
     }
     tbl.print();
-    tbl.save_csv("appendix_traversal_length");
+    tbl.save_csv("appendix_traversal_length").expect("write bench_out CSV");
 }
 
 /// Partitioned vs random allocation for distributed B+Trees.
@@ -208,7 +208,7 @@ fn allocation_policy() {
         ]);
     }
     tbl.print();
-    tbl.save_csv("appendix_alloc_policy");
+    tbl.save_csv("appendix_alloc_policy").expect("write bench_out CSV");
 }
 
 /// Memory pipelines needed to saturate the node's 25 GB/s.
@@ -238,5 +238,5 @@ fn memory_pipelines() {
         ]);
     }
     tbl.print();
-    tbl.save_csv("appendix_mem_pipelines");
+    tbl.save_csv("appendix_mem_pipelines").expect("write bench_out CSV");
 }

@@ -1,0 +1,139 @@
+//! Batched open-loop serving vs closed-loop serving (wall clock).
+//!
+//! `TraversalBackend::serve_batch` amortizes per-request setup: op
+//! generation (YCSB key choosing + op construction) moves out of the
+//! timed region, and the rack reuses its DES scratch (event queue,
+//! per-node slot tables, run map) across calls instead of reallocating
+//! per run. (Issue still clones each `Op` from the slice — the program
+//! is `Arc`-shared, so the clone is shallow; the measured win is
+//! generation + scratch reuse.) This bench measures both paths over
+//! the same YCSB-C workload and records the wall-clock serving rates +
+//! speedup in `bench_out/BENCH_backend_batch.json`.
+//!
+//! Virtual-time results are identical by construction (asserted below);
+//! the win is wall-clock ops/s of the simulator itself.
+
+use pulse::backend::TraversalBackend;
+use pulse::bench_support::{save_json, Table};
+use pulse::ds::HashMapDs;
+use pulse::isa::SP_WORDS;
+use pulse::rack::{Op, Rack, RackConfig};
+use pulse::util::json::Json;
+use pulse::util::zipf::KeyChooser;
+use pulse::util::prng::Rng;
+
+const KEYS: u64 = 100_000;
+const OPS: u64 = 20_000;
+const ROUNDS: usize = 5;
+const CONC: usize = 64;
+
+fn build(rack: &mut Rack) -> HashMapDs {
+    let mut m = HashMapDs::build(rack, 8192);
+    for k in 0..KEYS as i64 {
+        m.insert(rack, k, k * 3);
+    }
+    m
+}
+
+fn main() -> std::io::Result<()> {
+    let mut rack = Rack::new(RackConfig::bench(2, 1 << 20));
+    let m = build(&mut rack);
+    let prog = m.find_program();
+
+    // --- closed loop: ops generated inside the timed run -------------
+    let closed_t0 = std::time::Instant::now();
+    let mut closed_completed = 0u64;
+    let mut closed_makespan = 0u64;
+    for round in 0..ROUNDS {
+        let chooser = KeyChooser::scrambled_zipfian(KEYS);
+        let mut rng = Rng::new(round as u64 ^ 0xBA7C);
+        let prog = prog.clone();
+        let m = &m;
+        let rep = rack.serve(
+            move |i| {
+                if i >= OPS {
+                    return None;
+                }
+                let key = chooser.next(&mut rng) as i64;
+                let mut sp = [0i64; SP_WORDS];
+                sp[0] = key;
+                Some(Op::new(prog.clone(), m.bucket_ptr(key), sp))
+            },
+            CONC,
+        );
+        closed_completed += rep.completed;
+        closed_makespan += rep.makespan_ns;
+    }
+    let closed_wall_s = closed_t0.elapsed().as_secs_f64();
+
+    // --- open loop: pre-materialized batch, scratch reuse ------------
+    // (generation cost is paid here, outside the serving measurement)
+    let batches: Vec<Vec<Op>> = (0..ROUNDS)
+        .map(|round| {
+            let chooser = KeyChooser::scrambled_zipfian(KEYS);
+            let mut rng = Rng::new(round as u64 ^ 0xBA7C);
+            (0..OPS)
+                .map(|_| {
+                    let key = chooser.next(&mut rng) as i64;
+                    let mut sp = [0i64; SP_WORDS];
+                    sp[0] = key;
+                    Op::new(prog.clone(), m.bucket_ptr(key), sp)
+                })
+                .collect()
+        })
+        .collect();
+    let batch_t0 = std::time::Instant::now();
+    let mut batch_completed = 0u64;
+    let mut batch_makespan = 0u64;
+    for batch in &batches {
+        let rep = TraversalBackend::serve_batch(&mut rack, batch, CONC);
+        batch_completed += rep.completed;
+        batch_makespan += rep.makespan_ns;
+    }
+    let batch_wall_s = batch_t0.elapsed().as_secs_f64();
+
+    assert_eq!(closed_completed, batch_completed);
+    assert_eq!(
+        closed_makespan, batch_makespan,
+        "same ops must yield identical virtual timing"
+    );
+
+    let closed_rate = closed_completed as f64 / closed_wall_s;
+    let batch_rate = batch_completed as f64 / batch_wall_s;
+    let speedup = batch_rate / closed_rate;
+
+    let mut tbl = Table::new(
+        "serve vs serve_batch (wall clock)",
+        &["path", "ops", "wall s", "ops/s (wall)"],
+    );
+    tbl.row(&[
+        "serve (closed loop)".into(),
+        closed_completed.to_string(),
+        format!("{closed_wall_s:.3}"),
+        format!("{closed_rate:.0}"),
+    ]);
+    tbl.row(&[
+        "serve_batch (open loop)".into(),
+        batch_completed.to_string(),
+        format!("{batch_wall_s:.3}"),
+        format!("{batch_rate:.0}"),
+    ]);
+    tbl.print();
+    println!("\nserve_batch speedup: {speedup:.2}x (same virtual-time results)");
+
+    let mut j = Json::obj();
+    j.set("bench", "backend_batch")
+        .set("workload", "ycsb-c/zipf hash lookups")
+        .set("keys", KEYS)
+        .set("ops_per_round", OPS)
+        .set("rounds", ROUNDS as u64)
+        .set("concurrency", CONC as u64)
+        .set("closed_loop_wall_s", closed_wall_s)
+        .set("closed_loop_ops_per_s", closed_rate)
+        .set("batch_wall_s", batch_wall_s)
+        .set("batch_ops_per_s", batch_rate)
+        .set("batch_speedup", speedup)
+        .set("virtual_makespan_ns", batch_makespan);
+    save_json("BENCH_backend_batch", &j)?;
+    Ok(())
+}

@@ -20,7 +20,7 @@ fn main() {
     tbl.row(&["logic (≈3 instr/iter eff.)".into(), "10".into()]);
     tbl.row(&["network stack (out)".into(), format!("{}", m.accel_net_stack_ns)]);
     tbl.print();
-    tbl.save_csv("fig10_breakdown");
+    tbl.save_csv("fig10_breakdown").expect("write bench_out CSV");
 
     // composition check: a single-iteration request through the DES
     // should cost ≈ 2·net_stack + sched + tcam+memctl+interconnect+

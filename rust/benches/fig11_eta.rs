@@ -45,7 +45,7 @@ fn main() {
         ]);
     }
     tbl.print();
-    tbl.save_csv("fig11_eta");
+    tbl.save_csv("fig11_eta").expect("write bench_out CSV");
     println!(
         "\npaper: decreasing η from 1 to 1/4 improves perf/W by ~1.9x \
          for workloads with t_c/t_d << 1"

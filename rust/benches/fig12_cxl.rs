@@ -35,7 +35,7 @@ fn main() {
         }
     }
     tbl.print();
-    tbl.save_csv("fig12_cxl");
+    tbl.save_csv("fig12_cxl").expect("write bench_out CSV");
     println!(
         "\npaper: PULSE reduces CXL slowdown 3-5x (4 nodes), \
          4.2-5.2x (1 node); our conservative Ethernet-class crossing \

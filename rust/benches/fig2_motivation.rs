@@ -125,7 +125,7 @@ fn fig2a() {
         }
     }
     tbl.print();
-    tbl.save_csv("fig2a_traversal_fraction");
+    tbl.save_csv("fig2a_traversal_fraction").expect("write bench_out CSV");
 }
 
 /// (b) + (c): cross-node requests vs granularity; crossing CDF.
@@ -190,9 +190,9 @@ fn fig2bc() {
         }
     }
     tbl.print();
-    tbl.save_csv("fig2b_crossings");
+    tbl.save_csv("fig2b_crossings").expect("write bench_out CSV");
     cdf.print();
-    cdf.save_csv("fig2c_crossing_cdf");
+    cdf.save_csv("fig2c_crossing_cdf").expect("write bench_out CSV");
 }
 
 fn human(b: u64) -> String {

@@ -1,19 +1,23 @@
 //! Fig. 7 (+ Table 3): application latency & throughput for the five
 //! compared systems across 1–4 memory nodes.
 //!
-//! PULSE numbers come from the full rack DES (functional traversals +
-//! pipeline/network timing); baselines reuse the measured workload
-//! stats with their calibrated execution models (see DESIGN.md §2).
+//! All systems are driven through the unified `TraversalBackend` trait:
+//! PULSE runs the full rack DES; Cache/RPC/RPC-ARM/Cache+RPC replay the
+//! same functional traversals (each backend owns an identical rack
+//! layout) under their calibrated execution models (see DESIGN.md §2).
 //! Expected shape (paper): PULSE 9–34× lower latency and 28–171× higher
 //! throughput than Cache; RPC ≈ 1–1.4× lower latency than PULSE on one
 //! node; PULSE 1.1–1.36× higher throughput than RPC on multi-node.
 
-use pulse::baselines::{cache::CachedSwapSim, RpcKind, RpcModel};
+use pulse::backend::TraversalBackend;
 use pulse::bench_support::{
-    bench_rack, build_app, fmt_kops, fmt_us, stats_from_report, Table,
+    build_app, fmt_kops, fmt_us, make_backend, Table,
 };
+use pulse::rack::RackConfig;
 
-fn main() {
+const SYSTEMS: [&str; 5] = ["pulse", "rpc", "rpc-arm", "cache-rpc", "cache"];
+
+fn main() -> std::io::Result<()> {
     let mut lat_tbl = Table::new(
         "Fig. 7 (top): mean latency, us",
         &["app", "nodes", "PULSE", "RPC", "RPC-ARM", "Cache+RPC", "Cache"],
@@ -29,73 +33,69 @@ fn main() {
 
     for app_name in ["webservice", "wiredtiger", "btrdb"] {
         for nodes in [1usize, 2, 3, 4] {
-            let mut rack = bench_rack(nodes, 64 << 10);
-            let app = build_app(&mut rack, app_name, 7);
-            let ops = match app_name {
-                "webservice" => 2400,
-                _ => 1000,
-            };
-            // latency at light load, throughput at saturation — the
-            // standard split the paper's Fig. 7 panels use.
-            let lat_rep = app.serve(&mut rack, ops / 8, 2, true, 2, 11);
-            let rep = app.serve(&mut rack, ops, 256, true, 2, 13);
-            assert_eq!(rep.completed, ops, "{app_name}/{nodes}");
+            let mut lat_row =
+                vec![app_name.to_string(), nodes.to_string()];
+            let mut tput_row = lat_row.clone();
+            for sys in SYSTEMS {
+                let ops: u64 = match app_name {
+                    "webservice" => 2400,
+                    _ => 1000,
+                };
+                // the model backends re-trace every op; keep their run
+                // short (their latency/throughput are analytic anyway)
+                let ops = if sys == "pulse" { ops } else { ops / 4 };
+                let mut backend =
+                    make_backend(sys, RackConfig::bench(nodes, 64 << 10));
+                let app = build_app(backend.rack_mut(), app_name, 7);
+                // latency at light load, throughput at saturation — the
+                // standard split the paper's Fig. 7 panels use. The
+                // Cache baseline's latency panel runs on a separate
+                // backend so its LRU starts cold for both panels, as
+                // the old per-cell sim did; the DES/model backends get
+                // identical results from one shared backend.
+                let lat_rep = if sys == "cache" {
+                    let mut cold = make_backend(
+                        sys,
+                        RackConfig::bench(nodes, 64 << 10),
+                    );
+                    let a2 = build_app(cold.rack_mut(), app_name, 7);
+                    a2.serve_on(&mut *cold, ops / 8, 2, true, 2, 11)
+                } else {
+                    app.serve_on(&mut *backend, ops / 8, 2, true, 2, 11)
+                };
+                let rep =
+                    app.serve_on(&mut *backend, ops, 256, true, 2, 13);
+                assert_eq!(rep.completed, ops, "{sys}/{app_name}/{nodes}");
+                lat_row.push(fmt_us(lat_rep.latency.mean()));
+                tput_row.push(fmt_kops(rep.tput_ops_per_s));
 
-            let stats = stats_from_report(
-                &rep,
-                app.words_per_iter(),
-                app.resp_bytes(),
-                app.cpu_post_ns(),
-            );
-            if nodes == 1 {
-                t3.row(&[
-                    app_name.to_string(),
-                    format!("{:.2}", profile_ratio(&app)),
-                    format!("{:.0}", stats.avg_iters),
-                ]);
+                if sys == "pulse" && nodes == 1 {
+                    t3.row(&[
+                        app_name.to_string(),
+                        format!("{:.2}", profile_ratio(&app)),
+                        format!(
+                            "{:.0}",
+                            rep.total_iters as f64
+                                / rep.completed.max(1) as f64
+                        ),
+                    ]);
+                }
             }
-
-            let rpc = RpcModel::new(RpcKind::Rpc).metrics(&stats, nodes);
-            let arm =
-                RpcModel::new(RpcKind::RpcArm).metrics(&stats, nodes);
-            let mut crpc_model = RpcModel::new(RpcKind::CacheRpc);
-            crpc_model.cache_hit_rate = 0.05; // poor locality (paper)
-            let crpc = crpc_model.metrics(&stats, nodes);
-
-            // Cache baseline: swap sim over real page traces
-            let (cache_lat, cache_tput) =
-                cache_numbers(&mut rack, &app, &stats);
-
-            lat_tbl.row(&[
-                app_name.to_string(),
-                nodes.to_string(),
-                fmt_us(lat_rep.latency.mean()),
-                fmt_us(rpc.avg_latency_ns),
-                fmt_us(arm.avg_latency_ns),
-                fmt_us(crpc.avg_latency_ns),
-                fmt_us(cache_lat),
-            ]);
-            tput_tbl.row(&[
-                app_name.to_string(),
-                nodes.to_string(),
-                fmt_kops(rep.tput_ops_per_s),
-                fmt_kops(rpc.tput_ops_per_s),
-                fmt_kops(arm.tput_ops_per_s),
-                fmt_kops(crpc.tput_ops_per_s),
-                fmt_kops(cache_tput),
-            ]);
+            lat_tbl.row(&lat_row);
+            tput_tbl.row(&tput_row);
         }
     }
 
     t3.print();
     lat_tbl.print();
-    lat_tbl.save_csv("fig7_latency");
+    lat_tbl.save_csv("fig7_latency")?;
     tput_tbl.print();
-    tput_tbl.save_csv("fig7_throughput");
+    tput_tbl.save_csv("fig7_throughput")?;
 
     println!("\nheadline checks (full map in EXPERIMENTS.md):");
     println!("  - PULSE vs Cache latency/throughput gaps printed above");
     println!("  - RPC single-node latency should sit near/below PULSE");
+    Ok(())
 }
 
 fn profile_ratio(app: &pulse::bench_support::BenchApp) -> f64 {
@@ -105,52 +105,4 @@ fn profile_ratio(app: &pulse::bench_support::BenchApp) -> f64 {
         BenchApp::Wt(a) => a.profile().ratio,
         BenchApp::Bt(a) => a.profile(2 * pulse::bench_support::SEC).ratio,
     }
-}
-
-/// Run the swap-cache baseline over real traversal page traces.
-fn cache_numbers(
-    rack: &mut pulse::rack::Rack,
-    app: &pulse::bench_support::BenchApp,
-    stats: &pulse::baselines::WorkloadStats,
-) -> (f64, f64) {
-    use pulse::baselines::cache::trace_op;
-    use pulse::bench_support::BenchApp;
-    use pulse::isa::SP_WORDS;
-
-    // cache sized at ~25% of the bench-scale working set (the paper
-    // runs 2 GB caches against much larger datasets; the cache:WSS
-    // ratio is what shapes the result)
-    let mut sim = CachedSwapSim::new(4 << 20);
-    let mut total_ns = 0u64;
-    let mut pages_per_op = 0.0;
-    let n = 150u64;
-    let mut rng = pulse::util::prng::Rng::new(77);
-    for _ in 0..n {
-        let (iter, start, sp, extra) = match app {
-            BenchApp::Web(a) => {
-                let uid = rng.below(a.users) as i64;
-                let mut sp = [0i64; SP_WORDS];
-                sp[0] = uid;
-                (a.index.find_program(), a.index.bucket_ptr(uid), sp, 8192)
-            }
-            BenchApp::Wt(a) => {
-                let k = rng.below(a.keys) as i64;
-                let mut sp = [0i64; SP_WORDS];
-                sp[0] = k;
-                (a.tree.get_program(), a.tree.root, sp, 240 * 50)
-            }
-            BenchApp::Bt(a) => {
-                let mut sp = [0i64; SP_WORDS];
-                sp[0] = i64::MAX / 2;
-                sp[3] = 0;
-                (a.tree.sum_program(), a.tree.first_leaf, sp, 0)
-            }
-        };
-        let (_out, trace) = trace_op(rack, &iter, start, sp, extra);
-        pages_per_op += trace.pages.len() as f64 / n as f64;
-        total_ns += sim.op_latency_ns(&trace, stats.cpu_post_ns);
-    }
-    let lat = total_ns as f64 / n as f64;
-    let tput = sim.tput_bound_ops_per_s(pages_per_op);
-    (lat, tput)
 }

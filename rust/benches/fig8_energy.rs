@@ -1,13 +1,20 @@
 //! Fig. 8: energy per operation at memory-bandwidth-saturating load.
+//! The saturation run drives PULSE through the `TraversalBackend`
+//! trait's open-loop `serve_batch` path; the RPC-family throughputs
+//! come from their calibrated models over the measured workload stats.
 //! Expected shape: PULSE 4.5–5× below RPC; PULSE-ASIC a further ~6.3–7×;
 //! RPC-ARM can exceed RPC (WebService).
 
 use pulse::accel::AccelConfig;
+use pulse::backend::TraversalBackend;
 use pulse::baselines::{RpcKind, RpcModel};
-use pulse::bench_support::{bench_rack, build_app, stats_from_report, Table};
+use pulse::bench_support::{
+    build_app, make_backend, stats_from_report, Table,
+};
 use pulse::energy::{EnergySystem, PowerModel};
+use pulse::rack::RackConfig;
 
-fn main() {
+fn main() -> std::io::Result<()> {
     let mut tbl = Table::new(
         "Fig. 8: energy per operation, µJ",
         &["app", "PULSE", "PULSE-ASIC", "RPC", "RPC-ARM", "Cache+RPC"],
@@ -16,9 +23,11 @@ fn main() {
     let cfg = AccelConfig::paper_default();
 
     for app_name in ["webservice", "wiredtiger", "btrdb"] {
-        let mut rack = bench_rack(4, 64 << 10);
-        let app = build_app(&mut rack, app_name, 7);
-        let rep = app.serve(&mut rack, 600, 256, true, 2, 11);
+        let mut backend =
+            make_backend("pulse", RackConfig::bench(4, 64 << 10));
+        let app = build_app(backend.rack_mut(), app_name, 7);
+        let ops = app.materialize_ops(600, true, 2, 11);
+        let rep = backend.serve_batch(&ops, 256);
         let stats = stats_from_report(
             &rep,
             app.words_per_iter(),
@@ -50,7 +59,7 @@ fn main() {
         ]);
     }
     tbl.print();
-    tbl.save_csv("fig8_energy");
+    tbl.save_csv("fig8_energy")?;
 
     // node-power summary for the record
     println!("\nnode power model (W):");
@@ -67,4 +76,5 @@ fn main() {
         power.rpc_node_w() / power.pulse_node_w(&cfg),
         power.pulse_node_w(&cfg) / power.pulse_asic_node_w(&cfg)
     );
+    Ok(())
 }

@@ -1,33 +1,35 @@
 //! Fig. 9: impact of in-network distributed traversals — PULSE vs
-//! PULSE-ACC (which returns to the CPU node on every crossing).
+//! PULSE-ACC (which returns to the CPU node on every crossing), both
+//! driven through the `TraversalBackend` trait (closed-loop `serve` for
+//! latency, open-loop `serve_batch` for the saturation run).
 //! Expected: identical at 1 node; ACC 1.02–1.15× higher latency at 2
 //! nodes; identical throughput (memory-bandwidth bound either way).
 
-use pulse::bench_support::{fmt_kops, fmt_us, Table};
-use pulse::rack::{Rack, RackConfig};
+use pulse::backend::TraversalBackend;
+use pulse::bench_support::{fmt_kops, fmt_us, make_backend, Table, SEC};
+use pulse::rack::{Op, RackConfig};
 use pulse::workloads::{YcsbSpec, YcsbWorkload};
 
-fn run(app: &str, nodes: usize, in_network: bool) -> (f64, f64, u64) {
-    let mut cfg = RackConfig {
-        nodes,
-        node_capacity: 1 << 30,
-        granularity: 64 << 10,
-        in_network_routing: in_network,
-        ..Default::default()
-    };
+fn run(app: &str, nodes: usize, kind: &str) -> (f64, f64, u64) {
+    let mut cfg = RackConfig::bench(nodes, 64 << 10);
     cfg.seed = 7;
-    let mut rack = Rack::new(cfg);
+    let mut backend = make_backend(kind, cfg);
     match app {
         "wiredtiger" => {
-            let a = pulse::apps::WiredTigerApp::build(&mut rack, 60_000, 5);
+            let a = pulse::apps::WiredTigerApp::build(
+                backend.rack_mut(),
+                60_000,
+                5,
+            );
             let w = YcsbWorkload::new(YcsbSpec::E, 60_000, true, 9)
                 .with_max_scan(60);
             let mut lat_ops = a.op_stream(w, 200);
-            let lat = rack.serve(move |i| lat_ops(i), 2);
-            let w2 = YcsbWorkload::new(YcsbSpec::E, 60_000, true, 9)
+            let lat = backend.serve(&mut lat_ops, 2);
+            let mut w2 = YcsbWorkload::new(YcsbSpec::E, 60_000, true, 9)
                 .with_max_scan(60);
-            let mut tput_ops = a.op_stream(w2, 600);
-            let tput = rack.serve(move |i| tput_ops(i), 128);
+            let batch: Vec<Op> =
+                (0..600).map(|_| a.make_op(&w2.next_op())).collect();
+            let tput = backend.serve_batch(&batch, 128);
             (
                 lat.latency.mean(),
                 tput.tput_ops_per_s,
@@ -35,13 +37,17 @@ fn run(app: &str, nodes: usize, in_network: bool) -> (f64, f64, u64) {
             )
         }
         _ => {
-            let a = pulse::apps::BtrDbApp::build(&mut rack, 40_000, 5);
-            let mut lat_ops =
-                a.op_stream(2 * pulse::bench_support::SEC, 200, 9);
-            let lat = rack.serve(move |i| lat_ops(i), 2);
-            let mut tput_ops =
-                a.op_stream(2 * pulse::bench_support::SEC, 600, 11);
-            let tput = rack.serve(move |i| tput_ops(i), 128);
+            let a = pulse::apps::BtrDbApp::build(
+                backend.rack_mut(),
+                40_000,
+                5,
+            );
+            let mut lat_ops = a.op_stream(2 * SEC, 200, 9);
+            let lat = backend.serve(&mut lat_ops, 2);
+            let mut gen = a.op_stream(2 * SEC, 600, 11);
+            let batch: Vec<Op> =
+                (0..600u64).map_while(|i| gen(i)).collect();
+            let tput = backend.serve_batch(&batch, 128);
             (
                 lat.latency.mean(),
                 tput.tput_ops_per_s,
@@ -51,7 +57,7 @@ fn run(app: &str, nodes: usize, in_network: bool) -> (f64, f64, u64) {
     }
 }
 
-fn main() {
+fn main() -> std::io::Result<()> {
     let mut tbl = Table::new(
         "Fig. 9: PULSE vs PULSE-ACC",
         &[
@@ -66,8 +72,8 @@ fn main() {
     );
     for app in ["wiredtiger", "btrdb"] {
         for nodes in [1usize, 2] {
-            let (pl, pt, _cross) = run(app, nodes, true);
-            let (al, at, _) = run(app, nodes, false);
+            let (pl, pt, _cross) = run(app, nodes, "pulse");
+            let (al, at, _) = run(app, nodes, "pulse-acc");
             tbl.row(&[
                 app.to_string(),
                 nodes.to_string(),
@@ -80,5 +86,6 @@ fn main() {
         }
     }
     tbl.print();
-    tbl.save_csv("fig9_pulse_vs_acc");
+    tbl.save_csv("fig9_pulse_vs_acc")?;
+    Ok(())
 }

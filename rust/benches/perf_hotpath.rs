@@ -4,12 +4,9 @@
 //!   * XLA batched logic engine (lane-iterations/s through PJRT).
 //! Results go to EXPERIMENTS.md §Perf; see DESIGN.md §6 for targets.
 
-use pulse::accel::XlaBatchEngine;
 use pulse::bench_support::{bench_rack, build_app, Table};
 use pulse::interp::{logic_pass, Workspace};
 use pulse::isa::Status;
-use pulse::runtime::PjrtRuntime;
-use pulse::util::prng::Rng;
 use std::time::Instant;
 
 fn main() {
@@ -75,51 +72,64 @@ fn main() {
         ]);
     }
 
-    // 3. XLA batched logic engine via PJRT
-    match PjrtRuntime::new(PjrtRuntime::default_dir())
-        .and_then(|rt| rt.load_logic_step(256))
+    // 3. XLA batched logic engine via PJRT (only with the xla feature)
+    #[cfg(feature = "xla")]
     {
-        Ok(exe) => {
-            let eng = XlaBatchEngine::xla(&exe);
-            let p = pulse::testgen::list_find_program();
-            let mut rng = Rng::new(2);
-            let ws: Vec<Workspace> = (0..256)
-                .map(|_| {
-                    let mut w = pulse::testgen::random_workspace(&mut rng);
-                    w.data[2] = 0; // ensure termination
-                    w
-                })
-                .collect();
-            // warm-up
-            let _ = eng.step(&p, &mut ws.clone()).unwrap();
-            let rounds = 50;
-            let t0 = Instant::now();
-            for _ in 0..rounds {
-                let mut batch = ws.clone();
-                let _ = eng.step(&p, &mut batch).unwrap();
+        use pulse::accel::XlaBatchEngine;
+        use pulse::runtime::PjrtRuntime;
+        use pulse::util::prng::Rng;
+        match PjrtRuntime::new(PjrtRuntime::default_dir())
+            .and_then(|rt| rt.load_logic_step(256))
+        {
+            Ok(exe) => {
+                let eng = XlaBatchEngine::xla(&exe);
+                let p = pulse::testgen::list_find_program();
+                let mut rng = Rng::new(2);
+                let ws: Vec<Workspace> = (0..256)
+                    .map(|_| {
+                        let mut w =
+                            pulse::testgen::random_workspace(&mut rng);
+                        w.data[2] = 0; // ensure termination
+                        w
+                    })
+                    .collect();
+                // warm-up
+                let _ = eng.step(&p, &mut ws.clone()).unwrap();
+                let rounds = 50;
+                let t0 = Instant::now();
+                for _ in 0..rounds {
+                    let mut batch = ws.clone();
+                    let _ = eng.step(&p, &mut batch).unwrap();
+                }
+                let dt = t0.elapsed().as_secs_f64();
+                let lane_passes = rounds as f64 * 256.0;
+                tbl.row(&[
+                    "XLA engine (b=256)".into(),
+                    "lane passes/s".into(),
+                    format!("{:.0}k", lane_passes / dt / 1e3),
+                ]);
+                tbl.row(&[
+                    "XLA engine (b=256)".into(),
+                    "batch call latency".into(),
+                    format!("{:.2} ms", dt / rounds as f64 * 1e3),
+                ]);
             }
-            let dt = t0.elapsed().as_secs_f64();
-            let lane_passes = rounds as f64 * 256.0;
-            tbl.row(&[
-                "XLA engine (b=256)".into(),
-                "lane passes/s".into(),
-                format!("{:.0}k", lane_passes / dt / 1e3),
-            ]);
-            tbl.row(&[
-                "XLA engine (b=256)".into(),
-                "batch call latency".into(),
-                format!("{:.2} ms", dt / rounds as f64 * 1e3),
-            ]);
-        }
-        Err(e) => {
-            tbl.row(&[
-                "XLA engine".into(),
-                "skipped".into(),
-                format!("{e:#}"),
-            ]);
+            Err(e) => {
+                tbl.row(&[
+                    "XLA engine".into(),
+                    "skipped".into(),
+                    format!("{e:#}"),
+                ]);
+            }
         }
     }
+    #[cfg(not(feature = "xla"))]
+    tbl.row(&[
+        "XLA engine".into(),
+        "skipped".into(),
+        "build with --features xla".into(),
+    ]);
 
     tbl.print();
-    tbl.save_csv("perf_hotpath");
+    tbl.save_csv("perf_hotpath").expect("write bench_out CSV");
 }

@@ -81,7 +81,7 @@ fn main() {
         }
     }
     tbl.print();
-    tbl.save_csv("table4_ablation");
+    tbl.save_csv("table4_ablation").expect("write bench_out CSV");
 
     // headline: 1L+4M vs coupled 4x4
     let (t_pulse, l_pulse) = measure(AccelConfig {

@@ -1,42 +1,67 @@
-//! XLA-backed batched logic-pipeline engine.
+//! Batched logic-pipeline engine with two interchangeable backends.
 //!
-//! Realizes the accelerator's logic pipeline with the AOT artifact
+//! Realizes the accelerator's logic pipeline either natively (the Rust
+//! interpreter, always available) or with the AOT XLA artifact
 //! (L1 Pallas kernel lowered through L2 jax, compiled once via PJRT):
 //! concurrent in-flight iterators running the *same program* are packed
 //! into lanes of one `logic_batch_step` call, mirroring how the FPGA
-//! logic pipeline multiplexes workspaces. Semantics are bit-identical to
-//! the native interpreter (enforced by integration tests); use `Native`
-//! for latency-critical paths and `Xla` to exercise/measure the
-//! three-layer stack.
-
-use anyhow::Result;
+//! logic pipeline multiplexes workspaces. Semantics are bit-identical
+//! between the two (enforced by integration tests).
+//!
+//! The XLA backend is gated behind the `xla` cargo feature (the
+//! default build is std-only); without it only `native()` exists and
+//! `step` never fails.
 
 use crate::interp::{logic_pass, Workspace};
 use crate::isa::{Program, Status};
+#[cfg(feature = "xla")]
 use crate::runtime::LogicStepExe;
 
-/// Which engine executes logic passes.
-pub enum Engine<'a> {
-    Native,
-    Xla(&'a LogicStepExe),
+/// Engine failure (only reachable through the XLA backend).
+#[derive(Debug)]
+pub struct EngineError(pub String);
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "logic engine error: {}", self.0)
+    }
 }
+
+impl std::error::Error for EngineError {}
 
 /// Batch executor over same-program workspaces.
 pub struct XlaBatchEngine<'a> {
-    engine: Engine<'a>,
+    #[cfg(feature = "xla")]
+    exe: Option<&'a LogicStepExe>,
+    #[cfg(not(feature = "xla"))]
+    _marker: std::marker::PhantomData<&'a ()>,
 }
 
 impl<'a> XlaBatchEngine<'a> {
+    /// Native-interpreter engine (the latency-critical default).
     pub fn native() -> Self {
-        Self { engine: Engine::Native }
+        Self {
+            #[cfg(feature = "xla")]
+            exe: None,
+            #[cfg(not(feature = "xla"))]
+            _marker: std::marker::PhantomData,
+        }
     }
 
+    /// XLA-artifact engine (exercises/measures the three-layer stack).
+    #[cfg(feature = "xla")]
     pub fn xla(exe: &'a LogicStepExe) -> Self {
-        Self { engine: Engine::Xla(exe) }
+        Self { exe: Some(exe) }
     }
 
+    #[cfg(feature = "xla")]
     pub fn is_xla(&self) -> bool {
-        matches!(self.engine, Engine::Xla(_))
+        self.exe.is_some()
+    }
+
+    #[cfg(not(feature = "xla"))]
+    pub fn is_xla(&self) -> bool {
+        false
     }
 
     /// Run one logic pass over every workspace (all running `program`).
@@ -46,20 +71,22 @@ impl<'a> XlaBatchEngine<'a> {
         &self,
         program: &Program,
         ws: &mut [Workspace],
-    ) -> Result<Vec<Status>> {
-        match &self.engine {
-            Engine::Native => Ok(ws
-                .iter_mut()
-                .map(|w| logic_pass(program, w).status)
-                .collect()),
-            Engine::Xla(exe) => {
-                let mut out = Vec::with_capacity(ws.len());
-                for chunk in ws.chunks_mut(exe.batch) {
-                    out.extend(exe.run(program, chunk)?);
-                }
-                Ok(out)
+    ) -> Result<Vec<Status>, EngineError> {
+        #[cfg(feature = "xla")]
+        if let Some(exe) = self.exe {
+            let mut out = Vec::with_capacity(ws.len());
+            for chunk in ws.chunks_mut(exe.batch) {
+                out.extend(
+                    exe.run(program, chunk)
+                        .map_err(|e| EngineError(e.to_string()))?,
+                );
             }
+            return Ok(out);
         }
+        Ok(ws
+            .iter_mut()
+            .map(|w| logic_pass(program, w).status)
+            .collect())
     }
 }
 
@@ -84,6 +111,7 @@ mod tests {
             })
             .collect();
         let eng = XlaBatchEngine::native();
+        assert!(!eng.is_xla());
         let st = eng.step(&p, &mut ws).unwrap();
         assert!(st.iter().all(|&s| s == Status::Return));
         for (i, w) in ws.iter().enumerate() {

@@ -14,6 +14,7 @@ use crate::ds::bplustree::{BPlusTree, FANOUT};
 use crate::ds::{SP_ACC_SUM, SP_KEY};
 use crate::isa::SP_WORDS;
 use crate::rack::{Op, Rack, Stage, StartAddr};
+#[cfg(feature = "xla")]
 use crate::runtime::WindowAggExe;
 use crate::workloads::timeseries::{PmuSample, PmuSource};
 
@@ -82,6 +83,8 @@ impl BtrDbApp {
     /// Fine-grained per-window (sum, mean, min, max) over a dense tile
     /// of 4096 samples starting at `start_idx`, through the AOT XLA
     /// window_agg artifact (the Mr.-Plotter-style rendering path).
+    /// Requires the `xla` feature (the PJRT runtime path).
+    #[cfg(feature = "xla")]
     pub fn render_tile(
         &self,
         exe: &WindowAggExe,

@@ -1,18 +1,18 @@
 //! WebService application (paper §6, from AIFM [127]): requests carry a
 //! user ID, resolved through an in-memory hash table to an 8 KB object,
-//! which is then encrypted (AES-128-CTR) and compressed (DEFLATE) before
-//! being returned. YCSB A/B/C with Zipf or uniform key choosers.
+//! which is then encrypted (ChaCha20 stream cipher, RFC 8439) and
+//! compressed (LZSS) before being returned. YCSB A/B/C with Zipf or
+//! uniform key choosers.
+//!
+//! The offline registry carries no `aes`/`flate2`, so both primitives
+//! are implemented in-repo (std-only): real CPU work with the same
+//! cost shape as the paper's AES-CTR + DEFLATE pipeline.
 //!
 //! The hash lookup is the offloaded pointer traversal; the 8 KB object
 //! rides back on the response (modeled as response payload); the
 //! encrypt+compress really runs on the CPU — its measured per-op cost
 //! calibrates `Op::cpu_post_ns` for the DES.
 
-use aes::cipher::{BlockEncrypt, KeyInit};
-use aes::Aes128;
-use flate2::write::DeflateEncoder;
-use flate2::Compression;
-use std::io::Write;
 use std::sync::Arc;
 
 use super::WorkloadProfile;
@@ -55,24 +55,18 @@ impl WebServiceApp {
         Self { index, users, objects, post_ns, rng }
     }
 
-    /// Really run AES-CTR + DEFLATE over an 8 KB buffer and measure it.
+    /// Really run ChaCha20 + LZSS over an 8 KB buffer and measure it.
     pub fn process_object(data: &mut [u8]) -> Vec<u8> {
-        // AES-128-CTR via ECB on counter blocks XORed into the payload.
-        let key = [0x42u8; 16];
-        let cipher = Aes128::new(&key.into());
-        let mut ctr = [0u8; 16];
-        for (i, chunk) in data.chunks_mut(16).enumerate() {
-            ctr[0..8].copy_from_slice(&(i as u64).to_le_bytes());
-            let mut block = ctr.into();
-            cipher.encrypt_block(&mut block);
+        let key = [0x42424242u32; 8];
+        let nonce = [0u32, 0, 0x5EED];
+        let mut block = [0u8; 64];
+        for (bi, chunk) in data.chunks_mut(64).enumerate() {
+            chacha20_block(&key, bi as u32, &nonce, &mut block);
             for (b, k) in chunk.iter_mut().zip(block.iter()) {
                 *b ^= k;
             }
         }
-        let mut enc =
-            DeflateEncoder::new(Vec::new(), Compression::fast());
-        enc.write_all(data).unwrap();
-        enc.finish().unwrap()
+        lzss_compress(data)
     }
 
     fn calibrate_post() -> Ns {
@@ -173,6 +167,165 @@ impl WebServiceApp {
 /// `Arc` re-export convenience for op closures.
 pub type SharedIter = Arc<crate::compiler::CompiledIter>;
 
+// ---------------------------------------------------------------------
+// std-only crypto/compression primitives (see module docs)
+// ---------------------------------------------------------------------
+
+#[inline]
+fn quarter_round(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(16);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(12);
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(8);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(7);
+}
+
+/// One 64-byte ChaCha20 keystream block (RFC 8439 §2.3).
+fn chacha20_block(
+    key: &[u32; 8],
+    counter: u32,
+    nonce: &[u32; 3],
+    out: &mut [u8; 64],
+) {
+    let mut state = [
+        0x6170_7865,
+        0x3320_646e,
+        0x7962_2d32,
+        0x6b20_6574,
+        key[0],
+        key[1],
+        key[2],
+        key[3],
+        key[4],
+        key[5],
+        key[6],
+        key[7],
+        counter,
+        nonce[0],
+        nonce[1],
+        nonce[2],
+    ];
+    let init = state;
+    for _ in 0..10 {
+        quarter_round(&mut state, 0, 4, 8, 12);
+        quarter_round(&mut state, 1, 5, 9, 13);
+        quarter_round(&mut state, 2, 6, 10, 14);
+        quarter_round(&mut state, 3, 7, 11, 15);
+        quarter_round(&mut state, 0, 5, 10, 15);
+        quarter_round(&mut state, 1, 6, 11, 12);
+        quarter_round(&mut state, 2, 7, 8, 13);
+        quarter_round(&mut state, 3, 4, 9, 14);
+    }
+    for (i, w) in state.iter().enumerate() {
+        let v = w.wrapping_add(init[i]);
+        out[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+const LZSS_MIN_MATCH: usize = 4;
+const LZSS_MAX_MATCH: usize = 18;
+
+#[inline]
+fn lzss_hash(a: u8, b: u8, c: u8) -> usize {
+    ((a as usize) << 4 ^ (b as usize) << 2 ^ (c as usize)) & 0xFFF
+}
+
+/// LZSS with a 4 KB window: 1 flag byte per 8 items; a literal byte or
+/// a 2-byte (offset:12, len-3:4) back-reference. A 4-byte LE length
+/// header makes the stream self-describing for `lzss_decompress`.
+/// High-entropy (encrypted) data stays near input size, as the paper's
+/// DEFLATE stage does.
+pub fn lzss_compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() + data.len() / 8 + 8);
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    let mut head = [usize::MAX; 1 << 12];
+    let mut i = 0usize;
+    let mut flag_pos = out.len();
+    out.push(0);
+    let mut flag_bit = 0u8;
+    while i < data.len() {
+        if flag_bit == 8 {
+            flag_pos = out.len();
+            out.push(0);
+            flag_bit = 0;
+        }
+        let mut best_len = 0usize;
+        let mut best_off = 0usize;
+        if i + LZSS_MIN_MATCH <= data.len() {
+            let h = lzss_hash(data[i], data[i + 1], data[i + 2]);
+            let cand = head[h];
+            if cand != usize::MAX && i - cand < 4096 {
+                let max = (data.len() - i).min(LZSS_MAX_MATCH);
+                let mut l = 0;
+                while l < max && data[cand + l] == data[i + l] {
+                    l += 1;
+                }
+                if l >= LZSS_MIN_MATCH {
+                    best_len = l;
+                    best_off = i - cand;
+                }
+            }
+            head[h] = i;
+        }
+        if best_len >= LZSS_MIN_MATCH {
+            out.push((best_off & 0xFF) as u8);
+            out.push(
+                (((best_off >> 8) as u8) << 4)
+                    | ((best_len - 3) as u8),
+            );
+            i += best_len;
+        } else {
+            out[flag_pos] |= 1 << flag_bit;
+            out.push(data[i]);
+            i += 1;
+        }
+        flag_bit += 1;
+    }
+    out
+}
+
+/// Inverse of [`lzss_compress`].
+pub fn lzss_decompress(stream: &[u8]) -> Option<Vec<u8>> {
+    if stream.len() < 4 {
+        return None;
+    }
+    let n = u32::from_le_bytes(stream[..4].try_into().ok()?) as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 4usize;
+    let mut flags = 0u8;
+    let mut flag_bit = 8u8;
+    while out.len() < n {
+        if flag_bit == 8 {
+            flags = *stream.get(pos)?;
+            pos += 1;
+            flag_bit = 0;
+        }
+        if flags >> flag_bit & 1 == 1 {
+            out.push(*stream.get(pos)?);
+            pos += 1;
+        } else {
+            let lo = *stream.get(pos)? as usize;
+            let hi = *stream.get(pos + 1)? as usize;
+            pos += 2;
+            let off = lo | (hi >> 4) << 8;
+            let len = (hi & 0x0F) + 3;
+            if off == 0 || off > out.len() {
+                return None;
+            }
+            let start = out.len() - off;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+        flag_bit += 1;
+    }
+    Some(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,9 +370,24 @@ mod tests {
         let ca = WebServiceApp::process_object(&mut a);
         let cb = WebServiceApp::process_object(&mut b);
         assert_eq!(ca, cb);
-        // constant input encrypts to high-entropy bytes; DEFLATE of
+        // constant input encrypts to high-entropy bytes; LZSS of
         // random-looking data stays near input size
         assert!(ca.len() > 3000, "compressed to {}", ca.len());
+    }
+
+    #[test]
+    fn lzss_round_trips_and_compresses_runs() {
+        let mut data = vec![7u8; 2000];
+        data.extend((0..200u32).map(|i| (i % 251) as u8));
+        let c = lzss_compress(&data);
+        assert!(c.len() < data.len() / 2, "run did not compress: {}", c.len());
+        assert_eq!(lzss_decompress(&c).unwrap(), data);
+        // high-entropy input round-trips too
+        let mut rng = Rng::new(0xC0DE);
+        let noise: Vec<u8> =
+            (0..4096).map(|_| rng.next_i64() as u8).collect();
+        let cn = lzss_compress(&noise);
+        assert_eq!(lzss_decompress(&cn).unwrap(), noise);
     }
 
     #[test]

@@ -1,0 +1,432 @@
+//! `TraversalBackend` — the unified execution-model abstraction.
+//!
+//! PULSE's core claim (paper §1) is that *one* expressive traversal
+//! framework serves many linked structures and execution models. This
+//! module is that claim's architectural seam: every compared system —
+//! PULSE and PULSE-ACC (the rack DES), the swap-cache baseline
+//! (Fastswap-like, paper §2/§6), and the RPC family (Xeon, BlueField-2
+//! ARM, AIFM-like Cache+RPC) — implements the same trait, so apps,
+//! benches, and tests drive any of them through one API:
+//!
+//! * [`TraversalBackend::submit`] — functional execution of one op;
+//! * [`TraversalBackend::serve`] — closed-loop timed serving;
+//! * [`TraversalBackend::serve_batch`] — open-loop serving of a
+//!   pre-materialized batch (amortizes per-request setup; on the rack it
+//!   also reuses the DES scratch structures across calls);
+//! * [`TraversalBackend::metrics`] — cumulative metrics.
+//!
+//! All backends share the *same functional memory layout* — the model
+//! backends own a [`Rack`] as their functional substrate and replay the
+//! exact page/iteration traces PULSE offloads, timed under their own
+//! execution model (DESIGN note: this mirrors how the paper reports
+//! baselines on identical datasets).
+
+use crate::baselines::cache::{trace_full_op, CachedSwapSim, TraceStats};
+use crate::baselines::{RpcKind, RpcModel, WorkloadStats};
+use crate::isa::SP_WORDS;
+use crate::rack::{Op, Rack, ServeReport};
+
+/// Shared serving loop of the model backends: trace each op through
+/// the rack's functional substrate, time it with `per_op_latency_ns`
+/// (which may accumulate model state), and record the accounting every
+/// backend reports identically. Returns the partial report plus summed
+/// latency; the caller derives its saturation bound, makespan, wall
+/// clock, and cumulative merge.
+fn trace_serve(
+    rack: &mut Rack,
+    ops: &mut dyn FnMut(u64) -> Option<Op>,
+    per_op_latency_ns: &mut dyn FnMut(&Op, &TraceStats) -> f64,
+) -> (ServeReport, f64) {
+    let mut report = ServeReport::default();
+    let mut total_ns = 0f64;
+    let mut issued = 0u64;
+    while let Some(op) = ops(issued) {
+        issued += 1;
+        let (_sp, trace) = trace_full_op(rack, &op);
+        let lat = per_op_latency_ns(&op, &trace).max(1.0);
+        total_ns += lat;
+        if trace.trapped {
+            report.trapped += 1;
+        }
+        report.completed += 1;
+        report.latency.record(lat as u64);
+        report.crossings.record(trace.crossings as u64);
+        if trace.crossings > 0 {
+            report.cross_node_requests += 1;
+        }
+        report.total_iters += trace.iters as u64;
+    }
+    (report, total_ns)
+}
+
+/// Backend-agnostic cumulative metrics, derived from a `ServeReport`.
+#[derive(Debug, Clone)]
+pub struct BackendMetrics {
+    pub name: &'static str,
+    pub ops: u64,
+    pub trapped: u64,
+    pub mean_latency_ns: f64,
+    pub p50_latency_ns: u64,
+    pub p99_latency_ns: u64,
+    pub tput_ops_per_s: f64,
+    pub total_iters: u64,
+    pub cross_node_requests: u64,
+}
+
+impl BackendMetrics {
+    pub fn from_report(name: &'static str, r: &ServeReport) -> Self {
+        Self {
+            name,
+            ops: r.completed,
+            trapped: r.trapped,
+            mean_latency_ns: r.latency.mean(),
+            p50_latency_ns: r.latency.p50(),
+            p99_latency_ns: r.latency.p99(),
+            tput_ops_per_s: r.tput_ops_per_s,
+            total_iters: r.total_iters,
+            cross_node_requests: r.cross_node_requests,
+        }
+    }
+}
+
+/// One execution model for distributed pointer traversals.
+///
+/// Object safe: benches hold `Box<dyn TraversalBackend>` and iterate
+/// the compared systems uniformly.
+pub trait TraversalBackend {
+    /// Display name ("PULSE", "RPC-ARM", "Cache", ...).
+    fn name(&self) -> &'static str;
+
+    /// The functional substrate. Every backend owns a rack: the DES
+    /// backends execute on it, the model backends trace through it.
+    /// Apps are built against this rack, so all systems share one
+    /// memory layout.
+    fn rack_mut(&mut self) -> &mut Rack;
+
+    /// Execute one op functionally (no timing); returns the final
+    /// scratchpad.
+    fn submit(&mut self, op: &Op) -> [i64; SP_WORDS];
+
+    /// Closed-loop serving: `concurrency` outstanding ops drawn from
+    /// the generator until it returns `None`.
+    fn serve(
+        &mut self,
+        ops: &mut dyn FnMut(u64) -> Option<Op>,
+        concurrency: usize,
+    ) -> ServeReport;
+
+    /// Open-loop serving of a pre-materialized batch. Default: drain
+    /// the slice through `serve`. The rack overrides this with its
+    /// scratch-reusing batched DES path.
+    fn serve_batch(&mut self, ops: &[Op], concurrency: usize) -> ServeReport {
+        self.serve(&mut |i| ops.get(i as usize).cloned(), concurrency)
+    }
+
+    /// Cumulative metrics across every serve call on this backend.
+    fn metrics(&self) -> BackendMetrics;
+}
+
+// ---------------------------------------------------------------------
+// PULSE / PULSE-ACC: the rack DES is a backend directly.
+// ---------------------------------------------------------------------
+
+impl TraversalBackend for Rack {
+    fn name(&self) -> &'static str {
+        if self.cfg.in_network_routing {
+            "PULSE"
+        } else {
+            "PULSE-ACC"
+        }
+    }
+
+    fn rack_mut(&mut self) -> &mut Rack {
+        self
+    }
+
+    fn submit(&mut self, op: &Op) -> [i64; SP_WORDS] {
+        self.run_op_functional(op)
+    }
+
+    fn serve(
+        &mut self,
+        ops: &mut dyn FnMut(u64) -> Option<Op>,
+        concurrency: usize,
+    ) -> ServeReport {
+        Rack::serve(self, ops, concurrency)
+    }
+
+    fn serve_batch(&mut self, ops: &[Op], concurrency: usize) -> ServeReport {
+        Rack::serve_batch(self, ops, concurrency)
+    }
+
+    fn metrics(&self) -> BackendMetrics {
+        BackendMetrics::from_report(
+            TraversalBackend::name(self),
+            self.cumulative(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cache: swap-backed disaggregated memory (Fastswap-like, paper §6).
+// ---------------------------------------------------------------------
+
+/// Swap-cache baseline behind the backend trait: traversals execute
+/// functionally through the owned rack, and every touched page is timed
+/// through the LRU-cache + page-fault model.
+pub struct CacheBackend {
+    pub rack: Rack,
+    pub sim: CachedSwapSim,
+    totals: ServeReport,
+}
+
+impl CacheBackend {
+    pub fn new(rack: Rack, cache_bytes: u64) -> Self {
+        Self {
+            rack,
+            sim: CachedSwapSim::new(cache_bytes),
+            totals: ServeReport::default(),
+        }
+    }
+}
+
+impl TraversalBackend for CacheBackend {
+    fn name(&self) -> &'static str {
+        "Cache"
+    }
+
+    fn rack_mut(&mut self) -> &mut Rack {
+        &mut self.rack
+    }
+
+    fn submit(&mut self, op: &Op) -> [i64; SP_WORDS] {
+        trace_full_op(&mut self.rack, op).0
+    }
+
+    fn serve(
+        &mut self,
+        ops: &mut dyn FnMut(u64) -> Option<Op>,
+        concurrency: usize,
+    ) -> ServeReport {
+        let wall_start = std::time::Instant::now();
+        let Self { rack, sim, totals } = self;
+        let mut total_pages = 0u64;
+        let (mut report, total_ns) =
+            trace_serve(rack, ops, &mut |op, trace| {
+                total_pages += trace.pages.len() as u64;
+                sim.op_latency_ns(trace, op.cpu_post_ns as f64) as f64
+            });
+        if report.completed > 0 {
+            let mean_ns = total_ns / report.completed as f64;
+            let pages_per_op =
+                total_pages as f64 / report.completed as f64;
+            // closed-loop concurrency bound vs the swap system's fault
+            // pipeline (what the paper's "swap system performance" caps)
+            let conc_bound = concurrency as f64 / (mean_ns / 1e9);
+            let fault_bound = sim.tput_bound_ops_per_s(pages_per_op);
+            report.tput_ops_per_s = conc_bound.min(fault_bound).max(1e-9);
+            report.makespan_ns = (report.completed as f64
+                / report.tput_ops_per_s
+                * 1e9) as u64;
+        }
+        report.wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
+        totals.merge(&report);
+        report
+    }
+
+    fn metrics(&self) -> BackendMetrics {
+        BackendMetrics::from_report("Cache", &self.totals)
+    }
+}
+
+// ---------------------------------------------------------------------
+// RPC family: Xeon / BlueField-ARM / AIFM-like Cache+RPC (paper §6).
+// ---------------------------------------------------------------------
+
+/// RPC baseline behind the backend trait: per-op iteration/crossing
+/// counts come from the real functional trace; latency and saturation
+/// throughput come from the calibrated RPC execution model.
+pub struct RpcBackend {
+    pub rack: Rack,
+    pub model: RpcModel,
+    totals: ServeReport,
+}
+
+impl RpcBackend {
+    pub fn new(rack: Rack, kind: RpcKind) -> Self {
+        Self { rack, model: RpcModel::new(kind), totals: ServeReport::default() }
+    }
+
+    /// Per-op workload stats from a trace of `op` (the model's input).
+    fn op_stats(op: &Op, iters: u32, crossings: u32) -> WorkloadStats {
+        let stages = op.stages.len().max(1) as f64;
+        let words_per_iter = op
+            .stages
+            .iter()
+            .map(|s| s.iter.program.load_words as f64)
+            .sum::<f64>()
+            / stages;
+        let resp_bytes = 300.0
+            + op.stages
+                .iter()
+                .map(|s| s.object_read_bytes as f64)
+                .sum::<f64>();
+        WorkloadStats {
+            avg_iters: iters as f64,
+            words_per_iter,
+            req_bytes: 420.0,
+            resp_bytes,
+            avg_crossings: crossings as f64,
+            cpu_post_ns: op.cpu_post_ns as f64,
+            ops: 1,
+        }
+    }
+}
+
+impl TraversalBackend for RpcBackend {
+    fn name(&self) -> &'static str {
+        self.model.kind.name()
+    }
+
+    fn rack_mut(&mut self) -> &mut Rack {
+        &mut self.rack
+    }
+
+    fn submit(&mut self, op: &Op) -> [i64; SP_WORDS] {
+        trace_full_op(&mut self.rack, op).0
+    }
+
+    fn serve(
+        &mut self,
+        ops: &mut dyn FnMut(u64) -> Option<Op>,
+        concurrency: usize,
+    ) -> ServeReport {
+        let wall_start = std::time::Instant::now();
+        let Self { rack, model, totals } = self;
+        let nodes = rack.cfg.nodes;
+        let mut mean_stats = WorkloadStats::default();
+        let (mut report, total_ns) =
+            trace_serve(rack, ops, &mut |op, trace| {
+                let w = Self::op_stats(op, trace.iters, trace.crossings);
+                mean_stats.avg_iters += w.avg_iters;
+                mean_stats.words_per_iter += w.words_per_iter;
+                mean_stats.req_bytes += w.req_bytes;
+                mean_stats.resp_bytes += w.resp_bytes;
+                mean_stats.avg_crossings += w.avg_crossings;
+                mean_stats.cpu_post_ns += w.cpu_post_ns;
+                model.latency_ns(&w)
+            });
+        if report.completed > 0 {
+            let n = report.completed as f64;
+            mean_stats.avg_iters /= n;
+            mean_stats.words_per_iter /= n;
+            mean_stats.req_bytes /= n;
+            mean_stats.resp_bytes /= n;
+            mean_stats.avg_crossings /= n;
+            mean_stats.cpu_post_ns /= n;
+            mean_stats.ops = report.completed;
+            let mean_ns = total_ns / n;
+            let conc_bound = concurrency as f64 / (mean_ns / 1e9);
+            let model_bound = model.tput_ops_per_s(&mean_stats, nodes);
+            report.tput_ops_per_s = conc_bound.min(model_bound).max(1e-9);
+            report.makespan_ns =
+                (n / report.tput_ops_per_s * 1e9) as u64;
+        }
+        report.wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
+        totals.merge(&report);
+        report
+    }
+
+    fn metrics(&self) -> BackendMetrics {
+        BackendMetrics::from_report(self.model.kind.name(), &self.totals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ds::HashMapDs;
+    use crate::rack::RackConfig;
+
+    fn ops_through(backend: &mut dyn TraversalBackend, n: u64) -> ServeReport {
+        let mut m = HashMapDs::build(backend.rack_mut(), 64);
+        for i in 0..500 {
+            m.insert(backend.rack_mut(), i, i * 2);
+        }
+        let prog = m.find_program();
+        let ops: Vec<Op> = (0..n)
+            .map(|i| {
+                let key = (i % 500) as i64;
+                let mut sp = [0i64; SP_WORDS];
+                sp[0] = key;
+                Op::new(prog.clone(), m.bucket_ptr(key), sp)
+            })
+            .collect();
+        backend.serve_batch(&ops, 8)
+    }
+
+    #[test]
+    fn rack_is_a_backend() {
+        let mut rack = Rack::new(RackConfig::small(2));
+        let rep = ops_through(&mut rack, 100);
+        assert_eq!(rep.completed, 100);
+        assert!(rep.latency.mean() > 0.0);
+        let m = TraversalBackend::metrics(&rack);
+        assert_eq!(m.name, "PULSE");
+        assert_eq!(m.ops, 100);
+    }
+
+    #[test]
+    fn cache_backend_times_via_page_faults() {
+        let mut b =
+            CacheBackend::new(Rack::new(RackConfig::small(2)), 64 << 10);
+        let rep = ops_through(&mut b, 100);
+        assert_eq!(rep.completed, 100);
+        assert!(rep.latency.mean() > 0.0);
+        assert!(b.sim.faults > 0, "tiny cache never faulted");
+        assert_eq!(b.metrics().name, "Cache");
+    }
+
+    #[test]
+    fn rpc_backend_reports_model_latency() {
+        let mut b =
+            RpcBackend::new(Rack::new(RackConfig::small(2)), RpcKind::Rpc);
+        let rep = ops_through(&mut b, 100);
+        assert_eq!(rep.completed, 100);
+        // at least one network round trip per op
+        assert!(rep.latency.mean() > 1_000.0, "{}", rep.latency.mean());
+        assert!(rep.tput_ops_per_s > 0.0);
+        assert_eq!(b.metrics().name, "RPC");
+    }
+
+    #[test]
+    fn functional_submit_agrees_across_backends() {
+        let mut rack = Rack::new(RackConfig::small(1));
+        let mut m = HashMapDs::build(&mut rack, 64);
+        for i in 0..200 {
+            m.insert(&mut rack, i, i * 7);
+        }
+        let prog = m.find_program();
+        let mut sp = [0i64; SP_WORDS];
+        sp[0] = 123;
+        let op = Op::new(prog.clone(), m.bucket_ptr(123), sp);
+        let want = rack.run_op_functional(&op);
+        assert_eq!(want[1], 123 * 7);
+
+        let mut cache = CacheBackend::new(rack, 1 << 20);
+        assert_eq!(cache.submit(&op), want);
+        let mut rpc = RpcBackend::new(
+            {
+                // fresh rack with the same deterministic layout
+                let mut r = Rack::new(RackConfig::small(1));
+                let mut m2 = HashMapDs::build(&mut r, 64);
+                for i in 0..200 {
+                    m2.insert(&mut r, i, i * 7);
+                }
+                r
+            },
+            RpcKind::RpcArm,
+        );
+        assert_eq!(rpc.submit(&op)[1], 123 * 7);
+    }
+}

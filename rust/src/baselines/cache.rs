@@ -24,6 +24,9 @@ pub struct TraceStats {
     pub pages: Vec<GAddr>,
     pub iters: u32,
     pub crossings: u32,
+    /// The traversal followed a pointer into unmapped memory (the rack
+    /// backend would answer this with a trap response).
+    pub trapped: bool,
 }
 
 /// Functionally execute a traversal on the host, recording the page of
@@ -42,14 +45,19 @@ pub fn trace_op(
     let mut cur = start;
     let mut t = TraceStats::default();
     let mut last_node = rack.alloc.owner(start);
+    let mut buf = vec![0i64; words];
     loop {
-        t.pages.push(cur / PAGE);
         let node = rack.alloc.owner(cur);
+        if node.is_none() {
+            // unmapped pointer: the rack would trap this request
+            t.trapped = true;
+            break;
+        }
+        t.pages.push(cur / PAGE);
         if node != last_node {
             t.crossings += 1;
             last_node = node;
         }
-        let mut buf = vec![0i64; words];
         rack.read_words(cur, &mut buf);
         ws.regs = [0; NREG];
         ws.set_cur_ptr(cur);
@@ -59,7 +67,12 @@ pub fn trace_op(
         t.iters += 1;
         match pass.status {
             Status::NextIter => cur = ws.cur_ptr(),
-            _ => break,
+            Status::Return => break,
+            _ => {
+                // ISA trap: mirror the rack backend's trap accounting
+                t.trapped = true;
+                break;
+            }
         }
         if t.iters > 1_000_000 {
             break;
@@ -72,6 +85,52 @@ pub fn trace_op(
     let mut out = [0i64; SP_WORDS];
     out.copy_from_slice(&ws.sp);
     (out, t)
+}
+
+/// Trace a full multi-stage [`Op`] (stage chains, scratchpad carry,
+/// continuation rounds — the same plumbing as
+/// `Rack::run_op_functional`), merging every round's page trace. This
+/// is how the baseline execution models replay exactly the memory
+/// accesses PULSE offloads (paper §6: same functional layout, different
+/// timing model).
+pub fn trace_full_op(
+    rack: &mut Rack,
+    op: &crate::rack::Op,
+) -> ([i64; SP_WORDS], TraceStats) {
+    let mut prev_sp = [0i64; SP_WORDS];
+    let mut total = TraceStats::default();
+    for stage in &op.stages {
+        let mut repeat_from = None;
+        loop {
+            let (start, sp) = stage.resolve(&prev_sp, repeat_from);
+            if start == 0 {
+                // degenerate stage (e.g. empty structure): skip forward
+                prev_sp = sp;
+                break;
+            }
+            let (out, t) = trace_op(
+                rack,
+                &stage.iter,
+                start,
+                sp,
+                stage.object_read_bytes as u64,
+            );
+            total.pages.extend_from_slice(&t.pages);
+            total.iters += t.iters;
+            total.crossings += t.crossings;
+            if t.trapped {
+                total.trapped = true;
+                return (out, total);
+            }
+            if stage.wants_repeat(&out) {
+                repeat_from = Some(out);
+                continue;
+            }
+            prev_sp = out;
+            break;
+        }
+    }
+    (prev_sp, total)
 }
 
 /// LRU page cache + swap timing model.

@@ -7,6 +7,11 @@
 //! through the rack) but time them with each system's execution model,
 //! calibrated from the paper's testbed description (§6) and prior
 //! systems' published numbers. See DESIGN.md §2.
+//!
+//! Every compared system is driven through the unified
+//! [`crate::backend::TraversalBackend`] trait: the models here are
+//! wrapped by `backend::CacheBackend` / `backend::RpcBackend`, so
+//! benches and tests select systems by name instead of bespoke glue.
 
 pub mod cache;
 pub mod rpc;

@@ -1,14 +1,23 @@
 //! Shared harness for the paper-figure benches (`rust/benches/*.rs`,
-//! built with `harness = false`): table printing + CSV emission under
-//! `bench_out/`, and the workload-stats extraction shared by the
-//! baseline models.
+//! built with `harness = false`): table printing + CSV/JSON emission
+//! under `bench_out/`, backend construction for the compared systems,
+//! and the workload-stats extraction shared by the baseline models.
+//!
+//! Every figure bench drives its systems through the
+//! [`TraversalBackend`] trait: pick a backend with [`make_backend`],
+//! build the app against `backend.rack_mut()`, then serve with
+//! [`BenchApp::serve_on`] (closed loop) or [`BenchApp::materialize_ops`]
+//! + `serve_batch` (open loop).
 
 use std::fmt::Write as _;
-use std::path::Path;
+use std::io;
+use std::path::{Path, PathBuf};
 
 use crate::apps::{BtrDbApp, WebServiceApp, WiredTigerApp};
-use crate::baselines::WorkloadStats;
-use crate::rack::{Rack, RackConfig, ServeReport};
+use crate::backend::{CacheBackend, RpcBackend, TraversalBackend};
+use crate::baselines::{RpcKind, WorkloadStats};
+use crate::rack::{Op, Rack, RackConfig, ServeReport};
+use crate::util::json::Json;
 use crate::workloads::{YcsbSpec, YcsbWorkload};
 
 /// Simple fixed-width table printer.
@@ -55,10 +64,11 @@ impl Table {
         }
     }
 
-    /// Write the table as CSV under `bench_out/<name>.csv`.
-    pub fn save_csv(&self, name: &str) {
+    /// Write the table as CSV under `bench_out/<name>.csv`, creating
+    /// the directory if needed. Returns the written path.
+    pub fn save_csv(&self, name: &str) -> io::Result<PathBuf> {
         let dir = Path::new("bench_out");
-        let _ = std::fs::create_dir_all(dir);
+        std::fs::create_dir_all(dir)?;
         let mut out = String::new();
         out.push_str(&self.header.join(","));
         out.push('\n');
@@ -67,10 +77,21 @@ impl Table {
             out.push('\n');
         }
         let path = dir.join(format!("{name}.csv"));
-        if std::fs::write(&path, out).is_ok() {
-            println!("[saved {}]", path.display());
-        }
+        std::fs::write(&path, out)?;
+        println!("[saved {}]", path.display());
+        Ok(path)
     }
+}
+
+/// Write a JSON document under `bench_out/<name>.json`, creating the
+/// directory if needed. Returns the written path.
+pub fn save_json(name: &str, j: &Json) -> io::Result<PathBuf> {
+    let dir = Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, j.render())?;
+    println!("[saved {}]", path.display());
+    Ok(path)
 }
 
 pub fn fmt_us(ns: f64) -> String {
@@ -83,12 +104,31 @@ pub fn fmt_kops(ops: f64) -> String {
 
 /// Standard rack config used across benches.
 pub fn bench_rack(nodes: usize, granularity: u64) -> Rack {
-    Rack::new(RackConfig {
-        nodes,
-        node_capacity: 1 << 30,
-        granularity,
-        ..Default::default()
-    })
+    Rack::new(RackConfig::bench(nodes, granularity))
+}
+
+/// Build one of the compared systems behind the unified trait.
+/// Kinds: `pulse`, `pulse-acc`, `cache`, `rpc`, `rpc-arm`, `cache-rpc`.
+pub fn make_backend(kind: &str, cfg: RackConfig) -> Box<dyn TraversalBackend> {
+    match kind {
+        "pulse" => Box::new(Rack::new(cfg)),
+        "pulse-acc" => Box::new(Rack::new(cfg.acc())),
+        // cache sized at ~25% of the bench-scale working set (the paper
+        // runs 2 GB caches against much larger datasets; the cache:WSS
+        // ratio is what shapes the result)
+        "cache" => Box::new(CacheBackend::new(Rack::new(cfg), 4 << 20)),
+        "rpc" => Box::new(RpcBackend::new(Rack::new(cfg), RpcKind::Rpc)),
+        "rpc-arm" => {
+            Box::new(RpcBackend::new(Rack::new(cfg), RpcKind::RpcArm))
+        }
+        "cache-rpc" => {
+            let mut b =
+                RpcBackend::new(Rack::new(cfg), RpcKind::CacheRpc);
+            b.model.cache_hit_rate = 0.05; // poor locality (paper)
+            Box::new(b)
+        }
+        other => panic!("unknown backend kind {other:?}"),
+    }
 }
 
 /// Extract baseline-model workload stats from a PULSE serve report.
@@ -119,7 +159,8 @@ pub enum BenchApp {
 
 pub const SEC: i64 = 1_000_000_000;
 
-/// Build one of the three paper apps at bench scale.
+/// Build one of the three paper apps at bench scale against a rack
+/// (use `backend.rack_mut()` so every system shares the layout).
 pub fn build_app(rack: &mut Rack, which: &str, seed: u64) -> BenchApp {
     match which {
         "webservice" => {
@@ -134,11 +175,11 @@ pub fn build_app(rack: &mut Rack, which: &str, seed: u64) -> BenchApp {
 }
 
 impl BenchApp {
-    /// Serve `n` ops with the given concurrency; zipf toggles the key
-    /// chooser; `window_s` applies to BTrDB.
-    pub fn serve(
+    /// Serve `n` ops on any backend with the given concurrency; zipf
+    /// toggles the key chooser; `window_s` applies to BTrDB.
+    pub fn serve_on<B: TraversalBackend + ?Sized>(
         &self,
-        rack: &mut Rack,
+        backend: &mut B,
         n: u64,
         conc: usize,
         zipf: bool,
@@ -150,17 +191,58 @@ impl BenchApp {
                 let w =
                     YcsbWorkload::new(YcsbSpec::B, app.users, zipf, seed);
                 let mut ops = app.op_stream(w, n);
-                rack.serve(move |i| ops(i), conc)
+                backend.serve(&mut ops, conc)
             }
             BenchApp::Wt(app) => {
                 let w = YcsbWorkload::new(YcsbSpec::E, app.keys, zipf, seed)
                     .with_max_scan(100);
                 let mut ops = app.op_stream(w, n);
-                rack.serve(move |i| ops(i), conc)
+                backend.serve(&mut ops, conc)
             }
             BenchApp::Bt(app) => {
                 let mut ops = app.op_stream(window_s * SEC, n, seed);
-                rack.serve(move |i| ops(i), conc)
+                backend.serve(&mut ops, conc)
+            }
+        }
+    }
+
+    /// Back-compat wrapper: serve directly on a rack.
+    pub fn serve(
+        &self,
+        rack: &mut Rack,
+        n: u64,
+        conc: usize,
+        zipf: bool,
+        window_s: i64,
+        seed: u64,
+    ) -> ServeReport {
+        self.serve_on(rack, n, conc, zipf, window_s, seed)
+    }
+
+    /// Pre-materialize `n` ops (the open-loop `serve_batch` input);
+    /// same deterministic stream as `serve_on` with the same seed.
+    pub fn materialize_ops(
+        &self,
+        n: u64,
+        zipf: bool,
+        window_s: i64,
+        seed: u64,
+    ) -> Vec<Op> {
+        match self {
+            BenchApp::Web(app) => {
+                let mut w =
+                    YcsbWorkload::new(YcsbSpec::B, app.users, zipf, seed);
+                (0..n).map(|_| app.make_op(&w.next_op())).collect()
+            }
+            BenchApp::Wt(app) => {
+                let mut w =
+                    YcsbWorkload::new(YcsbSpec::E, app.keys, zipf, seed)
+                        .with_max_scan(100);
+                (0..n).map(|_| app.make_op(&w.next_op())).collect()
+            }
+            BenchApp::Bt(app) => {
+                let mut ops = app.op_stream(window_s * SEC, n, seed);
+                (0..n).map_while(|i| ops(i)).collect()
             }
         }
     }

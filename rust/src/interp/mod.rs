@@ -7,8 +7,8 @@
 //! `rust/tests/integration_runtime.rs` (vs the AOT XLA artifact) and
 //! `rust/tests/proptest_isa.rs`.
 //!
-//! This is also the accelerator's fast-path engine — see `accel::Engine`
-//! for the choice between `Native` and `Xla`.
+//! This is also the accelerator's fast-path engine — see
+//! `accel::XlaBatchEngine` for the choice between native and XLA.
 
 use crate::isa::{Instr, Op, Program, Status, DATA_WORDS, NREG, SP_WORDS};
 

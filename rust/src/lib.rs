@@ -9,13 +9,25 @@ pub mod mem;
 pub mod net;
 pub mod sim;
 pub mod util;
+/// PJRT/XLA AOT runtime — requires the vendored `xla`/`anyhow` crates
+/// and the `xla` cargo feature; the native interpreter is the default.
+#[cfg(feature = "xla")]
 pub mod runtime;
+
+#[cfg(all(feature = "xla", not(feature = "xla-vendored")))]
+compile_error!(
+    "the `xla` feature needs the vendored `xla` + `anyhow` crates: \
+     uncomment the dependency lines in Cargo.toml and change the \
+     feature to `xla = [\"dep:xla\", \"dep:anyhow\", \"xla-vendored\"]` \
+     (see rust/src/rack/README.md)"
+);
 pub mod testgen;
 pub mod accel;
 pub mod switch;
 pub mod compiler;
 pub mod dispatch;
 pub mod rack;
+pub mod backend;
 pub mod ds;
 pub mod apps;
 pub mod workloads;

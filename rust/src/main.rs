@@ -22,7 +22,9 @@ use pulse::workloads::{YcsbSpec, YcsbWorkload};
 
 const SEC: i64 = 1_000_000_000;
 
-fn main() -> anyhow::Result<()> {
+type CliResult = Result<(), Box<dyn std::error::Error>>;
+
+fn main() -> CliResult {
     let args = Args::parse();
     match args.subcommand() {
         Some("serve") => serve(&args),
@@ -55,7 +57,7 @@ fn rack_from(args: &Args) -> Rack {
     Rack::new(cfg)
 }
 
-fn serve(args: &Args) -> anyhow::Result<()> {
+fn serve(args: &Args) -> CliResult {
     let app_name = args.str_or("app", "webservice");
     let ops_n = args.u64_or("ops", 2_000);
     let conc = args.usize_or("conc", 32);
@@ -91,7 +93,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             let mut ops = app.op_stream(win, ops_n, seed ^ 1);
             rack.serve(move |i| ops(i), conc)
         }
-        other => anyhow::bail!("unknown app {other:?}"),
+        other => return Err(format!("unknown app {other:?}").into()),
     };
 
     println!(
@@ -124,7 +126,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn inspect(args: &Args) -> anyhow::Result<()> {
+fn inspect(args: &Args) -> CliResult {
     let name = args.str_or("iter", "list-find");
     let iter = match name.as_str() {
         "list-find" => pulse::ds::list::find_iter(),
@@ -136,11 +138,14 @@ fn inspect(args: &Args) -> anyhow::Result<()> {
         "bplustree-get" => pulse::ds::bplustree::get_iter(),
         "bplustree-scan" => pulse::ds::bplustree::scan_iter(),
         "bplustree-sum" => pulse::ds::bplustree::sum_iter(),
-        other => anyhow::bail!(
-            "unknown iterator {other:?} (try list-find, chain-find, \
-             bst-lower-bound, btree-locate, bplustree-get, \
-             bplustree-scan, bplustree-sum)"
-        ),
+        other => {
+            return Err(format!(
+                "unknown iterator {other:?} (try list-find, chain-find, \
+                 bst-lower-bound, btree-locate, bplustree-get, \
+                 bplustree-scan, bplustree-sum)"
+            )
+            .into())
+        }
     };
     println!(
         "{name}: {} instructions, loads {} words/iteration{}",
@@ -165,7 +170,8 @@ fn inspect(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn selftest() -> anyhow::Result<()> {
+#[cfg(feature = "xla")]
+fn selftest() -> CliResult {
     use pulse::interp::logic_pass;
     use pulse::runtime::PjrtRuntime;
     use pulse::util::prng::Rng;
@@ -182,13 +188,27 @@ fn selftest() -> anyhow::Result<()> {
         let st = exe.run(&p, &mut xla)?;
         for (i, w) in native.iter_mut().enumerate() {
             let r = logic_pass(&p, w);
-            anyhow::ensure!(
-                st[i] == r.status,
-                "case {case} lane {i}: status diverged"
-            );
+            if st[i] != r.status {
+                return Err(
+                    format!("case {case} lane {i}: status diverged").into()
+                );
+            }
         }
-        anyhow::ensure!(xla == native, "case {case}: workspace diverged");
+        if xla != native {
+            return Err(format!("case {case}: workspace diverged").into());
+        }
     }
     println!("selftest OK: XLA artifact = native interpreter (20 cases x 32 lanes)");
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn selftest() -> CliResult {
+    println!(
+        "selftest: the PJRT/XLA runtime path is disabled in this build; \
+         rebuild with `--features xla` (requires the vendored xla-rs \
+         crate and `make artifacts`) to verify the AOT artifacts against \
+         the native interpreter."
+    );
     Ok(())
 }

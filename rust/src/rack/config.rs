@@ -1,0 +1,63 @@
+//! Rack configuration: topology, allocation, accelerator + dispatch
+//! parameters, and the PULSE / PULSE-ACC switch (paper §6 testbed).
+
+use crate::accel::AccelConfig;
+use crate::dispatch::DispatchConfig;
+use crate::mem::AllocPolicy;
+
+#[derive(Debug, Clone)]
+pub struct RackConfig {
+    pub nodes: usize,
+    pub node_capacity: u64,
+    pub granularity: u64,
+    pub policy: AllocPolicy,
+    pub accel: AccelConfig,
+    pub dispatch: DispatchConfig,
+    /// Packet loss probability per hop.
+    pub loss: f64,
+    /// PULSE (true) vs PULSE-ACC (false), §6.2.
+    pub in_network_routing: bool,
+    pub tcam_entries: usize,
+    pub seed: u64,
+}
+
+impl Default for RackConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 4,
+            node_capacity: 1 << 30,
+            granularity: 64 << 20,
+            policy: AllocPolicy::RoundRobin,
+            accel: AccelConfig::paper_default(),
+            dispatch: DispatchConfig::default(),
+            loss: 0.0,
+            in_network_routing: true,
+            tcam_entries: 1 << 16,
+            seed: 42,
+        }
+    }
+}
+
+impl RackConfig {
+    /// Small rack for unit tests: 32 MB nodes, 1 MB slabs.
+    pub fn small(nodes: usize) -> Self {
+        Self {
+            nodes,
+            node_capacity: 32 << 20,
+            granularity: 1 << 20,
+            ..Default::default()
+        }
+    }
+
+    /// Standard bench-scale rack (1 GB nodes) at a given granularity.
+    pub fn bench(nodes: usize, granularity: u64) -> Self {
+        Self { nodes, node_capacity: 1 << 30, granularity, ..Default::default() }
+    }
+
+    /// PULSE-ACC variant of this config (§6.2 Fig. 9): crossings return
+    /// to the CPU node instead of re-routing at the switch.
+    pub fn acc(mut self) -> Self {
+        self.in_network_routing = false;
+        self
+    }
+}

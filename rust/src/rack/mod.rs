@@ -2,232 +2,47 @@
 //! into one discrete-event simulation (paper §6 testbed: 1 compute node,
 //! up to 4 memory nodes behind a Tofino switch).
 //!
-//! Functional execution and timing advance together in one event loop:
-//! a request's aggregated LOAD really reads the node's DRAM when its
-//! memory-pipeline reservation completes, the logic pass really executes
-//! the ISA (its dynamic instruction count feeds the logic-pipeline
-//! reservation), bounces really re-route through the switch, and losses
-//! really trigger dispatch-engine retransmissions.
+//! This module is the wiring layer only; the runtime is split into
+//! focused submodules (see `rack/README.md` for the full map):
 //!
-//! Application operations are *stage chains*: e.g. WiredTiger's YCSB-E
-//! scan = locate-traversal → scan-traversal (repeating while the
-//! scratchpad publishes a continuation leaf), plus per-stage bulk reads
-//! (WebService's 8 KB object fetch) and CPU post-processing
-//! (encrypt+compress), so one logical op maps to the same sequence of
-//! network requests as on the real system.
+//! * [`config`] — `RackConfig` + presets (paper §6 testbed parameters);
+//! * [`request`] — stage chains (`Stage`/`StartAddr`/`Op`) and per-op
+//!   DES run state;
+//! * [`node`] — the memory-node model: pipeline reservations and the
+//!   functional iteration (paper §4.2);
+//! * [`events`] — the discrete-event serving loop (`serve`,
+//!   `serve_batch`) over network, switch, and node events (paper §5);
+//! * [`stats`] — `ServeReport` and bandwidth-utilization helpers.
 //!
 //! `in_network_routing = false` turns the rack into PULSE-ACC (paper
 //! §6.2 Fig. 9): non-local pointers return to the CPU node instead of
 //! being re-routed at the switch.
+//!
+//! The rack is also a [`crate::backend::TraversalBackend`], the shared
+//! interface all compared systems (PULSE, PULSE-ACC, Cache, RPC) are
+//! driven through.
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::Arc;
+pub mod config;
+mod events;
+mod node;
+pub mod request;
+pub mod stats;
 
-use crate::accel::{AccelConfig, Accelerator, VisitEnd};
+pub use config::RackConfig;
+pub use request::{Op, Stage, StartAddr};
+pub use stats::ServeReport;
+
+use crate::accel::{Accelerator, VisitEnd};
 use crate::compiler::CompiledIter;
-use crate::dispatch::{DispatchConfig, DispatchEngine, Disposition, ResponseAction};
-use crate::interp::logic_pass;
+use crate::dispatch::{DispatchEngine, Disposition};
+use crate::interp::{logic_pass, Workspace};
 use crate::isa::{Status, NREG, SP_WORDS};
-use crate::mem::{AllocPolicy, GAddr, NodeId, RackAllocator, RangeTable, Region};
-use crate::net::{Link, MsgKind, RequestId, TraversalMsg};
-use crate::sim::{EventQueue, LatencyModel, Ns};
+use crate::mem::{GAddr, NodeId, RackAllocator, RangeTable, Region};
+use crate::net::Link;
+use crate::sim::LatencyModel;
 use crate::switch::{Route, Switch};
-use crate::util::hist::Histogram;
 
-#[derive(Debug, Clone)]
-pub struct RackConfig {
-    pub nodes: usize,
-    pub node_capacity: u64,
-    pub granularity: u64,
-    pub policy: AllocPolicy,
-    pub accel: AccelConfig,
-    pub dispatch: DispatchConfig,
-    /// Packet loss probability per hop.
-    pub loss: f64,
-    /// PULSE (true) vs PULSE-ACC (false), §6.2.
-    pub in_network_routing: bool,
-    pub tcam_entries: usize,
-    pub seed: u64,
-}
-
-impl Default for RackConfig {
-    fn default() -> Self {
-        Self {
-            nodes: 4,
-            node_capacity: 1 << 30,
-            granularity: 64 << 20,
-            policy: AllocPolicy::RoundRobin,
-            accel: AccelConfig::paper_default(),
-            dispatch: DispatchConfig::default(),
-            loss: 0.0,
-            in_network_routing: true,
-            tcam_entries: 1 << 16,
-            seed: 42,
-        }
-    }
-}
-
-/// Where a stage's start pointer comes from.
-#[derive(Debug, Clone, Copy)]
-pub enum StartAddr {
-    Fixed(GAddr),
-    /// Read from the previous stage's final scratchpad word.
-    FromPrevSp(u32),
-}
-
-/// One traversal stage of an application operation.
-#[derive(Clone)]
-pub struct Stage {
-    pub iter: Arc<CompiledIter>,
-    pub start: StartAddr,
-    pub sp: [i64; SP_WORDS],
-    /// Carry the previous stage's final scratchpad into this stage
-    /// (overriding `sp`), with `sp_overrides` applied on top.
-    pub carry_sp: bool,
-    pub sp_overrides: Vec<(u32, i64)>,
-    /// Extra bulk payload on this stage's response (e.g. the 8 KB
-    /// WebService object riding back with the reply).
-    pub object_read_bytes: u32,
-    /// Re-issue this stage while sp[word0] != 0 && sp[word1] > 0
-    /// (continuation leaf + remaining counter for scans), re-applying
-    /// `sp_overrides` each round.
-    pub repeat_while: Option<(u32, u32)>,
-}
-
-impl Stage {
-    pub fn new(iter: Arc<CompiledIter>, start: GAddr, sp: [i64; SP_WORDS]) -> Self {
-        Self {
-            iter,
-            start: StartAddr::Fixed(start),
-            sp,
-            carry_sp: false,
-            sp_overrides: Vec::new(),
-            object_read_bytes: 0,
-            repeat_while: None,
-        }
-    }
-}
-
-/// One application operation for the serving loop.
-#[derive(Clone)]
-pub struct Op {
-    pub stages: Vec<Stage>,
-    /// CPU-side post-processing time (e.g. encrypt+compress), calibrated
-    /// by really running it in the app layer.
-    pub cpu_post_ns: Ns,
-}
-
-impl Op {
-    pub fn new(iter: Arc<CompiledIter>, start: GAddr, sp: [i64; SP_WORDS]) -> Self {
-        Self { stages: vec![Stage::new(iter, start, sp)], cpu_post_ns: 0 }
-    }
-}
-
-#[derive(Debug, Default)]
-pub struct ServeReport {
-    pub completed: u64,
-    pub trapped: u64,
-    pub makespan_ns: Ns,
-    pub latency: Histogram,
-    pub crossings: Histogram,
-    pub total_iters: u64,
-    pub cross_node_requests: u64,
-    /// Virtual-time throughput, operations per second.
-    pub tput_ops_per_s: f64,
-    /// Bytes moved over the CPU<->switch links (network utilization).
-    pub net_bytes: u64,
-    /// Bytes served from node DRAM (memory-bandwidth utilization).
-    pub mem_bytes: u64,
-    pub retransmits: u64,
-    /// Time spent on cross-node continuation per affected request
-    /// (Fig. 7 darker stack segment).
-    pub cross_latency_ns: Histogram,
-    /// Wall-clock time of the functional+DES execution (perf metric).
-    pub wall_ms: f64,
-}
-
-impl ServeReport {
-    /// Memory-bandwidth utilization vs the paper's 25 GB/s per node cap.
-    pub fn mem_bw_util(&self, nodes: usize) -> f64 {
-        if self.makespan_ns == 0 {
-            return 0.0;
-        }
-        let gbps = self.mem_bytes as f64 / self.makespan_ns as f64;
-        gbps / (25.0 * nodes as f64 / 8.0 * 8.0) // GB/s per ns == B/ns
-    }
-
-    /// Network utilization vs 100 Gbps.
-    pub fn net_bw_util(&self) -> f64 {
-        if self.makespan_ns == 0 {
-            return 0.0;
-        }
-        (self.net_bytes as f64 / self.makespan_ns as f64) / 12.5
-    }
-}
-
-/// Tracks one logical op across its stages + retries.
-struct OpRun {
-    op: Op,
-    stage_idx: usize,
-    born: Ns,
-    cross_ns: Ns,
-    crossings_total: u32,
-    iters_total: u32,
-}
-
-/// In-flight request state at a memory node / on the wire.
-struct NodeJob {
-    msg: TraversalMsg,
-    /// dynamic steps of the pass executed at MemDone (for LogicDone).
-    steps: u32,
-}
-
-enum Ev {
-    AtSwitch { job: Box<NodeJob>, from_node: bool },
-    AtNode { node: NodeId, job: Box<NodeJob> },
-    /// Memory pipeline's *occupancy* ended (streaming slot free).
-    MemFree { node: NodeId },
-    /// The aggregated load's *latency* elapsed (data in the workspace).
-    MemDone { node: NodeId, slot: usize },
-    LogicDone { node: NodeId, slot: usize },
-    AtCpu { job: Box<NodeJob> },
-    TimeoutScan,
-    Issue,
-}
-
-struct NodeState {
-    mem_free: usize,
-    logic_free: usize,
-    ws_free: usize,
-    mem_wait: VecDeque<usize>,
-    logic_wait: VecDeque<usize>,
-    admit_wait: VecDeque<Box<NodeJob>>,
-    slots: Vec<Option<Box<NodeJob>>>,
-}
-
-impl NodeState {
-    fn new(cfg: &AccelConfig) -> Self {
-        Self {
-            mem_free: cfg.n_mem,
-            logic_free: cfg.m_logic,
-            ws_free: cfg.workspaces(),
-            mem_wait: VecDeque::new(),
-            logic_wait: VecDeque::new(),
-            admit_wait: VecDeque::new(),
-            slots: Vec::new(),
-        }
-    }
-
-    fn put(&mut self, job: Box<NodeJob>) -> usize {
-        if let Some(i) = self.slots.iter().position(|s| s.is_none()) {
-            self.slots[i] = Some(job);
-            i
-        } else {
-            self.slots.push(Some(job));
-            self.slots.len() - 1
-        }
-    }
-}
+use events::ServeScratch;
 
 pub struct Rack {
     pub cfg: RackConfig,
@@ -236,11 +51,17 @@ pub struct Rack {
     pub switch: Switch,
     pub memnodes: Vec<Accelerator>,
     pub dispatch: DispatchEngine,
-    link_cpu_up: Link,
-    link_cpu_down: Link,
-    links_node_down: Vec<Link>,
-    links_node_up: Vec<Link>,
+    pub(crate) link_cpu_up: Link,
+    pub(crate) link_cpu_down: Link,
+    pub(crate) links_node_down: Vec<Link>,
+    pub(crate) links_node_up: Vec<Link>,
     published_slabs: usize,
+    /// Reusable DES scratch (event queue, node states, run table).
+    pub(crate) scratch: ServeScratch,
+    /// Reusable functional workspace for the DES iteration hot path.
+    pub(crate) des_ws: Workspace,
+    /// Cumulative metrics across all serve runs (backend accounting).
+    pub(crate) totals: ServeReport,
 }
 
 impl Rack {
@@ -282,7 +103,15 @@ impl Rack {
             memnodes,
             dispatch,
             published_slabs: 0,
+            scratch: ServeScratch::default(),
+            des_ws: Workspace::new(),
+            totals: ServeReport::default(),
         }
+    }
+
+    /// Cumulative metrics over every serve run on this rack.
+    pub fn cumulative(&self) -> &ServeReport {
+        &self.totals
     }
 
     /// Allocate on the rack and keep switch + TCAM tables in sync.
@@ -386,19 +215,19 @@ impl Rack {
 
     /// CPU fallback for non-offloadable iterators: one remote read per
     /// pointer hop (paper §4.1).
-    fn run_on_cpu(
+    pub(crate) fn run_on_cpu(
         &mut self,
         iter: &CompiledIter,
         start: GAddr,
         sp: [i64; SP_WORDS],
     ) -> (Status, [i64; SP_WORDS], u32) {
-        let mut ws = crate::interp::Workspace::new();
+        let mut ws = Workspace::new();
         ws.sp.copy_from_slice(&sp);
         let words = iter.program.load_words as usize;
         let mut cur = start;
         let mut iters = 0u32;
+        let mut buf = vec![0i64; words];
         loop {
-            let mut buf = vec![0i64; words];
             self.read_words(cur, &mut buf);
             ws.regs = [0; NREG];
             ws.set_cur_ptr(cur);
@@ -418,812 +247,22 @@ impl Rack {
     }
 
     /// Functional multi-stage op (reference for the DES path; used by
-    /// tests to check stage plumbing).
+    /// tests and the baseline trace collectors to check stage plumbing).
     pub fn run_op_functional(&mut self, op: &Op) -> [i64; SP_WORDS] {
         let mut prev_sp = [0i64; SP_WORDS];
-        for (si, stage) in op.stages.iter().enumerate() {
-            let mut start = match stage.start {
-                StartAddr::Fixed(a) => a,
-                StartAddr::FromPrevSp(w) => prev_sp[w as usize] as GAddr,
-            };
-            let mut sp =
-                if stage.carry_sp { prev_sp } else { stage.sp };
+        for stage in &op.stages {
+            let mut repeat_from = None;
             loop {
-                for &(w, v) in &stage.sp_overrides {
-                    sp[w as usize] = v;
-                }
+                let (start, sp) = stage.resolve(&prev_sp, repeat_from);
                 let (_st, out, _) = self.traverse(&stage.iter, start, sp);
-                sp = out;
-                if let Some((aw, gw)) = stage.repeat_while {
-                    let next = sp[aw as usize] as GAddr;
-                    if next != 0 && sp[gw as usize] > 0 {
-                        start = next;
-                        continue;
-                    }
+                if stage.wants_repeat(&out) {
+                    repeat_from = Some(out);
+                    continue;
                 }
+                prev_sp = out;
                 break;
             }
-            prev_sp = sp;
-            let _ = si;
         }
         prev_sp
-    }
-
-    /// Closed-loop serving: `concurrency` outstanding logical ops drawn
-    /// from `ops`; full DES with network, pipelines, loss, retransmit.
-    pub fn serve(
-        &mut self,
-        mut ops: impl FnMut(u64) -> Option<Op>,
-        concurrency: usize,
-    ) -> ServeReport {
-        let wall_start = std::time::Instant::now();
-        // each serve() run restarts virtual time at 0: clear link
-        // egress-queue state from prior runs
-        self.link_cpu_up.reset();
-        self.link_cpu_down.reset();
-        for l in self
-            .links_node_down
-            .iter_mut()
-            .chain(self.links_node_up.iter_mut())
-        {
-            l.reset();
-        }
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        let mut nodes: Vec<NodeState> = (0..self.cfg.nodes)
-            .map(|_| NodeState::new(&self.cfg.accel))
-            .collect();
-        let mut report = ServeReport::default();
-        let mut issued = 0u64;
-        let mut inflight = 0usize;
-        let mut done = false;
-        let timeout = self.cfg.dispatch.timeout_ns;
-        let mut runs: HashMap<RequestId, OpRun> = HashMap::new();
-
-        for _ in 0..concurrency {
-            q.push(0, Ev::Issue);
-        }
-        q.push(timeout / 2, Ev::TimeoutScan);
-
-        while let Some((now, ev)) = q.pop() {
-            match ev {
-                Ev::Issue => {
-                    let Some(op) = ops(issued) else {
-                        done = true;
-                        continue;
-                    };
-                    issued += 1;
-                    inflight += 1;
-                    let run = OpRun {
-                        op,
-                        stage_idx: 0,
-                        born: now,
-                        cross_ns: 0,
-                        crossings_total: 0,
-                        iters_total: 0,
-                    };
-                    self.launch_stage(
-                        now,
-                        run,
-                        [0i64; SP_WORDS],
-                        None,
-                        &mut q,
-                        &mut report,
-                        &mut inflight,
-                        done,
-                        &mut runs,
-                    );
-                }
-                Ev::AtSwitch { job, from_node } => {
-                    let t = now + self.switch.pipeline_ns();
-                    match self.switch.route(&job.msg, from_node) {
-                        Route::MemNode(n) => {
-                            let bytes = job.msg.wire_size();
-                            if let Some(at) = self.links_node_down
-                                [n as usize]
-                                .send(t, bytes)
-                            {
-                                q.push(at, Ev::AtNode { node: n, job });
-                            }
-                        }
-                        Route::CpuNode(_) => {
-                            let extra = runs
-                                .get(&job.msg.id)
-                                .map(|r| {
-                                    r.op.stages[r.stage_idx]
-                                        .object_read_bytes
-                                })
-                                .unwrap_or(0);
-                            let bytes =
-                                job.msg.wire_size() + extra as usize;
-                            if let Some(at) =
-                                self.link_cpu_down.send(t, bytes)
-                            {
-                                q.push(at, Ev::AtCpu { job });
-                            }
-                        }
-                        Route::Invalid(_) => {
-                            let mut job = job;
-                            job.msg.status = Status::Trap;
-                            job.msg.kind = MsgKind::Response;
-                            let bytes = job.msg.wire_size();
-                            if let Some(at) =
-                                self.link_cpu_down.send(t, bytes)
-                            {
-                                q.push(at, Ev::AtCpu { job });
-                            }
-                        }
-                    }
-                }
-                Ev::AtNode { node, job } => {
-                    let ns = &mut nodes[node as usize];
-                    let t = now + self.lat.accel_net_stack_ns as Ns;
-                    if ns.ws_free > 0 {
-                        ns.ws_free -= 1;
-                        let slot = ns.put(job);
-                        Self::start_mem_phase(
-                            &self.lat,
-                            &mut q,
-                            ns,
-                            node,
-                            slot,
-                            t + self.lat.accel_sched_ns as Ns,
-                        );
-                    } else {
-                        ns.admit_wait.push_back(job);
-                    }
-                }
-                Ev::MemFree { node } => {
-                    let ns = &mut nodes[node as usize];
-                    if let Some(w) = ns.mem_wait.pop_front() {
-                        Self::grant_mem(&self.lat, &mut q, ns, node, w, now);
-                    } else {
-                        ns.mem_free += 1;
-                    }
-                }
-                Ev::MemDone { node, slot } => {
-                    let job = nodes[node as usize].slots[slot]
-                        .as_mut()
-                        .unwrap();
-                    let accel = &mut self.memnodes[node as usize];
-                    let one = Self::one_iteration(accel, job);
-                    report.mem_bytes +=
-                        job.msg.program.load_words as u64 * 8;
-                    match one {
-                        IterResult::Logic(steps) => {
-                            let dur = self.lat.logic_ns(steps).max(1);
-                            let ns = &mut nodes[node as usize];
-                            if ns.logic_free > 0 {
-                                ns.logic_free -= 1;
-                                q.push(
-                                    now + dur,
-                                    Ev::LogicDone { node, slot },
-                                );
-                            } else {
-                                ns.logic_wait.push_back(slot);
-                            }
-                        }
-                        IterResult::Bounce | IterResult::Fault => {
-                            Self::depart_node(
-                                &mut q,
-                                &self.lat,
-                                &mut nodes[node as usize],
-                                &mut self.links_node_up[node as usize],
-                                node,
-                                slot,
-                                now,
-                                matches!(one, IterResult::Bounce)
-                                    && self.cfg.in_network_routing,
-                            );
-                        }
-                    }
-                }
-                Ev::LogicDone { node, slot } => {
-                    {
-                        let ns = &mut nodes[node as usize];
-                        if let Some(w) = ns.logic_wait.pop_front() {
-                            let steps =
-                                ns.slots[w].as_ref().unwrap().steps;
-                            let dur = self.lat.logic_ns(steps).max(1);
-                            q.push(
-                                now + dur,
-                                Ev::LogicDone { node, slot: w },
-                            );
-                        } else {
-                            ns.logic_free += 1;
-                        }
-                    }
-                    report.total_iters += 1;
-                    let st = nodes[node as usize].slots[slot]
-                        .as_ref()
-                        .unwrap()
-                        .msg
-                        .status;
-                    match st {
-                        Status::Running => {
-                            let t = now + self.lat.accel_sched_ns as Ns;
-                            Self::start_mem_phase(
-                                &self.lat,
-                                &mut q,
-                                &mut nodes[node as usize],
-                                node,
-                                slot,
-                                t,
-                            );
-                        }
-                        _ => {
-                            Self::depart_node(
-                                &mut q,
-                                &self.lat,
-                                &mut nodes[node as usize],
-                                &mut self.links_node_up[node as usize],
-                                node,
-                                slot,
-                                now,
-                                false,
-                            );
-                        }
-                    }
-                }
-                Ev::AtCpu { mut job } => {
-                    job.msg.kind = MsgKind::Response;
-                    // PULSE-ACC: bounced traversal re-issued by the CPU.
-                    if job.msg.status == Status::Running
-                        && job.msg.iters_done < job.msg.max_iters
-                        && !self.cfg.in_network_routing
-                    {
-                        if let Some(run) = runs.get_mut(&job.msg.id) {
-                            run.cross_ns +=
-                                2 * self.lat.host_net_stack_ns as Ns;
-                        }
-                        job.msg.kind = MsgKind::Request;
-                        let t = now + self.lat.host_net_stack_ns as Ns;
-                        let bytes = job.msg.wire_size();
-                        if let Some(at) = self.link_cpu_up.send(t, bytes) {
-                            q.push(
-                                at,
-                                Ev::AtSwitch { job, from_node: false },
-                            );
-                        }
-                        continue;
-                    }
-                    match self.dispatch.on_response(job.msg.clone(), now) {
-                        ResponseAction::Done { id, status, sp, iters, crossings } => {
-                            let Some(mut run) = runs.remove(&id) else {
-                                continue; // stale retransmit duplicate
-                            };
-                            run.crossings_total += crossings;
-                            run.iters_total = iters;
-                            if status == Status::Trap {
-                                report.trapped += 1;
-                            }
-                            self.advance_op(
-                                now,
-                                run,
-                                sp,
-                                &mut q,
-                                &mut report,
-                                &mut inflight,
-                                done,
-                                &mut runs,
-                            );
-                        }
-                        ResponseAction::Continue(msg) => {
-                            // yielded traversal: fresh budget, re-send
-                            let t =
-                                now + self.lat.host_net_stack_ns as Ns;
-                            let bytes = msg.wire_size();
-                            let job =
-                                Box::new(NodeJob { msg, steps: 0 });
-                            if let Some(at) =
-                                self.link_cpu_up.send(t, bytes)
-                            {
-                                q.push(
-                                    at,
-                                    Ev::AtSwitch {
-                                        job,
-                                        from_node: false,
-                                    },
-                                );
-                            }
-                        }
-                    }
-                }
-                Ev::TimeoutScan => {
-                    for msg in self.dispatch.collect_retransmits(now) {
-                        report.retransmits += 1;
-                        let job = Box::new(NodeJob { msg, steps: 0 });
-                        let bytes = job.msg.wire_size();
-                        if let Some(t) = self.link_cpu_up.send(now, bytes)
-                        {
-                            q.push(
-                                t,
-                                Ev::AtSwitch { job, from_node: false },
-                            );
-                        }
-                    }
-                    if !(done && inflight == 0) {
-                        q.push(now + timeout / 2, Ev::TimeoutScan);
-                    }
-                }
-            }
-            if done && inflight == 0 && q.is_empty() {
-                break;
-            }
-        }
-
-        report.net_bytes =
-            self.link_cpu_up.stats.bytes + self.link_cpu_down.stats.bytes;
-        if report.makespan_ns > 0 {
-            report.tput_ops_per_s = report.completed as f64
-                / (report.makespan_ns as f64 / 1e9);
-        }
-        report.wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
-        report
-    }
-
-    /// Issue the current stage of `run` (possibly completing the whole
-    /// op synchronously via the library cache / CPU fallback).
-    #[allow(clippy::too_many_arguments)]
-    fn launch_stage(
-        &mut self,
-        now: Ns,
-        mut run: OpRun,
-        prev_sp: [i64; SP_WORDS],
-        repeat_from: Option<[i64; SP_WORDS]>,
-        q: &mut EventQueue<Ev>,
-        report: &mut ServeReport,
-        inflight: &mut usize,
-        done: bool,
-        runs: &mut HashMap<RequestId, OpRun>,
-    ) {
-        let stage = &run.op.stages[run.stage_idx];
-        let start = match (repeat_from, stage.start) {
-            (Some(sp), _) => {
-                let (aw, _) = stage.repeat_while.unwrap();
-                sp[aw as usize] as GAddr
-            }
-            (None, StartAddr::Fixed(a)) => a,
-            (None, StartAddr::FromPrevSp(w)) => prev_sp[w as usize] as GAddr,
-        };
-        let mut sp = match (repeat_from, stage.carry_sp) {
-            (Some(s), _) => s,
-            (None, true) => prev_sp,
-            (None, false) => stage.sp,
-        };
-        for &(w, v) in &stage.sp_overrides {
-            sp[w as usize] = v;
-        }
-        if start == 0 {
-            // degenerate stage (e.g. empty structure): skip forward
-            self.advance_op(now, run, sp, q, report, inflight, done, runs);
-            return;
-        }
-        match self.dispatch.submit(&stage.iter, start, sp, now) {
-            Disposition::CompletedLocally { sp, iters } => {
-                run.iters_total += iters;
-                self.advance_op(now, run, sp, q, report, inflight, done, runs);
-            }
-            Disposition::RunOnCpu => {
-                let (_st, sp, iters) =
-                    self.run_on_cpu(&stage.iter, start, sp);
-                // remote reads: one RTT per iteration, charged virtually.
-                let rtt = 2 * self.lat.one_way_ns(298)
-                    + self.lat.cpu_dram_ns as Ns;
-                run.iters_total += iters;
-                run.born = run.born.min(now); // unchanged; latency below
-                let fin = now + iters as u64 * rtt;
-                // model as an instantaneous functional result at `fin`
-                run.cross_ns += 0;
-                let mut run = run;
-                run.op.cpu_post_ns += 0;
-                // advance after the virtual delay
-                // (simplified: advance now, fold delay into born shift)
-                run.born = run.born.saturating_sub(fin - now);
-                self.advance_op(now, run, sp, q, report, inflight, done, runs);
-            }
-            Disposition::Offload(msg) => {
-                let id = msg.id;
-                runs.insert(id, run);
-                let bytes = msg.wire_size();
-                let job = Box::new(NodeJob { msg, steps: 0 });
-                if let Some(t) = self.link_cpu_up.send(now, bytes) {
-                    q.push(t, Ev::AtSwitch { job, from_node: false });
-                }
-                // if dropped, the TimeoutScan resends from dispatch state
-            }
-        }
-    }
-
-    /// A stage finished with final scratchpad `sp` — repeat it, move to
-    /// the next stage, or complete the op.
-    #[allow(clippy::too_many_arguments)]
-    fn advance_op(
-        &mut self,
-        now: Ns,
-        mut run: OpRun,
-        sp: [i64; SP_WORDS],
-        q: &mut EventQueue<Ev>,
-        report: &mut ServeReport,
-        inflight: &mut usize,
-        done: bool,
-        runs: &mut HashMap<RequestId, OpRun>,
-    ) {
-        let stage = &run.op.stages[run.stage_idx];
-        if let Some((aw, gw)) = stage.repeat_while {
-            if sp[aw as usize] != 0 && sp[gw as usize] > 0 {
-                let t = now + self.lat.host_net_stack_ns as Ns;
-                self.launch_stage(
-                    t, run, sp, Some(sp), q, report, inflight, done, runs,
-                );
-                return;
-            }
-        }
-        if run.stage_idx + 1 < run.op.stages.len() {
-            run.stage_idx += 1;
-            let t = now + self.lat.host_net_stack_ns as Ns;
-            self.launch_stage(
-                t, run, sp, None, q, report, inflight, done, runs,
-            );
-            return;
-        }
-        // op complete
-        let fin = now + run.op.cpu_post_ns;
-        report.completed += 1;
-        report.latency.record((fin - run.born).max(1));
-        report.crossings.record(run.crossings_total as u64);
-        if run.crossings_total > 0 {
-            report.cross_node_requests += 1;
-            report.cross_latency_ns.record(run.cross_ns.max(1));
-        }
-        report.total_iters += run.iters_total as u64;
-        report.makespan_ns = report.makespan_ns.max(fin);
-        *inflight -= 1;
-        if !done {
-            q.push(fin, Ev::Issue);
-        }
-    }
-
-    /// Latency of the aggregated load: fixed path (TCAM + memory
-    /// controller + interconnect) + random-burst streaming.
-    fn mem_latency_for(lat: &LatencyModel, job: &NodeJob) -> Ns {
-        lat.mem_pipe_ns(
-            job.msg.program.load_words as usize,
-            job.msg.program.writes_data,
-        )
-    }
-
-    /// Occupancy of the memory pipeline: the streaming slot only. The
-    /// controller overlaps row activations across outstanding bursts,
-    /// so the fixed 179 ns is *latency*, not serialization — this is
-    /// what lets n pipelines reach the 25 GB/s the paper saturates.
-    fn mem_occupancy_for(_lat: &LatencyModel, job: &NodeJob) -> Ns {
-        let words = job.msg.program.load_words as u64;
-        let wb = if job.msg.program.writes_data { 2 } else { 1 };
-        // 1.28 ns per 8 B word at 6.25 GB/s per pipeline + issue slot
-        (words * wb * 13 / 10).max(4)
-    }
-
-    fn start_mem_phase(
-        lat: &LatencyModel,
-        q: &mut EventQueue<Ev>,
-        ns: &mut NodeState,
-        node: NodeId,
-        slot: usize,
-        t: Ns,
-    ) {
-        if ns.mem_free > 0 {
-            ns.mem_free -= 1;
-            Self::grant_mem(lat, q, ns, node, slot, t);
-        } else {
-            ns.mem_wait.push_back(slot);
-        }
-    }
-
-    fn grant_mem(
-        lat: &LatencyModel,
-        q: &mut EventQueue<Ev>,
-        ns: &mut NodeState,
-        node: NodeId,
-        slot: usize,
-        t: Ns,
-    ) {
-        let job = ns.slots[slot].as_ref().unwrap();
-        let occ = Self::mem_occupancy_for(lat, job);
-        let latn = Self::mem_latency_for(lat, job);
-        q.push(t + occ, Ev::MemFree { node });
-        q.push(t + latn.max(occ), Ev::MemDone { node, slot });
-    }
-
-    /// One *functional* iteration (translate, fetch, logic) for the job.
-    fn one_iteration(accel: &mut Accelerator, job: &mut NodeJob) -> IterResult {
-        use crate::mem::translate::TranslateError;
-        let words = job.msg.program.load_words as usize;
-        if job.msg.iters_done >= job.msg.max_iters {
-            job.msg.status = Status::Running; // yield marker
-            return IterResult::Fault;
-        }
-        let local = match accel.table.translate(
-            job.msg.cur_ptr,
-            (words * 8) as u64,
-            false,
-        ) {
-            Ok(off) => off,
-            Err(TranslateError::NotLocal) => {
-                job.msg.node_crossings += 1;
-                accel.bounces += 1;
-                job.msg.status = Status::Running;
-                return IterResult::Bounce;
-            }
-            Err(TranslateError::Protection) => {
-                job.msg.status = Status::Trap;
-                accel.traps += 1;
-                return IterResult::Fault;
-            }
-        };
-        let mut ws = crate::interp::Workspace::new();
-        ws.sp.copy_from_slice(&job.msg.sp);
-        ws.set_cur_ptr(job.msg.cur_ptr);
-        accel.region.read_words(local, &mut ws.data[..words]);
-        let pass = logic_pass(&job.msg.program, &mut ws);
-        accel.iterations += 1;
-        job.msg.iters_done += 1;
-        if job.msg.program.writes_data {
-            if let Ok(off) = accel.table.translate(
-                job.msg.cur_ptr,
-                (words * 8) as u64,
-                true,
-            ) {
-                accel.region.write_words(off, &ws.data[..words]);
-            } else {
-                job.msg.status = Status::Trap;
-                return IterResult::Fault;
-            }
-        }
-        job.msg.sp.copy_from_slice(&ws.sp);
-        job.steps = pass.steps;
-        match pass.status {
-            Status::NextIter => {
-                job.msg.cur_ptr = ws.cur_ptr();
-                job.msg.status = Status::Running;
-                IterResult::Logic(pass.steps)
-            }
-            Status::Return => {
-                job.msg.status = Status::Return;
-                IterResult::Logic(pass.steps)
-            }
-            _ => {
-                job.msg.status = Status::Trap;
-                accel.traps += 1;
-                IterResult::Logic(pass.steps)
-            }
-        }
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn depart_node(
-        q: &mut EventQueue<Ev>,
-        lat: &LatencyModel,
-        ns: &mut NodeState,
-        link_up: &mut Link,
-        node: NodeId,
-        slot: usize,
-        now: Ns,
-        bounce: bool,
-    ) {
-        let mut job = ns.slots[slot].take().unwrap();
-        if let Some(j) = ns.admit_wait.pop_front() {
-            let s = ns.put(j);
-            Self::start_mem_phase(
-                lat,
-                q,
-                ns,
-                node,
-                s,
-                now + lat.accel_sched_ns as Ns,
-            );
-        } else {
-            ns.ws_free += 1;
-        }
-        let t = now + lat.accel_net_stack_ns as Ns;
-        if !bounce {
-            job.msg.kind = MsgKind::Response;
-        }
-        let bytes = job.msg.wire_size();
-        if let Some(at) = link_up.send(t, bytes) {
-            q.push(at, Ev::AtSwitch { job, from_node: true });
-        }
-    }
-}
-
-enum IterResult {
-    Logic(u32),
-    Bounce,
-    Fault,
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::ds::{ForwardList, HashMapDs};
-
-    fn small_cfg(nodes: usize) -> RackConfig {
-        RackConfig {
-            nodes,
-            node_capacity: 32 << 20,
-            granularity: 1 << 20,
-            ..Default::default()
-        }
-    }
-
-    #[test]
-    fn serve_completes_all_ops_single_node() {
-        let mut r = Rack::new(small_cfg(1));
-        let mut m = HashMapDs::build(&mut r, 256);
-        for i in 0..1000 {
-            m.insert(&mut r, i, i * 2);
-        }
-        let prog = m.find_program();
-        let ops: Vec<Op> = (0..200)
-            .map(|i| {
-                let key = i % 1000;
-                let mut sp = [0i64; SP_WORDS];
-                sp[0] = key;
-                Op::new(prog.clone(), m.bucket_ptr(key), sp)
-            })
-            .collect();
-        let mut it = ops.into_iter();
-        let report = r.serve(move |_| it.next(), 8);
-        assert_eq!(report.completed, 200);
-        assert_eq!(report.trapped, 0);
-        assert!(report.latency.p50() > 1_000, "{}", report.latency.p50());
-        assert!(report.tput_ops_per_s > 1000.0);
-    }
-
-    #[test]
-    fn serve_handles_distributed_traversals() {
-        let mut cfg = small_cfg(4);
-        cfg.granularity = 4096;
-        let mut r = Rack::new(cfg);
-        let mut l = ForwardList::new();
-        for i in 0..3000 {
-            l.push(&mut r, i);
-        }
-        let prog = l.find_program();
-        let head = l.head;
-        let mut n = 0;
-        let report = r.serve(
-            move |_| {
-                n += 1;
-                if n > 50 {
-                    return None;
-                }
-                let mut sp = [0i64; SP_WORDS];
-                sp[0] = 2500 + n; // deep in the list => crosses nodes
-                Some(Op::new(prog.clone(), head, sp))
-            },
-            4,
-        );
-        assert_eq!(report.completed, 50);
-        assert!(report.cross_node_requests > 0, "no cross-node traffic");
-        assert!(report.crossings.max() >= 1);
-    }
-
-    #[test]
-    fn pulse_acc_has_higher_latency_than_pulse() {
-        let build = |in_network: bool| {
-            let mut cfg = small_cfg(4);
-            cfg.granularity = 4096;
-            cfg.in_network_routing = in_network;
-            let mut r = Rack::new(cfg);
-            let mut l = ForwardList::new();
-            for i in 0..4000 {
-                l.push(&mut r, i);
-            }
-            let prog = l.find_program();
-            let head = l.head;
-            let mut n = 0;
-            let report = r.serve(
-                move |_| {
-                    n += 1;
-                    if n > 40 {
-                        return None;
-                    }
-                    let mut sp = [0i64; SP_WORDS];
-                    sp[0] = 3500 + (n % 400);
-                    Some(Op::new(prog.clone(), head, sp))
-                },
-                1,
-            );
-            report
-        };
-        let pulse = build(true);
-        let acc = build(false);
-        assert_eq!(pulse.completed, acc.completed);
-        assert!(
-            acc.latency.mean() > pulse.latency.mean(),
-            "PULSE {} vs ACC {}",
-            pulse.latency.mean(),
-            acc.latency.mean()
-        );
-    }
-
-    #[test]
-    fn lossy_links_recover_via_retransmission() {
-        let mut cfg = small_cfg(2);
-        cfg.loss = 0.05;
-        cfg.dispatch.timeout_ns = 100_000;
-        let mut r = Rack::new(cfg);
-        let mut m = HashMapDs::build(&mut r, 64);
-        for i in 0..200 {
-            m.insert(&mut r, i, i);
-        }
-        let prog = m.find_program();
-        let buckets: Vec<_> = (0..200).map(|k| m.bucket_ptr(k)).collect();
-        let mut n = 0;
-        let report = r.serve(
-            move |_| {
-                n += 1;
-                if n > 300 {
-                    return None;
-                }
-                let key = n % 200;
-                let mut sp = [0i64; SP_WORDS];
-                sp[0] = key;
-                Some(Op::new(
-                    prog.clone(),
-                    buckets[key as usize],
-                    sp,
-                ))
-            },
-            8,
-        );
-        assert_eq!(report.completed, 300, "ops lost despite retransmit");
-        assert!(report.retransmits > 0, "loss never triggered retransmit");
-    }
-
-    #[test]
-    fn multi_stage_op_chains_through_sp() {
-        // stage 1: hash find returns value (an address) in sp[1];
-        // stage 2: list-sum from that address.
-        let mut r = Rack::new(small_cfg(2));
-        let mut l = ForwardList::new();
-        for i in 1..=10 {
-            l.push(&mut r, i);
-        }
-        let mut m = HashMapDs::build(&mut r, 16);
-        m.insert(&mut r, 42, l.head as i64);
-
-        let mut sp0 = [0i64; SP_WORDS];
-        sp0[0] = 42;
-        let stage1 =
-            Stage::new(m.find_program(), m.bucket_ptr(42), sp0);
-        let mut stage2 = Stage::new(
-            l.sum_program(),
-            0,
-            [0i64; SP_WORDS],
-        );
-        stage2.start = StartAddr::FromPrevSp(1);
-        let op = Op {
-            stages: vec![stage1, stage2],
-            cpu_post_ns: 500,
-        };
-        // functional check first
-        let sp = r.run_op_functional(&op);
-        assert_eq!(sp[3], 55); // sum 1..=10
-        // DES check
-        let mut sent = false;
-        let report = r.serve(
-            move |_| {
-                if sent {
-                    None
-                } else {
-                    sent = true;
-                    Some(op.clone())
-                }
-            },
-            1,
-        );
-        assert_eq!(report.completed, 1);
-        assert_eq!(report.trapped, 0);
     }
 }

@@ -1,0 +1,231 @@
+//! Memory-node model for the DES: per-node pipeline reservations
+//! (m logic / n memory pipelines + workspaces, paper §4.2), the
+//! in-flight job state, and the functional iteration executed when a
+//! memory-pipeline reservation completes.
+
+use std::collections::VecDeque;
+
+use crate::accel::{AccelConfig, Accelerator};
+use crate::interp::{logic_pass, Workspace};
+use crate::isa::Status;
+use crate::mem::NodeId;
+use crate::net::TraversalMsg;
+use crate::sim::{EventQueue, LatencyModel, Ns};
+
+use super::events::Ev;
+
+/// In-flight request state at a memory node / on the wire.
+pub(crate) struct NodeJob {
+    pub msg: TraversalMsg,
+    /// dynamic steps of the pass executed at MemDone (for LogicDone).
+    pub steps: u32,
+}
+
+/// Outcome of one functional iteration at a node.
+pub(crate) enum IterResult {
+    Logic(u32),
+    Bounce,
+    Fault,
+}
+
+/// Per-node DES state: free pipeline counts, wait queues, and the slot
+/// table of resident jobs.
+pub(crate) struct NodeState {
+    pub mem_free: usize,
+    pub logic_free: usize,
+    pub ws_free: usize,
+    pub mem_wait: VecDeque<usize>,
+    pub logic_wait: VecDeque<usize>,
+    pub admit_wait: VecDeque<Box<NodeJob>>,
+    pub slots: Vec<Option<Box<NodeJob>>>,
+}
+
+impl NodeState {
+    pub fn new(cfg: &AccelConfig) -> Self {
+        Self {
+            mem_free: cfg.n_mem,
+            logic_free: cfg.m_logic,
+            ws_free: cfg.workspaces(),
+            mem_wait: VecDeque::new(),
+            logic_wait: VecDeque::new(),
+            admit_wait: VecDeque::new(),
+            slots: Vec::new(),
+        }
+    }
+
+    /// Reset for a fresh serve run, keeping the slot table's capacity
+    /// (the batched serving path reuses this allocation).
+    pub fn reset(&mut self, cfg: &AccelConfig) {
+        self.mem_free = cfg.n_mem;
+        self.logic_free = cfg.m_logic;
+        self.ws_free = cfg.workspaces();
+        self.mem_wait.clear();
+        self.logic_wait.clear();
+        self.admit_wait.clear();
+        self.slots.clear();
+    }
+
+    pub fn put(&mut self, job: Box<NodeJob>) -> usize {
+        if let Some(i) = self.slots.iter().position(|s| s.is_none()) {
+            self.slots[i] = Some(job);
+            i
+        } else {
+            self.slots.push(Some(job));
+            self.slots.len() - 1
+        }
+    }
+}
+
+/// Latency of the aggregated load: fixed path (TCAM + memory
+/// controller + interconnect) + random-burst streaming.
+pub(crate) fn mem_latency_for(lat: &LatencyModel, job: &NodeJob) -> Ns {
+    lat.mem_pipe_ns(
+        job.msg.program.load_words as usize,
+        job.msg.program.writes_data,
+    )
+}
+
+/// Occupancy of the memory pipeline: the streaming slot only. The
+/// controller overlaps row activations across outstanding bursts,
+/// so the fixed 179 ns is *latency*, not serialization — this is
+/// what lets n pipelines reach the 25 GB/s the paper saturates.
+pub(crate) fn mem_occupancy_for(job: &NodeJob) -> Ns {
+    let words = job.msg.program.load_words as u64;
+    let wb = if job.msg.program.writes_data { 2 } else { 1 };
+    // 1.28 ns per 8 B word at 6.25 GB/s per pipeline + issue slot
+    (words * wb * 13 / 10).max(4)
+}
+
+/// Reserve a memory pipeline for `slot` (or queue it) at time `t`.
+pub(crate) fn start_mem_phase(
+    lat: &LatencyModel,
+    q: &mut EventQueue<Ev>,
+    ns: &mut NodeState,
+    node: NodeId,
+    slot: usize,
+    t: Ns,
+) {
+    if ns.mem_free > 0 {
+        ns.mem_free -= 1;
+        grant_mem(lat, q, ns, node, slot, t);
+    } else {
+        ns.mem_wait.push_back(slot);
+    }
+}
+
+pub(crate) fn grant_mem(
+    lat: &LatencyModel,
+    q: &mut EventQueue<Ev>,
+    ns: &mut NodeState,
+    node: NodeId,
+    slot: usize,
+    t: Ns,
+) {
+    let job = ns.slots[slot].as_ref().unwrap();
+    let occ = mem_occupancy_for(job);
+    let latn = mem_latency_for(lat, job);
+    q.push(t + occ, Ev::MemFree { node });
+    q.push(t + latn.max(occ), Ev::MemDone { node, slot });
+}
+
+/// One *functional* iteration (translate, fetch, logic) for the job.
+/// `ws` is the rack's reusable workspace (hot path: no per-iteration
+/// allocation or zeroing beyond the loaded window).
+pub(crate) fn one_iteration(
+    accel: &mut Accelerator,
+    ws: &mut Workspace,
+    job: &mut NodeJob,
+) -> IterResult {
+    use crate::mem::translate::TranslateError;
+    let words = job.msg.program.load_words as usize;
+    if job.msg.iters_done >= job.msg.max_iters {
+        job.msg.status = Status::Running; // yield marker
+        return IterResult::Fault;
+    }
+    let local = match accel.table.translate(
+        job.msg.cur_ptr,
+        (words * 8) as u64,
+        false,
+    ) {
+        Ok(off) => off,
+        Err(TranslateError::NotLocal) => {
+            job.msg.node_crossings += 1;
+            accel.bounces += 1;
+            job.msg.status = Status::Running;
+            return IterResult::Bounce;
+        }
+        Err(TranslateError::Protection) => {
+            job.msg.status = Status::Trap;
+            accel.traps += 1;
+            return IterResult::Fault;
+        }
+    };
+    ws.sp.copy_from_slice(&job.msg.sp);
+    ws.regs = [0; crate::isa::NREG];
+    ws.set_cur_ptr(job.msg.cur_ptr);
+    accel.region.read_words(local, &mut ws.data[..words]);
+    ws.data[words..].iter_mut().for_each(|w| *w = 0);
+    let pass = logic_pass(&job.msg.program, ws);
+    accel.iterations += 1;
+    job.msg.iters_done += 1;
+    if job.msg.program.writes_data {
+        if let Ok(off) = accel.table.translate(
+            job.msg.cur_ptr,
+            (words * 8) as u64,
+            true,
+        ) {
+            accel.region.write_words(off, &ws.data[..words]);
+        } else {
+            job.msg.status = Status::Trap;
+            return IterResult::Fault;
+        }
+    }
+    job.msg.sp.copy_from_slice(&ws.sp);
+    job.steps = pass.steps;
+    match pass.status {
+        Status::NextIter => {
+            job.msg.cur_ptr = ws.cur_ptr();
+            job.msg.status = Status::Running;
+            IterResult::Logic(pass.steps)
+        }
+        Status::Return => {
+            job.msg.status = Status::Return;
+            IterResult::Logic(pass.steps)
+        }
+        _ => {
+            job.msg.status = Status::Trap;
+            accel.traps += 1;
+            IterResult::Logic(pass.steps)
+        }
+    }
+}
+
+/// Release `slot`, admit a waiting job if any, and send the departing
+/// message up the node's link toward the switch.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn depart_node(
+    q: &mut EventQueue<Ev>,
+    lat: &LatencyModel,
+    ns: &mut NodeState,
+    link_up: &mut crate::net::Link,
+    node: NodeId,
+    slot: usize,
+    now: Ns,
+    bounce: bool,
+) {
+    let mut job = ns.slots[slot].take().unwrap();
+    if let Some(j) = ns.admit_wait.pop_front() {
+        let s = ns.put(j);
+        start_mem_phase(lat, q, ns, node, s, now + lat.accel_sched_ns as Ns);
+    } else {
+        ns.ws_free += 1;
+    }
+    let t = now + lat.accel_net_stack_ns as Ns;
+    if !bounce {
+        job.msg.kind = crate::net::MsgKind::Response;
+    }
+    let bytes = job.msg.wire_size();
+    if let Some(at) = link_up.send(t, bytes) {
+        q.push(at, Ev::AtSwitch { job, from_node: true });
+    }
+}

@@ -1,0 +1,128 @@
+//! Application-operation plumbing: stage chains and per-op run state.
+//!
+//! An application operation is a *stage chain* (paper §6 apps): each
+//! stage is one offloaded traversal, with scratchpad carried or
+//! overridden between stages, optional bulk payloads on the response,
+//! and `repeat_while` continuation rounds for scans.
+
+use std::sync::Arc;
+
+use crate::compiler::CompiledIter;
+use crate::isa::SP_WORDS;
+use crate::mem::GAddr;
+use crate::sim::Ns;
+
+/// Where a stage's start pointer comes from.
+#[derive(Debug, Clone, Copy)]
+pub enum StartAddr {
+    Fixed(GAddr),
+    /// Read from the previous stage's final scratchpad word.
+    FromPrevSp(u32),
+}
+
+/// One traversal stage of an application operation.
+#[derive(Clone)]
+pub struct Stage {
+    pub iter: Arc<CompiledIter>,
+    pub start: StartAddr,
+    pub sp: [i64; SP_WORDS],
+    /// Carry the previous stage's final scratchpad into this stage
+    /// (overriding `sp`), with `sp_overrides` applied on top.
+    pub carry_sp: bool,
+    pub sp_overrides: Vec<(u32, i64)>,
+    /// Extra bulk payload on this stage's response (e.g. the 8 KB
+    /// WebService object riding back with the reply).
+    pub object_read_bytes: u32,
+    /// Re-issue this stage while sp[word0] != 0 && sp[word1] > 0
+    /// (continuation leaf + remaining counter for scans), re-applying
+    /// `sp_overrides` each round.
+    pub repeat_while: Option<(u32, u32)>,
+}
+
+impl Stage {
+    pub fn new(iter: Arc<CompiledIter>, start: GAddr, sp: [i64; SP_WORDS]) -> Self {
+        Self {
+            iter,
+            start: StartAddr::Fixed(start),
+            sp,
+            carry_sp: false,
+            sp_overrides: Vec::new(),
+            object_read_bytes: 0,
+            repeat_while: None,
+        }
+    }
+
+    /// Resolve this stage's start pointer and initial scratchpad, given
+    /// the previous stage's final scratchpad and an optional repeat
+    /// continuation. Shared by the functional path, the DES, and the
+    /// baseline trace collectors.
+    pub fn resolve(
+        &self,
+        prev_sp: &[i64; SP_WORDS],
+        repeat_from: Option<[i64; SP_WORDS]>,
+    ) -> (GAddr, [i64; SP_WORDS]) {
+        let start = match (repeat_from, self.start) {
+            (Some(sp), _) => {
+                let (aw, _) = self.repeat_while.expect("repeat without repeat_while");
+                sp[aw as usize] as GAddr
+            }
+            (None, StartAddr::Fixed(a)) => a,
+            (None, StartAddr::FromPrevSp(w)) => prev_sp[w as usize] as GAddr,
+        };
+        let mut sp = match (repeat_from, self.carry_sp) {
+            (Some(s), _) => s,
+            (None, true) => *prev_sp,
+            (None, false) => self.sp,
+        };
+        for &(w, v) in &self.sp_overrides {
+            sp[w as usize] = v;
+        }
+        (start, sp)
+    }
+
+    /// Whether `sp` asks for another continuation round of this stage.
+    pub fn wants_repeat(&self, sp: &[i64; SP_WORDS]) -> bool {
+        match self.repeat_while {
+            Some((aw, gw)) => sp[aw as usize] != 0 && sp[gw as usize] > 0,
+            None => false,
+        }
+    }
+}
+
+/// One application operation for the serving loop.
+#[derive(Clone)]
+pub struct Op {
+    pub stages: Vec<Stage>,
+    /// CPU-side post-processing time (e.g. encrypt+compress), calibrated
+    /// by really running it in the app layer.
+    pub cpu_post_ns: Ns,
+}
+
+impl Op {
+    pub fn new(iter: Arc<CompiledIter>, start: GAddr, sp: [i64; SP_WORDS]) -> Self {
+        Self { stages: vec![Stage::new(iter, start, sp)], cpu_post_ns: 0 }
+    }
+}
+
+/// Tracks one logical op across its stages + retries (DES-side state).
+pub(crate) struct OpRun {
+    pub op: Op,
+    pub stage_idx: usize,
+    pub born: Ns,
+    pub cross_ns: Ns,
+    pub crossings_total: u32,
+    pub iters_total: u32,
+}
+
+impl OpRun {
+    pub fn new(op: Op, born: Ns) -> Self {
+        Self {
+            op,
+            stage_idx: 0,
+            born,
+            cross_ns: 0,
+            crossings_total: 0,
+            iters_total: 0,
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Serving metrics: the per-run `ServeReport` and its bandwidth
+//! utilization helpers (paper Fig. 7/9 latency + throughput panels,
+//! Appendix C.1 bandwidth figures).
+
+use crate::sim::Ns;
+use crate::util::hist::Histogram;
+
+#[derive(Debug, Default, Clone)]
+pub struct ServeReport {
+    pub completed: u64,
+    pub trapped: u64,
+    pub makespan_ns: Ns,
+    pub latency: Histogram,
+    pub crossings: Histogram,
+    pub total_iters: u64,
+    pub cross_node_requests: u64,
+    /// Virtual-time throughput, operations per second.
+    pub tput_ops_per_s: f64,
+    /// Bytes moved over the CPU<->switch links (network utilization).
+    pub net_bytes: u64,
+    /// Bytes served from node DRAM (memory-bandwidth utilization).
+    pub mem_bytes: u64,
+    pub retransmits: u64,
+    /// Time spent on cross-node continuation per affected request
+    /// (Fig. 7 darker stack segment).
+    pub cross_latency_ns: Histogram,
+    /// Wall-clock time of the functional+DES execution (perf metric).
+    pub wall_ms: f64,
+}
+
+impl ServeReport {
+    /// Memory-bandwidth utilization vs the paper's 25 GB/s per node cap.
+    pub fn mem_bw_util(&self, nodes: usize) -> f64 {
+        if self.makespan_ns == 0 {
+            return 0.0;
+        }
+        let gbps = self.mem_bytes as f64 / self.makespan_ns as f64;
+        gbps / (25.0 * nodes as f64) // B/ns == GB/s, cap 25 GB/s/node
+    }
+
+    /// Network utilization vs 100 Gbps.
+    pub fn net_bw_util(&self) -> f64 {
+        if self.makespan_ns == 0 {
+            return 0.0;
+        }
+        (self.net_bytes as f64 / self.makespan_ns as f64) / 12.5
+    }
+
+    /// Fold another run's metrics into this cumulative report (the
+    /// `TraversalBackend::metrics` accumulation path). Throughput is
+    /// re-derived from the summed makespan, which treats runs as
+    /// back-to-back — good enough for cumulative accounting.
+    pub fn merge(&mut self, other: &ServeReport) {
+        self.completed += other.completed;
+        self.trapped += other.trapped;
+        self.makespan_ns += other.makespan_ns;
+        self.latency.merge(&other.latency);
+        self.crossings.merge(&other.crossings);
+        self.total_iters += other.total_iters;
+        self.cross_node_requests += other.cross_node_requests;
+        self.net_bytes += other.net_bytes;
+        self.mem_bytes += other.mem_bytes;
+        self.retransmits += other.retransmits;
+        self.cross_latency_ns.merge(&other.cross_latency_ns);
+        self.wall_ms += other.wall_ms;
+        if self.makespan_ns > 0 {
+            self.tput_ops_per_s =
+                self.completed as f64 / (self.makespan_ns as f64 / 1e9);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates_and_rederives_tput() {
+        let mut a = ServeReport {
+            completed: 100,
+            makespan_ns: 1_000_000,
+            ..Default::default()
+        };
+        a.latency.record(1000);
+        let mut b = ServeReport {
+            completed: 300,
+            makespan_ns: 3_000_000,
+            ..Default::default()
+        };
+        b.latency.record(2000);
+        a.merge(&b);
+        assert_eq!(a.completed, 400);
+        assert_eq!(a.makespan_ns, 4_000_000);
+        assert_eq!(a.latency.count(), 2);
+        // 400 ops over 4 ms of summed makespan = 100k ops/s
+        assert!((a.tput_ops_per_s - 1e5).abs() < 1.0, "{}", a.tput_ops_per_s);
+    }
+
+    #[test]
+    fn utilization_is_zero_on_empty_report() {
+        let r = ServeReport::default();
+        assert_eq!(r.mem_bw_util(4), 0.0);
+        assert_eq!(r.net_bw_util(), 0.0);
+    }
+}

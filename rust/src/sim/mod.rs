@@ -96,6 +96,13 @@ impl<T> EventQueue<T> {
         self.heap.pop().map(|e| (e.at, e.payload))
     }
 
+    /// Drop all pending events, keeping the heap's allocation (the
+    /// rack's batched serving path reuses the queue across runs).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+    }
+
     pub fn peek_time(&self) -> Option<Ns> {
         self.heap.peek().map(|e| e.at)
     }

@@ -1,0 +1,157 @@
+//! The `TraversalBackend` contract: the same YCSB-C workload runs
+//! through PULSE (the rack DES), the swap-cache adapter, and the RPC
+//! adapter — every system behind the one trait the benches drive, each
+//! producing non-empty, internally consistent metrics.
+
+use pulse::backend::{CacheBackend, RpcBackend, TraversalBackend};
+use pulse::baselines::RpcKind;
+use pulse::ds::HashMapDs;
+use pulse::isa::SP_WORDS;
+use pulse::rack::{Op, Rack, RackConfig, ServeReport};
+use pulse::workloads::{YcsbOp, YcsbSpec, YcsbWorkload};
+
+const KEYS: u64 = 2_000;
+const OPS: u64 = 300;
+const CONC: usize = 8;
+
+fn cfg() -> RackConfig {
+    RackConfig {
+        nodes: 2,
+        node_capacity: 64 << 20,
+        granularity: 256 << 10,
+        ..Default::default()
+    }
+}
+
+/// Build the identical hash index in the backend's rack and serve the
+/// same deterministic YCSB-C stream through the trait.
+fn run_ycsb_c(backend: &mut dyn TraversalBackend) -> ServeReport {
+    let mut m = HashMapDs::build(backend.rack_mut(), 512);
+    for k in 0..KEYS as i64 {
+        m.insert(backend.rack_mut(), k, k * 11);
+    }
+    let prog = m.find_program();
+    // uniform chooser: the swap-cache backend's working set stays far
+    // bigger than its page cache, as in the paper's setup
+    let mut w = YcsbWorkload::new(YcsbSpec::C, KEYS, false, 77);
+    let ops: Vec<Op> = (0..OPS)
+        .map(|_| {
+            let key = match w.next_op() {
+                YcsbOp::Read(k) => (k % KEYS) as i64,
+                other => panic!("YCSB-C produced {other:?}"),
+            };
+            let mut sp = [0i64; SP_WORDS];
+            sp[0] = key;
+            Op::new(prog.clone(), m.bucket_ptr(key), sp)
+        })
+        .collect();
+    backend.serve_batch(&ops, CONC)
+}
+
+fn check_consistent(rep: &ServeReport, m: &pulse::backend::BackendMetrics) {
+    assert_eq!(rep.completed, OPS, "{}: lost ops", m.name);
+    assert_eq!(rep.trapped, 0, "{}: traps", m.name);
+    assert_eq!(rep.latency.count(), OPS, "{}: latency samples", m.name);
+    assert!(rep.latency.mean() > 0.0, "{}: zero latency", m.name);
+    assert!(
+        rep.latency.p99() >= rep.latency.p50(),
+        "{}: p99 < p50",
+        m.name
+    );
+    assert!(rep.tput_ops_per_s > 0.0, "{}: zero throughput", m.name);
+    assert!(rep.total_iters >= OPS, "{}: fewer iters than ops", m.name);
+    assert!(rep.makespan_ns > 0, "{}: zero makespan", m.name);
+    // cumulative metrics reflect the run
+    assert_eq!(m.ops, OPS, "{}: cumulative ops", m.name);
+    assert!(m.mean_latency_ns > 0.0, "{}: cumulative latency", m.name);
+    assert!(m.tput_ops_per_s > 0.0, "{}: cumulative tput", m.name);
+}
+
+#[test]
+fn same_workload_through_all_backends() {
+    let mut systems: Vec<Box<dyn TraversalBackend>> = vec![
+        Box::new(Rack::new(cfg())),
+        // 8 KB page cache vs an ~80 KB working set: thrash, as the
+        // paper's cache:WSS ratios do
+        Box::new(CacheBackend::new(Rack::new(cfg()), 8 << 10)),
+        Box::new(RpcBackend::new(Rack::new(cfg()), RpcKind::Rpc)),
+    ];
+    let mut names = Vec::new();
+    let mut means = Vec::new();
+    for backend in systems.iter_mut() {
+        let rep = run_ycsb_c(backend.as_mut());
+        let m = backend.metrics();
+        check_consistent(&rep, &m);
+        names.push(m.name);
+        means.push(m.mean_latency_ns);
+    }
+    assert_eq!(names, ["PULSE", "Cache", "RPC"]);
+    // the paper's headline ordering at this scale: the swap cache is
+    // far slower than both offload paths
+    let (pulse, cache) = (means[0], means[1]);
+    assert!(
+        cache > pulse,
+        "swap cache ({cache:.0} ns) should be slower than PULSE \
+         ({pulse:.0} ns)"
+    );
+}
+
+#[test]
+fn closed_loop_trait_serving_matches_batch() {
+    // `serve` (closed loop) and `serve_batch` (open loop) must agree on
+    // virtual-time results for the same op stream on the rack backend.
+    let mut backend: Box<dyn TraversalBackend> = Box::new(Rack::new(cfg()));
+    let mut m = HashMapDs::build(backend.rack_mut(), 256);
+    for k in 0..500i64 {
+        m.insert(backend.rack_mut(), k, k);
+    }
+    let prog = m.find_program();
+    let ops: Vec<Op> = (0..100u64)
+        .map(|i| {
+            let key = (i % 500) as i64;
+            let mut sp = [0i64; SP_WORDS];
+            sp[0] = key;
+            Op::new(prog.clone(), m.bucket_ptr(key), sp)
+        })
+        .collect();
+    let batch = backend.serve_batch(&ops, 4);
+    let closed = backend
+        .serve(&mut |i| ops.get(i as usize).cloned(), 4);
+    assert_eq!(batch.completed, closed.completed);
+    assert_eq!(batch.makespan_ns, closed.makespan_ns);
+    assert_eq!(batch.latency.p50(), closed.latency.p50());
+}
+
+#[test]
+fn functional_submit_is_backend_independent() {
+    // submit() returns the final scratchpad; the hash lookup's value
+    // must be identical through every backend (shared functional
+    // substrate, different timing models).
+    let build = || {
+        let mut r = Rack::new(cfg());
+        let mut m = HashMapDs::build(&mut r, 512);
+        for k in 0..KEYS as i64 {
+            m.insert(&mut r, k, k * 11);
+        }
+        let prog = m.find_program();
+        let mut sp = [0i64; SP_WORDS];
+        sp[0] = 1234;
+        let op = Op::new(prog, m.bucket_ptr(1234), sp);
+        (r, op)
+    };
+    let (r, op) = build();
+    let mut systems: Vec<Box<dyn TraversalBackend>> = vec![
+        Box::new(r),
+        Box::new(CacheBackend::new(build().0, 1 << 20)),
+        Box::new(RpcBackend::new(build().0, RpcKind::RpcArm)),
+    ];
+    for backend in systems.iter_mut() {
+        let sp = backend.submit(&op);
+        assert_eq!(
+            sp[1],
+            1234 * 11,
+            "{} returned a wrong functional result",
+            backend.name()
+        );
+    }
+}
