@@ -8,6 +8,15 @@
 //! Expected shape (paper): PULSE 9–34× lower latency and 28–171× higher
 //! throughput than Cache; RPC ≈ 1–1.4× lower latency than PULSE on one
 //! node; PULSE 1.1–1.36× higher throughput than RPC on multi-node.
+//!
+//! Table 3 note (post PR 1 double-counted-iters fix): `total_iters` is
+//! now single-counted — LogicDone is the only source for offloaded
+//! work — so the iters/req column reads ≈half the seed's values and
+//! now matches the functional per-op iteration count. The latency and
+//! throughput panels are unaffected (the DES clock never consumed the
+//! double count); only this profile column shifted. Derived
+//! analytically; re-verify numerically on a host with a Rust
+//! toolchain.
 
 use pulse::backend::TraversalBackend;
 use pulse::bench_support::{

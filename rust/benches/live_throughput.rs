@@ -1,0 +1,156 @@
+//! Live-engine throughput: real-core scaling of shard count × offered
+//! load (wall clock, not virtual time).
+//!
+//! Every configuration serves the same pre-materialized YCSB-C-style
+//! hash-lookup batch through `LiveBackend` (one worker thread per
+//! memory node, bounded queues, router dispatch) and records wall
+//! ops/s plus the p50/p95/p99 latency triple from `util::hist`.
+//! Expected shape on a >=4-core host: ops/s grows with shard count at
+//! saturating load (the acceptance bar is >=1.5x from 1 -> 4 shards);
+//! single-op latency *rises* slightly with shards (queue hop + cache
+//! traffic), which is the latency-vs-throughput trade the paper's
+//! Fig. 7 panels split. A `pulse` DES row is printed for reference:
+//! its throughput is virtual time (modeled hardware), not comparable
+//! wall clock — the interesting live column is scaling, not absolute
+//! ops/s.
+//!
+//! Output: table + `bench_out/BENCH_live.json`.
+
+use pulse::backend::TraversalBackend;
+use pulse::bench_support::{save_json, Table};
+use pulse::ds::HashMapDs;
+use pulse::isa::SP_WORDS;
+use pulse::live::LiveBackend;
+use pulse::rack::{Op, Rack, RackConfig};
+use pulse::util::json::Json;
+use pulse::util::prng::Rng;
+use pulse::util::zipf::KeyChooser;
+
+const KEYS: u64 = 120_000;
+const BUCKETS: usize = 2_048; // ~58-node chains => ~30 iters/op avg
+const OPS: u64 = 30_000;
+const WARMUP: u64 = 2_000;
+const SHARDS: [usize; 3] = [1, 2, 4];
+const LOADS: [usize; 3] = [1, 16, 128];
+
+fn build_ops(rack: &mut Rack) -> Vec<Op> {
+    let mut m = HashMapDs::build(rack, BUCKETS);
+    for k in 0..KEYS as i64 {
+        m.insert(rack, k, k * 7);
+    }
+    let prog = m.find_program();
+    let chooser = KeyChooser::scrambled_zipfian(KEYS);
+    let mut rng = Rng::new(0x11FE);
+    (0..OPS + WARMUP)
+        .map(|_| {
+            let key = chooser.next(&mut rng) as i64;
+            let mut sp = [0i64; SP_WORDS];
+            sp[0] = key;
+            Op::new(prog.clone(), m.bucket_ptr(key), sp)
+        })
+        .collect()
+}
+
+fn main() -> std::io::Result<()> {
+    let mut tbl = Table::new(
+        "live engine: wall ops/s and latency vs shards x offered load",
+        &[
+            "shards", "conc", "ops/s", "p50 us", "p95 us", "p99 us",
+            "iters/op", "fwd/op",
+        ],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    // rate[shards] at the highest offered load (for the scaling line)
+    let mut peak_rate = [0f64; 5];
+
+    for &shards in &SHARDS {
+        let mut backend =
+            LiveBackend::new(Rack::new(RackConfig::bench(shards, 1 << 20)));
+        let ops = build_ops(backend.rack_mut());
+        let (warm, timed) = ops.split_at(WARMUP as usize);
+        for &conc in &LOADS {
+            backend.serve_batch(warm, conc); // populate caches/threads
+            let rep = backend.serve_batch(timed, conc);
+            assert_eq!(rep.completed, OPS, "{shards} shards lost ops");
+            assert_eq!(rep.trapped, 0);
+            let (p50, p95, p99) = rep.latency_percentiles();
+            let iters_per_op =
+                rep.total_iters as f64 / rep.completed as f64;
+            let run = backend.last_run().unwrap();
+            let fwd_per_op =
+                run.total_forwards() as f64 / rep.completed as f64;
+            tbl.row(&[
+                shards.to_string(),
+                conc.to_string(),
+                format!("{:.0}", rep.tput_ops_per_s),
+                format!("{:.1}", p50 as f64 / 1e3),
+                format!("{:.1}", p95 as f64 / 1e3),
+                format!("{:.1}", p99 as f64 / 1e3),
+                format!("{iters_per_op:.1}"),
+                format!("{fwd_per_op:.2}"),
+            ]);
+            let mut row = Json::obj();
+            row.set("shards", shards)
+                .set("conc", conc)
+                .set("ops", rep.completed)
+                .set("ops_per_s", rep.tput_ops_per_s)
+                .set("p50_ns", p50)
+                .set("p95_ns", p95)
+                .set("p99_ns", p99)
+                .set("mean_ns", rep.latency.mean())
+                .set("iters_per_op", iters_per_op)
+                .set("forwards_per_op", fwd_per_op)
+                .set("engine", run.to_json());
+            rows.push(row);
+            if conc == *LOADS.last().unwrap() {
+                peak_rate[shards] = rep.tput_ops_per_s;
+            }
+        }
+    }
+
+    tbl.print();
+
+    let scaling = if peak_rate[1] > 0.0 {
+        peak_rate[4] / peak_rate[1]
+    } else {
+        0.0
+    };
+    println!(
+        "\nscaling 1 -> 4 shards at conc={}: {scaling:.2}x \
+         (acceptance bar: >=1.5x on a 4-core host)",
+        LOADS.last().unwrap()
+    );
+
+    // DES reference on the same workload (virtual time; context only)
+    let mut des = Rack::new(RackConfig::bench(4, 1 << 20));
+    let des_ops = build_ops(&mut des);
+    let rep = TraversalBackend::serve_batch(
+        &mut des,
+        &des_ops[WARMUP as usize..],
+        *LOADS.last().unwrap(),
+    );
+    let (dp50, dp95, dp99) = rep.latency_percentiles();
+    println!(
+        "reference pulse DES (4 nodes, virtual time): {:.0} ops/s \
+         p50={:.1}us p95={:.1}us p99={:.1}us",
+        rep.tput_ops_per_s,
+        dp50 as f64 / 1e3,
+        dp95 as f64 / 1e3,
+        dp99 as f64 / 1e3
+    );
+
+    let mut j = Json::obj();
+    j.set("bench", "live_throughput")
+        .set("workload", "ycsb-c/zipf hash lookups")
+        .set("keys", KEYS)
+        .set("buckets", BUCKETS as u64)
+        .set("ops", OPS)
+        .set("host_cores", std::thread::available_parallelism()
+            .map(|n| n.get() as u64)
+            .unwrap_or(0))
+        .set("rows", rows)
+        .set("scaling_1_to_4_shards", scaling)
+        .set("des_reference_ops_per_s", rep.tput_ops_per_s);
+    save_json("BENCH_live", &j)?;
+    Ok(())
+}

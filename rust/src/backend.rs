@@ -26,6 +26,21 @@ use crate::baselines::{RpcKind, RpcModel, WorkloadStats};
 use crate::isa::SP_WORDS;
 use crate::rack::{Op, Rack, ServeReport};
 
+/// Clamp a model-produced per-op latency into a sane range. Analytic
+/// models can emit NaN (0/0 in a rate formula), negative values
+/// (mis-calibrated subtraction), or +inf (division by a zero
+/// bandwidth); none of those may poison the summed latency or the
+/// histogram. NaN and anything below the 1 ns floor become 1 ns; +inf
+/// caps at ~11.6 days, far beyond any legitimate model output.
+fn sanitize_latency_ns(lat: f64) -> f64 {
+    const MAX_NS: f64 = 1e15;
+    if lat.is_nan() {
+        1.0
+    } else {
+        lat.clamp(1.0, MAX_NS)
+    }
+}
+
 /// Shared serving loop of the model backends: trace each op through
 /// the rack's functional substrate, time it with `per_op_latency_ns`
 /// (which may accumulate model state), and record the accounting every
@@ -43,7 +58,7 @@ fn trace_serve(
     while let Some(op) = ops(issued) {
         issued += 1;
         let (_sp, trace) = trace_full_op(rack, &op);
-        let lat = per_op_latency_ns(&op, &trace).max(1.0);
+        let lat = sanitize_latency_ns(per_op_latency_ns(&op, &trace));
         total_ns += lat;
         if trace.trapped {
             report.trapped += 1;
@@ -67,6 +82,7 @@ pub struct BackendMetrics {
     pub trapped: u64,
     pub mean_latency_ns: f64,
     pub p50_latency_ns: u64,
+    pub p95_latency_ns: u64,
     pub p99_latency_ns: u64,
     pub tput_ops_per_s: f64,
     pub total_iters: u64,
@@ -81,6 +97,7 @@ impl BackendMetrics {
             trapped: r.trapped,
             mean_latency_ns: r.latency.mean(),
             p50_latency_ns: r.latency.p50(),
+            p95_latency_ns: r.latency.p95(),
             p99_latency_ns: r.latency.p99(),
             tput_ops_per_s: r.tput_ops_per_s,
             total_iters: r.total_iters,
@@ -363,6 +380,52 @@ mod tests {
             })
             .collect();
         backend.serve_batch(&ops, 8)
+    }
+
+    #[test]
+    fn sanitize_latency_guards_degenerate_model_outputs() {
+        assert_eq!(sanitize_latency_ns(f64::NAN), 1.0);
+        assert_eq!(sanitize_latency_ns(-5.0e9), 1.0);
+        assert_eq!(sanitize_latency_ns(f64::NEG_INFINITY), 1.0);
+        assert_eq!(sanitize_latency_ns(0.0), 1.0);
+        assert_eq!(sanitize_latency_ns(0.25), 1.0);
+        assert_eq!(sanitize_latency_ns(f64::INFINITY), 1e15);
+        assert_eq!(sanitize_latency_ns(42.5), 42.5);
+    }
+
+    #[test]
+    fn trace_serve_survives_degenerate_per_op_latencies() {
+        // a latency model gone wrong (NaN, negative, inf, sub-ns) must
+        // still yield a finite, internally consistent report
+        let mut rack = Rack::new(RackConfig::small(1));
+        let mut m = HashMapDs::build(&mut rack, 16);
+        for i in 0..50 {
+            m.insert(&mut rack, i, i);
+        }
+        let prog = m.find_program();
+        let ops: Vec<Op> = (0..4)
+            .map(|i| {
+                let mut sp = [0i64; SP_WORDS];
+                sp[0] = i;
+                Op::new(prog.clone(), m.bucket_ptr(i), sp)
+            })
+            .collect();
+        let bad = [f64::NAN, -1.0e12, f64::INFINITY, 0.001];
+        let mut k = 0usize;
+        let (report, total_ns) = trace_serve(
+            &mut rack,
+            &mut |i| ops.get(i as usize).cloned(),
+            &mut |_op, _trace| {
+                k += 1;
+                bad[k - 1]
+            },
+        );
+        assert_eq!(report.completed, 4);
+        assert_eq!(report.latency.count(), 4);
+        assert!(total_ns.is_finite(), "summed latency not finite");
+        assert!(report.latency.mean().is_finite());
+        assert!(report.latency.min() >= 1, "below the 1 ns floor");
+        assert!(report.latency.max() <= 1_000_000_000_000_000);
     }
 
     #[test]

@@ -16,6 +16,7 @@ use std::path::{Path, PathBuf};
 use crate::apps::{BtrDbApp, WebServiceApp, WiredTigerApp};
 use crate::backend::{CacheBackend, RpcBackend, TraversalBackend};
 use crate::baselines::{RpcKind, WorkloadStats};
+use crate::live::LiveBackend;
 use crate::rack::{Op, Rack, RackConfig, ServeReport};
 use crate::util::json::Json;
 use crate::workloads::{YcsbSpec, YcsbWorkload};
@@ -108,11 +109,14 @@ pub fn bench_rack(nodes: usize, granularity: u64) -> Rack {
 }
 
 /// Build one of the compared systems behind the unified trait.
-/// Kinds: `pulse`, `pulse-acc`, `cache`, `rpc`, `rpc-arm`, `cache-rpc`.
+/// Kinds: `pulse`, `pulse-acc`, `cache`, `rpc`, `rpc-arm`, `cache-rpc`,
+/// `live` (real-core sharded execution; wall-clock metrics).
 pub fn make_backend(kind: &str, cfg: RackConfig) -> Box<dyn TraversalBackend> {
     match kind {
         "pulse" => Box::new(Rack::new(cfg)),
         "pulse-acc" => Box::new(Rack::new(cfg.acc())),
+        // one real worker thread per memory node, same functional heap
+        "live" => Box::new(LiveBackend::new(Rack::new(cfg))),
         // cache sized at ~25% of the bench-scale working set (the paper
         // runs 2 GB caches against much larger datasets; the cache:WSS
         // ratio is what shapes the result)

@@ -28,6 +28,7 @@ pub mod compiler;
 pub mod dispatch;
 pub mod rack;
 pub mod backend;
+pub mod live;
 pub mod ds;
 pub mod apps;
 pub mod workloads;

@@ -1,0 +1,145 @@
+//! Per-run metrics of the live engine: shard counters, router
+//! counters, and queue occupancy, assembled after the worker threads
+//! join. Wall-clock latency/throughput live in the ordinary
+//! [`crate::rack::ServeReport`]; this is the engine-internal view
+//! (who executed what, how traffic moved) that the DES gets for free
+//! from its event log.
+
+use crate::live::queue::QueueSnapshot;
+use crate::live::router::RouterStats;
+use crate::util::json::Json;
+
+/// Counters of one shard worker (returned by the thread on join).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Jobs pulled off the request queue (visits, incl. re-entries).
+    pub jobs: u64,
+    /// Iterations executed on this shard's accelerator.
+    pub iters: u64,
+    /// Bounced requests forwarded directly to a peer shard.
+    pub forwards: u64,
+    /// Budget-exhaustion yields sent back to the dispatcher.
+    pub yields: u64,
+    /// Traversals that ended in a trap on this shard.
+    pub traps: u64,
+    /// Forwards lost because the peer had already exited (only
+    /// possible during teardown; 0 in a healthy run).
+    pub drops: u64,
+}
+
+/// Everything the engine observed during one serve run.
+#[derive(Debug, Clone, Default)]
+pub struct LiveRunStats {
+    pub shards: Vec<ShardStats>,
+    pub router: RouterStats,
+    /// Per-shard request-queue counters.
+    pub queues: Vec<QueueSnapshot>,
+    /// The shared reply queue back to the dispatcher.
+    pub replies: QueueSnapshot,
+}
+
+impl LiveRunStats {
+    pub fn total_iters(&self) -> u64 {
+        self.shards.iter().map(|s| s.iters).sum()
+    }
+
+    pub fn total_forwards(&self) -> u64 {
+        self.shards.iter().map(|s| s.forwards).sum()
+    }
+
+    pub fn total_yields(&self) -> u64 {
+        self.shards.iter().map(|s| s.yields).sum()
+    }
+
+    pub fn total_drops(&self) -> u64 {
+        self.shards.iter().map(|s| s.drops).sum()
+    }
+
+    /// Load-balance skew: busiest shard's iterations over the mean
+    /// (1.0 = perfectly even). 0.0 for an empty run.
+    pub fn iter_skew(&self) -> f64 {
+        let total = self.total_iters();
+        if total == 0 || self.shards.is_empty() {
+            return 0.0;
+        }
+        let mean = total as f64 / self.shards.len() as f64;
+        let max = self.shards.iter().map(|s| s.iters).max().unwrap_or(0);
+        max as f64 / mean
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "shards={} iters={} forwards={} yields={} skew={:.2} \
+             reroutes={} invalid={}",
+            self.shards.len(),
+            self.total_iters(),
+            self.total_forwards(),
+            self.total_yields(),
+            self.iter_skew(),
+            self.router.reroutes,
+            self.router.invalid,
+        )
+    }
+
+    /// Machine-readable form for the bench harness.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("shards", self.shards.len())
+            .set("total_iters", self.total_iters())
+            .set("total_forwards", self.total_forwards())
+            .set("total_yields", self.total_yields())
+            .set("total_drops", self.total_drops())
+            .set("iter_skew", self.iter_skew())
+            .set("router_routed", self.router.routed)
+            .set("router_reroutes", self.router.reroutes)
+            .set("router_invalid", self.router.invalid);
+        let missing = QueueSnapshot::default();
+        let per_shard: Vec<Json> = self
+            .shards
+            .iter()
+            .zip(self.queues.iter().chain(std::iter::repeat(&missing)))
+            .map(|(s, q)| {
+                let mut o = Json::obj();
+                o.set("jobs", s.jobs)
+                    .set("iters", s.iters)
+                    .set("forwards", s.forwards)
+                    .set("yields", s.yields)
+                    .set("traps", s.traps)
+                    .set("queue_pushed", q.pushed)
+                    .set("queue_full_blocks", q.full_blocks);
+                o
+            })
+            .collect();
+        j.set("per_shard", per_shard);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_and_skew() {
+        let s = LiveRunStats {
+            shards: vec![
+                ShardStats { jobs: 10, iters: 300, ..Default::default() },
+                ShardStats { jobs: 10, iters: 100, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(s.total_iters(), 400);
+        assert!((s.iter_skew() - 1.5).abs() < 1e-9);
+        assert_eq!(s.total_drops(), 0);
+    }
+
+    #[test]
+    fn empty_run_is_well_defined() {
+        let s = LiveRunStats::default();
+        assert_eq!(s.total_iters(), 0);
+        assert_eq!(s.iter_skew(), 0.0);
+        // renders without panicking
+        let _ = s.summary();
+        let _ = s.to_json().render();
+    }
+}

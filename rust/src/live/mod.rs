@@ -1,0 +1,590 @@
+//! Live multi-threaded traversal engine: the PULSE dataplane executed
+//! for real instead of simulated.
+//!
+//! Every memory node of the rack becomes a *shard* — an OS thread that
+//! owns that node's [`Accelerator`] (DRAM region, TCAM range table,
+//! native logic engine) and serves a bounded MPSC request queue. The
+//! coordinator (the calling thread) plays the CPU node's dispatch
+//! engine; a shared [`Router`] snapshot of the switch's coarse
+//! `RangeMap` plays the Tofino pipeline. Mapping onto paper Fig. 6:
+//!
+//! 1. dispatch: coordinator resolves an op stage, builds the
+//!    `TraversalMsg`, routes the start pointer;
+//! 2. the owning shard pops the request and runs iterations against
+//!    its local DRAM (`Accelerator::visit`);
+//! 3. a finished traversal is answered to the reply queue;
+//! 4. a non-local pointer bounces: with in-network routing the shard
+//!    forwards the request *directly* to the owner's queue (steps
+//!    4→6); in PULSE-ACC mode it returns to the coordinator, which
+//!    re-routes it — the extra hop Fig. 9 measures;
+//! 5. budget exhaustion yields to the coordinator, which grants more
+//!    iterations and re-dispatches (paper §3).
+//!
+//! Everything above the wire is shared with the DES: the same ops,
+//! stage chains, `TraversalMsg` format, accelerator visit logic, and
+//! functional heap — so [`LiveBackend`] slots behind
+//! [`TraversalBackend`] next to Rack/Cache/RPC and must produce
+//! identical scratchpads and iteration counts (enforced by
+//! `rust/tests/integration_live.rs`). What changes is *time*: the DES
+//! reports modeled virtual time; the live engine reports wall-clock
+//! latency/throughput of real threads contending on real queues.
+//!
+//! Unlike the DES, the live coordinator offloads every stage (its
+//! shards *are* general-purpose cores, so the `t_c ≤ η·t_d` FPGA
+//! offload test and the CPU fallback path do not apply), and links are
+//! loss-free (in-process queues don't drop), so there is no
+//! retransmission machinery.
+
+pub mod metrics;
+pub mod queue;
+pub mod router;
+mod shard;
+
+pub use self::metrics::{LiveRunStats, ShardStats};
+pub use self::router::{Router, RouterStats};
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::backend::{BackendMetrics, TraversalBackend};
+use crate::isa::{Status, SP_WORDS};
+use crate::net::{RequestId, TraversalMsg};
+use crate::rack::{Op, Rack, ServeReport};
+
+use self::queue::QueueTx;
+use self::shard::{run_shard, LiveJob, Reply, ShardMsg};
+
+/// Tunables of the live engine.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveConfig {
+    /// Per-shard request-queue capacity. 0 = auto: concurrency + 1,
+    /// which makes every send non-blocking (see `live::queue` docs).
+    /// A smaller explicit capacity instead clamps the admitted window
+    /// to `capacity - 1` so the no-deadlock invariant still holds.
+    pub queue_capacity: usize,
+    /// Yield-continuation cap per stage, mirroring `Rack::traverse`'s
+    /// runaway-yield guard; past it the stage traps.
+    pub max_budget_boosts: u32,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        Self { queue_capacity: 0, max_budget_boosts: 4096 }
+    }
+}
+
+/// The live engine behind the unified backend trait.
+pub struct LiveBackend {
+    pub rack: Rack,
+    pub live_cfg: LiveConfig,
+    totals: ServeReport,
+    last_run: Option<LiveRunStats>,
+    record_results: bool,
+    last_results: Vec<[i64; SP_WORDS]>,
+}
+
+impl LiveBackend {
+    pub fn new(rack: Rack) -> Self {
+        Self::with_config(rack, LiveConfig::default())
+    }
+
+    pub fn with_config(rack: Rack, live_cfg: LiveConfig) -> Self {
+        Self {
+            rack,
+            live_cfg,
+            totals: ServeReport::default(),
+            last_run: None,
+            record_results: false,
+            last_results: Vec::new(),
+        }
+    }
+
+    /// Capture every op's final scratchpad during serves (issue
+    /// order). Costs one copy per op; off by default. Used by the
+    /// cross-backend equivalence tests.
+    pub fn record_results(&mut self, on: bool) {
+        self.record_results = on;
+    }
+
+    /// Final scratchpads of the last serve, in issue order (empty
+    /// unless `record_results(true)`).
+    pub fn last_results(&self) -> &[[i64; SP_WORDS]] {
+        &self.last_results
+    }
+
+    /// Engine-internal stats of the last serve run.
+    pub fn last_run(&self) -> Option<&LiveRunStats> {
+        self.last_run.as_ref()
+    }
+
+    fn serve_impl(
+        &mut self,
+        ops: &mut dyn FnMut(u64) -> Option<Op>,
+        concurrency: usize,
+    ) -> ServeReport {
+        let wall_start = Instant::now();
+        let shards = self.rack.cfg.nodes;
+        let in_network = self.rack.cfg.in_network_routing;
+        let grant = self.rack.cfg.dispatch.max_iters;
+        let max_boosts = self.live_cfg.max_budget_boosts;
+
+        // No-deadlock sizing: at most `window` messages are in flight
+        // (one per admitted op) and each queue absorbs one extra
+        // shutdown marker, so capacity >= window + 1 means no send can
+        // block on a full queue and forwarding cycles cannot jam.
+        let (cap, window) = if self.live_cfg.queue_capacity == 0 {
+            (concurrency.max(1) + 1, concurrency.max(1))
+        } else {
+            let cap = self.live_cfg.queue_capacity.max(2);
+            (cap, concurrency.clamp(1, cap - 1))
+        };
+
+        let router =
+            Arc::new(Router::new(self.rack.alloc.switch_map.clone()));
+        let mut txs = Vec::with_capacity(shards);
+        let mut rxs = Vec::with_capacity(shards);
+        let mut qstats = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = queue::bounded::<ShardMsg>(cap);
+            qstats.push(tx.stats_handle());
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let (rtx, rrx) = queue::bounded::<Reply>(window + shards + 1);
+        let reply_stats = rtx.stats_handle();
+
+        let mut report = ServeReport::default();
+        let mut results: Vec<(u64, [i64; SP_WORDS])> = Vec::new();
+        let record = self.record_results;
+
+        let memnodes = &mut self.rack.memnodes;
+        let shard_stats: Vec<ShardStats> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(shards);
+            for (accel, rx) in memnodes.iter_mut().zip(rxs) {
+                let peers = txs.clone();
+                let replies = rtx.clone();
+                let router = Arc::clone(&router);
+                handles.push(s.spawn(move || {
+                    run_shard(accel, rx, peers, replies, router, in_network)
+                }));
+            }
+            // only shards hold reply senders now: if every worker dies
+            // (panic), rrx.recv() disconnects instead of blocking
+            // forever, and the joins below surface the panic
+            drop(rtx);
+
+            let mut coord = Coordinator {
+                txs: &txs,
+                router: router.as_ref(),
+                report: &mut report,
+                ops,
+                slots: (0..window).map(|_| None).collect(),
+                free: (0..window as u32).rev().collect(),
+                issued: 0,
+                inflight: 0,
+                source_done: false,
+                grant,
+                max_boosts,
+                seq: 0,
+                record,
+                results: &mut results,
+            };
+            loop {
+                // admission happens here (not in the completion path)
+                // so op chains cannot recurse the coordinator's stack
+                coord.pump();
+                if coord.inflight == 0 {
+                    break;
+                }
+                match rrx.recv() {
+                    Some(reply) => coord.on_reply(reply),
+                    // every shard exited early (panic mid-run): stop
+                    // pumping; joins below surface the panic
+                    None => break,
+                }
+            }
+
+            for tx in &txs {
+                let _ = tx.send(ShardMsg::Shutdown);
+            }
+            drop(txs);
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("live shard panicked"))
+                .collect()
+        });
+
+        if record {
+            results.sort_unstable_by_key(|(idx, _)| *idx);
+            self.last_results =
+                results.into_iter().map(|(_, sp)| sp).collect();
+        } else {
+            self.last_results.clear();
+        }
+
+        let wall = wall_start.elapsed();
+        report.makespan_ns = wall.as_nanos() as u64;
+        report.wall_ms = wall.as_secs_f64() * 1e3;
+        if report.completed > 0 && wall.as_secs_f64() > 0.0 {
+            report.tput_ops_per_s =
+                report.completed as f64 / wall.as_secs_f64();
+        }
+        self.last_run = Some(LiveRunStats {
+            shards: shard_stats,
+            router: router.snapshot(),
+            queues: qstats.iter().map(|q| q.snapshot()).collect(),
+            replies: reply_stats.snapshot(),
+        });
+        self.totals.merge(&report);
+        report
+    }
+}
+
+impl TraversalBackend for LiveBackend {
+    fn name(&self) -> &'static str {
+        "LIVE"
+    }
+
+    fn rack_mut(&mut self) -> &mut Rack {
+        &mut self.rack
+    }
+
+    fn submit(&mut self, op: &Op) -> [i64; SP_WORDS] {
+        self.rack.run_op_functional(op)
+    }
+
+    fn serve(
+        &mut self,
+        ops: &mut dyn FnMut(u64) -> Option<Op>,
+        concurrency: usize,
+    ) -> ServeReport {
+        self.serve_impl(ops, concurrency)
+    }
+
+    fn serve_batch(&mut self, ops: &[Op], concurrency: usize) -> ServeReport {
+        self.serve_impl(&mut |i| ops.get(i as usize).cloned(), concurrency)
+    }
+
+    fn metrics(&self) -> BackendMetrics {
+        BackendMetrics::from_report("LIVE", &self.totals)
+    }
+}
+
+/// One admitted op's dispatcher-side state (the live `OpRun`).
+struct Slot {
+    op: Op,
+    op_index: u64,
+    stage_idx: usize,
+    born: Instant,
+    iters_total: u64,
+    crossings_total: u32,
+    boosts: u32,
+    net_bytes: u64,
+}
+
+/// The CPU-node role: admission window, stage chaining, yield grants,
+/// and completion accounting. Mirrors the DES's `launch_stage` /
+/// `advance_op` state machine over real replies instead of events.
+struct Coordinator<'a> {
+    txs: &'a [QueueTx<ShardMsg>],
+    router: &'a Router,
+    report: &'a mut ServeReport,
+    ops: &'a mut dyn FnMut(u64) -> Option<Op>,
+    slots: Vec<Option<Slot>>,
+    free: Vec<u32>,
+    issued: u64,
+    inflight: usize,
+    source_done: bool,
+    grant: u32,
+    max_boosts: u32,
+    seq: u64,
+    record: bool,
+    results: &'a mut Vec<(u64, [i64; SP_WORDS])>,
+}
+
+impl Coordinator<'_> {
+    /// Admit new ops until the window is full or the source runs dry.
+    fn pump(&mut self) {
+        while !self.source_done && self.inflight < self.slots.len() {
+            let Some(op) = (self.ops)(self.issued) else {
+                self.source_done = true;
+                break;
+            };
+            let op_index = self.issued;
+            self.issued += 1;
+            let token = self
+                .free
+                .pop()
+                .expect("inflight < window implies a free token");
+            self.slots[token as usize] = Some(Slot {
+                op,
+                op_index,
+                stage_idx: 0,
+                born: Instant::now(),
+                iters_total: 0,
+                crossings_total: 0,
+                boosts: 0,
+                net_bytes: 0,
+            });
+            self.inflight += 1;
+            self.dispatch_stage(token, [0i64; SP_WORDS], None);
+        }
+    }
+
+    /// Resolve and dispatch the current stage of `token` (mirrors the
+    /// DES `launch_stage`, including the degenerate start==0 skip).
+    fn dispatch_stage(
+        &mut self,
+        token: u32,
+        prev_sp: [i64; SP_WORDS],
+        repeat_from: Option<[i64; SP_WORDS]>,
+    ) {
+        let (start, sp, program) = {
+            let slot = self.slots[token as usize].as_ref().unwrap();
+            let stage = &slot.op.stages[slot.stage_idx];
+            let (start, sp) = stage.resolve(&prev_sp, repeat_from);
+            let program = (start != 0)
+                .then(|| stage.iter.program.clone());
+            (start, sp, program)
+        };
+        let Some(program) = program else {
+            // degenerate stage (e.g. empty structure): skip forward
+            self.advance(token, sp);
+            return;
+        };
+        let id = RequestId { cpu_node: 0, seq: self.seq };
+        self.seq += 1;
+        let msg =
+            TraversalMsg::request(id, program, start, sp, self.grant);
+        self.send(token, msg, false);
+    }
+
+    /// Route + enqueue a request; unroutable pointers answer with a
+    /// trap (the switch's `Route::Invalid` path).
+    fn send(&mut self, token: u32, msg: TraversalMsg, rerouted: bool) {
+        match self.router.route(msg.cur_ptr, rerouted) {
+            Some(shard) => {
+                match self.txs[shard as usize]
+                    .send(ShardMsg::Job(LiveJob { token, msg }))
+                {
+                    Ok(()) => {}
+                    Err(ShardMsg::Job(job)) => {
+                        // shard gone (teardown race): trap the op so
+                        // the run terminates with honest accounting
+                        self.account_msg(token, &job.msg);
+                        self.report.trapped += 1;
+                        self.advance(token, job.msg.sp);
+                    }
+                    Err(ShardMsg::Shutdown) => unreachable!(),
+                }
+            }
+            None => {
+                self.account_msg(token, &msg);
+                self.report.trapped += 1;
+                self.advance(token, msg.sp);
+            }
+        }
+    }
+
+    /// Fold a message's accrued work into its slot and the report —
+    /// every executed iteration read DRAM, so `mem_bytes` is charged
+    /// here exactly as the DES charges it per iteration. Called once
+    /// per message lifetime: either on its `Done` reply or on the
+    /// path that terminates it early (boost cap, unroutable pointer).
+    fn account_msg(&mut self, token: u32, msg: &TraversalMsg) {
+        let slot = self.slots[token as usize].as_mut().unwrap();
+        slot.iters_total += msg.iters_done as u64;
+        slot.crossings_total += msg.node_crossings;
+        self.report.mem_bytes +=
+            msg.iters_done as u64 * msg.program.load_words as u64 * 8;
+    }
+
+    fn on_reply(&mut self, reply: Reply) {
+        match reply {
+            Reply::Done { token, msg } => {
+                self.account_msg(token, &msg);
+                {
+                    let slot =
+                        self.slots[token as usize].as_mut().unwrap();
+                    let wire = msg.wire_size() as u64;
+                    // request + response over the CPU links, plus one
+                    // shard-to-shard hop per crossing
+                    slot.net_bytes +=
+                        wire * 2 + msg.node_crossings as u64 * wire;
+                }
+                if msg.status == Status::Trap {
+                    self.report.trapped += 1;
+                }
+                self.advance(token, msg.sp);
+            }
+            Reply::Yield { token, mut msg } => {
+                let boosts = {
+                    let slot =
+                        self.slots[token as usize].as_mut().unwrap();
+                    slot.boosts += 1;
+                    slot.boosts
+                };
+                if boosts > self.max_boosts {
+                    self.account_msg(token, &msg);
+                    self.report.trapped += 1;
+                    self.advance(token, msg.sp);
+                } else {
+                    msg.max_iters += self.grant;
+                    self.send(token, msg, false);
+                }
+            }
+            // PULSE-ACC: the bounce came back to the CPU role; route
+            // it onward as a fresh dispatch (the DES counts these as
+            // routed requests, not switch reroutes; crossings are
+            // already accumulated inside `msg`)
+            Reply::Bounced { token, msg } => self.send(token, msg, false),
+        }
+    }
+
+    /// Stage finished with scratchpad `sp`: repeat, chain, or complete
+    /// (mirrors the DES `advance_op`).
+    fn advance(&mut self, token: u32, sp: [i64; SP_WORDS]) {
+        let (repeat, more_stages) = {
+            let slot = self.slots[token as usize].as_ref().unwrap();
+            let stage = &slot.op.stages[slot.stage_idx];
+            (
+                stage.wants_repeat(&sp),
+                slot.stage_idx + 1 < slot.op.stages.len(),
+            )
+        };
+        if repeat {
+            self.dispatch_stage(token, sp, Some(sp));
+            return;
+        }
+        if more_stages {
+            self.slots[token as usize].as_mut().unwrap().stage_idx += 1;
+            self.dispatch_stage(token, sp, None);
+            return;
+        }
+        let slot = self.slots[token as usize].take().unwrap();
+        let lat = slot.born.elapsed().as_nanos() as u64
+            + slot.op.cpu_post_ns;
+        self.report.completed += 1;
+        self.report.latency.record(lat.max(1));
+        self.report.crossings.record(slot.crossings_total as u64);
+        if slot.crossings_total > 0 {
+            self.report.cross_node_requests += 1;
+        }
+        self.report.total_iters += slot.iters_total;
+        self.report.net_bytes += slot.net_bytes;
+        if self.record {
+            self.results.push((slot.op_index, sp));
+        }
+        self.free.push(token);
+        self.inflight -= 1;
+        // the serve loop pumps replacement ops after each reply
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ds::{ForwardList, HashMapDs};
+    use crate::rack::{RackConfig, StartAddr};
+
+    fn backend(nodes: usize) -> LiveBackend {
+        LiveBackend::new(Rack::new(RackConfig::small(nodes)))
+    }
+
+    fn hash_ops(b: &mut LiveBackend, n: u64) -> Vec<Op> {
+        let mut m = HashMapDs::build(b.rack_mut(), 64);
+        for i in 0..500 {
+            m.insert(b.rack_mut(), i, i * 2);
+        }
+        let prog = m.find_program();
+        (0..n)
+            .map(|i| {
+                let key = (i % 500) as i64;
+                let mut sp = [0i64; SP_WORDS];
+                sp[0] = key;
+                Op::new(prog.clone(), m.bucket_ptr(key), sp)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serves_and_reports_wall_metrics() {
+        let mut b = backend(2);
+        let ops = hash_ops(&mut b, 200);
+        b.record_results(true);
+        let rep = b.serve_batch(&ops, 8);
+        assert_eq!(rep.completed, 200);
+        assert_eq!(rep.trapped, 0);
+        assert_eq!(rep.latency.count(), 200);
+        assert!(rep.latency.mean() >= 1.0);
+        assert!(rep.tput_ops_per_s > 0.0);
+        assert!(rep.total_iters >= 200);
+        // every op's scratchpad captured, values correct
+        let got = b.last_results();
+        assert_eq!(got.len(), 200);
+        for (i, sp) in got.iter().enumerate() {
+            assert_eq!(sp[1], ((i % 500) as i64) * 2, "op {i}");
+        }
+        let run = b.last_run().unwrap();
+        assert_eq!(run.total_iters(), rep.total_iters);
+        assert_eq!(run.total_drops(), 0);
+        let m = b.metrics();
+        assert_eq!(m.name, "LIVE");
+        assert_eq!(m.ops, 200);
+    }
+
+    #[test]
+    fn empty_op_source_is_a_noop() {
+        let mut b = backend(1);
+        let mut empty = |_: u64| -> Option<Op> { None };
+        let rep = b.serve(&mut empty, 4);
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.trapped, 0);
+        assert_eq!(b.last_run().unwrap().total_iters(), 0);
+    }
+
+    #[test]
+    fn unmapped_start_pointer_traps_like_the_switch() {
+        let mut b = backend(1);
+        let mut ops = hash_ops(&mut b, 1);
+        // point the op at unallocated VA space
+        ops[0].stages[0].start = StartAddr::Fixed(0xDEAD_0000_0000);
+        let rep = b.serve_batch(&ops, 2);
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.trapped, 1);
+        assert_eq!(b.last_run().unwrap().router.invalid, 1);
+    }
+
+    #[test]
+    fn tiny_queue_capacity_clamps_window_but_completes() {
+        let mut b = LiveBackend::with_config(
+            Rack::new(RackConfig::small(2)),
+            LiveConfig { queue_capacity: 2, max_budget_boosts: 4096 },
+        );
+        let ops = hash_ops(&mut b, 120);
+        let rep = b.serve_batch(&ops, 64); // window clamped to 1
+        assert_eq!(rep.completed, 120);
+        assert_eq!(rep.trapped, 0);
+    }
+
+    #[test]
+    fn yield_budget_continuation_sums_correctly() {
+        let mut cfg = RackConfig::small(1);
+        cfg.dispatch.max_iters = 3; // force yields on a 50-hop walk
+        let mut b = LiveBackend::new(Rack::new(cfg));
+        let mut l = ForwardList::new();
+        for i in 1..=50 {
+            l.push(b.rack_mut(), i);
+        }
+        let op = Op::new(l.sum_program(), l.head, [0i64; SP_WORDS]);
+        b.record_results(true);
+        let rep = b.serve_batch(&[op], 1);
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.trapped, 0);
+        assert_eq!(b.last_results()[0][3], (1..=50).sum::<i64>());
+        assert!(
+            b.last_run().unwrap().total_yields() > 0,
+            "3-iter budget over 50 hops must yield"
+        );
+    }
+}

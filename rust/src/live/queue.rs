@@ -1,0 +1,210 @@
+//! Bounded MPSC request queues for the live engine.
+//!
+//! A thin instrumented wrapper over `std::sync::mpsc::sync_channel`:
+//! each shard owns one receiver; the coordinator and every peer shard
+//! hold cloned senders (requests arrive from the dispatcher *and* as
+//! cross-shard bounces, paper Fig. 6 steps 1 and 4). The wrapper adds
+//! the occupancy counters the engine's metrics report (depth =
+//! pushed - popped, full-queue backpressure events) without touching
+//! the transfer fast path.
+//!
+//! Capacity discipline (the engine's no-deadlock invariant): every
+//! in-flight op is exactly one message somewhere in the system, so as
+//! long as each queue's capacity is at least the admitted window + 1
+//! (the +1 absorbs the shutdown marker), no `send` can block on a full
+//! queue and cross-shard forwarding cannot form a blocking cycle.
+//! `LiveBackend` sizes queues that way by default and clamps the
+//! window when a caller picks a smaller capacity.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+
+/// Shared occupancy counters of one queue (lock-free, relaxed: the
+/// counts are metrics, not synchronization).
+#[derive(Debug, Default)]
+pub struct QueueStats {
+    pushed: AtomicU64,
+    popped: AtomicU64,
+    full_blocks: AtomicU64,
+    capacity: u64,
+}
+
+/// Point-in-time view of a queue's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueSnapshot {
+    pub capacity: u64,
+    pub pushed: u64,
+    pub popped: u64,
+    /// Times a sender found the queue full and had to block.
+    pub full_blocks: u64,
+}
+
+impl QueueSnapshot {
+    /// Messages currently buffered (or in the receiver's hands).
+    pub fn depth(&self) -> u64 {
+        self.pushed.saturating_sub(self.popped)
+    }
+}
+
+impl QueueStats {
+    pub fn snapshot(&self) -> QueueSnapshot {
+        QueueSnapshot {
+            capacity: self.capacity,
+            pushed: self.pushed.load(Ordering::Relaxed),
+            popped: self.popped.load(Ordering::Relaxed),
+            full_blocks: self.full_blocks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Sending half; clone one per producer.
+#[derive(Debug)]
+pub struct QueueTx<T> {
+    tx: SyncSender<T>,
+    stats: Arc<QueueStats>,
+}
+
+// Manual impl: `T` need not be `Clone` for the handle to be.
+impl<T> Clone for QueueTx<T> {
+    fn clone(&self) -> Self {
+        Self { tx: self.tx.clone(), stats: Arc::clone(&self.stats) }
+    }
+}
+
+/// Receiving half; owned by exactly one consumer.
+#[derive(Debug)]
+pub struct QueueRx<T> {
+    rx: Receiver<T>,
+    stats: Arc<QueueStats>,
+}
+
+/// Create a bounded MPSC queue of the given capacity (>= 1).
+pub fn bounded<T>(capacity: usize) -> (QueueTx<T>, QueueRx<T>) {
+    let capacity = capacity.max(1);
+    let (tx, rx) = sync_channel(capacity);
+    let stats = Arc::new(QueueStats {
+        capacity: capacity as u64,
+        ..QueueStats::default()
+    });
+    (
+        QueueTx { tx, stats: Arc::clone(&stats) },
+        QueueRx { rx, stats },
+    )
+}
+
+impl<T> QueueTx<T> {
+    /// Send, blocking while the queue is full. Returns the value back
+    /// when the receiver is gone (shard exited), so the caller can
+    /// account for the drop instead of panicking.
+    pub fn send(&self, v: T) -> Result<(), T> {
+        match self.tx.try_send(v) {
+            Ok(()) => {
+                self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Full(v)) => {
+                self.stats.full_blocks.fetch_add(1, Ordering::Relaxed);
+                match self.tx.send(v) {
+                    Ok(()) => {
+                        self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+                        Ok(())
+                    }
+                    Err(e) => Err(e.0),
+                }
+            }
+            Err(TrySendError::Disconnected(v)) => Err(v),
+        }
+    }
+
+    /// Handle to the shared counters (survives the queue itself).
+    pub fn stats_handle(&self) -> Arc<QueueStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+impl<T> QueueRx<T> {
+    /// Receive, blocking until a message arrives. `None` once every
+    /// sender is gone and the queue is drained.
+    pub fn recv(&self) -> Option<T> {
+        match self.rx.recv() {
+            Ok(v) => {
+                self.stats.popped.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Non-blocking receive (`None` = currently empty OR disconnected;
+    /// used by the shard drain loop after a shutdown marker).
+    pub fn try_recv(&self) -> Option<T> {
+        match self.rx.try_recv() {
+            Ok(v) => {
+                self.stats.popped.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            Err(_) => None,
+        }
+    }
+
+    pub fn stats_handle(&self) -> Arc<QueueStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_single_producer() {
+        let (tx, rx) = bounded::<u32>(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for want in 0..5 {
+            assert_eq!(rx.recv(), Some(want));
+        }
+        let s = tx.stats_handle().snapshot();
+        assert_eq!(s.pushed, 5);
+        assert_eq!(s.popped, 5);
+        assert_eq!(s.depth(), 0);
+    }
+
+    #[test]
+    fn send_returns_value_when_receiver_gone() {
+        let (tx, rx) = bounded::<u32>(2);
+        drop(rx);
+        assert_eq!(tx.send(7), Err(7));
+    }
+
+    #[test]
+    fn recv_drains_then_reports_disconnect() {
+        let (tx, rx) = bounded::<u32>(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn full_queue_blocks_sender_until_consumed() {
+        let (tx, rx) = bounded::<u32>(1);
+        let h = std::thread::spawn(move || {
+            // second send must block until the consumer drains
+            tx.send(1).unwrap();
+            tx.send(2).unwrap();
+            tx.stats_handle().snapshot()
+        });
+        // give the producer a chance to hit the full queue
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        let s = h.join().unwrap();
+        assert_eq!(s.pushed, 2);
+        assert!(s.full_blocks >= 1, "producer never saw the queue full");
+    }
+}

@@ -1,0 +1,121 @@
+//! The live engine's dispatch router: the switch's coarse translation
+//! (paper §5) replicated as a shared, read-only routing table.
+//!
+//! The DES models the Tofino switch as an event-processing stage; the
+//! live engine replicates exactly its state — the coarse
+//! [`RangeMap`] from global VA ranges to owning memory node — as an
+//! immutable snapshot every thread consults lock-free. The coordinator
+//! routes fresh requests by start pointer (Fig. 6 step 1→2); a shard
+//! that discovers a non-local `cur_ptr` routes the bounced request
+//! directly to its owner (steps 4→6) without returning to the CPU
+//! thread — the in-network distributed-traversal fast path, now as
+//! real shard-to-shard queue hops.
+//!
+//! The snapshot is taken at serve start, so (like the real switch
+//! between map updates) allocations made *during* a serve are not
+//! visible to routing until the next run. Apps build before serving,
+//! matching the DES's publish-then-serve order.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::mem::{GAddr, NodeId, RangeMap};
+
+/// Routing counters (mirrors `switch::SwitchStats` for the live path).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Successfully routed messages (fresh dispatches + re-routes).
+    pub routed: u64,
+    /// Bounced requests re-routed shard-to-shard without CPU
+    /// involvement — the distributed-traversal fast path.
+    pub reroutes: u64,
+    /// Pointers that map to no shard (answered with a trap).
+    pub invalid: u64,
+}
+
+/// Shared coarse translation: VA range -> shard (= memory node).
+#[derive(Debug)]
+pub struct Router {
+    map: RangeMap,
+    routed: AtomicU64,
+    reroutes: AtomicU64,
+    invalid: AtomicU64,
+}
+
+impl Router {
+    pub fn new(map: RangeMap) -> Self {
+        Self {
+            map,
+            routed: AtomicU64::new(0),
+            reroutes: AtomicU64::new(0),
+            invalid: AtomicU64::new(0),
+        }
+    }
+
+    /// Route an address to its owning shard. `rerouted` marks
+    /// shard-originated bounces so they are counted separately from
+    /// fresh dispatches (the switch's `reroutes` counter).
+    pub fn route(&self, addr: GAddr, rerouted: bool) -> Option<NodeId> {
+        match self.map.lookup(addr) {
+            Some(node) => {
+                self.routed.fetch_add(1, Ordering::Relaxed);
+                if rerouted {
+                    self.reroutes.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(node)
+            }
+            None => {
+                self.invalid.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> RouterStats {
+        RouterStats {
+            routed: self.routed.load(Ordering::Relaxed),
+            reroutes: self.reroutes.load(Ordering::Relaxed),
+            invalid: self.invalid.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        let mut map = RangeMap::new();
+        map.insert(0x1000, 0x1000, 0);
+        map.insert(0x2000, 0x1000, 1);
+        Router::new(map)
+    }
+
+    #[test]
+    fn routes_by_owner_and_counts() {
+        let r = router();
+        assert_eq!(r.route(0x1800, false), Some(0));
+        assert_eq!(r.route(0x2000, true), Some(1));
+        assert_eq!(r.route(0x9000, false), None);
+        let s = r.snapshot();
+        assert_eq!(
+            s,
+            RouterStats { routed: 2, reroutes: 1, invalid: 1 }
+        );
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let r = std::sync::Arc::new(router());
+        std::thread::scope(|sc| {
+            for _ in 0..4 {
+                let r = std::sync::Arc::clone(&r);
+                sc.spawn(move || {
+                    for _ in 0..1000 {
+                        assert_eq!(r.route(0x1008, false), Some(0));
+                    }
+                });
+            }
+        });
+        assert_eq!(r.snapshot().routed, 4000);
+    }
+}

@@ -1,0 +1,162 @@
+//! Shard worker: one OS thread per memory node, owning that node's
+//! [`Accelerator`] (DRAM region + TCAM range table + logic engine).
+//!
+//! The worker loop is the live realization of the accelerator's visit
+//! cycle (paper §4.2 + Fig. 6): pop a request, execute iterations
+//! against local DRAM until the traversal finishes, yields its budget,
+//! or follows a pointer off-shard. Non-local pointers are forwarded
+//! *directly* to the owning shard's queue when in-network routing is
+//! on (Fig. 6 steps 4→6 — the half-RTT the paper saves); with it off
+//! (PULSE-ACC mode) the bounce returns to the dispatcher thread, which
+//! re-routes it — the extra hop Fig. 9 charges PULSE-ACC for.
+//!
+//! Shutdown protocol: the dispatcher sends one `Shutdown` marker per
+//! shard only after every op has completed, so the marker is always
+//! the logical tail of the queue; the worker still switches to a
+//! drain-then-exit loop (processing any stragglers) so teardown is
+//! safe even if a future caller relaxes that ordering.
+
+use std::sync::Arc;
+
+use crate::accel::{Accelerator, VisitEnd};
+use crate::isa::Status;
+use crate::net::{MsgKind, TraversalMsg};
+
+use super::metrics::ShardStats;
+use super::queue::{QueueRx, QueueTx};
+use super::router::Router;
+
+/// One in-flight traversal: the dispatcher-side slot token + the
+/// self-contained request/continuation message (same wire format on
+/// every hop, paper §5).
+#[derive(Debug)]
+pub(crate) struct LiveJob {
+    pub token: u32,
+    pub msg: TraversalMsg,
+}
+
+/// Messages a shard's request queue carries.
+#[derive(Debug)]
+pub(crate) enum ShardMsg {
+    Job(LiveJob),
+    /// Teardown marker; switches the worker to drain-then-exit.
+    Shutdown,
+}
+
+/// Messages back to the dispatcher thread.
+#[derive(Debug)]
+pub(crate) enum Reply {
+    /// Traversal finished (`msg.status` is `Return` or `Trap`).
+    Done { token: u32, msg: TraversalMsg },
+    /// Iteration budget exhausted; dispatcher grants more and
+    /// re-dispatches (paper §3 max-iteration bound).
+    Yield { token: u32, msg: TraversalMsg },
+    /// PULSE-ACC mode only: non-local pointer returned to the
+    /// dispatcher for re-routing instead of hopping shard-to-shard.
+    Bounced { token: u32, msg: TraversalMsg },
+}
+
+/// Worker body; returns its counters when the thread joins.
+pub(crate) fn run_shard(
+    accel: &mut Accelerator,
+    rx: QueueRx<ShardMsg>,
+    peers: Vec<QueueTx<ShardMsg>>,
+    replies: QueueTx<Reply>,
+    router: Arc<Router>,
+    in_network: bool,
+) -> ShardStats {
+    let mut stats = ShardStats::default();
+    let mut draining = false;
+    loop {
+        let m = if draining {
+            match rx.try_recv() {
+                Some(m) => m,
+                None => break,
+            }
+        } else {
+            match rx.recv() {
+                Some(m) => m,
+                None => break,
+            }
+        };
+        let mut job = match m {
+            ShardMsg::Shutdown => {
+                draining = true;
+                continue;
+            }
+            ShardMsg::Job(job) => job,
+        };
+        stats.jobs += 1;
+        let out = accel.visit(&mut job.msg);
+        stats.iters += out.iters as u64;
+        match out.end {
+            VisitEnd::Done(st) => {
+                if st == Status::Trap {
+                    stats.traps += 1;
+                }
+                job.msg.status = st;
+                job.msg.kind = MsgKind::Response;
+                send_reply(&replies, Reply::Done { token: job.token, msg: job.msg }, &mut stats);
+            }
+            VisitEnd::Yield => {
+                stats.yields += 1;
+                send_reply(&replies, Reply::Yield { token: job.token, msg: job.msg }, &mut stats);
+            }
+            VisitEnd::NotLocal => {
+                if !in_network {
+                    send_reply(
+                        &replies,
+                        Reply::Bounced { token: job.token, msg: job.msg },
+                        &mut stats,
+                    );
+                    continue;
+                }
+                match router.route(job.msg.cur_ptr, true) {
+                    // Routing back to ourselves would spin forever (the
+                    // fine table already said "not here"); the DES has
+                    // no such pointer either — trap defensively.
+                    Some(next) if next != accel.node => {
+                        stats.forwards += 1;
+                        let token = job.token;
+                        if let Err(ShardMsg::Job(job)) =
+                            peers[next as usize].send(ShardMsg::Job(job))
+                        {
+                            // peer already tore down: report the loss
+                            // upstream as a trap so the op terminates
+                            stats.drops += 1;
+                            answer_trap(&replies, token, job.msg, &mut stats);
+                        }
+                    }
+                    _ => {
+                        stats.traps += 1;
+                        let token = job.token;
+                        answer_trap(&replies, token, job.msg, &mut stats);
+                    }
+                }
+            }
+        }
+    }
+    stats
+}
+
+fn answer_trap(
+    replies: &QueueTx<Reply>,
+    token: u32,
+    mut msg: TraversalMsg,
+    stats: &mut ShardStats,
+) {
+    msg.status = Status::Trap;
+    msg.kind = MsgKind::Response;
+    send_reply(replies, Reply::Done { token, msg }, stats);
+}
+
+fn send_reply(
+    replies: &QueueTx<Reply>,
+    reply: Reply,
+    stats: &mut ShardStats,
+) {
+    if replies.send(reply).is_err() {
+        // dispatcher already gone (teardown after an early bail-out)
+        stats.drops += 1;
+    }
+}

@@ -12,11 +12,13 @@
 //! Examples:
 //!   pulse serve --app webservice --nodes 4 --ops 2000 --conc 32
 //!   pulse serve --app btrdb --window-s 4 --nodes 2
+//!   pulse serve --app wiredtiger --backend live --nodes 4
 //!   pulse inspect --iter bplustree-get
 //!   pulse selftest
 
 use pulse::apps::{BtrDbApp, WebServiceApp, WiredTigerApp};
-use pulse::rack::{Rack, RackConfig};
+use pulse::bench_support::make_backend;
+use pulse::rack::RackConfig;
 use pulse::util::cli::Args;
 use pulse::workloads::{YcsbSpec, YcsbWorkload};
 
@@ -33,7 +35,8 @@ fn main() -> CliResult {
         _ => {
             eprintln!(
                 "usage: pulse <serve|inspect|selftest> [--app webservice|\
-                 wiredtiger|btrdb] [--nodes N] [--ops N] [--conc N] \
+                 wiredtiger|btrdb] [--backend pulse|pulse-acc|cache|rpc|\
+                 rpc-arm|cache-rpc|live] [--nodes N] [--ops N] [--conc N] \
                  [--ycsb A|B|C|E] [--window-s S] [--uniform] \
                  [--granularity BYTES] [--loss P] [--no-in-network] \
                  [--iter NAME]"
@@ -43,7 +46,7 @@ fn main() -> CliResult {
     }
 }
 
-fn rack_from(args: &Args) -> Rack {
+fn cfg_from(args: &Args) -> RackConfig {
     let mut cfg = RackConfig {
         nodes: args.usize_or("nodes", 4),
         node_capacity: args.u64_or("node-capacity", 1 << 30),
@@ -54,16 +57,20 @@ fn rack_from(args: &Args) -> Rack {
         ..Default::default()
     };
     cfg.dispatch.cache_bytes = args.u64_or("cache-bytes", 0);
-    Rack::new(cfg)
+    cfg
 }
 
 fn serve(args: &Args) -> CliResult {
     let app_name = args.str_or("app", "webservice");
+    let kind = args.str_or("backend", "pulse");
     let ops_n = args.u64_or("ops", 2_000);
     let conc = args.usize_or("conc", 32);
     let zipf = !args.flag("uniform");
     let seed = args.u64_or("seed", 42);
-    let mut rack = rack_from(args);
+    // any compared system behind the unified trait: the rack DES
+    // (pulse/pulse-acc), the model baselines, or the live
+    // multi-threaded engine (one real worker thread per memory node)
+    let mut backend = make_backend(&kind, cfg_from(args));
 
     let report = match app_name.as_str() {
         "webservice" => {
@@ -73,41 +80,48 @@ fn serve(args: &Args) -> CliResult {
                 "C" => YcsbSpec::C,
                 _ => YcsbSpec::B,
             };
-            let app = WebServiceApp::build(&mut rack, users, seed);
+            let app =
+                WebServiceApp::build(backend.rack_mut(), users, seed);
             let w = YcsbWorkload::new(spec, users, zipf, seed ^ 1);
             let mut ops = app.op_stream(w, ops_n);
-            rack.serve(move |i| ops(i), conc)
+            backend.serve(&mut |i| ops(i), conc)
         }
         "wiredtiger" => {
             let keys = args.u64_or("keys", 100_000);
-            let app = WiredTigerApp::build(&mut rack, keys, seed);
+            let app =
+                WiredTigerApp::build(backend.rack_mut(), keys, seed);
             let w = YcsbWorkload::new(YcsbSpec::E, keys, zipf, seed ^ 1)
                 .with_max_scan(args.usize_or("max-scan", 100));
             let mut ops = app.op_stream(w, ops_n);
-            rack.serve(move |i| ops(i), conc)
+            backend.serve(&mut |i| ops(i), conc)
         }
         "btrdb" => {
             let samples = args.usize_or("keys", 60_000);
-            let app = BtrDbApp::build(&mut rack, samples, seed);
+            let app =
+                BtrDbApp::build(backend.rack_mut(), samples, seed);
             let win = args.u64_or("window-s", 1) as i64 * SEC;
             let mut ops = app.op_stream(win, ops_n, seed ^ 1);
-            rack.serve(move |i| ops(i), conc)
+            backend.serve(&mut |i| ops(i), conc)
         }
         other => return Err(format!("unknown app {other:?}").into()),
     };
 
+    let (p50, p95, p99) = report.latency_percentiles();
     println!(
-        "app={app_name} nodes={} ops={} conc={conc}",
-        rack.cfg.nodes, report.completed
+        "app={app_name} backend={} nodes={} ops={} conc={conc}",
+        backend.name(),
+        backend.rack_mut().cfg.nodes,
+        report.completed
     );
     println!(
-        "latency: p50={:.1}us p99={:.1}us mean={:.1}us",
-        report.latency.p50() as f64 / 1e3,
-        report.latency.p99() as f64 / 1e3,
+        "latency: p50={:.1}us p95={:.1}us p99={:.1}us mean={:.1}us",
+        p50 as f64 / 1e3,
+        p95 as f64 / 1e3,
+        p99 as f64 / 1e3,
         report.latency.mean() / 1e3
     );
     println!(
-        "throughput: {:.0} ops/s  (makespan {:.2} ms virtual, {:.0} ms wall)",
+        "throughput: {:.0} ops/s  (makespan {:.2} ms, {:.0} ms wall)",
         report.tput_ops_per_s,
         report.makespan_ns as f64 / 1e6,
         report.wall_ms
@@ -119,10 +133,16 @@ fn serve(args: &Args) -> CliResult {
         report.retransmits,
         report.trapped
     );
-    println!(
-        "switch: routed={} reroutes={}",
-        rack.switch.stats.routed_requests, rack.switch.stats.reroutes
-    );
+    // the DES routes through the rack's switch model; the live engine
+    // and the trace-replay baselines keep their own routing counters,
+    // so only print the switch line when it actually saw traffic
+    let sw = backend.rack_mut().switch.stats;
+    if sw.routed_requests > 0 {
+        println!(
+            "switch: routed={} reroutes={}",
+            sw.routed_requests, sw.reroutes
+        );
+    }
     Ok(())
 }
 

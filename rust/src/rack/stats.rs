@@ -29,6 +29,12 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// Tail-latency percentiles (p50, p95, p99) in nanoseconds — the
+    /// standard triple every backend reports (fed from `util::hist`).
+    pub fn latency_percentiles(&self) -> (u64, u64, u64) {
+        (self.latency.p50(), self.latency.p95(), self.latency.p99())
+    }
+
     /// Memory-bandwidth utilization vs the paper's 25 GB/s per node cap.
     pub fn mem_bw_util(&self, nodes: usize) -> f64 {
         if self.makespan_ns == 0 {
@@ -94,6 +100,17 @@ mod tests {
         assert_eq!(a.latency.count(), 2);
         // 400 ops over 4 ms of summed makespan = 100k ops/s
         assert!((a.tput_ops_per_s - 1e5).abs() < 1.0, "{}", a.tput_ops_per_s);
+    }
+
+    #[test]
+    fn percentile_triple_is_ordered() {
+        let mut r = ServeReport::default();
+        for v in 1..=1000u64 {
+            r.latency.record(v * 100);
+        }
+        let (p50, p95, p99) = r.latency_percentiles();
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!(p50 > 0);
     }
 
     #[test]

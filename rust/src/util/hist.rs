@@ -131,6 +131,10 @@ impl Histogram {
         self.quantile(0.50)
     }
 
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
     pub fn p99(&self) -> u64 {
         self.quantile(0.99)
     }
@@ -177,8 +181,10 @@ mod tests {
             h.record(v);
         }
         let p50 = h.p50() as f64;
+        let p95 = h.p95() as f64;
         let p99 = h.p99() as f64;
         assert!((p50 - 5000.0).abs() / 5000.0 < 0.1, "p50 {p50}");
+        assert!((p95 - 9500.0).abs() / 9500.0 < 0.1, "p95 {p95}");
         assert!((p99 - 9900.0).abs() / 9900.0 < 0.1, "p99 {p99}");
         assert!((h.mean() - 5000.5).abs() < 1.0);
     }

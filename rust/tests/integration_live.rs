@@ -1,0 +1,242 @@
+//! The live engine's contract: real threads, same answers.
+//!
+//! * functional equivalence — the same YCSB-C workload through
+//!   `LiveBackend` at 1/2/4 shards produces scratchpads identical to
+//!   the purely functional path and op/iteration/crossing counts
+//!   identical to the rack DES (timing excluded: the DES reports
+//!   virtual time, the live engine wall time);
+//! * distributed traversals — pointer chains spanning shards bounce
+//!   shard-to-shard (in-network) or via the dispatcher (PULSE-ACC)
+//!   and still produce the functional results;
+//! * teardown — repeated serves on one backend restart the worker
+//!   fleet cleanly, and the bounded queue drains fully under heavy
+//!   multi-producer contention (shutdown/drain ordering).
+
+use pulse::backend::TraversalBackend;
+use pulse::ds::{ForwardList, HashMapDs};
+use pulse::isa::SP_WORDS;
+use pulse::live::{queue, LiveBackend};
+use pulse::rack::{Op, Rack, RackConfig};
+use pulse::workloads::{YcsbOp, YcsbSpec, YcsbWorkload};
+
+const KEYS: u64 = 2_000;
+const OPS: u64 = 300;
+const CONC: usize = 8;
+
+fn cfg(nodes: usize) -> RackConfig {
+    RackConfig {
+        nodes,
+        node_capacity: 64 << 20,
+        // small slabs: consecutive chain nodes land ~12 KB apart (one
+        // alloc per bucket per round), so chains hop slabs — and at
+        // >1 node, shards — constantly; the equivalence test then
+        // really exercises cross-shard forwarding, not just shard 0
+        granularity: 8 << 10,
+        ..Default::default()
+    }
+}
+
+/// Identical hash index in any rack (deterministic layout: the VA
+/// sequence does not depend on the node count).
+fn build_index(rack: &mut Rack) -> HashMapDs {
+    let mut m = HashMapDs::build(rack, 512);
+    for k in 0..KEYS as i64 {
+        m.insert(rack, k, k * 11);
+    }
+    m
+}
+
+/// The same deterministic YCSB-C stream every backend serves.
+fn make_ops(m: &HashMapDs) -> Vec<Op> {
+    let prog = m.find_program();
+    let mut w = YcsbWorkload::new(YcsbSpec::C, KEYS, false, 77);
+    (0..OPS)
+        .map(|_| {
+            let key = match w.next_op() {
+                YcsbOp::Read(k) => (k % KEYS) as i64,
+                other => panic!("YCSB-C produced {other:?}"),
+            };
+            let mut sp = [0i64; SP_WORDS];
+            sp[0] = key;
+            Op::new(prog.clone(), m.bucket_ptr(key), sp)
+        })
+        .collect()
+}
+
+#[test]
+fn live_matches_functional_results_and_des_counts() {
+    for shards in [1usize, 2, 4] {
+        // ground truth: the purely functional path
+        let mut fr = Rack::new(cfg(shards));
+        let fm = build_index(&mut fr);
+        let ops = make_ops(&fm);
+        let expected: Vec<[i64; SP_WORDS]> =
+            ops.iter().map(|op| fr.run_op_functional(op)).collect();
+
+        // accounting reference: the rack DES on an identical layout
+        let mut des = Rack::new(cfg(shards));
+        let dm = build_index(&mut des);
+        let des_rep = des.serve_batch(&make_ops(&dm), CONC);
+
+        // the live engine on an identical layout
+        let mut live = LiveBackend::new(Rack::new(cfg(shards)));
+        let lm = build_index(live.rack_mut());
+        let live_ops = make_ops(&lm);
+        live.record_results(true);
+        let rep = live.serve_batch(&live_ops, CONC);
+
+        assert_eq!(rep.completed, OPS, "{shards} shards: lost ops");
+        assert_eq!(rep.trapped, 0, "{shards} shards: traps");
+        assert_eq!(
+            rep.completed, des_rep.completed,
+            "{shards} shards: op count diverged from the DES"
+        );
+        assert_eq!(
+            rep.total_iters, des_rep.total_iters,
+            "{shards} shards: iteration count diverged from the DES"
+        );
+        assert_eq!(
+            rep.cross_node_requests, des_rep.cross_node_requests,
+            "{shards} shards: crossing accounting diverged"
+        );
+        let got = live.last_results();
+        assert_eq!(got.len(), expected.len());
+        for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+            assert_eq!(
+                g, e,
+                "{shards} shards: op {i} scratchpad diverged"
+            );
+        }
+        // wall-clock metrics are present and sane
+        assert_eq!(rep.latency.count(), OPS);
+        assert!(rep.tput_ops_per_s > 0.0);
+        let run = live.last_run().unwrap();
+        assert_eq!(run.total_iters(), rep.total_iters);
+        assert_eq!(run.total_drops(), 0, "teardown lost messages");
+        if shards > 1 {
+            // the layout spreads chains over every node: the identical
+            // counts above were produced *through* cross-shard hops
+            assert!(
+                rep.cross_node_requests > 0,
+                "{shards} shards: workload never crossed shards"
+            );
+            assert!(
+                run.total_forwards() > 0,
+                "{shards} shards: no in-network shard-to-shard forward"
+            );
+        }
+    }
+}
+
+#[test]
+fn distributed_walks_bounce_between_live_shards() {
+    for in_network in [true, false] {
+        let mut c = cfg(4);
+        c.granularity = 4096; // chains cross shards constantly
+        c.in_network_routing = in_network;
+        let mut live = LiveBackend::new(Rack::new(c));
+        let mut l = ForwardList::new();
+        for i in 0..3000 {
+            l.push(live.rack_mut(), i);
+        }
+        let prog = l.find_program();
+        let head = l.head;
+        let ops: Vec<Op> = (0..40)
+            .map(|i| {
+                let mut sp = [0i64; SP_WORDS];
+                sp[0] = 2500 + (i % 400);
+                Op::new(prog.clone(), head, sp)
+            })
+            .collect();
+        // read-only walk: functional expectations from the same rack
+        let expected: Vec<[i64; SP_WORDS]> = ops
+            .iter()
+            .map(|op| live.rack_mut().run_op_functional(op))
+            .collect();
+        live.record_results(true);
+        let rep = live.serve_batch(&ops, 4);
+        assert_eq!(rep.completed, 40, "in_network={in_network}");
+        assert_eq!(rep.trapped, 0, "in_network={in_network}");
+        assert!(
+            rep.cross_node_requests > 0,
+            "in_network={in_network}: no cross-shard traffic"
+        );
+        assert_eq!(live.last_results(), &expected[..]);
+        let run = live.last_run().unwrap();
+        if in_network {
+            assert!(
+                run.router.reroutes > 0,
+                "in-network mode never forwarded shard-to-shard"
+            );
+            assert!(run.total_forwards() > 0);
+        } else {
+            // ACC mode: every bounce returns to the dispatcher
+            assert_eq!(run.total_forwards(), 0);
+        }
+    }
+}
+
+#[test]
+fn repeated_serves_restart_the_worker_fleet_cleanly() {
+    let mut live = LiveBackend::new(Rack::new(cfg(2)));
+    let m = build_index(live.rack_mut());
+    let ops = make_ops(&m);
+    for round in 1..=3u64 {
+        let rep = live.serve_batch(&ops, 6);
+        assert_eq!(rep.completed, OPS, "round {round}");
+        assert_eq!(rep.trapped, 0, "round {round}");
+        let run = live.last_run().unwrap();
+        assert_eq!(run.total_drops(), 0, "round {round}: lost messages");
+        // per-run queue counters balance: everything pushed was popped
+        for (i, q) in run.queues.iter().enumerate() {
+            assert_eq!(
+                q.depth(),
+                0,
+                "round {round}: shard {i} queue not drained"
+            );
+        }
+        assert_eq!(live.metrics().ops, OPS * round, "cumulative ops");
+    }
+}
+
+#[test]
+fn bounded_queue_drains_fully_under_contention() {
+    // shutdown/drain ordering under heavy multi-producer pressure: a
+    // tiny queue forces constant full-queue blocking; dropping the
+    // senders is the shutdown signal; the consumer must still see
+    // every message exactly once, then observe disconnect.
+    const PRODUCERS: u64 = 4;
+    const PER: u64 = 5_000;
+    let (tx, rx) = queue::bounded::<u64>(4);
+    let stats = rx.stats_handle();
+    std::thread::scope(|s| {
+        for p in 0..PRODUCERS {
+            let tx = tx.clone();
+            s.spawn(move || {
+                for i in 0..PER {
+                    if tx.send(p * PER + i).is_err() {
+                        panic!("receiver vanished mid-run");
+                    }
+                }
+            });
+        }
+        drop(tx); // producers' clones keep the channel open until done
+        let mut seen = 0u64;
+        let mut sum = 0u64;
+        while let Some(v) = rx.recv() {
+            seen += 1;
+            sum += v;
+        }
+        assert_eq!(seen, PRODUCERS * PER, "messages lost or duplicated");
+        let n = PRODUCERS * PER;
+        assert_eq!(sum, n * (n - 1) / 2, "payloads corrupted");
+    });
+    let snap = stats.snapshot();
+    assert_eq!(snap.pushed, PRODUCERS * PER);
+    assert_eq!(snap.popped, PRODUCERS * PER);
+    assert_eq!(snap.depth(), 0);
+    assert!(
+        snap.full_blocks > 0,
+        "capacity-4 queue under 20k sends never filled"
+    );
+}
