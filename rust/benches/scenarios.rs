@@ -1,0 +1,104 @@
+//! Scenario expansion bench (fig7 companion): the three new traversal
+//! workloads — YCSB-E-style scans over the **skip list**, point lookups
+//! over the **256-way radix trie**, and bounded **k-hop graph walks** —
+//! served on the four backend families behind the unified trait:
+//! the rack DES (PULSE + PULSE-ACC), the live multi-threaded engine,
+//! the swap-cache baseline, and the RPC baseline.
+//!
+//! Reported per (workload, backend): ops/s and the p50/p95/p99 latency
+//! triple. DES rows are virtual time, live rows wall clock, model rows
+//! analytic — same caveat as fig7: compare *shapes*, not absolute
+//! columns across execution models.
+//!
+//! Output: table + `bench_out/BENCH_scenarios.json`.
+
+use pulse::backend::TraversalBackend;
+use pulse::bench_support::{
+    build_scenario_ops, fmt_kops, fmt_us, make_backend, save_json,
+    ScenarioSpec, Table,
+};
+use pulse::rack::RackConfig;
+use pulse::util::json::Json;
+
+const NODES: usize = 4;
+const GRANULARITY: u64 = 1 << 20;
+const OPS: u64 = 4_000;
+const CONC: usize = 32;
+
+const BACKENDS: [&str; 5] = ["pulse", "pulse-acc", "live", "cache", "rpc"];
+const WORKLOADS: [&str; 3] = ["skiplist-e", "trie-lookup", "graph-khop"];
+
+fn spec() -> ScenarioSpec {
+    ScenarioSpec { ops: OPS, ..Default::default() }
+}
+
+fn main() -> std::io::Result<()> {
+    let mut tbl = Table::new(
+        "scenario expansion: new workloads x four backend families",
+        &[
+            "workload", "backend", "kops/s", "p50 us", "p95 us", "p99 us",
+            "iters/op", "cross/op",
+        ],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    for workload in WORKLOADS {
+        for kind in BACKENDS {
+            let mut backend =
+                make_backend(kind, RackConfig::bench(NODES, GRANULARITY));
+            let ops =
+                build_scenario_ops(backend.rack_mut(), workload, &spec());
+            let rep = backend.serve_batch(&ops, CONC);
+            assert_eq!(rep.completed, OPS, "{workload}/{kind} lost ops");
+            assert_eq!(rep.trapped, 0, "{workload}/{kind} trapped");
+            let (p50, p95, p99) = rep.latency_percentiles();
+            let iters_per_op =
+                rep.total_iters as f64 / rep.completed as f64;
+            let cross_per_op =
+                rep.cross_node_requests as f64 / rep.completed as f64;
+            tbl.row(&[
+                workload.to_string(),
+                backend.name().to_string(),
+                fmt_kops(rep.tput_ops_per_s),
+                fmt_us(p50 as f64),
+                fmt_us(p95 as f64),
+                fmt_us(p99 as f64),
+                format!("{iters_per_op:.1}"),
+                format!("{cross_per_op:.2}"),
+            ]);
+            let mut row = Json::obj();
+            row.set("workload", workload)
+                .set("backend", backend.name())
+                .set("ops", rep.completed)
+                .set("ops_per_s", rep.tput_ops_per_s)
+                .set("p50_ns", p50)
+                .set("p95_ns", p95)
+                .set("p99_ns", p99)
+                .set("mean_ns", rep.latency.mean())
+                .set("iters_per_op", iters_per_op)
+                .set("cross_node_per_op", cross_per_op);
+            rows.push(row);
+        }
+    }
+
+    tbl.print();
+    println!(
+        "\nnote: DES rows are virtual time, live rows wall clock, \
+         cache/rpc rows analytic models over real traces — compare \
+         shapes within a backend family, not columns across families."
+    );
+
+    let s = spec();
+    let mut j = Json::obj();
+    j.set("bench", "scenarios")
+        .set("nodes", NODES as u64)
+        .set("ops", OPS)
+        .set("conc", CONC as u64)
+        .set("keys_per_workload", s.keys)
+        .set("max_scan", s.max_scan)
+        .set("graph_max_degree", s.max_degree)
+        .set("khop_max", s.max_hops as u64)
+        .set("rows", rows);
+    save_json("BENCH_scenarios", &j)?;
+    Ok(())
+}

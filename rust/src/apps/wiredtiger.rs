@@ -9,10 +9,10 @@
 //! (`object_read_bytes`).
 
 use crate::ds::bplustree::BPlusTree;
-use crate::ds::{SP_CURSOR, SP_KEY, SP_RESULT};
+use crate::ds::SP_KEY;
 use crate::isa::SP_WORDS;
 use crate::mem::GAddr;
-use crate::rack::{Op, Rack, Stage, StartAddr};
+use crate::rack::{Op, Rack, Stage};
 use crate::util::prng::Rng;
 use crate::workloads::{YcsbOp, YcsbWorkload};
 
@@ -61,27 +61,13 @@ impl WiredTigerApp {
         match *ycsb {
             YcsbOp::Scan(start, len) => {
                 let start = (start % self.keys) as i64;
-                // stage 1: locate the covering leaf
-                let mut sp1 = [0i64; SP_WORDS];
-                sp1[SP_KEY as usize] = start;
-                let s1 = Stage::new(
-                    self.tree.locate_program(),
-                    self.tree.root,
-                    sp1,
-                );
-                // stage 2: scan `len` records, repeating on continuation
-                let mut s2 = Stage::new(
-                    self.tree.scan_program(),
-                    0,
-                    [0i64; SP_WORDS],
-                );
-                s2.start = StartAddr::FromPrevSp(SP_RESULT);
-                s2.sp[2] = len as i64; // remaining
-                s2.carry_sp = false;
-                s2.sp_overrides = vec![(3, 0), (SP_CURSOR, 0)];
-                s2.repeat_while = Some((SP_RESULT, 2));
-                s2.object_read_bytes = (len * RECORD_BYTES) as u32;
-                Op { stages: vec![s1, s2], cpu_post_ns: 0 }
+                // locate + buffered-scan continuation chain (shared
+                // wiring: `BPlusTree::scan_op`); the record payloads
+                // ride back on the scan stage's response
+                let mut op = self.tree.scan_op(start, len);
+                op.stages[1].object_read_bytes =
+                    (len * RECORD_BYTES) as u32;
+                op
             }
             YcsbOp::Read(k) | YcsbOp::Update(k) | YcsbOp::Insert(k) => {
                 // YCSB-E inserts modeled as point lookups of the

@@ -16,10 +16,12 @@ use std::path::{Path, PathBuf};
 use crate::apps::{BtrDbApp, WebServiceApp, WiredTigerApp};
 use crate::backend::{CacheBackend, RpcBackend, TraversalBackend};
 use crate::baselines::{RpcKind, WorkloadStats};
+use crate::ds::{AdjGraph, RadixTrie, SkipList};
 use crate::live::LiveBackend;
 use crate::rack::{Op, Rack, RackConfig, ServeReport};
 use crate::util::json::Json;
-use crate::workloads::{YcsbSpec, YcsbWorkload};
+use crate::util::prng::Rng;
+use crate::workloads::{GraphKhopWorkload, YcsbOp, YcsbSpec, YcsbWorkload};
 
 /// Simple fixed-width table printer.
 pub struct Table {
@@ -151,6 +153,117 @@ pub fn stats_from_report(
         avg_crossings: rep.crossings.mean(),
         cpu_post_ns,
         ops,
+    }
+}
+
+/// Parameters of one scenario-expansion workload (`build_scenario_ops`).
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioSpec {
+    /// Keys (skiplist/trie) or vertices (graph).
+    pub keys: u64,
+    /// Ops to materialize.
+    pub ops: u64,
+    pub zipf: bool,
+    /// YCSB-E max scan length (skiplist).
+    pub max_scan: usize,
+    /// Walk-length cap (graph).
+    pub max_hops: u32,
+    /// Out-degree cap (graph).
+    pub max_degree: usize,
+    pub seed: u64,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        Self {
+            keys: 20_000,
+            ops: 4_000,
+            zipf: true,
+            max_scan: 60,
+            max_hops: 8,
+            max_degree: 8,
+            seed: 42,
+        }
+    }
+}
+
+/// Build one scenario-expansion workload on `rack` and materialize its
+/// deterministic op stream. One definition shared by
+/// `benches/scenarios.rs` and `pulse serve --app skiplist|radixtrie|
+/// graph`, so the CLI serves exactly the stream the bench reports.
+///
+/// * `skiplist-e`  — YCSB-E over the skip list: 95% two-stage scans,
+///   inserts modeled as point lookups of the insertion position (as
+///   the WiredTiger app does);
+/// * `trie-lookup` — YCSB-C point lookups over the 256-way radix trie
+///   (dense 20-bit key space: realistic shared byte prefixes);
+/// * `graph-khop`  — bounded k-hop walks over the adjacency-list graph
+///   (the data-dependent fan-out scenario).
+pub fn build_scenario_ops(
+    rack: &mut Rack,
+    which: &str,
+    spec: &ScenarioSpec,
+) -> Vec<Op> {
+    let keys = spec.keys.max(1);
+    match which {
+        "skiplist-e" => {
+            let mut s = SkipList::new(rack, spec.seed);
+            let mut rng = Rng::with_stream(spec.seed, 0x5CA);
+            for k in 0..keys as i64 {
+                s.insert(rack, k * 2, rng.next_i64() >> 8);
+            }
+            let mut w =
+                YcsbWorkload::new(YcsbSpec::E, keys, spec.zipf, spec.seed ^ 1)
+                    .with_max_scan(spec.max_scan);
+            (0..spec.ops)
+                .map(|_| match w.next_op() {
+                    YcsbOp::Scan(start, len) => {
+                        s.scan_op((start % keys) as i64 * 2, len)
+                    }
+                    YcsbOp::Insert(k) | YcsbOp::Read(k) | YcsbOp::Update(k) => {
+                        s.find_op((k % keys) as i64 * 2)
+                    }
+                })
+                .collect()
+        }
+        "trie-lookup" => {
+            let mut t = RadixTrie::new(rack);
+            let mut rng = Rng::with_stream(spec.seed, 0x791);
+            for k in 0..keys as i64 {
+                t.insert(rack, (k * 53) % (1 << 20), rng.next_i64() >> 8);
+            }
+            let mut w =
+                YcsbWorkload::new(YcsbSpec::C, keys, spec.zipf, spec.seed ^ 2);
+            (0..spec.ops)
+                .map(|_| match w.next_op() {
+                    YcsbOp::Read(k) => {
+                        t.lookup_op(((k % keys) as i64 * 53) % (1 << 20))
+                    }
+                    other => unreachable!("YCSB-C produced {other:?}"),
+                })
+                .collect()
+        }
+        "graph-khop" => {
+            let g = AdjGraph::build(
+                rack,
+                keys as usize,
+                spec.max_degree,
+                spec.seed,
+            );
+            let mut w = GraphKhopWorkload::new(
+                keys,
+                spec.max_hops,
+                spec.zipf,
+                spec.seed ^ 3,
+            );
+            (0..spec.ops)
+                .map(|_| {
+                    let q = w.next_query();
+                    g.khop_op(q.start as usize, q.hops, &q.draws)
+                })
+                .collect()
+        }
+        other => panic!("unknown scenario workload {other:?}"),
     }
 }
 

@@ -148,6 +148,16 @@ impl IterBuilder {
         v
     }
 
+    /// `a mod b` for non-negative `a` and positive `b` (lowered as
+    /// `a - (a / b) * b`; DIV traps on b == 0 like every engine). The
+    /// data-dependent dispatch primitive of the fan-out traversals
+    /// (graph k-hop neighbor selection).
+    pub fn modu(&mut self, a: Val, b: Val) -> Val {
+        let q = self.div(a, b);
+        let qb = self.mul(q, b);
+        self.sub(a, qb)
+    }
+
     pub fn addi(&mut self, a: Val, k: i64) -> Val {
         let v = self.alloc();
         self.asm.addi(v.0, a.0, k);

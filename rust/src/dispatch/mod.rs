@@ -36,7 +36,7 @@ pub struct DispatchConfig {
 impl Default for DispatchConfig {
     fn default() -> Self {
         Self {
-            eta: 0.75,
+            eta: crate::isa::DEFAULT_ETA,
             max_iters: 4096,
             timeout_ns: 2_000_000, // 2 ms
             cache_bytes: 0,

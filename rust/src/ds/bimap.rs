@@ -37,6 +37,16 @@ impl Bimap {
     pub fn get_by_right(&self, rack: &mut Rack, r: i64) -> Option<i64> {
         self.right.get(rack, r)
     }
+
+    /// Forward index (op construction in benches/tests).
+    pub fn left_index(&self) -> &HashMapDs {
+        &self.left
+    }
+
+    /// Reverse index.
+    pub fn right_index(&self) -> &HashMapDs {
+        &self.right
+    }
 }
 
 #[cfg(test)]

@@ -23,7 +23,7 @@ use super::{KEY_NOT_FOUND, SP_ACC_SUM, SP_BUF_BASE, SP_BUF_LEN, SP_CURSOR, SP_FL
 use crate::compiler::{CompiledIter, IterBuilder};
 use crate::isa::{Status, SP_WORDS};
 use crate::mem::GAddr;
-use crate::rack::Rack;
+use crate::rack::{Op, Rack, Stage, StartAddr};
 
 pub const FANOUT: usize = 7;
 pub const NODE_WORDS: usize = 18;
@@ -281,6 +281,25 @@ impl BPlusTree {
 
     pub fn sum_program(&self) -> Arc<CompiledIter> {
         self.sum_p.clone()
+    }
+
+    /// Two-stage YCSB-E scan op: locate the covering leaf, then stream
+    /// `count` records through the buffered scan with continuation
+    /// rounds (`repeat_while`). The scan stage starts at the located
+    /// leaf's first slot (leaf-aligned, exactly what the WiredTiger app
+    /// serves); callers needing strictly lo-bounded results use
+    /// [`BPlusTree::scan`]. Single source of the continuation-protocol
+    /// wiring for apps, benches, and the conformance registry.
+    pub fn scan_op(&self, lo: i64, count: usize) -> Op {
+        let mut sp1 = [0i64; SP_WORDS];
+        sp1[SP_KEY as usize] = lo;
+        let s1 = Stage::new(self.locate_p.clone(), self.root, sp1);
+        let mut s2 = Stage::new(self.scan_p.clone(), 0, [0i64; SP_WORDS]);
+        s2.start = StartAddr::FromPrevSp(SP_RESULT);
+        s2.sp[2] = count as i64;
+        s2.sp_overrides = vec![(3, 0), (SP_CURSOR, 0)];
+        s2.repeat_while = Some((SP_RESULT, 2));
+        Op { stages: vec![s1, s2], cpu_post_ns: 0 }
     }
 
     /// Offloaded point lookup (single request).

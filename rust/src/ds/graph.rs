@@ -1,0 +1,306 @@
+//! Directed graph (adjacency lists) with bounded k-hop neighbor walks —
+//! the first traversal in the repo whose next pointer has *data-
+//! dependent fan-out*: the neighbor taken at each vertex is
+//! `draws[hop] mod out_degree`, where the degree is read from the
+//! vertex itself. Surveys of disaggregated memory single out exactly
+//! this access pattern (graph walks) as the one caching handles worst,
+//! which is why it joins the scenario set.
+//!
+//! Layouts:
+//!   vertex (4 words): `[id(0), value(1), out_degree(2), adj(3)]`
+//!   adjacency array: `out_degree` neighbor addresses + 3 pad words
+//!   (the 4-word window read at the last slot stays in-allocation).
+//!
+//! The walk alternates vertex visits and adjacency-slot visits (phase
+//! bit in sp[4], same trick as the radix trie): a vertex visit
+//! accumulates `value` into sp[3], records `id` in sp[RESULT], consumes
+//! one hop from sp[7], picks `slot = adj + 8·(draw mod degree)` and
+//! advances into the array; the slot visit advances to the neighbor.
+//! The per-hop draws are pre-seeded into sp[8..8+k] by the host
+//! (`init()` computes them from the workload RNG), indexed by the
+//! remaining-hop counter — so the host reference walk and every engine
+//! replay the identical neighbor sequence, bit for bit.
+//!
+//! The walk ends after k hops or at a sink (degree 0); the final
+//! scratchpad carries `sum(value)` over the k+1 visited vertices and
+//! the last vertex id.
+
+use std::sync::Arc;
+
+use super::{SP_ACC_CNT, SP_ACC_SUM, SP_BUF_BASE, SP_BUF_LEN, SP_CURSOR, SP_RESULT};
+use crate::compiler::{CompiledIter, IterBuilder};
+use crate::isa::SP_WORDS;
+use crate::mem::GAddr;
+use crate::rack::{Op, Rack};
+use crate::util::prng::Rng;
+
+const V_WORDS: usize = 4;
+/// Window is 4 words: pad adjacency arrays so the read at the last
+/// slot stays inside the allocation.
+const ADJ_PAD: usize = 3;
+
+/// Remaining-hop counter.
+pub const SP_HOPS: u32 = SP_CURSOR;
+/// Phase bit: 0 = at a vertex, 1 = at an adjacency slot.
+pub const SP_PHASE: u32 = SP_ACC_CNT;
+/// Maximum hops per walk (one scratchpad draw per hop).
+pub const MAX_HOPS: usize = SP_BUF_LEN;
+
+/// Bounded k-hop walk. sp[HOPS] = k, sp[8..8+k] = non-negative draws
+/// (indexed by remaining hops - 1), sp[ACC_SUM] accumulates values,
+/// sp[RESULT] tracks the last vertex id.
+pub fn khop_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let phase = b.sp(SP_PHASE);
+    let zero = b.imm(0);
+    let one = b.imm(1);
+    b.if_eq(phase, zero, |b| {
+        // vertex visit: aggregate, then dispatch on degree
+        let mark = b.temp_mark();
+        let id = b.field(0);
+        b.sp_store(SP_RESULT, id);
+        let v = b.field(1);
+        let sum = b.sp(SP_ACC_SUM);
+        b.add_to(sum, v);
+        b.sp_store(SP_ACC_SUM, sum);
+        b.temp_release(mark);
+        let hops = b.sp(SP_HOPS);
+        b.if_le(hops, zero, |b| b.ret());
+        let deg = b.field(2);
+        b.if_eq(deg, zero, |b| b.ret()); // sink
+        let h2 = b.addi(hops, -1);
+        b.sp_store(SP_HOPS, h2);
+        let draw = b.sp_dyn(h2, SP_BUF_BASE);
+        let idx = b.modu(draw, deg);
+        let off = b.shl(idx, 3);
+        let aptr = b.field(3);
+        let slot = b.add(aptr, off);
+        b.sp_store(SP_PHASE, one);
+        b.advance(slot);
+    });
+    // slot visit: follow the chosen neighbor
+    let nxt = b.field(0);
+    b.if_eq(nxt, zero, |b| b.trap()); // corrupt adjacency — never legal
+    b.sp_store(SP_PHASE, zero);
+    b.advance(nxt);
+    b.finish().expect("graph khop")
+}
+
+pub struct AdjGraph {
+    /// Vertex index -> global address.
+    pub verts: Vec<GAddr>,
+    khop_p: Arc<CompiledIter>,
+}
+
+impl AdjGraph {
+    /// Random directed graph: `n` vertices, out-degree uniform in
+    /// [0, max_deg], neighbors uniform over all vertices (self-loops
+    /// allowed — they are harmless for walks). Values are seeded.
+    pub fn build(rack: &mut Rack, n: usize, max_deg: usize, seed: u64) -> Self {
+        assert!(n > 0);
+        let mut rng = Rng::with_stream(seed, 0x6AF);
+        let verts: Vec<GAddr> = (0..n)
+            .map(|i| {
+                let a = rack.alloc((V_WORDS * 8) as u64);
+                let value = (rng.next_i64() >> 16).wrapping_add(i as i64);
+                rack.write_words(a, &[i as i64, value, 0, 0]);
+                a
+            })
+            .collect();
+        for &va in verts.iter() {
+            let deg = rng.below(max_deg as u64 + 1) as usize;
+            let mut hdr = [0i64; V_WORDS];
+            rack.read_words(va, &mut hdr);
+            hdr[2] = deg as i64;
+            if deg > 0 {
+                let adj = rack.alloc(((deg + ADJ_PAD) * 8) as u64);
+                let mut slots: Vec<i64> = (0..deg)
+                    .map(|_| verts[rng.below(n as u64) as usize] as i64)
+                    .collect();
+                slots.resize(deg + ADJ_PAD, 0);
+                rack.write_words(adj, &slots);
+                hdr[3] = adj as i64;
+            }
+            rack.write_words(va, &hdr);
+        }
+        Self { verts, khop_p: Arc::new(khop_iter()) }
+    }
+
+    pub fn khop_program(&self) -> Arc<CompiledIter> {
+        self.khop_p.clone()
+    }
+
+    pub fn vertices(&self) -> usize {
+        self.verts.len()
+    }
+
+    /// `init()` for a walk: seed the scratchpad with hops + draws.
+    fn walk_sp(hops: u32, draws: &[i64]) -> [i64; SP_WORDS] {
+        assert!(hops as usize <= MAX_HOPS && draws.len() >= hops as usize);
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_HOPS as usize] = hops as i64;
+        for (i, &d) in draws.iter().take(hops as usize).enumerate() {
+            assert!(d >= 0, "draws must be non-negative");
+            sp[SP_BUF_BASE as usize + i] = d;
+        }
+        sp
+    }
+
+    /// Single-stage k-hop op (conformance / bench streams).
+    pub fn khop_op(&self, start: usize, hops: u32, draws: &[i64]) -> Op {
+        Op::new(
+            self.khop_p.clone(),
+            self.verts[start % self.verts.len()],
+            Self::walk_sp(hops, draws),
+        )
+    }
+
+    /// Offloaded walk: (sum of visited values, last vertex id).
+    pub fn khop(
+        &self,
+        rack: &mut Rack,
+        start: usize,
+        hops: u32,
+        draws: &[i64],
+    ) -> (i64, i64) {
+        let sp = Self::walk_sp(hops, draws);
+        let (_st, sp, _) =
+            rack.traverse(&self.khop_p, self.verts[start % self.verts.len()], sp);
+        (sp[SP_ACC_SUM as usize], sp[SP_RESULT as usize])
+    }
+
+    /// Host reference walk — mirrors the program's arithmetic exactly
+    /// (remaining-hop indexed draws, truncating div-based modulo).
+    pub fn host_khop(
+        &self,
+        rack: &mut Rack,
+        start: usize,
+        hops: u32,
+        draws: &[i64],
+    ) -> (i64, i64) {
+        let mut cur = self.verts[start % self.verts.len()];
+        let mut sum = 0i64;
+        let mut last;
+        let mut remaining = hops as i64;
+        loop {
+            let mut v = [0i64; V_WORDS];
+            rack.read_words(cur, &mut v);
+            last = v[0];
+            sum = sum.wrapping_add(v[1]);
+            if remaining <= 0 || v[2] == 0 {
+                return (sum, last);
+            }
+            remaining -= 1;
+            let draw = draws[remaining as usize];
+            let idx = draw % v[2];
+            let mut w = [0i64; 1];
+            rack.read_words(v[3] as GAddr + idx as u64 * 8, &mut w);
+            cur = w[0] as GAddr;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::DEFAULT_ETA;
+    use crate::rack::RackConfig;
+
+    fn rack() -> Rack {
+        Rack::new(RackConfig {
+            nodes: 2,
+            node_capacity: 64 << 20,
+            granularity: 1 << 20,
+            ..Default::default()
+        })
+    }
+
+    fn draws(rng: &mut Rng, n: usize) -> Vec<i64> {
+        (0..n).map(|_| (rng.next_u64() >> 1) as i64).collect()
+    }
+
+    #[test]
+    fn offloaded_walk_matches_host_walk() {
+        let mut r = rack();
+        let g = AdjGraph::build(&mut r, 500, 6, 42);
+        let mut rng = Rng::new(7);
+        for case in 0..60 {
+            let start = rng.below(500) as usize;
+            let hops = 1 + rng.below(MAX_HOPS as u64 - 1) as u32;
+            let d = draws(&mut rng, hops as usize);
+            assert_eq!(
+                g.khop(&mut r, start, hops, &d),
+                g.host_khop(&mut r, start, hops, &d),
+                "case {case} start {start} hops {hops}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_hop_walk_reads_only_the_start() {
+        let mut r = rack();
+        let g = AdjGraph::build(&mut r, 50, 4, 1);
+        let (sum, last) = g.khop(&mut r, 7, 0, &[]);
+        let (hsum, hlast) = g.host_khop(&mut r, 7, 0, &[]);
+        assert_eq!((sum, last), (hsum, hlast));
+        assert_eq!(last, 7);
+    }
+
+    #[test]
+    fn sinks_end_walks_early() {
+        let mut r = rack();
+        // max_deg 1: plenty of degree-0 sinks
+        let g = AdjGraph::build(&mut r, 200, 1, 9);
+        let mut rng = Rng::new(3);
+        for _ in 0..40 {
+            let start = rng.below(200) as usize;
+            let d = draws(&mut rng, 10);
+            assert_eq!(
+                g.khop(&mut r, start, 10, &d),
+                g.host_khop(&mut r, start, 10, &d)
+            );
+        }
+    }
+
+    #[test]
+    fn walks_cross_memory_nodes() {
+        let mut r = Rack::new(RackConfig {
+            nodes: 4,
+            node_capacity: 64 << 20,
+            granularity: 4096,
+            ..Default::default()
+        });
+        let g = AdjGraph::build(&mut r, 2000, 5, 11);
+        let mut rng = Rng::new(5);
+        let mut ops = Vec::new();
+        for _ in 0..30 {
+            let start = rng.below(2000) as usize;
+            let d = draws(&mut rng, 12);
+            let op = g.khop_op(start, 12, &d);
+            let sp = r.run_op_functional(&op);
+            let (hsum, hlast) = g.host_khop(&mut r, start, 12, &d);
+            assert_eq!(sp[SP_ACC_SUM as usize], hsum);
+            assert_eq!(sp[SP_RESULT as usize], hlast);
+            ops.push(op);
+        }
+        // tiny slabs spread the 2000 vertices over all four nodes: the
+        // DES must see real cross-node traversal traffic
+        let rep = r.serve_batch(&ops, 4);
+        assert_eq!(rep.completed, 30);
+        assert_eq!(rep.trapped, 0);
+        assert!(
+            rep.cross_node_requests > 0,
+            "k-hop walks never crossed memory nodes"
+        );
+    }
+
+    #[test]
+    fn program_sits_near_the_offload_boundary() {
+        let it = khop_iter();
+        assert!(it.offloadable(DEFAULT_ETA), "ratio {}", it.ratio());
+        // the fan-out dispatch makes this the most compute-heavy
+        // iterator in the repo — BTrDB-like, close to the η boundary
+        assert!(it.ratio() > 0.5, "ratio {}", it.ratio());
+        assert_eq!(it.program.load_words, 4);
+    }
+}

@@ -211,6 +211,16 @@ impl HashSetDs {
         self.inner.get(rack, key).is_some()
     }
 
+    /// The shared chain-walk program (op construction in benches/tests).
+    pub fn find_program(&self) -> std::sync::Arc<crate::compiler::CompiledIter> {
+        self.inner.find_program()
+    }
+
+    /// `init()` for a membership probe: the bucket sentinel address.
+    pub fn bucket_ptr(&self, key: i64) -> GAddr {
+        self.inner.bucket_ptr(key)
+    }
+
     pub fn len(&self) -> usize {
         self.inner.len
     }

@@ -1,7 +1,29 @@
 //! Data structures ported to the PULSE iterator model (paper §3,
-//! Table 1/Table 5, Appendix B): 13 structures across the STL / Boost /
-//! Google-BTree families, plus the B+Tree that backs the WiredTiger and
-//! BTrDB applications.
+//! Table 1/Table 5, Appendix B): the 13 STL / Boost / Google-BTree
+//! structures of the paper, the B+Tree behind the WiredTiger and BTrDB
+//! applications, plus three scenario-expansion structures that push the
+//! model past the paper's set (fence-key towers, huge fan-out, data-
+//! dependent fan-out).
+//!
+//! Family table (traversal → module):
+//!
+//! | family                      | module      | offloaded traversal      |
+//! |-----------------------------|-------------|--------------------------|
+//! | std::forward_list / list    | `list`      | chain find / chain sum   |
+//! | unordered_map / set         | `hashmap`   | bucket-chain find/update |
+//! | boost::bimap                | `bimap`     | chain find (both dirs)   |
+//! | map/set/multi* + AVL/splay/ | `bst`       | lower_bound walk         |
+//! |   scapegoat (Boost)         |             |                          |
+//! | Google cpp-btree            | `btree`     | internal_locate descend  |
+//! | B+Tree (WiredTiger/BTrDB)   | `bplustree` | get / locate / scan / sum|
+//! | skip list (towers)          | `skiplist`  | find / locate / scan     |
+//! | 256-way radix trie (ART)    | `radixtrie` | byte-dispatch lookup     |
+//! | directed graph (adj. lists) | `graph`     | bounded k-hop walk       |
+//!
+//! Every structure here is also registered in
+//! `testgen::StructureKind` and pinned by the cross-backend
+//! differential suite (`rust/tests/conformance.rs`); see
+//! `rust/src/rack/README.md` ("Adding a scenario") for the checklist.
 //!
 //! Each structure provides:
 //! * host-side build/mutation through the `Rack` (allocation + writes go
@@ -27,15 +49,21 @@ pub mod bimap;
 pub mod bplustree;
 pub mod bst;
 pub mod btree;
+pub mod graph;
 pub mod hashmap;
 pub mod list;
+pub mod radixtrie;
+pub mod skiplist;
 
 pub use bimap::Bimap;
 pub use bplustree::BPlusTree;
 pub use bst::{BstKind, BstMap};
 pub use btree::GoogleBtree;
+pub use graph::AdjGraph;
 pub use hashmap::{HashMapDs, HashSetDs};
 pub use list::{ForwardList, LinkedList};
+pub use radixtrie::RadixTrie;
+pub use skiplist::SkipList;
 
 /// Scratchpad word conventions.
 pub const SP_KEY: u32 = 0;

@@ -1,0 +1,558 @@
+//! Probabilistic skip list on disaggregated memory (scenario expansion
+//! beyond the paper's Table 1 set; the canonical "tower" structure of
+//! RDMA key-value stores).
+//!
+//! Node layout (19 words, 152 B — inside the 256 B window):
+//!   `[key(0), value(1), height(2), next[0..8) (3..11),
+//!     next_keys[0..8) (11..19)]`
+//!
+//! Every tower level stores the *successor's key* next to the successor
+//! pointer (`next_keys`, i64::MAX when the pointer is null) — the fence
+//! keys RDMA skip lists replicate so a traversal can decide
+//! right-vs-down from the *current* node alone. That is exactly what
+//! makes the search offloadable: one aggregated LOAD per iteration,
+//! dynamic tower indexing via `field_dyn` on the level cursor, and no
+//! peeking at the remote successor.
+//!
+//! Offloaded iterators:
+//!  * `find_iter`   — classic search: move right while
+//!                    `next_keys[lvl] <= needle`, else descend; at level
+//!                    0 check the node key (sp[RESULT]/sp[FLAG]);
+//!  * `locate_iter` — same walk, returns the greatest node with
+//!                    key <= needle (scan entry point);
+//!  * `scan_iter`   — level-0 chain scan emitting one record per
+//!                    iteration into sp[8..32], yielding on a full
+//!                    buffer (YCSB-E over the skip list).
+//!
+//! Host-side mutation (insert / remove / update-in-place) maintains the
+//! fence-key invariant `next_keys[l] == key(next[l])`.
+
+use std::sync::Arc;
+
+use super::{KEY_NOT_FOUND, SP_BUF_BASE, SP_BUF_LEN, SP_CURSOR, SP_FLAG, SP_KEY, SP_RESULT};
+use crate::compiler::{CompiledIter, IterBuilder};
+use crate::isa::{Status, SP_WORDS};
+use crate::mem::GAddr;
+use crate::rack::{Op, Rack, Stage, StartAddr};
+use crate::util::prng::Rng;
+
+/// Tower height cap; towers are geometric(1/2), so 8 levels cover
+/// ~2^8 elements per expected top-level hop.
+pub const MAX_LEVEL: usize = 8;
+pub const NODE_WORDS: usize = 3 + 2 * MAX_LEVEL; // 19
+const NEXT0: u32 = 3;
+const NKEY0: u32 = NEXT0 + MAX_LEVEL as u32; // 11
+
+/// Search: sp[KEY] = needle, sp[CURSOR] = start level (top of the
+/// list). On a hit sp[RESULT] = value, sp[FLAG] = 0; on a miss
+/// sp[FLAG] = KEY_NOT_FOUND.
+pub fn find_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let needle = b.sp(SP_KEY);
+    let lvl = b.sp(SP_CURSOR);
+    let nk = b.field_dyn(lvl, NKEY0, NODE_WORDS as u32 - 1);
+    let np = b.field_dyn(lvl, NEXT0, NKEY0 - 1);
+    // fence key covers the successor: move right without touching it
+    b.if_le(nk, needle, |b| b.advance(np));
+    let zero = b.imm(0);
+    b.if_eq(lvl, zero, |b| {
+        let k = b.field(0);
+        b.if_eq(k, needle, |b| {
+            let v = b.field(1);
+            b.sp_store(SP_RESULT, v);
+            b.sp_store(SP_FLAG, zero);
+            b.ret();
+        });
+        let nf = b.imm(KEY_NOT_FOUND);
+        b.sp_store(SP_FLAG, nf);
+        b.ret();
+    });
+    // descend: same node, one level down (costs an iteration, exactly
+    // like the FPGA prototype's per-visit accounting)
+    let down = b.addi(lvl, -1);
+    b.sp_store(SP_CURSOR, down);
+    let me = b.cur_ptr();
+    b.advance(me);
+    b.finish().expect("skiplist find")
+}
+
+/// Locate: identical walk, but at level 0 stores the *current node
+/// address* (greatest key <= needle; the head sentinel when needle
+/// precedes everything) into sp[RESULT] — the scan entry point.
+pub fn locate_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let needle = b.sp(SP_KEY);
+    let lvl = b.sp(SP_CURSOR);
+    let nk = b.field_dyn(lvl, NKEY0, NODE_WORDS as u32 - 1);
+    let np = b.field_dyn(lvl, NEXT0, NKEY0 - 1);
+    b.if_le(nk, needle, |b| b.advance(np));
+    let zero = b.imm(0);
+    b.if_eq(lvl, zero, |b| {
+        let me = b.cur_ptr();
+        b.sp_store(SP_RESULT, me);
+        b.ret();
+    });
+    let down = b.addi(lvl, -1);
+    b.sp_store(SP_CURSOR, down);
+    let me = b.cur_ptr();
+    b.advance(me);
+    b.finish().expect("skiplist locate")
+}
+
+/// Level-0 range scan starting at a located node: sp[KEY] = lo bound,
+/// sp[2] = remaining, sp[3] = emitted this round, values appended at
+/// sp[8..32]. Returns with sp[RESULT] = continuation node (0 = end of
+/// chain) when the buffer fills, the count is satisfied, or the chain
+/// ends — the same continuation protocol as `bplustree::scan_iter`.
+pub fn scan_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let lo = b.sp(SP_KEY);
+    let k = b.field(0);
+    let np = b.field(NEXT0);
+    let zero = b.imm(0);
+    b.if_lt(k, lo, |b| {
+        // pre-range node (head sentinel or the located predecessor)
+        b.if_eq(np, zero, |b| {
+            b.sp_store(SP_RESULT, zero);
+            b.ret();
+        });
+        b.advance(np);
+    });
+    let v = b.field(1);
+    let oc = b.sp(3);
+    b.sp_store_dyn(oc, SP_BUF_BASE, v);
+    let oc2 = b.addi(oc, 1);
+    b.sp_store(3, oc2);
+    let rem = b.sp(2);
+    let rem2 = b.addi(rem, -1);
+    b.sp_store(2, rem2);
+    b.sp_store(SP_RESULT, np);
+    b.if_eq(np, zero, |b| b.ret());
+    b.if_le(rem2, zero, |b| b.ret());
+    let cap = b.imm(SP_BUF_LEN as i64);
+    b.if_ge(oc2, cap, |b| b.ret());
+    b.advance(np);
+    b.finish().expect("skiplist scan")
+}
+
+pub struct SkipList {
+    pub head: GAddr,
+    /// Highest level currently in use (1..=MAX_LEVEL).
+    pub level: usize,
+    pub len: usize,
+    rng: Rng,
+    find_p: Arc<CompiledIter>,
+    locate_p: Arc<CompiledIter>,
+    scan_p: Arc<CompiledIter>,
+}
+
+impl SkipList {
+    /// Allocate the head sentinel (key = i64::MIN, full-height tower,
+    /// all fence keys = i64::MAX). Application keys must satisfy
+    /// `i64::MIN < key < i64::MAX`.
+    pub fn new(rack: &mut Rack, seed: u64) -> Self {
+        let head = rack.alloc((NODE_WORDS * 8) as u64);
+        let mut node = [0i64; NODE_WORDS];
+        node[0] = i64::MIN;
+        node[2] = MAX_LEVEL as i64;
+        for l in 0..MAX_LEVEL {
+            node[NKEY0 as usize + l] = i64::MAX;
+        }
+        rack.write_words(head, &node);
+        Self {
+            head,
+            level: 1,
+            len: 0,
+            rng: Rng::with_stream(seed, 0x51A9),
+            find_p: Arc::new(find_iter()),
+            locate_p: Arc::new(locate_iter()),
+            scan_p: Arc::new(scan_iter()),
+        }
+    }
+
+    pub fn find_program(&self) -> Arc<CompiledIter> {
+        self.find_p.clone()
+    }
+
+    pub fn locate_program(&self) -> Arc<CompiledIter> {
+        self.locate_p.clone()
+    }
+
+    pub fn scan_program(&self) -> Arc<CompiledIter> {
+        self.scan_p.clone()
+    }
+
+    /// Level cursor the offloaded walks start from.
+    pub fn start_level(&self) -> i64 {
+        (self.level - 1) as i64
+    }
+
+    fn read_node(rack: &mut Rack, addr: GAddr) -> [i64; NODE_WORDS] {
+        let mut n = [0i64; NODE_WORDS];
+        rack.read_words(addr, &mut n);
+        n
+    }
+
+    fn random_height(&mut self) -> usize {
+        let mut h = 1;
+        while h < MAX_LEVEL && self.rng.chance(0.5) {
+            h += 1;
+        }
+        h
+    }
+
+    /// Insert or update-in-place (host path; maintains fence keys).
+    pub fn insert(&mut self, rack: &mut Rack, key: i64, value: i64) {
+        assert!(key > i64::MIN && key < i64::MAX, "reserved key {key}");
+        let mut preds = [self.head; MAX_LEVEL];
+        let mut cur = self.head;
+        let mut node = Self::read_node(rack, cur);
+        for lvl in (0..self.level).rev() {
+            loop {
+                let nk = node[NKEY0 as usize + lvl];
+                if nk > key {
+                    break;
+                }
+                if nk == key {
+                    // key present: overwrite the value in place
+                    let target = node[NEXT0 as usize + lvl] as GAddr;
+                    let mut t = Self::read_node(rack, target);
+                    t[1] = value;
+                    rack.write_words(target, &t);
+                    return;
+                }
+                cur = node[NEXT0 as usize + lvl] as GAddr;
+                node = Self::read_node(rack, cur);
+            }
+            preds[lvl] = cur;
+        }
+        let h = self.random_height();
+        let addr = rack.alloc((NODE_WORDS * 8) as u64);
+        let mut fresh = [0i64; NODE_WORDS];
+        fresh[0] = key;
+        fresh[1] = value;
+        fresh[2] = h as i64;
+        for lvl in 0..MAX_LEVEL {
+            fresh[NKEY0 as usize + lvl] = i64::MAX;
+        }
+        // splice below the predecessors first, then publish the node
+        for lvl in 0..h {
+            let mut p = Self::read_node(rack, preds[lvl]);
+            fresh[NEXT0 as usize + lvl] = p[NEXT0 as usize + lvl];
+            fresh[NKEY0 as usize + lvl] = p[NKEY0 as usize + lvl];
+            p[NEXT0 as usize + lvl] = addr as i64;
+            p[NKEY0 as usize + lvl] = key;
+            rack.write_words(preds[lvl], &p);
+        }
+        rack.write_words(addr, &fresh);
+        if h > self.level {
+            self.level = h;
+        }
+        self.len += 1;
+    }
+
+    /// Remove a key (host path); false if absent.
+    pub fn remove(&mut self, rack: &mut Rack, key: i64) -> bool {
+        let mut preds = [self.head; MAX_LEVEL];
+        let mut cur = self.head;
+        let mut node = Self::read_node(rack, cur);
+        for lvl in (0..self.level).rev() {
+            while node[NKEY0 as usize + lvl] < key {
+                cur = node[NEXT0 as usize + lvl] as GAddr;
+                node = Self::read_node(rack, cur);
+            }
+            preds[lvl] = cur;
+        }
+        let p0 = Self::read_node(rack, preds[0]);
+        if p0[NKEY0 as usize] != key {
+            return false;
+        }
+        let target = p0[NEXT0 as usize] as GAddr;
+        let t = Self::read_node(rack, target);
+        let h = t[2] as usize;
+        for lvl in 0..h {
+            let mut p = Self::read_node(rack, preds[lvl]);
+            if p[NEXT0 as usize + lvl] as GAddr == target {
+                p[NEXT0 as usize + lvl] = t[NEXT0 as usize + lvl];
+                p[NKEY0 as usize + lvl] = t[NKEY0 as usize + lvl];
+                rack.write_words(preds[lvl], &p);
+            }
+        }
+        let head = Self::read_node(rack, self.head);
+        while self.level > 1 && head[NEXT0 as usize + self.level - 1] == 0 {
+            self.level -= 1;
+        }
+        self.len -= 1;
+        true
+    }
+
+    /// Single-stage find op (conformance / bench streams).
+    pub fn find_op(&self, key: i64) -> Op {
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = key;
+        sp[SP_CURSOR as usize] = self.start_level();
+        Op::new(self.find_p.clone(), self.head, sp)
+    }
+
+    /// Two-stage YCSB-E-style scan op: locate the greatest key <= `lo`,
+    /// then stream `count` records through the buffered scan with
+    /// continuation rounds (`repeat_while`), exactly like the
+    /// WiredTiger B+Tree op chain.
+    pub fn scan_op(&self, lo: i64, count: usize) -> Op {
+        let mut sp1 = [0i64; SP_WORDS];
+        sp1[SP_KEY as usize] = lo;
+        sp1[SP_CURSOR as usize] = self.start_level();
+        let s1 = Stage::new(self.locate_p.clone(), self.head, sp1);
+        let mut s2 = Stage::new(self.scan_p.clone(), 0, [0i64; SP_WORDS]);
+        s2.start = StartAddr::FromPrevSp(SP_RESULT);
+        s2.sp[SP_KEY as usize] = lo;
+        s2.sp[2] = count as i64;
+        s2.sp_overrides = vec![(3, 0)];
+        s2.repeat_while = Some((SP_RESULT, 2));
+        Op { stages: vec![s1, s2], cpu_post_ns: 0 }
+    }
+
+    /// Offloaded find.
+    pub fn find(&self, rack: &mut Rack, key: i64) -> Option<i64> {
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = key;
+        sp[SP_CURSOR as usize] = self.start_level();
+        let (_st, sp, _) = rack.traverse(&self.find_p, self.head, sp);
+        (sp[SP_FLAG as usize] != KEY_NOT_FOUND)
+            .then_some(sp[SP_RESULT as usize])
+    }
+
+    /// Offloaded range scan: up to `count` values with key >= `lo`,
+    /// draining the scratchpad buffer between continuation rounds.
+    pub fn scan(&self, rack: &mut Rack, lo: i64, count: usize) -> Vec<i64> {
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = lo;
+        sp[SP_CURSOR as usize] = self.start_level();
+        let (_st, sp, _) = rack.traverse(&self.locate_p, self.head, sp);
+        let mut cur = sp[SP_RESULT as usize] as GAddr;
+        let mut out = Vec::with_capacity(count);
+        let mut remaining = count as i64;
+        while remaining > 0 && cur != 0 {
+            let mut sp = [0i64; SP_WORDS];
+            sp[SP_KEY as usize] = lo;
+            sp[2] = remaining;
+            sp[3] = 0;
+            let (st, sp, _) = rack.traverse(&self.scan_p, cur, sp);
+            let emitted = sp[3] as usize;
+            out.extend_from_slice(
+                &sp[SP_BUF_BASE as usize..SP_BUF_BASE as usize + emitted],
+            );
+            if st != Status::Return {
+                break;
+            }
+            remaining -= emitted as i64;
+            cur = sp[SP_RESULT as usize] as GAddr;
+            if emitted == 0 && cur == 0 {
+                break;
+            }
+        }
+        out.truncate(count);
+        out
+    }
+
+    /// Host reference find (level-0 chain walk; independent of towers).
+    pub fn host_find(&self, rack: &mut Rack, key: i64) -> Option<i64> {
+        let head = Self::read_node(rack, self.head);
+        let mut cur = head[NEXT0 as usize] as GAddr;
+        while cur != 0 {
+            let n = Self::read_node(rack, cur);
+            if n[0] == key {
+                return Some(n[1]);
+            }
+            if n[0] > key {
+                return None;
+            }
+            cur = n[NEXT0 as usize] as GAddr;
+        }
+        None
+    }
+
+    /// Host reference scan.
+    pub fn host_scan(&self, rack: &mut Rack, lo: i64, count: usize) -> Vec<i64> {
+        let head = Self::read_node(rack, self.head);
+        let mut cur = head[NEXT0 as usize] as GAddr;
+        let mut out = Vec::with_capacity(count);
+        while cur != 0 && out.len() < count {
+            let n = Self::read_node(rack, cur);
+            if n[0] >= lo {
+                out.push(n[1]);
+            }
+            cur = n[NEXT0 as usize] as GAddr;
+        }
+        out
+    }
+
+    /// Tower invariant: `next_keys[l] == key(next[l])` (i64::MAX for
+    /// null), every level-l link skips only smaller towers. Test hook.
+    pub fn check_invariants(&self, rack: &mut Rack) {
+        let mut cur = self.head;
+        while cur != 0 {
+            let n = Self::read_node(rack, cur);
+            let h = n[2] as usize;
+            for lvl in 0..h {
+                let np = n[NEXT0 as usize + lvl] as GAddr;
+                let nk = n[NKEY0 as usize + lvl];
+                if np == 0 {
+                    assert_eq!(nk, i64::MAX, "null link with fence {nk}");
+                } else {
+                    let succ = Self::read_node(rack, np);
+                    assert_eq!(nk, succ[0], "fence key out of sync");
+                    assert!(
+                        succ[2] as usize > lvl,
+                        "level-{lvl} link into a shorter tower"
+                    );
+                }
+            }
+            cur = n[NEXT0 as usize] as GAddr;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::DEFAULT_ETA;
+    use crate::rack::RackConfig;
+
+    fn rack() -> Rack {
+        Rack::new(RackConfig {
+            nodes: 2,
+            node_capacity: 32 << 20,
+            granularity: 1 << 20,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn find_hit_and_miss() {
+        let mut r = rack();
+        let mut s = SkipList::new(&mut r, 7);
+        for i in 0..500 {
+            s.insert(&mut r, i * 3, i * 30);
+        }
+        s.check_invariants(&mut r);
+        for i in (0..500).step_by(17) {
+            assert_eq!(s.find(&mut r, i * 3), Some(i * 30), "key {}", i * 3);
+            assert_eq!(s.find(&mut r, i * 3 + 1), None);
+        }
+        assert_eq!(s.find(&mut r, -5), None);
+        assert_eq!(s.find(&mut r, 5000), None);
+    }
+
+    #[test]
+    fn offloaded_matches_host_walk() {
+        let mut r = rack();
+        let mut s = SkipList::new(&mut r, 11);
+        for i in 0..300 {
+            s.insert(&mut r, (i * 7) % 211, i);
+        }
+        for k in 0..230 {
+            assert_eq!(s.find(&mut r, k), s.host_find(&mut r, k), "key {k}");
+        }
+    }
+
+    #[test]
+    fn insert_overwrites_in_place() {
+        let mut r = rack();
+        let mut s = SkipList::new(&mut r, 3);
+        s.insert(&mut r, 42, 1);
+        s.insert(&mut r, 42, 2);
+        assert_eq!(s.len, 1);
+        assert_eq!(s.find(&mut r, 42), Some(2));
+    }
+
+    #[test]
+    fn remove_unlinks_all_levels() {
+        let mut r = rack();
+        let mut s = SkipList::new(&mut r, 5);
+        for i in 0..200 {
+            s.insert(&mut r, i, i * 10);
+        }
+        for i in (0..200).step_by(2) {
+            assert!(s.remove(&mut r, i), "key {i}");
+        }
+        assert!(!s.remove(&mut r, 0));
+        s.check_invariants(&mut r);
+        for i in 0..200 {
+            let want = (i % 2 == 1).then_some(i * 10);
+            assert_eq!(s.find(&mut r, i), want, "key {i}");
+            assert_eq!(s.host_find(&mut r, i), want, "host key {i}");
+        }
+        assert_eq!(s.len, 100);
+    }
+
+    #[test]
+    fn scan_matches_host_with_continuations() {
+        let mut r = rack();
+        let mut s = SkipList::new(&mut r, 9);
+        for i in 0..400 {
+            s.insert(&mut r, i * 2, i * 20);
+        }
+        // > SP_BUF_LEN forces continuation rounds
+        for (lo, n) in [(100, 10), (0, 100), (399, 5), (795, 50), (801, 3)] {
+            assert_eq!(
+                s.scan(&mut r, lo, n),
+                s.host_scan(&mut r, lo, n),
+                "scan {lo} +{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn scan_op_chain_runs_functionally() {
+        let mut r = rack();
+        let mut s = SkipList::new(&mut r, 13);
+        for i in 0..200 {
+            s.insert(&mut r, i, i + 1000);
+        }
+        let op = s.scan_op(50, 40);
+        let sp = r.run_op_functional(&op);
+        // the last continuation round's buffer is non-empty
+        assert!(sp[3] > 0);
+        assert_eq!(s.scan(&mut r, 50, 40), s.host_scan(&mut r, 50, 40));
+    }
+
+    #[test]
+    fn spans_memory_nodes() {
+        let mut r = Rack::new(RackConfig {
+            nodes: 4,
+            node_capacity: 32 << 20,
+            granularity: 4096,
+            ..Default::default()
+        });
+        let mut s = SkipList::new(&mut r, 21);
+        for i in 0..1500 {
+            s.insert(&mut r, i, i);
+        }
+        // tiny slabs spread the towers over every node
+        let owners: std::collections::BTreeSet<_> = (0..r.alloc.nodes())
+            .filter(|&n| r.alloc.node_used(n as u16) > 0)
+            .collect();
+        assert!(owners.len() >= 2, "placement not distributed");
+        assert_eq!(s.find(&mut r, 1337), Some(1337));
+        assert_eq!(s.find(&mut r, 1501), None);
+        assert_eq!(s.scan(&mut r, 700, 30), s.host_scan(&mut r, 700, 30));
+    }
+
+    #[test]
+    fn programs_are_offloadable() {
+        for (name, it) in [
+            ("find", find_iter()),
+            ("locate", locate_iter()),
+            ("scan", scan_iter()),
+        ] {
+            assert!(
+                it.offloadable(DEFAULT_ETA),
+                "{name} ratio {} too high",
+                it.ratio()
+            );
+        }
+        // the 19-word window dominates: memory-bound like the hash chain
+        assert_eq!(find_iter().program.load_words as usize, NODE_WORDS);
+    }
+}

@@ -11,6 +11,13 @@
 use super::op::Op;
 use super::program::Program;
 
+/// The prototype's offload threshold η = m/n = 3/4 (paper §4.2: 3 logic
+/// pipelines / 4 memory pipelines). Single source for the dispatch
+/// engine default and the per-structure `offloadable` assertions in
+/// `ds/` — a new scenario's iterator must clear `t_c ≤ DEFAULT_ETA·t_d`
+/// or it silently falls back to CPU-side execution.
+pub const DEFAULT_ETA: f64 = 0.75;
+
 /// Timing parameters of one PULSE accelerator (FPGA prototype defaults).
 #[derive(Debug, Clone, Copy)]
 pub struct CostModel {

@@ -18,7 +18,7 @@ pub mod program;
 pub mod verify;
 
 pub use asm::Asm;
-pub use cost::{CostModel, IterCost};
+pub use cost::{CostModel, IterCost, DEFAULT_ETA};
 pub use op::{Instr, Op};
 pub use program::{Program, ProgramId};
 pub use verify::{verify, VerifyError};

@@ -118,4 +118,79 @@ mod tests {
         });
         assert_eq!(r.snapshot().routed, 4000);
     }
+
+    // --- RangeMap snapshot boundary conditions (the k-hop graph is the
+    // --- first workload that lands pointers on arbitrary range edges)
+
+    #[test]
+    fn pointers_exactly_on_shard_range_edges() {
+        let mut map = RangeMap::new();
+        map.insert(0x1000, 0x1000, 0);
+        map.insert(0x2000, 0x1000, 1); // adjacent: no gap byte
+        map.insert(0x4000, 0x1000, 0); // gap before this one
+        let r = Router::new(map);
+        // first/last byte of every range, both sides of every edge
+        assert_eq!(r.route(0x0FFF, false), None);
+        assert_eq!(r.route(0x1000, false), Some(0)); // range start
+        assert_eq!(r.route(0x1FFF, false), Some(0)); // range last byte
+        assert_eq!(r.route(0x2000, false), Some(1)); // adjacent handoff
+        assert_eq!(r.route(0x2FFF, false), Some(1));
+        assert_eq!(r.route(0x3000, false), None); // gap start
+        assert_eq!(r.route(0x3FFF, false), None); // gap last byte
+        assert_eq!(r.route(0x4000, false), Some(0));
+        assert_eq!(r.route(0x4FFF, false), Some(0));
+        assert_eq!(r.route(0x5000, false), None); // past the end
+        let s = r.snapshot();
+        assert_eq!(s.routed, 6);
+        assert_eq!(s.invalid, 4);
+    }
+
+    #[test]
+    fn single_shard_map_owns_everything_in_range() {
+        let mut map = RangeMap::new();
+        map.insert(0x10_000, 0x10_000, 0);
+        map.insert(0x20_000, 0x10_000, 0); // coalesces (same node)
+        let r = Router::new(map);
+        for addr in
+            [0x10_000u64, 0x17_FF8, 0x1F_FFF, 0x20_000, 0x2F_FFF]
+        {
+            assert_eq!(r.route(addr, false), Some(0), "addr {addr:#x}");
+        }
+        assert_eq!(r.route(0x0F_FFF, false), None);
+        assert_eq!(r.route(0x30_000, false), None);
+        assert_eq!(r.snapshot().reroutes, 0);
+    }
+
+    #[test]
+    fn remap_after_restart_sees_new_slabs_old_snapshot_does_not() {
+        use crate::rack::{Rack, RackConfig};
+        // serve-time snapshot semantics: a router built before an
+        // allocation keeps answering from the stale map (like the real
+        // switch between map pushes); the next serve's fresh snapshot
+        // must route the new slab — and start its counters at zero
+        let mut rack = Rack::new(RackConfig {
+            nodes: 2,
+            node_capacity: 8 << 20,
+            granularity: 4096,
+            ..Default::default()
+        });
+        let a0 = rack.alloc(64);
+        let old = Router::new(rack.alloc.switch_map.clone());
+        assert_eq!(old.route(a0, false), rack.alloc.owner(a0));
+        // force fresh slabs (restart boundary)
+        let grown: Vec<_> = (0..8).map(|_| rack.alloc(4096)).collect();
+        let fresh_addr = *grown.last().unwrap();
+        assert_eq!(
+            old.route(fresh_addr, false),
+            None,
+            "stale snapshot must not route post-snapshot slabs"
+        );
+        let fresh = Router::new(rack.alloc.switch_map.clone());
+        assert_eq!(fresh.route(fresh_addr, false), rack.alloc.owner(fresh_addr));
+        assert_eq!(fresh.route(a0, false), rack.alloc.owner(a0));
+        // per-run counters reset with the snapshot (restart semantics)
+        let s = fresh.snapshot();
+        assert_eq!((s.routed, s.invalid), (2, 0));
+        assert!(old.snapshot().invalid >= 1);
+    }
 }

@@ -17,7 +17,7 @@
 //!   pulse selftest
 
 use pulse::apps::{BtrDbApp, WebServiceApp, WiredTigerApp};
-use pulse::bench_support::make_backend;
+use pulse::bench_support::{build_scenario_ops, make_backend, ScenarioSpec};
 use pulse::rack::RackConfig;
 use pulse::util::cli::Args;
 use pulse::workloads::{YcsbSpec, YcsbWorkload};
@@ -35,11 +35,11 @@ fn main() -> CliResult {
         _ => {
             eprintln!(
                 "usage: pulse <serve|inspect|selftest> [--app webservice|\
-                 wiredtiger|btrdb] [--backend pulse|pulse-acc|cache|rpc|\
-                 rpc-arm|cache-rpc|live] [--nodes N] [--ops N] [--conc N] \
-                 [--ycsb A|B|C|E] [--window-s S] [--uniform] \
-                 [--granularity BYTES] [--loss P] [--no-in-network] \
-                 [--iter NAME]"
+                 wiredtiger|btrdb|skiplist|radixtrie|graph] [--backend \
+                 pulse|pulse-acc|cache|rpc|rpc-arm|cache-rpc|live] \
+                 [--nodes N] [--ops N] [--conc N] [--ycsb A|B|C|E] \
+                 [--window-s S] [--uniform] [--granularity BYTES] \
+                 [--loss P] [--no-in-network] [--hops N] [--iter NAME]"
             );
             std::process::exit(2);
         }
@@ -103,6 +103,33 @@ fn serve(args: &Args) -> CliResult {
             let mut ops = app.op_stream(win, ops_n, seed ^ 1);
             backend.serve(&mut |i| ops(i), conc)
         }
+        // scenario-expansion apps: skiplist (YCSB-E scans), radixtrie
+        // (YCSB-C lookups), graph (bounded k-hop walks). The workload
+        // builder is shared with benches/scenarios.rs, so the CLI
+        // serves exactly the stream BENCH_scenarios.json reports.
+        "skiplist" | "radixtrie" | "graph" => {
+            let which = match app_name.as_str() {
+                "skiplist" => "skiplist-e",
+                "radixtrie" => "trie-lookup",
+                _ => "graph-khop",
+            };
+            let spec = ScenarioSpec {
+                keys: args.u64_or("keys", 20_000),
+                ops: ops_n,
+                zipf,
+                max_scan: args.usize_or("max-scan", 60),
+                // clamp instead of letting the generator's assert panic
+                max_hops: args
+                    .u64_or("hops", 8)
+                    .clamp(1, pulse::ds::graph::MAX_HOPS as u64)
+                    as u32,
+                seed,
+                ..Default::default()
+            };
+            let ops =
+                build_scenario_ops(backend.rack_mut(), which, &spec);
+            backend.serve(&mut |i| ops.get(i as usize).cloned(), conc)
+        }
         other => return Err(format!("unknown app {other:?}").into()),
     };
 
@@ -158,11 +185,17 @@ fn inspect(args: &Args) -> CliResult {
         "bplustree-get" => pulse::ds::bplustree::get_iter(),
         "bplustree-scan" => pulse::ds::bplustree::scan_iter(),
         "bplustree-sum" => pulse::ds::bplustree::sum_iter(),
+        "skiplist-find" => pulse::ds::skiplist::find_iter(),
+        "skiplist-locate" => pulse::ds::skiplist::locate_iter(),
+        "skiplist-scan" => pulse::ds::skiplist::scan_iter(),
+        "radixtrie-lookup" => pulse::ds::radixtrie::lookup_iter(),
+        "graph-khop" => pulse::ds::graph::khop_iter(),
         other => {
             return Err(format!(
                 "unknown iterator {other:?} (try list-find, chain-find, \
                  bst-lower-bound, btree-locate, bplustree-get, \
-                 bplustree-scan, bplustree-sum)"
+                 bplustree-scan, bplustree-sum, skiplist-find, \
+                 skiplist-scan, radixtrie-lookup, graph-khop)"
             )
             .into())
         }

@@ -1,14 +1,28 @@
-//! Random-but-verified program and workspace generators, shared by the
-//! property tests (`rust/tests/proptest_isa.rs`) and the cross-layer
-//! equivalence tests (`rust/tests/integration_runtime.rs`).
+//! Random-but-verified generators shared by the test tree:
 //!
-//! Mirrors the hypothesis strategy in `python/tests/test_hypothesis.py`:
-//! anything this module generates passes the verifier, and its trap
+//! * ISA-level: random verified programs + workspaces
+//!   (`rust/tests/proptest_isa.rs`, `integration_runtime.rs`), mirroring
+//!   the hypothesis strategy in `python/tests/test_hypothesis.py`;
+//! * structure-level: the seeded structure-op fuzzer
+//!   (`random_structure_ops`) and the [`StructureKind`] scenario
+//!   registry covering **all 16 traversal scenarios** — built-host,
+//!   queried-offloaded plans shared by the cross-backend differential
+//!   conformance suite (`rust/tests/conformance.rs`) and the
+//!   data-structure property tests (`rust/tests/proptest_ds.rs`).
+//!
+//! Anything this module generates passes the verifier, and its trap
 //! behaviour (div-zero, dynamic OOB) is defined identically across the
 //! native interpreter, the Pallas kernel, and the oracle.
 
+use std::collections::BTreeMap;
+
+use crate::ds::{
+    AdjGraph, BPlusTree, Bimap, BstKind, BstMap, ForwardList, GoogleBtree,
+    HashMapDs, HashSetDs, LinkedList, RadixTrie, SkipList, SP_KEY,
+};
 use crate::interp::Workspace;
 use crate::isa::{verify, Asm, Instr, Op, Program, DATA_WORDS, NREG, SP_WORDS};
+use crate::rack::{Op as AppOp, Rack};
 use crate::util::prng::Rng;
 
 /// Generate a random program of at most `max_len` instructions that
@@ -153,6 +167,545 @@ pub fn list_find_program() -> Program {
     a.finish(3).unwrap()
 }
 
+// ---------------------------------------------------------------------
+// Structure-op fuzzer + scenario registry
+// ---------------------------------------------------------------------
+
+/// Right-domain offset for bimap pairs (left key k maps to
+/// `BIMAP_RIGHT_BASE + k`), so a probe's domain identifies the index.
+pub const BIMAP_RIGHT_BASE: i64 = 1 << 40;
+
+/// Every traversal scenario the repo serves — the paper's 13 structures
+/// (4 BST balancing disciplines share one traversal; scans count
+/// separately because they exercise a different program + continuation
+/// protocol), the B+Tree family, and the three expansion scenarios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StructureKind {
+    ForwardList,
+    LinkedList,
+    HashMap,
+    HashSet,
+    Bimap,
+    BstPlain,
+    BstAvl,
+    BstSplay,
+    BstScapegoat,
+    GoogleBtree,
+    BPlusTreeGet,
+    BPlusTreeScan,
+    SkipListFind,
+    SkipListScan,
+    RadixTrie,
+    GraphKhop,
+}
+
+impl StructureKind {
+    pub const ALL: [StructureKind; 16] = [
+        StructureKind::ForwardList,
+        StructureKind::LinkedList,
+        StructureKind::HashMap,
+        StructureKind::HashSet,
+        StructureKind::Bimap,
+        StructureKind::BstPlain,
+        StructureKind::BstAvl,
+        StructureKind::BstSplay,
+        StructureKind::BstScapegoat,
+        StructureKind::GoogleBtree,
+        StructureKind::BPlusTreeGet,
+        StructureKind::BPlusTreeScan,
+        StructureKind::SkipListFind,
+        StructureKind::SkipListScan,
+        StructureKind::RadixTrie,
+        StructureKind::GraphKhop,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StructureKind::ForwardList => "forward_list",
+            StructureKind::LinkedList => "list",
+            StructureKind::HashMap => "hashmap",
+            StructureKind::HashSet => "hashset",
+            StructureKind::Bimap => "bimap",
+            StructureKind::BstPlain => "bst-plain",
+            StructureKind::BstAvl => "bst-avl",
+            StructureKind::BstSplay => "bst-splay",
+            StructureKind::BstScapegoat => "bst-scapegoat",
+            StructureKind::GoogleBtree => "google-btree",
+            StructureKind::BPlusTreeGet => "bplustree-get",
+            StructureKind::BPlusTreeScan => "bplustree-scan",
+            StructureKind::SkipListFind => "skiplist-find",
+            StructureKind::SkipListScan => "skiplist-scan",
+            StructureKind::RadixTrie => "radix-trie",
+            StructureKind::GraphKhop => "graph-khop",
+        }
+    }
+
+    fn is_scan(&self) -> bool {
+        matches!(
+            self,
+            StructureKind::BPlusTreeScan | StructureKind::SkipListScan
+        )
+    }
+}
+
+/// One host-side mutation of a build script (applied sequentially to
+/// every backend's rack, so all layouts are identical).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BuildStep {
+    Insert(i64, i64),
+    Remove(i64),
+}
+
+/// One streamed query. Queries are read-only by construction: mutations
+/// live in the build script, so concurrent backends (the live engine at
+/// any shard count) produce scheduling-independent, bit-identical
+/// scratchpads.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Query {
+    Lookup(i64),
+    /// Scan(lo, record_count) — YCSB-E style.
+    Scan(i64, usize),
+    /// Khop(start_vertex, hops, per-hop draws).
+    Khop(u64, u32, Vec<i64>),
+}
+
+/// A seeded, rack-independent scenario: build script + query stream.
+#[derive(Debug, Clone)]
+pub struct ScenarioPlan {
+    pub kind: StructureKind,
+    pub seed: u64,
+    pub build: Vec<BuildStep>,
+    pub queries: Vec<Query>,
+}
+
+impl ScenarioPlan {
+    /// The reference key/value model after applying the build script
+    /// (later inserts win, removes delete — matching every structure's
+    /// host-path semantics).
+    pub fn model(&self) -> BTreeMap<i64, i64> {
+        let mut m = BTreeMap::new();
+        for step in &self.build {
+            match *step {
+                BuildStep::Insert(k, v) => {
+                    m.insert(k, v);
+                }
+                BuildStep::Remove(k) => {
+                    m.remove(&k);
+                }
+            }
+        }
+        m
+    }
+}
+
+/// Generate a seeded build/insert/delete/lookup/scan (or k-hop) plan
+/// for one structure. Same (kind, seed, sizes) => same plan, anywhere.
+pub fn random_structure_ops(
+    kind: StructureKind,
+    seed: u64,
+    build_n: usize,
+    query_n: usize,
+) -> ScenarioPlan {
+    let mut rng = Rng::with_stream(seed, 0xD5_0000 + kind as u64);
+    let build_n = build_n.max(8);
+    // key space sized to get both collisions and misses; the trie uses
+    // a dense 16-bit space so byte paths share prefixes
+    let space: i64 = match kind {
+        StructureKind::RadixTrie => 1 << 16,
+        _ => (build_n as i64 * 3).max(64),
+    };
+    let mut build = Vec::with_capacity(build_n);
+    match kind {
+        StructureKind::GraphKhop => {
+            // one step per vertex: the script carries the graph size,
+            // the topology itself is seeded inside `AdjGraph::build`
+            for i in 0..build_n {
+                build.push(BuildStep::Insert(i as i64, 0));
+            }
+        }
+        StructureKind::SkipListFind | StructureKind::SkipListScan => {
+            let mut live = 0usize;
+            for _ in 0..build_n {
+                if live > 8 && rng.chance(0.2) {
+                    build.push(BuildStep::Remove(rng.below(space as u64) as i64));
+                    live = live.saturating_sub(1);
+                } else {
+                    build.push(BuildStep::Insert(
+                        rng.below(space as u64) as i64,
+                        rng.next_i64() >> 8,
+                    ));
+                    live += 1;
+                }
+            }
+        }
+        StructureKind::Bimap => {
+            for _ in 0..build_n {
+                let k = rng.below(space as u64) as i64;
+                build.push(BuildStep::Insert(k, BIMAP_RIGHT_BASE + k));
+            }
+        }
+        StructureKind::BstPlain
+        | StructureKind::BstAvl
+        | StructureKind::BstSplay
+        | StructureKind::BstScapegoat => {
+            // unique keys: the BST insert path has no overwrite, so a
+            // duplicate would make tree and model disagree on the value
+            let mut used = std::collections::HashSet::new();
+            for _ in 0..build_n {
+                let k = rng.below(space as u64) as i64;
+                if used.insert(k) {
+                    build.push(BuildStep::Insert(k, rng.next_i64() >> 8));
+                }
+            }
+        }
+        _ => {
+            for _ in 0..build_n {
+                build.push(BuildStep::Insert(
+                    rng.below(space as u64) as i64,
+                    rng.next_i64() >> 8,
+                ));
+            }
+        }
+    }
+    let mut queries = Vec::with_capacity(query_n);
+    for _ in 0..query_n {
+        let q = match kind {
+            StructureKind::GraphKhop => {
+                let hops = 1 + rng.below(12) as u32;
+                let draws = (0..hops)
+                    .map(|_| (rng.next_u64() >> 1) as i64)
+                    .collect();
+                Query::Khop(rng.below(build_n as u64), hops, draws)
+            }
+            k if k.is_scan() => Query::Scan(
+                rng.below(space as u64 + space as u64 / 4) as i64,
+                1 + rng.below(60) as usize,
+            ),
+            StructureKind::Bimap => {
+                // half the probes target the reverse index
+                let k = rng.below(space as u64 + 32) as i64;
+                if rng.chance(0.5) {
+                    Query::Lookup(k)
+                } else {
+                    Query::Lookup(BIMAP_RIGHT_BASE + k)
+                }
+            }
+            _ => Query::Lookup(
+                rng.below(space as u64 + space as u64 / 4) as i64,
+            ),
+        };
+        queries.push(q);
+    }
+    ScenarioPlan { kind, seed, build, queries }
+}
+
+/// A scenario materialized on one rack.
+pub enum BuiltScenario {
+    FList(ForwardList),
+    LList(LinkedList),
+    Hash(HashMapDs),
+    HSet(HashSetDs),
+    Bi(Bimap),
+    Bst(BstMap),
+    Btree(GoogleBtree),
+    Bplus(BPlusTree),
+    Skip(SkipList),
+    Trie(RadixTrie),
+    Graph(AdjGraph),
+}
+
+impl BuiltScenario {
+    /// Apply the plan's build script to `rack`. Deterministic: the same
+    /// plan on two identically configured racks produces identical VA
+    /// layouts (the conformance suite's precondition).
+    pub fn build(plan: &ScenarioPlan, rack: &mut Rack) -> BuiltScenario {
+        let inserts = || {
+            plan.build.iter().filter_map(|s| match *s {
+                BuildStep::Insert(k, v) => Some((k, v)),
+                BuildStep::Remove(_) => None,
+            })
+        };
+        match plan.kind {
+            StructureKind::ForwardList => {
+                let mut l = ForwardList::new();
+                for (k, _v) in inserts() {
+                    l.push(rack, k);
+                }
+                BuiltScenario::FList(l)
+            }
+            StructureKind::LinkedList => {
+                let mut l = LinkedList::new();
+                for (k, _v) in inserts() {
+                    l.push_back(rack, k);
+                }
+                BuiltScenario::LList(l)
+            }
+            StructureKind::HashMap => {
+                let mut m = HashMapDs::build(rack, 64);
+                for (k, v) in inserts() {
+                    m.insert(rack, k, v);
+                }
+                BuiltScenario::Hash(m)
+            }
+            StructureKind::HashSet => {
+                let mut s = HashSetDs::build(rack, 64);
+                for (k, _v) in inserts() {
+                    s.insert(rack, k);
+                }
+                BuiltScenario::HSet(s)
+            }
+            StructureKind::Bimap => {
+                let mut b = Bimap::build(rack, 64);
+                // dedup left keys: bimap pairs must be 1:1
+                let mut seen = std::collections::HashSet::new();
+                for (k, v) in inserts() {
+                    if seen.insert(k) {
+                        b.insert(rack, k, v);
+                    }
+                }
+                BuiltScenario::Bi(b)
+            }
+            StructureKind::BstPlain
+            | StructureKind::BstAvl
+            | StructureKind::BstSplay
+            | StructureKind::BstScapegoat => {
+                let kind = match plan.kind {
+                    StructureKind::BstPlain => BstKind::Plain,
+                    StructureKind::BstAvl => BstKind::Avl,
+                    StructureKind::BstSplay => BstKind::Splay,
+                    _ => BstKind::Scapegoat,
+                };
+                let mut t = BstMap::new(kind);
+                let mut seen = std::collections::HashSet::new();
+                for (k, v) in inserts() {
+                    if seen.insert(k) {
+                        t.insert(rack, k, v);
+                    }
+                }
+                BuiltScenario::Bst(t)
+            }
+            StructureKind::GoogleBtree => {
+                let pairs: Vec<(i64, i64)> =
+                    plan.model().into_iter().collect();
+                BuiltScenario::Btree(GoogleBtree::build_sorted(rack, &pairs))
+            }
+            StructureKind::BPlusTreeGet | StructureKind::BPlusTreeScan => {
+                let pairs: Vec<(i64, i64)> =
+                    plan.model().into_iter().collect();
+                BuiltScenario::Bplus(BPlusTree::build_sorted(rack, &pairs, 7))
+            }
+            StructureKind::SkipListFind | StructureKind::SkipListScan => {
+                let mut s = SkipList::new(rack, plan.seed);
+                for step in &plan.build {
+                    match *step {
+                        BuildStep::Insert(k, v) => s.insert(rack, k, v),
+                        BuildStep::Remove(k) => {
+                            s.remove(rack, k);
+                        }
+                    }
+                }
+                BuiltScenario::Skip(s)
+            }
+            StructureKind::RadixTrie => {
+                let mut t = RadixTrie::new(rack);
+                for (k, v) in inserts() {
+                    t.insert(rack, k, v);
+                }
+                BuiltScenario::Trie(t)
+            }
+            StructureKind::GraphKhop => {
+                let n = plan.build.len().max(8);
+                BuiltScenario::Graph(AdjGraph::build(rack, n, 6, plan.seed))
+            }
+        }
+    }
+
+    /// Build the streamed op for one query.
+    pub fn make_op(&self, q: &Query) -> AppOp {
+        fn lookup_sp(key: i64) -> [i64; SP_WORDS] {
+            let mut sp = [0i64; SP_WORDS];
+            sp[SP_KEY as usize] = key;
+            sp
+        }
+        match (self, q) {
+            (BuiltScenario::FList(l), Query::Lookup(k)) => {
+                AppOp::new(l.find_program(), l.head, lookup_sp(*k))
+            }
+            (BuiltScenario::LList(l), Query::Lookup(k)) => {
+                AppOp::new(l.find_program(), l.head, lookup_sp(*k))
+            }
+            (BuiltScenario::Hash(m), Query::Lookup(k)) => {
+                AppOp::new(m.find_program(), m.bucket_ptr(*k), lookup_sp(*k))
+            }
+            (BuiltScenario::HSet(s), Query::Lookup(k)) => {
+                AppOp::new(s.find_program(), s.bucket_ptr(*k), lookup_sp(*k))
+            }
+            (BuiltScenario::Bi(b), Query::Lookup(k)) => {
+                let idx = if *k >= BIMAP_RIGHT_BASE {
+                    b.right_index()
+                } else {
+                    b.left_index()
+                };
+                AppOp::new(idx.find_program(), idx.bucket_ptr(*k), lookup_sp(*k))
+            }
+            (BuiltScenario::Bst(t), Query::Lookup(k)) => {
+                AppOp::new(t.find_program(), t.root, lookup_sp(*k))
+            }
+            (BuiltScenario::Btree(t), Query::Lookup(k)) => {
+                AppOp::new(t.locate_program(), t.root, lookup_sp(*k))
+            }
+            (BuiltScenario::Bplus(t), Query::Lookup(k)) => {
+                AppOp::new(t.get_program(), t.root, lookup_sp(*k))
+            }
+            (BuiltScenario::Bplus(t), Query::Scan(lo, len)) => {
+                // WiredTiger's locate + buffered-scan chain, one source
+                t.scan_op(*lo, *len)
+            }
+            (BuiltScenario::Skip(s), Query::Lookup(k)) => s.find_op(*k),
+            (BuiltScenario::Skip(s), Query::Scan(lo, len)) => {
+                s.scan_op(*lo, *len)
+            }
+            (BuiltScenario::Trie(t), Query::Lookup(k)) => t.lookup_op(*k),
+            (BuiltScenario::Graph(g), Query::Khop(start, hops, draws)) => {
+                g.khop_op(*start as usize, *hops, draws)
+            }
+            _ => panic!("query/structure mismatch"),
+        }
+    }
+
+    /// The full streamed op sequence of a plan.
+    pub fn ops(&self, plan: &ScenarioPlan) -> Vec<AppOp> {
+        plan.queries.iter().map(|q| self.make_op(q)).collect()
+    }
+
+    /// Property check: every query's offloaded answer (through the
+    /// structure API on `rack`) must match the host-side reference —
+    /// the plan model for point lookups, host walks for scans and
+    /// k-hops. Returns `Err` with context for `run_prop` bodies.
+    pub fn check_against_reference(
+        &self,
+        rack: &mut Rack,
+        plan: &ScenarioPlan,
+    ) -> Result<(), String> {
+        let model = plan.model();
+        let scan_model = |lo: i64, len: usize| -> Vec<i64> {
+            model.range(lo..).take(len).map(|(_, &v)| v).collect()
+        };
+        for (i, q) in plan.queries.iter().enumerate() {
+            let ctx = |msg: String| {
+                Err(format!("{} query {i} ({q:?}): {msg}", plan.kind.name()))
+            };
+            match (self, q) {
+                (BuiltScenario::FList(l), Query::Lookup(k)) => {
+                    let got = l.find(rack, *k);
+                    let want = l.host_find(rack, *k);
+                    if got != want {
+                        return ctx(format!("{got:?} != host {want:?}"));
+                    }
+                }
+                (BuiltScenario::LList(l), Query::Lookup(k)) => {
+                    let got = l.find(rack, *k).is_some();
+                    let want = plan.build.iter().any(|s| {
+                        matches!(s, BuildStep::Insert(key, _) if key == k)
+                    });
+                    if got != want {
+                        return ctx(format!("membership {got} != {want}"));
+                    }
+                }
+                (BuiltScenario::Hash(m), Query::Lookup(k)) => {
+                    let got = m.get(rack, *k);
+                    let want = model.get(k).copied();
+                    if got != want {
+                        return ctx(format!("{got:?} != {want:?}"));
+                    }
+                }
+                (BuiltScenario::HSet(s), Query::Lookup(k)) => {
+                    let got = s.contains(rack, *k);
+                    let want = model.contains_key(k);
+                    if got != want {
+                        return ctx(format!("membership {got} != {want}"));
+                    }
+                }
+                (BuiltScenario::Bi(b), Query::Lookup(k)) => {
+                    let (got, want) = if *k >= BIMAP_RIGHT_BASE {
+                        (
+                            b.get_by_right(rack, *k),
+                            model
+                                .iter()
+                                .find(|&(_, &v)| v == *k)
+                                .map(|(&l, _)| l),
+                        )
+                    } else {
+                        (b.get_by_left(rack, *k), model.get(k).copied())
+                    };
+                    if got != want {
+                        return ctx(format!("{got:?} != {want:?}"));
+                    }
+                }
+                (BuiltScenario::Bst(t), Query::Lookup(k)) => {
+                    let got = t.get(rack, *k);
+                    let want = model.get(k).copied();
+                    if got != want {
+                        return ctx(format!("{got:?} != {want:?}"));
+                    }
+                }
+                (BuiltScenario::Btree(t), Query::Lookup(k)) => {
+                    let got = t.get(rack, *k);
+                    let want = model.get(k).copied();
+                    if got != want {
+                        return ctx(format!("{got:?} != {want:?}"));
+                    }
+                }
+                (BuiltScenario::Bplus(t), Query::Lookup(k)) => {
+                    let got = t.get(rack, *k);
+                    let want = model.get(k).copied();
+                    if got != want {
+                        return ctx(format!("{got:?} != {want:?}"));
+                    }
+                }
+                (BuiltScenario::Bplus(t), Query::Scan(lo, len)) => {
+                    let got = t.scan(rack, *lo, *len);
+                    let want = scan_model(*lo, *len);
+                    if got != want {
+                        return ctx(format!("{got:?} != {want:?}"));
+                    }
+                }
+                (BuiltScenario::Skip(s), Query::Lookup(k)) => {
+                    let got = s.find(rack, *k);
+                    let want = model.get(k).copied();
+                    if got != want {
+                        return ctx(format!("{got:?} != {want:?}"));
+                    }
+                }
+                (BuiltScenario::Skip(s), Query::Scan(lo, len)) => {
+                    let got = s.scan(rack, *lo, *len);
+                    let want = scan_model(*lo, *len);
+                    if got != want {
+                        return ctx(format!("{got:?} != {want:?}"));
+                    }
+                }
+                (BuiltScenario::Trie(t), Query::Lookup(k)) => {
+                    let got = t.get(rack, *k);
+                    let want = model.get(k).copied();
+                    if got != want {
+                        return ctx(format!("{got:?} != {want:?}"));
+                    }
+                }
+                (BuiltScenario::Graph(g), Query::Khop(start, hops, draws)) => {
+                    let got = g.khop(rack, *start as usize, *hops, draws);
+                    let want =
+                        g.host_khop(rack, *start as usize, *hops, draws);
+                    if got != want {
+                        return ctx(format!("{got:?} != {want:?}"));
+                    }
+                }
+                _ => return ctx("query/structure mismatch".into()),
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,5 +729,52 @@ mod tests {
         let p = list_find_program();
         assert!(verify(&p).is_ok());
         assert_eq!(p.load_words, 3);
+    }
+
+    #[test]
+    fn structure_plans_are_deterministic() {
+        for kind in StructureKind::ALL {
+            let a = random_structure_ops(kind, 99, 50, 20);
+            let b = random_structure_ops(kind, 99, 50, 20);
+            assert_eq!(a.build, b.build, "{}", kind.name());
+            assert_eq!(a.queries, b.queries, "{}", kind.name());
+            assert_eq!(b.queries.len(), 20);
+        }
+    }
+
+    #[test]
+    fn every_scenario_builds_and_matches_its_reference() {
+        use crate::rack::RackConfig;
+        for kind in StructureKind::ALL {
+            let plan = random_structure_ops(kind, 7, 60, 15);
+            let mut rack = Rack::new(RackConfig::small(2));
+            let built = BuiltScenario::build(&plan, &mut rack);
+            let ops = built.ops(&plan);
+            assert_eq!(ops.len(), 15, "{}", kind.name());
+            built
+                .check_against_reference(&mut rack, &plan)
+                .unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn streamed_ops_are_read_only_or_repeat_bounded() {
+        // conformance precondition: streamed query ops never mutate the
+        // heap, so concurrent execution orders cannot diverge
+        for kind in StructureKind::ALL {
+            let plan = random_structure_ops(kind, 3, 40, 10);
+            let mut rack =
+                Rack::new(crate::rack::RackConfig::small(1));
+            let built = BuiltScenario::build(&plan, &mut rack);
+            for op in built.ops(&plan) {
+                for stage in &op.stages {
+                    assert!(
+                        !stage.iter.program.writes_data,
+                        "{} streams a mutating stage",
+                        kind.name()
+                    );
+                }
+            }
+        }
     }
 }

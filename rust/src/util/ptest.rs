@@ -6,12 +6,26 @@
 
 use super::prng::Rng;
 
-/// Run `cases` property evaluations. The property receives a fresh `Rng`
-/// seeded from (`seed`, case index) and returns `Err(msg)` on violation.
+/// Iteration-count multiplier for the randomized suites. CI's default
+/// job runs at 1× with pinned seeds; the nightly job exports
+/// `PULSE_TEST_SCALE=10` for a 10× deep soak (same seeds, more
+/// streams). Anything unparsable or < 1 falls back to 1.
+pub fn test_scale() -> u64 {
+    std::env::var("PULSE_TEST_SCALE")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or(1)
+}
+
+/// Run `cases` property evaluations (× [`test_scale`]). The property
+/// receives a fresh `Rng` seeded from (`seed`, case index) and returns
+/// `Err(msg)` on violation.
 pub fn run_prop<F>(name: &str, seed: u64, cases: u64, mut prop: F)
 where
     F: FnMut(&mut Rng) -> Result<(), String>,
 {
+    let cases = cases * test_scale();
     for case in 0..cases {
         let mut rng = Rng::with_stream(seed, case);
         if let Err(msg) = prop(&mut rng) {

@@ -1,0 +1,91 @@
+//! k-hop neighbor-walk workload over a directed graph: the request
+//! generator for the `ds::graph` scenario (bounded random walks with
+//! Zipf or uniform start vertices — social-graph style "friends of
+//! friends" queries).
+//!
+//! A query carries its per-hop neighbor draws, pre-sampled here on the
+//! host exactly like a real `init()` would: the accelerator program,
+//! the host reference walk, and every backend then replay the same
+//! neighbor sequence deterministically.
+
+use crate::ds::graph::MAX_HOPS;
+use crate::util::prng::Rng;
+use crate::util::zipf::KeyChooser;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KhopQuery {
+    /// Start vertex index (caller maps to a vertex address).
+    pub start: u64,
+    /// Walk length in hops (1..=max_hops).
+    pub hops: u32,
+    /// Non-negative per-hop draws, `hops` of them, indexed by
+    /// remaining-hop counter (draws[hops-1] picks the first edge).
+    pub draws: Vec<i64>,
+}
+
+pub struct GraphKhopWorkload {
+    chooser: KeyChooser,
+    rng: Rng,
+    max_hops: u32,
+}
+
+impl GraphKhopWorkload {
+    pub fn new(vertices: u64, max_hops: u32, zipfian: bool, seed: u64) -> Self {
+        assert!(max_hops >= 1 && max_hops as usize <= MAX_HOPS);
+        let chooser = if zipfian {
+            KeyChooser::scrambled_zipfian(vertices)
+        } else {
+            KeyChooser::uniform(vertices)
+        };
+        Self { chooser, rng: Rng::with_stream(seed, 0x6B09), max_hops }
+    }
+
+    pub fn next_query(&mut self) -> KhopQuery {
+        let start = self.chooser.next(&mut self.rng);
+        let hops = 1 + self.rng.below(self.max_hops as u64) as u32;
+        let draws = (0..hops)
+            .map(|_| (self.rng.next_u64() >> 1) as i64)
+            .collect();
+        KhopQuery { start, hops, draws }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queries_are_bounded_and_deterministic() {
+        let mut a = GraphKhopWorkload::new(10_000, 8, true, 42);
+        let mut b = GraphKhopWorkload::new(10_000, 8, true, 42);
+        for _ in 0..500 {
+            let qa = a.next_query();
+            assert_eq!(qa, b.next_query());
+            assert!(qa.start < 10_000);
+            assert!((1..=8).contains(&qa.hops));
+            assert_eq!(qa.draws.len(), qa.hops as usize);
+            assert!(qa.draws.iter().all(|&d| d >= 0));
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_diverge() {
+        let mut a = GraphKhopWorkload::new(1000, 6, false, 1);
+        let mut b = GraphKhopWorkload::new(1000, 6, false, 2);
+        let same = (0..100)
+            .filter(|_| a.next_query() == b.next_query())
+            .count();
+        assert!(same < 5, "{same} identical queries");
+    }
+
+    #[test]
+    fn zipf_skews_start_vertices() {
+        let mut w = GraphKhopWorkload::new(100_000, 4, true, 9);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..20_000 {
+            *counts.entry(w.next_query().start).or_insert(0usize) += 1;
+        }
+        let max = counts.values().max().copied().unwrap_or(0);
+        assert!(max > 100, "hottest start only {max} hits");
+    }
+}

@@ -1,10 +1,15 @@
 //! Workload generators (paper §6): YCSB A/B/C/E with Zipf or uniform
-//! key choosers, and a synthetic OpenµPMU-style time-series source for
+//! key choosers, a synthetic OpenµPMU-style time-series source for
 //! BTrDB (voltage / current / phase at 120 Hz; the real LBNL dataset is
-//! unavailable — see DESIGN.md §2 substitution table).
+//! unavailable — see DESIGN.md §2 substitution table), and the k-hop
+//! graph-walk generator for the `ds::graph` scenario. YCSB-E also
+//! drives the skip-list scan scenario (see `benches/scenarios.rs` and
+//! `pulse serve --app skiplist`).
 
+pub mod graph_khop;
 pub mod timeseries;
 pub mod ycsb;
 
+pub use graph_khop::{GraphKhopWorkload, KhopQuery};
 pub use timeseries::PmuSource;
 pub use ycsb::{YcsbOp, YcsbWorkload, YcsbSpec};

@@ -1,0 +1,203 @@
+//! Cross-backend differential conformance: the contract that makes
+//! scenario growth safe.
+//!
+//! For every one of the 16 registered traversal scenarios
+//! (`testgen::StructureKind::ALL`, old and new), one seeded op sequence
+//! is streamed through
+//!
+//! * the functional oracle (`Rack::run_op_functional`),
+//! * the rack DES as PULSE and as PULSE-ACC (`in_network_routing`
+//!   on/off), and
+//! * the live multi-threaded engine (`LiveBackend`) in both routing
+//!   modes, at 1 / 2 / 4 shards,
+//!
+//! asserting **bit-identical scratchpads** (oracle vs DES-functional vs
+//! live) and **identical op / iteration / crossing / trap counts**
+//! across every executor and both routing modes. Query streams are
+//! read-only by construction (`testgen` fuzzer invariant), so results
+//! cannot depend on concurrent scheduling.
+//!
+//! Nightly CI scales the stream lengths via `PULSE_TEST_SCALE` (see
+//! `util::ptest::test_scale`).
+
+use pulse::backend::TraversalBackend;
+use pulse::isa::SP_WORDS;
+use pulse::live::LiveBackend;
+use pulse::rack::{Rack, RackConfig, ServeReport};
+use pulse::testgen::{random_structure_ops, BuiltScenario, StructureKind};
+use pulse::util::ptest::test_scale;
+
+const CONC: usize = 8;
+const SEED: u64 = 0xC04F;
+
+fn cfg(shards: usize, in_network: bool) -> RackConfig {
+    RackConfig {
+        nodes: shards,
+        node_capacity: 64 << 20,
+        // small slabs: structures spread across shards, so the parity
+        // below is exercised through real cross-node traversal traffic
+        granularity: 4 << 10,
+        in_network_routing: in_network,
+        ..Default::default()
+    }
+}
+
+struct Counts {
+    completed: u64,
+    trapped: u64,
+    iters: u64,
+    crossings: u64,
+}
+
+impl Counts {
+    fn of(rep: &ServeReport) -> Self {
+        Self {
+            completed: rep.completed,
+            trapped: rep.trapped,
+            iters: rep.total_iters,
+            crossings: rep.cross_node_requests,
+        }
+    }
+}
+
+/// Stream one scenario through every executor at one shard count and
+/// assert full agreement. Returns the common counts for reporting.
+fn conform(kind: StructureKind, shards: usize) -> Counts {
+    let scale = test_scale() as usize;
+    let build_n = 300 * scale.min(4);
+    let query_n = 30 * scale;
+    let plan = random_structure_ops(kind, SEED, build_n, query_n);
+
+    // ground truth: the functional oracle on its own rack
+    let mut oracle = Rack::new(cfg(shards, true));
+    let ob = BuiltScenario::build(&plan, &mut oracle);
+    let ops = ob.ops(&plan);
+    let expected: Vec<[i64; SP_WORDS]> =
+        ops.iter().map(|op| oracle.run_op_functional(op)).collect();
+
+    let mut counts: Option<Counts> = None;
+    let mut check = |who: String, got: Counts| {
+        assert_eq!(
+            got.completed,
+            ops.len() as u64,
+            "{who}: lost ops ({} of {})",
+            got.completed,
+            ops.len()
+        );
+        assert_eq!(got.trapped, 0, "{who}: trapped traversals");
+        if let Some(base) = counts.as_ref() {
+            assert_eq!(
+                got.iters, base.iters,
+                "{who}: iteration count diverged"
+            );
+            assert_eq!(
+                got.crossings, base.crossings,
+                "{who}: crossing count diverged"
+            );
+        } else {
+            counts = Some(got);
+        }
+    };
+
+    for in_network in [true, false] {
+        let mode = if in_network { "PULSE" } else { "PULSE-ACC" };
+
+        // the rack DES
+        let mut des = Rack::new(cfg(shards, in_network));
+        let db = BuiltScenario::build(&plan, &mut des);
+        let des_ops = db.ops(&plan);
+        let rep = des.serve_batch(&des_ops, CONC);
+        check(
+            format!("{}/{shards} shards/DES {mode}", kind.name()),
+            Counts::of(&rep),
+        );
+        // the DES rack's functional substrate answers like the oracle
+        // (read-only streams leave the heap untouched by serving)
+        for (i, op) in des_ops.iter().enumerate() {
+            assert_eq!(
+                des.run_op_functional(op),
+                expected[i],
+                "{}/{shards} shards/DES {mode}: op {i} scratchpad",
+                kind.name()
+            );
+        }
+
+        // the live engine: real threads, same answers
+        let mut live = LiveBackend::new(Rack::new(cfg(shards, in_network)));
+        let lb = BuiltScenario::build(&plan, live.rack_mut());
+        let live_ops = lb.ops(&plan);
+        live.record_results(true);
+        let rep = live.serve_batch(&live_ops, CONC);
+        check(
+            format!("{}/{shards} shards/live {mode}", kind.name()),
+            Counts::of(&rep),
+        );
+        let got = live.last_results();
+        assert_eq!(got.len(), expected.len());
+        for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+            assert_eq!(
+                g, e,
+                "{}/{shards} shards/live {mode}: op {i} scratchpad",
+                kind.name()
+            );
+        }
+    }
+    counts.unwrap()
+}
+
+/// One test per scenario family keeps failures attributable and lets
+/// the harness parallelize the 16 × {1,2,4} matrix. `expect_cross`
+/// is false only for the hash family, whose chains co-locate with
+/// their bucket by design (paper §6.1) and therefore never cross.
+macro_rules! conformance_tests {
+    ($($test_name:ident => $kind:expr, $expect_cross:expr;)*) => {
+        $(
+            #[test]
+            fn $test_name() {
+                let mut crossed_anywhere = false;
+                for shards in [1usize, 2, 4] {
+                    let c = conform($kind, shards);
+                    if shards > 1 && c.crossings > 0 {
+                        crossed_anywhere = true;
+                    }
+                }
+                // the 4 KB slabs must have spread every multi-node
+                // layout; a scenario that never crosses shards is not
+                // testing distributed traversal at all
+                assert_eq!(
+                    crossed_anywhere,
+                    $expect_cross,
+                    "{}: cross-shard traffic expectation violated",
+                    $kind.name()
+                );
+            }
+        )*
+    };
+}
+
+conformance_tests! {
+    conform_forward_list => StructureKind::ForwardList, true;
+    conform_linked_list => StructureKind::LinkedList, true;
+    conform_hashmap => StructureKind::HashMap, false;
+    conform_hashset => StructureKind::HashSet, false;
+    conform_bimap => StructureKind::Bimap, false;
+    conform_bst_plain => StructureKind::BstPlain, true;
+    conform_bst_avl => StructureKind::BstAvl, true;
+    conform_bst_splay => StructureKind::BstSplay, true;
+    conform_bst_scapegoat => StructureKind::BstScapegoat, true;
+    conform_google_btree => StructureKind::GoogleBtree, true;
+    conform_bplustree_get => StructureKind::BPlusTreeGet, true;
+    conform_bplustree_scan => StructureKind::BPlusTreeScan, true;
+    conform_skiplist_find => StructureKind::SkipListFind, true;
+    conform_skiplist_scan => StructureKind::SkipListScan, true;
+    conform_radix_trie => StructureKind::RadixTrie, true;
+    conform_graph_khop => StructureKind::GraphKhop, true;
+}
+
+#[test]
+fn registry_covers_all_sixteen_scenarios() {
+    assert_eq!(StructureKind::ALL.len(), 16);
+    let names: std::collections::BTreeSet<_> =
+        StructureKind::ALL.iter().map(|k| k.name()).collect();
+    assert_eq!(names.len(), 16, "duplicate scenario names");
+}
