@@ -4,9 +4,12 @@
 //! generation (YCSB key choosing + op construction) moves out of the
 //! timed region, and the rack reuses its DES scratch (event queue,
 //! per-node slot tables, run map) across calls instead of reallocating
-//! per run. (Issue still clones each `Op` from the slice — the program
-//! is `Arc`-shared, so the clone is shallow; the measured win is
-//! generation + scratch reuse.) This bench measures both paths over
+//! per run. (On the rack DES, issue still clones each `Op` from the
+//! slice — the program is `Arc`-shared, so the clone is shallow; the
+//! measured win is generation + scratch reuse. The *live* engine's
+//! `serve_batch` goes further and issues ops by reference — its
+//! clone-vs-borrow before/after is recorded by
+//! `benches/live_throughput.rs`.) This bench measures both paths over
 //! the same YCSB-C workload and records the wall-clock serving rates +
 //! speedup in `bench_out/BENCH_backend_batch.json`.
 //!

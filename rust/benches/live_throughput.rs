@@ -121,6 +121,31 @@ fn main() -> std::io::Result<()> {
         LOADS.last().unwrap()
     );
 
+    // before/after of the serve_batch borrowing fast path: `serve`
+    // with a cloning generator over the same slice reproduces the old
+    // serve_batch behaviour (one Op::clone per issue inside the timed
+    // region); `serve_batch` now issues by reference. Both rates are
+    // recorded so the win is visible in every run's output.
+    let (clone_rate, borrow_rate) = {
+        let conc = *LOADS.last().unwrap();
+        let mut b =
+            LiveBackend::new(Rack::new(RackConfig::bench(4, 1 << 20)));
+        let ops = build_ops(b.rack_mut());
+        let (warm, timed) = ops.split_at(WARMUP as usize);
+        b.serve_batch(warm, conc);
+        let cloned =
+            b.serve(&mut |i| timed.get(i as usize).cloned(), conc);
+        b.serve_batch(warm, conc);
+        let borrowed = b.serve_batch(timed, conc);
+        assert_eq!(cloned.completed, borrowed.completed);
+        (cloned.tput_ops_per_s, borrowed.tput_ops_per_s)
+    };
+    println!(
+        "serve_batch issue path: clone-per-op {clone_rate:.0} ops/s vs \
+         borrow-from-slice {borrow_rate:.0} ops/s ({:.2}x)",
+        borrow_rate / clone_rate.max(1e-9)
+    );
+
     // DES reference on the same workload (virtual time; context only)
     let mut des = Rack::new(RackConfig::bench(4, 1 << 20));
     let des_ops = build_ops(&mut des);
@@ -150,6 +175,8 @@ fn main() -> std::io::Result<()> {
             .unwrap_or(0))
         .set("rows", rows)
         .set("scaling_1_to_4_shards", scaling)
+        .set("batch_issue_clone_ops_per_s", clone_rate)
+        .set("batch_issue_borrow_ops_per_s", borrow_rate)
         .set("des_reference_ops_per_s", rep.tput_ops_per_s);
     save_json("BENCH_live", &j)?;
     Ok(())

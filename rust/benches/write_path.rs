@@ -1,0 +1,135 @@
+//! Offloaded write path: YCSB-A (50% update) and YCSB-B (5% update)
+//! mixed read-write serving over the hash index, on the five compared
+//! systems (pulse, pulse-acc, live, cache, rpc).
+//!
+//! What each system pays per offloaded write:
+//!  * PULSE / PULSE-ACC / live — the dirty window streams back out of
+//!    the accelerator (2× streamed words in both the memory-pipeline
+//!    occupancy and the η offload estimate, `isa/cost.rs`), and
+//!    `mem_bytes` counts the write-back bytes;
+//!  * cache — write-through invalidation: every dirtied page is
+//!    flushed over the network and dropped from the LRU (the next read
+//!    refaults), the regime where caching fares worst (Maruf &
+//!    Chowdhury, *Memory Disaggregation: Advances and Open
+//!    Challenges*);
+//!  * rpc — the memory-node CPU applies the store locally; the RPC
+//!    model's per-op cost is unchanged (reads and writes cost one RPC
+//!    either way).
+//!
+//! The bench asserts the headline: pulse ops/s >= cache ops/s on the
+//! YCSB-A mix (the acceptance bar for the write path).
+//!
+//! Open-loop note: `serve_batch` on the live engine issues ops *by
+//! reference* since this PR (before: one `Op::clone` per issue inside
+//! the timed region); `benches/live_throughput.rs` records the
+//! clone-vs-borrow issue rates that quantify the before/after.
+//!
+//! Output: table + `bench_out/BENCH_write_path.json`.
+
+use pulse::backend::TraversalBackend;
+use pulse::bench_support::{
+    build_write_mix_ops, fmt_kops, fmt_us, make_backend, save_json, Table,
+    WriteMixSpec,
+};
+use pulse::rack::RackConfig;
+use pulse::util::json::Json;
+use pulse::workloads::YcsbSpec;
+
+const NODES: usize = 4;
+const GRANULARITY: u64 = 1 << 20;
+const OPS: u64 = 4_000;
+const CONC: usize = 32;
+
+const BACKENDS: [&str; 5] = ["pulse", "pulse-acc", "live", "cache", "rpc"];
+const MIXES: [(YcsbSpec, &str); 2] =
+    [(YcsbSpec::A, "ycsb-a"), (YcsbSpec::B, "ycsb-b")];
+
+fn main() -> std::io::Result<()> {
+    let spec = WriteMixSpec { ops: OPS, ..Default::default() };
+    let mut tbl = Table::new(
+        "offloaded write path: YCSB-A/B read-write mixes x five systems",
+        &[
+            "mix", "backend", "kops/s", "p50 us", "p95 us", "p99 us",
+            "iters/op", "mem MB", "traps",
+        ],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut tput: std::collections::BTreeMap<(String, String), f64> =
+        std::collections::BTreeMap::new();
+
+    for (mix, mix_name) in MIXES {
+        for kind in BACKENDS {
+            let mut backend =
+                make_backend(kind, RackConfig::bench(NODES, GRANULARITY));
+            let ops =
+                build_write_mix_ops(backend.rack_mut(), mix, &spec);
+            let rep = backend.serve_batch(&ops, CONC);
+            assert_eq!(rep.completed, OPS, "{mix_name}/{kind} lost ops");
+            assert_eq!(rep.trapped, 0, "{mix_name}/{kind} trapped");
+            let (p50, p95, p99) = rep.latency_percentiles();
+            let iters_per_op =
+                rep.total_iters as f64 / rep.completed as f64;
+            tbl.row(&[
+                mix_name.to_string(),
+                backend.name().to_string(),
+                fmt_kops(rep.tput_ops_per_s),
+                fmt_us(p50 as f64),
+                fmt_us(p95 as f64),
+                fmt_us(p99 as f64),
+                format!("{iters_per_op:.1}"),
+                format!("{:.2}", rep.mem_bytes as f64 / 1e6),
+                format!("{}", rep.trapped),
+            ]);
+            let mut row = Json::obj();
+            row.set("mix", mix_name)
+                .set("backend", backend.name())
+                .set("ops", rep.completed)
+                .set("ops_per_s", rep.tput_ops_per_s)
+                .set("p50_ns", p50)
+                .set("p95_ns", p95)
+                .set("p99_ns", p99)
+                .set("mean_ns", rep.latency.mean())
+                .set("iters_per_op", iters_per_op)
+                .set("mem_bytes", rep.mem_bytes)
+                .set("trapped", rep.trapped);
+            rows.push(row);
+            tput.insert(
+                (mix_name.to_string(), kind.to_string()),
+                rep.tput_ops_per_s,
+            );
+        }
+    }
+
+    tbl.print();
+    println!(
+        "\nnote: DES rows are virtual time, live rows wall clock, \
+         cache/rpc rows analytic models over real traces — compare \
+         shapes within a backend family, not columns across families. \
+         mem MB counts DRAM bytes served including dirty write-backs."
+    );
+
+    // the write-path acceptance bar
+    let pulse_a = tput[&("ycsb-a".to_string(), "pulse".to_string())];
+    let cache_a = tput[&("ycsb-a".to_string(), "cache".to_string())];
+    assert!(
+        pulse_a >= cache_a,
+        "write path regression: pulse {pulse_a:.0} ops/s < cache \
+         {cache_a:.0} ops/s on YCSB-A"
+    );
+    println!(
+        "YCSB-A: pulse {:.1} kops/s vs cache {:.1} kops/s (>= holds)",
+        pulse_a / 1e3,
+        cache_a / 1e3
+    );
+
+    let mut j = Json::obj();
+    j.set("bench", "write_path")
+        .set("nodes", NODES as u64)
+        .set("ops", OPS)
+        .set("conc", CONC as u64)
+        .set("keys", spec.keys)
+        .set("zipf", if spec.zipf { 1u64 } else { 0u64 })
+        .set("rows", rows);
+    save_json("BENCH_write_path", &j)?;
+    Ok(())
+}

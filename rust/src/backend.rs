@@ -57,6 +57,12 @@ fn trace_serve(
     let mut issued = 0u64;
     while let Some(op) = ops(issued) {
         issued += 1;
+        // same admission-time shape check as the DES and the live
+        // coordinator: malformed ops trap instead of panicking
+        if op.validate().is_err() {
+            report.record_admission_trap();
+            continue;
+        }
         let (_sp, trace) = trace_full_op(rack, &op);
         let lat = sanitize_latency_ns(per_op_latency_ns(&op, &trace));
         total_ns += lat;
@@ -228,19 +234,25 @@ impl TraversalBackend for CacheBackend {
         let wall_start = std::time::Instant::now();
         let Self { rack, sim, totals } = self;
         let mut total_pages = 0u64;
+        let mut total_writes = 0u64;
         let (mut report, total_ns) =
             trace_serve(rack, ops, &mut |op, trace| {
                 total_pages += trace.pages.len() as u64;
+                total_writes += trace.writes.len() as u64;
                 sim.op_latency_ns(trace, op.cpu_post_ns as f64) as f64
             });
         if report.completed > 0 {
             let mean_ns = total_ns / report.completed as f64;
             let pages_per_op =
                 total_pages as f64 / report.completed as f64;
+            let writes_per_op =
+                total_writes as f64 / report.completed as f64;
             // closed-loop concurrency bound vs the swap system's fault
-            // pipeline (what the paper's "swap system performance" caps)
+            // pipeline (what the paper's "swap system performance" caps;
+            // dirty-page invalidations occupy the same pipeline)
             let conc_bound = concurrency as f64 / (mean_ns / 1e9);
-            let fault_bound = sim.tput_bound_ops_per_s(pages_per_op);
+            let fault_bound =
+                sim.tput_bound_ops_per_s(pages_per_op, writes_per_op);
             report.tput_ops_per_s = conc_bound.min(fault_bound).max(1e-9);
             report.makespan_ns = (report.completed as f64
                 / report.tput_ops_per_s

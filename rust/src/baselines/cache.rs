@@ -18,10 +18,14 @@ use crate::sim::{LatencyModel, Ns};
 pub const PAGE: u64 = 4096;
 
 /// Address-level trace of one logical op: the page of every iteration's
-/// aggregated load + bulk-read pages.
+/// aggregated load + bulk-read pages, plus the pages dirtied by
+/// mutating traversals.
 #[derive(Debug, Clone, Default)]
 pub struct TraceStats {
     pub pages: Vec<GAddr>,
+    /// Pages written by mutating iterations (`writes_data` programs) —
+    /// the swap cache pays invalidation + write-back for each.
+    pub writes: Vec<GAddr>,
     pub iters: u32,
     pub crossings: u32,
     /// The traversal followed a pointer into unmapped memory (the rack
@@ -58,13 +62,26 @@ pub fn trace_op(
             t.crossings += 1;
             last_node = node;
         }
-        rack.read_words(cur, &mut buf);
+        if rack.try_read_words(cur, &mut buf).is_err() {
+            t.trapped = true;
+            break;
+        }
         ws.regs = [0; NREG];
         ws.set_cur_ptr(cur);
         ws.data[..words].copy_from_slice(&buf);
         ws.data[words..].iter_mut().for_each(|w| *w = 0);
         let pass = logic_pass(&iter.program, &mut ws);
         t.iters += 1;
+        // mutating traversals really apply their stores: the baselines
+        // share the functional heap with every other backend, so a
+        // YCSB update must be visible to later reads here too
+        if iter.program.writes_data {
+            if rack.try_write_words(cur, &ws.data[..words]).is_err() {
+                t.trapped = true;
+                break;
+            }
+            t.writes.push(cur / PAGE);
+        }
         match pass.status {
             Status::NextIter => cur = ws.cur_ptr(),
             Status::Return => break,
@@ -116,6 +133,7 @@ pub fn trace_full_op(
                 stage.object_read_bytes as u64,
             );
             total.pages.extend_from_slice(&t.pages);
+            total.writes.extend_from_slice(&t.writes);
             total.iters += t.iters;
             total.crossings += t.crossings;
             if t.trapped {
@@ -141,6 +159,11 @@ pub struct CachedSwapSim {
     lat: LatencyModel,
     pub hits: u64,
     pub faults: u64,
+    /// Writes that invalidated + flushed a page (write-heavy caching's
+    /// dominant cost — see *Memory Disaggregation: Advances and Open
+    /// Challenges*: invalidation traffic is what makes caches fare
+    /// worst under mutation).
+    pub invalidations: u64,
     /// Max outstanding faults the swap path sustains (Fastswap-like
     /// kernel swap has limited async depth; this is what caps
     /// throughput at the "swap system performance" the paper cites).
@@ -156,8 +179,24 @@ impl CachedSwapSim {
             lat: LatencyModel::default(),
             hits: 0,
             faults: 0,
+            invalidations: 0,
             fault_depth: 2,
         }
+    }
+
+    /// A traversal mutated `page` on the memory side: the swap cache
+    /// must write the dirty line through to the memory node and drop
+    /// its cached copy (next read refaults). Returns the charged
+    /// latency: kernel bookkeeping + one 4 KB flush over the network.
+    pub fn invalidate(&mut self, page: GAddr) -> Ns {
+        self.invalidations += 1;
+        self.lru.remove(&page);
+        self.inval_ns()
+    }
+
+    /// Cost of one invalidation: kernel path + the dirty-page flush.
+    pub fn inval_ns(&self) -> Ns {
+        self.lat.pagefault_sw_ns as Ns + self.lat.one_way_ns(PAGE as usize)
     }
 
     /// Touch a page; returns true on hit.
@@ -198,7 +237,8 @@ impl CachedSwapSim {
         }
     }
 
-    /// Per-op latency for a traced op (hit = L3/DRAM-ish, miss = fault).
+    /// Per-op latency for a traced op (hit = L3/DRAM-ish, miss = fault;
+    /// every dirtied page additionally pays invalidation + flush).
     pub fn op_latency_ns(&mut self, trace: &TraceStats, cpu_post_ns: f64) -> Ns {
         let mut t = 0u64;
         for &p in &trace.pages {
@@ -208,25 +248,34 @@ impl CachedSwapSim {
                 t += self.fault_ns();
             }
         }
+        for &p in &trace.writes {
+            t += self.invalidate(p);
+        }
         t + cpu_post_ns as Ns
     }
 
     /// Saturation throughput of the swap pipeline, ops/s, for a miss
-    /// rate measured over the run.
-    pub fn tput_bound_ops_per_s(&self, pages_per_op: f64) -> f64 {
+    /// rate measured over the run. Dirty-page invalidations occupy the
+    /// same kernel fault/flush pipeline, so write-heavy mixes bound
+    /// lower even at high hit rates.
+    pub fn tput_bound_ops_per_s(
+        &self,
+        pages_per_op: f64,
+        writes_per_op: f64,
+    ) -> f64 {
         let total = self.hits + self.faults;
         if total == 0 {
             return 0.0;
         }
         let miss = self.faults as f64 / total as f64;
         let faults_per_op = pages_per_op * miss;
-        if faults_per_op < 1e-9 {
-            return 1e9; // fully cached: CPU-bound elsewhere
+        // pipeline time one op consumes: faults + dirty flushes
+        let ns_per_op = faults_per_op * self.fault_ns() as f64
+            + writes_per_op * self.inval_ns() as f64;
+        if ns_per_op < 1e-9 {
+            return 1e9; // fully cached, read-only: CPU-bound elsewhere
         }
-        // fault pipeline: `fault_depth` outstanding, fault_ns each
-        let faults_per_s =
-            self.fault_depth as f64 / (self.fault_ns() as f64 / 1e9);
-        faults_per_s / faults_per_op
+        self.fault_depth as f64 / (ns_per_op / 1e9)
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -313,14 +362,56 @@ mod tests {
         for p in 0..1000u64 {
             sim.access(p + 1_000_000);
         }
-        let t_allmiss = sim.tput_bound_ops_per_s(10.0);
+        let t_allmiss = sim.tput_bound_ops_per_s(10.0, 0.0);
         let mut sim2 = CachedSwapSim::new(1 << 30);
         for _ in 0..10 {
             for p in 0..100u64 {
                 sim2.access(p);
             }
         }
-        let t_mosthit = sim2.tput_bound_ops_per_s(10.0);
+        let t_mosthit = sim2.tput_bound_ops_per_s(10.0, 0.0);
         assert!(t_mosthit > 5.0 * t_allmiss, "{t_mosthit} vs {t_allmiss}");
+    }
+
+    #[test]
+    fn invalidation_evicts_and_charges_flush() {
+        let mut sim = CachedSwapSim::new(1 << 20);
+        assert!(!sim.access(42)); // fault it in
+        assert!(sim.access(42)); // now cached
+        let t = sim.invalidate(42);
+        assert!(t > 5_000, "flush should cost microseconds, got {t}");
+        assert_eq!(sim.invalidations, 1);
+        assert!(!sim.access(42), "invalidated page must refault");
+    }
+
+    #[test]
+    fn writes_lower_the_throughput_bound() {
+        let mut sim = CachedSwapSim::new(1 << 20);
+        for p in 0..1000u64 {
+            sim.access(p);
+        }
+        let read_only = sim.tput_bound_ops_per_s(3.0, 0.0);
+        let write_heavy = sim.tput_bound_ops_per_s(3.0, 2.0);
+        assert!(
+            write_heavy < read_only,
+            "{write_heavy} !< {read_only}"
+        );
+    }
+
+    #[test]
+    fn mutating_trace_applies_stores_and_records_dirty_pages() {
+        let mut r = rack();
+        let mut m = HashMapDs::build(&mut r, 8);
+        for i in 0..50 {
+            m.insert(&mut r, i, 1);
+        }
+        let upd = crate::ds::hashmap::chain_update_iter();
+        let mut sp = [0i64; SP_WORDS];
+        sp[0] = 7; // key
+        sp[1] = 999; // new value
+        let (out, t) = trace_op(&mut r, &upd, m.bucket_ptr(7), sp, 0);
+        assert_ne!(out[2], i64::MAX, "key 7 must be found");
+        assert_eq!(t.writes.len(), t.iters as usize);
+        assert_eq!(m.host_get(&mut r, 7), Some(999), "store not applied");
     }
 }

@@ -16,7 +16,7 @@ use std::path::{Path, PathBuf};
 use crate::apps::{BtrDbApp, WebServiceApp, WiredTigerApp};
 use crate::backend::{CacheBackend, RpcBackend, TraversalBackend};
 use crate::baselines::{RpcKind, WorkloadStats};
-use crate::ds::{AdjGraph, RadixTrie, SkipList};
+use crate::ds::{AdjGraph, HashMapDs, RadixTrie, SkipList};
 use crate::live::LiveBackend;
 use crate::rack::{Op, Rack, RackConfig, ServeReport};
 use crate::util::json::Json;
@@ -265,6 +265,53 @@ pub fn build_scenario_ops(
         }
         other => panic!("unknown scenario workload {other:?}"),
     }
+}
+
+/// Parameters of the YCSB-A/B mixed read-write workload over the hash
+/// index (the offloaded write path's bench workload).
+#[derive(Debug, Clone, Copy)]
+pub struct WriteMixSpec {
+    pub keys: u64,
+    pub ops: u64,
+    pub zipf: bool,
+    pub seed: u64,
+}
+
+impl Default for WriteMixSpec {
+    fn default() -> Self {
+        Self { keys: 20_000, ops: 4_000, zipf: true, seed: 42 }
+    }
+}
+
+/// Build the hash index on `rack` and materialize one deterministic
+/// YCSB-A (50% update) or YCSB-B (5% update) op stream over it. Reads
+/// are offloaded chain finds; updates are offloaded put-on-existing-key
+/// programs that overwrite the value through the dirty write-back path.
+/// One definition shared by `benches/write_path.rs` and
+/// `pulse serve --mix a|b`, so the CLI serves exactly the stream
+/// `BENCH_write_path.json` reports.
+pub fn build_write_mix_ops(
+    rack: &mut Rack,
+    mix: YcsbSpec,
+    spec: &WriteMixSpec,
+) -> Vec<Op> {
+    let keys = spec.keys.max(1);
+    let mut m = HashMapDs::build(rack, (keys as usize / 8).max(64));
+    for k in 0..keys as i64 {
+        m.insert(rack, k, k * 3);
+    }
+    let mut w = YcsbWorkload::new(mix, keys, spec.zipf, spec.seed ^ 5);
+    let mut vals = Rng::with_stream(spec.seed, 0x3217E);
+    (0..spec.ops)
+        .map(|_| match w.next_op() {
+            YcsbOp::Update(k) => {
+                m.update_op((k % keys) as i64, vals.next_i64() >> 8)
+            }
+            YcsbOp::Read(k)
+            | YcsbOp::Insert(k)
+            | YcsbOp::Scan(k, _) => m.find_op((k % keys) as i64),
+        })
+        .collect()
 }
 
 /// App handle bundling the built application with its op stream maker.

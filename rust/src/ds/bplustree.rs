@@ -77,6 +77,42 @@ pub fn get_iter() -> CompiledIter {
     b.finish().expect("bplus get")
 }
 
+/// Mutating point update: identical descend to [`get_iter`], but on an
+/// exact leaf match the new value (sp[RESULT] on entry) is stored into
+/// the leaf's value slot via the dirty write-back path. Internal-node
+/// iterations write back unmodified windows — the honest cost of a
+/// program-level `writes_data` flag, exactly what the cost model's 2×
+/// streamed-words term charges.
+pub fn update_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let needle = b.sp(SP_KEY);
+    let idx = emit_key_scan(&mut b, needle);
+    let tag = b.field(0);
+    let one = b.imm(1);
+    b.if_ne(tag, one, |b| {
+        // internal: descend into children[idx]
+        let child = b.field_dyn(idx, VALS, NODE_WORDS as u32 - 1);
+        b.advance(child);
+    });
+    // leaf: exact match at idx-1 overwrites values[idx-1]
+    let zero = b.imm(0);
+    b.if_ne(idx, zero, |b| {
+        let im1 = b.addi(idx, -1);
+        let k = b.field_dyn(im1, KEYS, 8);
+        b.if_eq(k, needle, |b| {
+            let newv = b.sp(SP_RESULT);
+            b.store_field_dyn(im1, VALS, 15, newv);
+            let z = b.imm(0);
+            b.sp_store(SP_FLAG, z);
+            b.ret();
+        });
+    });
+    let nf = b.imm(KEY_NOT_FOUND);
+    b.sp_store(SP_FLAG, nf);
+    b.ret();
+    b.finish().expect("bplus update")
+}
+
 /// Descend-only: sp[RESULT] = covering leaf address.
 pub fn locate_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
@@ -198,6 +234,7 @@ pub struct BPlusTree {
     locate_p: Arc<CompiledIter>,
     scan_p: Arc<CompiledIter>,
     sum_p: Arc<CompiledIter>,
+    update_p: Arc<CompiledIter>,
 }
 
 impl BPlusTree {
@@ -264,6 +301,7 @@ impl BPlusTree {
             locate_p: Arc::new(locate_iter()),
             scan_p: Arc::new(scan_iter()),
             sum_p: Arc::new(sum_iter()),
+            update_p: Arc::new(update_iter()),
         }
     }
 
@@ -281,6 +319,27 @@ impl BPlusTree {
 
     pub fn sum_program(&self) -> Arc<CompiledIter> {
         self.sum_p.clone()
+    }
+
+    pub fn update_program(&self) -> Arc<CompiledIter> {
+        self.update_p.clone()
+    }
+
+    /// The streamed offloaded in-place value update for one key.
+    pub fn update_op(&self, key: i64, value: i64) -> Op {
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = key;
+        sp[SP_RESULT as usize] = value;
+        Op::new(self.update_p.clone(), self.root, sp)
+    }
+
+    /// Offloaded in-place value update; false if the key is absent.
+    pub fn update(&self, rack: &mut Rack, key: i64, value: i64) -> bool {
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = key;
+        sp[SP_RESULT as usize] = value;
+        let (_st, sp, _) = rack.traverse(&self.update_p, self.root, sp);
+        sp[SP_FLAG as usize] != KEY_NOT_FOUND
     }
 
     /// Two-stage YCSB-E scan op: locate the covering leaf, then stream
@@ -413,6 +472,61 @@ impl BPlusTree {
         }
     }
 
+    /// Full host read-back of the leaf chain's (key, value) pairs —
+    /// the canonical final state for mixed read-write conformance.
+    pub fn host_items(&self, rack: &mut Rack) -> Vec<(i64, i64)> {
+        let mut out = Vec::with_capacity(self.len);
+        let mut cur = self.first_leaf;
+        let mut leaves = 0usize;
+        while cur != 0 {
+            let mut node = [0i64; NODE_WORDS];
+            rack.read_words(cur, &mut node);
+            for j in 0..FANOUT {
+                let k = node[KEYS as usize + j];
+                if k != i64::MAX {
+                    out.push((k, node[VALS as usize + j]));
+                }
+            }
+            cur = node[NEXT as usize] as GAddr;
+            leaves += 1;
+            assert!(leaves <= self.len + 1, "leaf chain cycle");
+        }
+        out
+    }
+
+    /// Structural invariants after a (possibly concurrent) mutation
+    /// stream: the leaf chain is acyclic, every leaf is tagged as a
+    /// leaf with MAX-padding only at its tail, keys are strictly
+    /// increasing across the whole chain, and the entry count matches
+    /// `len` (in-place value updates never move keys).
+    pub fn check_invariants(&self, rack: &mut Rack) {
+        let mut cur = self.first_leaf;
+        let mut prev_key = i64::MIN;
+        let mut total = 0usize;
+        let mut leaves = 0usize;
+        while cur != 0 {
+            let mut node = [0i64; NODE_WORDS];
+            rack.read_words(cur, &mut node);
+            assert_eq!(node[0], 1, "non-leaf on the leaf chain");
+            let mut padded = false;
+            for j in 0..FANOUT {
+                let k = node[KEYS as usize + j];
+                if k == i64::MAX {
+                    padded = true;
+                    continue;
+                }
+                assert!(!padded, "key after MAX padding in a leaf");
+                assert!(k > prev_key, "leaf keys not increasing at {k}");
+                prev_key = k;
+                total += 1;
+            }
+            cur = node[NEXT as usize] as GAddr;
+            leaves += 1;
+            assert!(leaves <= self.len + 1, "leaf chain cycle");
+        }
+        assert_eq!(total, self.len, "entry count drifted");
+    }
+
     /// Host reference range sum.
     pub fn host_sum_range(&self, rack: &mut Rack, lo: i64, hi: i64) -> i64 {
         let mut cur = self.first_leaf;
@@ -529,12 +643,34 @@ mod tests {
     }
 
     #[test]
+    fn offloaded_update_rewrites_leaf_value_in_place() {
+        let mut r = rack();
+        let t = tree(&mut r, 500); // keys 0,2,..,998 -> values i*20
+        assert!(t.update(&mut r, 100, -7));
+        assert_eq!(t.get(&mut r, 100), Some(-7));
+        assert_eq!(t.host_get(&mut r, 100), Some(-7));
+        // absent keys: no write, reported not-found
+        assert!(!t.update(&mut r, 101, 1));
+        assert_eq!(t.get(&mut r, 101), None);
+        t.check_invariants(&mut r);
+        // streamed form through the functional path
+        let op = t.update_op(200, 4242);
+        r.run_op_functional(&op);
+        assert_eq!(t.host_get(&mut r, 200), Some(4242));
+        let items = t.host_items(&mut r);
+        assert_eq!(items.len(), 500);
+        assert!(items.contains(&(200, 4242)));
+        t.check_invariants(&mut r);
+    }
+
+    #[test]
     fn programs_offloadable_at_paper_ratios() {
         for (name, it) in [
             ("get", get_iter()),
             ("locate", locate_iter()),
             ("scan", scan_iter()),
             ("sum", sum_iter()),
+            ("update", update_iter()),
         ] {
             assert!(
                 it.offloadable(0.75),

@@ -7,13 +7,14 @@
 //! sentinel's address; the offloaded program then walks the sentinel +
 //! chain uniformly. This mirrors `bucket_ptr(hash(key))` in Listing 3.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use super::{KEY_NOT_FOUND, SP_FLAG, SP_KEY, SP_RESULT};
 use crate::compiler::{CompiledIter, IterBuilder};
 use crate::isa::SP_WORDS;
 use crate::mem::GAddr;
-use crate::rack::Rack;
+use crate::rack::{Op, Rack};
 use crate::util::zipf::fnv1a_64;
 
 /// Sentinel key no application key may use.
@@ -121,9 +122,31 @@ impl HashMapDs {
     /// `init()`: CPU-side start-pointer computation (paper §3).
     pub fn bucket_ptr(&self, key: i64) -> GAddr {
         let h = (fnv1a_64(key as u64) % self.buckets as u64) as usize;
+        self.bucket_addr(h)
+    }
+
+    /// Sentinel address of bucket index `h` (invariant walker).
+    pub fn bucket_addr(&self, h: usize) -> GAddr {
         let shard = h / self.per_node;
         let slot = h % self.per_node;
         self.shard_bases[shard] + (slot * NODE_WORDS * 8) as u64
+    }
+
+    /// The streamed lookup op for one key.
+    pub fn find_op(&self, key: i64) -> Op {
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = key;
+        Op::new(self.find.clone(), self.bucket_ptr(key), sp)
+    }
+
+    /// The streamed offloaded put-on-existing-key op (YCSB update):
+    /// walks the bucket chain and overwrites the value in place via the
+    /// dirty write-back path.
+    pub fn update_op(&self, key: i64, value: i64) -> Op {
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = key;
+        sp[SP_RESULT as usize] = value;
+        Op::new(self.update.clone(), self.bucket_ptr(key), sp)
     }
 
     /// Host-path insert (new nodes are pushed at the chain head, after
@@ -190,6 +213,64 @@ impl HashMapDs {
             }
             cur = node[2] as GAddr;
         }
+    }
+
+    /// Full host read-back of every (key, value) pair — the canonical
+    /// final state the mixed read-write conformance suite compares
+    /// across backends.
+    pub fn host_items(&self, rack: &mut Rack) -> BTreeMap<i64, i64> {
+        let mut out = BTreeMap::new();
+        for h in 0..self.buckets {
+            let mut cur = self.bucket_addr(h);
+            let mut hops = 0usize;
+            loop {
+                let mut node = [0i64; NODE_WORDS];
+                rack.read_words(cur, &mut node);
+                if node[0] != SENTINEL {
+                    out.insert(node[0], node[1]);
+                }
+                if node[2] == 0 {
+                    break;
+                }
+                cur = node[2] as GAddr;
+                hops += 1;
+                assert!(hops <= self.len + 1, "bucket {h} chain cycle");
+            }
+        }
+        out
+    }
+
+    /// Structural invariants after a (possibly concurrent) mutation
+    /// stream: every bucket starts at an intact sentinel, every chain
+    /// is acyclic, every chained key hashes to its bucket, and the
+    /// total entry count matches `len` (offloaded updates overwrite in
+    /// place — they never add or drop nodes).
+    pub fn check_invariants(&self, rack: &mut Rack) {
+        let mut total = 0usize;
+        for h in 0..self.buckets {
+            let bucket = self.bucket_addr(h);
+            let mut sent = [0i64; NODE_WORDS];
+            rack.read_words(bucket, &mut sent);
+            assert_eq!(sent[0], SENTINEL, "bucket {h} sentinel clobbered");
+            let mut cur = sent[2] as GAddr;
+            let mut hops = 0usize;
+            while cur != 0 {
+                let mut node = [0i64; NODE_WORDS];
+                rack.read_words(cur, &mut node);
+                assert_ne!(node[0], SENTINEL, "sentinel mid-chain");
+                assert_eq!(
+                    self.bucket_ptr(node[0]),
+                    bucket,
+                    "key {} chained into the wrong bucket {h}",
+                    node[0]
+                );
+                total += 1;
+                hops += 1;
+                assert!(hops <= self.len + 1, "bucket {h} chain cycle");
+                cur = node[2] as GAddr;
+            }
+        }
+        assert_eq!(total, self.len, "entry count drifted");
     }
 }
 
@@ -290,6 +371,28 @@ mod tests {
         assert!(m.update(&mut r, 7, 42));
         assert_eq!(m.host_get(&mut r, 7), Some(42));
         assert!(!m.update(&mut r, 8, 9));
+    }
+
+    #[test]
+    fn host_items_and_invariants_track_updates() {
+        let mut r = rack();
+        let mut m = HashMapDs::build(&mut r, 8);
+        for i in 0..60 {
+            m.insert(&mut r, i, i);
+        }
+        m.check_invariants(&mut r);
+        // streamed update ops through the functional path
+        for i in (0..60).step_by(3) {
+            let op = m.update_op(i, 1000 + i);
+            r.run_op_functional(&op);
+        }
+        m.check_invariants(&mut r);
+        let items = m.host_items(&mut r);
+        assert_eq!(items.len(), 60);
+        for i in 0..60 {
+            let want = if i % 3 == 0 { 1000 + i } else { i };
+            assert_eq!(items.get(&i), Some(&want), "key {i}");
+        }
     }
 
     #[test]

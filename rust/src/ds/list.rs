@@ -11,18 +11,28 @@
 
 use std::sync::Arc;
 
-use super::{KEY_NOT_FOUND, SP_ACC_CNT, SP_ACC_SUM, SP_FLAG, SP_KEY, SP_RESULT};
+use super::{KEY_NOT_FOUND, SP_ACC_CNT, SP_ACC_SUM, SP_CURSOR, SP_FLAG, SP_KEY, SP_RESULT};
 use crate::compiler::{CompiledIter, IterBuilder};
-use crate::isa::SP_WORDS;
+use crate::isa::{Status, SP_WORDS};
 use crate::mem::GAddr;
-use crate::rack::Rack;
+use crate::rack::{Op, Rack};
+
+/// Value stored in the sentinel head node (`with_sentinel` lists); no
+/// application value may use it, so `find` walks through the sentinel.
+pub const SENTINEL_VAL: i64 = i64::MIN;
 
 pub struct ForwardList {
     pub head: GAddr,
     tail: GAddr,
+    /// Sentinel head node (0 = classic head-pointer list). The sentinel
+    /// is what makes *offloaded* `push_front` expressible: the list
+    /// head becomes a word in rack memory the accelerator can CAS-less
+    /// rewrite, instead of host-side state.
+    sentinel: GAddr,
     pub len: usize,
     find: Arc<CompiledIter>,
     sum: Arc<CompiledIter>,
+    push_front: Arc<CompiledIter>,
 }
 
 pub struct LinkedList {
@@ -54,6 +64,41 @@ pub fn find_iter() -> CompiledIter {
     b.finish().expect("list find iterator")
 }
 
+/// Offloaded `push_front` for sentinel-headed lists: the host
+/// pre-allocates and fills the node (`[value, 0]`) and hands its
+/// address in through the scratchpad; the accelerator links it in with
+/// two mutating iterations, each writing back its own window:
+///
+///   iter 1 (at the sentinel): carry old `sentinel.next` into
+///     sp[RESULT], store the new node as `sentinel.next`, flip the
+///     phase bit (sp[CURSOR]), advance into the new node;
+///   iter 2 (at the new node): store the carried old head as
+///     `node.next`, done.
+///
+/// The sentinel iteration is the linearization point: once shard-side
+/// execution serializes iter 1, concurrent pushes to one list produce
+/// a valid chain in that serialization order (see the write-path notes
+/// in `rack/README.md`).
+pub fn push_front_iter() -> CompiledIter {
+    let mut b = IterBuilder::new();
+    let phase = b.sp(SP_CURSOR);
+    let one = b.imm(1);
+    b.if_eq(phase, one, |b| {
+        // second iteration: we *are* the new node; link to old head
+        let old = b.sp(SP_RESULT);
+        b.store_field(1, old);
+        b.ret();
+    });
+    // first iteration: at the sentinel
+    let old = b.field(1);
+    let newn = b.sp(SP_KEY);
+    b.store_field(1, newn);
+    b.sp_store(SP_RESULT, old);
+    b.sp_store(SP_CURSOR, one);
+    b.advance(newn);
+    b.finish().expect("list push_front iterator")
+}
+
 /// Stateful aggregation along the chain (traversal-length study,
 /// Appendix C.2): sp[SUM] += value, sp[CNT] += 1.
 pub fn sum_iter() -> CompiledIter {
@@ -77,10 +122,27 @@ impl ForwardList {
         Self {
             head: 0,
             tail: 0,
+            sentinel: 0,
             len: 0,
             find: Arc::new(find_iter()),
             sum: Arc::new(sum_iter()),
+            push_front: Arc::new(push_front_iter()),
         }
+    }
+
+    /// A sentinel-headed list: `head` points at a permanent
+    /// `[SENTINEL_VAL, next]` node in rack memory, which is what the
+    /// offloaded `push_front` program rewrites. `find` still works
+    /// unchanged (the sentinel value never matches); `sum` skips the
+    /// sentinel.
+    pub fn with_sentinel(rack: &mut Rack) -> Self {
+        let mut l = Self::new();
+        let s = rack.alloc(16);
+        rack.write_words(s, &[SENTINEL_VAL, 0]);
+        l.head = s;
+        l.tail = s;
+        l.sentinel = s;
+        l
     }
 
     pub fn find_program(&self) -> Arc<CompiledIter> {
@@ -89,6 +151,94 @@ impl ForwardList {
 
     pub fn sum_program(&self) -> Arc<CompiledIter> {
         self.sum.clone()
+    }
+
+    pub fn push_front_program(&self) -> Arc<CompiledIter> {
+        self.push_front.clone()
+    }
+
+    pub fn sentinel(&self) -> GAddr {
+        self.sentinel
+    }
+
+    /// First value-carrying node (skips the sentinel if present).
+    fn first_value_node(&self, rack: &mut Rack) -> GAddr {
+        if self.sentinel == 0 {
+            return self.head;
+        }
+        let mut s = [0i64; 2];
+        rack.read_words(self.sentinel, &mut s);
+        s[1] as GAddr
+    }
+
+    /// Host-side pre-allocation for one offloaded `push_front`: the
+    /// node is filled (`[value, next=0]`) but not yet linked. Streamed
+    /// mutation plans allocate all their nodes up front so every
+    /// backend sees an identical heap layout.
+    pub fn prealloc_node(&self, rack: &mut Rack, value: i64) -> GAddr {
+        let addr = rack.alloc(16);
+        rack.write_words(addr, &[value, 0]);
+        addr
+    }
+
+    /// The streamed op for one offloaded push of a pre-allocated node.
+    pub fn push_front_op(&self, node: GAddr) -> Op {
+        assert_ne!(self.sentinel, 0, "push_front needs a sentinel list");
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = node as i64;
+        Op::new(self.push_front.clone(), self.sentinel, sp)
+    }
+
+    /// Offloaded push_front (prealloc + traverse); returns the node.
+    pub fn push_front(&mut self, rack: &mut Rack, value: i64) -> GAddr {
+        assert_ne!(self.sentinel, 0, "push_front needs a sentinel list");
+        let node = self.prealloc_node(rack, value);
+        let mut sp = [0i64; SP_WORDS];
+        sp[SP_KEY as usize] = node as i64;
+        let (st, _sp, _) = rack.traverse(&self.push_front, self.sentinel, sp);
+        assert_eq!(st, Status::Return, "push_front trapped");
+        self.len += 1;
+        node
+    }
+
+    /// Host walk of all values in chain order (sentinel excluded).
+    /// Panics on a cycle (bounded walk) — corruption, not a miss.
+    pub fn host_values(&self, rack: &mut Rack) -> Vec<i64> {
+        let mut out = Vec::new();
+        let mut cur = self.first_value_node(rack);
+        while cur != 0 {
+            let mut node = [0i64; 2];
+            rack.read_words(cur, &mut node);
+            out.push(node[0]);
+            cur = node[1] as GAddr;
+            assert!(out.len() <= 1 << 22, "list chain cycle");
+        }
+        out
+    }
+
+    /// Structural invariants after a (possibly concurrent) mutation
+    /// stream: the sentinel is intact, the chain is acyclic, and it
+    /// carries exactly `expected_len` value nodes.
+    pub fn check_invariants(&self, rack: &mut Rack, expected_len: usize) {
+        if self.sentinel != 0 {
+            let mut s = [0i64; 2];
+            rack.read_words(self.sentinel, &mut s);
+            assert_eq!(s[0], SENTINEL_VAL, "sentinel value clobbered");
+        }
+        let mut cur = self.first_value_node(rack);
+        let mut n = 0usize;
+        while cur != 0 {
+            assert!(
+                n <= expected_len,
+                "chain longer than {expected_len} nodes (cycle?)"
+            );
+            let mut node = [0i64; 2];
+            rack.read_words(cur, &mut node);
+            assert_ne!(node[0], SENTINEL_VAL, "sentinel linked mid-chain");
+            cur = node[1] as GAddr;
+            n += 1;
+        }
+        assert_eq!(n, expected_len, "chain length mismatch");
     }
 
     /// push_back (host path).
@@ -123,13 +273,15 @@ impl ForwardList {
         }
     }
 
-    /// Offloaded whole-list sum; returns (sum, count).
+    /// Offloaded whole-list sum; returns (sum, count). On sentinel
+    /// lists the aggregation starts at the first value node.
     pub fn sum(&self, rack: &mut Rack) -> (i64, i64) {
-        if self.head == 0 {
+        let start = self.first_value_node(rack);
+        if start == 0 {
             return (0, 0);
         }
         let sp = [0i64; SP_WORDS];
-        let (_st, sp, _iters) = rack.traverse(&self.sum, self.head, sp);
+        let (_st, sp, _iters) = rack.traverse(&self.sum, start, sp);
         (sp[SP_ACC_SUM as usize], sp[SP_ACC_CNT as usize])
     }
 
@@ -289,5 +441,53 @@ mod tests {
     fn programs_are_offloadable() {
         assert!(find_iter().offloadable(0.75));
         assert!(sum_iter().offloadable(0.75));
+        let pf = push_front_iter();
+        assert!(pf.offloadable(0.75), "push_front ratio {}", pf.ratio());
+        assert!(pf.program.writes_data, "push_front must mark writes");
+    }
+
+    #[test]
+    fn offloaded_push_front_links_at_the_head() {
+        let mut r = rack();
+        let mut l = ForwardList::with_sentinel(&mut r);
+        l.push(&mut r, 1); // host append after the sentinel
+        l.push(&mut r, 2);
+        l.push_front(&mut r, 10);
+        l.push_front(&mut r, 20);
+        assert_eq!(l.host_values(&mut r), vec![20, 10, 1, 2]);
+        assert_eq!(l.sum(&mut r), (33, 4));
+        l.check_invariants(&mut r, 4);
+        // find walks through the sentinel and the pushed nodes
+        assert!(l.find(&mut r, 10).is_some());
+        assert!(l.find(&mut r, 2).is_some());
+        assert!(l.find(&mut r, 99).is_none());
+    }
+
+    #[test]
+    fn push_front_into_empty_sentinel_list() {
+        let mut r = rack();
+        let mut l = ForwardList::with_sentinel(&mut r);
+        assert_eq!(l.host_values(&mut r), Vec::<i64>::new());
+        assert_eq!(l.sum(&mut r), (0, 0));
+        l.check_invariants(&mut r, 0);
+        let n = l.push_front(&mut r, 7);
+        assert_eq!(l.host_values(&mut r), vec![7]);
+        assert_eq!(l.find(&mut r, 7), Some(n));
+        l.check_invariants(&mut r, 1);
+    }
+
+    #[test]
+    fn streamed_push_front_ops_apply_via_functional_path() {
+        let mut r = rack();
+        let mut l = ForwardList::with_sentinel(&mut r);
+        l.push(&mut r, 100);
+        let nodes: Vec<_> =
+            (0..5).map(|v| l.prealloc_node(&mut r, v)).collect();
+        for n in &nodes {
+            let op = l.push_front_op(*n);
+            r.run_op_functional(&op);
+        }
+        assert_eq!(l.host_values(&mut r), vec![4, 3, 2, 1, 0, 100]);
+        l.check_invariants(&mut r, 6);
     }
 }

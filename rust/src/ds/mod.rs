@@ -5,20 +5,23 @@
 //! model past the paper's set (fence-key towers, huge fan-out, data-
 //! dependent fan-out).
 //!
-//! Family table (traversal → module):
+//! Family table (traversal → module; "mutating programs" are the
+//! offloaded *write* traversals — `writes_data` stages whose dirty
+//! windows stream back into node DRAM, pinned by the mixed read-write
+//! conformance suite):
 //!
-//! | family                      | module      | offloaded traversal      |
-//! |-----------------------------|-------------|--------------------------|
-//! | std::forward_list / list    | `list`      | chain find / chain sum   |
-//! | unordered_map / set         | `hashmap`   | bucket-chain find/update |
-//! | boost::bimap                | `bimap`     | chain find (both dirs)   |
-//! | map/set/multi* + AVL/splay/ | `bst`       | lower_bound walk         |
-//! |   scapegoat (Boost)         |             |                          |
-//! | Google cpp-btree            | `btree`     | internal_locate descend  |
-//! | B+Tree (WiredTiger/BTrDB)   | `bplustree` | get / locate / scan / sum|
-//! | skip list (towers)          | `skiplist`  | find / locate / scan     |
-//! | 256-way radix trie (ART)    | `radixtrie` | byte-dispatch lookup     |
-//! | directed graph (adj. lists) | `graph`     | bounded k-hop walk       |
+//! | family                      | module      | offloaded traversal      | mutating programs        |
+//! |-----------------------------|-------------|--------------------------|--------------------------|
+//! | std::forward_list / list    | `list`      | chain find / chain sum   | push_front (sentinel)    |
+//! | unordered_map / set         | `hashmap`   | bucket-chain find/update | put on existing key      |
+//! | boost::bimap                | `bimap`     | chain find (both dirs)   | —                        |
+//! | map/set/multi* + AVL/splay/ | `bst`       | lower_bound walk         | —                        |
+//! |   scapegoat (Boost)         |             |                          |                          |
+//! | Google cpp-btree            | `btree`     | internal_locate descend  | —                        |
+//! | B+Tree (WiredTiger/BTrDB)   | `bplustree` | get / locate / scan / sum| leaf value update        |
+//! | skip list (towers)          | `skiplist`  | find / locate / scan     | —                        |
+//! | 256-way radix trie (ART)    | `radixtrie` | byte-dispatch lookup     | —                        |
+//! | directed graph (adj. lists) | `graph`     | bounded k-hop walk       | —                        |
 //!
 //! Every structure here is also registered in
 //! `testgen::StructureKind` and pinned by the cross-backend

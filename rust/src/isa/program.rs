@@ -42,6 +42,16 @@ impl Program {
         self.id
     }
 
+    /// DRAM bytes one executed iteration moves: the aggregated load,
+    /// doubled for mutating programs whose dirty window streams back
+    /// out. Single source for the DES and live `mem_bytes` accounting
+    /// — the two engines' byte parity is a conformance property, so
+    /// the formula must not be duplicated.
+    pub fn dram_bytes_per_iter(&self) -> u64 {
+        let rw: u64 = if self.writes_data { 2 } else { 1 };
+        rw * self.load_words as u64 * 8
+    }
+
     pub fn len(&self) -> usize {
         self.instrs.len()
     }

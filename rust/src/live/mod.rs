@@ -119,7 +119,7 @@ impl LiveBackend {
 
     fn serve_impl(
         &mut self,
-        ops: &mut dyn FnMut(u64) -> Option<Op>,
+        source: OpSource<'_>,
         concurrency: usize,
     ) -> ServeReport {
         let wall_start = Instant::now();
@@ -177,7 +177,7 @@ impl LiveBackend {
                 txs: &txs,
                 router: router.as_ref(),
                 report: &mut report,
-                ops,
+                source,
                 slots: (0..window).map(|_| None).collect(),
                 free: (0..window as u32).rev().collect(),
                 issued: 0,
@@ -258,11 +258,16 @@ impl TraversalBackend for LiveBackend {
         ops: &mut dyn FnMut(u64) -> Option<Op>,
         concurrency: usize,
     ) -> ServeReport {
-        self.serve_impl(ops, concurrency)
+        self.serve_impl(OpSource::Gen(ops), concurrency)
     }
 
+    /// Open-loop batch serving. Ops are issued *by reference* — the
+    /// coordinator's slots borrow straight from the slice, so the timed
+    /// region measures the engine, not `Op::clone` (stage vectors +
+    /// override lists per op). The closed-loop `serve` path still owns
+    /// its ops, since a generator must hand them over by value.
     fn serve_batch(&mut self, ops: &[Op], concurrency: usize) -> ServeReport {
-        self.serve_impl(&mut |i| ops.get(i as usize).cloned(), concurrency)
+        self.serve_impl(OpSource::Batch(ops), concurrency)
     }
 
     fn metrics(&self) -> BackendMetrics {
@@ -270,9 +275,33 @@ impl TraversalBackend for LiveBackend {
     }
 }
 
+/// Where the coordinator draws ops from. The batch arm is the
+/// `serve_batch` fast path: slots borrow ops straight from the caller's
+/// slice instead of cloning each one inside the timed region.
+enum OpSource<'a> {
+    Gen(&'a mut dyn FnMut(u64) -> Option<Op>),
+    Batch(&'a [Op]),
+}
+
+/// An admitted op: owned (closed-loop generator) or borrowed from the
+/// batch slice (open-loop serving).
+enum SlotOp<'a> {
+    Owned(Op),
+    Borrowed(&'a Op),
+}
+
+impl SlotOp<'_> {
+    fn get(&self) -> &Op {
+        match self {
+            SlotOp::Owned(op) => op,
+            SlotOp::Borrowed(op) => op,
+        }
+    }
+}
+
 /// One admitted op's dispatcher-side state (the live `OpRun`).
-struct Slot {
-    op: Op,
+struct Slot<'a> {
+    op: SlotOp<'a>,
     op_index: u64,
     stage_idx: usize,
     born: Instant,
@@ -289,8 +318,8 @@ struct Coordinator<'a> {
     txs: &'a [QueueTx<ShardMsg>],
     router: &'a Router,
     report: &'a mut ServeReport,
-    ops: &'a mut dyn FnMut(u64) -> Option<Op>,
-    slots: Vec<Option<Slot>>,
+    source: OpSource<'a>,
+    slots: Vec<Option<Slot<'a>>>,
     free: Vec<u32>,
     issued: u64,
     inflight: usize,
@@ -302,16 +331,34 @@ struct Coordinator<'a> {
     results: &'a mut Vec<(u64, [i64; SP_WORDS])>,
 }
 
-impl Coordinator<'_> {
+impl<'a> Coordinator<'a> {
     /// Admit new ops until the window is full or the source runs dry.
     fn pump(&mut self) {
         while !self.source_done && self.inflight < self.slots.len() {
-            let Some(op) = (self.ops)(self.issued) else {
+            let next: Option<SlotOp<'a>> = match &mut self.source {
+                OpSource::Batch(ops) => {
+                    // copy the &'a [Op] out so the borrow is 'a, not
+                    // the transient &mut self.source reborrow
+                    let batch: &'a [Op] = *ops;
+                    batch.get(self.issued as usize).map(SlotOp::Borrowed)
+                }
+                OpSource::Gen(f) => f(self.issued).map(SlotOp::Owned),
+            };
+            let Some(op) = next else {
                 self.source_done = true;
                 break;
             };
             let op_index = self.issued;
             self.issued += 1;
+            // admission-time shape check, mirroring the DES: malformed
+            // ops trap here instead of panicking the coordinator
+            if op.get().validate().is_err() {
+                self.report.record_admission_trap();
+                if self.record {
+                    self.results.push((op_index, [0i64; SP_WORDS]));
+                }
+                continue;
+            }
             let token = self
                 .free
                 .pop()
@@ -341,7 +388,7 @@ impl Coordinator<'_> {
     ) {
         let (start, sp, program) = {
             let slot = self.slots[token as usize].as_ref().unwrap();
-            let stage = &slot.op.stages[slot.stage_idx];
+            let stage = &slot.op.get().stages[slot.stage_idx];
             let (start, sp) = stage.resolve(&prev_sp, repeat_from);
             let program = (start != 0)
                 .then(|| stage.iter.program.clone());
@@ -349,7 +396,7 @@ impl Coordinator<'_> {
         };
         let Some(program) = program else {
             // degenerate stage (e.g. empty structure): skip forward
-            self.advance(token, sp);
+            self.advance(token, sp, false);
             return;
         };
         let id = RequestId { cpu_node: 0, seq: self.seq };
@@ -373,7 +420,7 @@ impl Coordinator<'_> {
                         // the run terminates with honest accounting
                         self.account_msg(token, &job.msg);
                         self.report.trapped += 1;
-                        self.advance(token, job.msg.sp);
+                        self.advance(token, job.msg.sp, true);
                     }
                     Err(ShardMsg::Shutdown) => unreachable!(),
                 }
@@ -381,7 +428,7 @@ impl Coordinator<'_> {
             None => {
                 self.account_msg(token, &msg);
                 self.report.trapped += 1;
-                self.advance(token, msg.sp);
+                self.advance(token, msg.sp, true);
             }
         }
     }
@@ -395,8 +442,11 @@ impl Coordinator<'_> {
         let slot = self.slots[token as usize].as_mut().unwrap();
         slot.iters_total += msg.iters_done as u64;
         slot.crossings_total += msg.node_crossings;
+        // dirty windows stream back out after every iteration, exactly
+        // as the DES charges them (shared formula: byte parity with
+        // the DES is a conformance property)
         self.report.mem_bytes +=
-            msg.iters_done as u64 * msg.program.load_words as u64 * 8;
+            msg.iters_done as u64 * msg.program.dram_bytes_per_iter();
     }
 
     fn on_reply(&mut self, reply: Reply) {
@@ -415,7 +465,7 @@ impl Coordinator<'_> {
                 if msg.status == Status::Trap {
                     self.report.trapped += 1;
                 }
-                self.advance(token, msg.sp);
+                self.advance(token, msg.sp, msg.status == Status::Trap);
             }
             Reply::Yield { token, mut msg } => {
                 let boosts = {
@@ -427,7 +477,7 @@ impl Coordinator<'_> {
                 if boosts > self.max_boosts {
                     self.account_msg(token, &msg);
                     self.report.trapped += 1;
-                    self.advance(token, msg.sp);
+                    self.advance(token, msg.sp, true);
                 } else {
                     msg.max_iters += self.grant;
                     self.send(token, msg, false);
@@ -442,14 +492,19 @@ impl Coordinator<'_> {
     }
 
     /// Stage finished with scratchpad `sp`: repeat, chain, or complete
-    /// (mirrors the DES `advance_op`).
-    fn advance(&mut self, token: u32, sp: [i64; SP_WORDS]) {
+    /// (mirrors the DES `advance_op`). A `trapped` stage is terminal
+    /// for the whole op — repeating it would re-dispatch the same
+    /// faulting continuation pointer forever (unbounded
+    /// send→advance→dispatch recursion), and later stages would chain
+    /// off a poisoned scratchpad.
+    fn advance(&mut self, token: u32, sp: [i64; SP_WORDS], trapped: bool) {
         let (repeat, more_stages) = {
             let slot = self.slots[token as usize].as_ref().unwrap();
-            let stage = &slot.op.stages[slot.stage_idx];
+            let stage = &slot.op.get().stages[slot.stage_idx];
             (
-                stage.wants_repeat(&sp),
-                slot.stage_idx + 1 < slot.op.stages.len(),
+                !trapped && stage.wants_repeat(&sp),
+                !trapped
+                    && slot.stage_idx + 1 < slot.op.get().stages.len(),
             )
         };
         if repeat {
@@ -463,7 +518,7 @@ impl Coordinator<'_> {
         }
         let slot = self.slots[token as usize].take().unwrap();
         let lat = slot.born.elapsed().as_nanos() as u64
-            + slot.op.cpu_post_ns;
+            + slot.op.get().cpu_post_ns;
         self.report.completed += 1;
         self.report.latency.record(lat.max(1));
         self.report.crossings.record(slot.crossings_total as u64);

@@ -13,11 +13,15 @@
 //!   pulse serve --app webservice --nodes 4 --ops 2000 --conc 32
 //!   pulse serve --app btrdb --window-s 4 --nodes 2
 //!   pulse serve --app wiredtiger --backend live --nodes 4
-//!   pulse inspect --iter bplustree-get
+//!   pulse serve --mix a --backend pulse        (YCSB-A read/write mix)
+//!   pulse inspect --iter bplustree-update
 //!   pulse selftest
 
 use pulse::apps::{BtrDbApp, WebServiceApp, WiredTigerApp};
-use pulse::bench_support::{build_scenario_ops, make_backend, ScenarioSpec};
+use pulse::bench_support::{
+    build_scenario_ops, build_write_mix_ops, make_backend, ScenarioSpec,
+    WriteMixSpec,
+};
 use pulse::rack::RackConfig;
 use pulse::util::cli::Args;
 use pulse::workloads::{YcsbSpec, YcsbWorkload};
@@ -37,9 +41,10 @@ fn main() -> CliResult {
                 "usage: pulse <serve|inspect|selftest> [--app webservice|\
                  wiredtiger|btrdb|skiplist|radixtrie|graph] [--backend \
                  pulse|pulse-acc|cache|rpc|rpc-arm|cache-rpc|live] \
-                 [--nodes N] [--ops N] [--conc N] [--ycsb A|B|C|E] \
-                 [--window-s S] [--uniform] [--granularity BYTES] \
-                 [--loss P] [--no-in-network] [--hops N] [--iter NAME]"
+                 [--mix a|b] [--nodes N] [--ops N] [--conc N] \
+                 [--ycsb A|B|C|E] [--window-s S] [--uniform] \
+                 [--granularity BYTES] [--loss P] [--no-in-network] \
+                 [--hops N] [--iter NAME]"
             );
             std::process::exit(2);
         }
@@ -71,6 +76,36 @@ fn serve(args: &Args) -> CliResult {
     // (pulse/pulse-acc), the model baselines, or the live
     // multi-threaded engine (one real worker thread per memory node)
     let mut backend = make_backend(&kind, cfg_from(args));
+
+    // mixed read-write serving (`--mix a|b`): YCSB-A/B over the hash
+    // index with offloaded put-on-existing-key updates — the write-path
+    // workload, independent of `--app`
+    if let Some(mix) = args.get("mix") {
+        let spec = match mix {
+            "a" | "A" => YcsbSpec::A,
+            "b" | "B" => YcsbSpec::B,
+            other => {
+                return Err(
+                    format!("--mix expects a|b, got {other:?}").into()
+                )
+            }
+        };
+        let wspec = WriteMixSpec {
+            keys: args.u64_or("keys", 20_000),
+            ops: ops_n,
+            zipf,
+            seed,
+        };
+        let ops = build_write_mix_ops(backend.rack_mut(), spec, &wspec);
+        let report = backend.serve_batch(&ops, conc);
+        print_report(
+            &format!("{} write-mix", spec.name()),
+            backend.as_mut(),
+            conc,
+            &report,
+        );
+        return Ok(());
+    }
 
     let report = match app_name.as_str() {
         "webservice" => {
@@ -133,9 +168,19 @@ fn serve(args: &Args) -> CliResult {
         other => return Err(format!("unknown app {other:?}").into()),
     };
 
+    print_report(&app_name, backend.as_mut(), conc, &report);
+    Ok(())
+}
+
+fn print_report(
+    app_label: &str,
+    backend: &mut dyn pulse::backend::TraversalBackend,
+    conc: usize,
+    report: &pulse::rack::ServeReport,
+) {
     let (p50, p95, p99) = report.latency_percentiles();
     println!(
-        "app={app_name} backend={} nodes={} ops={} conc={conc}",
+        "app={app_label} backend={} nodes={} ops={} conc={conc}",
         backend.name(),
         backend.rack_mut().cfg.nodes,
         report.completed
@@ -170,7 +215,6 @@ fn serve(args: &Args) -> CliResult {
             sw.routed_requests, sw.reroutes
         );
     }
-    Ok(())
 }
 
 fn inspect(args: &Args) -> CliResult {
@@ -185,6 +229,8 @@ fn inspect(args: &Args) -> CliResult {
         "bplustree-get" => pulse::ds::bplustree::get_iter(),
         "bplustree-scan" => pulse::ds::bplustree::scan_iter(),
         "bplustree-sum" => pulse::ds::bplustree::sum_iter(),
+        "bplustree-update" => pulse::ds::bplustree::update_iter(),
+        "list-push-front" => pulse::ds::list::push_front_iter(),
         "skiplist-find" => pulse::ds::skiplist::find_iter(),
         "skiplist-locate" => pulse::ds::skiplist::locate_iter(),
         "skiplist-scan" => pulse::ds::skiplist::scan_iter(),
@@ -192,10 +238,12 @@ fn inspect(args: &Args) -> CliResult {
         "graph-khop" => pulse::ds::graph::khop_iter(),
         other => {
             return Err(format!(
-                "unknown iterator {other:?} (try list-find, chain-find, \
+                "unknown iterator {other:?} (try list-find, \
+                 list-push-front, chain-find, chain-update, \
                  bst-lower-bound, btree-locate, bplustree-get, \
-                 bplustree-scan, bplustree-sum, skiplist-find, \
-                 skiplist-scan, radixtrie-lookup, graph-khop)"
+                 bplustree-scan, bplustree-sum, bplustree-update, \
+                 skiplist-find, skiplist-scan, radixtrie-lookup, \
+                 graph-khop)"
             )
             .into())
         }

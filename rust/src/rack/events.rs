@@ -124,6 +124,15 @@ impl Rack {
                         continue;
                     };
                     issued += 1;
+                    // admission-time shape check: a malformed op (e.g.
+                    // a repeat stage with out-of-range repeat_while
+                    // words) is trapped here instead of panicking the
+                    // DES mid-run
+                    if op.validate().is_err() {
+                        report.record_admission_trap();
+                        scratch.q.push(now, Ev::Issue);
+                        continue;
+                    }
                     inflight += 1;
                     let run = OpRun::new(op, now);
                     self.launch_stage(
@@ -219,11 +228,13 @@ impl Rack {
                     );
                     match one {
                         IterResult::Logic(steps) => {
-                            // DRAM was actually read only when the
+                            // DRAM was actually touched only when the
                             // iteration executed (bounces/faults return
-                            // before the aggregated load)
+                            // before the aggregated load); dirty
+                            // windows stream back out, doubling the
+                            // bytes the node's DRAM served
                             report.mem_bytes +=
-                                job.msg.program.load_words as u64 * 8;
+                                job.msg.program.dram_bytes_per_iter();
                             let dur = self.lat.logic_ns(steps).max(1);
                             let ns = &mut scratch.nodes[node as usize];
                             if ns.logic_free > 0 {
@@ -345,6 +356,7 @@ impl Rack {
                                 now,
                                 run,
                                 sp,
+                                status == Status::Trap,
                                 &mut scratch.q,
                                 &mut report,
                                 &mut inflight,
@@ -427,24 +439,41 @@ impl Rack {
         let (start, sp) = stage.resolve(&prev_sp, repeat_from);
         if start == 0 {
             // degenerate stage (e.g. empty structure): skip forward
-            self.advance_op(now, run, sp, q, report, inflight, done, runs);
+            self.advance_op(
+                now, run, sp, false, q, report, inflight, done, runs,
+            );
             return;
         }
         match self.dispatch.submit(&stage.iter, start, sp, now) {
             Disposition::CompletedLocally { sp, iters } => {
                 run.iters_total += iters;
-                self.advance_op(now, run, sp, q, report, inflight, done, runs);
+                self.advance_op(
+                    now, run, sp, false, q, report, inflight, done, runs,
+                );
             }
             Disposition::RunOnCpu => {
-                let (_st, sp, iters) =
+                let (st, sp, iters) =
                     self.run_on_cpu(&stage.iter, start, sp);
+                if st == Status::Trap {
+                    report.trapped += 1;
+                }
                 // remote reads: one RTT per iteration, charged virtually
                 // by shifting the op's birth time back.
                 let rtt = 2 * self.lat.one_way_ns(298)
                     + self.lat.cpu_dram_ns as Ns;
                 run.iters_total += iters;
                 run.born = run.born.saturating_sub(iters as u64 * rtt);
-                self.advance_op(now, run, sp, q, report, inflight, done, runs);
+                self.advance_op(
+                    now,
+                    run,
+                    sp,
+                    st == Status::Trap,
+                    q,
+                    report,
+                    inflight,
+                    done,
+                    runs,
+                );
             }
             Disposition::Offload(msg) => {
                 let id = msg.id;
@@ -460,13 +489,18 @@ impl Rack {
     }
 
     /// A stage finished with final scratchpad `sp` — repeat it, move to
-    /// the next stage, or complete the op.
+    /// the next stage, or complete the op. A `trapped` stage is
+    /// terminal for the whole op: repeating it would re-issue the same
+    /// faulting continuation forever (the scratchpad's repeat words are
+    /// exactly as they were when the stage faulted), and later stages
+    /// would chain off a poisoned scratchpad.
     #[allow(clippy::too_many_arguments)]
     fn advance_op(
         &mut self,
         now: Ns,
         mut run: OpRun,
         sp: [i64; SP_WORDS],
+        trapped: bool,
         q: &mut EventQueue<Ev>,
         report: &mut ServeReport,
         inflight: &mut usize,
@@ -474,14 +508,14 @@ impl Rack {
         runs: &mut HashMap<RequestId, OpRun>,
     ) {
         let stage = &run.op.stages[run.stage_idx];
-        if stage.wants_repeat(&sp) {
+        if !trapped && stage.wants_repeat(&sp) {
             let t = now + self.lat.host_net_stack_ns as Ns;
             self.launch_stage(
                 t, run, sp, Some(sp), q, report, inflight, done, runs,
             );
             return;
         }
-        if run.stage_idx + 1 < run.op.stages.len() {
+        if !trapped && run.stage_idx + 1 < run.op.stages.len() {
             run.stage_idx += 1;
             let t = now + self.lat.host_net_stack_ns as Ns;
             self.launch_stage(

@@ -29,7 +29,7 @@ pub mod request;
 pub mod stats;
 
 pub use config::RackConfig;
-pub use request::{Op, Stage, StartAddr};
+pub use request::{Op, OpShapeError, Stage, StartAddr};
 pub use stats::ServeReport;
 
 use crate::accel::{Accelerator, VisitEnd};
@@ -43,6 +43,29 @@ use crate::sim::LatencyModel;
 use crate::switch::{Route, Switch};
 
 use events::ServeScratch;
+
+/// Why a host-side memory access failed (the CPU node touching rack
+/// memory directly: builds, `run_on_cpu`, baseline tracers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostAccessError {
+    /// No slab owns this address.
+    Unmapped(GAddr),
+    /// Owned, but translation failed (range boundary / protection).
+    Fault(GAddr),
+}
+
+impl std::fmt::Display for HostAccessError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HostAccessError::Unmapped(a) => {
+                write!(f, "access to unmapped addr {a:#x}")
+            }
+            HostAccessError::Fault(a) => {
+                write!(f, "translation fault at {a:#x}")
+            }
+        }
+    }
+}
 
 pub struct Rack {
     pub cfg: RackConfig,
@@ -145,25 +168,60 @@ impl Rack {
         self.published_slabs = self.alloc.slabs_allocated as usize;
     }
 
-    /// Host-side write (data-structure build + mutation path).
-    pub fn write_words(&mut self, addr: GAddr, words: &[i64]) {
-        let node = self.alloc.owner(addr).expect("write to unmapped addr");
+    /// Fallible host-side write. Serving paths (`run_on_cpu`, the
+    /// baseline tracers) use this and turn failures into trapped ops
+    /// surfaced through `ServeReport.trapped`, matching the trap
+    /// behaviour of the offloaded path — a stray pointer must never
+    /// panic a serving loop.
+    pub fn try_write_words(
+        &mut self,
+        addr: GAddr,
+        words: &[i64],
+    ) -> Result<(), HostAccessError> {
+        let node = self
+            .alloc
+            .owner(addr)
+            .ok_or(HostAccessError::Unmapped(addr))?;
         let accel = &mut self.memnodes[node as usize];
         let off = accel
             .table
             .translate(addr, (words.len() * 8) as u64, true)
-            .expect("host write failed translation");
+            .map_err(|_| HostAccessError::Fault(addr))?;
         accel.region.write_words(off, words);
+        Ok(())
     }
 
-    pub fn read_words(&mut self, addr: GAddr, out: &mut [i64]) {
-        let node = self.alloc.owner(addr).expect("read of unmapped addr");
+    /// Fallible host-side read; see [`Rack::try_write_words`].
+    pub fn try_read_words(
+        &mut self,
+        addr: GAddr,
+        out: &mut [i64],
+    ) -> Result<(), HostAccessError> {
+        let node = self
+            .alloc
+            .owner(addr)
+            .ok_or(HostAccessError::Unmapped(addr))?;
         let accel = &mut self.memnodes[node as usize];
         let off = accel
             .table
             .translate(addr, (out.len() * 8) as u64, false)
-            .expect("host read failed translation");
+            .map_err(|_| HostAccessError::Fault(addr))?;
         accel.region.read_words(off, out);
+        Ok(())
+    }
+
+    /// Host-side write (data-structure build + mutation path). Panics
+    /// on unmapped addresses — build code addressing memory it never
+    /// allocated is a programming error; serving paths use
+    /// [`Rack::try_write_words`] and trap instead.
+    pub fn write_words(&mut self, addr: GAddr, words: &[i64]) {
+        self.try_write_words(addr, words)
+            .unwrap_or_else(|e| panic!("host write: {e}"));
+    }
+
+    pub fn read_words(&mut self, addr: GAddr, out: &mut [i64]) {
+        self.try_read_words(addr, out)
+            .unwrap_or_else(|e| panic!("host read: {e}"));
     }
 
     /// Purely functional traversal (no timing) — correctness paths,
@@ -214,7 +272,9 @@ impl Rack {
     }
 
     /// CPU fallback for non-offloadable iterators: one remote read per
-    /// pointer hop (paper §4.1).
+    /// pointer hop (paper §4.1). Mutating iterators write the dirty
+    /// window back with one remote write per hop; a pointer into
+    /// unmapped memory traps the traversal (never panics the loop).
     pub(crate) fn run_on_cpu(
         &mut self,
         iter: &CompiledIter,
@@ -228,17 +288,26 @@ impl Rack {
         let mut iters = 0u32;
         let mut buf = vec![0i64; words];
         loop {
-            self.read_words(cur, &mut buf);
+            let mut out = [0i64; SP_WORDS];
+            if self.try_read_words(cur, &mut buf).is_err() {
+                out.copy_from_slice(&ws.sp);
+                return (Status::Trap, out, iters);
+            }
             ws.regs = [0; NREG];
             ws.set_cur_ptr(cur);
             ws.data[..words].copy_from_slice(&buf);
             ws.data[words..].iter_mut().for_each(|w| *w = 0);
             let pass = logic_pass(&iter.program, &mut ws);
             iters += 1;
+            if iter.program.writes_data
+                && self.try_write_words(cur, &ws.data[..words]).is_err()
+            {
+                out.copy_from_slice(&ws.sp);
+                return (Status::Trap, out, iters);
+            }
             match pass.status {
                 Status::NextIter => cur = ws.cur_ptr(),
                 s => {
-                    let mut out = [0i64; SP_WORDS];
                     out.copy_from_slice(&ws.sp);
                     return (s, out, iters);
                 }
@@ -248,13 +317,24 @@ impl Rack {
 
     /// Functional multi-stage op (reference for the DES path; used by
     /// tests and the baseline trace collectors to check stage plumbing).
+    /// A trap is terminal for the whole op, exactly as in the DES, the
+    /// live engine, and `trace_full_op` — repeating a faulted stage
+    /// would re-issue the same continuation forever.
     pub fn run_op_functional(&mut self, op: &Op) -> [i64; SP_WORDS] {
         let mut prev_sp = [0i64; SP_WORDS];
         for stage in &op.stages {
             let mut repeat_from = None;
             loop {
                 let (start, sp) = stage.resolve(&prev_sp, repeat_from);
-                let (_st, out, _) = self.traverse(&stage.iter, start, sp);
+                if start == 0 {
+                    // degenerate stage: skip forward
+                    prev_sp = sp;
+                    break;
+                }
+                let (st, out, _) = self.traverse(&stage.iter, start, sp);
+                if st == Status::Trap {
+                    return out;
+                }
                 if stage.wants_repeat(&out) {
                     repeat_from = Some(out);
                     continue;

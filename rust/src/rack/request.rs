@@ -56,18 +56,29 @@ impl Stage {
     /// the previous stage's final scratchpad and an optional repeat
     /// continuation. Shared by the functional path, the DES, and the
     /// baseline trace collectors.
+    ///
+    /// Total on malformed shapes: a repeat continuation on a stage with
+    /// no `repeat_while`, or any out-of-range scratchpad word, resolves
+    /// to start 0 (the degenerate-stage skip every executor already
+    /// handles) instead of panicking — admission-time [`Op::validate`]
+    /// is the loud path, this is the safety net.
     pub fn resolve(
         &self,
         prev_sp: &[i64; SP_WORDS],
         repeat_from: Option<[i64; SP_WORDS]>,
     ) -> (GAddr, [i64; SP_WORDS]) {
         let start = match (repeat_from, self.start) {
-            (Some(sp), _) => {
-                let (aw, _) = self.repeat_while.expect("repeat without repeat_while");
-                sp[aw as usize] as GAddr
-            }
+            (Some(sp), _) => match self.repeat_while {
+                Some((aw, _)) if (aw as usize) < SP_WORDS => {
+                    sp[aw as usize] as GAddr
+                }
+                _ => 0,
+            },
             (None, StartAddr::Fixed(a)) => a,
-            (None, StartAddr::FromPrevSp(w)) => prev_sp[w as usize] as GAddr,
+            (None, StartAddr::FromPrevSp(w)) if (w as usize) < SP_WORDS => {
+                prev_sp[w as usize] as GAddr
+            }
+            (None, StartAddr::FromPrevSp(_)) => 0,
         };
         let mut sp = match (repeat_from, self.carry_sp) {
             (Some(s), _) => s,
@@ -75,16 +86,75 @@ impl Stage {
             (None, false) => self.sp,
         };
         for &(w, v) in &self.sp_overrides {
-            sp[w as usize] = v;
+            if (w as usize) < SP_WORDS {
+                sp[w as usize] = v;
+            }
         }
         (start, sp)
     }
 
     /// Whether `sp` asks for another continuation round of this stage.
+    /// Out-of-range repeat words never repeat (see [`Op::validate`]).
     pub fn wants_repeat(&self, sp: &[i64; SP_WORDS]) -> bool {
         match self.repeat_while {
-            Some((aw, gw)) => sp[aw as usize] != 0 && sp[gw as usize] > 0,
-            None => false,
+            Some((aw, gw))
+                if (aw as usize) < SP_WORDS && (gw as usize) < SP_WORDS =>
+            {
+                sp[aw as usize] != 0 && sp[gw as usize] > 0
+            }
+            _ => false,
+        }
+    }
+
+    /// Admission-time shape check for one stage.
+    fn validate(&self) -> Result<(), OpShapeError> {
+        if let StartAddr::FromPrevSp(w) = self.start {
+            if w as usize >= SP_WORDS {
+                return Err(OpShapeError::StartWordOutOfRange(w));
+            }
+        }
+        if let Some((aw, gw)) = self.repeat_while {
+            if aw as usize >= SP_WORDS || gw as usize >= SP_WORDS {
+                return Err(OpShapeError::RepeatWordOutOfRange(aw, gw));
+            }
+        }
+        for &(w, _) in &self.sp_overrides {
+            if w as usize >= SP_WORDS {
+                return Err(OpShapeError::OverrideWordOutOfRange(w));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Why an op was rejected at admission (both the DES and the live
+/// coordinator trap the op instead of letting a malformed shape panic
+/// the whole serving loop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpShapeError {
+    /// Op has no stages at all.
+    NoStages,
+    /// `StartAddr::FromPrevSp` references a scratchpad word ≥ SP_WORDS.
+    StartWordOutOfRange(u32),
+    /// `repeat_while` references a scratchpad word ≥ SP_WORDS.
+    RepeatWordOutOfRange(u32, u32),
+    /// An `sp_overrides` entry references a word ≥ SP_WORDS.
+    OverrideWordOutOfRange(u32),
+}
+
+impl std::fmt::Display for OpShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OpShapeError::NoStages => write!(f, "op has no stages"),
+            OpShapeError::StartWordOutOfRange(w) => {
+                write!(f, "FromPrevSp word {w} out of range")
+            }
+            OpShapeError::RepeatWordOutOfRange(a, g) => {
+                write!(f, "repeat_while words ({a},{g}) out of range")
+            }
+            OpShapeError::OverrideWordOutOfRange(w) => {
+                write!(f, "sp_override word {w} out of range")
+            }
         }
     }
 }
@@ -101,6 +171,19 @@ pub struct Op {
 impl Op {
     pub fn new(iter: Arc<CompiledIter>, start: GAddr, sp: [i64; SP_WORDS]) -> Self {
         Self { stages: vec![Stage::new(iter, start, sp)], cpu_post_ns: 0 }
+    }
+
+    /// Shape validation, run once at admission by every serving loop
+    /// (DES `Ev::Issue`, live coordinator `pump`): a malformed op is
+    /// reported as one trapped completion instead of panicking mid-DES.
+    pub fn validate(&self) -> Result<(), OpShapeError> {
+        if self.stages.is_empty() {
+            return Err(OpShapeError::NoStages);
+        }
+        for stage in &self.stages {
+            stage.validate()?;
+        }
+        Ok(())
     }
 }
 
@@ -124,5 +207,76 @@ impl OpRun {
             crossings_total: 0,
             iters_total: 0,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::IterBuilder;
+
+    fn any_iter() -> Arc<CompiledIter> {
+        let mut b = IterBuilder::new();
+        let v = b.field(0);
+        b.sp_store(1, v);
+        b.ret();
+        Arc::new(b.finish().unwrap())
+    }
+
+    #[test]
+    fn resolve_without_repeat_while_is_total() {
+        // a repeat continuation on a stage lacking repeat_while used to
+        // panic ("repeat without repeat_while"); it must now resolve to
+        // the degenerate start 0 that every executor skips gracefully
+        let stage = Stage::new(any_iter(), 0x1000, [0i64; SP_WORDS]);
+        let cont = [7i64; SP_WORDS];
+        let (start, _sp) = stage.resolve(&[0i64; SP_WORDS], Some(cont));
+        assert_eq!(start, 0);
+        assert!(!stage.wants_repeat(&cont));
+    }
+
+    #[test]
+    fn out_of_range_words_resolve_degenerately() {
+        let mut stage = Stage::new(any_iter(), 0x1000, [0i64; SP_WORDS]);
+        stage.start = StartAddr::FromPrevSp(SP_WORDS as u32 + 5);
+        stage.repeat_while = Some((SP_WORDS as u32, 2));
+        stage.sp_overrides = vec![(SP_WORDS as u32 + 1, 9)];
+        let prev = [3i64; SP_WORDS];
+        let (start, sp) = stage.resolve(&prev, None);
+        assert_eq!(start, 0);
+        assert_eq!(sp, [0i64; SP_WORDS]); // OOB override dropped
+        assert!(!stage.wants_repeat(&prev));
+        let (start, _) = stage.resolve(&prev, Some(prev));
+        assert_eq!(start, 0);
+    }
+
+    #[test]
+    fn validate_flags_malformed_shapes() {
+        let ok = Op::new(any_iter(), 0x1000, [0i64; SP_WORDS]);
+        assert!(ok.validate().is_ok());
+
+        let empty = Op { stages: vec![], cpu_post_ns: 0 };
+        assert_eq!(empty.validate(), Err(OpShapeError::NoStages));
+
+        let mut bad = Op::new(any_iter(), 0x1000, [0i64; SP_WORDS]);
+        bad.stages[0].repeat_while = Some((99, 2));
+        assert_eq!(
+            bad.validate(),
+            Err(OpShapeError::RepeatWordOutOfRange(99, 2))
+        );
+
+        let mut bad = Op::new(any_iter(), 0x1000, [0i64; SP_WORDS]);
+        bad.stages[0].start = StartAddr::FromPrevSp(64);
+        assert_eq!(
+            bad.validate(),
+            Err(OpShapeError::StartWordOutOfRange(64))
+        );
+
+        let mut bad = Op::new(any_iter(), 0x1000, [0i64; SP_WORDS]);
+        bad.stages[0].sp_overrides = vec![(0, 1), (77, 2)];
+        assert_eq!(
+            bad.validate(),
+            Err(OpShapeError::OverrideWordOutOfRange(77))
+        );
     }
 }

@@ -35,6 +35,19 @@ impl ServeReport {
         (self.latency.p50(), self.latency.p95(), self.latency.p99())
     }
 
+    /// Account one op rejected by admission-time shape validation
+    /// (`Op::validate`): a trapped completion with a nominal 1 ns
+    /// latency sample. One definition shared by the DES issue loop,
+    /// the live coordinator, and the baseline trace loop so their trap
+    /// counts can never drift apart (the conformance suite compares
+    /// them across backends).
+    pub fn record_admission_trap(&mut self) {
+        self.completed += 1;
+        self.trapped += 1;
+        self.latency.record(1);
+        self.crossings.record(0);
+    }
+
     /// Memory-bandwidth utilization vs the paper's 25 GB/s per node cap.
     pub fn mem_bw_util(&self, nodes: usize) -> f64 {
         if self.makespan_ns == 0 {

@@ -706,6 +706,342 @@ impl BuiltScenario {
     }
 }
 
+// ---------------------------------------------------------------------
+// Mutating-stream mode (offloaded write path)
+// ---------------------------------------------------------------------
+
+/// One query of a mixed read-write stream. Restricted so that the
+/// *final structure state* is schedule-independent under concurrent
+/// execution (live shards, DES event order):
+///
+/// * `Update` targets are **single-writer-per-key** — the generator
+///   never emits two updates to the same key, so the last-value race
+///   cannot arise and every interleaving converges to the same heap;
+/// * `PushFront` pushes commute as a *set* (each push links its own
+///   pre-allocated node; the sentinel iteration is the linearization
+///   point), so the final chain is order-dependent but
+///   content-deterministic — the conformance suite compares exact
+///   chains for serialized runs and multisets for concurrent ones.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MutQuery {
+    Lookup(i64),
+    /// In-place value overwrite of an existing key (hashmap put /
+    /// B+Tree leaf update). At most one per key per stream.
+    Update(i64, i64),
+    /// Offloaded list push of a host-pre-allocated node with this value.
+    PushFront(i64),
+}
+
+/// A seeded mixed read-write scenario: build script + mutation stream.
+#[derive(Debug, Clone)]
+pub struct MutPlan {
+    pub kind: StructureKind,
+    pub seed: u64,
+    pub build: Vec<BuildStep>,
+    pub queries: Vec<MutQuery>,
+}
+
+impl MutPlan {
+    /// Reference key/value state after the build script *and* every
+    /// update in the stream (updates are single-writer-per-key, so
+    /// application order cannot matter).
+    pub fn final_model(&self) -> BTreeMap<i64, i64> {
+        let mut m = BTreeMap::new();
+        for step in &self.build {
+            match *step {
+                BuildStep::Insert(k, v) => {
+                    m.insert(k, v);
+                }
+                BuildStep::Remove(k) => {
+                    m.remove(&k);
+                }
+            }
+        }
+        for q in &self.queries {
+            if let MutQuery::Update(k, v) = *q {
+                m.insert(k, v);
+            }
+        }
+        m
+    }
+
+    /// Values pushed by the stream, in issue order.
+    pub fn pushed_values(&self) -> Vec<i64> {
+        self.queries
+            .iter()
+            .filter_map(|q| match *q {
+                MutQuery::PushFront(v) => Some(v),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn write_count(&self) -> usize {
+        self.queries
+            .iter()
+            .filter(|q| !matches!(q, MutQuery::Lookup(_)))
+            .count()
+    }
+}
+
+/// Structures with an offloaded mutation program. `HashMap` puts on
+/// existing keys, `ForwardList` push_front via pre-allocated nodes,
+/// `BPlusTreeGet` in-place leaf value updates.
+pub const MUTATING_KINDS: [StructureKind; 3] = [
+    StructureKind::HashMap,
+    StructureKind::ForwardList,
+    StructureKind::BPlusTreeGet,
+];
+
+/// Generate a seeded mixed read-write stream (~1/3 writes) for one of
+/// the [`MUTATING_KINDS`]. Same (kind, seed, sizes) => same plan.
+pub fn random_mutating_ops(
+    kind: StructureKind,
+    seed: u64,
+    build_n: usize,
+    query_n: usize,
+) -> MutPlan {
+    assert!(
+        MUTATING_KINDS.contains(&kind),
+        "{} has no offloaded mutation program",
+        kind.name()
+    );
+    let mut rng = Rng::with_stream(seed, 0xD5_1000 + kind as u64);
+    let build_n = build_n.max(8);
+    let space: i64 = (build_n as i64 * 3).max(64);
+    let mut build = Vec::with_capacity(build_n);
+    for _ in 0..build_n {
+        build.push(BuildStep::Insert(
+            rng.below(space as u64) as i64,
+            rng.next_i64() >> 8,
+        ));
+    }
+    // existing keys, shuffled: update targets are drawn without
+    // replacement => single writer per key by construction
+    let mut keys: Vec<i64> = {
+        let mut m = BTreeMap::new();
+        for step in &build {
+            if let BuildStep::Insert(k, v) = *step {
+                m.insert(k, v);
+            }
+        }
+        m.into_keys().collect()
+    };
+    for i in (1..keys.len()).rev() {
+        let j = rng.below(i as u64 + 1) as usize;
+        keys.swap(i, j);
+    }
+    let mut next_key = keys.into_iter();
+    let mut queries = Vec::with_capacity(query_n);
+    for qi in 0..query_n {
+        // query 0 always writes so every stream exercises the path
+        let write = qi == 0 || rng.chance(1.0 / 3.0);
+        let q = match kind {
+            StructureKind::ForwardList if write => {
+                // pushed values live outside the build key space so
+                // lookups distinguish old from new content
+                MutQuery::PushFront(space + qi as i64)
+            }
+            _ if write => match next_key.next() {
+                Some(k) => MutQuery::Update(k, rng.next_i64() >> 8),
+                // ran out of distinct keys: degrade to a read
+                None => MutQuery::Lookup(rng.below(space as u64) as i64),
+            },
+            _ => MutQuery::Lookup(
+                rng.below(space as u64 + space as u64 / 4) as i64,
+            ),
+        };
+        queries.push(q);
+    }
+    MutPlan { kind, seed, build, queries }
+}
+
+/// A mutating scenario materialized on one rack: the built structure
+/// plus the pre-allocated nodes its `PushFront` queries consume (the
+/// "node handed in through the scratchpad" of the offloaded list push).
+/// Pre-allocation happens at build time, in query order, so every
+/// backend sees a bit-identical heap before serving starts.
+pub enum MutScenario {
+    Hash(HashMapDs),
+    List(ForwardList, Vec<crate::mem::GAddr>),
+    Bplus(BPlusTree),
+}
+
+impl MutScenario {
+    pub fn build(plan: &MutPlan, rack: &mut Rack) -> MutScenario {
+        let inserts = || {
+            plan.build.iter().filter_map(|s| match *s {
+                BuildStep::Insert(k, v) => Some((k, v)),
+                BuildStep::Remove(_) => None,
+            })
+        };
+        match plan.kind {
+            StructureKind::HashMap => {
+                let mut m = HashMapDs::build(rack, 64);
+                for (k, v) in inserts() {
+                    m.insert(rack, k, v);
+                }
+                MutScenario::Hash(m)
+            }
+            StructureKind::ForwardList => {
+                let mut l = ForwardList::with_sentinel(rack);
+                for (k, _v) in inserts() {
+                    l.push(rack, k);
+                }
+                let nodes = plan
+                    .pushed_values()
+                    .into_iter()
+                    .map(|v| l.prealloc_node(rack, v))
+                    .collect();
+                MutScenario::List(l, nodes)
+            }
+            StructureKind::BPlusTreeGet => {
+                let pairs: Vec<(i64, i64)> = {
+                    let mut m = BTreeMap::new();
+                    for (k, v) in inserts() {
+                        m.insert(k, v);
+                    }
+                    m.into_iter().collect()
+                };
+                MutScenario::Bplus(BPlusTree::build_sorted(rack, &pairs, 7))
+            }
+            other => panic!("{} is not a mutating scenario", other.name()),
+        }
+    }
+
+    /// The full streamed op sequence (push ops consume the
+    /// pre-allocated nodes in query order).
+    pub fn ops(&self, plan: &MutPlan) -> Vec<AppOp> {
+        let mut push_idx = 0usize;
+        plan.queries
+            .iter()
+            .map(|q| match (self, q) {
+                (MutScenario::Hash(m), MutQuery::Lookup(k)) => m.find_op(*k),
+                (MutScenario::Hash(m), MutQuery::Update(k, v)) => {
+                    m.update_op(*k, *v)
+                }
+                (MutScenario::List(l, _), MutQuery::Lookup(k)) => {
+                    let mut sp = [0i64; SP_WORDS];
+                    sp[SP_KEY as usize] = *k;
+                    AppOp::new(l.find_program(), l.head, sp)
+                }
+                (MutScenario::List(l, nodes), MutQuery::PushFront(_)) => {
+                    let op = l.push_front_op(nodes[push_idx]);
+                    push_idx += 1;
+                    op
+                }
+                (MutScenario::Bplus(t), MutQuery::Lookup(k)) => {
+                    let mut sp = [0i64; SP_WORDS];
+                    sp[SP_KEY as usize] = *k;
+                    AppOp::new(t.get_program(), t.root, sp)
+                }
+                (MutScenario::Bplus(t), MutQuery::Update(k, v)) => {
+                    t.update_op(*k, *v)
+                }
+                _ => panic!("query/structure mismatch"),
+            })
+            .collect()
+    }
+
+    /// Final-structure-state check after the stream drained. `exact`
+    /// demands the bit-exact serial-order outcome (always true for the
+    /// single-writer structures; for the list only when serving was
+    /// serialized) — otherwise the list chain is compared as a
+    /// multiset, which every valid interleaving must produce.
+    pub fn check_final_state(
+        &self,
+        rack: &mut Rack,
+        plan: &MutPlan,
+        exact: bool,
+    ) -> Result<(), String> {
+        match self {
+            MutScenario::Hash(m) => {
+                let got = m.host_items(rack);
+                let want = plan.final_model();
+                if got != want {
+                    return Err(format!(
+                        "hashmap final state diverged: {} entries vs {}",
+                        got.len(),
+                        want.len()
+                    ));
+                }
+            }
+            MutScenario::Bplus(t) => {
+                let got = t.host_items(rack);
+                let want: Vec<(i64, i64)> =
+                    plan.final_model().into_iter().collect();
+                if got != want {
+                    return Err(format!(
+                        "bplustree final state diverged: {} entries vs {}",
+                        got.len(),
+                        want.len()
+                    ));
+                }
+            }
+            MutScenario::List(l, _) => {
+                let got = l.host_values(rack);
+                // serial order: pushes prepend, so the chain is the
+                // pushed values reversed, then the built prefix
+                let mut want: Vec<i64> =
+                    plan.pushed_values().into_iter().rev().collect();
+                for step in &plan.build {
+                    if let BuildStep::Insert(k, _) = *step {
+                        want.push(k);
+                    }
+                }
+                if exact {
+                    if got != want {
+                        return Err(format!(
+                            "list chain diverged from serial order \
+                             ({} vs {} nodes)",
+                            got.len(),
+                            want.len()
+                        ));
+                    }
+                } else {
+                    let mut g = got.clone();
+                    let mut w = want.clone();
+                    g.sort_unstable();
+                    w.sort_unstable();
+                    if g != w {
+                        return Err(format!(
+                            "list content diverged as a multiset \
+                             ({} vs {} nodes)",
+                            g.len(),
+                            w.len()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Structure invariants after the stream (panics on violation).
+    pub fn check_invariants(&self, rack: &mut Rack, plan: &MutPlan) {
+        match self {
+            MutScenario::Hash(m) => m.check_invariants(rack),
+            MutScenario::Bplus(t) => t.check_invariants(rack),
+            MutScenario::List(l, _) => {
+                let built = plan
+                    .build
+                    .iter()
+                    .filter(|s| matches!(s, BuildStep::Insert(..)))
+                    .count();
+                l.check_invariants(
+                    rack,
+                    built + plan.pushed_values().len(),
+                );
+            }
+        }
+    }
+
+    /// Number of mutating ops in the plan (bench/report accounting).
+    pub fn writes(plan: &MutPlan) -> usize {
+        plan.write_count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -754,6 +1090,56 @@ mod tests {
             built
                 .check_against_reference(&mut rack, &plan)
                 .unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn mutating_plans_are_deterministic_and_single_writer() {
+        for kind in MUTATING_KINDS {
+            let a = random_mutating_ops(kind, 11, 60, 40);
+            let b = random_mutating_ops(kind, 11, 60, 40);
+            assert_eq!(a.build, b.build, "{}", kind.name());
+            assert_eq!(a.queries, b.queries, "{}", kind.name());
+            assert!(MutScenario::writes(&a) > 0, "{}", kind.name());
+            // single writer per key: no update key repeats
+            let mut seen = std::collections::HashSet::new();
+            for q in &a.queries {
+                if let MutQuery::Update(k, _) = q {
+                    assert!(seen.insert(*k), "double writer on key {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mutating_streams_apply_functionally_and_hold_invariants() {
+        use crate::rack::RackConfig;
+        for kind in MUTATING_KINDS {
+            let plan = random_mutating_ops(kind, 5, 50, 30);
+            let mut rack = Rack::new(RackConfig::small(2));
+            let ms = MutScenario::build(&plan, &mut rack);
+            for op in ms.ops(&plan) {
+                rack.run_op_functional(&op);
+            }
+            ms.check_final_state(&mut rack, &plan, true)
+                .unwrap_or_else(|e| panic!("{}: {e}", kind.name()));
+            ms.check_invariants(&mut rack, &plan);
+        }
+    }
+
+    #[test]
+    fn mutating_streams_contain_mutating_stages() {
+        use crate::rack::RackConfig;
+        for kind in MUTATING_KINDS {
+            let plan = random_mutating_ops(kind, 4, 40, 20);
+            let mut rack = Rack::new(RackConfig::small(1));
+            let ms = MutScenario::build(&plan, &mut rack);
+            let dirty = ms
+                .ops(&plan)
+                .iter()
+                .flat_map(|op| op.stages.iter())
+                .any(|s| s.iter.program.writes_data);
+            assert!(dirty, "{} stream never writes", kind.name());
         }
     }
 

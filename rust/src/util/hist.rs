@@ -107,13 +107,26 @@ impl Histogram {
     }
 
     pub fn max(&self) -> u64 {
-        self.max
+        if self.count == 0 {
+            0
+        } else {
+            self.max
+        }
     }
 
-    /// q in [0,1]; returns an approximate quantile value.
+    /// q in [0,1]; returns an approximate quantile value. Exact at the
+    /// edges: q = 1.0 reports the true maximum (not the midpoint of the
+    /// last occupied bucket), and a single-sample histogram reports its
+    /// sample for every q.
     pub fn quantile(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
+        }
+        if self.count == 1 || self.min == self.max {
+            return self.min;
+        }
+        if q >= 1.0 {
+            return self.max;
         }
         let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
         let target = target.max(1);
@@ -121,6 +134,12 @@ impl Histogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
+                // all remaining samples are in this bucket: the true
+                // maximum is a better representative than bucket_mid
+                // (which can over- or under-shoot past it)
+                if seen == self.count && target == self.count {
+                    return self.max;
+                }
                 return Self::bucket_mid(i).clamp(self.min, self.max);
             }
         }
@@ -161,6 +180,11 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.count(), 0);
         assert_eq!(h.p50(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0, "q={q}");
+        }
     }
 
     #[test]
@@ -170,8 +194,36 @@ mod tests {
         assert_eq!(h.count(), 1);
         assert_eq!(h.min(), 1000);
         assert_eq!(h.max(), 1000);
-        let p = h.p50();
-        assert!((p as f64 - 1000.0).abs() / 1000.0 < 0.07, "p50 {p}");
+        // a one-sample histogram reports its sample exactly at every q
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 1000, "q={q}");
+        }
+    }
+
+    #[test]
+    fn q_one_reports_true_max() {
+        let mut h = Histogram::new();
+        // large values land in wide buckets where bucket_mid drifts
+        // from the recorded extreme; q=1.0 must still be exact
+        for v in [1_000_003u64, 1_000_777, 1_048_575] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(1.0), 1_048_575);
+        assert!(h.p50() >= h.min() && h.p50() <= h.max());
+    }
+
+    #[test]
+    fn all_in_one_bucket() {
+        let mut h = Histogram::new();
+        // identical values: every quantile is that value
+        for _ in 0..100 {
+            h.record(4242);
+        }
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 4242, "q={q}");
+        }
+        assert_eq!(h.min(), 4242);
+        assert_eq!(h.max(), 4242);
     }
 
     #[test]

@@ -17,6 +17,14 @@
 //! read-only by construction (`testgen` fuzzer invariant), so results
 //! cannot depend on concurrent scheduling.
 //!
+//! The **mixed read-write suite** (`mut_conform`) additionally streams
+//! the offloaded mutation scenarios (hashmap put, list push_front,
+//! B+Tree leaf update) and pins *final-structure-state* equivalence
+//! plus `check_invariants` against the functional oracle — see the
+//! write-path section of `rack/README.md` for the restriction that
+//! makes this sound under concurrency (single-writer-per-key /
+//! commutative pushes).
+//!
 //! Nightly CI scales the stream lengths via `PULSE_TEST_SCALE` (see
 //! `util::ptest::test_scale`).
 
@@ -24,11 +32,15 @@ use pulse::backend::TraversalBackend;
 use pulse::isa::SP_WORDS;
 use pulse::live::LiveBackend;
 use pulse::rack::{Rack, RackConfig, ServeReport};
-use pulse::testgen::{random_structure_ops, BuiltScenario, StructureKind};
+use pulse::testgen::{
+    random_mutating_ops, random_structure_ops, BuiltScenario, MutScenario,
+    StructureKind,
+};
 use pulse::util::ptest::test_scale;
 
 const CONC: usize = 8;
 const SEED: u64 = 0xC04F;
+const MUT_SEED: u64 = 0xBEE5;
 
 fn cfg(shards: usize, in_network: bool) -> RackConfig {
     RackConfig {
@@ -192,6 +204,116 @@ conformance_tests! {
     conform_skiplist_scan => StructureKind::SkipListScan, true;
     conform_radix_trie => StructureKind::RadixTrie, true;
     conform_graph_khop => StructureKind::GraphKhop, true;
+}
+
+// ---------------------------------------------------------------------
+// Mixed read-write conformance (the offloaded write path)
+// ---------------------------------------------------------------------
+
+/// Stream one mutating scenario through the functional oracle, the
+/// rack DES (both routing modes), and the live engine, at one shard
+/// count and at serialized (conc 1) + concurrent (conc 8) windows.
+///
+/// What must agree, and why it can despite concurrency:
+/// * updates are single-writer-per-key (the generator's invariant), so
+///   the final hashmap / B+Tree state is schedule-independent and is
+///   compared **exactly** against the oracle at every concurrency;
+/// * list pushes commute as a set (each links its own pre-allocated
+///   node; the sentinel iteration is the linearization point), so the
+///   chain is compared exactly under serialized serving and as a
+///   multiset under concurrent serving;
+/// * `check_invariants` must hold everywhere (acyclic chains, intact
+///   sentinels, sorted leaves, stable entry counts);
+/// * nothing traps and nothing is lost;
+/// * at conc 1 the live engine's per-op scratchpads are bit-identical
+///   to the oracle's (under concurrency, a read racing a write may
+///   legitimately see either value, so per-op outputs are unchecked).
+fn mut_conform(kind: StructureKind, shards: usize) {
+    let scale = test_scale() as usize;
+    let build_n = 200 * scale.min(4);
+    let query_n = 40 * scale;
+    let plan = random_mutating_ops(kind, MUT_SEED, build_n, query_n);
+
+    // ground truth: serial functional application in issue order
+    let mut oracle = Rack::new(cfg(shards, true));
+    let om = MutScenario::build(&plan, &mut oracle);
+    let ops = om.ops(&plan);
+    let expected_sp: Vec<[i64; SP_WORDS]> =
+        ops.iter().map(|op| oracle.run_op_functional(op)).collect();
+    om.check_final_state(&mut oracle, &plan, true)
+        .unwrap_or_else(|e| panic!("{}/oracle: {e}", kind.name()));
+    om.check_invariants(&mut oracle, &plan);
+
+    for in_network in [true, false] {
+        let mode = if in_network { "PULSE" } else { "PULSE-ACC" };
+        for conc in [1usize, CONC] {
+            // exact chain order is only guaranteed when serving is
+            // serialized; single-writer structures are always exact
+            let exact = conc == 1 || kind != StructureKind::ForwardList;
+
+            // the rack DES
+            let mut des = Rack::new(cfg(shards, in_network));
+            let dm = MutScenario::build(&plan, &mut des);
+            let des_ops = dm.ops(&plan);
+            let rep = des.serve_batch(&des_ops, conc);
+            let who = format!(
+                "{}/{shards} shards/DES {mode}/conc {conc}",
+                kind.name()
+            );
+            assert_eq!(rep.completed, ops.len() as u64, "{who}: lost ops");
+            assert_eq!(rep.trapped, 0, "{who}: trapped");
+            dm.check_final_state(&mut des, &plan, exact)
+                .unwrap_or_else(|e| panic!("{who}: {e}"));
+            dm.check_invariants(&mut des, &plan);
+
+            // the live engine
+            let mut live =
+                LiveBackend::new(Rack::new(cfg(shards, in_network)));
+            let lm = MutScenario::build(&plan, live.rack_mut());
+            let live_ops = lm.ops(&plan);
+            live.record_results(conc == 1);
+            let rep = live.serve_batch(&live_ops, conc);
+            let who = format!(
+                "{}/{shards} shards/live {mode}/conc {conc}",
+                kind.name()
+            );
+            assert_eq!(rep.completed, ops.len() as u64, "{who}: lost ops");
+            assert_eq!(rep.trapped, 0, "{who}: trapped");
+            if conc == 1 {
+                let got = live.last_results();
+                assert_eq!(got.len(), expected_sp.len(), "{who}");
+                for (i, (g, e)) in
+                    got.iter().zip(&expected_sp).enumerate()
+                {
+                    assert_eq!(g, e, "{who}: op {i} scratchpad");
+                }
+            }
+            lm.check_final_state(live.rack_mut(), &plan, exact)
+                .unwrap_or_else(|e| panic!("{who}: {e}"));
+            lm.check_invariants(live.rack_mut(), &plan);
+        }
+    }
+}
+
+#[test]
+fn mutating_conform_hashmap_put() {
+    for shards in [1usize, 2, 4] {
+        mut_conform(StructureKind::HashMap, shards);
+    }
+}
+
+#[test]
+fn mutating_conform_list_push_front() {
+    for shards in [1usize, 2, 4] {
+        mut_conform(StructureKind::ForwardList, shards);
+    }
+}
+
+#[test]
+fn mutating_conform_bplustree_leaf_update() {
+    for shards in [1usize, 2, 4] {
+        mut_conform(StructureKind::BPlusTreeGet, shards);
+    }
 }
 
 #[test]

@@ -3,11 +3,15 @@
 //! adapter — every system behind the one trait the benches drive, each
 //! producing non-empty, internally consistent metrics.
 
+use std::sync::Arc;
+
 use pulse::backend::{CacheBackend, RpcBackend, TraversalBackend};
 use pulse::baselines::RpcKind;
+use pulse::bench_support::make_backend;
+use pulse::compiler::IterBuilder;
 use pulse::ds::HashMapDs;
 use pulse::isa::SP_WORDS;
-use pulse::rack::{Op, Rack, RackConfig, ServeReport};
+use pulse::rack::{Op, Rack, RackConfig, ServeReport, StartAddr};
 use pulse::workloads::{YcsbOp, YcsbSpec, YcsbWorkload};
 
 const KEYS: u64 = 2_000;
@@ -120,6 +124,90 @@ fn closed_loop_trait_serving_matches_batch() {
     assert_eq!(batch.completed, closed.completed);
     assert_eq!(batch.makespan_ns, closed.makespan_ns);
     assert_eq!(batch.latency.p50(), closed.latency.p50());
+}
+
+/// A t_c > η·t_d body: the dispatch engine refuses to offload it, so
+/// the DES runs it on the CPU with host-side remote reads — the path
+/// that used to panic on unmapped addresses.
+fn compute_heavy_iter() -> Arc<pulse::compiler::CompiledIter> {
+    let mut b = IterBuilder::new();
+    let x = b.imm(3);
+    let mark = b.temp_mark();
+    for _ in 0..12 {
+        let y = b.mul(x, x);
+        let z = b.add(y, x);
+        b.assign(x, z);
+        b.temp_release(mark);
+    }
+    b.sp_store(0, x);
+    b.ret();
+    Arc::new(b.finish().unwrap())
+}
+
+#[test]
+fn unmapped_addresses_trap_through_every_backend() {
+    // three shapes of stray pointer, served through all five systems:
+    //  * an offloadable read starting at unallocated VA (switch/router
+    //    answers with a trap);
+    //  * an offloaded *write* starting there (the dirty write-back path
+    //    must trap identically);
+    //  * a non-offloadable body starting there (the DES host-side
+    //    `run_on_cpu` read — the `expect` panic this regression pins).
+    const BAD: u64 = 0xDEAD_0000_0000;
+    for kind in ["pulse", "pulse-acc", "live", "cache", "rpc"] {
+        let mut backend = make_backend(kind, cfg());
+        let mut m = HashMapDs::build(backend.rack_mut(), 16);
+        for k in 0..50 {
+            m.insert(backend.rack_mut(), k, k);
+        }
+        let mut read_op = m.find_op(1);
+        read_op.stages[0].start = StartAddr::Fixed(BAD);
+        let mut write_op = m.update_op(1, 9);
+        write_op.stages[0].start = StartAddr::Fixed(BAD);
+        let mut sp = [0i64; SP_WORDS];
+        sp[0] = 1;
+        let cpu_op = Op::new(compute_heavy_iter(), BAD, sp);
+        // a repeat_while stage whose continuation word already points
+        // at the stray address: a trapped stage must terminate the op
+        // instead of re-issuing the same faulting continuation forever
+        let mut sp = [0i64; SP_WORDS];
+        sp[0] = BAD as i64; // repeat addr word
+        sp[2] = 3; // repeat guard (remaining > 0)
+        let mut repeat_op = Op::new(
+            m.find_program(),
+            BAD,
+            sp,
+        );
+        repeat_op.stages[0].repeat_while = Some((0, 2));
+        let ops = vec![read_op, write_op, cpu_op, repeat_op];
+        let rep = backend.serve_batch(&ops, 2);
+        assert_eq!(rep.completed, 4, "{kind}: lost ops");
+        assert_eq!(
+            rep.trapped, 4,
+            "{kind}: every stray-pointer op must trap (not panic)"
+        );
+    }
+}
+
+#[test]
+fn malformed_ops_trap_at_admission() {
+    // a repeat-stage op without a usable repeat_while (its words point
+    // past the scratchpad) used to panic the DES mid-run; admission
+    // validation must trap that op and keep serving the rest
+    for kind in ["pulse", "live", "cache"] {
+        let mut backend = make_backend(kind, cfg());
+        let mut m = HashMapDs::build(backend.rack_mut(), 16);
+        for k in 0..20 {
+            m.insert(backend.rack_mut(), k, k);
+        }
+        let mut bad = m.find_op(3);
+        bad.stages[0].repeat_while = Some((99, 2));
+        let good = m.find_op(5);
+        let rep = backend.serve_batch(&[bad, good], 2);
+        assert_eq!(rep.completed, 2, "{kind}: lost ops");
+        assert_eq!(rep.trapped, 1, "{kind}: malformed op must trap");
+        assert_eq!(rep.latency.count(), 2, "{kind}: latency samples");
+    }
 }
 
 #[test]

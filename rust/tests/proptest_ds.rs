@@ -12,7 +12,10 @@ use pulse::mem::AllocPolicy;
 use pulse::prop_assert;
 use pulse::prop_assert_eq;
 use pulse::rack::{Rack, RackConfig};
-use pulse::testgen::{random_structure_ops, BuiltScenario, StructureKind};
+use pulse::testgen::{
+    random_mutating_ops, random_structure_ops, BuiltScenario, MutScenario,
+    StructureKind, MUTATING_KINDS,
+};
 use pulse::util::prng::Rng;
 use pulse::util::ptest::run_prop;
 
@@ -124,6 +127,64 @@ fn prop_radix_trie_matches_model() {
 #[test]
 fn prop_graph_khop_matches_host_walk() {
     fuzz_kind(StructureKind::GraphKhop, 0x77A0, 8);
+}
+
+#[test]
+fn prop_mutating_streams_reach_the_oracle_state() {
+    // the offloaded write path under random rack shapes: a seeded
+    // mixed read-write stream (hashmap puts, list push_fronts, B+Tree
+    // leaf updates) applied through the functional path must land the
+    // structure exactly on the plan's final model, with invariants
+    // intact — regardless of node count, granularity, or placement
+    // policy. Runs in the scheduled nightly-soak at PULSE_TEST_SCALE=10
+    // like every run_prop suite.
+    run_prop("mut-streams", 0xAB77, 12, |rng| {
+        let kind = *rng.choose(&MUTATING_KINDS);
+        let mut rack = rack_with(rng);
+        let plan = random_mutating_ops(
+            kind,
+            rng.next_u64(),
+            40 + rng.below(160) as usize,
+            30,
+        );
+        let ms = MutScenario::build(&plan, &mut rack);
+        for op in ms.ops(&plan) {
+            rack.run_op_functional(&op);
+        }
+        ms.check_final_state(&mut rack, &plan, true)
+            .map_err(|e| format!("{}: {e}", kind.name()))?;
+        ms.check_invariants(&mut rack, &plan);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mutating_streams_survive_des_serving() {
+    // same streams through the timed DES at both routing modes: the
+    // final heap must match the single-writer model and hold its
+    // invariants after concurrent virtual-time serving
+    run_prop("mut-des", 0xAB78, 8, |rng| {
+        let kind = *rng.choose(&MUTATING_KINDS);
+        let in_network = rng.chance(0.5);
+        let mut rack = rack_with(rng);
+        rack.cfg.in_network_routing = in_network;
+        let plan = random_mutating_ops(
+            kind,
+            rng.next_u64(),
+            40 + rng.below(120) as usize,
+            25,
+        );
+        let ms = MutScenario::build(&plan, &mut rack);
+        let ops = ms.ops(&plan);
+        let rep = rack.serve_batch(&ops, 6);
+        prop_assert_eq!(rep.completed, ops.len() as u64);
+        prop_assert_eq!(rep.trapped, 0u64);
+        let exact = kind != StructureKind::ForwardList;
+        ms.check_final_state(&mut rack, &plan, exact)
+            .map_err(|e| format!("{}: {e}", kind.name()))?;
+        ms.check_invariants(&mut rack, &plan);
+        Ok(())
+    });
 }
 
 #[test]
