@@ -1,0 +1,172 @@
+//! Network serving: wall ops/s + client latency of the TCP wire tier
+//! (`srv`) over loopback, swept across shard count × connection count
+//! × backend.
+//!
+//! Every configuration starts a real server (`Server::bind` on an
+//! ephemeral loopback port), drives it with the real load generator
+//! (same YCSB-C hash-lookup stream, closed loop, depth 16 per
+//! connection), and records what the *client* observed: wall ops/s
+//! and p50/p95/p99 latency, plus the overload counters which must be
+//! zero at these sub-saturating sizes (self-asserted — a BUSY or
+//! decode error here is a bug, not load).
+//!
+//! Expected shape: the live backend scales with shards (real worker
+//! threads) and with connections until the engine window saturates;
+//! the inline backends (pulse DES / cache model serve through the
+//! single-threaded functional substrate over the wire) stay flat in
+//! shards — the spread between the two is the serving tier's
+//! parallelism win, the wire-level analogue of BENCH_live's scaling
+//! line.
+//!
+//! Output: table + `bench_out/BENCH_net.json`.
+
+use pulse::bench_support::{
+    build_serving_ops, fmt_us, make_backend, save_json, ServingSpec,
+    Table,
+};
+use pulse::rack::{Rack, RackConfig};
+use pulse::srv::{run_loadgen, LoadgenConfig, Server, SrvConfig};
+use pulse::util::json::Json;
+
+const OPS: u64 = 4_000;
+const KEYS: u64 = 20_000;
+const DEPTH: usize = 16;
+const CONNS: [usize; 3] = [1, 4, 8];
+const SHARDS: [usize; 3] = [1, 2, 4];
+
+fn spec() -> ServingSpec {
+    ServingSpec {
+        workload: "mix-c".into(),
+        keys: KEYS,
+        ops: OPS,
+        ..ServingSpec::default()
+    }
+}
+
+/// One server+loadgen round trip; returns the JSON row.
+fn run_config(kind: &str, shards: usize, conns: usize, tbl: &mut Table) -> Json {
+    let cfg = RackConfig::bench(shards, 1 << 20);
+    let mut backend = make_backend(kind, cfg.clone());
+    let s = spec();
+    let _ = build_serving_ops(backend.rack_mut(), &s);
+    let (server, handle) = Server::bind(
+        backend,
+        "127.0.0.1:0",
+        SrvConfig { window: 256, ..SrvConfig::default() },
+    )
+    .expect("bind ephemeral loopback port");
+    let join = std::thread::spawn(move || server.run());
+
+    let mut shadow = Rack::new(cfg);
+    let ops = build_serving_ops(&mut shadow, &s);
+    let report = run_loadgen(
+        &LoadgenConfig {
+            addr: handle.addr().to_string(),
+            conns,
+            depth: DEPTH,
+            ..LoadgenConfig::default()
+        },
+        ops,
+    )
+    .expect("loadgen run");
+    handle.shutdown();
+    let summary = join.join().expect("server thread");
+
+    assert_eq!(report.completed, OPS, "{kind}/{shards}/{conns} lost ops");
+    assert_eq!(
+        report.busy, 0,
+        "{kind}/{shards}/{conns}: BUSY at sub-saturating load"
+    );
+    assert_eq!(report.errors, 0);
+    assert_eq!(summary.srv.decode_errors, 0);
+
+    tbl.row(&[
+        kind.to_string(),
+        shards.to_string(),
+        conns.to_string(),
+        format!("{:.0}", report.ops_per_s),
+        fmt_us(report.latency.p50() as f64),
+        fmt_us(report.latency.p95() as f64),
+        fmt_us(report.latency.p99() as f64),
+        format!("{:.0}", summary.srv.e2e_p50_ns as f64 / 1e3),
+        summary.srv.busy.to_string(),
+    ]);
+    let mut row = Json::obj();
+    row.set("backend", kind)
+        .set("shards", shards)
+        .set("conns", conns)
+        .set("depth", DEPTH)
+        .set("ops", report.completed)
+        .set("ops_per_s", report.ops_per_s)
+        .set("client_p50_ns", report.latency.p50())
+        .set("client_p95_ns", report.latency.p95())
+        .set("client_p99_ns", report.latency.p99())
+        .set("client_mean_ns", report.latency.mean())
+        .set("busy", report.busy)
+        .set("errors", report.errors)
+        .set("server", summary.srv.to_json())
+        .set("engine", summary.engine.run.to_json());
+    row
+}
+
+fn main() -> std::io::Result<()> {
+    let mut tbl = Table::new(
+        "wire serving over loopback: ops/s + client latency \
+         (shards x conns x backend)",
+        &[
+            "backend", "shards", "conns", "ops/s", "p50 us", "p95 us",
+            "p99 us", "srv p50", "busy",
+        ],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut live_peak = [0f64; 5];
+
+    // live: the full shard x conn sweep (real worker threads)
+    for &shards in &SHARDS {
+        for &conns in &CONNS {
+            let row = run_config("live", shards, conns, &mut tbl);
+            if conns == *CONNS.last().unwrap() {
+                live_peak[shards] = row
+                    .get("ops_per_s")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0);
+            }
+            rows.push(row);
+        }
+    }
+    // inline backends: conn sweep at the standard 2-node rack (their
+    // wire serving is single-threaded regardless of shards)
+    for kind in ["pulse", "cache"] {
+        for &conns in &CONNS {
+            rows.push(run_config(kind, 2, conns, &mut tbl));
+        }
+    }
+
+    tbl.print();
+    let scaling = if live_peak[1] > 0.0 {
+        live_peak[4] / live_peak[1]
+    } else {
+        0.0
+    };
+    println!(
+        "\nlive wire scaling 1 -> 4 shards at conns={}: {scaling:.2}x",
+        CONNS.last().unwrap()
+    );
+
+    let mut j = Json::obj();
+    j.set("bench", "net_serving")
+        .set("workload", "mix-c (YCSB-C hash lookups over TCP loopback)")
+        .set("keys", KEYS)
+        .set("ops_per_config", OPS)
+        .set("depth", DEPTH)
+        .set(
+            "host_cores",
+            std::thread::available_parallelism()
+                .map(|n| n.get() as u64)
+                .unwrap_or(0),
+        )
+        .set("rows", rows)
+        .set("live_scaling_1_to_4_shards", scaling);
+    save_json("BENCH_net", &j)?;
+    Ok(())
+}

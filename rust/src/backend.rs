@@ -93,6 +93,17 @@ pub struct BackendMetrics {
     pub tput_ops_per_s: f64,
     pub total_iters: u64,
     pub cross_node_requests: u64,
+    /// Messages dropped by the link layer (`LinkStats.dropped` summed
+    /// across the rack's links; the DES retransmits these, so a
+    /// non-zero count with zero lost ops means loss was *absorbed*,
+    /// not absent). 0 on backends without simulated links.
+    pub net_dropped: u64,
+    /// Serving-tier overload counters (filled by `srv` when the
+    /// backend is exposed over sockets; 0 for in-process serving).
+    /// Frames rejected by magic/version/CRC/body checks:
+    pub wire_decode_errors: u64,
+    /// Requests answered BUSY instead of executed:
+    pub wire_busy: u64,
 }
 
 impl BackendMetrics {
@@ -108,6 +119,9 @@ impl BackendMetrics {
             tput_ops_per_s: r.tput_ops_per_s,
             total_iters: r.total_iters,
             cross_node_requests: r.cross_node_requests,
+            net_dropped: 0,
+            wire_decode_errors: 0,
+            wire_busy: 0,
         }
     }
 }
@@ -125,6 +139,16 @@ pub trait TraversalBackend {
     /// Apps are built against this rack, so all systems share one
     /// memory layout.
     fn rack_mut(&mut self) -> &mut Rack;
+
+    /// Whether this backend's execution model is real parallel shard
+    /// threads over the rack's memory nodes. The wire-serving tier
+    /// keys its engine mode on this capability (sharded live dataplane
+    /// vs inline functional execution) — a capability, not a
+    /// display-name comparison, so renames can't silently degrade
+    /// serving.
+    fn serves_sharded(&self) -> bool {
+        false
+    }
 
     /// Execute one op functionally (no timing); returns the final
     /// scratchpad.
@@ -183,10 +207,14 @@ impl TraversalBackend for Rack {
     }
 
     fn metrics(&self) -> BackendMetrics {
-        BackendMetrics::from_report(
+        let mut m = BackendMetrics::from_report(
             TraversalBackend::name(self),
             self.cumulative(),
-        )
+        );
+        // loss lives in the links; surfacing it here is what makes an
+        // overloaded/lossy run distinguishable from a clean one
+        m.net_dropped = self.link_totals().dropped;
+        m
     }
 }
 

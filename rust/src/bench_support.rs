@@ -113,7 +113,12 @@ pub fn bench_rack(nodes: usize, granularity: u64) -> Rack {
 /// Build one of the compared systems behind the unified trait.
 /// Kinds: `pulse`, `pulse-acc`, `cache`, `rpc`, `rpc-arm`, `cache-rpc`,
 /// `live` (real-core sharded execution; wall-clock metrics).
-pub fn make_backend(kind: &str, cfg: RackConfig) -> Box<dyn TraversalBackend> {
+/// `+ Send` so a backend can be handed to a serving thread (the wire
+/// tier runs `Server::run` off the main thread in benches and tests).
+pub fn make_backend(
+    kind: &str,
+    cfg: RackConfig,
+) -> Box<dyn TraversalBackend + Send> {
     match kind {
         "pulse" => Box::new(Rack::new(cfg)),
         "pulse-acc" => Box::new(Rack::new(cfg.acc())),
@@ -312,6 +317,84 @@ pub fn build_write_mix_ops(
             | YcsbOp::Scan(k, _) => m.find_op((k % keys) as i64),
         })
         .collect()
+}
+
+/// Parameters of one wire-servable workload (`build_serving_ops`).
+/// The serving tier's determinism contract hangs off this struct: a
+/// server and a load generator that build from the same `RackConfig`
+/// and the same `ServingSpec` get identical rack layouts, so the
+/// client's materialized start pointers are valid on the server.
+#[derive(Debug, Clone)]
+pub struct ServingSpec {
+    /// Workload name: `mix-a` / `mix-b` / `mix-c` (YCSB over the hash
+    /// index; c = read-only), or a scenario app — `skiplist`
+    /// (YCSB-E scans), `radixtrie` (YCSB-C lookups), `graph`
+    /// (bounded k-hop walks).
+    pub workload: String,
+    pub keys: u64,
+    pub ops: u64,
+    pub zipf: bool,
+    pub max_scan: usize,
+    pub max_hops: u32,
+    pub seed: u64,
+}
+
+impl Default for ServingSpec {
+    fn default() -> Self {
+        Self {
+            workload: "mix-c".into(),
+            keys: 20_000,
+            ops: 4_000,
+            zipf: true,
+            max_scan: 60,
+            max_hops: 8,
+            seed: 42,
+        }
+    }
+}
+
+/// Build the named workload's data structure on `rack` and materialize
+/// its deterministic op stream. One definition shared by `pulse serve
+/// --listen` (which keeps the structure and discards the ops), `pulse
+/// loadgen` (which materializes the ops against a shadow rack), the
+/// `net_serving` bench, and `tests/integration_srv.rs` — so all four
+/// agree byte-for-byte on what "the same op stream" means.
+pub fn build_serving_ops(
+    rack: &mut Rack,
+    spec: &ServingSpec,
+) -> Vec<Op> {
+    let wspec = WriteMixSpec {
+        keys: spec.keys,
+        ops: spec.ops,
+        zipf: spec.zipf,
+        seed: spec.seed,
+    };
+    let sspec = ScenarioSpec {
+        keys: spec.keys,
+        ops: spec.ops,
+        zipf: spec.zipf,
+        max_scan: spec.max_scan,
+        max_hops: spec.max_hops,
+        seed: spec.seed,
+        ..Default::default()
+    };
+    match spec.workload.as_str() {
+        "mix-a" => build_write_mix_ops(rack, YcsbSpec::A, &wspec),
+        "mix-b" => build_write_mix_ops(rack, YcsbSpec::B, &wspec),
+        // YCSB-C emits only reads, so the write-mix builder serves it
+        // as the pure-lookup stream
+        "mix-c" => build_write_mix_ops(rack, YcsbSpec::C, &wspec),
+        "skiplist" | "skiplist-e" => {
+            build_scenario_ops(rack, "skiplist-e", &sspec)
+        }
+        "radixtrie" | "trie-lookup" => {
+            build_scenario_ops(rack, "trie-lookup", &sspec)
+        }
+        "graph" | "graph-khop" => {
+            build_scenario_ops(rack, "graph-khop", &sspec)
+        }
+        other => panic!("unknown serving workload {other:?}"),
+    }
 }
 
 /// App handle bundling the built application with its op stream maker.

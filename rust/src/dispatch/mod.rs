@@ -60,7 +60,14 @@ pub enum Disposition {
     /// Ship to the accelerator via the switch.
     Offload(TraversalMsg),
     /// Completed entirely from the CPU-side cache.
-    CompletedLocally { sp: [i64; SP_WORDS], iters: u32 },
+    CompletedLocally {
+        /// Terminal status of the cached walk: `Return`, or `Trap`
+        /// when the program faulted mid-cache (a trap is terminal and
+        /// honest everywhere — a cached walk is no exception).
+        status: Status,
+        sp: [i64; SP_WORDS],
+        iters: u32,
+    },
     /// Iterator not offloadable (t_c > η·t_d): the caller must run it on
     /// the CPU with remote reads (one round trip per pointer hop).
     RunOnCpu,
@@ -103,13 +110,46 @@ impl DispatchEngine {
     }
 
     /// Submit a traversal. Runs the offload test, then walks the cached
-    /// prefix locally; offloads the remainder (or completes locally).
+    /// prefix locally; offloads the remainder (or completes locally),
+    /// parking a retransmission slot the DES clears via `on_response`.
     pub fn submit(
         &mut self,
         iter: &CompiledIter,
         start: u64,
         sp: [i64; SP_WORDS],
         now: Ns,
+    ) -> Disposition {
+        self.submit_inner(iter, start, sp, now, 0, true)
+    }
+
+    /// Budgeted, non-parking submission for callers that drive the
+    /// offloaded message to completion synchronously themselves
+    /// (`Rack::traverse_budgeted`, i.e. the in-process functional
+    /// path): no retransmission slot is parked — there is nothing to
+    /// retransmit and no response event that would ever clear it —
+    /// and the budget (0 = the configured grant) applies from the
+    /// first iteration, including the library-cache prefix walk, so a
+    /// per-request budget cannot be bypassed by cached execution.
+    /// (The wire tier's inline executor bypasses the dispatch engine
+    /// entirely via `Rack::traverse_offloaded`.)
+    pub fn submit_detached(
+        &mut self,
+        iter: &CompiledIter,
+        start: u64,
+        sp: [i64; SP_WORDS],
+        budget: u32,
+    ) -> Disposition {
+        self.submit_inner(iter, start, sp, 0, budget, false)
+    }
+
+    fn submit_inner(
+        &mut self,
+        iter: &CompiledIter,
+        start: u64,
+        sp: [i64; SP_WORDS],
+        now: Ns,
+        budget: u32,
+        park: bool,
     ) -> Disposition {
         if !self.cost.offloadable(&iter.program, self.cfg.eta) {
             self.stats.local_fallback += 1;
@@ -122,23 +162,26 @@ impl DispatchEngine {
             iter.program.clone(),
             start,
             sp,
-            self.cfg.max_iters,
+            if budget != 0 { budget } else { self.cfg.max_iters },
         );
 
         // Library cache: execute iterations locally while node images
         // are cached.
-        if self.cache.capacity() > 0
-            && self.walk_cached(&mut msg).is_some()
-        {
-            return Disposition::CompletedLocally {
-                sp: msg.sp,
-                iters: msg.iters_done,
-            };
+        if self.cache.capacity() > 0 {
+            if let Some(status) = self.walk_cached(&mut msg) {
+                return Disposition::CompletedLocally {
+                    status,
+                    sp: msg.sp,
+                    iters: msg.iters_done,
+                };
+            }
         }
 
         self.stats.offloaded += 1;
-        self.pending
-            .insert(id, Pending { msg: msg.clone(), sent_at: now });
+        if park {
+            self.pending
+                .insert(id, Pending { msg: msg.clone(), sent_at: now });
+        }
         Disposition::Offload(msg)
     }
 
@@ -149,7 +192,13 @@ impl DispatchEngine {
         let words = msg.program.load_words as usize;
         loop {
             if msg.iters_done >= msg.max_iters {
-                return Some(Status::Return); // budget spent locally
+                // budget spent mid-walk: this is a yield, not a
+                // completion — offload the continuation so the normal
+                // grant/boost machinery decides (reporting Return here
+                // would hand back a silently truncated scratchpad;
+                // the accelerator yields immediately on arrival since
+                // iters_done >= max_iters)
+                return None;
             }
             let Some(image) = self.cache.get(msg.cur_ptr) else {
                 if msg.iters_done > 0 {
@@ -400,7 +449,8 @@ mod tests {
         let mut sp = [0i64; SP_WORDS];
         sp[0] = 5;
         match d.submit(&it, 0x1000, sp, 0) {
-            Disposition::CompletedLocally { sp, iters } => {
+            Disposition::CompletedLocally { status, sp, iters } => {
+                assert_eq!(status, Status::Return);
                 assert_eq!(sp[1], 55);
                 assert_eq!(iters, 2);
             }

@@ -160,6 +160,12 @@ impl Instr {
             return None;
         }
         let op = Op::from_u8(buf[0])?;
+        if buf[4..8] != [0u8; 4] {
+            // pad bytes are part of the canonical form: every byte of
+            // a valid encoding is load-bearing, so corruption can
+            // never hide in ignored padding
+            return None;
+        }
         let imm = i64::from_le_bytes(buf[8..16].try_into().ok()?);
         Some(Instr { op, a: buf[1], b: buf[2], c: buf[3], imm })
     }

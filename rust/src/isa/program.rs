@@ -110,7 +110,13 @@ impl Program {
             let off = 4 + k * Instr::WIRE_SIZE;
             instrs.push(Instr::decode(&buf[off..])?);
         }
-        Some(Program::new(instrs, load_words))
+        let p = Program::new(instrs, load_words);
+        if buf[3] != p.writes_data as u8 {
+            // the flags byte is derived from the instructions; a
+            // mismatch means the bytes were not produced by `encode`
+            return None;
+        }
+        Some(p)
     }
 
     pub fn wire_size(&self) -> usize {

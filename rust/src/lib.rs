@@ -29,6 +29,7 @@ pub mod dispatch;
 pub mod rack;
 pub mod backend;
 pub mod live;
+pub mod srv;
 pub mod ds;
 pub mod apps;
 pub mod workloads;

@@ -1,0 +1,858 @@
+//! Persistent serving engine: the live dataplane kept running between
+//! requests, accepting submissions from foreign threads.
+//!
+//! [`LiveBackend::serve`](super::LiveBackend) spins shards up and joins
+//! them per call — fine for a batch, useless for a server, where
+//! requests arrive one at a time from many socket readers and the
+//! shards must outlive every individual request. This module is the
+//! long-lived form of the same dataplane:
+//!
+//! * shard workers are the *same* [`super::shard::run_shard`] bodies
+//!   (one OS thread per memory node, owning that node's accelerator);
+//! * the dispatcher thread plays the CPU-node role exactly as the
+//!   per-run coordinator does (routing, yield budget grants, trap on
+//!   unroutable pointers), but draws work from a bounded **inbox**
+//!   that any thread holding an [`EngineHandle`] may `try_submit` to;
+//! * backpressure is explicit end to end: a full inbox rejects at the
+//!   caller (`SubmitError::Busy` — the serving tier answers BUSY),
+//!   a full admission window parks up to `pending_cap` submissions,
+//!   and past that the dispatcher completes the op with
+//!   [`CompletionCode::Busy`] instead of queueing unboundedly;
+//! * shutdown is a drain: ops admitted before the marker complete,
+//!   later submissions answer [`CompletionCode::ShuttingDown`].
+//!
+//! One submission is one offloaded traversal — `{program, cur_ptr,
+//! scratch_pad, budget}`, the paper's §5 request format. Application
+//! stage chains (scans, multi-stage ops) are the *client library's*
+//! job, exactly as in the paper's CPU-node library: the wire client
+//! (`srv::loadgen::OpDriver`) chains stages by re-submitting, so the
+//! engine never needs to know about `Op` shapes.
+//!
+//! No-deadlock discipline (same invariant as `live::queue`): at most
+//! `window` jobs are in flight, every shard queue has capacity
+//! `window + 1` (the `+1` absorbs the shutdown marker), so dispatch
+//! and shard-to-shard forwarding never block; shards may block briefly
+//! pushing replies into the inbox, but the dispatcher is its only
+//! consumer and never blocks itself, so the system always drains.
+//!
+//! `sharded = false` degrades to an inline executor: the dispatcher
+//! runs each traversal to completion on its own thread through
+//! [`Rack::traverse_offloaded`] — the same always-offload semantics
+//! as the shards (no η test, no CPU fallback, no dispatch cache), on
+//! the functional substrate every model backend (cache / RPC) shares.
+//! Results — status, scratchpad, iters, crossings — are identical to
+//! the sharded path for any wire request; what changes is parallelism
+//! (none) and therefore wall clock. Known cost shared with the live
+//! coordinator: each dispatch clones the program into its
+//! `TraversalMsg` (an `Arc<Program>` message refactor would hoist it;
+//! see CHANGES.md).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::compiler::CompiledIter;
+use crate::isa::{Status, SP_WORDS};
+use crate::mem::GAddr;
+use crate::net::{RequestId, TraversalMsg};
+use crate::rack::{Rack, ServeReport};
+
+use super::metrics::{LiveRunStats, ShardStats};
+use super::queue::{self, QueueSnapshot, QueueTx, TrySend};
+use super::router::Router;
+use super::shard::{run_shard, LiveJob, Reply, ShardMsg};
+
+/// Tunables of the persistent engine.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Admission window: traversals in flight at once. The shard
+    /// queues are sized `window + 1` from this.
+    pub window: usize,
+    /// Inbox capacity (submissions + shard replies + the shutdown
+    /// marker share it). 0 = auto: `2 * window + 16`.
+    pub inbox_capacity: usize,
+    /// Submissions parked while the window is full before the
+    /// dispatcher starts answering BUSY. 0 = auto: `window`.
+    pub pending_cap: usize,
+    /// Yield-continuation cap per traversal (mirrors the live
+    /// coordinator's runaway-yield guard); past it the op traps.
+    pub max_boosts: u32,
+    /// True: one worker thread per memory node (the live dataplane).
+    /// False: inline functional execution on the dispatcher thread.
+    pub sharded: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            window: 64,
+            inbox_capacity: 0,
+            pending_cap: 0,
+            max_boosts: 4096,
+            sharded: true,
+        }
+    }
+}
+
+/// How a submission ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompletionCode {
+    /// Traversal executed; status is `Return` or `Trap`.
+    Done(Status),
+    /// Shed at the dispatcher: admission window and pending buffer
+    /// both full. The op did not execute.
+    Busy,
+    /// Arrived after the shutdown marker. The op did not execute.
+    ShuttingDown,
+}
+
+/// Terminal result of one submission, delivered through its `done`
+/// callback on the dispatcher thread (keep the callback cheap — it
+/// runs inside the serving loop; a channel send is the intended use).
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    /// Caller's correlation tag, echoed verbatim.
+    pub tag: u64,
+    pub code: CompletionCode,
+    /// Final scratchpad (zeroes when the op never executed).
+    pub sp: [i64; SP_WORDS],
+    pub iters: u64,
+    pub crossings: u32,
+    /// Dispatcher-observed service time (admission -> completion).
+    pub latency_ns: u64,
+}
+
+/// One offloaded traversal, submitted from any thread.
+pub struct Submission {
+    pub iter: Arc<CompiledIter>,
+    pub start: GAddr,
+    pub sp: [i64; SP_WORDS],
+    /// Initial iteration budget; 0 = the rack's dispatch grant.
+    pub budget: u32,
+    /// Correlation tag echoed in the [`Completion`].
+    pub tag: u64,
+    /// Invoked exactly once with the terminal result.
+    pub done: Box<dyn FnOnce(Completion) + Send>,
+}
+
+impl std::fmt::Debug for Submission {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Submission")
+            .field("start", &self.start)
+            .field("budget", &self.budget)
+            .field("tag", &self.tag)
+            .finish_non_exhaustive()
+    }
+}
+
+/// The dispatcher's single inbox message: foreign-thread submissions,
+/// shard replies (via `From<Reply>`, see `run_shard`'s generic reply
+/// sink), and the shutdown marker, multiplexed so the dispatcher can
+/// block on exactly one queue.
+#[derive(Debug)]
+pub(crate) enum EngineMsg {
+    Submit(Submission),
+    Reply(Reply),
+    Shutdown,
+}
+
+impl From<Reply> for EngineMsg {
+    fn from(r: Reply) -> Self {
+        EngineMsg::Reply(r)
+    }
+}
+
+/// Why a [`EngineHandle::try_submit`] was rejected; carries the
+/// submission back so the caller can answer its client.
+pub enum SubmitError {
+    /// Inbox full right now — answer BUSY upstream.
+    Busy(Submission),
+    /// Engine has exited (shutdown drained) — answer shutting-down.
+    Down(Submission),
+}
+
+/// Cloneable submission endpoint; safe to hold on any thread.
+pub struct EngineHandle {
+    tx: QueueTx<EngineMsg>,
+}
+
+impl Clone for EngineHandle {
+    fn clone(&self) -> Self {
+        Self { tx: self.tx.clone() }
+    }
+}
+
+impl EngineHandle {
+    /// Non-blocking submission. A full inbox is the outermost
+    /// backpressure edge: callers turn it into an explicit BUSY.
+    pub fn try_submit(&self, sub: Submission) -> Result<(), SubmitError> {
+        match self.tx.try_send(EngineMsg::Submit(sub)) {
+            Ok(()) => Ok(()),
+            Err(TrySend::Full(EngineMsg::Submit(s))) => {
+                Err(SubmitError::Busy(s))
+            }
+            Err(TrySend::Disconnected(EngineMsg::Submit(s))) => {
+                Err(SubmitError::Down(s))
+            }
+            Err(_) => unreachable!("try_submit only sends Submit"),
+        }
+    }
+
+    /// Begin the drain: ops already admitted (or parked) complete;
+    /// everything after the marker answers `ShuttingDown`. Idempotent
+    /// in effect; best-effort once the engine is already gone.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(EngineMsg::Shutdown);
+    }
+}
+
+/// Everything the engine observed over its lifetime, returned when
+/// [`Engine::run`] exits.
+#[derive(Debug, Default)]
+pub struct EngineReport {
+    /// Standard serving accounting (completions, latency percentiles,
+    /// iters, crossings, mem/net bytes) — the same `ServeReport` every
+    /// backend emits, so the serving tier feeds `BackendMetrics`.
+    pub report: ServeReport,
+    /// Shed at the dispatcher (window + pending both full).
+    pub busy: u64,
+    /// Rejected after the shutdown marker.
+    pub rejected_shutdown: u64,
+    /// Engine-internal view (shards, router, queues).
+    pub run: LiveRunStats,
+    /// Inbox counters; `rejects` is the BUSY count at the outer edge.
+    pub inbox: QueueSnapshot,
+}
+
+/// The dispatcher side; create with [`Engine::new`], then call
+/// [`Engine::run`] on the thread that owns the rack (it blocks until
+/// the drain completes).
+pub struct Engine {
+    cfg: EngineConfig,
+    rx: queue::QueueRx<EngineMsg>,
+    tx: QueueTx<EngineMsg>,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> (Engine, EngineHandle) {
+        let inbox_cap = if cfg.inbox_capacity == 0 {
+            2 * cfg.window.max(1) + 16
+        } else {
+            cfg.inbox_capacity.max(2)
+        };
+        let (tx, rx) = queue::bounded::<EngineMsg>(inbox_cap);
+        let handle = EngineHandle { tx: tx.clone() };
+        (Engine { cfg, rx, tx }, handle)
+    }
+
+    /// Serve until a shutdown marker arrives and every admitted op has
+    /// completed. Blocks the calling thread; shard workers (sharded
+    /// mode) are scoped to this call.
+    pub fn run(self, rack: &mut Rack) -> EngineReport {
+        let window = self.cfg.window.max(1);
+        let pending_cap = if self.cfg.pending_cap == 0 {
+            window
+        } else {
+            self.cfg.pending_cap
+        };
+        let grant = rack.cfg.dispatch.max_iters;
+        // bound on a client-supplied initial budget: no request may
+        // pre-grant itself more than the boost machinery could ever
+        // legitimately hand out (grant × (max_boosts + 1)), so one
+        // request cannot pin a shard for 2^32 iterations
+        let max_initial = grant
+            .saturating_mul(self.cfg.max_boosts.saturating_add(1))
+            .max(grant);
+        let inbox_stats = self.rx.stats_handle();
+
+        let mut report = EngineReport::default();
+        if self.cfg.sharded {
+            let shards = rack.cfg.nodes;
+            let in_network = rack.cfg.in_network_routing;
+            let router =
+                Arc::new(Router::new(rack.alloc.switch_map.clone()));
+            let mut txs = Vec::with_capacity(shards);
+            let mut rxs = Vec::with_capacity(shards);
+            let mut qstats = Vec::with_capacity(shards);
+            for _ in 0..shards {
+                let (tx, rx) = queue::bounded::<ShardMsg>(window + 1);
+                qstats.push(tx.stats_handle());
+                txs.push(tx);
+                rxs.push(rx);
+            }
+            let shard_stats: Vec<ShardStats> =
+                std::thread::scope(|s| {
+                    let mut handles = Vec::with_capacity(shards);
+                    for (accel, rx) in rack.memnodes.iter_mut().zip(rxs)
+                    {
+                        let peers = txs.clone();
+                        let replies = self.tx.clone();
+                        let router = Arc::clone(&router);
+                        handles.push(s.spawn(move || {
+                            run_shard(
+                                accel, rx, peers, replies, router,
+                                in_network,
+                            )
+                        }));
+                    }
+                    let mut d = Dispatcher {
+                        txs: &txs,
+                        router: router.as_ref(),
+                        report: &mut report,
+                        slots: (0..window).map(|_| None).collect(),
+                        free: (0..window as u32).rev().collect(),
+                        pending: std::collections::VecDeque::new(),
+                        pending_cap,
+                        inflight: 0,
+                        grant,
+                        max_initial,
+                        max_boosts: self.cfg.max_boosts,
+                        seq: 0,
+                        draining: false,
+                    };
+                    loop {
+                        match self.rx.recv() {
+                            Some(EngineMsg::Submit(sub)) => {
+                                d.on_submit(sub)
+                            }
+                            Some(EngineMsg::Reply(r)) => d.on_reply(r),
+                            Some(EngineMsg::Shutdown) => {
+                                d.draining = true
+                            }
+                            // all senders gone incl. our own clone:
+                            // unreachable while `self.tx` lives, but
+                            // bail instead of spinning if it happens
+                            None => break,
+                        }
+                        if d.draining
+                            && d.inflight == 0
+                            && d.pending.is_empty()
+                        {
+                            break;
+                        }
+                    }
+                    for tx in &txs {
+                        let _ = tx.send(ShardMsg::Shutdown);
+                    }
+                    drop(txs);
+                    handles
+                        .into_iter()
+                        .map(|h| {
+                            h.join().expect("engine shard panicked")
+                        })
+                        .collect()
+                });
+            report.run = LiveRunStats {
+                shards: shard_stats,
+                router: router.snapshot(),
+                queues: qstats.iter().map(|q| q.snapshot()).collect(),
+                replies: inbox_stats.snapshot(),
+            };
+            // answer submissions that raced in behind the marker
+            // (inflight is 0, so only Submit messages can remain)
+            while let Some(m) = self.rx.try_recv() {
+                if let EngineMsg::Submit(sub) = m {
+                    report.rejected_shutdown += 1;
+                    finish_unserved(sub, CompletionCode::ShuttingDown);
+                }
+            }
+        } else {
+            // inline mode: every traversal runs to completion on this
+            // thread with *live-engine* semantics (always offloaded,
+            // no η test / CPU fallback / dispatch cache) and the same
+            // per-request budget + boost cap the sharded dispatcher
+            // applies — so the two modes answer any wire request with
+            // the same status, scratchpad, iters, and crossings
+            loop {
+                match self.rx.recv() {
+                    Some(EngineMsg::Submit(sub)) => {
+                        let born = Instant::now();
+                        let o = rack.traverse_offloaded(
+                            &sub.iter,
+                            sub.start,
+                            sub.sp,
+                            sub.budget.min(max_initial),
+                            self.cfg.max_boosts,
+                        );
+                        {
+                            // same formula as the sharded finish path:
+                            // request + response over the CPU links,
+                            // plus one shard hop per crossing
+                            let wire = TraversalMsg::wire_size_for(
+                                &sub.iter.program,
+                            )
+                                as u64;
+                            report.report.net_bytes += wire * 2
+                                + o.crossings as u64 * wire;
+                        }
+                        complete_done(
+                            &mut report,
+                            sub,
+                            o.status,
+                            o.sp,
+                            o.iters as u64,
+                            o.crossings,
+                            born,
+                        );
+                    }
+                    Some(EngineMsg::Reply(_)) => {
+                        unreachable!("no shards in inline mode")
+                    }
+                    Some(EngineMsg::Shutdown) | None => break,
+                }
+            }
+            // answer anything that raced in behind the marker
+            while let Some(m) = self.rx.try_recv() {
+                if let EngineMsg::Submit(sub) = m {
+                    report.rejected_shutdown += 1;
+                    finish_unserved(sub, CompletionCode::ShuttingDown);
+                }
+            }
+        }
+        report.inbox = inbox_stats.snapshot();
+        report
+    }
+}
+
+/// Deliver a served completion and fold it into the report (shared by
+/// the sharded dispatcher and the inline executor so their accounting
+/// cannot drift).
+fn complete_done(
+    report: &mut EngineReport,
+    sub: Submission,
+    status: Status,
+    sp: [i64; SP_WORDS],
+    iters: u64,
+    crossings: u32,
+    born: Instant,
+) {
+    let lat = (born.elapsed().as_nanos() as u64).max(1);
+    let r = &mut report.report;
+    r.completed += 1;
+    if status == Status::Trap {
+        r.trapped += 1;
+    }
+    r.latency.record(lat);
+    r.crossings.record(crossings as u64);
+    if crossings > 0 {
+        r.cross_node_requests += 1;
+    }
+    r.total_iters += iters;
+    r.mem_bytes += iters * sub.iter.program.dram_bytes_per_iter();
+    (sub.done)(Completion {
+        tag: sub.tag,
+        code: CompletionCode::Done(status),
+        sp,
+        iters,
+        crossings,
+        latency_ns: lat,
+    });
+}
+
+/// Deliver a shed (BUSY / shutting-down) completion — the op never
+/// executed, so nothing is folded into the serving report.
+fn finish_unserved(sub: Submission, code: CompletionCode) {
+    (sub.done)(Completion {
+        tag: sub.tag,
+        code,
+        sp: [0i64; SP_WORDS],
+        iters: 0,
+        crossings: 0,
+        latency_ns: 0,
+    });
+}
+
+/// One admitted traversal's dispatcher-side state.
+struct EngSlot {
+    sub: Submission,
+    born: Instant,
+    boosts: u32,
+}
+
+/// The CPU-node role over the persistent inbox: admission window,
+/// yield grants, routing, completion — the live coordinator's state
+/// machine minus stage chaining (one submission = one traversal).
+struct Dispatcher<'a> {
+    txs: &'a [QueueTx<ShardMsg>],
+    router: &'a Router,
+    report: &'a mut EngineReport,
+    slots: Vec<Option<EngSlot>>,
+    free: Vec<u32>,
+    pending: std::collections::VecDeque<Submission>,
+    pending_cap: usize,
+    inflight: usize,
+    grant: u32,
+    /// Cap on a client-supplied initial budget (see `Engine::run`).
+    max_initial: u32,
+    max_boosts: u32,
+    seq: u64,
+    draining: bool,
+}
+
+impl Dispatcher<'_> {
+    fn on_submit(&mut self, sub: Submission) {
+        if self.draining {
+            self.report.rejected_shutdown += 1;
+            finish_unserved(sub, CompletionCode::ShuttingDown);
+            return;
+        }
+        if self.inflight < self.slots.len() {
+            self.admit(sub);
+        } else if self.pending.len() < self.pending_cap {
+            self.pending.push_back(sub);
+        } else {
+            self.report.busy += 1;
+            finish_unserved(sub, CompletionCode::Busy);
+        }
+    }
+
+    fn admit(&mut self, sub: Submission) {
+        let token = self
+            .free
+            .pop()
+            .expect("inflight < window implies a free token");
+        let budget = if sub.budget == 0 {
+            self.grant
+        } else {
+            sub.budget.min(self.max_initial)
+        };
+        let id = RequestId { cpu_node: 0, seq: self.seq };
+        self.seq += 1;
+        let msg = TraversalMsg::request(
+            id,
+            sub.iter.program.clone(),
+            sub.start,
+            sub.sp,
+            budget,
+        );
+        self.slots[token as usize] =
+            Some(EngSlot { sub, born: Instant::now(), boosts: 0 });
+        self.inflight += 1;
+        self.send(token, msg);
+    }
+
+    /// Route + enqueue; unroutable pointers (and shard-teardown races)
+    /// complete as traps, exactly like the live coordinator.
+    fn send(&mut self, token: u32, msg: TraversalMsg) {
+        match self.router.route(msg.cur_ptr, false) {
+            Some(shard) => {
+                if let Err(ShardMsg::Job(job)) = self.txs
+                    [shard as usize]
+                    .send(ShardMsg::Job(LiveJob { token, msg }))
+                {
+                    self.finish(token, Status::Trap, &job.msg);
+                }
+            }
+            None => self.finish(token, Status::Trap, &msg),
+        }
+    }
+
+    fn on_reply(&mut self, reply: Reply) {
+        match reply {
+            Reply::Done { token, msg } => {
+                self.finish(token, msg.status, &msg)
+            }
+            Reply::Yield { token, mut msg } => {
+                let slot =
+                    self.slots[token as usize].as_mut().unwrap();
+                slot.boosts += 1;
+                if slot.boosts > self.max_boosts {
+                    self.finish(token, Status::Trap, &msg);
+                } else {
+                    msg.max_iters += self.grant;
+                    self.send(token, msg);
+                }
+            }
+            // PULSE-ACC mode: the bounce returns here for re-routing
+            Reply::Bounced { token, msg } => self.send(token, msg),
+        }
+    }
+
+    fn finish(&mut self, token: u32, status: Status, msg: &TraversalMsg) {
+        let slot = self.slots[token as usize].take().unwrap();
+        self.free.push(token);
+        self.inflight -= 1;
+        let wire = msg.wire_size() as u64;
+        self.report.report.net_bytes +=
+            wire * 2 + msg.node_crossings as u64 * wire;
+        complete_done(
+            self.report,
+            slot.sub,
+            status,
+            msg.sp,
+            msg.iters_done as u64,
+            msg.node_crossings,
+            slot.born,
+        );
+        if let Some(next) = self.pending.pop_front() {
+            self.admit(next);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ds::{ForwardList, HashMapDs};
+    use crate::rack::RackConfig;
+    use std::sync::mpsc;
+
+    /// Drive `n` hash lookups through an engine and return the
+    /// completions in tag order.
+    fn run_lookups(sharded: bool, nodes: usize, n: u64) -> Vec<Completion> {
+        let mut rack = Rack::new(RackConfig::small(nodes));
+        let mut m = HashMapDs::build(&mut rack, 64);
+        for i in 0..400 {
+            m.insert(&mut rack, i, i * 3);
+        }
+        let subs: Vec<(Arc<crate::compiler::CompiledIter>, u64, i64)> =
+            (0..n)
+                .map(|i| {
+                    let key = (i % 400) as i64;
+                    (m.find_program(), m.bucket_ptr(key), key)
+                })
+                .collect();
+        let (engine, handle) = Engine::new(EngineConfig {
+            window: 8,
+            sharded,
+            ..EngineConfig::default()
+        });
+        let (ctx, crx) = mpsc::channel::<Completion>();
+        let mut out = std::thread::scope(|s| {
+            let eng = s.spawn(|| engine.run(&mut rack));
+            let mut got = Vec::new();
+            for (tag, (iter, start, key)) in subs.into_iter().enumerate()
+            {
+                let mut sp = [0i64; SP_WORDS];
+                sp[0] = key;
+                let ctx = ctx.clone();
+                // bounded inbox: spin on Busy (test-only; the server
+                // answers BUSY to its client instead)
+                let mut sub = Submission {
+                    iter,
+                    start,
+                    sp,
+                    budget: 0,
+                    tag: tag as u64,
+                    done: Box::new(move |c| {
+                        let _ = ctx.send(c);
+                    }),
+                };
+                loop {
+                    match handle.try_submit(sub) {
+                        Ok(()) => break,
+                        Err(SubmitError::Busy(s)) => {
+                            sub = s;
+                            std::thread::yield_now();
+                        }
+                        Err(SubmitError::Down(_)) => {
+                            panic!("engine exited early")
+                        }
+                    }
+                }
+            }
+            for _ in 0..n {
+                got.push(crx.recv().expect("completion"));
+            }
+            handle.shutdown();
+            let rep = eng.join().unwrap();
+            assert_eq!(rep.report.completed, n);
+            assert_eq!(rep.report.trapped, 0);
+            assert_eq!(rep.rejected_shutdown, 0);
+            got
+        });
+        out.sort_by_key(|c| c.tag);
+        out
+    }
+
+    #[test]
+    fn sharded_engine_serves_foreign_thread_submissions() {
+        let got = run_lookups(true, 2, 200);
+        assert_eq!(got.len(), 200);
+        for (i, c) in got.iter().enumerate() {
+            assert_eq!(c.code, CompletionCode::Done(Status::Return));
+            assert_eq!(c.sp[1], ((i % 400) as i64) * 3, "op {i}");
+            assert!(c.latency_ns >= 1);
+        }
+    }
+
+    #[test]
+    fn inline_engine_matches_sharded_results() {
+        let a = run_lookups(true, 2, 64);
+        let b = run_lookups(false, 2, 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.sp, y.sp);
+            assert_eq!(x.code, y.code);
+        }
+    }
+
+    /// Both executor modes must honor the per-request budget and the
+    /// boost cap identically: a walk longer than budget × (boosts+1)
+    /// traps in sharded AND inline mode, with matching iteration
+    /// counts (regression for the inline path silently ignoring both).
+    #[test]
+    fn budget_and_boost_cap_agree_across_modes() {
+        let run_one = |sharded: bool| -> Completion {
+            let mut rack = Rack::new(RackConfig::small(1));
+            let mut l = ForwardList::new();
+            for i in 1..=500 {
+                l.push(&mut rack, i);
+            }
+            let sum = l.sum_program();
+            // max_boosts 0: the very first yield (at the 50-iteration
+            // budget) must trap instead of being re-granted
+            let (engine, handle) = Engine::new(EngineConfig {
+                window: 1,
+                max_boosts: 0,
+                sharded,
+                ..EngineConfig::default()
+            });
+            let (ctx, crx) = mpsc::channel::<Completion>();
+            std::thread::scope(|s| {
+                let eng = s.spawn(|| engine.run(&mut rack));
+                handle
+                    .try_submit(Submission {
+                        iter: sum.clone(),
+                        start: l.head,
+                        sp: [0i64; SP_WORDS],
+                        budget: 50,
+                        tag: 0,
+                        done: Box::new(move |c| {
+                            let _ = ctx.send(c);
+                        }),
+                    })
+                    .ok()
+                    .expect("submit");
+                let c = crx.recv().unwrap();
+                handle.shutdown();
+                let _ = eng.join().unwrap();
+                c
+            })
+        };
+        let a = run_one(true);
+        let b = run_one(false);
+        // 500-hop walk, 50-iteration budget, no boosts allowed: both
+        // modes must trap at the budget rather than run to completion
+        assert_eq!(a.code, CompletionCode::Done(Status::Trap));
+        assert_eq!(b.code, a.code, "inline diverged from sharded");
+        assert_eq!(b.iters, a.iters, "iteration accounting diverged");
+        assert!(
+            a.iters >= 1 && a.iters < 500,
+            "budget/boost cap was not applied (iters={})",
+            a.iters
+        );
+    }
+
+    #[test]
+    fn pending_overflow_answers_busy_without_executing() {
+        // window 1, pending 1, and a slow op hogging the slot: the
+        // burst behind it must split into parked + BUSY, never a hang
+        let mut rack = Rack::new(RackConfig::small(1));
+        let mut l = ForwardList::new();
+        for i in 1..=50_000 {
+            l.push(&mut rack, i);
+        }
+        let sum = l.sum_program();
+        let (engine, handle) = Engine::new(EngineConfig {
+            window: 1,
+            pending_cap: 1,
+            inbox_capacity: 32,
+            sharded: true,
+            ..EngineConfig::default()
+        });
+        let (ctx, crx) = mpsc::channel::<Completion>();
+        std::thread::scope(|s| {
+            let eng = s.spawn(|| engine.run(&mut rack));
+            let n = 8u64;
+            for tag in 0..n {
+                let ctx = ctx.clone();
+                handle
+                    .try_submit(Submission {
+                        iter: sum.clone(),
+                        start: l.head,
+                        sp: [0i64; SP_WORDS],
+                        budget: 0,
+                        tag,
+                        done: Box::new(move |c| {
+                            let _ = ctx.send(c);
+                        }),
+                    })
+                    .ok()
+                    .expect("inbox sized for the whole burst");
+            }
+            let mut done = 0u64;
+            let mut busy = 0u64;
+            for _ in 0..n {
+                match crx.recv().unwrap().code {
+                    CompletionCode::Done(Status::Return) => done += 1,
+                    CompletionCode::Busy => busy += 1,
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            handle.shutdown();
+            let rep = eng.join().unwrap();
+            assert_eq!(done + busy, n);
+            assert!(busy >= 1, "burst of {n} through window 1 never shed");
+            assert_eq!(rep.busy, busy);
+            assert_eq!(rep.report.completed, done);
+        });
+    }
+
+    #[test]
+    fn shutdown_rejects_late_submissions() {
+        let mut rack = Rack::new(RackConfig::small(1));
+        let mut m = HashMapDs::build(&mut rack, 16);
+        m.insert(&mut rack, 1, 10);
+        let find = m.find_program();
+        let start = m.bucket_ptr(1);
+        let (engine, handle) = Engine::new(EngineConfig {
+            window: 2,
+            sharded: true,
+            ..EngineConfig::default()
+        });
+        let (ctx, crx) = mpsc::channel::<Completion>();
+        std::thread::scope(|s| {
+            let eng = s.spawn(|| engine.run(&mut rack));
+            handle.shutdown();
+            // raced-in-behind-the-marker submission: either the
+            // dispatcher answers ShuttingDown, or the inbox is already
+            // disconnected and try_submit reports Down
+            let ctx2 = ctx.clone();
+            let late = handle.try_submit(Submission {
+                iter: find.clone(),
+                start,
+                sp: [0i64; SP_WORDS],
+                budget: 0,
+                tag: 9,
+                done: Box::new(move |c| {
+                    let _ = ctx2.send(c);
+                }),
+            });
+            match late {
+                Ok(()) => {
+                    // the marker may still be ahead of us in FIFO
+                    // order (served normally), behind us (answered
+                    // ShuttingDown), or — in the narrow teardown race
+                    // — the send can land after the engine's final
+                    // drain sweep, in which case no completion comes
+                    // (the serving tier surfaces that as a connection
+                    // close; see srv/README.md)
+                    match crx.recv_timeout(
+                        std::time::Duration::from_secs(2),
+                    ) {
+                        Ok(c) => assert!(matches!(
+                            c.code,
+                            CompletionCode::ShuttingDown
+                                | CompletionCode::Done(Status::Return)
+                        )),
+                        Err(_) => {}
+                    }
+                }
+                Err(SubmitError::Down(_)) => {}
+                Err(SubmitError::Busy(_)) => {
+                    panic!("empty inbox reported Busy")
+                }
+            }
+            let _ = eng.join().unwrap();
+        });
+    }
+}

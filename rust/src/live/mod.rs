@@ -35,11 +35,16 @@
 //! loss-free (in-process queues don't drop), so there is no
 //! retransmission machinery.
 
+pub mod engine;
 pub mod metrics;
 pub mod queue;
 pub mod router;
 mod shard;
 
+pub use self::engine::{
+    Completion, CompletionCode, Engine, EngineConfig, EngineHandle,
+    EngineReport, Submission, SubmitError,
+};
 pub use self::metrics::{LiveRunStats, ShardStats};
 pub use self::router::{Router, RouterStats};
 
@@ -247,6 +252,10 @@ impl TraversalBackend for LiveBackend {
 
     fn rack_mut(&mut self) -> &mut Rack {
         &mut self.rack
+    }
+
+    fn serves_sharded(&self) -> bool {
+        true // one real worker thread per memory node
     }
 
     fn submit(&mut self, op: &Op) -> [i64; SP_WORDS] {

@@ -27,6 +27,7 @@ pub struct QueueStats {
     pushed: AtomicU64,
     popped: AtomicU64,
     full_blocks: AtomicU64,
+    rejects: AtomicU64,
     capacity: u64,
 }
 
@@ -38,6 +39,10 @@ pub struct QueueSnapshot {
     pub popped: u64,
     /// Times a sender found the queue full and had to block.
     pub full_blocks: u64,
+    /// Times a `try_send` found the queue full and gave up — the
+    /// explicit-backpressure path (the serving tier answers BUSY
+    /// instead of blocking a socket reader on engine capacity).
+    pub rejects: u64,
 }
 
 impl QueueSnapshot {
@@ -54,8 +59,18 @@ impl QueueStats {
             pushed: self.pushed.load(Ordering::Relaxed),
             popped: self.popped.load(Ordering::Relaxed),
             full_blocks: self.full_blocks.load(Ordering::Relaxed),
+            rejects: self.rejects.load(Ordering::Relaxed),
         }
     }
+}
+
+/// Why a [`QueueTx::try_send`] did not enqueue; carries the value back.
+#[derive(Debug)]
+pub enum TrySend<T> {
+    /// Queue at capacity right now — caller should shed load (BUSY).
+    Full(T),
+    /// Receiver gone — the consumer has exited for good.
+    Disconnected(T),
 }
 
 /// Sending half; clone one per producer.
@@ -117,6 +132,26 @@ impl<T> QueueTx<T> {
         }
     }
 
+    /// Non-blocking send: enqueue if there is room *right now*,
+    /// otherwise hand the value back. This is the admission edge of
+    /// the serving tier's backpressure discipline — a full queue is an
+    /// explicit signal (BUSY) to the caller, never a hidden stall.
+    pub fn try_send(&self, v: T) -> Result<(), TrySend<T>> {
+        match self.tx.try_send(v) {
+            Ok(()) => {
+                self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Full(v)) => {
+                self.stats.rejects.fetch_add(1, Ordering::Relaxed);
+                Err(TrySend::Full(v))
+            }
+            Err(TrySendError::Disconnected(v)) => {
+                Err(TrySend::Disconnected(v))
+            }
+        }
+    }
+
     /// Handle to the shared counters (survives the queue itself).
     pub fn stats_handle(&self) -> Arc<QueueStats> {
         Arc::clone(&self.stats)
@@ -170,6 +205,29 @@ mod tests {
         assert_eq!(s.pushed, 5);
         assert_eq!(s.popped, 5);
         assert_eq!(s.depth(), 0);
+    }
+
+    #[test]
+    fn try_send_rejects_when_full_and_counts() {
+        let (tx, rx) = bounded::<u32>(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        match tx.try_send(3) {
+            Err(TrySend::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        let s = tx.stats_handle().snapshot();
+        assert_eq!(s.pushed, 2);
+        assert_eq!(s.rejects, 1);
+        assert_eq!(s.full_blocks, 0, "try_send never blocks");
+        // room frees up -> accepted again
+        assert_eq!(rx.recv(), Some(1));
+        tx.try_send(3).unwrap();
+        drop(rx);
+        match tx.try_send(4) {
+            Err(TrySend::Disconnected(4)) => {}
+            other => panic!("expected Disconnected(4), got {other:?}"),
+        }
     }
 
     #[test]

@@ -57,11 +57,17 @@ pub(crate) enum Reply {
 }
 
 /// Worker body; returns its counters when the thread joins.
-pub(crate) fn run_shard(
+///
+/// Generic over the reply queue's message type so the same worker
+/// serves both consumers: the per-run `LiveBackend` coordinator
+/// (`R = Reply`) and the persistent [`super::engine`] dispatcher,
+/// whose single inbox multiplexes replies with foreign-thread
+/// submissions (`R = EngineMsg`, via `From<Reply>`).
+pub(crate) fn run_shard<R: From<Reply>>(
     accel: &mut Accelerator,
     rx: QueueRx<ShardMsg>,
     peers: Vec<QueueTx<ShardMsg>>,
-    replies: QueueTx<Reply>,
+    replies: QueueTx<R>,
     router: Arc<Router>,
     in_network: bool,
 ) -> ShardStats {
@@ -139,8 +145,8 @@ pub(crate) fn run_shard(
     stats
 }
 
-fn answer_trap(
-    replies: &QueueTx<Reply>,
+fn answer_trap<R: From<Reply>>(
+    replies: &QueueTx<R>,
     token: u32,
     mut msg: TraversalMsg,
     stats: &mut ShardStats,
@@ -150,12 +156,12 @@ fn answer_trap(
     send_reply(replies, Reply::Done { token, msg }, stats);
 }
 
-fn send_reply(
-    replies: &QueueTx<Reply>,
+fn send_reply<R: From<Reply>>(
+    replies: &QueueTx<R>,
     reply: Reply,
     stats: &mut ShardStats,
 ) {
-    if replies.send(reply).is_err() {
+    if replies.send(reply.into()).is_err() {
         // dispatcher already gone (teardown after an early bail-out)
         stats.drops += 1;
     }

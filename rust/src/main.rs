@@ -3,7 +3,12 @@
 //! Subcommands:
 //!   serve    — closed-loop serving of an app workload on a simulated
 //!              rack, printing latency/throughput (the Fig. 7 row for
-//!              one configuration)
+//!              one configuration); with `--listen ADDR` it instead
+//!              builds the workload's structures and serves them over
+//!              TCP (the `srv` wire tier) until shutdown
+//!   loadgen  — network load generator: build the same workload
+//!              against a shadow rack and drive a listening server
+//!              over real sockets (closed- or open-loop)
 //!   inspect  — compile a named data-structure iterator and print its
 //!              PULSE-ISA listing + cost-model verdict
 //!   selftest — verify the AOT XLA artifacts against the native
@@ -14,15 +19,24 @@
 //!   pulse serve --app btrdb --window-s 4 --nodes 2
 //!   pulse serve --app wiredtiger --backend live --nodes 4
 //!   pulse serve --mix a --backend pulse        (YCSB-A read/write mix)
+//!   pulse serve --listen 127.0.0.1:7311 --backend live --mix c
+//!   pulse loadgen --addr 127.0.0.1:7311 --mix c --conns 8 --depth 16
 //!   pulse inspect --iter bplustree-update
 //!   pulse selftest
+//!
+//! serve --listen / loadgen contract: both sides must agree on the
+//! rack shape (--nodes/--granularity/--seed) and the workload spec
+//! (--mix or --app, --keys, --ops, --seed) — the client materializes
+//! its op stream against an identically seeded shadow rack, which is
+//! what makes its start pointers valid on the server.
 
 use pulse::apps::{BtrDbApp, WebServiceApp, WiredTigerApp};
 use pulse::bench_support::{
-    build_scenario_ops, build_write_mix_ops, make_backend, ScenarioSpec,
-    WriteMixSpec,
+    build_scenario_ops, build_serving_ops, build_write_mix_ops,
+    make_backend, ScenarioSpec, ServingSpec, WriteMixSpec,
 };
-use pulse::rack::RackConfig;
+use pulse::rack::{Rack, RackConfig};
+use pulse::srv::{run_loadgen, LoadgenConfig, Server, SrvConfig};
 use pulse::util::cli::Args;
 use pulse::workloads::{YcsbSpec, YcsbWorkload};
 
@@ -34,21 +48,186 @@ fn main() -> CliResult {
     let args = Args::parse();
     match args.subcommand() {
         Some("serve") => serve(&args),
+        Some("loadgen") => loadgen(&args),
         Some("inspect") => inspect(&args),
         Some("selftest") => selftest(),
         _ => {
             eprintln!(
-                "usage: pulse <serve|inspect|selftest> [--app webservice|\
-                 wiredtiger|btrdb|skiplist|radixtrie|graph] [--backend \
-                 pulse|pulse-acc|cache|rpc|rpc-arm|cache-rpc|live] \
-                 [--mix a|b] [--nodes N] [--ops N] [--conc N] \
-                 [--ycsb A|B|C|E] [--window-s S] [--uniform] \
-                 [--granularity BYTES] [--loss P] [--no-in-network] \
-                 [--hops N] [--iter NAME]"
+                "usage: pulse <serve|loadgen|inspect|selftest>\n\
+                 serve:   [--app webservice|wiredtiger|btrdb|skiplist|\
+                 radixtrie|graph] [--backend pulse|pulse-acc|cache|rpc|\
+                 rpc-arm|cache-rpc|live] [--mix a|b|c] [--nodes N] \
+                 [--ops N] [--conc N] [--ycsb A|B|C|E] [--window-s S] \
+                 [--uniform] [--granularity BYTES] [--loss P] \
+                 [--no-in-network] [--hops N]\n\
+                 serve --listen ADDR: expose the backend over TCP \
+                 (frames: srv/README.md); builds the --mix/--app \
+                 structures, serves for --duration-s S (graceful \
+                 drain + metrics tables on exit; without it the \
+                 process runs until killed — std-only build, no \
+                 signal handler, so a kill skips the drain); --conc \
+                 sets the admission window\n\
+                 loadgen: --addr ADDR [--mix a|b|c | --app skiplist|\
+                 radixtrie|graph] [--conns N] [--depth D] [--rate \
+                 OPS_PER_S (open loop)] [--keys N] [--ops N] [--seed S] \
+                 [--json NAME] — rack/workload flags must match the \
+                 server's\n\
+                 inspect: [--iter NAME]"
             );
             std::process::exit(2);
         }
     }
+}
+
+/// The wire-servable workload both `serve --listen` and `loadgen`
+/// build: `--mix a|b|c` (hash index YCSB) or a scenario `--app`.
+fn serving_spec(args: &Args) -> Result<ServingSpec, String> {
+    let workload = match (args.get("mix"), args.get("app")) {
+        // the whole serving contract is that server and loadgen agree
+        // on ONE workload — an ambiguous flag pair is an error, not a
+        // silent precedence rule
+        (Some(m), Some(app)) => {
+            return Err(format!(
+                "--mix {m:?} and --app {app:?} are mutually \
+                 exclusive: pick one workload"
+            ))
+        }
+        (Some(m), None) => match m {
+            "a" | "A" => "mix-a".to_string(),
+            "b" | "B" => "mix-b".to_string(),
+            "c" | "C" => "mix-c".to_string(),
+            other => {
+                return Err(format!("--mix expects a|b|c, got {other:?}"))
+            }
+        },
+        (None, Some(app)) => match app {
+            "skiplist" | "radixtrie" | "graph" => app.to_string(),
+            other => {
+                return Err(format!(
+                    "wire serving supports --app skiplist|radixtrie|\
+                     graph or --mix a|b|c, got {other:?}"
+                ))
+            }
+        },
+        (None, None) => "mix-c".to_string(),
+    };
+    Ok(ServingSpec {
+        workload,
+        keys: args.u64_or("keys", 20_000),
+        ops: args.u64_or("ops", 4_000),
+        zipf: !args.flag("uniform"),
+        max_scan: args.usize_or("max-scan", 60),
+        max_hops: args
+            .u64_or("hops", 8)
+            .clamp(1, pulse::ds::graph::MAX_HOPS as u64)
+            as u32,
+        seed: args.u64_or("seed", 42),
+    })
+}
+
+/// `pulse serve --listen ADDR`: build the workload's structures on the
+/// chosen backend and serve them over TCP until shutdown, then print
+/// the serving-tier and backend metrics tables.
+fn serve_listen(args: &Args, listen: &str) -> CliResult {
+    let kind = args.str_or("backend", "live");
+    let mut backend = make_backend(&kind, cfg_from(args));
+    let spec = serving_spec(args)?;
+    // build the structures; the op stream itself is the client's job
+    let _ = build_serving_ops(backend.rack_mut(), &spec);
+    let cfg = SrvConfig {
+        window: args.usize_or("conc", 64),
+        run_secs: args.f64_or("duration-s", 0.0),
+        ..SrvConfig::default()
+    };
+    let (server, handle) = Server::bind(backend, listen, cfg)?;
+    eprintln!(
+        "pulse srv: listening on {} backend={kind} workload={} \
+         keys={} seed={} nodes={} window={}",
+        handle.addr(),
+        spec.workload,
+        spec.keys,
+        spec.seed,
+        args.usize_or("nodes", 4),
+        cfg.window,
+    );
+    if cfg.run_secs == 0.0 {
+        eprintln!(
+            "pulse srv: no --duration-s; the process runs until \
+             killed, and a kill skips the graceful drain and the \
+             exit metrics tables (std-only build: no signal handler \
+             to catch Ctrl-C) — pass --duration-s S for a drained, \
+             metered exit"
+        );
+    }
+    let summary = server.run();
+    println!("{}", summary.srv.summary());
+    let b = &summary.backend;
+    println!(
+        "backend {}: ops={} trapped={} ops/s={:.0} p50={:.1}us \
+         p95={:.1}us p99={:.1}us busy={} decode-errors={} dropped={}",
+        b.name,
+        b.ops,
+        b.trapped,
+        b.tput_ops_per_s,
+        b.p50_latency_ns as f64 / 1e3,
+        b.p95_latency_ns as f64 / 1e3,
+        b.p99_latency_ns as f64 / 1e3,
+        b.wire_busy,
+        b.wire_decode_errors,
+        b.net_dropped,
+    );
+    println!("engine: {}", summary.engine.run.summary());
+    Ok(())
+}
+
+/// `pulse loadgen`: materialize the workload against a shadow rack and
+/// drive a listening server over real sockets.
+fn loadgen(args: &Args) -> CliResult {
+    let Some(addr) = args.get("addr") else {
+        return Err("loadgen needs --addr HOST:PORT".into());
+    };
+    let spec = serving_spec(args)?;
+    let mut shadow = Rack::new(cfg_from(args));
+    let ops = build_serving_ops(&mut shadow, &spec);
+    let cfg = LoadgenConfig {
+        addr: addr.to_string(),
+        conns: args.usize_or("conns", 4),
+        depth: args.usize_or("depth", 16),
+        open_rate: args.f64_or("rate", 0.0),
+        // clamp instead of silently wrapping (2^32 would truncate to
+        // 0 = "server default", inverting the user's intent); the
+        // server clamps further to its own grant × boost bound
+        budget: {
+            let b = args.u64_or("budget", 0);
+            if b > u32::MAX as u64 {
+                eprintln!(
+                    "pulse loadgen: --budget {b} clamped to {}",
+                    u32::MAX
+                );
+            }
+            b.min(u32::MAX as u64) as u32
+        },
+        record_results: false,
+    };
+    eprintln!(
+        "pulse loadgen: {} -> {} workload={} conns={} depth={} {}",
+        ops.len(),
+        cfg.addr,
+        spec.workload,
+        cfg.conns,
+        cfg.depth,
+        if cfg.open_rate > 0.0 {
+            format!("open-loop @ {:.0} ops/s", cfg.open_rate)
+        } else {
+            "closed-loop".to_string()
+        },
+    );
+    let report = run_loadgen(&cfg, ops)?;
+    println!("{}", report.summary());
+    if let Some(name) = args.get("json") {
+        pulse::bench_support::save_json(name, &report.to_json())?;
+    }
+    Ok(())
 }
 
 fn cfg_from(args: &Args) -> RackConfig {
@@ -66,6 +245,12 @@ fn cfg_from(args: &Args) -> RackConfig {
 }
 
 fn serve(args: &Args) -> CliResult {
+    // `--listen ADDR` switches serve from in-process workload replay
+    // to the TCP wire tier (srv/): same backends, real sockets
+    if let Some(listen) = args.get("listen") {
+        let listen = listen.to_string();
+        return serve_listen(args, &listen);
+    }
     let app_name = args.str_or("app", "webservice");
     let kind = args.str_or("backend", "pulse");
     let ops_n = args.u64_or("ops", 2_000);
@@ -84,9 +269,12 @@ fn serve(args: &Args) -> CliResult {
         let spec = match mix {
             "a" | "A" => YcsbSpec::A,
             "b" | "B" => YcsbSpec::B,
+            // read-only control over the same index (the wire tier's
+            // default workload, here for in-process comparison)
+            "c" | "C" => YcsbSpec::C,
             other => {
                 return Err(
-                    format!("--mix expects a|b, got {other:?}").into()
+                    format!("--mix expects a|b|c, got {other:?}").into()
                 )
             }
         };
@@ -214,6 +402,12 @@ fn print_report(
             "switch: routed={} reroutes={}",
             sw.routed_requests, sw.reroutes
         );
+    }
+    // link-layer loss is absorbed by retransmission, so it only shows
+    // up if surfaced explicitly — overload must be observable
+    let dropped = backend.metrics().net_dropped;
+    if dropped > 0 {
+        println!("links: dropped={dropped} (retransmitted)");
     }
 }
 

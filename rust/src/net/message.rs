@@ -65,7 +65,15 @@ impl TraversalMsg {
     /// Wire size in bytes (for link serialization accounting):
     /// eth+ip+udp headers (42) + pulse header (32) + program + sp.
     pub fn wire_size(&self) -> usize {
-        42 + 32 + self.program.wire_size() + SP_WORDS * 8
+        Self::wire_size_for(&self.program)
+    }
+
+    /// [`TraversalMsg::wire_size`] from the program alone — single
+    /// definition of the on-link size formula, so byte accounting that
+    /// never materializes a message (the serving tier's inline
+    /// executor) cannot drift from the link layer's.
+    pub fn wire_size_for(program: &Program) -> usize {
+        42 + 32 + program.wire_size() + SP_WORDS * 8
     }
 
     /// Serialize (used by the byte-level transport tests; the in-process
@@ -88,6 +96,13 @@ impl TraversalMsg {
         out
     }
 
+    /// Canonical decode: strict inverse of [`TraversalMsg::encode`].
+    /// Shared by the byte-level transport tests and (via `srv::wire`'s
+    /// frame bodies) the socket tier, so rejection is total: unknown
+    /// kind or status bytes, a nonzero pad, an undecodable program, or
+    /// any length mismatch — including trailing garbage after the
+    /// program — all return `None` rather than decoding to a message
+    /// that would re-encode differently.
     pub fn decode(buf: &[u8]) -> Option<Self> {
         if buf.len() < 39 + SP_WORDS * 8 {
             return None;
@@ -97,11 +112,17 @@ impl TraversalMsg {
             1 => MsgKind::Response,
             _ => return None,
         };
+        if buf[1] != 0 {
+            return None; // pad byte is part of the canonical form
+        }
         let cpu_node = u16::from_le_bytes([buf[2], buf[3]]);
         let seq = u64::from_le_bytes(buf[4..12].try_into().ok()?);
         let cur_ptr = u64::from_le_bytes(buf[12..20].try_into().ok()?);
         let iters_done = u32::from_le_bytes(buf[20..24].try_into().ok()?);
         let max_iters = u32::from_le_bytes(buf[24..28].try_into().ok()?);
+        if buf[28] > 3 {
+            return None; // Status is 0..=3; nothing else round-trips
+        }
         let status = Status::from_i32(buf[28] as i32);
         let node_crossings =
             u32::from_le_bytes(buf[29..33].try_into().ok()?);
@@ -111,7 +132,11 @@ impl TraversalMsg {
             let p = sp_off + i * 8;
             *w = i64::from_le_bytes(buf[p..p + 8].try_into().ok()?);
         }
-        let program = Program::decode(&buf[sp_off + SP_WORDS * 8..])?;
+        let prog_off = sp_off + SP_WORDS * 8;
+        let program = Program::decode(&buf[prog_off..])?;
+        if prog_off + program.wire_size() != buf.len() {
+            return None; // trailing bytes: not a canonical encoding
+        }
         Some(Self {
             kind,
             id: RequestId { cpu_node, seq },
@@ -199,5 +224,110 @@ mod tests {
         let mut bad = buf.clone();
         bad[0] = 9;
         assert!(TraversalMsg::decode(&bad).is_none());
+    }
+
+    #[test]
+    fn decode_rejects_non_canonical_forms() {
+        let buf = sample_msg().encode();
+        // trailing garbage after the program
+        let mut padded = buf.clone();
+        padded.push(0xAB);
+        assert!(TraversalMsg::decode(&padded).is_none());
+        // nonzero pad byte
+        let mut bad = buf.clone();
+        bad[1] = 1;
+        assert!(TraversalMsg::decode(&bad).is_none());
+        // status byte outside 0..=3 (used to alias to Trap)
+        let mut bad = buf.clone();
+        bad[28] = 200;
+        assert!(TraversalMsg::decode(&bad).is_none());
+    }
+
+    /// Randomized canonical round trip at pinned seeds: arbitrary
+    /// verified programs + arbitrary traversal state encode/decode to
+    /// the identical message, and re-encoding is byte-identical
+    /// (`decode ∘ encode = id` and `encode ∘ decode ∘ encode =
+    /// encode`). Server and load generator share this codec, so this
+    /// property is what keeps the two from skewing.
+    #[test]
+    fn randomized_round_trip_at_pinned_seeds() {
+        crate::util::ptest::run_prop(
+            "traversal_msg_round_trip",
+            0x7EA_15E5,
+            200,
+            |rng| {
+                let program =
+                    crate::testgen::random_verified_program(rng, 24);
+                let mut sp = [0i64; SP_WORDS];
+                for w in sp.iter_mut() {
+                    *w = rng.next_i64();
+                }
+                let mut m = TraversalMsg::request(
+                    RequestId {
+                        cpu_node: (rng.below(1 << 16)) as u16,
+                        seq: rng.next_i64() as u64,
+                    },
+                    program,
+                    rng.next_i64() as u64,
+                    sp,
+                    1 + rng.below(1 << 20) as u32,
+                );
+                m.iters_done = rng.below(1 << 20) as u32;
+                m.node_crossings = rng.below(64) as u32;
+                if rng.chance(0.5) {
+                    m = m.into_response(if rng.chance(0.2) {
+                        Status::Trap
+                    } else {
+                        Status::Return
+                    });
+                }
+                let bytes = m.encode();
+                let back = match TraversalMsg::decode(&bytes) {
+                    Some(b) => b,
+                    None => {
+                        return Err("canonical encoding rejected".into())
+                    }
+                };
+                crate::prop_assert_eq!(back, m);
+                crate::prop_assert_eq!(back.encode(), bytes);
+                Ok(())
+            },
+        );
+    }
+
+    /// Any single-byte corruption either fails to decode or decodes
+    /// to a visibly different message — there is no byte the codec
+    /// silently ignores.
+    #[test]
+    fn corruption_never_decodes_to_the_same_message() {
+        crate::util::ptest::run_prop(
+            "traversal_msg_corruption",
+            0xC0_44E7,
+            50,
+            |rng| {
+                let program =
+                    crate::testgen::random_verified_program(rng, 16);
+                let mut sp = [0i64; SP_WORDS];
+                sp[0] = rng.next_i64();
+                let m = TraversalMsg::request(
+                    RequestId { cpu_node: 1, seq: 7 },
+                    program,
+                    0x4000,
+                    sp,
+                    64,
+                );
+                let bytes = m.encode();
+                let pos = rng.below(bytes.len() as u64) as usize;
+                let mut bad = bytes.clone();
+                bad[pos] ^= 1 + rng.below(255) as u8;
+                if let Some(back) = TraversalMsg::decode(&bad) {
+                    crate::prop_assert!(
+                        back != m,
+                        "flip at byte {pos} was invisible"
+                    );
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -445,10 +445,23 @@ impl Rack {
             return;
         }
         match self.dispatch.submit(&stage.iter, start, sp, now) {
-            Disposition::CompletedLocally { sp, iters } => {
+            Disposition::CompletedLocally { status, sp, iters } => {
+                // a trap mid-cache is terminal and honest, exactly
+                // like the offloaded and CPU-fallback paths
+                if status == Status::Trap {
+                    report.trapped += 1;
+                }
                 run.iters_total += iters;
                 self.advance_op(
-                    now, run, sp, false, q, report, inflight, done, runs,
+                    now,
+                    run,
+                    sp,
+                    status == Status::Trap,
+                    q,
+                    report,
+                    inflight,
+                    done,
+                    runs,
                 );
             }
             Disposition::RunOnCpu => {

@@ -38,7 +38,7 @@ use crate::dispatch::{DispatchEngine, Disposition};
 use crate::interp::{logic_pass, Workspace};
 use crate::isa::{Status, NREG, SP_WORDS};
 use crate::mem::{GAddr, NodeId, RackAllocator, RangeTable, Region};
-use crate::net::Link;
+use crate::net::{Link, TraversalMsg};
 use crate::sim::LatencyModel;
 use crate::switch::{Route, Switch};
 
@@ -65,6 +65,20 @@ impl std::fmt::Display for HostAccessError {
             }
         }
     }
+}
+
+/// Full result of a budgeted functional traversal
+/// ([`Rack::traverse_budgeted`]): terminal status, final scratchpad,
+/// and the accounting the serving tier surfaces (iterations, node
+/// crossings, whether the traversal went over the offload path at
+/// all — CPU fallback and cache-local completion move no link bytes).
+#[derive(Debug, Clone, Copy)]
+pub struct TraverseOutcome {
+    pub status: Status,
+    pub sp: [i64; SP_WORDS],
+    pub iters: u32,
+    pub crossings: u32,
+    pub offloaded: bool,
 }
 
 pub struct Rack {
@@ -135,6 +149,24 @@ impl Rack {
     /// Cumulative metrics over every serve run on this rack.
     pub fn cumulative(&self) -> &ServeReport {
         &self.totals
+    }
+
+    /// Aggregate link-layer counters across every segment (CPU up/down
+    /// plus all per-node links). `dropped` is the loss the dispatch
+    /// engine had to retransmit around — surfaced through
+    /// `BackendMetrics.net_dropped` so overload is observable.
+    pub fn link_totals(&self) -> crate::net::LinkStats {
+        let mut t = crate::net::LinkStats::default();
+        let links = [&self.link_cpu_up, &self.link_cpu_down]
+            .into_iter()
+            .chain(self.links_node_down.iter())
+            .chain(self.links_node_up.iter());
+        for l in links {
+            t.messages += l.stats.messages;
+            t.bytes += l.stats.bytes;
+            t.dropped += l.stats.dropped;
+        }
+        t
     }
 
     /// Allocate on the rack and keep switch + TCAM tables in sync.
@@ -233,40 +265,125 @@ impl Rack {
         start: GAddr,
         sp: [i64; SP_WORDS],
     ) -> (Status, [i64; SP_WORDS], u32) {
-        match self.dispatch.submit(iter, start, sp, 0) {
-            Disposition::CompletedLocally { sp, iters } => {
-                (Status::Return, sp, iters)
-            }
-            Disposition::RunOnCpu => self.run_on_cpu(iter, start, sp),
-            Disposition::Offload(mut msg) => {
-                let mut budget_boosts = 0;
-                let mut from_node = false;
-                loop {
-                    let node = match self.switch.route(&msg, from_node) {
-                        Route::MemNode(n) => n,
-                        Route::Invalid(_) => {
-                            return (Status::Trap, msg.sp, msg.iters_done)
-                        }
-                        Route::CpuNode(_) => unreachable!(),
-                    };
-                    let out = self.memnodes[node as usize].visit(&mut msg);
-                    match out.end {
-                        VisitEnd::Done(st) => {
-                            return (st, msg.sp, msg.iters_done)
-                        }
-                        VisitEnd::NotLocal => {
-                            from_node = true;
-                            continue;
-                        }
-                        VisitEnd::Yield => {
-                            budget_boosts += 1;
-                            if budget_boosts > 4096 {
-                                return (Status::Trap, msg.sp, msg.iters_done);
-                            }
-                            msg.max_iters += self.cfg.dispatch.max_iters;
-                        }
-                    }
+        let o = self.traverse_budgeted(iter, start, sp, 0, 4096);
+        (o.status, o.sp, o.iters)
+    }
+
+    /// Functional traversal with *live-engine* semantics: always
+    /// offloaded — no η offload test, no CPU fallback, no library
+    /// cache (the live shards are general-purpose cores, so none of
+    /// those apply) — with an explicit initial budget (0 = the
+    /// dispatch grant) and yield-continuation cap. This is the
+    /// serving tier's inline executor: for any wire request it
+    /// produces the same terminal status, scratchpad, iteration count,
+    /// and crossings as the sharded dataplane, including for programs
+    /// the dispatch engine would have kept on the CPU.
+    pub fn traverse_offloaded(
+        &mut self,
+        iter: &CompiledIter,
+        start: GAddr,
+        sp: [i64; SP_WORDS],
+        budget: u32,
+        max_boosts: u32,
+    ) -> TraverseOutcome {
+        let grant = self.cfg.dispatch.max_iters;
+        let msg = TraversalMsg::request(
+            crate::net::RequestId { cpu_node: 0, seq: 0 },
+            iter.program.clone(),
+            start,
+            sp,
+            if budget != 0 { budget } else { grant },
+        );
+        self.drive_offloaded(msg, max_boosts)
+    }
+
+    /// Drive one offloaded message to its terminal status: route at
+    /// the switch, visit memory nodes, follow bounces, re-grant on
+    /// yields up to `max_boosts`. The single definition behind both
+    /// functional offload paths ([`Rack::traverse_budgeted`] and
+    /// [`Rack::traverse_offloaded`]) — the wire tier's inline-vs-
+    /// sharded parity depends on there being exactly one copy of this
+    /// state machine.
+    fn drive_offloaded(
+        &mut self,
+        mut msg: TraversalMsg,
+        max_boosts: u32,
+    ) -> TraverseOutcome {
+        let mut budget_boosts = 0;
+        let mut from_node = false;
+        let status = loop {
+            let node = match self.switch.route(&msg, from_node) {
+                Route::MemNode(n) => n,
+                Route::Invalid(_) => break Status::Trap,
+                Route::CpuNode(_) => unreachable!(),
+            };
+            let out = self.memnodes[node as usize].visit(&mut msg);
+            match out.end {
+                VisitEnd::Done(st) => break st,
+                VisitEnd::NotLocal => {
+                    from_node = true;
+                    continue;
                 }
+                VisitEnd::Yield => {
+                    budget_boosts += 1;
+                    if budget_boosts > max_boosts {
+                        break Status::Trap;
+                    }
+                    msg.max_iters += self.cfg.dispatch.max_iters;
+                }
+            }
+        };
+        TraverseOutcome {
+            status,
+            sp: msg.sp,
+            iters: msg.iters_done,
+            crossings: msg.node_crossings,
+            offloaded: true,
+        }
+    }
+
+    /// [`Rack::traverse`] with an explicit initial iteration budget
+    /// (0 = the dispatch grant) and yield-continuation cap — the
+    /// *in-process* functional path with full dispatch-engine
+    /// semantics (η offload test, CPU fallback, library cache). The
+    /// budget applies from the first iteration, including the cache
+    /// prefix walk (`dispatch.submit_detached`); it does not apply to
+    /// CPU-fallback iterators, which run to completion (bounded only
+    /// by `run_on_cpu`'s runaway guard). The wire tier's inline
+    /// executor does NOT use this: it serves through
+    /// [`Rack::traverse_offloaded`], whose always-offload semantics
+    /// match the sharded dataplane.
+    pub fn traverse_budgeted(
+        &mut self,
+        iter: &CompiledIter,
+        start: GAddr,
+        sp: [i64; SP_WORDS],
+        budget: u32,
+        max_boosts: u32,
+    ) -> TraverseOutcome {
+        match self.dispatch.submit_detached(iter, start, sp, budget) {
+            Disposition::CompletedLocally { status, sp, iters } => {
+                TraverseOutcome {
+                    status,
+                    sp,
+                    iters,
+                    crossings: 0,
+                    offloaded: false,
+                }
+            }
+            Disposition::RunOnCpu => {
+                let (status, sp, iters) =
+                    self.run_on_cpu(iter, start, sp);
+                TraverseOutcome {
+                    status,
+                    sp,
+                    iters,
+                    crossings: 0,
+                    offloaded: false,
+                }
+            }
+            Disposition::Offload(msg) => {
+                self.drive_offloaded(msg, max_boosts)
             }
         }
     }
@@ -275,12 +392,23 @@ impl Rack {
     /// pointer hop (paper §4.1). Mutating iterators write the dirty
     /// window back with one remote write per hop; a pointer into
     /// unmapped memory traps the traversal (never panics the loop).
+    /// Bounded by a runaway guard sized like the offload path's
+    /// maximum legitimate work (grant × (default boost cap + 1)): a
+    /// cyclic pointer chain traps instead of pinning the caller — on
+    /// the wire tier's inline executor, a single client-registered
+    /// cyclic program would otherwise wedge the engine forever.
     pub(crate) fn run_on_cpu(
         &mut self,
         iter: &CompiledIter,
         start: GAddr,
         sp: [i64; SP_WORDS],
     ) -> (Status, [i64; SP_WORDS], u32) {
+        let cap = self
+            .cfg
+            .dispatch
+            .max_iters
+            .saturating_mul(4097)
+            .max(1 << 20);
         let mut ws = Workspace::new();
         ws.sp.copy_from_slice(&sp);
         let words = iter.program.load_words as usize;
@@ -288,6 +416,11 @@ impl Rack {
         let mut iters = 0u32;
         let mut buf = vec![0i64; words];
         loop {
+            if iters >= cap {
+                let mut out = [0i64; SP_WORDS];
+                out.copy_from_slice(&ws.sp);
+                return (Status::Trap, out, iters);
+            }
             let mut out = [0i64; SP_WORDS];
             if self.try_read_words(cur, &mut buf).is_err() {
                 out.copy_from_slice(&ws.sp);

@@ -1,0 +1,854 @@
+//! Network load generator + client library for the wire protocol.
+//!
+//! Three layers, each reusable on its own:
+//!
+//! * [`WireClient`] — one blocking connection: frame out, frame in,
+//!   program registration. The byte-level hardening tests drive it
+//!   raw ([`WireClient::send_raw`]).
+//! * [`OpDriver`] — the CPU-node library role from the paper: an
+//!   application [`Op`] is a *stage chain*, and chaining is client
+//!   work — resolve a stage against the previous scratchpad, ship one
+//!   traversal, decide repeat/next-stage/finish from the response.
+//!   It calls the very same [`Stage::resolve`] / [`Stage::wants_repeat`]
+//!   the in-process executors use, so a wire-served op stream produces
+//!   bit-identical scratchpads to `LiveBackend::serve` (the
+//!   `integration_srv` conformance tests pin this).
+//! * [`run_loadgen`] — N connections × pipeline depth over a
+//!   materialized op stream, closed-loop (a completion funds the next
+//!   launch) or open-loop (launches paced at a target rate regardless
+//!   of completions), reporting wall ops/s, client-observed latency
+//!   percentiles, and BUSY/error counts.
+//!
+//! The generator never builds data structures itself: the caller
+//! materializes ops against a *shadow rack* constructed with the same
+//! `RackConfig` + seed + workload spec as the server's, which yields
+//! the same deterministic layout and therefore valid start pointers —
+//! the same build-once/agree-on-seed contract every conformance suite
+//! in this repo relies on.
+
+use std::collections::HashMap;
+use std::io::{self, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::compiler::CompiledIter;
+use crate::isa::{Program, ProgramId, Status, SP_WORDS};
+use crate::mem::GAddr;
+use crate::rack::Op;
+use crate::util::hist::Histogram;
+use crate::util::json::Json;
+
+use super::wire::{
+    decode_payload, encode_frame, read_frame, Envelope, Frame, FrameRead,
+    DEFAULT_MAX_FRAME,
+};
+
+// ---------------------------------------------------------------------
+// WireClient: one blocking connection.
+// ---------------------------------------------------------------------
+
+/// Sending half of a connection (cloneable via `try_clone` on the
+/// underlying socket; a whole frame is written with one `write_all`,
+/// so two senders behind a mutex never interleave bytes).
+pub struct WireSender {
+    w: TcpStream,
+}
+
+impl WireSender {
+    pub fn send(&mut self, seq: u64, frame: &Frame) -> io::Result<()> {
+        self.w.write_all(&encode_frame(seq, frame))
+    }
+
+    pub fn send_raw(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.w.write_all(bytes)
+    }
+}
+
+/// One blocking client connection.
+pub struct WireClient {
+    r: BufReader<TcpStream>,
+    w: WireSender,
+    max_frame: u32,
+    next_seq: u64,
+}
+
+impl WireClient {
+    pub fn connect<A: std::net::ToSocketAddrs>(
+        addr: A,
+    ) -> io::Result<Self> {
+        let s = TcpStream::connect(addr)?;
+        let _ = s.set_nodelay(true);
+        Ok(Self {
+            r: BufReader::new(s.try_clone()?),
+            w: WireSender { w: s },
+            max_frame: DEFAULT_MAX_FRAME,
+            next_seq: 1,
+        })
+    }
+
+    /// Fresh per-connection sequence number.
+    pub fn next_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    pub fn send(&mut self, seq: u64, frame: &Frame) -> io::Result<()> {
+        self.w.send(seq, frame)
+    }
+
+    /// Raw bytes straight onto the stream (corruption tests).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.w.send_raw(bytes)
+    }
+
+    /// A second sending half for the open-loop split (receiver thread
+    /// keeps `self`, pacer thread sends through the clone).
+    pub fn sender(&self) -> io::Result<WireSender> {
+        Ok(WireSender { w: self.w.w.try_clone()? })
+    }
+
+    /// Receive one frame. `Ok(None)` is a clean EOF at a frame
+    /// boundary; an undecodable or unframeable payload maps to
+    /// `InvalidData` (clients talk to one trusted server — there is
+    /// nothing useful to salvage from a corrupt downstream frame).
+    pub fn recv(&mut self) -> io::Result<Option<Envelope>> {
+        loop {
+            return match read_frame(&mut self.r, self.max_frame) {
+                FrameRead::Frame(p) => decode_payload(&p)
+                    .map(Some)
+                    .map_err(|e| {
+                        io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!(
+                                "bad frame from server: {:?}",
+                                e.kind
+                            ),
+                        )
+                    }),
+                FrameRead::Eof => Ok(None),
+                // only reachable with a read timeout configured on
+                // the socket: idle at a frame boundary, keep waiting
+                FrameRead::Idle => continue,
+                FrameRead::Oversize(n) => Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("unframeable length {n} from server"),
+                )),
+                FrameRead::Io(e) => Err(e),
+            };
+        }
+    }
+
+    /// Install a program under `id` and wait for the acknowledgement.
+    pub fn register(
+        &mut self,
+        id: u32,
+        program: &Program,
+    ) -> io::Result<()> {
+        let seq = self.next_seq();
+        self.send(
+            seq,
+            &Frame::Register { id, program: program.clone() },
+        )?;
+        match self.recv()? {
+            Some(Envelope {
+                frame: Frame::RegisterOk { id: got }, ..
+            }) if got == id => Ok(()),
+            Some(Envelope { frame: Frame::Error { code, msg }, .. }) => {
+                Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("register rejected ({code:?}): {msg}"),
+                ))
+            }
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected register reply: {other:?}"),
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// OpDriver: client-side stage chaining.
+// ---------------------------------------------------------------------
+
+/// Client-side execution state of one application op. Mirrors
+/// `Rack::run_op_functional` / the live coordinator stage machine:
+/// degenerate stages (resolved start 0) are skipped without a network
+/// round trip, `repeat_while` re-issues a stage from its continuation
+/// scratchpad, and a trap is terminal for the whole op.
+pub struct OpDriver {
+    op: Op,
+    stage_idx: usize,
+    prev_sp: [i64; SP_WORDS],
+    repeat_from: Option<[i64; SP_WORDS]>,
+    done: bool,
+    trapped: bool,
+    final_sp: [i64; SP_WORDS],
+}
+
+impl OpDriver {
+    pub fn new(op: Op) -> Self {
+        // mirror admission-time validation: a malformed op traps
+        // client-side with a zero scratchpad, exactly as
+        // `ServeReport::record_admission_trap` accounts it in-process
+        let malformed = op.validate().is_err();
+        Self {
+            op,
+            stage_idx: 0,
+            prev_sp: [0i64; SP_WORDS],
+            repeat_from: None,
+            done: malformed,
+            trapped: malformed,
+            final_sp: [0i64; SP_WORDS],
+        }
+    }
+
+    /// The next traversal to put on the wire, or `None` once the op is
+    /// complete (check [`OpDriver::final_sp`]). Degenerate stages are
+    /// consumed here without producing a request.
+    pub fn next_request(
+        &mut self,
+    ) -> Option<(Arc<CompiledIter>, GAddr, [i64; SP_WORDS])> {
+        if self.done {
+            return None;
+        }
+        loop {
+            if self.stage_idx >= self.op.stages.len() {
+                self.final_sp = self.prev_sp;
+                self.done = true;
+                return None;
+            }
+            let stage = &self.op.stages[self.stage_idx];
+            let repeat = self.repeat_from.take();
+            let (start, sp) = stage.resolve(&self.prev_sp, repeat);
+            if start == 0 {
+                // degenerate: skip forward, exactly like the executors
+                self.prev_sp = sp;
+                self.stage_idx += 1;
+                continue;
+            }
+            return Some((stage.iter.clone(), start, sp));
+        }
+    }
+
+    /// Feed the response of the traversal the last
+    /// [`OpDriver::next_request`] produced.
+    pub fn on_response(&mut self, status: Status, sp: [i64; SP_WORDS]) {
+        if self.done {
+            return;
+        }
+        if status == Status::Trap {
+            self.final_sp = sp;
+            self.trapped = true;
+            self.done = true;
+            return;
+        }
+        let stage = &self.op.stages[self.stage_idx];
+        if stage.wants_repeat(&sp) {
+            self.repeat_from = Some(sp);
+        } else {
+            self.prev_sp = sp;
+            self.stage_idx += 1;
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    pub fn trapped(&self) -> bool {
+        self.trapped
+    }
+
+    pub fn final_sp(&self) -> [i64; SP_WORDS] {
+        self.final_sp
+    }
+}
+
+// ---------------------------------------------------------------------
+// Load generator.
+// ---------------------------------------------------------------------
+
+/// Load-generator parameters.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    pub conns: usize,
+    /// Closed-loop pipeline depth per connection (in-flight ops).
+    pub depth: usize,
+    /// Open-loop total launch rate, ops/s across all connections;
+    /// 0 = closed loop.
+    pub open_rate: f64,
+    /// Per-request iteration budget; 0 = server default.
+    pub budget: u32,
+    /// Capture every op's final scratchpad (conformance tests).
+    pub record_results: bool,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7311".into(),
+            conns: 4,
+            depth: 16,
+            open_rate: 0.0,
+            budget: 0,
+            record_results: false,
+        }
+    }
+}
+
+/// Aggregated client-side view of one load-generation run.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    /// Ops handed to the generator.
+    pub ops: u64,
+    /// Ops that were actually launched (== `ops` on a clean run).
+    pub launched: u64,
+    pub completed: u64,
+    /// Completed ops whose traversal trapped.
+    pub trapped: u64,
+    /// Ops aborted by a BUSY answer.
+    pub busy: u64,
+    /// Ops lost to ERROR frames / protocol violations / dead conns.
+    pub errors: u64,
+    pub wall_s: f64,
+    pub ops_per_s: f64,
+    /// Client-observed per-op latency (first request → op complete).
+    pub latency: Histogram,
+    /// Final scratchpads by original op index (only with
+    /// `record_results`; `None` for ops that did not complete).
+    pub results: Vec<Option<[i64; SP_WORDS]>>,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("ops", self.ops)
+            .set("launched", self.launched)
+            .set("completed", self.completed)
+            .set("trapped", self.trapped)
+            .set("busy", self.busy)
+            .set("errors", self.errors)
+            .set("wall_s", self.wall_s)
+            .set("ops_per_s", self.ops_per_s)
+            .set("p50_ns", self.latency.p50())
+            .set("p95_ns", self.latency.p95())
+            .set("p99_ns", self.latency.p99())
+            .set("mean_ns", self.latency.mean());
+        j
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "ops={} completed={} trapped={} busy={} errors={}\n\
+             wall={:.3}s throughput={:.0} ops/s\n\
+             client latency: p50={:.1}us p95={:.1}us p99={:.1}us \
+             mean={:.1}us",
+            self.ops,
+            self.completed,
+            self.trapped,
+            self.busy,
+            self.errors,
+            self.wall_s,
+            self.ops_per_s,
+            self.latency.p50() as f64 / 1e3,
+            self.latency.p95() as f64 / 1e3,
+            self.latency.p99() as f64 / 1e3,
+            self.latency.mean() / 1e3,
+        )
+    }
+}
+
+/// Anything that can put a frame on the wire (direct sender, or a
+/// mutex-shared one in open-loop mode).
+trait FrameSink {
+    fn put(&mut self, seq: u64, frame: &Frame) -> io::Result<()>;
+}
+
+impl FrameSink for WireSender {
+    fn put(&mut self, seq: u64, frame: &Frame) -> io::Result<()> {
+        self.send(seq, frame)
+    }
+}
+
+impl FrameSink for &Mutex<WireSender> {
+    fn put(&mut self, seq: u64, frame: &Frame) -> io::Result<()> {
+        self.lock().unwrap().send(seq, frame)
+    }
+}
+
+/// Per-connection stats folded into the final report.
+#[derive(Debug, Default)]
+struct ConnStats {
+    launched: u64,
+    completed: u64,
+    trapped: u64,
+    busy: u64,
+    errors: u64,
+    hist: Histogram,
+}
+
+/// One connection's serving state: its slice of the op stream, the
+/// in-flight seq → op map, and the per-op drivers.
+struct ConnRun {
+    work: Vec<(usize, OpDriver)>,
+    t0: Vec<Option<Instant>>,
+    results: Vec<Option<[i64; SP_WORDS]>>,
+    inflight: HashMap<u64, usize>,
+    next: usize,
+    seq: u64,
+    budget: u32,
+    ids: Arc<HashMap<ProgramId, u32>>,
+    stats: ConnStats,
+}
+
+impl ConnRun {
+    fn new(
+        work: Vec<(usize, OpDriver)>,
+        budget: u32,
+        ids: Arc<HashMap<ProgramId, u32>>,
+    ) -> Self {
+        let n = work.len();
+        Self {
+            work,
+            t0: vec![None; n],
+            results: vec![None; n],
+            inflight: HashMap::new(),
+            next: 0,
+            seq: 1,
+            budget,
+            ids,
+            stats: ConnStats::default(),
+        }
+    }
+
+    fn all_launched(&self) -> bool {
+        self.next >= self.work.len()
+    }
+
+    fn finished(&self) -> bool {
+        self.all_launched() && self.inflight.is_empty()
+    }
+
+    /// Launch the next op (first request, or immediate completion for
+    /// an op that resolves degenerately). Returns false when the
+    /// stream is exhausted.
+    fn launch_next(&mut self, w: &mut impl FrameSink) -> io::Result<bool> {
+        if self.all_launched() {
+            return Ok(false);
+        }
+        let li = self.next;
+        self.next += 1;
+        self.stats.launched += 1;
+        self.t0[li] = Some(Instant::now());
+        self.pump_op(li, w)?;
+        Ok(true)
+    }
+
+    /// Send the op's next traversal, or record its completion.
+    fn pump_op(
+        &mut self,
+        li: usize,
+        w: &mut impl FrameSink,
+    ) -> io::Result<()> {
+        let step = self.work[li].1.next_request();
+        match step {
+            Some((iter, start, sp)) => {
+                let seq = self.seq;
+                self.seq += 1;
+                let prog = *self
+                    .ids
+                    .get(&iter.program.id())
+                    .expect("op stream program was not registered");
+                // register BEFORE the write: if the put fails the op
+                // is still in `inflight`, so the unconditional
+                // abort_inflight sweep folds it into the error count
+                // instead of dropping it from every counter
+                self.inflight.insert(seq, li);
+                w.put(
+                    seq,
+                    &Frame::Request {
+                        prog,
+                        budget: self.budget,
+                        start,
+                        sp,
+                    },
+                )?;
+            }
+            None => self.complete(li),
+        }
+        Ok(())
+    }
+
+    fn complete(&mut self, li: usize) {
+        let d = &self.work[li].1;
+        self.stats.completed += 1;
+        if d.trapped() {
+            self.stats.trapped += 1;
+        }
+        self.results[li] = Some(d.final_sp());
+        if let Some(t0) = self.t0[li] {
+            self.stats
+                .hist
+                .record((t0.elapsed().as_nanos() as u64).max(1));
+        }
+    }
+
+    /// Feed one server frame; may send a continuation request.
+    fn on_envelope(
+        &mut self,
+        env: Envelope,
+        w: &mut impl FrameSink,
+    ) -> io::Result<()> {
+        match env.frame {
+            Frame::Response { status, sp, .. } => {
+                // uncorrelated (duplicate/late) responses are ignored
+                // like uncorrelated BUSY/ERROR frames: the error count
+                // stays a partition of ops, never of stray frames
+                let Some(li) = self.inflight.remove(&env.seq) else {
+                    return Ok(());
+                };
+                self.work[li].1.on_response(status, sp);
+                self.pump_op(li, w)?;
+            }
+            Frame::Busy => {
+                if self.inflight.remove(&env.seq).is_some() {
+                    self.stats.busy += 1;
+                }
+            }
+            Frame::Error { .. } => {
+                // count as an op error only when it correlates to an
+                // in-flight request; connection-level errors (seq 0,
+                // pre-disconnect notices) are accounted by the abort
+                // sweeps when the connection dies — never both, so
+                // completed+busy+errors stays a partition of ops
+                if self.inflight.remove(&env.seq).is_some() {
+                    self.stats.errors += 1;
+                }
+            }
+            // unexpected server-to-client kinds: not op-correlated;
+            // ignore rather than distort the op accounting
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// The connection died with ops still outstanding.
+    fn abort_inflight(&mut self) {
+        self.stats.errors += self.inflight.len() as u64;
+        self.inflight.clear();
+    }
+}
+
+/// Closed loop: keep `depth` ops in flight; every completion funds the
+/// next launch.
+fn closed_loop(
+    client: &mut WireClient,
+    run: &mut ConnRun,
+    depth: usize,
+) -> io::Result<()> {
+    let mut w = client.sender()?;
+    loop {
+        while run.inflight.len() < depth.max(1)
+            && !run.all_launched()
+        {
+            run.launch_next(&mut w)?;
+        }
+        if run.finished() {
+            return Ok(());
+        }
+        match client.recv() {
+            Ok(Some(env)) => run.on_envelope(env, &mut w)?,
+            Ok(None) => {
+                run.abort_inflight();
+                return Ok(());
+            }
+            Err(e) => {
+                run.abort_inflight();
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// Open loop: a pacer thread launches ops on a fixed schedule while
+/// the receiver processes responses (and sends continuation stages);
+/// both write through one mutexed sender, so frames never interleave.
+/// Borrows the run so a connection error leaves its partial stats
+/// intact for aggregation.
+fn open_loop(
+    client: &mut WireClient,
+    run: &mut ConnRun,
+    rate_per_conn: f64,
+) -> io::Result<()> {
+    let sender = Mutex::new(client.sender()?);
+    let state = Mutex::new(run);
+    // receiver -> pacer abort: once the connection is dead there is
+    // no point pacing the rest of the stream into it
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let period = Duration::from_secs_f64(1.0 / rate_per_conn.max(1e-6));
+    std::thread::scope(|s| {
+        let pacer = s.spawn(|| -> io::Result<()> {
+            let start = Instant::now();
+            let mut k = 0u32;
+            loop {
+                let next_at = start + period * k;
+                let now = Instant::now();
+                if next_at > now {
+                    std::thread::sleep(next_at - now);
+                }
+                if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    return Ok(());
+                }
+                let (more, fin) = {
+                    let mut st = state.lock().unwrap();
+                    let more = st.launch_next(&mut &sender)?;
+                    (more, st.finished())
+                };
+                if fin {
+                    // the last op resolved without a wire round trip
+                    // (degenerate stages): the receiver may be parked
+                    // in recv with nothing left to arrive — wake it
+                    let _ = sender
+                        .lock()
+                        .unwrap()
+                        .w
+                        .shutdown(std::net::Shutdown::Read);
+                }
+                if !more {
+                    return Ok(());
+                }
+                k += 1;
+            }
+        });
+        // receiver: drain until every launched op resolves
+        loop {
+            {
+                let st = state.lock().unwrap();
+                if st.finished() {
+                    break;
+                }
+            }
+            match client.recv() {
+                Ok(Some(env)) => {
+                    let mut st = state.lock().unwrap();
+                    st.on_envelope(env, &mut &sender)?;
+                }
+                Ok(None) => {
+                    stop.store(
+                        true,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                    state.lock().unwrap().abort_inflight();
+                    break;
+                }
+                Err(e) => {
+                    stop.store(
+                        true,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                    state.lock().unwrap().abort_inflight();
+                    let _ = pacer.join();
+                    return Err(e);
+                }
+            }
+        }
+        pacer.join().expect("pacer panicked")?;
+        Ok(())
+    })
+}
+
+/// Drive `ops` against a listening server. See the module docs for the
+/// shadow-rack contract that makes the op stream's pointers valid.
+pub fn run_loadgen(
+    cfg: &LoadgenConfig,
+    ops: Vec<Op>,
+) -> io::Result<LoadReport> {
+    let total = ops.len();
+    // one registration plan shared by every connection: wire ids in
+    // first-appearance order, deterministic across runs
+    let mut ids: HashMap<ProgramId, u32> = HashMap::new();
+    let mut plan: Vec<(u32, Program)> = Vec::new();
+    for op in &ops {
+        for stage in &op.stages {
+            let p = &stage.iter.program;
+            if !ids.contains_key(&p.id()) {
+                let wire_id = plan.len() as u32;
+                ids.insert(p.id(), wire_id);
+                plan.push((wire_id, p.clone()));
+            }
+        }
+    }
+    let ids = Arc::new(ids);
+    let plan = Arc::new(plan);
+
+    let conns = cfg.conns.max(1);
+    // round-robin split preserves per-connection issue order
+    let mut slices: Vec<Vec<(usize, OpDriver)>> =
+        (0..conns).map(|_| Vec::new()).collect();
+    for (i, op) in ops.into_iter().enumerate() {
+        slices[i % conns].push((i, OpDriver::new(op)));
+    }
+
+    let wall_start = Instant::now();
+    let runs: Vec<ConnRun> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(conns);
+        for work in slices {
+            let ids = Arc::clone(&ids);
+            let plan = Arc::clone(&plan);
+            let cfg = cfg.clone();
+            handles.push(s.spawn(move || -> ConnRun {
+                let mut run = ConnRun::new(work, cfg.budget, ids);
+                // one dead connection must not discard every other
+                // connection's stats: fold its loss into this run's
+                // error count and keep aggregating
+                let res: io::Result<()> = (|| {
+                    let mut client = WireClient::connect(&cfg.addr)?;
+                    for (wire_id, program) in plan.iter() {
+                        client.register(*wire_id, program)?;
+                    }
+                    // continue the connection's seq space past the
+                    // registration handshakes so request ids can
+                    // never overlap them
+                    run.seq = client.next_seq();
+                    if cfg.open_rate > 0.0 {
+                        open_loop(
+                            &mut client,
+                            &mut run,
+                            cfg.open_rate / conns as f64,
+                        )
+                    } else {
+                        closed_loop(&mut client, &mut run, cfg.depth)
+                    }
+                })();
+                if let Err(e) = res {
+                    eprintln!(
+                        "loadgen: connection died: {e} \
+                         (continuing with remaining connections)"
+                    );
+                }
+                // unconditional: anything still in flight once the
+                // serving loop is over is lost — including ops the
+                // open-loop pacer managed to launch *after* the
+                // receiver hit EOF (writes into a dying socket's
+                // buffer can still succeed)
+                run.abort_inflight();
+                // ops this connection never got to launch are lost
+                // whether it died with an io error or the server
+                // closed the stream cleanly mid-run (EOF) — either
+                // way they must show up in the error count, not
+                // silently narrow the report
+                let unlaunched =
+                    (run.work.len() - run.next) as u64;
+                if unlaunched > 0 {
+                    run.stats.errors += unlaunched;
+                    run.next = run.work.len();
+                }
+                run
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen connection panicked"))
+            .collect()
+    });
+    let wall_s = wall_start.elapsed().as_secs_f64();
+
+    let mut report = LoadReport {
+        ops: total as u64,
+        wall_s,
+        results: if cfg.record_results {
+            vec![None; total]
+        } else {
+            Vec::new()
+        },
+        ..LoadReport::default()
+    };
+    for run in runs {
+        report.launched += run.stats.launched;
+        report.completed += run.stats.completed;
+        report.trapped += run.stats.trapped;
+        report.busy += run.stats.busy;
+        report.errors += run.stats.errors;
+        report.latency.merge(&run.stats.hist);
+        if cfg.record_results {
+            for (li, (gi, _)) in run.work.iter().enumerate() {
+                report.results[*gi] = run.results[li];
+            }
+        }
+    }
+    if wall_s > 0.0 {
+        report.ops_per_s = report.completed as f64 / wall_s;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ds::SkipList;
+    use crate::rack::{Rack, RackConfig};
+
+    /// OpDriver must replay exactly what `run_op_functional` computes,
+    /// including multi-stage scans with continuation rounds.
+    #[test]
+    fn op_driver_matches_functional_execution() {
+        let mut rack = Rack::new(RackConfig::small(2));
+        let mut sl = SkipList::new(&mut rack, 7);
+        for k in 0..400i64 {
+            sl.insert(&mut rack, k * 2, k * 11);
+        }
+        let ops = vec![
+            sl.find_op(120),
+            sl.find_op(121), // miss
+            sl.scan_op(50, 40),
+            sl.scan_op(790, 30), // runs off the tail
+        ];
+        for (i, op) in ops.into_iter().enumerate() {
+            let want = rack.run_op_functional(&op);
+            let mut d = OpDriver::new(op);
+            let mut hops = 0;
+            while let Some((iter, start, sp)) = d.next_request() {
+                // the "server": one traversal, same substrate
+                let (st, out, _) = rack.traverse(&iter, start, sp);
+                d.on_response(st, out);
+                hops += 1;
+                assert!(hops < 1000, "driver failed to converge");
+            }
+            assert!(d.is_done());
+            assert!(!d.trapped(), "op {i} trapped");
+            assert_eq!(d.final_sp(), want, "op {i} diverged");
+        }
+    }
+
+    #[test]
+    fn op_driver_trap_is_terminal_and_malformed_ops_trap_locally() {
+        let mut rack = Rack::new(RackConfig::small(1));
+        let mut sl = SkipList::new(&mut rack, 3);
+        for k in 0..50i64 {
+            sl.insert(&mut rack, k, k);
+        }
+        // malformed shape: traps at "admission" without any request
+        let mut bad = sl.find_op(1);
+        bad.stages[0].repeat_while = Some((99, 2));
+        let mut d = OpDriver::new(bad);
+        assert!(d.next_request().is_none());
+        assert!(d.trapped());
+        assert_eq!(d.final_sp(), [0i64; SP_WORDS]);
+
+        // a trapped response ends the op even mid-chain
+        let op = sl.scan_op(0, 20);
+        let mut d = OpDriver::new(op);
+        let (_, _, _) = d.next_request().unwrap();
+        let mut sp = [7i64; SP_WORDS];
+        sp[0] = 1;
+        d.on_response(Status::Trap, sp);
+        assert!(d.is_done());
+        assert!(d.trapped());
+        assert_eq!(d.final_sp(), sp);
+        assert!(d.next_request().is_none());
+    }
+}

@@ -1,0 +1,200 @@
+//! Serving-tier metrics: connection, frame, and error counters shared
+//! across the accept loop, every reader/writer thread, and the CLI.
+//!
+//! All counters are relaxed atomics (they are metrics, not
+//! synchronization — same discipline as `live::queue`); the end-to-end
+//! latency histogram (frame decoded → response written, the
+//! server-side slice of what the client observes) sits behind a mutex
+//! touched once per response.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::hist::Histogram;
+use crate::util::json::Json;
+
+#[derive(Debug, Default)]
+pub struct SrvMetrics {
+    conns_accepted: AtomicU64,
+    conns_active: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    requests: AtomicU64,
+    responses: AtomicU64,
+    /// BUSY frames sent (inbox-full rejects + dispatcher sheds).
+    busy: AtomicU64,
+    /// ERROR frames sent.
+    errors_sent: AtomicU64,
+    /// Frames that failed magic/version/CRC/body checks.
+    decode_errors: AtomicU64,
+    programs_registered: AtomicU64,
+    /// Connections dropped because the client stopped draining its
+    /// responses (writer backlog cap exceeded).
+    backlog_drops: AtomicU64,
+    e2e: Mutex<Histogram>,
+}
+
+macro_rules! bump {
+    ($($fn_name:ident => $field:ident),* $(,)?) => {
+        $(pub fn $fn_name(&self) {
+            self.$field.fetch_add(1, Ordering::Relaxed);
+        })*
+    };
+}
+
+impl SrvMetrics {
+    bump!(
+        conn_accepted => conns_accepted,
+        frame_in => frames_in,
+        frame_out => frames_out,
+        request => requests,
+        busy => busy,
+        error_sent => errors_sent,
+        decode_error => decode_errors,
+        program_registered => programs_registered,
+        backlog_drop => backlog_drops,
+    );
+
+    /// Batched sent-side counters: one RMW per writer flush instead
+    /// of one per frame.
+    pub fn sent_batch(&self, frames: u64, busy: u64, errors: u64) {
+        self.frames_out.fetch_add(frames, Ordering::Relaxed);
+        self.busy.fetch_add(busy, Ordering::Relaxed);
+        self.errors_sent.fetch_add(errors, Ordering::Relaxed);
+    }
+
+    pub fn conn_opened(&self) {
+        self.conns_active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn conn_closed(&self) {
+        self.conns_active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// One RESPONSE written, with its decode→write latency.
+    pub fn response(&self, e2e_ns: u64) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.e2e.lock().unwrap().record(e2e_ns.max(1));
+    }
+
+    pub fn snapshot(&self) -> SrvSnapshot {
+        let h = self.e2e.lock().unwrap();
+        SrvSnapshot {
+            conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
+            conns_active: self.conns_active.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            busy: self.busy.load(Ordering::Relaxed),
+            errors_sent: self.errors_sent.load(Ordering::Relaxed),
+            decode_errors: self.decode_errors.load(Ordering::Relaxed),
+            programs_registered: self
+                .programs_registered
+                .load(Ordering::Relaxed),
+            backlog_drops: self.backlog_drops.load(Ordering::Relaxed),
+            e2e_p50_ns: h.p50(),
+            e2e_p95_ns: h.p95(),
+            e2e_p99_ns: h.p99(),
+            e2e_mean_ns: h.mean(),
+        }
+    }
+}
+
+/// Point-in-time view of the serving tier.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SrvSnapshot {
+    pub conns_accepted: u64,
+    pub conns_active: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub requests: u64,
+    pub responses: u64,
+    pub busy: u64,
+    pub errors_sent: u64,
+    pub decode_errors: u64,
+    pub programs_registered: u64,
+    pub backlog_drops: u64,
+    pub e2e_p50_ns: u64,
+    pub e2e_p95_ns: u64,
+    pub e2e_p99_ns: u64,
+    pub e2e_mean_ns: f64,
+}
+
+impl SrvSnapshot {
+    /// Human-readable summary for the CLI metrics table.
+    pub fn summary(&self) -> String {
+        format!(
+            "conns: accepted={} active={}\n\
+             frames: in={} out={} decode-errors={}\n\
+             requests={} responses={} busy={} errors={} \
+             backlog-drops={}\n\
+             server e2e: p50={:.1}us p95={:.1}us p99={:.1}us \
+             mean={:.1}us",
+            self.conns_accepted,
+            self.conns_active,
+            self.frames_in,
+            self.frames_out,
+            self.decode_errors,
+            self.requests,
+            self.responses,
+            self.busy,
+            self.errors_sent,
+            self.backlog_drops,
+            self.e2e_p50_ns as f64 / 1e3,
+            self.e2e_p95_ns as f64 / 1e3,
+            self.e2e_p99_ns as f64 / 1e3,
+            self.e2e_mean_ns / 1e3,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("conns_accepted", self.conns_accepted)
+            .set("conns_active", self.conns_active)
+            .set("frames_in", self.frames_in)
+            .set("frames_out", self.frames_out)
+            .set("requests", self.requests)
+            .set("responses", self.responses)
+            .set("busy", self.busy)
+            .set("errors_sent", self.errors_sent)
+            .set("decode_errors", self.decode_errors)
+            .set("programs_registered", self.programs_registered)
+            .set("backlog_drops", self.backlog_drops)
+            .set("e2e_p50_ns", self.e2e_p50_ns)
+            .set("e2e_p95_ns", self.e2e_p95_ns)
+            .set("e2e_p99_ns", self.e2e_p99_ns)
+            .set("e2e_mean_ns", self.e2e_mean_ns);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_latency_aggregate() {
+        let m = SrvMetrics::default();
+        m.conn_accepted();
+        m.conn_opened();
+        m.frame_in();
+        m.request();
+        m.response(2_000);
+        m.response(4_000);
+        m.frame_out();
+        m.busy();
+        m.decode_error();
+        m.conn_closed();
+        let s = m.snapshot();
+        assert_eq!(s.conns_accepted, 1);
+        assert_eq!(s.conns_active, 0);
+        assert_eq!(s.responses, 2);
+        assert_eq!(s.busy, 1);
+        assert_eq!(s.decode_errors, 1);
+        assert!(s.e2e_mean_ns > 0.0);
+        // renders without panicking
+        let _ = s.summary();
+        let _ = s.to_json().render();
+    }
+}

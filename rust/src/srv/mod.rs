@@ -1,0 +1,574 @@
+//! `srv` — the TCP wire-serving tier: any [`TraversalBackend`] exposed
+//! over real sockets.
+//!
+//! This is the layer the paper's §4.2 network stack occupies between
+//! CPU-node libraries and the rack: clients install traversal programs
+//! once (REGISTER), then stream `{program_id, cur_ptr, scratch_pad,
+//! budget}` requests and collect responses by request id — the single
+//! shared request/response format, now as length-prefixed CRC-checked
+//! frames on a byte stream (`srv::wire`) instead of structs on a
+//! simulated link (`net::transport`).
+//!
+//! Threading model (see `srv/README.md` for the full diagram):
+//!
+//! * the **accept loop** (the thread that called [`Server::run`])
+//!   polls the listener and spawns two threads per connection;
+//! * each connection's **reader** decodes frames, resolves program
+//!   ids against its connection-local registry, and submits
+//!   traversals to the engine with a non-blocking `try_submit`;
+//! * the **engine** ([`crate::live::engine`]) executes them — sharded
+//!   (one worker per memory node, the live dataplane) when the backend
+//!   is the live engine, inline on a single dispatcher thread for the
+//!   model backends (which all share the same functional substrate);
+//! * each connection's **writer** turns completions and control
+//!   frames into bytes, so responses never block the dispatcher.
+//!
+//! Backpressure never hangs a connection: a full engine inbox or a
+//! full admission window answers an explicit BUSY frame; a client that
+//! stops draining responses is disconnected once its writer backlog
+//! passes `max_conn_backlog`. Malformed frames answer ERROR (or a
+//! clean disconnect when the stream itself can no longer be framed) —
+//! never a panic, matching the trap discipline of the execution tiers.
+
+pub mod loadgen;
+pub mod metrics;
+pub mod wire;
+
+pub use self::loadgen::{run_loadgen, LoadReport, LoadgenConfig};
+pub use self::metrics::{SrvMetrics, SrvSnapshot};
+
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::backend::{BackendMetrics, TraversalBackend};
+use crate::compiler::CompiledIter;
+use crate::live::engine::{
+    Completion, CompletionCode, Engine, EngineConfig, EngineHandle,
+    EngineReport, Submission, SubmitError,
+};
+
+use self::wire::{
+    decode_payload, encode_frame, read_frame, ErrCode, Frame, FrameRead,
+};
+
+/// Tunables of the serving tier.
+#[derive(Debug, Clone, Copy)]
+pub struct SrvConfig {
+    /// Engine admission window (traversals in flight across every
+    /// connection).
+    pub window: usize,
+    /// Engine inbox capacity; 0 = auto (see [`EngineConfig`]).
+    pub inbox_capacity: usize,
+    /// Submissions parked past the window before BUSY; 0 = auto.
+    pub pending_cap: usize,
+    /// Yield-continuation cap per traversal.
+    pub max_boosts: u32,
+    /// Largest acceptable frame payload.
+    pub max_frame: u32,
+    /// Responses queued on one connection before it is declared
+    /// non-draining and dropped.
+    pub max_conn_backlog: u64,
+    /// Distinct program ids one connection may register (bounds the
+    /// only other per-connection allocation a client controls).
+    pub max_programs: usize,
+    /// Reader-side timeout per socket read. A timeout at a frame
+    /// boundary is idle (keep waiting); a timeout *mid-frame* closes
+    /// the connection — the backstop that bounds a corrupted length
+    /// prefix (which the CRC cannot cover) to seconds instead of a
+    /// permanently wedged reader thread. 0 = no timeout.
+    pub read_timeout_secs: u64,
+    /// Exit (drain + return) after this many seconds; 0 = run until
+    /// [`ServerHandle::shutdown`].
+    pub run_secs: f64,
+}
+
+impl Default for SrvConfig {
+    fn default() -> Self {
+        Self {
+            window: 64,
+            inbox_capacity: 0,
+            pending_cap: 0,
+            max_boosts: 4096,
+            max_frame: wire::DEFAULT_MAX_FRAME,
+            max_conn_backlog: 1024,
+            max_programs: 256,
+            read_timeout_secs: 30,
+            run_secs: 0.0,
+        }
+    }
+}
+
+/// Everything one server run observed, returned by [`Server::run`].
+#[derive(Debug)]
+pub struct SrvSummary {
+    /// Execution-tier accounting (completions, latency, shard/router
+    /// counters).
+    pub engine: EngineReport,
+    /// Serving-tier counters (conns, frames, decode errors, busy).
+    pub srv: SrvSnapshot,
+    /// The unified metrics row every backend reports, fed from the
+    /// engine's serve report with the wire-tier overload counters
+    /// filled in — overload is observable, not silent.
+    pub backend: BackendMetrics,
+}
+
+/// Control half handed back by [`Server::bind`]: lives on any thread,
+/// addresses the server while [`Server::run`] blocks elsewhere.
+#[derive(Clone)]
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<SrvMetrics>,
+}
+
+impl ServerHandle {
+    /// Actual bound address (resolves `:0` ephemeral binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Begin graceful shutdown: stop accepting, drain in-flight ops,
+    /// flush responses, close connections, return from `run`.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// Live serving-tier counters.
+    pub fn metrics(&self) -> SrvSnapshot {
+        self.metrics.snapshot()
+    }
+}
+
+/// The serving tier: own a backend, listen, serve until shutdown.
+pub struct Server {
+    backend: Box<dyn TraversalBackend + Send>,
+    listener: TcpListener,
+    cfg: SrvConfig,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<SrvMetrics>,
+}
+
+impl Server {
+    /// Bind the listener now (so port-in-use fails loudly here, not
+    /// mid-serve) and return the server plus its control handle.
+    pub fn bind(
+        backend: Box<dyn TraversalBackend + Send>,
+        addr: &str,
+        cfg: SrvConfig,
+    ) -> std::io::Result<(Server, ServerHandle)> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(SrvMetrics::default());
+        let handle = ServerHandle {
+            addr,
+            stop: Arc::clone(&stop),
+            metrics: Arc::clone(&metrics),
+        };
+        Ok((Server { backend, listener, cfg, stop, metrics }, handle))
+    }
+
+    /// Serve until shutdown (handle, `run_secs`, or listener failure),
+    /// then drain and report. Blocks the calling thread; everything —
+    /// engine, shards, connections — is torn down before returning.
+    pub fn run(mut self) -> SrvSummary {
+        let cfg = self.cfg;
+        // the live engine gets real shards; every model backend shares
+        // the functional substrate and serves inline (their *modeled*
+        // time is meaningless over a real socket — wall clock rules)
+        let sharded = self.backend.serves_sharded();
+        let (engine, ehandle) = Engine::new(EngineConfig {
+            window: cfg.window,
+            inbox_capacity: cfg.inbox_capacity,
+            pending_cap: cfg.pending_cap,
+            max_boosts: cfg.max_boosts,
+            sharded,
+        });
+        let name = self.backend.name();
+        let rack = self.backend.rack_mut();
+        let metrics = Arc::clone(&self.metrics);
+        let stop = Arc::clone(&self.stop);
+        let listener = self.listener;
+        let _ = listener.set_nonblocking(true);
+        let wall_start = Instant::now();
+
+        let mut engine_report = std::thread::scope(|s| {
+            let eng = s.spawn(move || engine.run(rack));
+            let deadline = (cfg.run_secs > 0.0).then(|| {
+                Instant::now() + Duration::from_secs_f64(cfg.run_secs)
+            });
+            let mut conns: Vec<(JoinHandle<()>, TcpStream)> = Vec::new();
+            // transient accept errors (ECONNABORTED from a client
+            // resetting mid-handshake, EMFILE under fd pressure) must
+            // not take the whole server down; only a persistently
+            // failing listener does
+            let mut accept_failures = 0u32;
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    break;
+                }
+                // reap finished connections: dropping the pair frees
+                // the control-stream fd and detaches the (already
+                // exited) threads, so a reconnect-heavy client cannot
+                // exhaust fds over a long-running serve
+                conns.retain(|(h, _)| !h.is_finished());
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        accept_failures = 0;
+                        metrics.conn_accepted();
+                        if let Ok(pair) = spawn_connection(
+                            stream,
+                            ehandle.clone(),
+                            Arc::clone(&metrics),
+                            cfg,
+                        ) {
+                            conns.push(pair);
+                        }
+                    }
+                    Err(e)
+                        if e.kind()
+                            == std::io::ErrorKind::WouldBlock =>
+                    {
+                        // idle poll at 100 Hz: cheap enough to leave
+                        // running for days, fine-grained enough that
+                        // shutdown/deadline latency stays ~10 ms
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => {
+                        accept_failures += 1;
+                        if accept_failures >= 100 {
+                            break; // listener is genuinely broken
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            }
+            drop(listener);
+            // drain: admitted ops complete, late submissions answer
+            // shutting-down, then the engine (and its shards) exits
+            ehandle.shutdown();
+            let report = eng.join().expect("engine thread panicked");
+            // unblock readers parked in recv — read half only, so
+            // writers can still flush completions queued during the
+            // drain; each writer exits once its reader drops the
+            // channel and the remaining frames are on the wire
+            for (_, stream) in &conns {
+                let _ = stream.shutdown(Shutdown::Read);
+            }
+            for (h, _) in conns {
+                let _ = h.join();
+            }
+            report
+        });
+
+        let wall = wall_start.elapsed();
+        engine_report.report.wall_ms = wall.as_secs_f64() * 1e3;
+        engine_report.report.makespan_ns = wall.as_nanos() as u64;
+        if engine_report.report.completed > 0
+            && wall.as_secs_f64() > 0.0
+        {
+            engine_report.report.tput_ops_per_s =
+                engine_report.report.completed as f64
+                    / wall.as_secs_f64();
+        }
+        let srv = self.metrics.snapshot();
+        let mut backend =
+            BackendMetrics::from_report(name, &engine_report.report);
+        backend.net_dropped =
+            self.backend.rack_mut().link_totals().dropped;
+        backend.wire_decode_errors = srv.decode_errors;
+        backend.wire_busy = srv.busy;
+        SrvSummary { engine: engine_report, srv, backend }
+    }
+}
+
+/// What the writer thread emits on one connection.
+enum WriterMsg {
+    /// Engine completion for request `seq` (decoded at `t0`).
+    Done { seq: u64, t0: Instant, c: Completion },
+    /// Reader-originated control frame (RegisterOk / Busy / Error).
+    Ctrl { seq: u64, frame: Frame },
+}
+
+/// Spawn the reader/writer pair for one accepted connection. Returns
+/// the reader's join handle plus a stream clone the accept loop uses
+/// to unblock the reader at shutdown.
+fn spawn_connection(
+    stream: TcpStream,
+    engine: EngineHandle,
+    metrics: Arc<SrvMetrics>,
+    cfg: SrvConfig,
+) -> std::io::Result<(JoinHandle<()>, TcpStream)> {
+    let _ = stream.set_nodelay(true);
+    // BSD-derived platforms (macOS) make accepted sockets inherit the
+    // listener's O_NONBLOCK; the reader/writer loops are blocking by
+    // design, so reset it explicitly (no-op on Linux)
+    let _ = stream.set_nonblocking(false);
+    if cfg.read_timeout_secs > 0 {
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(
+            cfg.read_timeout_secs,
+        )));
+    }
+    let control = stream.try_clone()?;
+    let wstream = stream.try_clone()?;
+    // a client that stops reading cannot wedge teardown: a stalled
+    // response write fails after the timeout and the writer exits
+    let _ = wstream
+        .set_write_timeout(Some(Duration::from_secs(5)));
+    let (wtx, wrx) = mpsc::channel::<WriterMsg>();
+    let backlog = Arc::new(AtomicU64::new(0));
+    metrics.conn_opened();
+    let wmetrics = Arc::clone(&metrics);
+    let wbacklog = Arc::clone(&backlog);
+    let writer = std::thread::spawn(move || {
+        writer_loop(wstream, wrx, wmetrics, wbacklog)
+    });
+    let h = std::thread::spawn(move || {
+        reader_loop(stream, engine, wtx, &metrics, backlog, cfg);
+        // reader done: drop our sender; writer exits once in-flight
+        // completions (whose closures hold the other clones) land
+        let _ = writer.join();
+        metrics.conn_closed();
+    });
+    Ok((h, control))
+}
+
+/// Writer thread: serialize completions + control frames. Bursts are
+/// drained greedily and flushed once, so pipelined responses share
+/// syscalls without adding latency to a lone response.
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<WriterMsg>,
+    metrics: Arc<SrvMetrics>,
+    backlog: Arc<AtomicU64>,
+) {
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    loop {
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return, // all senders gone: connection finished
+        };
+        buf.clear();
+        let mut batch = Some(first);
+        // all sent-side counters (frames out, busy, errors, response
+        // latencies) are applied only after write_all succeeds — a
+        // torn connection must not report unsent frames as sent
+        let mut pending_e2e: Vec<u64> = Vec::new();
+        let mut frames = 0u64;
+        let mut busy = 0u64;
+        let mut errors = 0u64;
+        while let Some(m) = batch.take() {
+            backlog.fetch_sub(1, Ordering::Relaxed);
+            match m {
+                WriterMsg::Done { seq, t0, c } => {
+                    let frame = completion_frame(&c);
+                    match &frame {
+                        Frame::Busy => busy += 1,
+                        Frame::Error { .. } => errors += 1,
+                        _ => pending_e2e
+                            .push(t0.elapsed().as_nanos() as u64),
+                    }
+                    buf.extend_from_slice(&encode_frame(seq, &frame));
+                }
+                WriterMsg::Ctrl { seq, frame } => {
+                    match &frame {
+                        Frame::Busy => busy += 1,
+                        Frame::Error { .. } => errors += 1,
+                        _ => {}
+                    }
+                    buf.extend_from_slice(&encode_frame(seq, &frame));
+                }
+            }
+            frames += 1;
+            if buf.len() < 64 * 1024 {
+                batch = rx.try_recv().ok();
+            }
+        }
+        if stream.write_all(&buf).is_err() {
+            // a dead or stalled-past-timeout client: shut the whole
+            // socket down so the reader sees EOF and tears the
+            // connection down too — otherwise the conn sits half-open
+            // with the reader executing requests whose responses go
+            // nowhere while a pipelined client waits forever
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+        metrics.sent_batch(frames, busy, errors);
+        for ns in pending_e2e {
+            metrics.response(ns);
+        }
+    }
+}
+
+fn completion_frame(c: &Completion) -> Frame {
+    match c.code {
+        CompletionCode::Done(status) => Frame::Response {
+            status,
+            crossings: c.crossings,
+            iters: c.iters,
+            sp: c.sp,
+        },
+        CompletionCode::Busy => Frame::Busy,
+        CompletionCode::ShuttingDown => Frame::Error {
+            code: ErrCode::ShuttingDown,
+            msg: "server draining".into(),
+        },
+    }
+}
+
+/// Reader thread: frame in, decode, dispatch. Decode failures answer
+/// ERROR and continue while the frame boundary holds; unframeable
+/// garbage (bad magic/version, oversize, torn stream) closes the
+/// connection after a best-effort ERROR.
+fn reader_loop(
+    stream: TcpStream,
+    engine: EngineHandle,
+    wtx: mpsc::Sender<WriterMsg>,
+    metrics: &SrvMetrics,
+    backlog: Arc<AtomicU64>,
+    cfg: SrvConfig,
+) {
+    let mut programs: HashMap<u32, Arc<CompiledIter>> = HashMap::new();
+    let mut r = BufReader::new(stream);
+    let ctrl = |seq: u64, frame: Frame| {
+        backlog.fetch_add(1, Ordering::Relaxed);
+        let _ = wtx.send(WriterMsg::Ctrl { seq, frame });
+    };
+    let err =
+        |seq: u64, code: ErrCode, msg: &str| {
+            ctrl(seq, Frame::Error { code, msg: msg.into() })
+        };
+    loop {
+        let payload = match read_frame(&mut r, cfg.max_frame) {
+            FrameRead::Frame(p) => p,
+            FrameRead::Eof => return,
+            // idle at a frame boundary: nothing consumed, keep waiting
+            FrameRead::Idle => continue,
+            FrameRead::Oversize(n) => {
+                metrics.decode_error();
+                err(
+                    0,
+                    ErrCode::Oversize,
+                    &format!("unframeable length {n}"),
+                );
+                return;
+            }
+            FrameRead::Io(_) => return,
+        };
+        metrics.frame_in();
+        // non-draining-client guard, on EVERY frame kind: whatever the
+        // client streams (requests, re-registrations, garbage), once
+        // its unread responses pass the cap it gets cut loose instead
+        // of growing the writer queue without bound
+        if backlog.load(Ordering::Relaxed) >= cfg.max_conn_backlog {
+            metrics.backlog_drop();
+            err(0, ErrCode::Backlog, "response backlog exceeded; closing");
+            return;
+        }
+        let env = match decode_payload(&payload) {
+            Ok(env) => env,
+            Err(e) => {
+                metrics.decode_error();
+                err(e.seq, e.kind.err_code(), &format!("{:?}", e.kind));
+                if e.kind.is_fatal() {
+                    return;
+                }
+                continue;
+            }
+        };
+        match env.frame {
+            Frame::Register { id, program } => {
+                // a frame that decoded but carries an unverifiable
+                // program is a semantic rejection, not wire
+                // corruption: it answers ERROR (counted by the
+                // writer as errors_sent) without touching the
+                // decode_errors counter
+                if let Err(e) = crate::isa::verify(&program) {
+                    err(
+                        env.seq,
+                        ErrCode::BadProgram,
+                        &format!("verify failed: {e:?}"),
+                    );
+                    continue;
+                }
+                // bounded like every other client-controlled edge:
+                // past the cap, new ids shed explicitly (existing ids
+                // may still be re-registered)
+                if !programs.contains_key(&id)
+                    && programs.len() >= cfg.max_programs
+                {
+                    err(
+                        env.seq,
+                        ErrCode::Backlog,
+                        "program table full",
+                    );
+                    continue;
+                }
+                programs
+                    .insert(id, Arc::new(CompiledIter::new(program)));
+                metrics.program_registered();
+                ctrl(env.seq, Frame::RegisterOk { id });
+            }
+            Frame::Request { prog, budget, start, sp } => {
+                metrics.request();
+                let Some(iter) = programs.get(&prog) else {
+                    err(
+                        env.seq,
+                        ErrCode::UnknownProgram,
+                        &format!("program id {prog} not registered"),
+                    );
+                    continue;
+                };
+                let seq = env.seq;
+                let t0 = Instant::now();
+                let done_tx = wtx.clone();
+                let done_backlog = Arc::clone(&backlog);
+                let sub = Submission {
+                    iter: Arc::clone(iter),
+                    start,
+                    sp,
+                    budget,
+                    tag: seq,
+                    done: Box::new(move |c| {
+                        done_backlog.fetch_add(1, Ordering::Relaxed);
+                        let _ = done_tx
+                            .send(WriterMsg::Done { seq, t0, c });
+                    }),
+                };
+                match engine.try_submit(sub) {
+                    Ok(()) => {}
+                    Err(SubmitError::Busy(_)) => {
+                        ctrl(seq, Frame::Busy)
+                    }
+                    Err(SubmitError::Down(_)) => {
+                        err(
+                            seq,
+                            ErrCode::ShuttingDown,
+                            "server draining",
+                        );
+                        return;
+                    }
+                }
+            }
+            // a server never expects client-bound kinds
+            Frame::RegisterOk { .. }
+            | Frame::Response { .. }
+            | Frame::Busy
+            | Frame::Error { .. } => {
+                err(
+                    env.seq,
+                    ErrCode::UnexpectedKind,
+                    "client sent a server-to-client frame",
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,687 @@
+//! The PULSE wire protocol: versioned, length-prefixed, CRC-protected
+//! binary frames over a byte stream.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! frame    := len:u32 payload[len]          len excludes itself
+//! payload  := header body crc:u32           crc over header+body
+//! header   := magic:u32 version:u8 kind:u8 pad:u16 seq:u64   (16 B)
+//! ```
+//!
+//! `seq` is the per-connection request id; responses echo it, which is
+//! what makes pipelining work (many in-flight ids per connection,
+//! completions in any order). Bodies by kind:
+//!
+//! ```text
+//! REGISTER     prog_id:u32 program            Program::encode bytes
+//! REGISTER_OK  prog_id:u32
+//! REQUEST      prog_id:u32 budget:u32 cur_ptr:u64 sp[32]:i64
+//! RESPONSE     status:u8 pad:u8x3 crossings:u32 iters:u64 sp[32]:i64
+//! BUSY         (empty)
+//! ERROR        code:u8 pad:u8 msg_len:u16 msg[msg_len]      utf-8
+//! ```
+//!
+//! This is `net::TraversalMsg`'s request format (paper §5: `{request
+//! id, program, cur_ptr, scratch_pad, budget}`) with one deliberate
+//! difference: programs are installed once via REGISTER and referenced
+//! by a connection-local `prog_id` afterwards, so the per-request
+//! frame stays ~330 B instead of re-shipping the program bytes —
+//! exactly the "install the traversal code on the accelerator, then
+//! stream requests" split the paper's dispatch engine makes.
+//!
+//! Server and load generator both encode and decode through this
+//! module — there is no second implementation to skew against.
+
+use std::io::Read;
+
+use crate::isa::{Program, Status, SP_WORDS};
+
+/// `b"PLSE"` read as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"PLSE");
+pub const VERSION: u8 = 1;
+/// Header bytes before the body (magic, version, kind, pad, seq).
+pub const HEADER_BYTES: usize = 16;
+/// CRC trailer bytes.
+pub const CRC_BYTES: usize = 4;
+/// Smallest valid payload: header + empty body + crc.
+pub const MIN_PAYLOAD: usize = HEADER_BYTES + CRC_BYTES;
+/// Default cap on a payload; anything larger is unframeable garbage
+/// (a max-size program + scratchpad request is ~1.4 KB).
+pub const DEFAULT_MAX_FRAME: u32 = 256 * 1024;
+
+const KIND_REGISTER: u8 = 1;
+const KIND_REGISTER_OK: u8 = 2;
+const KIND_REQUEST: u8 = 3;
+const KIND_RESPONSE: u8 = 4;
+const KIND_BUSY: u8 = 5;
+const KIND_ERROR: u8 = 6;
+
+/// Machine-readable cause carried by an ERROR frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrCode {
+    BadCrc = 1,
+    BadMagic = 2,
+    BadVersion = 3,
+    UnknownKind = 4,
+    BadBody = 5,
+    UnknownProgram = 6,
+    BadProgram = 7,
+    Oversize = 8,
+    ShuttingDown = 9,
+    UnexpectedKind = 10,
+    Backlog = 11,
+    Other = 12,
+}
+
+impl ErrCode {
+    pub fn from_u8(v: u8) -> ErrCode {
+        match v {
+            1 => ErrCode::BadCrc,
+            2 => ErrCode::BadMagic,
+            3 => ErrCode::BadVersion,
+            4 => ErrCode::UnknownKind,
+            5 => ErrCode::BadBody,
+            6 => ErrCode::UnknownProgram,
+            7 => ErrCode::BadProgram,
+            8 => ErrCode::Oversize,
+            9 => ErrCode::ShuttingDown,
+            10 => ErrCode::UnexpectedKind,
+            11 => ErrCode::Backlog,
+            _ => ErrCode::Other,
+        }
+    }
+}
+
+/// One decoded frame body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Register { id: u32, program: Program },
+    RegisterOk { id: u32 },
+    Request {
+        prog: u32,
+        budget: u32,
+        start: u64,
+        sp: [i64; SP_WORDS],
+    },
+    Response {
+        status: Status,
+        crossings: u32,
+        iters: u64,
+        sp: [i64; SP_WORDS],
+    },
+    Busy,
+    Error { code: ErrCode, msg: String },
+}
+
+/// A frame plus its connection-local sequence number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    pub seq: u64,
+    pub frame: Frame,
+}
+
+/// Why a payload failed to decode. `seq` is best-effort (0 when the
+/// header itself was unreadable) so an ERROR response can still be
+/// correlated when possible.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    pub seq: u64,
+    pub kind: WireErrorKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireErrorKind {
+    TooShort,
+    /// Framing can no longer be trusted; close the connection.
+    BadMagic,
+    BadVersion(u8),
+    BadCrc,
+    UnknownKind(u8),
+    BadBody(&'static str),
+}
+
+impl WireErrorKind {
+    /// True when the stream itself is untrustworthy (close it);
+    /// false when the frame boundary held and the connection can
+    /// continue after an ERROR response.
+    pub fn is_fatal(&self) -> bool {
+        matches!(
+            self,
+            WireErrorKind::BadMagic | WireErrorKind::BadVersion(_)
+        )
+    }
+
+    pub fn err_code(&self) -> ErrCode {
+        match self {
+            WireErrorKind::TooShort => ErrCode::BadBody,
+            WireErrorKind::BadMagic => ErrCode::BadMagic,
+            WireErrorKind::BadVersion(_) => ErrCode::BadVersion,
+            WireErrorKind::BadCrc => ErrCode::BadCrc,
+            WireErrorKind::UnknownKind(_) => ErrCode::UnknownKind,
+            WireErrorKind::BadBody(_) => ErrCode::BadBody,
+        }
+    }
+}
+
+// IEEE CRC-32 (reflected, poly 0xEDB88320), table built at compile
+// time — the std-only build has no crc crate.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+fn kind_byte(f: &Frame) -> u8 {
+    match f {
+        Frame::Register { .. } => KIND_REGISTER,
+        Frame::RegisterOk { .. } => KIND_REGISTER_OK,
+        Frame::Request { .. } => KIND_REQUEST,
+        Frame::Response { .. } => KIND_RESPONSE,
+        Frame::Busy => KIND_BUSY,
+        Frame::Error { .. } => KIND_ERROR,
+    }
+}
+
+/// Encode a frame into its full wire form (length prefix included).
+pub fn encode_frame(seq: u64, frame: &Frame) -> Vec<u8> {
+    let mut p = Vec::with_capacity(64 + SP_WORDS * 8);
+    p.extend_from_slice(&[0u8; 4]); // length placeholder
+    p.extend_from_slice(&MAGIC.to_le_bytes());
+    p.push(VERSION);
+    p.push(kind_byte(frame));
+    p.extend_from_slice(&0u16.to_le_bytes());
+    p.extend_from_slice(&seq.to_le_bytes());
+    match frame {
+        Frame::Register { id, program } => {
+            p.extend_from_slice(&id.to_le_bytes());
+            p.extend_from_slice(&program.encode());
+        }
+        Frame::RegisterOk { id } => {
+            p.extend_from_slice(&id.to_le_bytes());
+        }
+        Frame::Request { prog, budget, start, sp } => {
+            p.extend_from_slice(&prog.to_le_bytes());
+            p.extend_from_slice(&budget.to_le_bytes());
+            p.extend_from_slice(&start.to_le_bytes());
+            for w in sp {
+                p.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        Frame::Response { status, crossings, iters, sp } => {
+            p.push(*status as i32 as u8);
+            p.extend_from_slice(&[0u8; 3]);
+            p.extend_from_slice(&crossings.to_le_bytes());
+            p.extend_from_slice(&iters.to_le_bytes());
+            for w in sp {
+                p.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        Frame::Busy => {}
+        Frame::Error { code, msg } => {
+            let bytes = msg.as_bytes();
+            let n = bytes.len().min(u16::MAX as usize);
+            p.push(*code as u8);
+            p.push(0);
+            p.extend_from_slice(&(n as u16).to_le_bytes());
+            p.extend_from_slice(&bytes[..n]);
+        }
+    }
+    let crc = crc32(&p[4..]);
+    p.extend_from_slice(&crc.to_le_bytes());
+    let len = (p.len() - 4) as u32;
+    p[..4].copy_from_slice(&len.to_le_bytes());
+    p
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b[..4].try_into().unwrap())
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().unwrap())
+}
+
+fn read_sp(b: &[u8]) -> Option<[i64; SP_WORDS]> {
+    if b.len() < SP_WORDS * 8 {
+        return None;
+    }
+    let mut sp = [0i64; SP_WORDS];
+    for (i, w) in sp.iter_mut().enumerate() {
+        *w = i64::from_le_bytes(b[i * 8..i * 8 + 8].try_into().unwrap());
+    }
+    Some(sp)
+}
+
+/// Decode one payload (the bytes after the length prefix). Every body
+/// is checked for exact length — trailing garbage is a `BadBody`, so
+/// an encoder bug can never ship silently truncated state.
+pub fn decode_payload(p: &[u8]) -> Result<Envelope, WireError> {
+    let fail = |seq, kind| Err(WireError { seq, kind });
+    if p.len() < MIN_PAYLOAD {
+        return fail(0, WireErrorKind::TooShort);
+    }
+    if le_u32(p) != MAGIC {
+        return fail(0, WireErrorKind::BadMagic);
+    }
+    let seq = le_u64(&p[8..16]);
+    if p[4] != VERSION {
+        return fail(seq, WireErrorKind::BadVersion(p[4]));
+    }
+    let body_end = p.len() - CRC_BYTES;
+    let want = le_u32(&p[body_end..]);
+    if crc32(&p[..body_end]) != want {
+        return fail(seq, WireErrorKind::BadCrc);
+    }
+    if p[6] != 0 || p[7] != 0 {
+        // pad bytes are part of the canonical form, same discipline
+        // as net::TraversalMsg / Instr: every byte of a valid frame
+        // is load-bearing, so nothing can hide in ignored padding
+        return fail(seq, WireErrorKind::BadBody("nonzero header pad"));
+    }
+    let kind = p[5];
+    let body = &p[HEADER_BYTES..body_end];
+    let bad = |m| fail(seq, WireErrorKind::BadBody(m));
+    let frame = match kind {
+        KIND_REGISTER => {
+            if body.len() < 4 {
+                return bad("register body too short");
+            }
+            let id = le_u32(body);
+            let Some(program) = Program::decode(&body[4..]) else {
+                return bad("undecodable program");
+            };
+            if 4 + program.wire_size() != body.len() {
+                return bad("trailing bytes after program");
+            }
+            Frame::Register { id, program }
+        }
+        KIND_REGISTER_OK => {
+            if body.len() != 4 {
+                return bad("register-ok body must be 4 bytes");
+            }
+            Frame::RegisterOk { id: le_u32(body) }
+        }
+        KIND_REQUEST => {
+            if body.len() != 16 + SP_WORDS * 8 {
+                return bad("request body length");
+            }
+            Frame::Request {
+                prog: le_u32(body),
+                budget: le_u32(&body[4..]),
+                start: le_u64(&body[8..]),
+                sp: read_sp(&body[16..]).unwrap(),
+            }
+        }
+        KIND_RESPONSE => {
+            if body.len() != 16 + SP_WORDS * 8 {
+                return bad("response body length");
+            }
+            if body[0] > 3 {
+                return bad("status out of range");
+            }
+            if body[1..4] != [0u8; 3] {
+                return bad("nonzero response pad");
+            }
+            Frame::Response {
+                status: Status::from_i32(body[0] as i32),
+                crossings: le_u32(&body[4..]),
+                iters: le_u64(&body[8..]),
+                sp: read_sp(&body[16..]).unwrap(),
+            }
+        }
+        KIND_BUSY => {
+            if !body.is_empty() {
+                return bad("busy carries no body");
+            }
+            Frame::Busy
+        }
+        KIND_ERROR => {
+            if body.len() < 4 {
+                return bad("error body too short");
+            }
+            if body[1] != 0 {
+                return bad("nonzero error pad");
+            }
+            let n = u16::from_le_bytes([body[2], body[3]]) as usize;
+            if body.len() != 4 + n {
+                return bad("error message length");
+            }
+            let msg = String::from_utf8_lossy(&body[4..]).into_owned();
+            Frame::Error { code: ErrCode::from_u8(body[0]), msg }
+        }
+        other => return fail(seq, WireErrorKind::UnknownKind(other)),
+    };
+    Ok(Envelope { seq, frame })
+}
+
+/// Outcome of pulling one frame off a byte stream.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete payload (decode it with [`decode_payload`]).
+    Frame(Vec<u8>),
+    /// Clean end of stream at a frame boundary.
+    Eof,
+    /// A read timeout fired *at a frame boundary* (no bytes consumed):
+    /// the connection is idle, not broken — call again. A timeout
+    /// mid-frame surfaces as `Io` instead: the peer stalled inside a
+    /// frame (or a corrupted length prefix promised bytes that never
+    /// come), and the stream must be closed. This is what bounds the
+    /// worst case of a flipped length prefix — the CRC cannot cover
+    /// the prefix that frames it, so the timeout is the backstop that
+    /// keeps "never a wedged connection" true.
+    Idle,
+    /// Length prefix outside `[MIN_PAYLOAD, max_frame]` — the stream
+    /// cannot be resynchronized; close it.
+    Oversize(u32),
+    /// Transport error (including EOF mid-frame).
+    Io(std::io::Error),
+}
+
+/// Read one length-prefixed frame. Blocking; safe to call repeatedly
+/// on a `BufReader`-wrapped socket (with or without a read timeout —
+/// see [`FrameRead::Idle`]).
+pub fn read_frame(r: &mut impl Read, max_frame: u32) -> FrameRead {
+    let mut len4 = [0u8; 4];
+    // distinguish clean EOF (no bytes at all) from a torn prefix
+    match r.read(&mut len4) {
+        Ok(0) => return FrameRead::Eof,
+        Ok(n) => {
+            if n < 4 {
+                if let Err(e) = r.read_exact(&mut len4[n..]) {
+                    return FrameRead::Io(e);
+                }
+            }
+        }
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            return FrameRead::Idle
+        }
+        Err(e) => return FrameRead::Io(e),
+    }
+    let len = u32::from_le_bytes(len4);
+    if (len as usize) < MIN_PAYLOAD || len > max_frame {
+        return FrameRead::Oversize(len);
+    }
+    let mut payload = vec![0u8; len as usize];
+    match r.read_exact(&mut payload) {
+        Ok(()) => FrameRead::Frame(payload),
+        Err(e) => FrameRead::Io(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Asm;
+
+    fn sample_program() -> Program {
+        let mut a = Asm::new();
+        a.ldd(1, 2);
+        a.mov(0, 1);
+        a.next();
+        a.finish(3).unwrap()
+    }
+
+    fn sample_frames() -> Vec<(u64, Frame)> {
+        let mut sp = [0i64; SP_WORDS];
+        sp[0] = -9;
+        sp[SP_WORDS - 1] = i64::MAX;
+        vec![
+            (1, Frame::Register { id: 7, program: sample_program() }),
+            (1, Frame::RegisterOk { id: 7 }),
+            (
+                2,
+                Frame::Request {
+                    prog: 7,
+                    budget: 4096,
+                    start: 0xDEAD_BEE0,
+                    sp,
+                },
+            ),
+            (
+                2,
+                Frame::Response {
+                    status: Status::Return,
+                    crossings: 3,
+                    iters: 41,
+                    sp,
+                },
+            ),
+            (3, Frame::Busy),
+            (
+                0,
+                Frame::Error {
+                    code: ErrCode::UnknownProgram,
+                    msg: "no such program".into(),
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn every_kind_round_trips() {
+        for (seq, frame) in sample_frames() {
+            let wire = encode_frame(seq, &frame);
+            let len = u32::from_le_bytes(wire[..4].try_into().unwrap());
+            assert_eq!(len as usize, wire.len() - 4);
+            let env = decode_payload(&wire[4..]).unwrap();
+            assert_eq!(env.seq, seq);
+            assert_eq!(env.frame, frame, "{frame:?}");
+        }
+    }
+
+    #[test]
+    fn crc_catches_any_single_byte_corruption() {
+        let (seq, frame) = &sample_frames()[2];
+        let wire = encode_frame(*seq, frame);
+        let payload = &wire[4..];
+        for pos in 0..payload.len() {
+            let mut bad = payload.to_vec();
+            bad[pos] ^= 0x41;
+            assert!(
+                decode_payload(&bad).is_err(),
+                "flip at byte {pos} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_fatal_bad_crc_is_not() {
+        let wire = encode_frame(5, &Frame::Busy);
+        let mut p = wire[4..].to_vec();
+        p[0] ^= 0xFF;
+        let e = decode_payload(&p).unwrap_err();
+        assert_eq!(e.kind, WireErrorKind::BadMagic);
+        assert!(e.kind.is_fatal());
+
+        let mut p = wire[4..].to_vec();
+        p[4] = 99; // version; crc now stale but version checked first
+        let e = decode_payload(&p).unwrap_err();
+        assert_eq!(e.kind, WireErrorKind::BadVersion(99));
+        assert!(e.kind.is_fatal());
+        assert_eq!(e.seq, 5, "seq still recoverable");
+
+        let mut p = wire[4..].to_vec();
+        let last = p.len() - 1;
+        p[last] ^= 1; // corrupt the crc itself
+        let e = decode_payload(&p).unwrap_err();
+        assert_eq!(e.kind, WireErrorKind::BadCrc);
+        assert!(!e.kind.is_fatal());
+        assert_eq!(e.seq, 5);
+    }
+
+    #[test]
+    fn trailing_garbage_and_wrong_lengths_are_rejected() {
+        // valid register + one stray byte before the crc
+        let wire = encode_frame(1, &sample_frames()[0].1);
+        let mut p = wire[4..].to_vec();
+        let crc_at = p.len() - CRC_BYTES;
+        p.insert(crc_at, 0xCC);
+        let body_end = p.len() - CRC_BYTES;
+        let crc = crc32(&p[..body_end]).to_le_bytes();
+        p[body_end..].copy_from_slice(&crc);
+        let e = decode_payload(&p).unwrap_err();
+        assert!(matches!(e.kind, WireErrorKind::BadBody(_)));
+
+        // truncated below the minimum payload
+        assert_eq!(
+            decode_payload(&p[..8]).unwrap_err().kind,
+            WireErrorKind::TooShort
+        );
+    }
+
+    /// Canonical-form discipline: a nonzero pad byte with a correctly
+    /// recomputed CRC must still be rejected — nothing hides in
+    /// padding, even against a non-accidental peer.
+    #[test]
+    fn nonzero_pads_are_rejected_even_with_valid_crc() {
+        let restamp = |p: &mut [u8]| {
+            let body_end = p.len() - CRC_BYTES;
+            let crc = crc32(&p[..body_end]).to_le_bytes();
+            p[body_end..].copy_from_slice(&crc);
+        };
+        // header pad (payload bytes 6..8)
+        let wire = encode_frame(3, &Frame::Busy);
+        let mut p = wire[4..].to_vec();
+        p[6] = 1;
+        restamp(&mut p);
+        assert!(matches!(
+            decode_payload(&p).unwrap_err().kind,
+            WireErrorKind::BadBody(_)
+        ));
+        // response body pad (body bytes 1..4)
+        let wire = encode_frame(3, &sample_frames()[3].1);
+        let mut p = wire[4..].to_vec();
+        p[HEADER_BYTES + 2] = 7;
+        restamp(&mut p);
+        assert!(matches!(
+            decode_payload(&p).unwrap_err().kind,
+            WireErrorKind::BadBody(_)
+        ));
+        // error body pad (body byte 1)
+        let wire = encode_frame(3, &sample_frames()[5].1);
+        let mut p = wire[4..].to_vec();
+        p[HEADER_BYTES + 1] = 9;
+        restamp(&mut p);
+        assert!(matches!(
+            decode_payload(&p).unwrap_err().kind,
+            WireErrorKind::BadBody(_)
+        ));
+    }
+
+    #[test]
+    fn unknown_kind_reports_seq_for_correlation() {
+        let wire = encode_frame(77, &Frame::Busy);
+        let mut p = wire[4..].to_vec();
+        p[5] = 200;
+        let body_end = p.len() - CRC_BYTES;
+        let crc = crc32(&p[..body_end]).to_le_bytes();
+        p[body_end..].copy_from_slice(&crc);
+        let e = decode_payload(&p).unwrap_err();
+        assert_eq!(e.kind, WireErrorKind::UnknownKind(200));
+        assert_eq!(e.seq, 77);
+        assert!(!e.kind.is_fatal());
+    }
+
+    #[test]
+    fn read_timeout_at_frame_boundary_is_idle_not_an_error() {
+        struct TimesOut;
+        impl Read for TimesOut {
+            fn read(&mut self, _: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::ErrorKind::WouldBlock.into())
+            }
+        }
+        assert!(matches!(
+            read_frame(&mut TimesOut, DEFAULT_MAX_FRAME),
+            FrameRead::Idle
+        ));
+
+        // but a timeout mid-frame (prefix read, bytes promised) is Io
+        struct PrefixThenTimeout(usize);
+        impl Read for PrefixThenTimeout {
+            fn read(
+                &mut self,
+                buf: &mut [u8],
+            ) -> std::io::Result<usize> {
+                if self.0 > 0 {
+                    let n = self.0.min(buf.len());
+                    buf[..n].fill(0x40); // plausible length prefix
+                    self.0 -= n;
+                    Ok(n)
+                } else {
+                    Err(std::io::ErrorKind::WouldBlock.into())
+                }
+            }
+        }
+        assert!(matches!(
+            read_frame(&mut PrefixThenTimeout(2), DEFAULT_MAX_FRAME),
+            FrameRead::Io(_)
+        ));
+    }
+
+    #[test]
+    fn read_frame_streams_and_detects_oversize() {
+        let mut bytes = Vec::new();
+        for (seq, frame) in sample_frames() {
+            bytes.extend_from_slice(&encode_frame(seq, &frame));
+        }
+        let mut cur = &bytes[..];
+        let mut n = 0;
+        loop {
+            match read_frame(&mut cur, DEFAULT_MAX_FRAME) {
+                FrameRead::Frame(p) => {
+                    decode_payload(&p).unwrap();
+                    n += 1;
+                }
+                FrameRead::Eof => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(n, sample_frames().len());
+
+        // huge length prefix
+        let huge = (DEFAULT_MAX_FRAME + 1).to_le_bytes();
+        let mut cur = &huge[..];
+        assert!(matches!(
+            read_frame(&mut cur, DEFAULT_MAX_FRAME),
+            FrameRead::Oversize(_)
+        ));
+        // absurdly small prefix is equally unframeable
+        let tiny = 3u32.to_le_bytes();
+        let mut cur = &tiny[..];
+        assert!(matches!(
+            read_frame(&mut cur, DEFAULT_MAX_FRAME),
+            FrameRead::Oversize(3)
+        ));
+
+        // torn mid-frame: EOF inside the payload is an Io error
+        let wire = encode_frame(1, &Frame::Busy);
+        let mut cur = &wire[..wire.len() - 2];
+        assert!(matches!(
+            read_frame(&mut cur, DEFAULT_MAX_FRAME),
+            FrameRead::Io(_)
+        ));
+    }
+}

@@ -1,0 +1,771 @@
+//! Lifecycle + conformance tests of the TCP wire-serving tier (`srv`).
+//!
+//! Everything runs over real loopback sockets against ephemeral binds
+//! (`127.0.0.1:0`) — no fixed ports, CI-safe. The conformance tests
+//! pin the serving tier's core contract: an op stream served over the
+//! wire produces scratchpads **bit-identical** to in-process
+//! execution of the same stream, because client (stage chaining) and
+//! server (single-traversal execution) reuse the exact resolve/visit
+//! logic of the in-process engines.
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use pulse::backend::TraversalBackend;
+use pulse::bench_support::{
+    build_serving_ops, make_backend, ServingSpec,
+};
+use pulse::ds::ForwardList;
+use pulse::isa::{Status, SP_WORDS};
+use pulse::live::LiveBackend;
+use pulse::rack::{Rack, RackConfig};
+use pulse::srv::loadgen::WireClient;
+use pulse::srv::wire::{
+    crc32, encode_frame, ErrCode, Frame, MIN_PAYLOAD,
+};
+use pulse::srv::{
+    run_loadgen, LoadgenConfig, Server, ServerHandle, SrvConfig,
+    SrvSummary,
+};
+
+const NODES: usize = 2;
+
+fn rack_cfg() -> RackConfig {
+    RackConfig::small(NODES)
+}
+
+/// Start a server for `spec` on an ephemeral port; returns the handle,
+/// the join handle for its summary, and the op stream materialized
+/// against an identically built shadow rack (the loadgen contract).
+fn start_server(
+    backend_kind: &str,
+    spec: &ServingSpec,
+    cfg: SrvConfig,
+) -> (ServerHandle, JoinHandle<SrvSummary>, Vec<pulse::rack::Op>) {
+    let mut backend = make_backend(backend_kind, rack_cfg());
+    let _ = build_serving_ops(backend.rack_mut(), spec);
+    let (server, handle) =
+        Server::bind(backend, "127.0.0.1:0", cfg).expect("bind");
+    let join = std::thread::spawn(move || server.run());
+    let mut shadow = Rack::new(rack_cfg());
+    let ops = build_serving_ops(&mut shadow, spec);
+    (handle, join, ops)
+}
+
+/// In-process ground truth: replay the same stream sequentially
+/// through the functional substrate of an identically built rack.
+fn expected_sps(
+    spec: &ServingSpec,
+    ops: &[pulse::rack::Op],
+) -> Vec<[i64; SP_WORDS]> {
+    let mut rack = Rack::new(rack_cfg());
+    let _ = build_serving_ops(&mut rack, spec);
+    ops.iter().map(|op| rack.run_op_functional(op)).collect()
+}
+
+#[test]
+fn ycsb_c_loopback_bit_matches_in_process_serving() {
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 4_000,
+        ops: 1_200,
+        ..ServingSpec::default()
+    };
+    let (handle, join, ops) =
+        start_server("live", &spec, SrvConfig::default());
+
+    // in-process reference #1: the functional oracle
+    let want = expected_sps(&spec, &ops);
+    // in-process reference #2: LiveBackend::serve with recording —
+    // read-only stream, so concurrent serving is order-insensitive
+    let mut live = LiveBackend::new(Rack::new(rack_cfg()));
+    let _ = build_serving_ops(live.rack_mut(), &spec);
+    live.record_results(true);
+    let rep = live.serve_batch(&ops, 16);
+    assert_eq!(rep.completed as usize, ops.len());
+    assert_eq!(live.last_results(), &want[..], "live vs oracle");
+
+    // over the wire: pipelined across 3 connections
+    let report = run_loadgen(
+        &LoadgenConfig {
+            addr: handle.addr().to_string(),
+            conns: 3,
+            depth: 8,
+            record_results: true,
+            ..LoadgenConfig::default()
+        },
+        ops.clone(),
+    )
+    .expect("loadgen");
+    assert_eq!(report.completed as usize, ops.len());
+    assert_eq!(report.busy, 0, "sub-saturating load must never BUSY");
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.trapped, 0);
+    for (i, got) in report.results.iter().enumerate() {
+        assert_eq!(
+            got.as_ref(),
+            Some(&want[i]),
+            "op {i} scratchpad diverged over the wire"
+        );
+    }
+
+    handle.shutdown();
+    let summary = join.join().unwrap();
+    assert_eq!(summary.engine.report.completed as usize, ops.len());
+    assert_eq!(summary.srv.decode_errors, 0);
+    assert_eq!(summary.backend.wire_busy, 0);
+}
+
+#[test]
+fn mixed_ab_stream_bit_matches_when_serialized() {
+    // writes make ordering observable, so the wire run is serialized
+    // (1 conn, depth 1) and compared against sequential functional
+    // replay — the same rule PR 4's mutating conformance pinned
+    for mix in ["mix-a", "mix-b"] {
+        let spec = ServingSpec {
+            workload: mix.into(),
+            keys: 2_000,
+            ops: 600,
+            ..ServingSpec::default()
+        };
+        let (handle, join, ops) =
+            start_server("live", &spec, SrvConfig::default());
+        let want = expected_sps(&spec, &ops);
+        let report = run_loadgen(
+            &LoadgenConfig {
+                addr: handle.addr().to_string(),
+                conns: 1,
+                depth: 1,
+                record_results: true,
+                ..LoadgenConfig::default()
+            },
+            ops.clone(),
+        )
+        .expect("loadgen");
+        assert_eq!(report.completed as usize, ops.len(), "{mix}");
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.busy, 0);
+        for (i, got) in report.results.iter().enumerate() {
+            assert_eq!(
+                got.as_ref(),
+                Some(&want[i]),
+                "{mix} op {i} diverged"
+            );
+        }
+        handle.shutdown();
+        let summary = join.join().unwrap();
+        assert_eq!(summary.engine.report.trapped, 0, "{mix}");
+    }
+}
+
+#[test]
+fn multi_stage_scan_ops_chain_client_side() {
+    // skiplist YCSB-E: two-stage ops with repeat_while continuation —
+    // the client library's stage chaining over real sockets
+    let spec = ServingSpec {
+        workload: "skiplist".into(),
+        keys: 1_500,
+        ops: 400,
+        max_scan: 40,
+        ..ServingSpec::default()
+    };
+    let (handle, join, ops) =
+        start_server("live", &spec, SrvConfig::default());
+    let want = expected_sps(&spec, &ops);
+    let report = run_loadgen(
+        &LoadgenConfig {
+            addr: handle.addr().to_string(),
+            conns: 2,
+            depth: 6,
+            record_results: true,
+            ..LoadgenConfig::default()
+        },
+        ops.clone(),
+    )
+    .expect("loadgen");
+    assert_eq!(report.completed as usize, ops.len());
+    assert_eq!(report.errors, 0);
+    for (i, got) in report.results.iter().enumerate() {
+        assert_eq!(got.as_ref(), Some(&want[i]), "scan op {i}");
+    }
+    handle.shutdown();
+    let summary = join.join().unwrap();
+    // scans require more wire requests than ops (continuation rounds)
+    assert!(
+        summary.srv.requests > summary.engine.report.completed / 2
+            && summary.srv.requests as usize >= ops.len(),
+        "requests={} ops={}",
+        summary.srv.requests,
+        ops.len()
+    );
+}
+
+#[test]
+fn inline_backends_serve_the_same_bytes() {
+    // a model backend (cache) behind the wire tier shares the
+    // functional substrate: identical scratchpads, inline execution
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 1_000,
+        ops: 300,
+        ..ServingSpec::default()
+    };
+    let (handle, join, ops) =
+        start_server("cache", &spec, SrvConfig::default());
+    let want = expected_sps(&spec, &ops);
+    let report = run_loadgen(
+        &LoadgenConfig {
+            addr: handle.addr().to_string(),
+            conns: 2,
+            depth: 4,
+            record_results: true,
+            ..LoadgenConfig::default()
+        },
+        ops.clone(),
+    )
+    .expect("loadgen");
+    assert_eq!(report.completed as usize, ops.len());
+    for (i, got) in report.results.iter().enumerate() {
+        assert_eq!(got.as_ref(), Some(&want[i]), "op {i}");
+    }
+    handle.shutdown();
+    let _ = join.join().unwrap();
+}
+
+/// A server whose backend holds one long list (slow sum ops), plus
+/// everything the client side needs to drive it; used by the
+/// backpressure + pipelining tests.
+struct SlowListServer {
+    handle: ServerHandle,
+    join: JoinHandle<SrvSummary>,
+    iter: Arc<pulse::compiler::CompiledIter>,
+    head: u64,
+}
+
+fn slow_list_server(cfg: SrvConfig, len: i64) -> SlowListServer {
+    let mut backend = make_backend("live", rack_cfg());
+    let (head, iter) = {
+        let rack = backend.rack_mut();
+        let mut l = ForwardList::new();
+        for i in 1..=len {
+            l.push(rack, i);
+        }
+        (l.head, l.sum_program())
+    };
+    let (server, handle) =
+        Server::bind(backend, "127.0.0.1:0", cfg).expect("bind");
+    let join = std::thread::spawn(move || server.run());
+    SlowListServer { handle, join, iter, head }
+}
+
+fn request_sp() -> [i64; SP_WORDS] {
+    [0i64; SP_WORDS]
+}
+
+#[test]
+fn busy_under_tiny_queue_never_hangs_and_conn_stays_usable() {
+    // window 1, pending 1, inbox 2: a burst of 10 slow ops (20k-hop
+    // list walks) must split into served + explicit BUSY — nothing
+    // blocks, nothing is dropped silently
+    let cfg = SrvConfig {
+        window: 1,
+        pending_cap: 1,
+        inbox_capacity: 2,
+        ..SrvConfig::default()
+    };
+    let SlowListServer { handle, join, iter, head } =
+        slow_list_server(cfg, 20_000);
+    let mut c = WireClient::connect(handle.addr()).unwrap();
+    c.register(1, &iter.program).unwrap();
+    let n = 10u64;
+    let seqs: Vec<u64> = (0..n).map(|_| c.next_seq()).collect();
+    for &seq in &seqs {
+        c.send(
+            seq,
+            &Frame::Request {
+                prog: 1,
+                budget: 0,
+                start: head,
+                sp: request_sp(),
+            },
+        )
+        .unwrap();
+    }
+    let mut done = 0u64;
+    let mut busy = 0u64;
+    for _ in 0..n {
+        match c.recv().unwrap().expect("frame").frame {
+            Frame::Response { status, sp, .. } => {
+                assert_eq!(status, Status::Return);
+                assert_eq!(sp[3], (1..=20_000i64).sum::<i64>());
+                done += 1;
+            }
+            Frame::Busy => busy += 1,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(done + busy, n);
+    assert!(busy >= 1, "burst of {n} through capacity ~3 never shed");
+    assert!(done >= 1, "backpressure starved the engine entirely");
+
+    // the connection is still fully usable after shedding
+    let seq = c.next_seq();
+    c.send(
+        seq,
+        &Frame::Request {
+            prog: 1,
+            budget: 0,
+            start: head,
+            sp: request_sp(),
+        },
+    )
+    .unwrap();
+    match c.recv().unwrap().expect("frame").frame {
+        Frame::Response { status, .. } => {
+            assert_eq!(status, Status::Return)
+        }
+        other => panic!("post-busy request failed: {other:?}"),
+    }
+    handle.shutdown();
+    let summary = join.join().unwrap();
+    assert_eq!(summary.srv.busy, busy);
+    assert_eq!(summary.backend.wire_busy, busy);
+}
+
+#[test]
+fn pipelined_responses_complete_out_of_order_by_request_id() {
+    // one connection, two requests: a 30k-hop walk (forced to yield
+    // by the 4096-iteration grant) then a 10-hop walk. The short one
+    // must overtake the long one in the response stream; request ids
+    // are what keep the pipeline coherent.
+    let SlowListServer {
+        handle,
+        join,
+        iter: long_iter,
+        head: long_head,
+    } = slow_list_server(SrvConfig::default(), 30_000);
+    let mut c = WireClient::connect(handle.addr()).unwrap();
+    c.register(1, &long_iter.program).unwrap();
+
+    // a short list on the client side cannot exist server-side; reuse
+    // the same list but cap the walk with a tiny budget? No — budget
+    // exhaustion is granted transparently. Instead: issue the long op
+    // twice with wildly different *remaining* work by starting the
+    // second walk near the tail. Walking from element k sums the
+    // tail; the near-tail start finishes in a few iterations.
+    let mut rack = Rack::new(rack_cfg());
+    let mut l = ForwardList::new();
+    let mut addrs = Vec::new();
+    for i in 1..=30_000i64 {
+        addrs.push(l.push(&mut rack, i));
+    }
+    // shadow rack layout is deterministic: the server's node k sits at
+    // the same address
+    let near_tail = *addrs.last().unwrap();
+
+    let slow_seq = c.next_seq();
+    c.send(
+        slow_seq,
+        &Frame::Request {
+            prog: 1,
+            budget: 0,
+            start: long_head,
+            sp: request_sp(),
+        },
+    )
+    .unwrap();
+    let fast_seq = c.next_seq();
+    c.send(
+        fast_seq,
+        &Frame::Request {
+            prog: 1,
+            budget: 0,
+            start: near_tail,
+            sp: request_sp(),
+        },
+    )
+    .unwrap();
+
+    let first = c.recv().unwrap().expect("frame");
+    let second = c.recv().unwrap().expect("frame");
+    assert_eq!(
+        first.seq, fast_seq,
+        "short op did not overtake the 30k-hop walk"
+    );
+    assert_eq!(second.seq, slow_seq);
+    match (first.frame, second.frame) {
+        (
+            Frame::Response { sp: fast_sp, .. },
+            Frame::Response { sp: slow_sp, iters, .. },
+        ) => {
+            // the near-tail walk sums only the last element it visits
+            assert!(fast_sp[3] > 0);
+            assert_eq!(slow_sp[3], (1..=30_000i64).sum::<i64>());
+            assert!(iters >= 30_000);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.shutdown();
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_ops() {
+    let SlowListServer { handle, join, iter, head } =
+        slow_list_server(SrvConfig::default(), 15_000);
+    let mut c = WireClient::connect(handle.addr()).unwrap();
+    c.register(1, &iter.program).unwrap();
+    let n = 24u64;
+    for _ in 0..n {
+        let seq = c.next_seq();
+        c.send(
+            seq,
+            &Frame::Request {
+                prog: 1,
+                budget: 0,
+                start: head,
+                sp: request_sp(),
+            },
+        )
+        .unwrap();
+    }
+    // wait for the first response, then shut down mid-stream
+    let first = c.recv().unwrap().expect("first response");
+    assert!(matches!(first.frame, Frame::Response { .. }));
+    handle.shutdown();
+
+    // every remaining frame must decode cleanly: full responses for
+    // drained ops, ERROR(ShuttingDown) for rejected ones, then EOF
+    let mut responses = 1u64;
+    let mut rejected = 0u64;
+    let mut torn = false;
+    loop {
+        match c.recv() {
+            Ok(Some(env)) => match env.frame {
+                Frame::Response { status, sp, .. } => {
+                    assert_eq!(status, Status::Return);
+                    assert_eq!(sp[3], (1..=15_000i64).sum::<i64>());
+                    responses += 1;
+                }
+                Frame::Error { code, .. } => {
+                    assert_eq!(code, ErrCode::ShuttingDown);
+                    rejected += 1;
+                }
+                Frame::Busy => rejected += 1,
+                other => panic!("unexpected {other:?}"),
+            },
+            Ok(None) => break,
+            Err(_) => {
+                // reset during teardown: some drained responses may
+                // have been lost on the wire, so only the inequality
+                // below can be asserted
+                torn = true;
+                break;
+            }
+        }
+    }
+    let summary = join.join().unwrap();
+    assert!(
+        responses >= 1 && responses + rejected <= n,
+        "responses={responses} rejected={rejected}"
+    );
+    if torn {
+        // drained ops may outnumber the responses that survived the
+        // torn stream, never the reverse
+        assert!(summary.engine.report.completed >= responses);
+    } else {
+        // clean EOF: drained means drained — every engine completion
+        // reached the client before the stream closed
+        assert_eq!(summary.engine.report.completed, responses);
+    }
+}
+
+#[test]
+fn malformed_frames_answer_error_or_clean_disconnect() {
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 500,
+        ops: 10,
+        ..ServingSpec::default()
+    };
+    let (handle, join, ops) =
+        start_server("live", &spec, SrvConfig::default());
+    let addr = handle.addr();
+    let prog = &ops[0].stages[0].iter.program;
+
+    // (a) bad magic: best-effort ERROR then disconnect
+    {
+        let mut c = WireClient::connect(addr).unwrap();
+        let mut wire = encode_frame(1, &Frame::Busy);
+        wire[4] ^= 0xFF; // magic byte
+        patch_crc(&mut wire);
+        c.send_raw(&wire).unwrap();
+        match c.recv() {
+            Ok(Some(env)) => {
+                assert!(matches!(
+                    env.frame,
+                    Frame::Error { code: ErrCode::BadMagic, .. }
+                ));
+                // then EOF (or reset) — the stream is untrusted
+                assert!(matches!(c.recv(), Ok(None) | Err(_)));
+            }
+            Ok(None) | Err(_) => {}
+        }
+    }
+
+    // (b) bad CRC: ERROR with the request's seq, connection survives
+    {
+        let mut c = WireClient::connect(addr).unwrap();
+        c.register(1, prog).unwrap();
+        let mut wire = encode_frame(
+            42,
+            &Frame::Request {
+                prog: 1,
+                budget: 0,
+                start: 0x4000,
+                sp: request_sp(),
+            },
+        );
+        let last = wire.len() - 1;
+        wire[last] ^= 1; // corrupt the crc
+        c.send_raw(&wire).unwrap();
+        let env = c.recv().unwrap().expect("error frame");
+        assert_eq!(env.seq, 42);
+        assert!(matches!(
+            env.frame,
+            Frame::Error { code: ErrCode::BadCrc, .. }
+        ));
+        // still serves valid traffic afterwards
+        roundtrip_one(&mut c, &ops[0]);
+    }
+
+    // (c) oversized length prefix: ERROR then disconnect
+    {
+        let mut c = WireClient::connect(addr).unwrap();
+        c.send_raw(&(64u32 << 20).to_le_bytes()).unwrap();
+        match c.recv() {
+            Ok(Some(env)) => {
+                assert!(matches!(
+                    env.frame,
+                    Frame::Error { code: ErrCode::Oversize, .. }
+                ));
+                assert!(matches!(c.recv(), Ok(None) | Err(_)));
+            }
+            Ok(None) | Err(_) => {}
+        }
+    }
+
+    // (d) truncated frame then hangup: server survives (next
+    // connection works)
+    {
+        let mut c = WireClient::connect(addr).unwrap();
+        let wire = encode_frame(1, &Frame::Busy);
+        c.send_raw(&wire[..wire.len() - 3]).unwrap();
+        drop(c);
+    }
+
+    // (e) unknown program id: ERROR, connection continues
+    {
+        let mut c = WireClient::connect(addr).unwrap();
+        let seq = c.next_seq();
+        c.send(
+            seq,
+            &Frame::Request {
+                prog: 99,
+                budget: 0,
+                start: 0x4000,
+                sp: request_sp(),
+            },
+        )
+        .unwrap();
+        let env = c.recv().unwrap().expect("error frame");
+        assert_eq!(env.seq, seq);
+        assert!(matches!(
+            env.frame,
+            Frame::Error { code: ErrCode::UnknownProgram, .. }
+        ));
+        c.register(1, prog).unwrap();
+        roundtrip_one(&mut c, &ops[0]);
+    }
+
+    // (f) garbage program bytes in REGISTER: ERROR(BadBody), continue
+    {
+        let mut c = WireClient::connect(addr).unwrap();
+        let mut body = vec![0u8; 40];
+        body[0] = 1; // program id 1; remainder is not a program
+        let wire = raw_frame(7, 1 /* KIND_REGISTER */, &body);
+        c.send_raw(&wire).unwrap();
+        let env = c.recv().unwrap().expect("error frame");
+        assert!(matches!(
+            env.frame,
+            Frame::Error {
+                code: ErrCode::BadBody | ErrCode::BadProgram,
+                ..
+            }
+        ));
+        c.register(1, prog).unwrap();
+        roundtrip_one(&mut c, &ops[0]);
+    }
+
+    // (g) byte-corruption sweep over a valid request frame: every
+    // flip answers ERROR or disconnects; none wedges the listener
+    {
+        let good = encode_frame(
+            5,
+            &Frame::Request {
+                prog: 1,
+                budget: 0,
+                start: 0x4000,
+                sp: request_sp(),
+            },
+        );
+        for pos in [4usize, 8, 9, 10, 16, 20, 40, good.len() - 1] {
+            let mut c = WireClient::connect(addr).unwrap();
+            c.register(1, prog).unwrap();
+            let mut bad = good.clone();
+            bad[pos] ^= 0x5A;
+            c.send_raw(&bad).unwrap();
+            match c.recv() {
+                Ok(Some(env)) => assert!(
+                    matches!(env.frame, Frame::Error { .. }),
+                    "flip at {pos}: expected ERROR, got {env:?}"
+                ),
+                Ok(None) | Err(_) => {} // clean disconnect is fine
+            }
+        }
+    }
+
+    // the server survived all of it and still serves
+    let mut c = WireClient::connect(addr).unwrap();
+    c.register(1, prog).unwrap();
+    roundtrip_one(&mut c, &ops[0]);
+
+    handle.shutdown();
+    let summary = join.join().unwrap();
+    assert!(summary.srv.decode_errors >= 3);
+    assert_eq!(summary.backend.wire_decode_errors, summary.srv.decode_errors);
+}
+
+#[test]
+fn port_in_use_and_double_start_fail_cleanly() {
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 100,
+        ops: 10,
+        ..ServingSpec::default()
+    };
+    let (handle, join, _ops) =
+        start_server("live", &spec, SrvConfig::default());
+    let addr = handle.addr().to_string();
+    // second bind on the same port: a clean io::Error, not a panic
+    let backend2 = make_backend("live", rack_cfg());
+    let err = Server::bind(backend2, &addr, SrvConfig::default());
+    assert!(err.is_err(), "double bind on {addr} must fail");
+    handle.shutdown();
+    let _ = join.join().unwrap();
+    // the port is free again after a full teardown
+    let backend3 = make_backend("live", rack_cfg());
+    let (server3, handle3) =
+        Server::bind(backend3, &addr, SrvConfig::default())
+            .expect("rebind after teardown");
+    let join3 = std::thread::spawn(move || server3.run());
+    handle3.shutdown();
+    let _ = join3.join().unwrap();
+}
+
+/// Send `op`'s first stage and assert a Return response (helper for
+/// the hardening test's "connection still works" checks).
+fn roundtrip_one(c: &mut WireClient, op: &pulse::rack::Op) {
+    let stage = &op.stages[0];
+    let (start, sp) = stage.resolve(&[0i64; SP_WORDS], None);
+    let seq = c.next_seq();
+    c.send(
+        seq,
+        &Frame::Request { prog: 1, budget: 0, start, sp },
+    )
+    .unwrap();
+    let env = c.recv().unwrap().expect("response");
+    assert_eq!(env.seq, seq);
+    assert!(
+        matches!(env.frame, Frame::Response { status: Status::Return, .. }),
+        "{env:?}"
+    );
+}
+
+/// Hand-build a frame with an arbitrary kind byte + body (for
+/// malformed-body injection the typed encoder cannot produce).
+fn raw_frame(seq: u64, kind: u8, body: &[u8]) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.extend_from_slice(&[0u8; 4]);
+    p.extend_from_slice(&u32::from_le_bytes(*b"PLSE").to_le_bytes());
+    p.push(1); // version
+    p.push(kind);
+    p.extend_from_slice(&0u16.to_le_bytes());
+    p.extend_from_slice(&seq.to_le_bytes());
+    p.extend_from_slice(body);
+    let crc = crc32(&p[4..]).to_le_bytes();
+    p.extend_from_slice(&crc);
+    let len = (p.len() - 4) as u32;
+    p[..4].copy_from_slice(&len.to_le_bytes());
+    p
+}
+
+/// Re-stamp a (possibly corrupted) frame's CRC so only the targeted
+/// field is invalid, not the checksum.
+fn patch_crc(wire: &mut [u8]) {
+    let n = wire.len();
+    let crc = crc32(&wire[4..n - 4]).to_le_bytes();
+    wire[n - 4..].copy_from_slice(&crc);
+}
+
+#[test]
+fn open_loop_pacing_completes_the_stream() {
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 1_000,
+        ops: 300,
+        ..ServingSpec::default()
+    };
+    let (handle, join, ops) =
+        start_server("live", &spec, SrvConfig::default());
+    let want = expected_sps(&spec, &ops);
+    let report = run_loadgen(
+        &LoadgenConfig {
+            addr: handle.addr().to_string(),
+            conns: 2,
+            depth: 8,
+            open_rate: 30_000.0, // paced, comfortably sub-saturating
+            record_results: true,
+            ..LoadgenConfig::default()
+        },
+        ops.clone(),
+    )
+    .expect("loadgen");
+    // open-loop in-flight is unbounded by design, so a scheduler
+    // stall on a loaded CI host can legitimately shed a few ops as
+    // BUSY; the invariants are exact accounting, zero protocol
+    // errors, and bit-correct scratchpads for everything served
+    assert_eq!(report.completed + report.busy, ops.len() as u64);
+    assert_eq!(report.errors, 0);
+    assert!(
+        report.completed >= ops.len() as u64 / 2,
+        "sub-saturating pace mostly shed: completed={} busy={}",
+        report.completed,
+        report.busy
+    );
+    for (i, got) in report.results.iter().enumerate() {
+        if let Some(got) = got {
+            assert_eq!(got, &want[i], "op {i}");
+        }
+    }
+    handle.shutdown();
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn min_payload_constant_matches_the_codec() {
+    // keep the wire constants honest: the smallest frame the encoder
+    // produces is exactly MIN_PAYLOAD
+    let wire = encode_frame(0, &Frame::Busy);
+    assert_eq!(wire.len() - 4, MIN_PAYLOAD);
+}
