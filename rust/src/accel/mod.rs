@@ -127,7 +127,9 @@ impl Accelerator {
     /// iters_done) so it can be bounced/forwarded verbatim — request and
     /// response share the format (paper §5).
     pub fn visit(&mut self, msg: &mut TraversalMsg) -> VisitOutcome {
-        let program = msg.program.clone();
+        // Arc bump, not a deep copy: detaches the program from the
+        // &mut borrow of `msg` while sharing the same instructions.
+        let program = std::sync::Arc::clone(&msg.program);
         let words = program.load_words as usize;
         let mut trace = Vec::with_capacity(8);
         let mut iters = 0u32;
@@ -288,6 +290,32 @@ mod tests {
         assert_eq!(msg.sp[1], 30);
         assert_eq!(out.trace.len(), 3);
         assert!(out.trace.iter().all(|t| t.words == 3 && !t.dirty));
+    }
+
+    /// Zero-copy execute invariant: the accelerator runs the very
+    /// program Arc the request carried — a visit never swaps in a
+    /// deep-copied program, even across yield/bounce boundaries.
+    #[test]
+    fn visit_executes_the_shared_program_arc() {
+        use std::sync::Arc;
+        let (mut accel, start) = node_with_list(&[(1, 10), (2, 20)]);
+        let p = Arc::new(crate::testgen::list_find_program());
+        let mut sp = [0i64; SP_WORDS];
+        sp[0] = 2;
+        let mut msg = TraversalMsg::request(
+            RequestId { cpu_node: 0, seq: 9 },
+            Arc::clone(&p),
+            start,
+            sp,
+            1, // force a yield mid-walk first
+        );
+        let out = accel.visit(&mut msg);
+        assert_eq!(out.end, VisitEnd::Yield);
+        assert!(Arc::ptr_eq(&msg.program, &p));
+        msg.max_iters = 64;
+        let out = accel.visit(&mut msg);
+        assert_eq!(out.end, VisitEnd::Done(Status::Return));
+        assert!(Arc::ptr_eq(&msg.program, &p));
     }
 
     #[test]

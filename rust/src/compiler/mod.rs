@@ -21,12 +21,19 @@ pub mod builder;
 
 pub use builder::{IterBuilder, Val};
 
+use std::sync::Arc;
+
 use crate::isa::{CostModel, Program};
 
 /// A compiled iterator: the offloadable program plus its cost estimate.
+///
+/// The program is `Arc`-shared from here on out: every `TraversalMsg`
+/// dispatched from this iterator bumps a refcount instead of deep-
+/// copying the instruction stream (compile once, share everywhere —
+/// the in-process analogue of the wire tier's register-once protocol).
 #[derive(Debug, Clone)]
 pub struct CompiledIter {
-    pub program: Program,
+    pub program: Arc<Program>,
     pub t_c_ns: f64,
     pub t_d_ns: f64,
 }
@@ -34,7 +41,11 @@ pub struct CompiledIter {
 impl CompiledIter {
     pub fn new(program: Program) -> Self {
         let cost = CostModel::default().cost(&program);
-        Self { program, t_c_ns: cost.t_c_ns, t_d_ns: cost.t_d_ns }
+        Self {
+            program: Arc::new(program),
+            t_c_ns: cost.t_c_ns,
+            t_d_ns: cost.t_d_ns,
+        }
     }
 
     /// The paper's offload predicate (§4.1).

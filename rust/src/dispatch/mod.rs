@@ -10,6 +10,10 @@
 //!   node let the engine run iterations locally and offload only the
 //!   cold remainder (Appendix C.2 access-pattern study).
 
+// Hot-path modules keep clones honest: a clone the borrow checker
+// would let us drop is a bug here, not a style nit.
+#![deny(clippy::redundant_clone)]
+
 pub mod cache;
 
 pub use cache::ObjectCache;
@@ -159,7 +163,7 @@ impl DispatchEngine {
         self.seq += 1;
         let mut msg = TraversalMsg::request(
             id,
-            iter.program.clone(),
+            std::sync::Arc::clone(&iter.program),
             start,
             sp,
             if budget != 0 { budget } else { self.cfg.max_iters },
@@ -350,6 +354,26 @@ mod tests {
         }
         assert_eq!(d.stats.offloaded, 1);
         assert_eq!(d.pending_count(), 1);
+    }
+
+    /// Zero-copy dispatch invariant: the offloaded message (and its
+    /// parked retransmit copy) share the compiled iterator's program
+    /// Arc — no deep clone anywhere on the submit path.
+    #[test]
+    fn offloaded_message_shares_the_iterators_program() {
+        use std::sync::Arc;
+        let mut cfg = DispatchConfig::default();
+        cfg.timeout_ns = 1000;
+        let mut d = DispatchEngine::new(0, cfg);
+        let it = list_find_iter();
+        let msg = match d.submit(&it, 0x1000, [0; SP_WORDS], 0) {
+            Disposition::Offload(m) => m,
+            other => panic!("expected offload, got {other:?}"),
+        };
+        assert!(Arc::ptr_eq(&msg.program, &it.program));
+        let retrans = d.collect_retransmits(5000);
+        assert_eq!(retrans.len(), 1);
+        assert!(Arc::ptr_eq(&retrans[0].program, &it.program));
     }
 
     #[test]

@@ -42,10 +42,7 @@
 //! the functional substrate every model backend (cache / RPC) shares.
 //! Results — status, scratchpad, iters, crossings — are identical to
 //! the sharded path for any wire request; what changes is parallelism
-//! (none) and therefore wall clock. Known cost shared with the live
-//! coordinator: each dispatch clones the program into its
-//! `TraversalMsg` (an `Arc<Program>` message refactor would hoist it;
-//! see CHANGES.md).
+//! (none) and therefore wall clock.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -268,8 +265,10 @@ impl Engine {
         if self.cfg.sharded {
             let shards = rack.cfg.nodes;
             let in_network = rack.cfg.in_network_routing;
+            // shares the allocator's epoch-cached map snapshot instead
+            // of deep-copying the RangeMap per engine start
             let router =
-                Arc::new(Router::new(rack.alloc.switch_map.clone()));
+                Arc::new(Router::new(rack.alloc.publish_map()));
             let mut txs = Vec::with_capacity(shards);
             let mut rxs = Vec::with_capacity(shards);
             let mut qstats = Vec::with_capacity(shards);
@@ -519,7 +518,7 @@ impl Dispatcher<'_> {
         self.seq += 1;
         let msg = TraversalMsg::request(
             id,
-            sub.iter.program.clone(),
+            Arc::clone(&sub.iter.program),
             sub.start,
             sub.sp,
             budget,

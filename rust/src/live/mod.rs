@@ -35,6 +35,10 @@
 //! loss-free (in-process queues don't drop), so there is no
 //! retransmission machinery.
 
+// Hot-path modules keep clones honest: a clone the borrow checker
+// would let us drop is a bug here, not a style nit.
+#![deny(clippy::redundant_clone)]
+
 pub mod engine;
 pub mod metrics;
 pub mod queue;
@@ -55,6 +59,7 @@ use crate::backend::{BackendMetrics, TraversalBackend};
 use crate::isa::{Status, SP_WORDS};
 use crate::net::{RequestId, TraversalMsg};
 use crate::rack::{Op, Rack, ServeReport};
+use crate::util::CachePadded;
 
 use self::queue::QueueTx;
 use self::shard::{run_shard, LiveJob, Reply, ShardMsg};
@@ -144,8 +149,10 @@ impl LiveBackend {
             (cap, concurrency.clamp(1, cap - 1))
         };
 
+        // shares the allocator's published snapshot: router
+        // construction is an Arc bump, not a RangeMap deep copy
         let router =
-            Arc::new(Router::new(self.rack.alloc.switch_map.clone()));
+            Arc::new(Router::new(self.rack.alloc.publish_map()));
         let mut txs = Vec::with_capacity(shards);
         let mut rxs = Vec::with_capacity(shards);
         let mut qstats = Vec::with_capacity(shards);
@@ -159,8 +166,15 @@ impl LiveBackend {
         let reply_stats = rtx.stats_handle();
 
         let mut report = ServeReport::default();
-        let mut results: Vec<(u64, [i64; SP_WORDS])> = Vec::new();
         let record = self.record_results;
+        // reserve up front so recording never grows the vector inside
+        // the timed region (batch size is known; generators amortize)
+        let mut results: Vec<(u64, [i64; SP_WORDS])> = Vec::new();
+        if record {
+            if let OpSource::Batch(ops) = &source {
+                results.reserve(ops.len());
+            }
+        }
 
         let memnodes = &mut self.rack.memnodes;
         let shard_stats: Vec<ShardStats> = std::thread::scope(|s| {
@@ -183,7 +197,9 @@ impl LiveBackend {
                 router: router.as_ref(),
                 report: &mut report,
                 source,
-                slots: (0..window).map(|_| None).collect(),
+                slots: (0..window)
+                    .map(|_| CachePadded::new(None))
+                    .collect(),
                 free: (0..window as u32).rev().collect(),
                 issued: 0,
                 inflight: 0,
@@ -328,7 +344,10 @@ struct Coordinator<'a> {
     router: &'a Router,
     report: &'a mut ServeReport,
     source: OpSource<'a>,
-    slots: Vec<Option<Slot<'a>>>,
+    /// One in-flight op per entry, each on its own cache line: replies
+    /// complete in arbitrary interleavings, and a store to one hot
+    /// slot must not evict the neighbouring in-flight states with it.
+    slots: Vec<CachePadded<Option<Slot<'a>>>>,
     free: Vec<u32>,
     issued: u64,
     inflight: usize,
@@ -372,7 +391,7 @@ impl<'a> Coordinator<'a> {
                 .free
                 .pop()
                 .expect("inflight < window implies a free token");
-            self.slots[token as usize] = Some(Slot {
+            *self.slots[token as usize] = Some(Slot {
                 op,
                 op_index,
                 stage_idx: 0,
@@ -400,7 +419,7 @@ impl<'a> Coordinator<'a> {
             let stage = &slot.op.get().stages[slot.stage_idx];
             let (start, sp) = stage.resolve(&prev_sp, repeat_from);
             let program = (start != 0)
-                .then(|| stage.iter.program.clone());
+                .then(|| Arc::clone(&stage.iter.program));
             (start, sp, program)
         };
         let Some(program) = program else {

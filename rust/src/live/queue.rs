@@ -20,14 +20,25 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 
+use crate::util::CachePadded;
+
 /// Shared occupancy counters of one queue (lock-free, relaxed: the
 /// counts are metrics, not synchronization).
+///
+/// Producer-touched counters (`pushed`, `full_blocks`, `rejects` —
+/// bumped by the coordinator and every forwarding peer shard) and the
+/// consumer-touched one (`popped` — bumped only by the owning shard)
+/// live on separate cache lines: without the padding every pop would
+/// invalidate the line the producers are writing and vice versa —
+/// false sharing on the hottest cross-thread path in the engine.
 #[derive(Debug, Default)]
 pub struct QueueStats {
+    /// Producer side (send/try_send), one line.
     pushed: AtomicU64,
-    popped: AtomicU64,
     full_blocks: AtomicU64,
     rejects: AtomicU64,
+    /// Consumer side (recv/try_recv), its own line.
+    popped: CachePadded<AtomicU64>,
     capacity: u64,
 }
 

@@ -17,8 +17,10 @@
 //! matching the DES's publish-then-serve order.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::mem::{GAddr, NodeId, RangeMap};
+use crate::util::CachePadded;
 
 /// Routing counters (mirrors `switch::SwitchStats` for the live path).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -33,21 +35,28 @@ pub struct RouterStats {
 }
 
 /// Shared coarse translation: VA range -> shard (= memory node).
+///
+/// The map rides as `Arc<RangeMap>`: building a router from the
+/// allocator's published snapshot (and republishing after growth) is
+/// a pointer swap, not a deep copy. The counters are bumped from
+/// every shard thread concurrently, so each sits on its own cache
+/// line — a routed burst on one shard must not invalidate the line a
+/// bounce re-route on another shard is writing.
 #[derive(Debug)]
 pub struct Router {
-    map: RangeMap,
-    routed: AtomicU64,
-    reroutes: AtomicU64,
-    invalid: AtomicU64,
+    map: Arc<RangeMap>,
+    routed: CachePadded<AtomicU64>,
+    reroutes: CachePadded<AtomicU64>,
+    invalid: CachePadded<AtomicU64>,
 }
 
 impl Router {
-    pub fn new(map: RangeMap) -> Self {
+    pub fn new(map: impl Into<Arc<RangeMap>>) -> Self {
         Self {
-            map,
-            routed: AtomicU64::new(0),
-            reroutes: AtomicU64::new(0),
-            invalid: AtomicU64::new(0),
+            map: map.into(),
+            routed: CachePadded::new(AtomicU64::new(0)),
+            reroutes: CachePadded::new(AtomicU64::new(0)),
+            invalid: CachePadded::new(AtomicU64::new(0)),
         }
     }
 
@@ -175,7 +184,7 @@ mod tests {
             ..Default::default()
         });
         let a0 = rack.alloc(64);
-        let old = Router::new(rack.alloc.switch_map.clone());
+        let old = Router::new(rack.alloc.publish_map());
         assert_eq!(old.route(a0, false), rack.alloc.owner(a0));
         // force fresh slabs (restart boundary)
         let grown: Vec<_> = (0..8).map(|_| rack.alloc(4096)).collect();
@@ -185,7 +194,7 @@ mod tests {
             None,
             "stale snapshot must not route post-snapshot slabs"
         );
-        let fresh = Router::new(rack.alloc.switch_map.clone());
+        let fresh = Router::new(rack.alloc.publish_map());
         assert_eq!(fresh.route(fresh_addr, false), rack.alloc.owner(fresh_addr));
         assert_eq!(fresh.route(a0, false), rack.alloc.owner(a0));
         // per-run counters reset with the snapshot (restart semantics)

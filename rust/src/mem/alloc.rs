@@ -15,6 +15,8 @@
 //! never straddles a slab boundary (so a single object is always on one
 //! node — pointer *chains*, not objects, cross nodes).
 
+use std::sync::Arc;
+
 use super::translate::{Perms, RangeMap, RangeTable};
 use super::{GAddr, NodeId, VA_BASE};
 use crate::util::prng::Rng;
@@ -52,6 +54,10 @@ pub struct RackAllocator {
     rng: Rng,
     /// Switch-level coarse map built as slabs are placed.
     pub switch_map: RangeMap,
+    /// Cached immutable snapshot of `switch_map` ([`Self::publish_map`]).
+    /// Invalidated on slab placement; rebuilt (one clone) per mutation
+    /// epoch, then shared by Arc bump with every consumer.
+    published_map: Option<Arc<RangeMap>>,
     /// Per-node slab records for installing accelerator TCAM entries.
     pub node_ranges: Vec<Vec<(GAddr, u64, u64)>>,
     pub slabs_allocated: u64,
@@ -79,6 +85,7 @@ impl RackAllocator {
             next_node_rr: 0,
             rng: Rng::with_stream(seed, 0x5EED_A110C),
             switch_map: RangeMap::new(),
+            published_map: None,
             node_ranges: vec![Vec::new(); nodes],
             slabs_allocated: 0,
         }
@@ -151,6 +158,7 @@ impl RackAllocator {
         self.node_local_off[node as usize] += self.granularity;
         self.node_used[node as usize] += self.granularity;
         self.switch_map.insert(base, self.granularity, node);
+        self.published_map = None;
         self.node_ranges[node as usize].push((
             base,
             self.granularity,
@@ -158,6 +166,18 @@ impl RackAllocator {
         ));
         self.slabs_allocated += 1;
         Slab { base, node, used: 0 }
+    }
+
+    /// Immutable shared snapshot of the coarse switch map. Costs one
+    /// `RangeMap` clone per mutation epoch; every further call (switch
+    /// republish, live-router construction) is an Arc refcount bump —
+    /// snapshot/republish is pointer-swap cheap.
+    pub fn publish_map(&mut self) -> Arc<RangeMap> {
+        if self.published_map.is_none() {
+            self.published_map =
+                Some(Arc::new(self.switch_map.clone()));
+        }
+        Arc::clone(self.published_map.as_ref().unwrap())
     }
 
     /// Allocate `size` bytes (8 B aligned). Never straddles a slab.
@@ -207,6 +227,7 @@ impl RackAllocator {
             self.node_local_off[node as usize] += self.granularity;
             self.node_used[node as usize] += self.granularity;
             self.switch_map.insert(base, self.granularity, node);
+            self.published_map = None;
             self.node_ranges[node as usize].push((
                 base,
                 self.granularity,
@@ -335,6 +356,28 @@ mod tests {
             let other = 1 - node;
             assert!(tables[other].translate(addr, 8, false).is_err());
         }
+    }
+
+    /// The published snapshot is shared, not recloned: stable across
+    /// calls within one mutation epoch, replaced after a new slab.
+    #[test]
+    fn publish_map_shares_one_snapshot_per_epoch() {
+        let mut a =
+            RackAllocator::new(2, 16 * MB, MB, AllocPolicy::RoundRobin, 1);
+        let addr = a.alloc(64);
+        let m1 = a.publish_map();
+        let m2 = a.publish_map();
+        assert!(Arc::ptr_eq(&m1, &m2));
+        assert_eq!(m1.lookup(addr), a.owner(addr));
+        // same slab: no new placement, snapshot stays valid
+        let _ = a.alloc(64);
+        assert!(Arc::ptr_eq(&m1, &a.publish_map()));
+        // force a fresh slab: snapshot must be rebuilt and see it
+        let grown = a.alloc(MB);
+        let m3 = a.publish_map();
+        assert!(!Arc::ptr_eq(&m1, &m3));
+        assert_eq!(m3.lookup(grown), a.owner(grown));
+        assert_eq!(m1.lookup(grown), None, "old snapshot stays stale");
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Traversal request/response message.
 
+use std::sync::Arc;
+
 use crate::isa::{Program, Status, SP_WORDS};
 
 /// Request identity: CPU node id + per-node sequence number (paper §4.1:
@@ -22,11 +24,18 @@ pub enum MsgKind {
 }
 
 /// The single message format used on every hop.
+///
+/// The program rides as `Arc<Program>`: dispatching, forwarding, and
+/// cloning a message (retransmit buffers) bump a refcount rather than
+/// deep-copying the instruction stream. `PartialEq` still compares
+/// program *contents* (`Arc<T>: PartialEq` delegates to `T`), and the
+/// wire codec is unchanged — encode writes the program body, decode
+/// materializes a fresh Arc.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraversalMsg {
     pub kind: MsgKind,
     pub id: RequestId,
-    pub program: Program,
+    pub program: Arc<Program>,
     pub cur_ptr: u64,
     pub sp: [i64; SP_WORDS],
     /// Iterations already executed (for the max-iteration bound, §3).
@@ -42,9 +51,12 @@ pub struct TraversalMsg {
 }
 
 impl TraversalMsg {
+    /// `program` accepts either a bare `Program` (wrapped into a fresh
+    /// Arc — convenient in tests) or an `Arc<Program>` clone from a
+    /// `CompiledIter` (the zero-copy dispatch path).
     pub fn request(
         id: RequestId,
-        program: Program,
+        program: impl Into<Arc<Program>>,
         cur_ptr: u64,
         sp: [i64; SP_WORDS],
         max_iters: u32,
@@ -52,7 +64,7 @@ impl TraversalMsg {
         Self {
             kind: MsgKind::Request,
             id,
-            program,
+            program: program.into(),
             cur_ptr,
             sp,
             iters_done: 0,
@@ -140,7 +152,7 @@ impl TraversalMsg {
         Some(Self {
             kind,
             id: RequestId { cpu_node, seq },
-            program,
+            program: Arc::new(program),
             cur_ptr,
             sp,
             iters_done,
@@ -214,6 +226,27 @@ mod tests {
         // header is compressed; wire_size is the on-link estimate.
         assert!(m.wire_size() >= m.encode().len());
         assert!(m.wire_size() < m.encode().len() + 64);
+    }
+
+    /// Zero-copy invariant: a request built from an `Arc<Program>`
+    /// *shares* it — no hidden deep clone on construction, on message
+    /// clone (retransmit buffers), or on the request→response flip
+    /// (the forward/finish path reuses the same struct).
+    #[test]
+    fn request_shares_the_program_arc() {
+        let p = Arc::new(sample_program());
+        let m = TraversalMsg::request(
+            RequestId { cpu_node: 1, seq: 1 },
+            Arc::clone(&p),
+            0x1000,
+            [0i64; SP_WORDS],
+            64,
+        );
+        assert!(Arc::ptr_eq(&m.program, &p));
+        let copy = m.clone();
+        assert!(Arc::ptr_eq(&copy.program, &p));
+        let resp = copy.into_response(Status::Return);
+        assert!(Arc::ptr_eq(&resp.program, &p));
     }
 
     #[test]

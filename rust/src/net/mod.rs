@@ -6,6 +6,10 @@
 //! bounce an in-flight traversal to the switch for re-routing without
 //! CPU-node involvement.
 
+// Hot-path modules keep clones honest: a clone the borrow checker
+// would let us drop is a bug here, not a style nit.
+#![deny(clippy::redundant_clone)]
+
 pub mod message;
 pub mod transport;
 

@@ -97,6 +97,9 @@ pub struct Rack {
     pub(crate) scratch: ServeScratch,
     /// Reusable functional workspace for the DES iteration hot path.
     pub(crate) des_ws: Workspace,
+    /// Reusable window buffer for `run_on_cpu` (clear-don't-free: the
+    /// CPU-fallback path must not pay a heap allocation per op).
+    cpu_buf: Vec<i64>,
     /// Cumulative metrics across all serve runs (backend accounting).
     pub(crate) totals: ServeReport,
 }
@@ -104,14 +107,14 @@ pub struct Rack {
 impl Rack {
     pub fn new(cfg: RackConfig) -> Self {
         let lat = LatencyModel::default();
-        let alloc = RackAllocator::new(
+        let mut alloc = RackAllocator::new(
             cfg.nodes,
             cfg.node_capacity,
             cfg.granularity,
             cfg.policy,
             cfg.seed,
         );
-        let switch = Switch::new(alloc.switch_map.clone(), &lat);
+        let switch = Switch::new(alloc.publish_map(), &lat);
         let memnodes = (0..cfg.nodes)
             .map(|n| {
                 Accelerator::new(
@@ -142,6 +145,7 @@ impl Rack {
             published_slabs: 0,
             scratch: ServeScratch::default(),
             des_ws: Workspace::new(),
+            cpu_buf: Vec::new(),
             totals: ServeReport::default(),
         }
     }
@@ -186,7 +190,7 @@ impl Rack {
         if self.alloc.slabs_allocated as usize == self.published_slabs {
             return;
         }
-        self.switch.update_map(self.alloc.switch_map.clone());
+        self.switch.update_map(self.alloc.publish_map());
         for n in 0..self.cfg.nodes {
             for &(base, len, local) in &self.alloc.node_ranges[n] {
                 let _ = self.memnodes[n].table.insert(
@@ -289,7 +293,7 @@ impl Rack {
         let grant = self.cfg.dispatch.max_iters;
         let msg = TraversalMsg::request(
             crate::net::RequestId { cpu_node: 0, seq: 0 },
-            iter.program.clone(),
+            std::sync::Arc::clone(&iter.program),
             start,
             sp,
             if budget != 0 { budget } else { grant },
@@ -414,17 +418,20 @@ impl Rack {
         let words = iter.program.load_words as usize;
         let mut cur = start;
         let mut iters = 0u32;
-        let mut buf = vec![0i64; words];
-        loop {
-            if iters >= cap {
-                let mut out = [0i64; SP_WORDS];
-                out.copy_from_slice(&ws.sp);
-                return (Status::Trap, out, iters);
-            }
+        // detach the reusable buffer so `try_read_words` can borrow
+        // `self`; restored below (Vec::new() does not allocate)
+        let mut buf = std::mem::take(&mut self.cpu_buf);
+        buf.clear();
+        buf.resize(words, 0);
+        let res = loop {
             let mut out = [0i64; SP_WORDS];
+            if iters >= cap {
+                out.copy_from_slice(&ws.sp);
+                break (Status::Trap, out, iters);
+            }
             if self.try_read_words(cur, &mut buf).is_err() {
                 out.copy_from_slice(&ws.sp);
-                return (Status::Trap, out, iters);
+                break (Status::Trap, out, iters);
             }
             ws.regs = [0; NREG];
             ws.set_cur_ptr(cur);
@@ -436,16 +443,18 @@ impl Rack {
                 && self.try_write_words(cur, &ws.data[..words]).is_err()
             {
                 out.copy_from_slice(&ws.sp);
-                return (Status::Trap, out, iters);
+                break (Status::Trap, out, iters);
             }
             match pass.status {
                 Status::NextIter => cur = ws.cur_ptr(),
                 s => {
                     out.copy_from_slice(&ws.sp);
-                    return (s, out, iters);
+                    break (s, out, iters);
                 }
             }
-        }
+        };
+        self.cpu_buf = buf;
+        res
     }
 
     /// Functional multi-stage op (reference for the DES path; used by

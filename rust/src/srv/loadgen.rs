@@ -40,8 +40,8 @@ use crate::util::hist::Histogram;
 use crate::util::json::Json;
 
 use super::wire::{
-    decode_payload, encode_frame, read_frame, Envelope, Frame, FrameRead,
-    DEFAULT_MAX_FRAME,
+    decode_payload, encode_frame_into, read_frame_into, Envelope, Frame,
+    FrameEvent, DEFAULT_MAX_FRAME,
 };
 
 // ---------------------------------------------------------------------
@@ -50,14 +50,19 @@ use super::wire::{
 
 /// Sending half of a connection (cloneable via `try_clone` on the
 /// underlying socket; a whole frame is written with one `write_all`,
-/// so two senders behind a mutex never interleave bytes).
+/// so two senders behind a mutex never interleave bytes). Each sender
+/// owns a reusable encode buffer (clear-don't-free), so the
+/// steady-state request path allocates nothing.
 pub struct WireSender {
     w: TcpStream,
+    buf: Vec<u8>,
 }
 
 impl WireSender {
     pub fn send(&mut self, seq: u64, frame: &Frame) -> io::Result<()> {
-        self.w.write_all(&encode_frame(seq, frame))
+        self.buf.clear();
+        encode_frame_into(seq, frame, &mut self.buf);
+        self.w.write_all(&self.buf)
     }
 
     pub fn send_raw(&mut self, bytes: &[u8]) -> io::Result<()> {
@@ -68,6 +73,9 @@ impl WireSender {
 /// One blocking client connection.
 pub struct WireClient {
     r: BufReader<TcpStream>,
+    /// Reused receive-payload scratch (capacity settles at the largest
+    /// frame the server sends and stays there).
+    rbuf: Vec<u8>,
     w: WireSender,
     max_frame: u32,
     next_seq: u64,
@@ -81,7 +89,8 @@ impl WireClient {
         let _ = s.set_nodelay(true);
         Ok(Self {
             r: BufReader::new(s.try_clone()?),
-            w: WireSender { w: s },
+            rbuf: Vec::new(),
+            w: WireSender { w: s, buf: Vec::new() },
             max_frame: DEFAULT_MAX_FRAME,
             next_seq: 1,
         })
@@ -106,7 +115,7 @@ impl WireClient {
     /// A second sending half for the open-loop split (receiver thread
     /// keeps `self`, pacer thread sends through the clone).
     pub fn sender(&self) -> io::Result<WireSender> {
-        Ok(WireSender { w: self.w.w.try_clone()? })
+        Ok(WireSender { w: self.w.w.try_clone()?, buf: Vec::new() })
     }
 
     /// Receive one frame. `Ok(None)` is a clean EOF at a frame
@@ -115,8 +124,12 @@ impl WireClient {
     /// nothing useful to salvage from a corrupt downstream frame).
     pub fn recv(&mut self) -> io::Result<Option<Envelope>> {
         loop {
-            return match read_frame(&mut self.r, self.max_frame) {
-                FrameRead::Frame(p) => decode_payload(&p)
+            return match read_frame_into(
+                &mut self.r,
+                self.max_frame,
+                &mut self.rbuf,
+            ) {
+                FrameEvent::Frame => decode_payload(&self.rbuf)
                     .map(Some)
                     .map_err(|e| {
                         io::Error::new(
@@ -127,15 +140,15 @@ impl WireClient {
                             ),
                         )
                     }),
-                FrameRead::Eof => Ok(None),
+                FrameEvent::Eof => Ok(None),
                 // only reachable with a read timeout configured on
                 // the socket: idle at a frame boundary, keep waiting
-                FrameRead::Idle => continue,
-                FrameRead::Oversize(n) => Err(io::Error::new(
+                FrameEvent::Idle => continue,
+                FrameEvent::Oversize(n) => Err(io::Error::new(
                     io::ErrorKind::InvalidData,
                     format!("unframeable length {n} from server"),
                 )),
-                FrameRead::Io(e) => Err(e),
+                FrameEvent::Io(e) => Err(e),
             };
         }
     }
@@ -671,14 +684,14 @@ pub fn run_loadgen(
     // one registration plan shared by every connection: wire ids in
     // first-appearance order, deterministic across runs
     let mut ids: HashMap<ProgramId, u32> = HashMap::new();
-    let mut plan: Vec<(u32, Program)> = Vec::new();
+    let mut plan: Vec<(u32, Arc<Program>)> = Vec::new();
     for op in &ops {
         for stage in &op.stages {
             let p = &stage.iter.program;
             if !ids.contains_key(&p.id()) {
                 let wire_id = plan.len() as u32;
                 ids.insert(p.id(), wire_id);
-                plan.push((wire_id, p.clone()));
+                plan.push((wire_id, Arc::clone(p)));
             }
         }
     }

@@ -30,6 +30,10 @@
 //! clean disconnect when the stream itself can no longer be framed) —
 //! never a panic, matching the trap discipline of the execution tiers.
 
+// Hot-path modules keep clones honest: a clone the borrow checker
+// would let us drop is a bug here, not a style nit.
+#![deny(clippy::redundant_clone)]
+
 pub mod loadgen;
 pub mod metrics;
 pub mod wire;
@@ -53,7 +57,8 @@ use crate::live::engine::{
 };
 
 use self::wire::{
-    decode_payload, encode_frame, read_frame, ErrCode, Frame, FrameRead,
+    decode_payload, encode_frame_into, read_frame_into, ErrCode, Frame,
+    FrameEvent,
 };
 
 /// Tunables of the serving tier.
@@ -343,7 +348,10 @@ fn spawn_connection(
 
 /// Writer thread: serialize completions + control frames. Bursts are
 /// drained greedily and flushed once, so pipelined responses share
-/// syscalls without adding latency to a lone response.
+/// syscalls without adding latency to a lone response. Frames are
+/// encoded straight into the reused batch buffer
+/// ([`encode_frame_into`]) — the steady-state send path performs no
+/// per-frame allocation and no intermediate copy.
 fn writer_loop(
     mut stream: TcpStream,
     rx: mpsc::Receiver<WriterMsg>,
@@ -376,7 +384,7 @@ fn writer_loop(
                         _ => pending_e2e
                             .push(t0.elapsed().as_nanos() as u64),
                     }
-                    buf.extend_from_slice(&encode_frame(seq, &frame));
+                    encode_frame_into(seq, &frame, &mut buf);
                 }
                 WriterMsg::Ctrl { seq, frame } => {
                     match &frame {
@@ -384,7 +392,7 @@ fn writer_loop(
                         Frame::Error { .. } => errors += 1,
                         _ => {}
                     }
-                    buf.extend_from_slice(&encode_frame(seq, &frame));
+                    encode_frame_into(seq, &frame, &mut buf);
                 }
             }
             frames += 1;
@@ -438,6 +446,9 @@ fn reader_loop(
 ) {
     let mut programs: HashMap<u32, Arc<CompiledIter>> = HashMap::new();
     let mut r = BufReader::new(stream);
+    // per-connection decode scratch, reused across frames (capacity
+    // settles at the connection's largest frame and stays there)
+    let mut payload: Vec<u8> = Vec::new();
     let ctrl = |seq: u64, frame: Frame| {
         backlog.fetch_add(1, Ordering::Relaxed);
         let _ = wtx.send(WriterMsg::Ctrl { seq, frame });
@@ -447,12 +458,12 @@ fn reader_loop(
             ctrl(seq, Frame::Error { code, msg: msg.into() })
         };
     loop {
-        let payload = match read_frame(&mut r, cfg.max_frame) {
-            FrameRead::Frame(p) => p,
-            FrameRead::Eof => return,
+        match read_frame_into(&mut r, cfg.max_frame, &mut payload) {
+            FrameEvent::Frame => {}
+            FrameEvent::Eof => return,
             // idle at a frame boundary: nothing consumed, keep waiting
-            FrameRead::Idle => continue,
-            FrameRead::Oversize(n) => {
+            FrameEvent::Idle => continue,
+            FrameEvent::Oversize(n) => {
                 metrics.decode_error();
                 err(
                     0,
@@ -461,8 +472,8 @@ fn reader_loop(
                 );
                 return;
             }
-            FrameRead::Io(_) => return,
-        };
+            FrameEvent::Io(_) => return,
+        }
         metrics.frame_in();
         // non-draining-client guard, on EVERY frame kind: whatever the
         // client streams (requests, re-registrations, garbage), once

@@ -203,8 +203,24 @@ fn kind_byte(f: &Frame) -> u8 {
 }
 
 /// Encode a frame into its full wire form (length prefix included).
+///
+/// Convenience wrapper over [`encode_frame_into`] that allocates a
+/// fresh buffer; hot paths (the server's writer loop, the load
+/// generator's sender) append into a reused buffer instead.
 pub fn encode_frame(seq: u64, frame: &Frame) -> Vec<u8> {
     let mut p = Vec::with_capacity(64 + SP_WORDS * 8);
+    encode_frame_into(seq, frame, &mut p);
+    p
+}
+
+/// Encode a frame into its full wire form (length prefix included),
+/// **appending** to `out`. `out` is not cleared — callers batch many
+/// frames into one buffer and flush with a single write. Reusing the
+/// buffer across frames (clear, don't free) keeps the steady-state
+/// encode path allocation-free.
+pub fn encode_frame_into(seq: u64, frame: &Frame, out: &mut Vec<u8>) {
+    let base = out.len();
+    let p = out;
     p.extend_from_slice(&[0u8; 4]); // length placeholder
     p.extend_from_slice(&MAGIC.to_le_bytes());
     p.push(VERSION);
@@ -246,11 +262,10 @@ pub fn encode_frame(seq: u64, frame: &Frame) -> Vec<u8> {
             p.extend_from_slice(&bytes[..n]);
         }
     }
-    let crc = crc32(&p[4..]);
+    let crc = crc32(&p[base + 4..]);
     p.extend_from_slice(&crc.to_le_bytes());
-    let len = (p.len() - 4) as u32;
-    p[..4].copy_from_slice(&len.to_le_bytes());
-    p
+    let len = (p.len() - base - 4) as u32;
+    p[base..base + 4].copy_from_slice(&len.to_le_bytes());
 }
 
 fn le_u32(b: &[u8]) -> u32 {
@@ -397,18 +412,55 @@ pub enum FrameRead {
     Io(std::io::Error),
 }
 
+/// [`read_frame_into`]'s outcome: identical to [`FrameRead`] except
+/// the payload lives in the caller's reused buffer instead of a fresh
+/// allocation.
+#[derive(Debug)]
+pub enum FrameEvent {
+    /// A complete payload now fills the caller's buffer.
+    Frame,
+    /// Clean end of stream at a frame boundary.
+    Eof,
+    /// Read timeout at a frame boundary (see [`FrameRead::Idle`]).
+    Idle,
+    /// Length prefix outside `[MIN_PAYLOAD, max_frame]`; close.
+    Oversize(u32),
+    /// Transport error (including EOF mid-frame).
+    Io(std::io::Error),
+}
+
 /// Read one length-prefixed frame. Blocking; safe to call repeatedly
 /// on a `BufReader`-wrapped socket (with or without a read timeout —
-/// see [`FrameRead::Idle`]).
+/// see [`FrameRead::Idle`]). Allocates the payload; hot loops use
+/// [`read_frame_into`] with a per-connection scratch buffer instead.
 pub fn read_frame(r: &mut impl Read, max_frame: u32) -> FrameRead {
+    let mut payload = Vec::new();
+    match read_frame_into(r, max_frame, &mut payload) {
+        FrameEvent::Frame => FrameRead::Frame(payload),
+        FrameEvent::Eof => FrameRead::Eof,
+        FrameEvent::Idle => FrameRead::Idle,
+        FrameEvent::Oversize(n) => FrameRead::Oversize(n),
+        FrameEvent::Io(e) => FrameRead::Io(e),
+    }
+}
+
+/// Read one length-prefixed frame into `payload` (cleared and resized
+/// to the frame length; capacity is kept across calls, so a
+/// connection's reader settles at its largest frame size and stops
+/// allocating). Semantics otherwise identical to [`read_frame`].
+pub fn read_frame_into(
+    r: &mut impl Read,
+    max_frame: u32,
+    payload: &mut Vec<u8>,
+) -> FrameEvent {
     let mut len4 = [0u8; 4];
     // distinguish clean EOF (no bytes at all) from a torn prefix
     match r.read(&mut len4) {
-        Ok(0) => return FrameRead::Eof,
+        Ok(0) => return FrameEvent::Eof,
         Ok(n) => {
             if n < 4 {
                 if let Err(e) = r.read_exact(&mut len4[n..]) {
-                    return FrameRead::Io(e);
+                    return FrameEvent::Io(e);
                 }
             }
         }
@@ -416,18 +468,19 @@ pub fn read_frame(r: &mut impl Read, max_frame: u32) -> FrameRead {
             if e.kind() == std::io::ErrorKind::WouldBlock
                 || e.kind() == std::io::ErrorKind::TimedOut =>
         {
-            return FrameRead::Idle
+            return FrameEvent::Idle
         }
-        Err(e) => return FrameRead::Io(e),
+        Err(e) => return FrameEvent::Io(e),
     }
     let len = u32::from_le_bytes(len4);
     if (len as usize) < MIN_PAYLOAD || len > max_frame {
-        return FrameRead::Oversize(len);
+        return FrameEvent::Oversize(len);
     }
-    let mut payload = vec![0u8; len as usize];
-    match r.read_exact(&mut payload) {
-        Ok(()) => FrameRead::Frame(payload),
-        Err(e) => FrameRead::Io(e),
+    payload.clear();
+    payload.resize(len as usize, 0);
+    match r.read_exact(payload) {
+        Ok(()) => FrameEvent::Frame,
+        Err(e) => FrameEvent::Io(e),
     }
 }
 
@@ -603,6 +656,43 @@ mod tests {
         assert_eq!(e.kind, WireErrorKind::UnknownKind(200));
         assert_eq!(e.seq, 77);
         assert!(!e.kind.is_fatal());
+    }
+
+    /// The zero-copy pair must be byte-identical to the allocating
+    /// wrappers: frames appended into one shared buffer are the exact
+    /// concatenation of per-frame `encode_frame` outputs, and
+    /// `read_frame_into` walks them back out reusing one payload
+    /// buffer (capacity only ever grows — clear-don't-free).
+    #[test]
+    fn into_variants_match_allocating_wrappers_and_reuse_buffers() {
+        let mut batch = Vec::new();
+        let mut reference = Vec::new();
+        for (seq, frame) in sample_frames() {
+            encode_frame_into(seq, &frame, &mut batch);
+            reference.extend_from_slice(&encode_frame(seq, &frame));
+        }
+        assert_eq!(batch, reference);
+
+        let mut cur = &batch[..];
+        let mut payload = Vec::new();
+        let mut prev_cap = 0usize;
+        for (seq, frame) in sample_frames() {
+            match read_frame_into(&mut cur, DEFAULT_MAX_FRAME, &mut payload)
+            {
+                FrameEvent::Frame => {}
+                other => panic!("unexpected {other:?}"),
+            }
+            // clear-don't-free: capacity is monotone across frames
+            assert!(payload.capacity() >= prev_cap);
+            prev_cap = payload.capacity();
+            let env = decode_payload(&payload).unwrap();
+            assert_eq!(env.seq, seq);
+            assert_eq!(env.frame, frame);
+        }
+        assert!(matches!(
+            read_frame_into(&mut cur, DEFAULT_MAX_FRAME, &mut payload),
+            FrameEvent::Eof
+        ));
     }
 
     #[test]

@@ -10,6 +10,8 @@
 //! in-network distributed-traversal mechanism that saves half an RTT +
 //! CPU-node software time versus returning to the CPU node (PULSE-ACC).
 
+use std::sync::Arc;
+
 use crate::mem::{GAddr, NodeId, RangeMap};
 use crate::net::{MsgKind, TraversalMsg};
 use crate::sim::{LatencyModel, Ns};
@@ -39,23 +41,28 @@ pub struct SwitchStats {
 
 #[derive(Debug)]
 pub struct Switch {
-    map: RangeMap,
+    /// Shared snapshot of the allocator's coarse map: installing or
+    /// republishing it is an Arc pointer swap, never a deep copy.
+    map: Arc<RangeMap>,
     pipeline_ns: Ns,
     pub stats: SwitchStats,
 }
 
 impl Switch {
-    pub fn new(map: RangeMap, lat: &LatencyModel) -> Self {
+    pub fn new(
+        map: impl Into<Arc<RangeMap>>,
+        lat: &LatencyModel,
+    ) -> Self {
         Self {
-            map,
+            map: map.into(),
             pipeline_ns: lat.switch_pipeline_ns as Ns,
             stats: SwitchStats::default(),
         }
     }
 
     /// Replace the coarse map (allocation growth re-publishes ranges).
-    pub fn update_map(&mut self, map: RangeMap) {
-        self.map = map;
+    pub fn update_map(&mut self, map: impl Into<Arc<RangeMap>>) {
+        self.map = map.into();
     }
 
     pub fn owner(&self, addr: GAddr) -> Option<NodeId> {

@@ -1,0 +1,82 @@
+//! Cache-line padding for cross-thread counters and slot tables.
+//!
+//! `#[repr(align(64))]` forces each wrapped value onto its own cache
+//! line (64 B on every x86-64 / mainstream aarch64 part), so two
+//! threads hammering *adjacent* counters — a shard queue's producer
+//! and consumer sides, neighbouring routing counters, per-shard slot
+//! entries — never ping-pong one line between cores (false sharing).
+//! The wrapper is transparent via `Deref`/`DerefMut`: call sites read
+//! and bump the inner value exactly as before.
+
+use std::ops::{Deref, DerefMut};
+
+/// Pads (and aligns) `T` to a 64-byte cache line.
+#[derive(Debug, Default)]
+#[repr(align(64))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> Self {
+        Self { value }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> Self {
+        Self::new(value)
+    }
+}
+
+impl<T: Clone> Clone for CachePadded<T> {
+    fn clone(&self) -> Self {
+        Self::new(self.value.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn aligned_and_sized_to_a_cache_line() {
+        assert_eq!(std::mem::align_of::<CachePadded<u8>>(), 64);
+        assert_eq!(std::mem::size_of::<CachePadded<u8>>(), 64);
+        assert_eq!(std::mem::size_of::<CachePadded<AtomicU64>>(), 64);
+        // arrays of padded slots put each element on its own line
+        let slots: [CachePadded<AtomicU64>; 4] = Default::default();
+        for w in slots.windows(2) {
+            let a = &*w[0] as *const AtomicU64 as usize;
+            let b = &*w[1] as *const AtomicU64 as usize;
+            assert!(b - a >= 64);
+        }
+    }
+
+    #[test]
+    fn transparent_access() {
+        let c = CachePadded::new(AtomicU64::new(1));
+        c.fetch_add(2, Ordering::Relaxed);
+        assert_eq!(c.load(Ordering::Relaxed), 3);
+        assert_eq!(c.into_inner().into_inner(), 3);
+    }
+}

@@ -1,9 +1,12 @@
 //! Infrastructure utilities built in-repo (the offline registry has no
 //! `rand`/`clap`/`serde`/`criterion`/`proptest`; see DESIGN.md §2).
 
+pub mod cache;
 pub mod cli;
 pub mod hist;
 pub mod json;
 pub mod prng;
 pub mod ptest;
 pub mod zipf;
+
+pub use cache::CachePadded;
