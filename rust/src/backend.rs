@@ -104,6 +104,18 @@ pub struct BackendMetrics {
     pub wire_decode_errors: u64,
     /// Requests answered BUSY instead of executed:
     pub wire_busy: u64,
+    /// Live-engine shard counters (filled by `LiveBackend`; 0 on the
+    /// DES and the model backends, whose equivalents live in the
+    /// `ServeReport`). Messages forwarded shard→shard in-network:
+    pub live_forwards: u64,
+    /// Traversals that yielded on budget exhaustion:
+    pub live_yields: u64,
+    /// Traversals that trapped on a shard:
+    pub live_traps: u64,
+    /// Messages dropped at a full shard queue:
+    pub live_drops: u64,
+    /// High-water mark across all shard queues:
+    pub live_max_queue_depth: u64,
 }
 
 impl BackendMetrics {
@@ -122,6 +134,11 @@ impl BackendMetrics {
             net_dropped: 0,
             wire_decode_errors: 0,
             wire_busy: 0,
+            live_forwards: 0,
+            live_yields: 0,
+            live_traps: 0,
+            live_drops: 0,
+            live_max_queue_depth: 0,
         }
     }
 }

@@ -97,6 +97,34 @@ pub fn save_json(name: &str, j: &Json) -> io::Result<PathBuf> {
     Ok(path)
 }
 
+/// Check that a serving-tier registry snapshot (the object a STATS
+/// frame returns, see `obs/`) accounts for every request exactly once:
+/// `srv.requests == srv.responses + srv.busy + srv.errors_sent`. On a
+/// clean run the error term is zero; either way a request that was
+/// neither answered nor rejected — or answered twice — breaks the
+/// partition. Shared by `tests/integration_srv.rs` and the CI serving
+/// smoke so both pin the same invariant.
+pub fn check_stats_partition(snap: &Json) -> Result<(), String> {
+    let get = |k: &str| -> Result<f64, String> {
+        snap.get(k)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("snapshot is missing {k:?}"))
+    };
+    let requests = get("srv.requests")?;
+    let answered = get("srv.responses")?
+        + get("srv.busy")?
+        + get("srv.errors_sent")?;
+    if requests == answered {
+        Ok(())
+    } else {
+        Err(format!(
+            "request accounting does not partition: \
+             srv.requests={requests} but \
+             responses+busy+errors={answered}"
+        ))
+    }
+}
+
 pub fn fmt_us(ns: f64) -> String {
     format!("{:.1}", ns / 1e3)
 }

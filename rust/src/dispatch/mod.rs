@@ -113,6 +113,15 @@ impl DispatchEngine {
         self.cfg
     }
 
+    /// Budget added to a yielded traversal per continuation round.
+    /// `on_response` is the *only* re-grant site, and a `Boost` trace
+    /// span records the resulting total (`msg.max_iters` after the
+    /// grant) — so a traced op's boost sequence is always
+    /// `initial + k * grant_step()` on every backend.
+    pub fn grant_step(&self) -> u32 {
+        self.cfg.max_iters
+    }
+
     /// Submit a traversal. Runs the offload test, then walks the cached
     /// prefix locally; offloads the remainder (or completes locally),
     /// parking a retransmission slot the DES clears via `on_response`.
@@ -452,7 +461,8 @@ mod tests {
         y.status = Status::Running; // yield marker
         match d.on_response(y, 10) {
             ResponseAction::Continue(c) => {
-                assert_eq!(c.max_iters, 16);
+                // the Boost-span contract: new total = old + grant_step
+                assert_eq!(c.max_iters, 8 + d.grant_step());
                 assert_eq!(c.iters_done, 8);
             }
             _ => panic!(),

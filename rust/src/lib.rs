@@ -27,6 +27,7 @@ pub mod switch;
 pub mod compiler;
 pub mod dispatch;
 pub mod rack;
+pub mod obs;
 pub mod backend;
 pub mod live;
 pub mod srv;

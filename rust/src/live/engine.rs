@@ -51,6 +51,10 @@ use crate::compiler::CompiledIter;
 use crate::isa::{Status, SP_WORDS};
 use crate::mem::GAddr;
 use crate::net::{RequestId, TraversalMsg};
+use crate::obs::{
+    MetricsRegistry, OpTrace, Span, SpanKind, Trace, TraceConfig,
+    TraceRing, Tracer,
+};
 use crate::rack::{Rack, ServeReport};
 
 use super::metrics::{LiveRunStats, ShardStats};
@@ -76,6 +80,9 @@ pub struct EngineConfig {
     /// True: one worker thread per memory node (the live dataplane).
     /// False: inline functional execution on the dispatcher thread.
     pub sharded: bool,
+    /// Sampled tracing (see `obs/`). None = tracer disabled — no
+    /// rings are allocated and every emission site is a bool test.
+    pub trace: Option<TraceConfig>,
 }
 
 impl Default for EngineConfig {
@@ -86,6 +93,7 @@ impl Default for EngineConfig {
             pending_cap: 0,
             max_boosts: 4096,
             sharded: true,
+            trace: None,
         }
     }
 }
@@ -218,6 +226,9 @@ pub struct EngineReport {
     pub run: LiveRunStats,
     /// Inbox counters; `rejects` is the BUSY count at the outer edge.
     pub inbox: QueueSnapshot,
+    /// Drained spans of every sampled traversal, in causal order
+    /// (empty unless `EngineConfig::trace` was set).
+    pub trace: Trace,
 }
 
 /// The dispatcher side; create with [`Engine::new`], then call
@@ -227,6 +238,7 @@ pub struct Engine {
     cfg: EngineConfig,
     rx: queue::QueueRx<EngineMsg>,
     tx: QueueTx<EngineMsg>,
+    registry: Option<Arc<MetricsRegistry>>,
 }
 
 impl Engine {
@@ -238,7 +250,15 @@ impl Engine {
         };
         let (tx, rx) = queue::bounded::<EngineMsg>(inbox_cap);
         let handle = EngineHandle { tx: tx.clone() };
-        (Engine { cfg, rx, tx }, handle)
+        (Engine { cfg, rx, tx, registry: None }, handle)
+    }
+
+    /// Register live queue-occupancy gauges into `reg` when the engine
+    /// starts (`engine.inbox.depth`, per-shard depth and high-water
+    /// mark). Gauges read relaxed counters at snapshot time; the
+    /// engine's hot paths are untouched.
+    pub fn set_registry(&mut self, reg: Arc<MetricsRegistry>) {
+        self.registry = Some(reg);
     }
 
     /// Serve until a shutdown marker arrives and every admitted op has
@@ -260,6 +280,16 @@ impl Engine {
             .saturating_mul(self.cfg.max_boosts.saturating_add(1))
             .max(grant);
         let inbox_stats = self.rx.stats_handle();
+        let tracer = match self.cfg.trace {
+            Some(c) => Tracer::new(c),
+            None => Tracer::disabled(),
+        };
+        if let Some(reg) = &self.registry {
+            let inbox = Arc::clone(&inbox_stats);
+            reg.gauge_fn("engine.inbox.depth", move || {
+                inbox.snapshot().depth() as f64
+            });
+        }
 
         let mut report = EngineReport::default();
         if self.cfg.sharded {
@@ -278,8 +308,23 @@ impl Engine {
                 txs.push(tx);
                 rxs.push(rx);
             }
+            if let Some(reg) = &self.registry {
+                for (i, q) in qstats.iter().enumerate() {
+                    let depth = Arc::clone(q);
+                    reg.gauge_fn(
+                        &format!("engine.shard{i}.queue_depth"),
+                        move || depth.snapshot().depth() as f64,
+                    );
+                    let hwm = Arc::clone(q);
+                    reg.gauge_fn(
+                        &format!("engine.shard{i}.queue_hwm"),
+                        move || hwm.snapshot().hwm as f64,
+                    );
+                }
+            }
             let shard_stats: Vec<ShardStats> =
                 std::thread::scope(|s| {
+                    let tracer = &tracer;
                     let mut handles = Vec::with_capacity(shards);
                     for (accel, rx) in rack.memnodes.iter_mut().zip(rxs)
                     {
@@ -289,7 +334,7 @@ impl Engine {
                         handles.push(s.spawn(move || {
                             run_shard(
                                 accel, rx, peers, replies, router,
-                                in_network,
+                                in_network, tracer,
                             )
                         }));
                     }
@@ -307,6 +352,8 @@ impl Engine {
                         max_boosts: self.cfg.max_boosts,
                         seq: 0,
                         draining: false,
+                        tracer,
+                        ring: tracer.make_ring(),
                     };
                     loop {
                         match self.rx.recv() {
@@ -329,6 +376,7 @@ impl Engine {
                             break;
                         }
                     }
+                    tracer.park(d.ring);
                     for tx in &txs {
                         let _ = tx.send(ShardMsg::Shutdown);
                     }
@@ -361,17 +409,49 @@ impl Engine {
             // per-request budget + boost cap the sharded dispatcher
             // applies — so the two modes answer any wire request with
             // the same status, scratchpad, iters, and crossings
+            let mut inline_seq: u64 = 0;
+            let mut ring = tracer.make_ring();
             loop {
                 match self.rx.recv() {
                     Some(EngineMsg::Submit(sub)) => {
                         let born = Instant::now();
-                        let o = rack.traverse_offloaded(
-                            &sub.iter,
-                            sub.start,
-                            sub.sp,
-                            sub.budget.min(max_initial),
-                            self.cfg.max_boosts,
-                        );
+                        let op = inline_seq;
+                        inline_seq += 1;
+                        let traced = tracer.sampled(op);
+                        let o = if traced {
+                            let mut ot = OpTrace {
+                                ring: &mut ring,
+                                op,
+                                k: 0,
+                            };
+                            ot.push(
+                                tracer.now_ns(),
+                                SpanKind::Dispatch { stage: 0 },
+                            );
+                            let o = rack.traverse_offloaded_traced(
+                                &sub.iter,
+                                sub.start,
+                                sub.sp,
+                                sub.budget.min(max_initial),
+                                self.cfg.max_boosts,
+                                Some((&mut ot, &tracer)),
+                            );
+                            ot.push(
+                                tracer.now_ns(),
+                                SpanKind::Finish {
+                                    trapped: o.status == Status::Trap,
+                                },
+                            );
+                            o
+                        } else {
+                            rack.traverse_offloaded(
+                                &sub.iter,
+                                sub.start,
+                                sub.sp,
+                                sub.budget.min(max_initial),
+                                self.cfg.max_boosts,
+                            )
+                        };
                         {
                             // same formula as the sharded finish path:
                             // request + response over the CPU links,
@@ -406,8 +486,10 @@ impl Engine {
                     finish_unserved(sub, CompletionCode::ShuttingDown);
                 }
             }
+            tracer.park(ring);
         }
         report.inbox = inbox_stats.snapshot();
+        report.trace = tracer.drain();
         report
     }
 }
@@ -465,6 +547,11 @@ struct EngSlot {
     sub: Submission,
     born: Instant,
     boosts: u32,
+    /// Admission index (trace identity; see `obs/README.md`).
+    op: u64,
+    /// Causal span counter, synced from each reply's job.
+    trace_k: u32,
+    traced: bool,
 }
 
 /// The CPU-node role over the persistent inbox: admission window,
@@ -485,9 +572,47 @@ struct Dispatcher<'a> {
     max_boosts: u32,
     seq: u64,
     draining: bool,
+    tracer: &'a Tracer,
+    /// Dispatcher-side span ring (dispatch/boost/finish hops).
+    ring: TraceRing,
 }
 
 impl Dispatcher<'_> {
+    /// Emit one span for `token`'s traversal and advance its causal
+    /// counter (bool test when untraced).
+    fn emit(&mut self, token: u32, kind: SpanKind) {
+        let slot = self.slots[token as usize].as_mut().unwrap();
+        if slot.traced {
+            self.ring.push(Span {
+                op: slot.op,
+                k: slot.trace_k,
+                t_ns: self.tracer.now_ns(),
+                kind,
+            });
+            slot.trace_k += 1;
+        }
+    }
+
+    /// Wrap a message with its slot's trace identity for the wire.
+    fn job(&self, token: u32, msg: TraversalMsg) -> LiveJob {
+        let slot = self.slots[token as usize].as_ref().unwrap();
+        LiveJob {
+            token,
+            op: slot.op,
+            trace_k: slot.trace_k,
+            traced: slot.traced,
+            msg,
+        }
+    }
+
+    /// Resume span emission where the shard left off for this op.
+    fn sync_trace(&mut self, job: &LiveJob) {
+        if job.traced {
+            let slot =
+                self.slots[job.token as usize].as_mut().unwrap();
+            slot.trace_k = job.trace_k;
+        }
+    }
     fn on_submit(&mut self, sub: Submission) {
         if self.draining {
             self.report.rejected_shutdown += 1;
@@ -514,6 +639,7 @@ impl Dispatcher<'_> {
         } else {
             sub.budget.min(self.max_initial)
         };
+        let op = self.seq;
         let id = RequestId { cpu_node: 0, seq: self.seq };
         self.seq += 1;
         let msg = TraversalMsg::request(
@@ -523,9 +649,16 @@ impl Dispatcher<'_> {
             sub.sp,
             budget,
         );
-        self.slots[token as usize] =
-            Some(EngSlot { sub, born: Instant::now(), boosts: 0 });
+        self.slots[token as usize] = Some(EngSlot {
+            sub,
+            born: Instant::now(),
+            boosts: 0,
+            op,
+            trace_k: 0,
+            traced: self.tracer.sampled(op),
+        });
         self.inflight += 1;
+        self.emit(token, SpanKind::Dispatch { stage: 0 });
         self.send(token, msg);
     }
 
@@ -534,9 +667,9 @@ impl Dispatcher<'_> {
     fn send(&mut self, token: u32, msg: TraversalMsg) {
         match self.router.route(msg.cur_ptr, false) {
             Some(shard) => {
-                if let Err(ShardMsg::Job(job)) = self.txs
-                    [shard as usize]
-                    .send(ShardMsg::Job(LiveJob { token, msg }))
+                let job = self.job(token, msg);
+                if let Err(ShardMsg::Job(job)) =
+                    self.txs[shard as usize].send(ShardMsg::Job(job))
                 {
                     self.finish(token, Status::Trap, &job.msg);
                 }
@@ -547,26 +680,46 @@ impl Dispatcher<'_> {
 
     fn on_reply(&mut self, reply: Reply) {
         match reply {
-            Reply::Done { token, msg } => {
+            Reply::Done(job) => {
+                self.sync_trace(&job);
+                let LiveJob { token, msg, .. } = job;
                 self.finish(token, msg.status, &msg)
             }
-            Reply::Yield { token, mut msg } => {
-                let slot =
-                    self.slots[token as usize].as_mut().unwrap();
-                slot.boosts += 1;
-                if slot.boosts > self.max_boosts {
+            Reply::Yield(job) => {
+                self.sync_trace(&job);
+                let LiveJob { token, mut msg, .. } = job;
+                let boosts = {
+                    let slot =
+                        self.slots[token as usize].as_mut().unwrap();
+                    slot.boosts += 1;
+                    slot.boosts
+                };
+                if boosts > self.max_boosts {
                     self.finish(token, Status::Trap, &msg);
                 } else {
                     msg.max_iters += self.grant;
+                    // grant = the new *total* budget after the boost
+                    self.emit(
+                        token,
+                        SpanKind::Boost { grant: msg.max_iters },
+                    );
                     self.send(token, msg);
                 }
             }
             // PULSE-ACC mode: the bounce returns here for re-routing
-            Reply::Bounced { token, msg } => self.send(token, msg),
+            Reply::Bounced(job) => {
+                self.sync_trace(&job);
+                let LiveJob { token, msg, .. } = job;
+                self.send(token, msg)
+            }
         }
     }
 
     fn finish(&mut self, token: u32, status: Status, msg: &TraversalMsg) {
+        self.emit(
+            token,
+            SpanKind::Finish { trapped: status == Status::Trap },
+        );
         let slot = self.slots[token as usize].take().unwrap();
         self.free.push(token);
         self.inflight -= 1;

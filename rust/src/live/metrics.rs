@@ -55,6 +55,17 @@ impl LiveRunStats {
         self.shards.iter().map(|s| s.drops).sum()
     }
 
+    pub fn total_traps(&self) -> u64 {
+        self.shards.iter().map(|s| s.traps).sum()
+    }
+
+    /// Deepest occupancy any request queue reached during the run
+    /// (max over per-shard high-water marks; the backpressure signal
+    /// the operator report surfaces).
+    pub fn max_queue_hwm(&self) -> u64 {
+        self.queues.iter().map(|q| q.hwm).max().unwrap_or(0)
+    }
+
     /// Load-balance skew: busiest shard's iterations over the mean
     /// (1.0 = perfectly even). 0.0 for an empty run.
     pub fn iter_skew(&self) -> f64 {
@@ -89,6 +100,8 @@ impl LiveRunStats {
             .set("total_forwards", self.total_forwards())
             .set("total_yields", self.total_yields())
             .set("total_drops", self.total_drops())
+            .set("total_traps", self.total_traps())
+            .set("max_queue_hwm", self.max_queue_hwm())
             .set("iter_skew", self.iter_skew())
             .set("router_routed", self.router.routed)
             .set("router_reroutes", self.router.reroutes)
@@ -106,7 +119,8 @@ impl LiveRunStats {
                     .set("yields", s.yields)
                     .set("traps", s.traps)
                     .set("queue_pushed", q.pushed)
-                    .set("queue_full_blocks", q.full_blocks);
+                    .set("queue_full_blocks", q.full_blocks)
+                    .set("queue_hwm", q.hwm);
                 o
             })
             .collect();

@@ -58,6 +58,9 @@ use std::time::Instant;
 use crate::backend::{BackendMetrics, TraversalBackend};
 use crate::isa::{Status, SP_WORDS};
 use crate::net::{RequestId, TraversalMsg};
+use crate::obs::{
+    Span, SpanKind, Trace, TraceConfig, TraceRing, Tracer, TracerStats,
+};
 use crate::rack::{Op, Rack, ServeReport};
 use crate::util::CachePadded;
 
@@ -91,6 +94,7 @@ pub struct LiveBackend {
     last_run: Option<LiveRunStats>,
     record_results: bool,
     last_results: Vec<[i64; SP_WORDS]>,
+    tracer: Tracer,
 }
 
 impl LiveBackend {
@@ -106,7 +110,24 @@ impl LiveBackend {
             last_run: None,
             record_results: false,
             last_results: Vec::new(),
+            tracer: Tracer::disabled(),
         }
+    }
+
+    /// Enable sampled tracing for subsequent serves (see `obs/`).
+    pub fn enable_trace(&mut self, cfg: TraceConfig) {
+        self.tracer = Tracer::new(cfg);
+    }
+
+    /// Tracer overhead counters (all zero while tracing is disabled —
+    /// the zero-cost contract pinned in `tests/conformance.rs`).
+    pub fn tracer_stats(&self) -> TracerStats {
+        self.tracer.stats()
+    }
+
+    /// Drain spans recorded since the last drain, in causal order.
+    pub fn take_trace(&mut self) -> Trace {
+        self.tracer.drain()
     }
 
     /// Capture every op's final scratchpad during serves (issue
@@ -176,6 +197,7 @@ impl LiveBackend {
             }
         }
 
+        let tracer = &self.tracer;
         let memnodes = &mut self.rack.memnodes;
         let shard_stats: Vec<ShardStats> = std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(shards);
@@ -184,7 +206,10 @@ impl LiveBackend {
                 let replies = rtx.clone();
                 let router = Arc::clone(&router);
                 handles.push(s.spawn(move || {
-                    run_shard(accel, rx, peers, replies, router, in_network)
+                    run_shard(
+                        accel, rx, peers, replies, router, in_network,
+                        tracer,
+                    )
                 }));
             }
             // only shards hold reply senders now: if every worker dies
@@ -209,6 +234,8 @@ impl LiveBackend {
                 seq: 0,
                 record,
                 results: &mut results,
+                tracer,
+                ring: tracer.make_ring(),
             };
             loop {
                 // admission happens here (not in the completion path)
@@ -224,6 +251,7 @@ impl LiveBackend {
                     None => break,
                 }
             }
+            tracer.park(coord.ring);
 
             for tx in &txs {
                 let _ = tx.send(ShardMsg::Shutdown);
@@ -296,7 +324,15 @@ impl TraversalBackend for LiveBackend {
     }
 
     fn metrics(&self) -> BackendMetrics {
-        BackendMetrics::from_report("LIVE", &self.totals)
+        let mut m = BackendMetrics::from_report("LIVE", &self.totals);
+        if let Some(run) = &self.last_run {
+            m.live_forwards = run.total_forwards();
+            m.live_yields = run.total_yields();
+            m.live_traps = run.total_traps();
+            m.live_drops = run.total_drops();
+            m.live_max_queue_depth = run.max_queue_hwm();
+        }
+        m
     }
 }
 
@@ -334,6 +370,10 @@ struct Slot<'a> {
     crossings_total: u32,
     boosts: u32,
     net_bytes: u64,
+    /// Causal span counter; synced from each reply's job so emission
+    /// resumes where the shard left off (see `obs/README.md`).
+    trace_k: u32,
+    traced: bool,
 }
 
 /// The CPU-node role: admission window, stage chaining, yield grants,
@@ -357,6 +397,9 @@ struct Coordinator<'a> {
     seq: u64,
     record: bool,
     results: &'a mut Vec<(u64, [i64; SP_WORDS])>,
+    tracer: &'a Tracer,
+    /// Coordinator-side span ring (dispatch/boost/finish hops).
+    ring: TraceRing,
 }
 
 impl<'a> Coordinator<'a> {
@@ -400,6 +443,8 @@ impl<'a> Coordinator<'a> {
                 crossings_total: 0,
                 boosts: 0,
                 net_bytes: 0,
+                trace_k: 0,
+                traced: self.tracer.sampled(op_index),
             });
             self.inflight += 1;
             self.dispatch_stage(token, [0i64; SP_WORDS], None);
@@ -414,19 +459,22 @@ impl<'a> Coordinator<'a> {
         prev_sp: [i64; SP_WORDS],
         repeat_from: Option<[i64; SP_WORDS]>,
     ) {
-        let (start, sp, program) = {
+        let (start, sp, program, stage_idx) = {
             let slot = self.slots[token as usize].as_ref().unwrap();
             let stage = &slot.op.get().stages[slot.stage_idx];
             let (start, sp) = stage.resolve(&prev_sp, repeat_from);
             let program = (start != 0)
                 .then(|| Arc::clone(&stage.iter.program));
-            (start, sp, program)
+            (start, sp, program, slot.stage_idx)
         };
         let Some(program) = program else {
             // degenerate stage (e.g. empty structure): skip forward
             self.advance(token, sp, false);
             return;
         };
+        // emitted only for stages that actually dispatch a message, so
+        // the DES (which traces at its offload point) stays span-equal
+        self.emit(token, SpanKind::Dispatch { stage: stage_idx as u32 });
         let id = RequestId { cpu_node: 0, seq: self.seq };
         self.seq += 1;
         let msg =
@@ -434,13 +482,49 @@ impl<'a> Coordinator<'a> {
         self.send(token, msg, false);
     }
 
+    /// Emit one span for `token`'s op into the coordinator ring and
+    /// advance the slot's causal counter (bool test when untraced).
+    fn emit(&mut self, token: u32, kind: SpanKind) {
+        let slot = self.slots[token as usize].as_mut().unwrap();
+        if slot.traced {
+            self.ring.push(Span {
+                op: slot.op_index,
+                k: slot.trace_k,
+                t_ns: self.tracer.now_ns(),
+                kind,
+            });
+            slot.trace_k += 1;
+        }
+    }
+
+    /// Wrap a message with its slot's trace identity for the wire.
+    fn job(&self, token: u32, msg: TraversalMsg) -> LiveJob {
+        let slot = self.slots[token as usize].as_ref().unwrap();
+        LiveJob {
+            token,
+            op: slot.op_index,
+            trace_k: slot.trace_k,
+            traced: slot.traced,
+            msg,
+        }
+    }
+
+    /// Resume span emission where the shard left off for this op.
+    fn sync_trace(&mut self, job: &LiveJob) {
+        if job.traced {
+            let slot =
+                self.slots[job.token as usize].as_mut().unwrap();
+            slot.trace_k = job.trace_k;
+        }
+    }
+
     /// Route + enqueue a request; unroutable pointers answer with a
     /// trap (the switch's `Route::Invalid` path).
     fn send(&mut self, token: u32, msg: TraversalMsg, rerouted: bool) {
         match self.router.route(msg.cur_ptr, rerouted) {
             Some(shard) => {
-                match self.txs[shard as usize]
-                    .send(ShardMsg::Job(LiveJob { token, msg }))
+                let job = self.job(token, msg);
+                match self.txs[shard as usize].send(ShardMsg::Job(job))
                 {
                     Ok(()) => {}
                     Err(ShardMsg::Job(job)) => {
@@ -479,7 +563,9 @@ impl<'a> Coordinator<'a> {
 
     fn on_reply(&mut self, reply: Reply) {
         match reply {
-            Reply::Done { token, msg } => {
+            Reply::Done(job) => {
+                self.sync_trace(&job);
+                let LiveJob { token, msg, .. } = job;
                 self.account_msg(token, &msg);
                 {
                     let slot =
@@ -495,7 +581,9 @@ impl<'a> Coordinator<'a> {
                 }
                 self.advance(token, msg.sp, msg.status == Status::Trap);
             }
-            Reply::Yield { token, mut msg } => {
+            Reply::Yield(job) => {
+                self.sync_trace(&job);
+                let LiveJob { token, mut msg, .. } = job;
                 let boosts = {
                     let slot =
                         self.slots[token as usize].as_mut().unwrap();
@@ -508,6 +596,11 @@ impl<'a> Coordinator<'a> {
                     self.advance(token, msg.sp, true);
                 } else {
                     msg.max_iters += self.grant;
+                    // grant = the new *total* budget after the boost
+                    self.emit(
+                        token,
+                        SpanKind::Boost { grant: msg.max_iters },
+                    );
                     self.send(token, msg, false);
                 }
             }
@@ -515,7 +608,11 @@ impl<'a> Coordinator<'a> {
             // it onward as a fresh dispatch (the DES counts these as
             // routed requests, not switch reroutes; crossings are
             // already accumulated inside `msg`)
-            Reply::Bounced { token, msg } => self.send(token, msg, false),
+            Reply::Bounced(job) => {
+                self.sync_trace(&job);
+                let LiveJob { token, msg, .. } = job;
+                self.send(token, msg, false);
+            }
         }
     }
 
@@ -544,6 +641,7 @@ impl<'a> Coordinator<'a> {
             self.dispatch_stage(token, sp, None);
             return;
         }
+        self.emit(token, SpanKind::Finish { trapped });
         let slot = self.slots[token as usize].take().unwrap();
         let lat = slot.born.elapsed().as_nanos() as u64
             + slot.op.get().cpu_post_ns;
@@ -648,6 +746,53 @@ mod tests {
         let rep = b.serve_batch(&ops, 64); // window clamped to 1
         assert_eq!(rep.completed, 120);
         assert_eq!(rep.trapped, 0);
+    }
+
+    #[test]
+    fn trace_records_causal_hops_and_is_free_when_disabled() {
+        use crate::obs::{SpanKind, TraceConfig, TracerStats};
+
+        // disabled (default): serve normally, zero tracer activity
+        let mut b = backend(2);
+        let ops = hash_ops(&mut b, 50);
+        b.serve_batch(&ops, 4);
+        assert_eq!(b.tracer_stats(), TracerStats::default());
+        assert!(b.take_trace().is_empty());
+
+        // enabled at 1-in-1: every op yields dispatch..finish spans
+        b.enable_trace(TraceConfig {
+            sample_every: 1,
+            seed: 7,
+            ring_capacity: 4096,
+        });
+        b.serve_batch(&ops, 4);
+        let trace = b.take_trace();
+        let stats = b.tracer_stats();
+        assert!(stats.rings_allocated >= 3, "2 shards + coordinator");
+        assert_eq!(stats.dropped, 0);
+        for op in 0..50u64 {
+            let spans: Vec<_> =
+                trace.spans.iter().filter(|s| s.op == op).collect();
+            assert!(spans.len() >= 3, "op {op}: {spans:?}");
+            // causal counter is dense from 0
+            for (i, s) in spans.iter().enumerate() {
+                assert_eq!(s.k, i as u32, "op {op}");
+            }
+            assert!(matches!(
+                spans[0].kind,
+                SpanKind::Dispatch { stage: 0 }
+            ));
+            assert!(matches!(
+                spans[1].kind,
+                SpanKind::Visit { .. }
+            ));
+            assert_eq!(
+                spans.last().unwrap().kind,
+                SpanKind::Finish { trapped: false }
+            );
+        }
+        // drained once: a second drain is empty
+        assert!(b.take_trace().is_empty());
     }
 
     #[test]

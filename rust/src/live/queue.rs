@@ -37,6 +37,9 @@ pub struct QueueStats {
     pushed: AtomicU64,
     full_blocks: AtomicU64,
     rejects: AtomicU64,
+    /// High-water mark of the observed depth, updated at push time
+    /// (producer side — stays on the producer line).
+    hwm: AtomicU64,
     /// Consumer side (recv/try_recv), its own line.
     popped: CachePadded<AtomicU64>,
     capacity: u64,
@@ -54,6 +57,9 @@ pub struct QueueSnapshot {
     /// explicit-backpressure path (the serving tier answers BUSY
     /// instead of blocking a socket reader on engine capacity).
     pub rejects: u64,
+    /// Deepest occupancy any push observed (max queue occupancy over
+    /// the run; surfaced through `LiveRunStats` and the registry).
+    pub hwm: u64,
 }
 
 impl QueueSnapshot {
@@ -71,7 +77,18 @@ impl QueueStats {
             popped: self.popped.load(Ordering::Relaxed),
             full_blocks: self.full_blocks.load(Ordering::Relaxed),
             rejects: self.rejects.load(Ordering::Relaxed),
+            hwm: self.hwm.load(Ordering::Relaxed),
         }
+    }
+
+    /// Count a successful push and fold the observed depth into the
+    /// high-water mark (two relaxed RMWs + one load, producer line).
+    #[inline]
+    fn note_push(&self) {
+        let pushed = self.pushed.fetch_add(1, Ordering::Relaxed) + 1;
+        let popped = self.popped.load(Ordering::Relaxed);
+        self.hwm
+            .fetch_max(pushed.saturating_sub(popped), Ordering::Relaxed);
     }
 }
 
@@ -126,14 +143,14 @@ impl<T> QueueTx<T> {
     pub fn send(&self, v: T) -> Result<(), T> {
         match self.tx.try_send(v) {
             Ok(()) => {
-                self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+                self.stats.note_push();
                 Ok(())
             }
             Err(TrySendError::Full(v)) => {
                 self.stats.full_blocks.fetch_add(1, Ordering::Relaxed);
                 match self.tx.send(v) {
                     Ok(()) => {
-                        self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+                        self.stats.note_push();
                         Ok(())
                     }
                     Err(e) => Err(e.0),
@@ -150,7 +167,7 @@ impl<T> QueueTx<T> {
     pub fn try_send(&self, v: T) -> Result<(), TrySend<T>> {
         match self.tx.try_send(v) {
             Ok(()) => {
-                self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+                self.stats.note_push();
                 Ok(())
             }
             Err(TrySendError::Full(v)) => {

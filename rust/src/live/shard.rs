@@ -10,6 +10,13 @@
 //! (PULSE-ACC mode) the bounce returns to the dispatcher thread, which
 //! re-routes it — the extra hop Fig. 9 charges PULSE-ACC for.
 //!
+//! Tracing: a sampled op's `LiveJob` carries its admission index and a
+//! causal span counter (`trace_k`); the worker emits `Visit` (and
+//! `Forward`/`Bounce`) spans into its private ring and the counter
+//! travels onward with the job, so the drained spans sort back into
+//! hop order no matter which shard's ring they landed in (see
+//! `obs/README.md`). Untraced jobs pay one bool test per hop.
+//!
 //! Shutdown protocol: the dispatcher sends one `Shutdown` marker per
 //! shard only after every op has completed, so the marker is always
 //! the logical tail of the queue; the worker still switches to a
@@ -21,6 +28,7 @@ use std::sync::Arc;
 use crate::accel::{Accelerator, VisitEnd};
 use crate::isa::Status;
 use crate::net::{MsgKind, TraversalMsg};
+use crate::obs::{Span, SpanKind, TraceRing, Tracer};
 
 use super::metrics::ShardStats;
 use super::queue::{QueueRx, QueueTx};
@@ -28,11 +36,35 @@ use super::router::Router;
 
 /// One in-flight traversal: the dispatcher-side slot token + the
 /// self-contained request/continuation message (same wire format on
-/// every hop, paper §5).
+/// every hop, paper §5) + the trace identity that travels with it.
 #[derive(Debug)]
 pub(crate) struct LiveJob {
     pub token: u32,
+    /// Admission index of the op (trace identity; 0 when untraced).
+    pub op: u64,
+    /// Causal span counter: the next span this traversal emits,
+    /// anywhere, uses this k and increments it.
+    pub trace_k: u32,
+    /// Whether this op was sampled for tracing.
+    pub traced: bool,
     pub msg: TraversalMsg,
+}
+
+impl LiveJob {
+    /// An untraced job (the default when tracing is disabled).
+    pub fn untraced(token: u32, msg: TraversalMsg) -> Self {
+        Self { token, op: 0, trace_k: 0, traced: false, msg }
+    }
+
+    /// Emit one span for this job into `ring` and advance its causal
+    /// counter. No-op (one bool test) when the job is untraced.
+    #[inline]
+    pub fn emit(&mut self, ring: &mut TraceRing, t_ns: u64, kind: SpanKind) {
+        if self.traced {
+            ring.push(Span { op: self.op, k: self.trace_k, t_ns, kind });
+            self.trace_k += 1;
+        }
+    }
 }
 
 /// Messages a shard's request queue carries.
@@ -43,20 +75,23 @@ pub(crate) enum ShardMsg {
     Shutdown,
 }
 
-/// Messages back to the dispatcher thread.
+/// Messages back to the dispatcher thread. Each carries the whole
+/// [`LiveJob`] so the trace identity (op, k) survives the round trip
+/// and the dispatcher resumes emission where the shard left off.
 #[derive(Debug)]
 pub(crate) enum Reply {
     /// Traversal finished (`msg.status` is `Return` or `Trap`).
-    Done { token: u32, msg: TraversalMsg },
+    Done(LiveJob),
     /// Iteration budget exhausted; dispatcher grants more and
     /// re-dispatches (paper §3 max-iteration bound).
-    Yield { token: u32, msg: TraversalMsg },
+    Yield(LiveJob),
     /// PULSE-ACC mode only: non-local pointer returned to the
     /// dispatcher for re-routing instead of hopping shard-to-shard.
-    Bounced { token: u32, msg: TraversalMsg },
+    Bounced(LiveJob),
 }
 
-/// Worker body; returns its counters when the thread joins.
+/// Worker body; returns its counters when the thread joins (its trace
+/// ring is parked on `tracer` first).
 ///
 /// Generic over the reply queue's message type so the same worker
 /// serves both consumers: the per-run `LiveBackend` coordinator
@@ -70,8 +105,12 @@ pub(crate) fn run_shard<R: From<Reply>>(
     replies: QueueTx<R>,
     router: Arc<Router>,
     in_network: bool,
+    tracer: &Tracer,
 ) -> ShardStats {
     let mut stats = ShardStats::default();
+    // preallocated outside the serving loop; zero-capacity when
+    // tracing is disabled (no allocation, pushes never happen)
+    let mut ring = tracer.make_ring();
     let mut draining = false;
     loop {
         let m = if draining {
@@ -95,6 +134,19 @@ pub(crate) fn run_shard<R: From<Reply>>(
         stats.jobs += 1;
         let out = accel.visit(&mut job.msg);
         stats.iters += out.iters as u64;
+        if job.traced {
+            let dram = out.iters as u64
+                * job.msg.program.dram_bytes_per_iter();
+            job.emit(
+                &mut ring,
+                tracer.now_ns(),
+                SpanKind::Visit {
+                    shard: accel.node as u32,
+                    iters: out.iters,
+                    dram_bytes: dram,
+                },
+            );
+        }
         match out.end {
             VisitEnd::Done(st) => {
                 if st == Status::Trap {
@@ -102,19 +154,16 @@ pub(crate) fn run_shard<R: From<Reply>>(
                 }
                 job.msg.status = st;
                 job.msg.kind = MsgKind::Response;
-                send_reply(&replies, Reply::Done { token: job.token, msg: job.msg }, &mut stats);
+                send_reply(&replies, Reply::Done(job), &mut stats);
             }
             VisitEnd::Yield => {
                 stats.yields += 1;
-                send_reply(&replies, Reply::Yield { token: job.token, msg: job.msg }, &mut stats);
+                send_reply(&replies, Reply::Yield(job), &mut stats);
             }
             VisitEnd::NotLocal => {
                 if !in_network {
-                    send_reply(
-                        &replies,
-                        Reply::Bounced { token: job.token, msg: job.msg },
-                        &mut stats,
-                    );
+                    job.emit(&mut ring, tracer.now_ns(), SpanKind::Bounce);
+                    send_reply(&replies, Reply::Bounced(job), &mut stats);
                     continue;
                 }
                 match router.route(job.msg.cur_ptr, true) {
@@ -123,37 +172,40 @@ pub(crate) fn run_shard<R: From<Reply>>(
                     // no such pointer either — trap defensively.
                     Some(next) if next != accel.node => {
                         stats.forwards += 1;
-                        let token = job.token;
+                        job.emit(
+                            &mut ring,
+                            tracer.now_ns(),
+                            SpanKind::Forward { to: next as u32 },
+                        );
                         if let Err(ShardMsg::Job(job)) =
                             peers[next as usize].send(ShardMsg::Job(job))
                         {
                             // peer already tore down: report the loss
                             // upstream as a trap so the op terminates
                             stats.drops += 1;
-                            answer_trap(&replies, token, job.msg, &mut stats);
+                            answer_trap(&replies, job, &mut stats);
                         }
                     }
                     _ => {
                         stats.traps += 1;
-                        let token = job.token;
-                        answer_trap(&replies, token, job.msg, &mut stats);
+                        answer_trap(&replies, job, &mut stats);
                     }
                 }
             }
         }
     }
+    tracer.park(ring);
     stats
 }
 
 fn answer_trap<R: From<Reply>>(
     replies: &QueueTx<R>,
-    token: u32,
-    mut msg: TraversalMsg,
+    mut job: LiveJob,
     stats: &mut ShardStats,
 ) {
-    msg.status = Status::Trap;
-    msg.kind = MsgKind::Response;
-    send_reply(replies, Reply::Done { token, msg }, stats);
+    job.msg.status = Status::Trap;
+    job.msg.kind = MsgKind::Response;
+    send_reply(replies, Reply::Done(job), stats);
 }
 
 fn send_reply<R: From<Reply>>(

@@ -49,11 +49,12 @@ fn main() -> CliResult {
     match args.subcommand() {
         Some("serve") => serve(&args),
         Some("loadgen") => loadgen(&args),
+        Some("stats") => stats(&args),
         Some("inspect") => inspect(&args),
         Some("selftest") => selftest(),
         _ => {
             eprintln!(
-                "usage: pulse <serve|loadgen|inspect|selftest>\n\
+                "usage: pulse <serve|loadgen|stats|inspect|selftest>\n\
                  serve:   [--app webservice|wiredtiger|btrdb|skiplist|\
                  radixtrie|graph] [--backend pulse|pulse-acc|cache|rpc|\
                  rpc-arm|cache-rpc|live] [--mix a|b|c] [--nodes N] \
@@ -66,7 +67,11 @@ fn main() -> CliResult {
                  drain + metrics tables on exit; without it the \
                  process runs until killed — std-only build, no \
                  signal handler, so a kill skips the drain); --conc \
-                 sets the admission window\n\
+                 sets the admission window; observability: \
+                 [--trace-out PATH [--trace-sample N] [--trace-seed S]] \
+                 [--stats-out PATH --stats-interval-s S]\n\
+                 stats: --addr ADDR [--raw] — poll a live server's \
+                 metrics registry over a STATS frame\n\
                  loadgen: --addr ADDR [--mix a|b|c | --app skiplist|\
                  radixtrie|graph] [--conns N] [--depth D] [--rate \
                  OPS_PER_S (open loop)] [--keys N] [--ops N] [--seed S] \
@@ -137,9 +142,23 @@ fn serve_listen(args: &Args, listen: &str) -> CliResult {
     let cfg = SrvConfig {
         window: args.usize_or("conc", 64),
         run_secs: args.f64_or("duration-s", 0.0),
+        // --stats-out alone implies a 1 Hz sampler; --stats-interval-s
+        // alone does nothing (there is nowhere to write rows to)
+        stats_interval_s: args.f64_or(
+            "stats-interval-s",
+            if args.get("stats-out").is_some() { 1.0 } else { 0.0 },
+        ),
+        trace: args.get("trace-out").map(|_| pulse::obs::TraceConfig {
+            sample_every: args.u64_or("trace-sample", 64).max(1),
+            seed: args.u64_or("trace-seed", 42),
+            ..Default::default()
+        }),
         ..SrvConfig::default()
     };
-    let (server, handle) = Server::bind(backend, listen, cfg)?;
+    let (mut server, handle) = Server::bind(backend, listen, cfg)?;
+    if let Some(p) = args.get("stats-out") {
+        server.set_stats_out(p.into());
+    }
     eprintln!(
         "pulse srv: listening on {} backend={kind} workload={} \
          keys={} seed={} nodes={} window={}",
@@ -160,6 +179,16 @@ fn serve_listen(args: &Args, listen: &str) -> CliResult {
         );
     }
     let summary = server.run();
+    if let Some(path) = args.get("trace-out") {
+        let t = &summary.engine.trace;
+        std::fs::write(path, t.to_jsonl())?;
+        let chrome = format!("{path}.chrome.json");
+        std::fs::write(&chrome, t.to_chrome())?;
+        eprintln!(
+            "pulse srv: wrote {} trace spans to {path} (+ {chrome})",
+            t.len()
+        );
+    }
     println!("{}", summary.srv.summary());
     let b = &summary.backend;
     println!(
@@ -176,7 +205,52 @@ fn serve_listen(args: &Args, listen: &str) -> CliResult {
         b.wire_decode_errors,
         b.net_dropped,
     );
+    print_live_counters(b);
     println!("engine: {}", summary.engine.run.summary());
+    Ok(())
+}
+
+/// Per-shard dataplane counters (live engine only; all zero on the DES
+/// and the model backends, whose equivalents live in the serve report).
+fn print_live_counters(b: &pulse::backend::BackendMetrics) {
+    if b.live_forwards + b.live_yields + b.live_traps + b.live_drops
+        > 0
+        || b.live_max_queue_depth > 0
+    {
+        println!(
+            "live shards: forwards={} yields={} traps={} drops={} \
+             max-queue-depth={}",
+            b.live_forwards,
+            b.live_yields,
+            b.live_traps,
+            b.live_drops,
+            b.live_max_queue_depth,
+        );
+    }
+}
+
+/// `pulse stats --addr HOST:PORT`: poll a live server's metrics
+/// registry (one STATS frame). Default output is an aligned
+/// name/value table; `--raw` prints the snapshot JSON verbatim.
+fn stats(args: &Args) -> CliResult {
+    let Some(addr) = args.get("addr") else {
+        return Err("stats needs --addr HOST:PORT".into());
+    };
+    let snap = pulse::srv::fetch_stats(addr)?;
+    if args.flag("raw") {
+        println!("{}", snap.render());
+        return Ok(());
+    }
+    match &snap {
+        pulse::util::json::Json::Obj(m) => {
+            let width =
+                m.keys().map(|k| k.len()).max().unwrap_or(0);
+            for (k, v) in m {
+                println!("{k:width$}  {}", v.render());
+            }
+        }
+        other => println!("{}", other.render()),
+    }
     Ok(())
 }
 
@@ -405,10 +479,11 @@ fn print_report(
     }
     // link-layer loss is absorbed by retransmission, so it only shows
     // up if surfaced explicitly — overload must be observable
-    let dropped = backend.metrics().net_dropped;
-    if dropped > 0 {
-        println!("links: dropped={dropped} (retransmitted)");
+    let m = backend.metrics();
+    if m.net_dropped > 0 {
+        println!("links: dropped={} (retransmitted)", m.net_dropped);
     }
+    print_live_counters(&m);
 }
 
 fn inspect(args: &Args) -> CliResult {

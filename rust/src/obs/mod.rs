@@ -1,0 +1,28 @@
+//! `obs` — observability: traversal tracing + unified metrics.
+//!
+//! Two instruments, both designed to cost nothing when idle:
+//!
+//! * [`trace`] — sampled per-op hop traces. Every executor (rack DES,
+//!   live engine, persistent engine, inline serving) emits the same
+//!   structured span sequence for the same op, so a trace doubles as a
+//!   backend-conformance artifact. Exported as JSONL and Chrome
+//!   trace-event JSON.
+//! * [`registry`] — named counters/gauges/histograms with relaxed
+//!   atomic hot paths, a periodic time-series snapshot sampler, and
+//!   the JSON snapshot served over the wire by the STATS frame
+//!   (`srv/wire.rs`) and `pulse stats --addr`.
+//!
+//! See `obs/README.md` for the span schema, the sampling contract, and
+//! the overhead discipline.
+#![deny(clippy::redundant_clone)]
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    AtomicHist, Counter, Instrument, MetricsRegistry, SnapshotSampler,
+};
+pub use trace::{
+    OpTrace, Span, SpanKind, Trace, TraceConfig, TraceRing, Tracer,
+    TracerStats,
+};

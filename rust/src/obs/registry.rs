@@ -1,0 +1,440 @@
+//! Unified metrics registry: named counters / gauges / histograms with
+//! relaxed-atomic hot paths, plus a periodic snapshot sampler that
+//! turns the registry into time-series JSONL during a serve run.
+//!
+//! Discipline matches `live::queue`: every mutation on a serving hot
+//! path is a single relaxed atomic RMW on its own handle (counters are
+//! cache-line padded), and all aggregation cost lives in `snapshot()`,
+//! which only observers pay. The existing ad-hoc metric structs
+//! (`SrvMetrics`, `LiveRunStats`, queue stats) register *into* a
+//! registry as gauges over their own atomics — their hot paths don't
+//! change, they just become observable by name.
+
+use std::collections::BTreeMap;
+use std::io::{self, Write as _};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::cache::CachePadded;
+use crate::util::hist::Histogram;
+use crate::util::json::Json;
+
+/// Monotone counter handle. Clones share the cell; increments are
+/// relaxed RMWs on a dedicated cache line.
+#[derive(Debug, Clone)]
+pub struct Counter(Arc<CachePadded<AtomicU64>>);
+
+impl Counter {
+    fn new() -> Self {
+        Counter(Arc::new(CachePadded::from(AtomicU64::new(0))))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free histogram: the `util::hist::Histogram` bucket layout
+/// (64 decades × 16 sub-buckets) with every slot a relaxed `AtomicU64`,
+/// so many writer threads record concurrently without a mutex — the
+/// fix for `SrvMetrics.e2e`'s global-`Mutex`-per-response hot path.
+#[derive(Debug)]
+pub struct AtomicHist {
+    buckets: Vec<AtomicU64>,
+    count: CachePadded<AtomicU64>,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHist {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..Histogram::SLOTS)
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            count: CachePadded::from(AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Histogram::index_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Materialize a point-in-time `Histogram` (percentile math lives
+    /// there; concurrent recording makes the snapshot approximate by
+    /// at most the in-flight records).
+    pub fn snapshot(&self) -> Histogram {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        Histogram::from_raw(
+            buckets,
+            self.count.load(Ordering::Relaxed),
+            self.sum.load(Ordering::Relaxed) as f64,
+            self.min.load(Ordering::Relaxed),
+            self.max.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// One registered instrument.
+#[derive(Clone)]
+pub enum Instrument {
+    Counter(Counter),
+    /// Computed on snapshot; typically a closure over some hot
+    /// struct's own relaxed atomics.
+    Gauge(Arc<dyn Fn() -> f64 + Send + Sync>),
+    Hist(Arc<AtomicHist>),
+}
+
+impl std::fmt::Debug for Instrument {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Instrument::Counter(c) => write!(f, "Counter({})", c.get()),
+            Instrument::Gauge(_) => write!(f, "Gauge(..)"),
+            Instrument::Hist(h) => write!(f, "Hist(n={})", h.count()),
+        }
+    }
+}
+
+/// Named instrument registry. Registration takes the mutex once per
+/// instrument at setup time; the returned handles are lock-free.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<BTreeMap<String, Instrument>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create a counter. Re-registering a name returns the
+    /// existing handle, so restarts of a serving loop keep counting.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.entries.lock().unwrap();
+        match m.get(name) {
+            Some(Instrument::Counter(c)) => c.clone(),
+            _ => {
+                let c = Counter::new();
+                m.insert(name.to_string(), Instrument::Counter(c.clone()));
+                c
+            }
+        }
+    }
+
+    /// Register (or replace) a computed gauge.
+    pub fn gauge_fn(
+        &self,
+        name: &str,
+        f: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
+        self.entries
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Instrument::Gauge(Arc::new(f)));
+    }
+
+    /// Get-or-create a lock-free histogram.
+    pub fn hist(&self, name: &str) -> Arc<AtomicHist> {
+        let mut m = self.entries.lock().unwrap();
+        match m.get(name) {
+            Some(Instrument::Hist(h)) => h.clone(),
+            _ => {
+                let h = Arc::new(AtomicHist::new());
+                m.insert(name.to_string(), Instrument::Hist(h.clone()));
+                h
+            }
+        }
+    }
+
+    /// Point-in-time view of every instrument as one flat JSON object.
+    /// Counters/gauges render as numbers; a histogram `h` renders as
+    /// `h.count`, `h.mean`, `h.p50`, `h.p95`, `h.p99`, `h.max`.
+    pub fn snapshot(&self) -> Json {
+        let mut j = Json::obj();
+        for (name, inst) in self.entries.lock().unwrap().iter() {
+            match inst {
+                Instrument::Counter(c) => {
+                    j.set(name, c.get());
+                }
+                Instrument::Gauge(f) => {
+                    let v = f();
+                    j.set(name, if v.is_finite() { v } else { 0.0 });
+                }
+                Instrument::Hist(h) => {
+                    let s = h.snapshot();
+                    j.set(&format!("{name}.count"), s.count())
+                        .set(&format!("{name}.mean"), s.mean())
+                        .set(&format!("{name}.p50"), s.p50())
+                        .set(&format!("{name}.p95"), s.p95())
+                        .set(&format!("{name}.p99"), s.p99())
+                        .set(&format!("{name}.max"), s.max());
+                }
+            }
+        }
+        j
+    }
+
+    /// Current counter values only (the sampler's rate base).
+    fn counter_values(&self) -> BTreeMap<String, u64> {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|(n, i)| match i {
+                Instrument::Counter(c) => Some((n.clone(), c.get())),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Periodic snapshot sampler: a background thread that appends one
+/// JSONL row per interval to `path` while a serve run is live —
+/// `{"t_s":…, "metrics":{…snapshot…}, "rates":{"<counter>_per_s":…}}`.
+/// Stop it with [`SnapshotSampler::stop`]; it writes one final row so
+/// short runs still produce output.
+#[derive(Debug)]
+pub struct SnapshotSampler {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SnapshotSampler {
+    pub fn start(
+        registry: Arc<MetricsRegistry>,
+        path: PathBuf,
+        interval: Duration,
+    ) -> io::Result<Self> {
+        let mut file = std::fs::File::create(&path)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let interval = interval.max(Duration::from_millis(10));
+        let join = std::thread::Builder::new()
+            .name("pulse-stats".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                let mut prev = registry.counter_values();
+                let mut prev_t = t0;
+                loop {
+                    // sleep in small steps so stop() is prompt
+                    let deadline = Instant::now() + interval;
+                    while Instant::now() < deadline
+                        && !stop2.load(Ordering::Relaxed)
+                    {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    let stopping = stop2.load(Ordering::Relaxed);
+                    let now = Instant::now();
+                    let dt = now.duration_since(prev_t).as_secs_f64();
+                    let cur = registry.counter_values();
+                    let mut rates = Json::obj();
+                    if dt > 0.0 {
+                        for (name, v) in &cur {
+                            let d = v.saturating_sub(
+                                prev.get(name).copied().unwrap_or(0),
+                            );
+                            rates.set(
+                                &format!("{name}_per_s"),
+                                d as f64 / dt,
+                            );
+                        }
+                    }
+                    let mut row = Json::obj();
+                    row.set("t_s", t0.elapsed().as_secs_f64())
+                        .set("metrics", registry.snapshot())
+                        .set("rates", rates);
+                    let _ = writeln!(file, "{}", row.render());
+                    let _ = file.flush();
+                    prev = cur;
+                    prev_t = now;
+                    if stopping {
+                        break;
+                    }
+                }
+            })?;
+        Ok(Self { stop, join: Some(join) })
+    }
+
+    /// Signal the thread, wait for its final row, and return.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for SnapshotSampler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_snapshot_by_name() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("srv.requests");
+        c.add(41);
+        c.inc();
+        // re-registration returns the same cell
+        r.counter("srv.requests").inc();
+        assert_eq!(c.get(), 43);
+        let side = Arc::new(AtomicU64::new(7));
+        let s2 = side.clone();
+        r.gauge_fn("engine.queue_depth", move || {
+            s2.load(Ordering::Relaxed) as f64
+        });
+        let snap = r.snapshot();
+        assert_eq!(
+            snap.get("srv.requests").and_then(|v| v.as_f64()),
+            Some(43.0)
+        );
+        assert_eq!(
+            snap.get("engine.queue_depth").and_then(|v| v.as_f64()),
+            Some(7.0)
+        );
+        side.store(9, Ordering::Relaxed);
+        assert_eq!(
+            r.snapshot().get("engine.queue_depth").and_then(|v| v.as_f64()),
+            Some(9.0)
+        );
+    }
+
+    #[test]
+    fn atomic_hist_matches_mutex_histogram_percentiles() {
+        let ah = AtomicHist::new();
+        let mut h = Histogram::new();
+        for v in (1..=10_000u64).map(|v| v * 3) {
+            ah.record(v);
+            h.record(v);
+        }
+        let s = ah.snapshot();
+        assert_eq!(s.count(), h.count());
+        assert_eq!(s.p50(), h.p50());
+        assert_eq!(s.p95(), h.p95());
+        assert_eq!(s.p99(), h.p99());
+        assert_eq!(s.min(), h.min());
+        assert_eq!(s.max(), h.max());
+        assert!((s.mean() - h.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn atomic_hist_is_safe_under_concurrent_writers() {
+        let ah = Arc::new(AtomicHist::new());
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let ah = ah.clone();
+                s.spawn(move || {
+                    for i in 0..5_000u64 {
+                        ah.record(t * 1_000 + (i % 997) + 1);
+                    }
+                });
+            }
+        });
+        let snap = ah.snapshot();
+        assert_eq!(snap.count(), 20_000);
+        assert!(snap.min() >= 1 && snap.max() <= 4_997);
+    }
+
+    #[test]
+    fn hist_snapshot_renders_percentile_fields() {
+        let r = MetricsRegistry::new();
+        let h = r.hist("srv.e2e_ns");
+        for v in 1..=100u64 {
+            h.record(v * 100);
+        }
+        let snap = r.snapshot();
+        assert_eq!(
+            snap.get("srv.e2e_ns.count").and_then(|v| v.as_f64()),
+            Some(100.0)
+        );
+        assert!(snap.get("srv.e2e_ns.p99").is_some());
+        assert!(snap.get("srv.e2e_ns.mean").is_some());
+    }
+
+    #[test]
+    fn sampler_emits_parseable_rows_with_rates() {
+        let dir = std::env::temp_dir()
+            .join(format!("pulse_obs_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stats.jsonl");
+        let reg = Arc::new(MetricsRegistry::new());
+        let c = reg.counter("ops.completed");
+        let sampler = SnapshotSampler::start(
+            reg.clone(),
+            path.clone(),
+            Duration::from_millis(30),
+        )
+        .unwrap();
+        for _ in 0..50 {
+            c.inc();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        sampler.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rows: Vec<Json> = text
+            .lines()
+            .map(|l| Json::parse(l).expect("row parses"))
+            .collect();
+        assert!(!rows.is_empty(), "sampler wrote no rows");
+        let last = rows.last().unwrap();
+        assert_eq!(
+            last.get("metrics")
+                .and_then(|m| m.get("ops.completed"))
+                .and_then(|v| v.as_f64()),
+            Some(50.0)
+        );
+        assert!(last.get("t_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        // some row observed a nonzero rate while the counter moved
+        assert!(rows.iter().any(|r| {
+            r.get("rates")
+                .and_then(|m| m.get("ops.completed_per_s"))
+                .and_then(|v| v.as_f64())
+                .is_some_and(|v| v > 0.0)
+        }));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

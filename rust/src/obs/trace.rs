@@ -1,0 +1,536 @@
+//! Traversal tracer: sampled per-op hop traces as structured spans.
+//!
+//! Every op served by any executor can carry a trace: a causally
+//! ordered sequence of [`Span`]s recording where the traversal went
+//! (dispatch → shard visit → forward/bounce → boost → finish). The
+//! sequence is **identical in shape across executors** — the rack DES,
+//! the live threaded engine, the persistent engine, and inline serving
+//! all emit the same `(op, kind)` stream for the same seeded workload
+//! under serialized serving — which makes a trace a backend-conformance
+//! artifact, not just a debugging aid (pinned in `tests/conformance.rs`).
+//!
+//! Ordering contract: spans are keyed `(op, k)` where `op` is the op's
+//! admission index and `k` is a per-op monotone emission counter that
+//! travels *with the traversal* (in `LiveJob` across shard threads, in
+//! `OpRun` through the DES). Sorting by `(op, k)` therefore recovers
+//! the causal hop order regardless of which thread's ring buffer a
+//! span landed in. Timestamps (`t_ns`) are informational — wall-clock
+//! on the live engine, virtual sim time on the DES — and are excluded
+//! from the conformance identity.
+//!
+//! Overhead contract: with sampling disabled (the default) the tracer
+//! adds **zero allocations** to the timed region — `make_ring` returns
+//! a zero-capacity ring (a `Vec::new()`, which does not allocate),
+//! `sampled()` is `false` for every op so no emission site is reached,
+//! and the counters in [`Tracer::stats`] stay at zero (asserted in
+//! `tests/conformance.rs`). Rings are preallocated outside the timed
+//! region when sampling is enabled; a full ring overwrites its oldest
+//! span and counts the loss instead of allocating.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// What happened at one hop of a traversal. Payloads carry only
+/// schedule-independent facts (shard ids, iteration counts, byte
+/// counts) so the span stream is deterministic under serialized
+/// serving; see the module docs for the conformance contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// The dispatcher launched stage `stage` of the op (the routing
+    /// target is visible as the following `Visit`'s shard).
+    Dispatch { stage: u32 },
+    /// A near-memory accelerator visit: `iters` iterations executed on
+    /// `shard`, reading `dram_bytes` from its DRAM (0-iteration visits
+    /// happen when a forwarded traversal arrives with spent budget).
+    Visit { shard: u32, iters: u32, dram_bytes: u64 },
+    /// In-network forward to shard `to` (PULSE mode; the source shard
+    /// is the preceding `Visit`).
+    Forward { to: u32 },
+    /// Bounce back through the dispatcher (PULSE-ACC mode).
+    Bounce,
+    /// Budget-exhaustion yield answered with a boost: `grant` is the
+    /// new total iteration budget after the re-grant.
+    Boost { grant: u32 },
+    /// Terminal completion; `trapped` mirrors the op's final status.
+    Finish { trapped: bool },
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Dispatch { .. } => "dispatch",
+            SpanKind::Visit { .. } => "visit",
+            SpanKind::Forward { .. } => "forward",
+            SpanKind::Bounce => "bounce",
+            SpanKind::Boost { .. } => "boost",
+            SpanKind::Finish { .. } => "finish",
+        }
+    }
+}
+
+/// One hop of one traced op. `Copy` so rings move spans without
+/// allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Admission index of the op this span belongs to.
+    pub op: u64,
+    /// Causal emission counter within the op (0 = first span).
+    pub k: u32,
+    /// Emission time: wall ns since the tracer's epoch (live), or
+    /// virtual sim ns (DES). Not part of the conformance identity.
+    pub t_ns: u64,
+    pub kind: SpanKind,
+}
+
+impl Span {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("op", self.op)
+            .set("k", self.k as u64)
+            .set("t_ns", self.t_ns)
+            .set("kind", self.kind.name());
+        match self.kind {
+            SpanKind::Dispatch { stage } => {
+                j.set("stage", stage as u64);
+            }
+            SpanKind::Visit { shard, iters, dram_bytes } => {
+                j.set("shard", shard as u64)
+                    .set("iters", iters as u64)
+                    .set("dram_bytes", dram_bytes);
+            }
+            SpanKind::Forward { to } => {
+                j.set("to", to as u64);
+            }
+            SpanKind::Bounce => {}
+            SpanKind::Boost { grant } => {
+                j.set("grant", grant as u64);
+            }
+            SpanKind::Finish { trapped } => {
+                j.set("trapped", trapped);
+            }
+        }
+        j
+    }
+}
+
+/// Tracer configuration. `Copy` so it can ride in `EngineConfig`.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Sample 1 in N ops (1 = every op). 0 is treated as 1.
+    pub sample_every: u64,
+    /// Seed of the deterministic sampling hash: the same (seed,
+    /// op index) pair samples identically on every executor.
+    pub seed: u64,
+    /// Span capacity of each per-thread ring buffer.
+    pub ring_capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { sample_every: 1, seed: 0, ring_capacity: 64 * 1024 }
+    }
+}
+
+/// Bounded span buffer owned by one emitting thread (a shard, the
+/// coordinator, the DES loop). Overwrites its oldest span when full —
+/// never allocates after construction.
+#[derive(Debug, Default)]
+pub struct TraceRing {
+    buf: Vec<Span>,
+    cap: usize,
+    /// Next write position once `buf.len() == cap`.
+    head: usize,
+    /// Spans overwritten because the ring was full.
+    dropped: u64,
+}
+
+impl TraceRing {
+    /// A ring that records nothing (the disabled-tracer ring).
+    /// `Vec::new()` does not allocate.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap), cap, head: 0, dropped: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, span: Span) {
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(span);
+        } else {
+            self.buf[self.head] = span;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Counters for the zero-overhead assertion: all three stay 0 when
+/// sampling is disabled.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TracerStats {
+    /// Spans currently parked (recorded and retrievable via `drain`).
+    pub recorded: u64,
+    /// Spans lost to full or zero-capacity rings.
+    pub dropped: u64,
+    /// Rings preallocated by `make_ring` (0 when disabled).
+    pub rings_allocated: u64,
+}
+
+/// Per-run trace collector shared by every emitting thread of one
+/// executor. Emitters obtain a private [`TraceRing`] before the timed
+/// region (`make_ring`), push spans lock-free into it, and park it
+/// back when done; `drain` merges and causally orders everything.
+#[derive(Debug)]
+pub struct Tracer {
+    cfg: Option<TraceConfig>,
+    epoch: Instant,
+    parked: Mutex<Vec<TraceRing>>,
+    dropped: AtomicU64,
+    rings_allocated: AtomicU64,
+    recorded: AtomicU64,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// splitmix64 finalizer: the deterministic sampling hash.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+impl Tracer {
+    pub fn disabled() -> Self {
+        Self {
+            cfg: None,
+            epoch: Instant::now(),
+            parked: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+            rings_allocated: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+        }
+    }
+
+    pub fn new(cfg: TraceConfig) -> Self {
+        Self { cfg: Some(cfg), ..Self::disabled() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.is_some()
+    }
+
+    /// Deterministic 1-in-N sampling decision, pure in (seed, op
+    /// index): the same op index samples identically on every
+    /// executor, which is what makes cross-backend trace comparison
+    /// possible. Always `false` when disabled.
+    #[inline]
+    pub fn sampled(&self, op_index: u64) -> bool {
+        match self.cfg {
+            None => false,
+            Some(c) => {
+                let n = c.sample_every.max(1);
+                n == 1 || mix64(c.seed ^ op_index) % n == 0
+            }
+        }
+    }
+
+    /// Preallocate a ring for one emitting thread. Call OUTSIDE the
+    /// timed region. Returns a zero-capacity (allocation-free) ring
+    /// when disabled.
+    pub fn make_ring(&self) -> TraceRing {
+        match self.cfg {
+            None => TraceRing::empty(),
+            Some(c) => {
+                self.rings_allocated.fetch_add(1, Ordering::Relaxed);
+                TraceRing::with_capacity(c.ring_capacity.max(1))
+            }
+        }
+    }
+
+    /// Park a finished ring for later draining. A disabled tracer's
+    /// empty ring is discarded without touching the mutex.
+    pub fn park(&self, ring: TraceRing) {
+        self.dropped.fetch_add(ring.dropped, Ordering::Relaxed);
+        if !self.enabled() {
+            return;
+        }
+        self.recorded
+            .fetch_add(ring.buf.len() as u64, Ordering::Relaxed);
+        self.parked.lock().unwrap().push(ring);
+    }
+
+    /// Wall ns since the tracer's construction (live executors; the
+    /// DES stamps virtual sim time instead).
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    pub fn stats(&self) -> TracerStats {
+        TracerStats {
+            recorded: self.recorded.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            rings_allocated: self.rings_allocated.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Merge every parked ring into one causally ordered [`Trace`]
+    /// and reset the recorded counter. Call after the run.
+    pub fn drain(&self) -> Trace {
+        let mut rings = Vec::new();
+        std::mem::swap(&mut rings, &mut self.parked.lock().unwrap());
+        let mut spans: Vec<Span> = Vec::new();
+        for r in rings {
+            // unwrap the ring's overwrite rotation back to push order
+            let (tail, head) = r.buf.split_at(r.head.min(r.buf.len()));
+            spans.extend_from_slice(head);
+            spans.extend_from_slice(tail);
+        }
+        self.recorded.store(0, Ordering::Relaxed);
+        spans.sort_by_key(|s| (s.op, s.k));
+        Trace { spans }
+    }
+}
+
+/// Per-op emission handle: binds an op's identity and its causal
+/// counter to a ring, so emission sites are one `push(kind)` call.
+/// Used by the single-threaded executors (DES, inline serving); the
+/// live engine threads the counter through `LiveJob` instead.
+pub struct OpTrace<'a> {
+    pub ring: &'a mut TraceRing,
+    pub op: u64,
+    pub k: u32,
+}
+
+impl OpTrace<'_> {
+    #[inline]
+    pub fn push(&mut self, t_ns: u64, kind: SpanKind) {
+        self.ring.push(Span { op: self.op, k: self.k, t_ns, kind });
+        self.k += 1;
+    }
+}
+
+/// A drained, causally ordered trace.
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// The schedule-independent identity of the trace: `(op, kind)` in
+    /// causal order, timestamps excluded. Two executors serving the
+    /// same seeded workload serialized must produce equal identities
+    /// (the conformance contract).
+    pub fn identity(&self) -> Vec<(u64, SpanKind)> {
+        self.spans.iter().map(|s| (s.op, s.kind)).collect()
+    }
+
+    /// One JSON object per line (the `--trace-out` format).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for s in &self.spans {
+            out.push_str(&s.to_json().render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome trace-event format (chrome://tracing, Perfetto): one
+    /// instant event per span, one track (`tid`) per op.
+    pub fn to_chrome(&self) -> String {
+        let mut events = Vec::with_capacity(self.spans.len());
+        for s in &self.spans {
+            let mut e = Json::obj();
+            e.set("name", s.kind.name())
+                .set("ph", "i")
+                .set("s", "t")
+                .set("ts", s.t_ns as f64 / 1e3)
+                .set("pid", 0u64)
+                .set("tid", s.op);
+            let mut args = s.to_json();
+            if let Json::Obj(m) = &mut args {
+                m.remove("t_ns");
+            }
+            e.set("args", args);
+            events.push(e);
+        }
+        Json::Arr(events).render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(op: u64, k: u32, kind: SpanKind) -> Span {
+        Span { op, k, t_ns: 7, kind }
+    }
+
+    #[test]
+    fn disabled_tracer_counts_nothing_and_allocates_nothing() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        assert!(!t.sampled(0));
+        let mut r = t.make_ring();
+        assert_eq!(r.buf.capacity(), 0, "disabled ring must not allocate");
+        r.push(span(0, 0, SpanKind::Bounce));
+        t.park(r);
+        let s = t.stats();
+        assert_eq!(s.recorded, 0);
+        assert_eq!(s.rings_allocated, 0);
+        // the push was counted as dropped, never stored
+        assert_eq!(s.dropped, 1);
+        assert!(t.drain().is_empty());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_hits_roughly_one_in_n() {
+        let t = Tracer::new(TraceConfig {
+            sample_every: 8,
+            seed: 0xDECAF,
+            ring_capacity: 16,
+        });
+        let picks: Vec<bool> = (0..10_000).map(|i| t.sampled(i)).collect();
+        let again: Vec<bool> = (0..10_000).map(|i| t.sampled(i)).collect();
+        assert_eq!(picks, again, "sampling must be pure");
+        let hits = picks.iter().filter(|&&b| b).count();
+        assert!(
+            (800..1700).contains(&hits),
+            "1-in-8 of 10k sampled {hits} ops"
+        );
+        // sample_every = 1 takes everything
+        let all = Tracer::new(TraceConfig {
+            sample_every: 1,
+            ..TraceConfig::default()
+        });
+        assert!((0..100).all(|i| all.sampled(i)));
+    }
+
+    #[test]
+    fn drain_merges_rings_in_causal_order() {
+        let t = Tracer::new(TraceConfig {
+            sample_every: 1,
+            seed: 0,
+            ring_capacity: 8,
+        });
+        // op 1's spans land in two different rings (coordinator +
+        // shard), out of order between rings
+        let mut a = t.make_ring();
+        let mut b = t.make_ring();
+        a.push(span(1, 0, SpanKind::Dispatch { stage: 0 }));
+        b.push(span(1, 1, SpanKind::Visit {
+            shard: 2,
+            iters: 5,
+            dram_bytes: 80,
+        }));
+        b.push(span(0, 1, SpanKind::Finish { trapped: false }));
+        a.push(span(0, 0, SpanKind::Dispatch { stage: 0 }));
+        a.push(span(1, 2, SpanKind::Finish { trapped: false }));
+        t.park(a);
+        t.park(b);
+        assert_eq!(t.stats().recorded, 5);
+        assert_eq!(t.stats().rings_allocated, 2);
+        let trace = t.drain();
+        let ids = trace.identity();
+        assert_eq!(ids, vec![
+            (0, SpanKind::Dispatch { stage: 0 }),
+            (0, SpanKind::Finish { trapped: false }),
+            (1, SpanKind::Dispatch { stage: 0 }),
+            (1, SpanKind::Visit { shard: 2, iters: 5, dram_bytes: 80 }),
+            (1, SpanKind::Finish { trapped: false }),
+        ]);
+        // drain resets the recorded count
+        assert_eq!(t.stats().recorded, 0);
+        assert!(t.drain().is_empty());
+    }
+
+    #[test]
+    fn full_ring_overwrites_oldest_and_counts_drops() {
+        let t = Tracer::new(TraceConfig {
+            sample_every: 1,
+            seed: 0,
+            ring_capacity: 4,
+        });
+        let mut r = t.make_ring();
+        for k in 0..10u32 {
+            r.push(span(0, k, SpanKind::Bounce));
+        }
+        assert_eq!(r.len(), 4);
+        t.park(r);
+        assert_eq!(t.stats().dropped, 6);
+        let trace = t.drain();
+        // the newest 4 spans survive, in order
+        let ks: Vec<u32> = trace.spans.iter().map(|s| s.k).collect();
+        assert_eq!(ks, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn jsonl_rows_parse_and_round_trip_schema() {
+        let t = Tracer::new(TraceConfig::default());
+        let mut r = t.make_ring();
+        let mut ot = OpTrace { ring: &mut r, op: 3, k: 0 };
+        ot.push(10, SpanKind::Dispatch { stage: 0 });
+        ot.push(20, SpanKind::Visit { shard: 1, iters: 9, dram_bytes: 144 });
+        ot.push(30, SpanKind::Forward { to: 0 });
+        ot.push(40, SpanKind::Bounce);
+        ot.push(50, SpanKind::Boost { grant: 8192 });
+        ot.push(60, SpanKind::Finish { trapped: true });
+        t.park(r);
+        let trace = t.drain();
+        let jsonl = trace.to_jsonl();
+        let mut kinds = Vec::new();
+        for line in jsonl.lines() {
+            let j = Json::parse(line).expect("every row parses");
+            kinds.push(j.get("kind").unwrap().as_str().unwrap().to_string());
+            assert_eq!(j.get("op").unwrap().as_f64(), Some(3.0));
+            assert!(j.get("k").is_some() && j.get("t_ns").is_some());
+        }
+        assert_eq!(
+            kinds,
+            ["dispatch", "visit", "forward", "bounce", "boost", "finish"]
+        );
+        // chrome export is one valid JSON array with one event per span
+        let chrome = Json::parse(&trace.to_chrome()).expect("chrome json");
+        match chrome {
+            Json::Arr(evs) => {
+                assert_eq!(evs.len(), 6);
+                assert_eq!(
+                    evs[1].get("name").and_then(|n| n.as_str()),
+                    Some("visit")
+                );
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+}

@@ -19,6 +19,7 @@ use crate::dispatch::{Disposition, ResponseAction};
 use crate::isa::{Status, SP_WORDS};
 use crate::mem::NodeId;
 use crate::net::{MsgKind, RequestId};
+use crate::obs::{Span, SpanKind, TraceRing};
 use crate::sim::{EventQueue, Ns};
 use crate::switch::Route;
 
@@ -29,6 +30,18 @@ use super::node::{
 use super::request::{Op, OpRun};
 use super::stats::ServeReport;
 use super::Rack;
+
+/// Emit one trace span for `run` into the serve-local ring, stamped
+/// with virtual sim time, advancing the op's causal counter. Untraced
+/// ops pay one bool test. (Timestamps are excluded from conformance
+/// identity — DES spans carry virtual ns, live spans wall ns.)
+#[inline]
+fn emit_run(ring: &mut TraceRing, run: &mut OpRun, t_ns: Ns, kind: SpanKind) {
+    if run.traced {
+        ring.push(Span { op: run.op_index, k: run.trace_k, t_ns, kind });
+        run.trace_k += 1;
+    }
+}
 
 /// DES event kinds.
 pub(crate) enum Ev {
@@ -110,6 +123,9 @@ impl Rack {
         let mut inflight = 0usize;
         let mut done = false;
         let timeout = self.cfg.dispatch.timeout_ns;
+        // serve-local span ring; zero-capacity (no allocation) when
+        // tracing is disabled, parked on the tracer after the run
+        let mut ring = self.tracer.make_ring();
 
         for _ in 0..concurrency {
             scratch.q.push(0, Ev::Issue);
@@ -123,6 +139,10 @@ impl Rack {
                         done = true;
                         continue;
                     };
+                    // admission index consumed even by trapped ops —
+                    // mirrors the live coordinator, so sampled indices
+                    // pick the same ops on both backends
+                    let op_index = issued;
                     issued += 1;
                     // admission-time shape check: a malformed op (e.g.
                     // a repeat stage with out-of-range repeat_while
@@ -134,7 +154,9 @@ impl Rack {
                         continue;
                     }
                     inflight += 1;
-                    let run = OpRun::new(op, now);
+                    let mut run = OpRun::new(op, now);
+                    run.op_index = op_index;
+                    run.traced = self.tracer.sampled(op_index);
                     self.launch_stage(
                         now,
                         run,
@@ -145,12 +167,28 @@ impl Rack {
                         &mut inflight,
                         done,
                         &mut scratch.runs,
+                        &mut ring,
                     );
                 }
                 Ev::AtSwitch { job, from_node } => {
                     let t = now + self.switch.pipeline_ns();
                     match self.switch.route(&job.msg, from_node) {
                         Route::MemNode(n) => {
+                            // node-originated request still Running =>
+                            // an in-network forward (the half-RTT hop
+                            // the live shard takes peer-to-peer)
+                            if from_node {
+                                if let Some(run) =
+                                    scratch.runs.get_mut(&job.msg.id)
+                                {
+                                    emit_run(
+                                        &mut ring,
+                                        run,
+                                        now,
+                                        SpanKind::Forward { to: n as u32 },
+                                    );
+                                }
+                            }
                             let bytes = job.msg.wire_size();
                             if let Some(at) = self.links_node_down
                                 [n as usize]
@@ -191,7 +229,10 @@ impl Rack {
                         }
                     }
                 }
-                Ev::AtNode { node, job } => {
+                Ev::AtNode { node, mut job } => {
+                    // visit accounting baseline: iterations executed at
+                    // this node = iters_done at departure minus this
+                    job.arrival_iters = job.msg.iters_done;
                     let ns = &mut scratch.nodes[node as usize];
                     let t = now + self.lat.accel_net_stack_ns as Ns;
                     if ns.ws_free > 0 {
@@ -248,6 +289,34 @@ impl Rack {
                             }
                         }
                         IterResult::Bounce | IterResult::Fault => {
+                            // the visit ends here (before depart_node
+                            // takes the slot): record it
+                            {
+                                let job = scratch.nodes[node as usize]
+                                    .slots[slot]
+                                    .as_ref()
+                                    .unwrap();
+                                if let Some(run) =
+                                    scratch.runs.get_mut(&job.msg.id)
+                                {
+                                    let iters = job.msg.iters_done
+                                        - job.arrival_iters;
+                                    let dram = iters as u64
+                                        * job.msg
+                                            .program
+                                            .dram_bytes_per_iter();
+                                    emit_run(
+                                        &mut ring,
+                                        run,
+                                        now,
+                                        SpanKind::Visit {
+                                            shard: node as u32,
+                                            iters,
+                                            dram_bytes: dram,
+                                        },
+                                    );
+                                }
+                            }
                             depart_node(
                                 &mut scratch.q,
                                 &self.lat,
@@ -296,6 +365,34 @@ impl Rack {
                             );
                         }
                         _ => {
+                            // traversal finished on this node: close
+                            // out the visit before the slot departs
+                            {
+                                let job = scratch.nodes[node as usize]
+                                    .slots[slot]
+                                    .as_ref()
+                                    .unwrap();
+                                if let Some(run) =
+                                    scratch.runs.get_mut(&job.msg.id)
+                                {
+                                    let iters = job.msg.iters_done
+                                        - job.arrival_iters;
+                                    let dram = iters as u64
+                                        * job.msg
+                                            .program
+                                            .dram_bytes_per_iter();
+                                    emit_run(
+                                        &mut ring,
+                                        run,
+                                        now,
+                                        SpanKind::Visit {
+                                            shard: node as u32,
+                                            iters,
+                                            dram_bytes: dram,
+                                        },
+                                    );
+                                }
+                            }
                             depart_node(
                                 &mut scratch.q,
                                 &self.lat,
@@ -320,6 +417,7 @@ impl Rack {
                         {
                             run.cross_ns +=
                                 2 * self.lat.host_net_stack_ns as Ns;
+                            emit_run(&mut ring, run, now, SpanKind::Bounce);
                         }
                         job.msg.kind = MsgKind::Request;
                         let t = now + self.lat.host_net_stack_ns as Ns;
@@ -362,15 +460,34 @@ impl Rack {
                                 &mut inflight,
                                 done,
                                 &mut scratch.runs,
+                                &mut ring,
                             );
                         }
                         ResponseAction::Continue(msg) => {
-                            // yielded traversal: fresh budget, re-send
+                            // yielded traversal: fresh budget, re-send.
+                            // `msg.max_iters` is the re-granted total
+                            // (the dispatch engine already boosted it),
+                            // same payload the live coordinator records.
+                            if let Some(run) =
+                                scratch.runs.get_mut(&msg.id)
+                            {
+                                emit_run(
+                                    &mut ring,
+                                    run,
+                                    now,
+                                    SpanKind::Boost {
+                                        grant: msg.max_iters,
+                                    },
+                                );
+                            }
                             let t =
                                 now + self.lat.host_net_stack_ns as Ns;
                             let bytes = msg.wire_size();
-                            let job =
-                                Box::new(NodeJob { msg, steps: 0 });
+                            let job = Box::new(NodeJob {
+                                msg,
+                                steps: 0,
+                                arrival_iters: 0,
+                            });
                             if let Some(at) =
                                 self.link_cpu_up.send(t, bytes)
                             {
@@ -388,7 +505,11 @@ impl Rack {
                 Ev::TimeoutScan => {
                     for msg in self.dispatch.collect_retransmits(now) {
                         report.retransmits += 1;
-                        let job = Box::new(NodeJob { msg, steps: 0 });
+                        let job = Box::new(NodeJob {
+                            msg,
+                            steps: 0,
+                            arrival_iters: 0,
+                        });
                         let bytes = job.msg.wire_size();
                         if let Some(t) = self.link_cpu_up.send(now, bytes)
                         {
@@ -415,6 +536,7 @@ impl Rack {
                 / (report.makespan_ns as f64 / 1e9);
         }
         report.wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
+        self.tracer.park(ring);
         self.scratch = scratch;
         self.totals.merge(&report);
         report
@@ -434,13 +556,16 @@ impl Rack {
         inflight: &mut usize,
         done: bool,
         runs: &mut HashMap<RequestId, OpRun>,
+        ring: &mut TraceRing,
     ) {
         let stage = &run.op.stages[run.stage_idx];
         let (start, sp) = stage.resolve(&prev_sp, repeat_from);
         if start == 0 {
             // degenerate stage (e.g. empty structure): skip forward
+            // (no Dispatch span — nothing was dispatched; the live
+            // coordinator skips it identically)
             self.advance_op(
-                now, run, sp, false, q, report, inflight, done, runs,
+                now, run, sp, false, q, report, inflight, done, runs, ring,
             );
             return;
         }
@@ -462,6 +587,7 @@ impl Rack {
                     inflight,
                     done,
                     runs,
+                    ring,
                 );
             }
             Disposition::RunOnCpu => {
@@ -486,13 +612,24 @@ impl Rack {
                     inflight,
                     done,
                     runs,
+                    ring,
                 );
             }
             Disposition::Offload(msg) => {
+                emit_run(
+                    ring,
+                    &mut run,
+                    now,
+                    SpanKind::Dispatch { stage: run.stage_idx as u32 },
+                );
                 let id = msg.id;
                 runs.insert(id, run);
                 let bytes = msg.wire_size();
-                let job = Box::new(NodeJob { msg, steps: 0 });
+                let job = Box::new(NodeJob {
+                    msg,
+                    steps: 0,
+                    arrival_iters: 0,
+                });
                 if let Some(t) = self.link_cpu_up.send(now, bytes) {
                     q.push(t, Ev::AtSwitch { job, from_node: false });
                 }
@@ -519,12 +656,13 @@ impl Rack {
         inflight: &mut usize,
         done: bool,
         runs: &mut HashMap<RequestId, OpRun>,
+        ring: &mut TraceRing,
     ) {
         let stage = &run.op.stages[run.stage_idx];
         if !trapped && stage.wants_repeat(&sp) {
             let t = now + self.lat.host_net_stack_ns as Ns;
             self.launch_stage(
-                t, run, sp, Some(sp), q, report, inflight, done, runs,
+                t, run, sp, Some(sp), q, report, inflight, done, runs, ring,
             );
             return;
         }
@@ -532,11 +670,12 @@ impl Rack {
             run.stage_idx += 1;
             let t = now + self.lat.host_net_stack_ns as Ns;
             self.launch_stage(
-                t, run, sp, None, q, report, inflight, done, runs,
+                t, run, sp, None, q, report, inflight, done, runs, ring,
             );
             return;
         }
         // op complete
+        emit_run(ring, &mut run, now, SpanKind::Finish { trapped });
         let fin = now + run.op.cpu_post_ns;
         report.completed += 1;
         report.latency.record((fin - run.born).max(1));

@@ -39,6 +39,9 @@ use crate::interp::{logic_pass, Workspace};
 use crate::isa::{Status, NREG, SP_WORDS};
 use crate::mem::{GAddr, NodeId, RackAllocator, RangeTable, Region};
 use crate::net::{Link, TraversalMsg};
+use crate::obs::{
+    OpTrace, SpanKind, Trace, TraceConfig, Tracer, TracerStats,
+};
 use crate::sim::LatencyModel;
 use crate::switch::{Route, Switch};
 
@@ -102,6 +105,9 @@ pub struct Rack {
     cpu_buf: Vec<i64>,
     /// Cumulative metrics across all serve runs (backend accounting).
     pub(crate) totals: ServeReport,
+    /// Sampled traversal tracer (disabled by default; see `obs/`).
+    /// DES serves emit spans stamped with virtual sim time.
+    pub(crate) tracer: Tracer,
 }
 
 impl Rack {
@@ -147,12 +153,31 @@ impl Rack {
             des_ws: Workspace::new(),
             cpu_buf: Vec::new(),
             totals: ServeReport::default(),
+            tracer: Tracer::disabled(),
         }
     }
 
     /// Cumulative metrics over every serve run on this rack.
     pub fn cumulative(&self) -> &ServeReport {
         &self.totals
+    }
+
+    /// Enable sampled tracing for subsequent serves (see `obs/`). DES
+    /// spans are stamped with virtual sim nanoseconds; the span
+    /// *sequence* is executor-independent (the conformance contract).
+    pub fn enable_trace(&mut self, cfg: TraceConfig) {
+        self.tracer = Tracer::new(cfg);
+    }
+
+    /// Tracer overhead counters (all zero while tracing is disabled —
+    /// the zero-cost contract pinned in `tests/conformance.rs`).
+    pub fn tracer_stats(&self) -> TracerStats {
+        self.tracer.stats()
+    }
+
+    /// Drain spans recorded since the last drain, in causal order.
+    pub fn take_trace(&mut self) -> Trace {
+        self.tracer.drain()
     }
 
     /// Aggregate link-layer counters across every segment (CPU up/down
@@ -298,7 +323,31 @@ impl Rack {
             sp,
             if budget != 0 { budget } else { grant },
         );
-        self.drive_offloaded(msg, max_boosts)
+        self.drive_offloaded(msg, max_boosts, None)
+    }
+
+    /// [`Rack::traverse_offloaded`] with span emission into a caller-
+    /// owned [`OpTrace`] (the wire tier's inline executor; `tracer`
+    /// supplies the timestamps). Emits `visit`/`forward`/`bounce`/
+    /// `boost` hops; the caller brackets with `dispatch` and `finish`.
+    pub fn traverse_offloaded_traced(
+        &mut self,
+        iter: &CompiledIter,
+        start: GAddr,
+        sp: [i64; SP_WORDS],
+        budget: u32,
+        max_boosts: u32,
+        trace: Option<(&mut OpTrace<'_>, &Tracer)>,
+    ) -> TraverseOutcome {
+        let grant = self.cfg.dispatch.max_iters;
+        let msg = TraversalMsg::request(
+            crate::net::RequestId { cpu_node: 0, seq: 0 },
+            std::sync::Arc::clone(&iter.program),
+            start,
+            sp,
+            if budget != 0 { budget } else { grant },
+        );
+        self.drive_offloaded(msg, max_boosts, trace)
     }
 
     /// Drive one offloaded message to its terminal status: route at
@@ -312,20 +361,53 @@ impl Rack {
         &mut self,
         mut msg: TraversalMsg,
         max_boosts: u32,
+        mut trace: Option<(&mut OpTrace<'_>, &Tracer)>,
     ) -> TraverseOutcome {
         let mut budget_boosts = 0;
         let mut from_node = false;
+        let in_network = self.cfg.in_network_routing;
+        // a non-local hop's forward span is emitted after the *next*
+        // route resolves, so it can name the receiving shard
+        let mut pending_forward = false;
         let status = loop {
             let node = match self.switch.route(&msg, from_node) {
                 Route::MemNode(n) => n,
                 Route::Invalid(_) => break Status::Trap,
                 Route::CpuNode(_) => unreachable!(),
             };
+            if pending_forward {
+                pending_forward = false;
+                if let Some((ot, tr)) = trace.as_mut() {
+                    ot.push(
+                        tr.now_ns(),
+                        SpanKind::Forward { to: node as u32 },
+                    );
+                }
+            }
             let out = self.memnodes[node as usize].visit(&mut msg);
+            if let Some((ot, tr)) = trace.as_mut() {
+                let dram = out.iters as u64
+                    * msg.program.dram_bytes_per_iter();
+                ot.push(
+                    tr.now_ns(),
+                    SpanKind::Visit {
+                        shard: node as u32,
+                        iters: out.iters,
+                        dram_bytes: dram,
+                    },
+                );
+            }
             match out.end {
                 VisitEnd::Done(st) => break st,
                 VisitEnd::NotLocal => {
                     from_node = true;
+                    if in_network {
+                        pending_forward = true;
+                    } else if let Some((ot, tr)) = trace.as_mut() {
+                        // PULSE-ACC: the hop goes back through the
+                        // dispatcher, same as the live engine's bounce
+                        ot.push(tr.now_ns(), SpanKind::Bounce);
+                    }
                     continue;
                 }
                 VisitEnd::Yield => {
@@ -334,6 +416,13 @@ impl Rack {
                         break Status::Trap;
                     }
                     msg.max_iters += self.cfg.dispatch.max_iters;
+                    if let Some((ot, tr)) = trace.as_mut() {
+                        // grant = the new total budget after the boost
+                        ot.push(
+                            tr.now_ns(),
+                            SpanKind::Boost { grant: msg.max_iters },
+                        );
+                    }
                 }
             }
         };
@@ -387,7 +476,7 @@ impl Rack {
                 }
             }
             Disposition::Offload(msg) => {
-                self.drive_offloaded(msg, max_boosts)
+                self.drive_offloaded(msg, max_boosts, None)
             }
         }
     }

@@ -19,6 +19,10 @@ pub(crate) struct NodeJob {
     pub msg: TraversalMsg,
     /// dynamic steps of the pass executed at MemDone (for LogicDone).
     pub steps: u32,
+    /// `iters_done` when the job arrived at its current node; the
+    /// departure-time delta is the visit's iteration count (what the
+    /// tracer records as one `Visit` span).
+    pub arrival_iters: u32,
 }
 
 /// Outcome of one functional iteration at a node.

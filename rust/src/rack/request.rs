@@ -195,6 +195,13 @@ pub(crate) struct OpRun {
     pub cross_ns: Ns,
     pub crossings_total: u32,
     pub iters_total: u32,
+    /// Admission index (trace identity; mirrors the live coordinator's
+    /// slot `op_index` so DES and live traces align span-for-span).
+    pub op_index: u64,
+    /// Causal span counter: next span emitted for this op uses this k.
+    pub trace_k: u32,
+    /// Whether this op was sampled for tracing.
+    pub traced: bool,
 }
 
 impl OpRun {
@@ -206,6 +213,9 @@ impl OpRun {
             cross_ns: 0,
             crossings_total: 0,
             iters_total: 0,
+            op_index: 0,
+            trace_k: 0,
+            traced: false,
         }
     }
 }

@@ -182,6 +182,49 @@ impl WireClient {
     }
 }
 
+/// Poll a live server's metrics registry: one connection, one STATS
+/// frame, one STATS_OK back. Returns the parsed snapshot object (flat
+/// map of metric name → number). Frames that are not the answer to our
+/// sequence number (there should be none on a dedicated connection,
+/// but the protocol does not forbid them) are skipped.
+pub fn fetch_stats<A: std::net::ToSocketAddrs>(
+    addr: A,
+) -> io::Result<Json> {
+    let mut client = WireClient::connect(addr)?;
+    let seq = client.next_seq();
+    client.send(seq, &Frame::Stats)?;
+    loop {
+        match client.recv()? {
+            Some(Envelope {
+                seq: got,
+                frame: Frame::StatsOk { body },
+            }) if got == seq => {
+                return Json::parse(&body).map_err(|e| {
+                    io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("stats snapshot is not valid json: {e}"),
+                    )
+                });
+            }
+            Some(Envelope {
+                frame: Frame::Error { code, msg }, ..
+            }) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("stats rejected ({code:?}): {msg}"),
+                ));
+            }
+            Some(_) => continue,
+            None => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "server closed before answering STATS",
+                ));
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // OpDriver: client-side stage chaining.
 // ---------------------------------------------------------------------

@@ -2,15 +2,18 @@
 //! across the accept loop, every reader/writer thread, and the CLI.
 //!
 //! All counters are relaxed atomics (they are metrics, not
-//! synchronization — same discipline as `live::queue`); the end-to-end
-//! latency histogram (frame decoded → response written, the
-//! server-side slice of what the client observes) sits behind a mutex
-//! touched once per response.
+//! synchronization — same discipline as `live::queue`), including the
+//! end-to-end latency histogram (frame decoded → response written, the
+//! server-side slice of what the client observes): it used to sit
+//! behind a global `Mutex` taken once per response, which serialized
+//! every writer thread through one lock on the hot path — it is now an
+//! [`obs::AtomicHist`](crate::obs::AtomicHist) (same bucket layout,
+//! relaxed per-slot atomics).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 
-use crate::util::hist::Histogram;
+use crate::obs::{AtomicHist, MetricsRegistry};
 use crate::util::json::Json;
 
 #[derive(Debug, Default)]
@@ -31,7 +34,7 @@ pub struct SrvMetrics {
     /// Connections dropped because the client stopped draining its
     /// responses (writer backlog cap exceeded).
     backlog_drops: AtomicU64,
-    e2e: Mutex<Histogram>,
+    e2e: AtomicHist,
 }
 
 macro_rules! bump {
@@ -71,14 +74,49 @@ impl SrvMetrics {
         self.conns_active.fetch_sub(1, Ordering::Relaxed);
     }
 
-    /// One RESPONSE written, with its decode→write latency.
+    /// One RESPONSE written, with its decode→write latency. Lock-free:
+    /// a handful of relaxed RMWs, no cross-thread serialization.
     pub fn response(&self, e2e_ns: u64) {
         self.responses.fetch_add(1, Ordering::Relaxed);
-        self.e2e.lock().unwrap().record(e2e_ns.max(1));
+        self.e2e.record(e2e_ns.max(1));
+    }
+
+    /// Register every counter as a named gauge (plus the e2e p99) in
+    /// `reg`, so the serving tier shows up in registry snapshots —
+    /// STATS frames, the periodic sampler — without changing any hot
+    /// path: the gauges read the same relaxed atomics on demand.
+    pub fn register_into(self: &Arc<Self>, reg: &MetricsRegistry) {
+        macro_rules! gauge {
+            ($($name:literal => $field:ident),* $(,)?) => {
+                $(
+                    let m = Arc::clone(self);
+                    reg.gauge_fn(concat!("srv.", $name), move || {
+                        m.$field.load(Ordering::Relaxed) as f64
+                    });
+                )*
+            };
+        }
+        gauge!(
+            "conns_accepted" => conns_accepted,
+            "conns_active" => conns_active,
+            "frames_in" => frames_in,
+            "frames_out" => frames_out,
+            "requests" => requests,
+            "responses" => responses,
+            "busy" => busy,
+            "errors_sent" => errors_sent,
+            "decode_errors" => decode_errors,
+            "programs_registered" => programs_registered,
+            "backlog_drops" => backlog_drops,
+        );
+        let m = Arc::clone(self);
+        reg.gauge_fn("srv.e2e_p99_ns", move || {
+            m.e2e.snapshot().p99() as f64
+        });
     }
 
     pub fn snapshot(&self) -> SrvSnapshot {
-        let h = self.e2e.lock().unwrap();
+        let h = self.e2e.snapshot();
         SrvSnapshot {
             conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
             conns_active: self.conns_active.load(Ordering::Relaxed),
@@ -196,5 +234,42 @@ mod tests {
         // renders without panicking
         let _ = s.summary();
         let _ = s.to_json().render();
+    }
+
+    #[test]
+    fn responses_record_concurrently_without_a_lock() {
+        let m = Arc::new(SrvMetrics::default());
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for i in 0..2_000u64 {
+                        m.response(t * 10_000 + i + 1);
+                    }
+                });
+            }
+        });
+        let s = m.snapshot();
+        assert_eq!(s.responses, 8_000);
+        assert!(s.e2e_p99_ns > 0);
+    }
+
+    #[test]
+    fn registers_gauges_into_a_registry() {
+        let m = Arc::new(SrvMetrics::default());
+        let reg = MetricsRegistry::new();
+        m.register_into(&reg);
+        m.request();
+        m.request();
+        m.response(1_000);
+        m.busy();
+        let snap = reg.snapshot();
+        let get = |k: &str| {
+            snap.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0)
+        };
+        assert_eq!(get("srv.requests"), 2.0);
+        assert_eq!(get("srv.responses"), 1.0);
+        assert_eq!(get("srv.busy"), 1.0);
+        assert!(get("srv.e2e_p99_ns") >= 1.0);
     }
 }

@@ -38,7 +38,9 @@ pub mod loadgen;
 pub mod metrics;
 pub mod wire;
 
-pub use self::loadgen::{run_loadgen, LoadReport, LoadgenConfig};
+pub use self::loadgen::{
+    fetch_stats, run_loadgen, LoadReport, LoadgenConfig,
+};
 pub use self::metrics::{SrvMetrics, SrvSnapshot};
 
 use std::collections::HashMap;
@@ -55,6 +57,7 @@ use crate::live::engine::{
     Completion, CompletionCode, Engine, EngineConfig, EngineHandle,
     EngineReport, Submission, SubmitError,
 };
+use crate::obs::{MetricsRegistry, SnapshotSampler, TraceConfig};
 
 use self::wire::{
     decode_payload, encode_frame_into, read_frame_into, ErrCode, Frame,
@@ -90,6 +93,12 @@ pub struct SrvConfig {
     /// Exit (drain + return) after this many seconds; 0 = run until
     /// [`ServerHandle::shutdown`].
     pub run_secs: f64,
+    /// Periodic registry-snapshot interval for the JSONL sampler
+    /// (needs [`Server::set_stats_out`]); 0 = sampler off.
+    pub stats_interval_s: f64,
+    /// Sampled traversal tracing for the engine (`None` = off; the
+    /// drained trace rides back on [`EngineReport::trace`]).
+    pub trace: Option<TraceConfig>,
 }
 
 impl Default for SrvConfig {
@@ -104,6 +113,8 @@ impl Default for SrvConfig {
             max_programs: 256,
             read_timeout_secs: 30,
             run_secs: 0.0,
+            stats_interval_s: 0.0,
+            trace: None,
         }
     }
 }
@@ -156,6 +167,9 @@ pub struct Server {
     cfg: SrvConfig,
     stop: Arc<AtomicBool>,
     metrics: Arc<SrvMetrics>,
+    /// JSONL file the periodic snapshot sampler appends to (needs
+    /// `cfg.stats_interval_s > 0`).
+    stats_out: Option<std::path::PathBuf>,
 }
 
 impl Server {
@@ -175,7 +189,16 @@ impl Server {
             stop: Arc::clone(&stop),
             metrics: Arc::clone(&metrics),
         };
-        Ok((Server { backend, listener, cfg, stop, metrics }, handle))
+        Ok((
+            Server { backend, listener, cfg, stop, metrics, stats_out: None },
+            handle,
+        ))
+    }
+
+    /// Enable the periodic time-series sampler: one JSONL row of the
+    /// metrics registry every `cfg.stats_interval_s` seconds.
+    pub fn set_stats_out(&mut self, path: std::path::PathBuf) {
+        self.stats_out = Some(path);
     }
 
     /// Serve until shutdown (handle, `run_secs`, or listener failure),
@@ -187,13 +210,30 @@ impl Server {
         // the functional substrate and serves inline (their *modeled*
         // time is meaningless over a real socket — wall clock rules)
         let sharded = self.backend.serves_sharded();
-        let (engine, ehandle) = Engine::new(EngineConfig {
+        let (mut engine, ehandle) = Engine::new(EngineConfig {
             window: cfg.window,
             inbox_capacity: cfg.inbox_capacity,
             pending_cap: cfg.pending_cap,
             max_boosts: cfg.max_boosts,
             sharded,
+            trace: cfg.trace,
         });
+        // one registry for the whole run: serving-tier counters and
+        // engine queue gauges snapshot together (STATS frames, the
+        // periodic sampler, ServerHandle observers)
+        let registry = Arc::new(MetricsRegistry::new());
+        self.metrics.register_into(&registry);
+        engine.set_registry(Arc::clone(&registry));
+        let sampler = match (&self.stats_out, cfg.stats_interval_s > 0.0)
+        {
+            (Some(path), true) => SnapshotSampler::start(
+                Arc::clone(&registry),
+                path.clone(),
+                Duration::from_secs_f64(cfg.stats_interval_s),
+            )
+            .ok(),
+            _ => None,
+        };
         let name = self.backend.name();
         let rack = self.backend.rack_mut();
         let metrics = Arc::clone(&self.metrics);
@@ -233,6 +273,7 @@ impl Server {
                             stream,
                             ehandle.clone(),
                             Arc::clone(&metrics),
+                            Arc::clone(&registry),
                             cfg,
                         ) {
                             conns.push(pair);
@@ -274,6 +315,9 @@ impl Server {
             report
         });
 
+        if let Some(s) = sampler {
+            s.stop(); // writes its final row before we report
+        }
         let wall = wall_start.elapsed();
         engine_report.report.wall_ms = wall.as_secs_f64() * 1e3;
         engine_report.report.makespan_ns = wall.as_nanos() as u64;
@@ -310,6 +354,7 @@ fn spawn_connection(
     stream: TcpStream,
     engine: EngineHandle,
     metrics: Arc<SrvMetrics>,
+    registry: Arc<MetricsRegistry>,
     cfg: SrvConfig,
 ) -> std::io::Result<(JoinHandle<()>, TcpStream)> {
     let _ = stream.set_nodelay(true);
@@ -337,7 +382,7 @@ fn spawn_connection(
         writer_loop(wstream, wrx, wmetrics, wbacklog)
     });
     let h = std::thread::spawn(move || {
-        reader_loop(stream, engine, wtx, &metrics, backlog, cfg);
+        reader_loop(stream, engine, wtx, &metrics, &registry, backlog, cfg);
         // reader done: drop our sender; writer exits once in-flight
         // completions (whose closures hold the other clones) land
         let _ = writer.join();
@@ -441,6 +486,7 @@ fn reader_loop(
     engine: EngineHandle,
     wtx: mpsc::Sender<WriterMsg>,
     metrics: &SrvMetrics,
+    registry: &MetricsRegistry,
     backlog: Arc<AtomicU64>,
     cfg: SrvConfig,
 ) {
@@ -569,11 +615,23 @@ fn reader_loop(
                     }
                 }
             }
+            Frame::Stats => {
+                // registry snapshot as one JSON object; the body is
+                // opaque to the wire layer, so new metrics are not a
+                // protocol change
+                ctrl(
+                    env.seq,
+                    Frame::StatsOk {
+                        body: registry.snapshot().render(),
+                    },
+                );
+            }
             // a server never expects client-bound kinds
             Frame::RegisterOk { .. }
             | Frame::Response { .. }
             | Frame::Busy
-            | Frame::Error { .. } => {
+            | Frame::Error { .. }
+            | Frame::StatsOk { .. } => {
                 err(
                     env.seq,
                     ErrCode::UnexpectedKind,

@@ -20,7 +20,15 @@
 //! RESPONSE     status:u8 pad:u8x3 crossings:u32 iters:u64 sp[32]:i64
 //! BUSY         (empty)
 //! ERROR        code:u8 pad:u8 msg_len:u16 msg[msg_len]      utf-8
+//! STATS        (empty)
+//! STATS_OK     body_len:u32 body[body_len]                  utf-8 JSON
 //! ```
+//!
+//! STATS polls the server's metrics registry: the reply body is one
+//! JSON object (`obs::MetricsRegistry::snapshot`), so `pulse stats
+//! --addr` and the load generator can watch a live server without a
+//! side channel. The body is opaque at the wire layer — adding a
+//! metric is not a protocol change.
 //!
 //! This is `net::TraversalMsg`'s request format (paper §5: `{request
 //! id, program, cur_ptr, scratch_pad, budget}`) with one deliberate
@@ -56,6 +64,8 @@ const KIND_REQUEST: u8 = 3;
 const KIND_RESPONSE: u8 = 4;
 const KIND_BUSY: u8 = 5;
 const KIND_ERROR: u8 = 6;
+const KIND_STATS: u8 = 7;
+const KIND_STATS_OK: u8 = 8;
 
 /// Machine-readable cause carried by an ERROR frame.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -113,6 +123,10 @@ pub enum Frame {
     },
     Busy,
     Error { code: ErrCode, msg: String },
+    /// Poll the server's metrics registry.
+    Stats,
+    /// Registry snapshot: one JSON object, rendered by `util::json`.
+    StatsOk { body: String },
 }
 
 /// A frame plus its connection-local sequence number.
@@ -199,6 +213,8 @@ fn kind_byte(f: &Frame) -> u8 {
         Frame::Response { .. } => KIND_RESPONSE,
         Frame::Busy => KIND_BUSY,
         Frame::Error { .. } => KIND_ERROR,
+        Frame::Stats => KIND_STATS,
+        Frame::StatsOk { .. } => KIND_STATS_OK,
     }
 }
 
@@ -260,6 +276,12 @@ pub fn encode_frame_into(seq: u64, frame: &Frame, out: &mut Vec<u8>) {
             p.push(0);
             p.extend_from_slice(&(n as u16).to_le_bytes());
             p.extend_from_slice(&bytes[..n]);
+        }
+        Frame::Stats => {}
+        Frame::StatsOk { body } => {
+            let bytes = body.as_bytes();
+            p.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            p.extend_from_slice(bytes);
         }
     }
     let crc = crc32(&p[base + 4..]);
@@ -383,6 +405,27 @@ pub fn decode_payload(p: &[u8]) -> Result<Envelope, WireError> {
             }
             let msg = String::from_utf8_lossy(&body[4..]).into_owned();
             Frame::Error { code: ErrCode::from_u8(body[0]), msg }
+        }
+        KIND_STATS => {
+            if !body.is_empty() {
+                return bad("stats carries no body");
+            }
+            Frame::Stats
+        }
+        KIND_STATS_OK => {
+            if body.len() < 4 {
+                return bad("stats-ok body too short");
+            }
+            let n = le_u32(body) as usize;
+            if body.len() != 4 + n {
+                return bad("stats-ok body length");
+            }
+            // the snapshot is machine-parsed JSON: invalid UTF-8 is a
+            // hard reject, not a lossy substitution
+            let Ok(s) = std::str::from_utf8(&body[4..]) else {
+                return bad("stats-ok body not utf-8");
+            };
+            Frame::StatsOk { body: s.to_owned() }
         }
         other => return fail(seq, WireErrorKind::UnknownKind(other)),
     };
@@ -530,6 +573,13 @@ mod tests {
                     msg: "no such program".into(),
                 },
             ),
+            (4, Frame::Stats),
+            (
+                4,
+                Frame::StatsOk {
+                    body: "{\"counters\":{\"srv.requests\":12}}".into(),
+                },
+            ),
         ]
     }
 
@@ -641,6 +691,50 @@ mod tests {
         assert!(matches!(
             decode_payload(&p).unwrap_err().kind,
             WireErrorKind::BadBody(_)
+        ));
+    }
+
+    /// STATS codec edges: the empty-body and length-prefix invariants,
+    /// and the hard UTF-8 rejection (the snapshot body is parsed as
+    /// JSON downstream — a lossy substitution would corrupt it
+    /// silently). Round-trip + the flip-a-byte sweep already cover the
+    /// happy path via `sample_frames`.
+    #[test]
+    fn stats_frames_reject_malformed_bodies() {
+        let restamp = |p: &mut [u8]| {
+            let body_end = p.len() - CRC_BYTES;
+            let crc = crc32(&p[..body_end]).to_le_bytes();
+            p[body_end..].copy_from_slice(&crc);
+        };
+        // STATS with a stray body byte
+        let wire = encode_frame(9, &Frame::Stats);
+        let mut p = wire[4..].to_vec();
+        let crc_at = p.len() - CRC_BYTES;
+        p.insert(crc_at, 0x01);
+        restamp(&mut p);
+        assert!(matches!(
+            decode_payload(&p).unwrap_err().kind,
+            WireErrorKind::BadBody(_)
+        ));
+        // STATS_OK whose length prefix disagrees with the body
+        let wire =
+            encode_frame(9, &Frame::StatsOk { body: "{}".into() });
+        let mut p = wire[4..].to_vec();
+        p[HEADER_BYTES] = 1; // claims 1 byte, carries 2
+        restamp(&mut p);
+        assert!(matches!(
+            decode_payload(&p).unwrap_err().kind,
+            WireErrorKind::BadBody(_)
+        ));
+        // STATS_OK carrying invalid UTF-8 (0xFF) with a valid CRC
+        let wire =
+            encode_frame(9, &Frame::StatsOk { body: "ab".into() });
+        let mut p = wire[4..].to_vec();
+        p[HEADER_BYTES + 4] = 0xFF;
+        restamp(&mut p);
+        assert!(matches!(
+            decode_payload(&p).unwrap_err().kind,
+            WireErrorKind::BadBody("stats-ok body not utf-8")
         ));
     }
 

@@ -25,6 +25,10 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Total bucket slots (the layout contract shared with
+    /// `obs::AtomicHist`, which mirrors this layout in atomics).
+    pub const SLOTS: usize = 64 * SUB;
+
     pub fn new() -> Self {
         Self {
             buckets: vec![0; 64 * SUB],
@@ -33,6 +37,26 @@ impl Histogram {
             min: u64::MAX,
             max: 0,
         }
+    }
+
+    /// Bucket slot for value `v` (public for `obs::AtomicHist`).
+    #[inline]
+    pub fn index_of(v: u64) -> usize {
+        Self::index(v)
+    }
+
+    /// Rebuild a histogram from raw layout-compatible parts (the
+    /// `obs::AtomicHist` snapshot path). `buckets.len()` must be
+    /// [`Self::SLOTS`]; an empty histogram must pass `min: u64::MAX`.
+    pub fn from_raw(
+        buckets: Vec<u64>,
+        count: u64,
+        sum: f64,
+        min: u64,
+        max: u64,
+    ) -> Self {
+        assert_eq!(buckets.len(), Self::SLOTS, "bucket layout mismatch");
+        Self { buckets, count, sum, min, max }
     }
 
     #[inline]

@@ -316,6 +316,115 @@ fn mutating_conform_bplustree_leaf_update() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Trace conformance (obs/): a sampled trace is a backend-conformance
+// artifact, not just a debugging aid — the DES and the live engine
+// must narrate the same story hop for hop.
+// ---------------------------------------------------------------------
+
+/// Same seeded op stream, serialized serving (conc 1) on the rack DES
+/// and on the live engine, every op sampled: the drained traces must be
+/// span-for-span identical in `(op, kind)` identity — same dispatches,
+/// same shard visits with the same iteration/DRAM-byte counts, same
+/// forwards/bounces, same boost grants, same finishes. Timestamps are
+/// excluded by construction (the DES stamps virtual ns, the live engine
+/// wall ns). Covered at 1/2/4 shards in both routing modes, on a
+/// co-located family (hash: Dispatch/Visit/Finish only) and a
+/// cross-shard family (skip list: Forward/Bounce traffic too).
+#[test]
+fn trace_identity_conforms_des_vs_live() {
+    let tcfg = pulse::obs::TraceConfig {
+        sample_every: 1,
+        seed: 0x7ACE,
+        ..Default::default()
+    };
+    for kind in [StructureKind::HashMap, StructureKind::SkipListFind] {
+        let plan = random_structure_ops(kind, SEED, 300, 40);
+        for shards in [1usize, 2, 4] {
+            for in_network in [true, false] {
+                let mode =
+                    if in_network { "PULSE" } else { "PULSE-ACC" };
+                let who = format!(
+                    "{}/{shards} shards/{mode}",
+                    kind.name()
+                );
+
+                let mut des = Rack::new(cfg(shards, in_network));
+                let db = BuiltScenario::build(&plan, &mut des);
+                let des_ops = db.ops(&plan);
+                des.enable_trace(tcfg);
+                let rep = des.serve_batch(&des_ops, 1);
+                assert_eq!(
+                    rep.completed,
+                    des_ops.len() as u64,
+                    "{who}: DES lost ops"
+                );
+                let des_trace = des.take_trace();
+
+                let mut live = LiveBackend::new(Rack::new(cfg(
+                    shards, in_network,
+                )));
+                let lb = BuiltScenario::build(&plan, live.rack_mut());
+                let live_ops = lb.ops(&plan);
+                live.enable_trace(tcfg);
+                let rep = live.serve_batch(&live_ops, 1);
+                assert_eq!(
+                    rep.completed,
+                    live_ops.len() as u64,
+                    "{who}: live lost ops"
+                );
+                let live_trace = live.take_trace();
+
+                assert!(
+                    !des_trace.is_empty(),
+                    "{who}: DES trace is empty with sampling on"
+                );
+                assert_eq!(
+                    des_trace.len(),
+                    live_trace.len(),
+                    "{who}: span counts diverged"
+                );
+                assert_eq!(
+                    des_trace.identity(),
+                    live_trace.identity(),
+                    "{who}: traces diverged"
+                );
+            }
+        }
+    }
+}
+
+/// The zero-overhead contract: with the tracer disabled (the default),
+/// serving records nothing, drops nothing, and allocates no rings —
+/// pinned via the tracer's own counters on both executors.
+#[test]
+fn disabled_tracer_records_nothing_and_allocates_no_rings() {
+    let plan =
+        random_structure_ops(StructureKind::SkipListFind, SEED, 200, 30);
+
+    let mut des = Rack::new(cfg(2, true));
+    let db = BuiltScenario::build(&plan, &mut des);
+    let ops = db.ops(&plan);
+    let _ = des.serve_batch(&ops, CONC);
+    assert_eq!(
+        des.tracer_stats(),
+        pulse::obs::TracerStats::default(),
+        "DES: disabled tracer did work"
+    );
+    assert!(des.take_trace().is_empty());
+
+    let mut live = LiveBackend::new(Rack::new(cfg(2, true)));
+    let lb = BuiltScenario::build(&plan, live.rack_mut());
+    let live_ops = lb.ops(&plan);
+    let _ = live.serve_batch(&live_ops, CONC);
+    assert_eq!(
+        live.tracer_stats(),
+        pulse::obs::TracerStats::default(),
+        "live: disabled tracer did work"
+    );
+    assert!(live.take_trace().is_empty());
+}
+
 #[test]
 fn registry_covers_all_sixteen_scenarios() {
     assert_eq!(StructureKind::ALL.len(), 16);

@@ -23,9 +23,10 @@ use pulse::srv::loadgen::WireClient;
 use pulse::srv::wire::{
     crc32, encode_frame, ErrCode, Frame, MIN_PAYLOAD,
 };
+use pulse::bench_support::check_stats_partition;
 use pulse::srv::{
-    run_loadgen, LoadgenConfig, Server, ServerHandle, SrvConfig,
-    SrvSummary,
+    fetch_stats, run_loadgen, LoadgenConfig, Server, ServerHandle,
+    SrvConfig, SrvSummary,
 };
 
 const NODES: usize = 2;
@@ -760,6 +761,81 @@ fn open_loop_pacing_completes_the_stream() {
     }
     handle.shutdown();
     let _ = join.join().unwrap();
+}
+
+#[test]
+fn stats_frame_returns_a_partitioned_registry_snapshot() {
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 1_000,
+        ops: 400,
+        ..ServingSpec::default()
+    };
+    let (handle, join, ops) =
+        start_server("live", &spec, SrvConfig::default());
+    let addr = handle.addr().to_string();
+
+    // a snapshot is servable before any request traffic, and the
+    // engine's queue gauges are already registered
+    let snap0 = fetch_stats(&addr).expect("stats before traffic");
+    assert_eq!(
+        snap0.get("srv.requests").and_then(|v| v.as_f64()),
+        Some(0.0),
+        "fresh server already counted requests"
+    );
+    assert!(
+        snap0.get("engine.inbox.depth").is_some(),
+        "engine gauges missing from the snapshot: {}",
+        snap0.render()
+    );
+
+    let report = run_loadgen(
+        &LoadgenConfig {
+            addr: addr.clone(),
+            conns: 2,
+            depth: 8,
+            ..LoadgenConfig::default()
+        },
+        ops.clone(),
+    )
+    .expect("loadgen");
+    assert_eq!(report.completed as usize, ops.len());
+    assert_eq!(report.busy, 0);
+    assert_eq!(report.errors, 0);
+
+    // the writer thread counts a response batch after flushing it, so
+    // the loadgen can observe its last response a beat before the
+    // counters do — poll briefly instead of flaking on that race
+    let mut last = String::new();
+    let mut ok = false;
+    for _ in 0..100 {
+        let snap = fetch_stats(&addr).expect("stats poll");
+        let requests = snap
+            .get("srv.requests")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(-1.0);
+        match check_stats_partition(&snap) {
+            // mix-c ops are single-stage: one REQUEST each, and the
+            // STATS polls themselves are not requests
+            Ok(()) if requests >= ops.len() as f64 => {
+                ok = true;
+                break;
+            }
+            Ok(()) => {
+                last = format!(
+                    "partitioned but requests={requests} < {}",
+                    ops.len()
+                )
+            }
+            Err(e) => last = e,
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(ok, "stats never partitioned cleanly: {last}");
+
+    handle.shutdown();
+    let summary = join.join().unwrap();
+    assert_eq!(summary.srv.requests, ops.len() as u64);
 }
 
 #[test]
