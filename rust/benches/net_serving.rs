@@ -18,6 +18,13 @@
 //! parallelism win, the wire-level analogue of BENCH_live's scaling
 //! line.
 //!
+//! A second sweep raises the connection count to 256 and 1024 and
+//! runs each size through both serving tiers — the event-loop runtime
+//! (`srv::runtime`, the default) and the legacy
+//! two-threads-per-connection model (`legacy_threads: true`) —
+//! recording old-vs-new ops/s and client p99 side by side. BUSY is
+//! recorded, not asserted zero, at these saturating sizes.
+//!
 //! Output: table + `bench_out/BENCH_net.json`.
 
 use pulse::bench_support::{
@@ -33,6 +40,13 @@ const KEYS: u64 = 20_000;
 const DEPTH: usize = 16;
 const CONNS: [usize; 3] = [1, 4, 8];
 const SHARDS: [usize; 3] = [1, 2, 4];
+
+// high-connection sweep: the event-loop runtime vs the legacy
+// two-threads-per-connection tier at connection counts where thread
+// pairs stop being free
+const HIGH_CONNS: [usize; 2] = [256, 1024];
+const HIGH_OPS: u64 = 8_192;
+const HIGH_DEPTH: usize = 2;
 
 fn spec() -> ServingSpec {
     ServingSpec {
@@ -109,6 +123,91 @@ fn run_config(kind: &str, shards: usize, conns: usize, tbl: &mut Table) -> Json 
     row
 }
 
+/// One old-vs-new round trip at high connection count. Unlike the
+/// sub-saturating sweep, BUSY is *recorded*, not asserted zero — a
+/// thousand closed-loop connections may legitimately brush the window
+/// — but accounting must stay exact and decode-clean.
+fn run_high_conn(legacy: bool, conns: usize, tbl: &mut Table) -> Json {
+    let shards = 2;
+    let cfg = RackConfig::bench(shards, 1 << 20);
+    let mut backend = make_backend("live", cfg.clone());
+    let s = ServingSpec {
+        workload: "mix-c".into(),
+        keys: KEYS,
+        ops: HIGH_OPS,
+        ..ServingSpec::default()
+    };
+    let _ = build_serving_ops(backend.rack_mut(), &s);
+    let (server, handle) = Server::bind(
+        backend,
+        "127.0.0.1:0",
+        SrvConfig {
+            // window sized to the offered in-flight load: the sweep
+            // measures the serving tier, not admission shedding
+            window: (conns * HIGH_DEPTH).max(256),
+            legacy_threads: legacy,
+            ..SrvConfig::default()
+        },
+    )
+    .expect("bind ephemeral loopback port");
+    let join = std::thread::spawn(move || server.run());
+
+    let mut shadow = Rack::new(cfg);
+    let ops = build_serving_ops(&mut shadow, &s);
+    let report = run_loadgen(
+        &LoadgenConfig {
+            addr: handle.addr().to_string(),
+            conns,
+            depth: HIGH_DEPTH,
+            ..LoadgenConfig::default()
+        },
+        ops,
+    )
+    .expect("loadgen run");
+    handle.shutdown();
+    let summary = join.join().expect("server thread");
+
+    let mode = if legacy { "legacy" } else { "evloop" };
+    assert_eq!(
+        report.completed + report.busy,
+        HIGH_OPS,
+        "{mode}/{conns}: op accounting is not a partition"
+    );
+    assert_eq!(report.errors, 0, "{mode}/{conns}: protocol errors");
+    assert_eq!(summary.srv.decode_errors, 0);
+
+    tbl.row(&[
+        format!("live/{mode}"),
+        shards.to_string(),
+        conns.to_string(),
+        format!("{:.0}", report.ops_per_s),
+        fmt_us(report.latency.p50() as f64),
+        fmt_us(report.latency.p95() as f64),
+        fmt_us(report.latency.p99() as f64),
+        format!("{:.0}", summary.srv.e2e_p50_ns as f64 / 1e3),
+        report.busy.to_string(),
+    ]);
+    let mut row = Json::obj();
+    row.set("backend", "live")
+        .set("mode", mode)
+        .set("shards", shards)
+        .set("conns", conns)
+        .set("depth", HIGH_DEPTH)
+        .set("ops", report.completed)
+        .set("ops_per_s", report.ops_per_s)
+        .set("client_p50_ns", report.latency.p50())
+        .set("client_p95_ns", report.latency.p95())
+        .set("client_p99_ns", report.latency.p99())
+        .set("client_mean_ns", report.latency.mean())
+        .set("busy", report.busy)
+        .set("errors", report.errors)
+        .set("serving_ms", summary.serving_ms)
+        .set("drain_ms", summary.drain_ms)
+        .set("server", summary.srv.to_json())
+        .set("engine", summary.engine.run.to_json());
+    row
+}
+
 fn main() -> std::io::Result<()> {
     let mut tbl = Table::new(
         "wire serving over loopback: ops/s + client latency \
@@ -142,7 +241,43 @@ fn main() -> std::io::Result<()> {
         }
     }
 
+    // old-vs-new at ≥1k connections: the event-loop runtime against
+    // the legacy thread-pair tier, same stream, same window
+    let mut high_rows: Vec<Json> = Vec::new();
+    for &conns in &HIGH_CONNS {
+        for legacy in [true, false] {
+            high_rows.push(run_high_conn(legacy, conns, &mut tbl));
+        }
+    }
+
     tbl.print();
+    let pick = |mode: &str, conns: usize, key: &str| {
+        high_rows
+            .iter()
+            .find(|r| {
+                r.get("mode").and_then(Json::as_str) == Some(mode)
+                    && r.get("conns").and_then(Json::as_f64)
+                        == Some(conns as f64)
+            })
+            .and_then(|r| r.get(key).and_then(Json::as_f64))
+            .unwrap_or(0.0)
+    };
+    for &conns in &HIGH_CONNS {
+        let old_tput = pick("legacy", conns, "ops_per_s");
+        let new_tput = pick("evloop", conns, "ops_per_s");
+        let old_p99 = pick("legacy", conns, "client_p99_ns");
+        let new_p99 = pick("evloop", conns, "client_p99_ns");
+        println!(
+            "evloop vs legacy at {conns} conns: {:.2}x ops/s \
+             ({:.0} vs {:.0}), p99 {:.1}us vs {:.1}us",
+            if old_tput > 0.0 { new_tput / old_tput } else { 0.0 },
+            new_tput,
+            old_tput,
+            new_p99 / 1e3,
+            old_p99 / 1e3,
+        );
+    }
+
     let scaling = if live_peak[1] > 0.0 {
         live_peak[4] / live_peak[1]
     } else {
@@ -166,6 +301,7 @@ fn main() -> std::io::Result<()> {
                 .unwrap_or(0),
         )
         .set("rows", rows)
+        .set("high_conn_rows", high_rows)
         .set("live_scaling_1_to_4_shards", scaling);
     save_json("BENCH_net", &j)?;
     Ok(())

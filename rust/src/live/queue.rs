@@ -83,12 +83,22 @@ impl QueueStats {
 
     /// Count a successful push and fold the observed depth into the
     /// high-water mark (two relaxed RMWs + one load, producer line).
+    ///
+    /// The folded depth is clamped to `capacity`: `pushed` is bumped
+    /// *before* `popped` is loaded, and both are relaxed, so under
+    /// producer/consumer contention the `popped` value can be stale by
+    /// however many pops raced in between — which let the unclamped
+    /// difference exceed the true occupancy and even the queue's
+    /// capacity, reporting a physically impossible high-water mark.
+    /// True occupancy never exceeds capacity (the channel is bounded),
+    /// so the clamp only discards the race artifact, never a real
+    /// observation.
     #[inline]
     fn note_push(&self) {
         let pushed = self.pushed.fetch_add(1, Ordering::Relaxed) + 1;
         let popped = self.popped.load(Ordering::Relaxed);
-        self.hwm
-            .fetch_max(pushed.saturating_sub(popped), Ordering::Relaxed);
+        let depth = pushed.saturating_sub(popped).min(self.capacity);
+        self.hwm.fetch_max(depth, Ordering::Relaxed);
     }
 }
 
@@ -274,6 +284,47 @@ mod tests {
         assert_eq!(rx.recv(), Some(1));
         assert_eq!(rx.recv(), Some(2));
         assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn hwm_never_exceeds_capacity_under_contention() {
+        // regression for the note_push race: `pushed` is incremented
+        // before `popped` is loaded, so a consumer racing ahead made
+        // the folded depth exceed true occupancy (and capacity). Four
+        // producers against one fast consumer on a tiny queue hit the
+        // stale-popped window constantly; the clamp keeps hwm honest.
+        const CAP: usize = 4;
+        let (tx, rx) = bounded::<u64>(CAP);
+        let stats = rx.stats_handle();
+        let total = std::sync::atomic::AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let tx = tx.clone();
+                s.spawn(move || {
+                    for i in 0..10_000u64 {
+                        tx.send(t * 100_000 + i).unwrap();
+                    }
+                });
+            }
+            drop(tx);
+            let total = &total;
+            s.spawn(move || {
+                while rx.recv().is_some() {
+                    total.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 40_000);
+        let s = stats.snapshot();
+        assert_eq!(s.pushed, 40_000);
+        assert_eq!(s.popped, 40_000);
+        assert!(
+            s.hwm <= CAP as u64,
+            "hwm {} exceeds capacity {CAP}: the stale-popped race \
+             leaked through the clamp",
+            s.hwm
+        );
+        assert!(s.hwm >= 1, "40k sends never observed any occupancy");
     }
 
     #[test]

@@ -67,7 +67,10 @@ fn main() -> CliResult {
                  drain + metrics tables on exit; without it the \
                  process runs until killed — std-only build, no \
                  signal handler, so a kill skips the drain); --conc \
-                 sets the admission window; observability: \
+                 sets the admission window; --io-threads N sizes the \
+                 event-loop worker pool (0 = auto), --legacy-threads \
+                 serves with the old two-threads-per-connection tier; \
+                 observability: \
                  [--trace-out PATH [--trace-sample N] [--trace-seed S]] \
                  [--stats-out PATH --stats-interval-s S]\n\
                  stats: --addr ADDR [--raw] — poll a live server's \
@@ -153,6 +156,10 @@ fn serve_listen(args: &Args, listen: &str) -> CliResult {
             seed: args.u64_or("trace-seed", 42),
             ..Default::default()
         }),
+        // event-loop runtime tuning: worker count (0 = auto), and the
+        // legacy thread-pair tier for A/B comparison
+        io_threads: args.usize_or("io-threads", 0),
+        legacy_threads: args.flag("legacy-threads"),
         ..SrvConfig::default()
     };
     let (mut server, handle) = Server::bind(backend, listen, cfg)?;
@@ -206,6 +213,12 @@ fn serve_listen(args: &Args, listen: &str) -> CliResult {
         b.net_dropped,
     );
     print_live_counters(b);
+    println!(
+        "serving window: {:.2}s, drain: {:.0}ms \
+         (rates are over the serving window only)",
+        summary.serving_ms / 1e3,
+        summary.drain_ms,
+    );
     println!("engine: {}", summary.engine.run.summary());
     Ok(())
 }

@@ -96,6 +96,42 @@ impl WireClient {
         })
     }
 
+    /// [`WireClient::connect`] with bounded retry on the transient
+    /// refusals a connection storm produces: hundreds of simultaneous
+    /// SYNs against a freshly bound listener overflow its accept
+    /// backlog, and the kernel answers RST/refused for connections the
+    /// server would happily serve a few milliseconds later. Retries
+    /// only the storm-shaped errors (refused / reset / timed out /
+    /// ephemeral-port exhaustion) with linear backoff; anything else —
+    /// unroutable address, permission — fails immediately.
+    pub fn connect_retry<A: std::net::ToSocketAddrs>(
+        addr: A,
+        attempts: u32,
+    ) -> io::Result<Self> {
+        let mut tries = 0;
+        loop {
+            match Self::connect(&addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    tries += 1;
+                    let transient = matches!(
+                        e.kind(),
+                        io::ErrorKind::ConnectionRefused
+                            | io::ErrorKind::ConnectionReset
+                            | io::ErrorKind::TimedOut
+                            | io::ErrorKind::AddrNotAvailable
+                    );
+                    if !transient || tries >= attempts.max(1) {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(
+                        (5 * tries as u64).min(100),
+                    ));
+                }
+            }
+        }
+    }
+
     /// Fresh per-connection sequence number.
     pub fn next_seq(&mut self) -> u64 {
         let s = self.next_seq;
@@ -762,7 +798,12 @@ pub fn run_loadgen(
                 // connection's stats: fold its loss into this run's
                 // error count and keep aggregating
                 let res: io::Result<()> = (|| {
-                    let mut client = WireClient::connect(&cfg.addr)?;
+                    // storms of simultaneous connects (the ≥1k-conn
+                    // sweeps) overflow the accept backlog; retry the
+                    // transient refusals instead of reporting a whole
+                    // connection's ops as errors
+                    let mut client =
+                        WireClient::connect_retry(&cfg.addr, 40)?;
                     for (wire_id, program) in plan.iter() {
                         client.register(*wire_id, program)?;
                     }

@@ -20,6 +20,19 @@ use crate::util::json::Json;
 pub struct SrvMetrics {
     conns_accepted: AtomicU64,
     conns_active: AtomicU64,
+    /// Monotonic open/close counters; with `conns_failed` they make
+    /// the connection ledger reconcile exactly:
+    /// `accepted == opened + failed` and `opened == closed + active`.
+    /// (`conns_active` alone cannot distinguish "accepted but never
+    /// set up" from "opened and already closed".)
+    conns_opened: AtomicU64,
+    conns_closed: AtomicU64,
+    /// Accepted connections whose per-connection setup failed (fd
+    /// clone / registration error) before they were ever opened.
+    /// Without this the accept-time bump of `conns_accepted` leaks:
+    /// `conn_opened`/`conn_closed` never fire for the failed socket
+    /// and the ledger silently drifts.
+    conns_failed: AtomicU64,
     frames_in: AtomicU64,
     frames_out: AtomicU64,
     requests: AtomicU64,
@@ -67,11 +80,20 @@ impl SrvMetrics {
     }
 
     pub fn conn_opened(&self) {
+        self.conns_opened.fetch_add(1, Ordering::Relaxed);
         self.conns_active.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn conn_closed(&self) {
+        self.conns_closed.fetch_add(1, Ordering::Relaxed);
         self.conns_active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// An accepted connection whose setup failed before it was opened
+    /// (e.g. `try_clone` on the fd). Keeps the ledger balanced:
+    /// `accepted == opened + failed`.
+    pub fn conn_spawn_failed(&self) {
+        self.conns_failed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One RESPONSE written, with its decode→write latency. Lock-free:
@@ -99,6 +121,9 @@ impl SrvMetrics {
         gauge!(
             "conns_accepted" => conns_accepted,
             "conns_active" => conns_active,
+            "conns_opened" => conns_opened,
+            "conns_closed" => conns_closed,
+            "conns_failed" => conns_failed,
             "frames_in" => frames_in,
             "frames_out" => frames_out,
             "requests" => requests,
@@ -120,6 +145,9 @@ impl SrvMetrics {
         SrvSnapshot {
             conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
             conns_active: self.conns_active.load(Ordering::Relaxed),
+            conns_opened: self.conns_opened.load(Ordering::Relaxed),
+            conns_closed: self.conns_closed.load(Ordering::Relaxed),
+            conns_failed: self.conns_failed.load(Ordering::Relaxed),
             frames_in: self.frames_in.load(Ordering::Relaxed),
             frames_out: self.frames_out.load(Ordering::Relaxed),
             requests: self.requests.load(Ordering::Relaxed),
@@ -144,6 +172,9 @@ impl SrvMetrics {
 pub struct SrvSnapshot {
     pub conns_accepted: u64,
     pub conns_active: u64,
+    pub conns_opened: u64,
+    pub conns_closed: u64,
+    pub conns_failed: u64,
     pub frames_in: u64,
     pub frames_out: u64,
     pub requests: u64,
@@ -163,7 +194,8 @@ impl SrvSnapshot {
     /// Human-readable summary for the CLI metrics table.
     pub fn summary(&self) -> String {
         format!(
-            "conns: accepted={} active={}\n\
+            "conns: accepted={} active={} opened={} closed={} \
+             failed={}\n\
              frames: in={} out={} decode-errors={}\n\
              requests={} responses={} busy={} errors={} \
              backlog-drops={}\n\
@@ -171,6 +203,9 @@ impl SrvSnapshot {
              mean={:.1}us",
             self.conns_accepted,
             self.conns_active,
+            self.conns_opened,
+            self.conns_closed,
+            self.conns_failed,
             self.frames_in,
             self.frames_out,
             self.decode_errors,
@@ -190,6 +225,9 @@ impl SrvSnapshot {
         let mut j = Json::obj();
         j.set("conns_accepted", self.conns_accepted)
             .set("conns_active", self.conns_active)
+            .set("conns_opened", self.conns_opened)
+            .set("conns_closed", self.conns_closed)
+            .set("conns_failed", self.conns_failed)
             .set("frames_in", self.frames_in)
             .set("frames_out", self.frames_out)
             .set("requests", self.requests)
@@ -234,6 +272,56 @@ mod tests {
         // renders without panicking
         let _ = s.summary();
         let _ = s.to_json().render();
+    }
+
+    #[test]
+    fn connection_ledger_reconciles_with_spawn_failures() {
+        // the accept loop bumps conns_accepted before per-connection
+        // setup can still fail; only an explicit failure counter keeps
+        // accepted == opened + failed (and opened == closed + active)
+        // true — the invariant the serving tier's teardown asserts
+        let m = Arc::new(SrvMetrics::default());
+        for _ in 0..5 {
+            m.conn_accepted();
+        }
+        m.conn_opened(); // conn 1: opened, still active
+        m.conn_opened(); // conn 2: opened then closed
+        m.conn_closed();
+        m.conn_spawn_failed(); // conn 3: setup failed post-accept
+        m.conn_opened(); // conn 4: opened then closed
+        m.conn_closed();
+        m.conn_spawn_failed(); // conn 5: setup failed post-accept
+        let s = m.snapshot();
+        assert_eq!(s.conns_accepted, 5);
+        assert_eq!(s.conns_opened, 3);
+        assert_eq!(s.conns_closed, 2);
+        assert_eq!(s.conns_failed, 2);
+        assert_eq!(s.conns_active, 1);
+        assert_eq!(
+            s.conns_accepted,
+            s.conns_opened + s.conns_failed,
+            "accept-side ledger drifted"
+        );
+        assert_eq!(
+            s.conns_opened,
+            s.conns_closed + s.conns_active,
+            "open-side ledger drifted"
+        );
+        // the registry view carries the same ledger
+        let reg = MetricsRegistry::new();
+        m.register_into(&reg);
+        let snap = reg.snapshot();
+        let get = |k: &str| {
+            snap.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0)
+        };
+        assert_eq!(
+            get("srv.conns_accepted"),
+            get("srv.conns_opened") + get("srv.conns_failed"),
+        );
+        assert_eq!(
+            get("srv.conns_opened"),
+            get("srv.conns_closed") + get("srv.conns_active"),
+        );
     }
 
     #[test]

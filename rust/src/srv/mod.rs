@@ -12,16 +12,24 @@
 //! Threading model (see `srv/README.md` for the full diagram):
 //!
 //! * the **accept loop** (the thread that called [`Server::run`])
-//!   polls the listener and spawns two threads per connection;
-//! * each connection's **reader** decodes frames, resolves program
-//!   ids against its connection-local registry, and submits
-//!   traversals to the engine with a non-blocking `try_submit`;
+//!   polls the listener and hands each accepted connection to the
+//!   **event-loop runtime** ([`runtime`]): a small worker pool where
+//!   each worker multiplexes its share of the connections over one
+//!   readiness wait, running a per-connection session state machine
+//!   (reading-prefix / reading-body / executing / writing-backlog);
+//! * sessions decode frames, resolve program ids against their
+//!   connection-local registry, and submit traversals to the engine
+//!   with a non-blocking `try_submit`;
 //! * the **engine** ([`crate::live::engine`]) executes them — sharded
 //!   (one worker per memory node, the live dataplane) when the backend
 //!   is the live engine, inline on a single dispatcher thread for the
-//!   model backends (which all share the same functional substrate);
-//! * each connection's **writer** turns completions and control
-//!   frames into bytes, so responses never block the dispatcher.
+//!   model backends (which all share the same functional substrate) —
+//!   and delivers each completion as a mailbox push plus a coalesced
+//!   one-byte wakeup into the owning worker's event loop;
+//! * the legacy **two-threads-per-connection** path (blocking reader +
+//!   writer) survives behind [`SrvConfig::legacy_threads`] — it is the
+//!   comparison baseline for the `net_serving` bench and the fallback
+//!   on platforms without the unix readiness runtime.
 //!
 //! Backpressure never hangs a connection: a full engine inbox or a
 //! full admission window answers an explicit BUSY frame; a client that
@@ -36,6 +44,8 @@
 
 pub mod loadgen;
 pub mod metrics;
+#[cfg(unix)]
+pub mod runtime;
 pub mod wire;
 
 pub use self::loadgen::{
@@ -99,6 +109,13 @@ pub struct SrvConfig {
     /// Sampled traversal tracing for the engine (`None` = off; the
     /// drained trace rides back on [`EngineReport::trace`]).
     pub trace: Option<TraceConfig>,
+    /// Event-loop worker threads serving connections; 0 = auto
+    /// (`min(4, available_parallelism)`). Ignored on the legacy path.
+    pub io_threads: usize,
+    /// Serve with the legacy two-threads-per-connection model instead
+    /// of the event-loop runtime (the `net_serving` old-vs-new
+    /// baseline; also the forced fallback on non-unix targets).
+    pub legacy_threads: bool,
 }
 
 impl Default for SrvConfig {
@@ -115,6 +132,8 @@ impl Default for SrvConfig {
             run_secs: 0.0,
             stats_interval_s: 0.0,
             trace: None,
+            io_threads: 0,
+            legacy_threads: false,
         }
     }
 }
@@ -131,6 +150,13 @@ pub struct SrvSummary {
     /// engine's serve report with the wire-tier overload counters
     /// filled in — overload is observable, not silent.
     pub backend: BackendMetrics,
+    /// The serving window: bind-to-last-accept-poll wall time. This —
+    /// not the drain — is what `engine.report.wall_ms` and
+    /// `tput_ops_per_s` are computed over, so throughput is not
+    /// diluted by however long shutdown took.
+    pub serving_ms: f64,
+    /// Teardown tail: engine drain + final response flush + close.
+    pub drain_ms: f64,
 }
 
 /// Control half handed back by [`Server::bind`]: lives on any thread,
@@ -242,7 +268,26 @@ impl Server {
         let _ = listener.set_nonblocking(true);
         let wall_start = Instant::now();
 
-        let mut engine_report = std::thread::scope(|s| {
+        // the event-loop runtime serves by default; the legacy
+        // two-threads-per-connection path remains selectable (bench
+        // baseline) and is the forced fallback off-unix or if the
+        // runtime cannot start (socketpair/thread exhaustion)
+        #[cfg(unix)]
+        let mut runtime: Option<runtime::Runtime> =
+            if cfg.legacy_threads {
+                None
+            } else {
+                runtime::Runtime::start(
+                    runtime::resolve_io_threads(cfg.io_threads),
+                    ehandle.clone(),
+                    Arc::clone(&metrics),
+                    Arc::clone(&registry),
+                    cfg,
+                )
+                .ok()
+            };
+
+        let (mut engine_report, serving) = std::thread::scope(|s| {
             let eng = s.spawn(move || engine.run(rack));
             let deadline = (cfg.run_secs > 0.0).then(|| {
                 Instant::now() + Duration::from_secs_f64(cfg.run_secs)
@@ -269,14 +314,27 @@ impl Server {
                     Ok((stream, _peer)) => {
                         accept_failures = 0;
                         metrics.conn_accepted();
-                        if let Ok(pair) = spawn_connection(
+                        #[cfg(unix)]
+                        let stream = match runtime.as_mut() {
+                            Some(rt) => {
+                                rt.adopt(stream);
+                                continue;
+                            }
+                            None => stream,
+                        };
+                        match spawn_connection(
                             stream,
                             ehandle.clone(),
                             Arc::clone(&metrics),
                             Arc::clone(&registry),
                             cfg,
                         ) {
-                            conns.push(pair);
+                            Ok(pair) => conns.push(pair),
+                            // an accepted-then-unservable socket
+                            // (try_clone/fd exhaustion) must still
+                            // land in the ledger, or conns_accepted
+                            // silently drifts from opened+failed
+                            Err(_) => metrics.conn_spawn_failed(),
                         }
                     }
                     Err(e)
@@ -298,35 +356,51 @@ impl Server {
                 }
             }
             drop(listener);
+            // the serving window closes here: everything after is
+            // drain, and must not dilute throughput numbers
+            let serving = wall_start.elapsed();
             // drain: admitted ops complete, late submissions answer
             // shutting-down, then the engine (and its shards) exits
             ehandle.shutdown();
             let report = eng.join().expect("engine thread panicked");
-            // unblock readers parked in recv — read half only, so
-            // writers can still flush completions queued during the
-            // drain; each writer exits once its reader drops the
-            // channel and the remaining frames are on the wire
+            // every completion is now in a worker mailbox (event
+            // loop) or writer channel (legacy): flush them all, then
+            // close — a client that keeps reading sees every
+            // admitted op's response before EOF
+            #[cfg(unix)]
+            if let Some(rt) = runtime.take() {
+                rt.finish();
+            }
+            // legacy teardown: unblock readers parked in recv — read
+            // half only, so writers can still flush completions
+            // queued during the drain; each writer exits once its
+            // reader drops the channel and the remaining frames are
+            // on the wire
             for (_, stream) in &conns {
                 let _ = stream.shutdown(Shutdown::Read);
             }
             for (h, _) in conns {
                 let _ = h.join();
             }
-            report
+            (report, serving)
         });
 
         if let Some(s) = sampler {
             s.stop(); // writes its final row before we report
         }
-        let wall = wall_start.elapsed();
-        engine_report.report.wall_ms = wall.as_secs_f64() * 1e3;
-        engine_report.report.makespan_ns = wall.as_nanos() as u64;
+        let total = wall_start.elapsed();
+        let drain = total.saturating_sub(serving);
+        // rate accounting over the serving window only (satellite of
+        // the runtime change: the old code divided by serve+drain,
+        // understating throughput by however long teardown took)
+        engine_report.report.wall_ms = serving.as_secs_f64() * 1e3;
+        engine_report.report.makespan_ns = serving.as_nanos() as u64;
         if engine_report.report.completed > 0
-            && wall.as_secs_f64() > 0.0
+            && serving.as_secs_f64() > 0.0
         {
             engine_report.report.tput_ops_per_s =
                 engine_report.report.completed as f64
-                    / wall.as_secs_f64();
+                    / serving.as_secs_f64();
         }
         let srv = self.metrics.snapshot();
         let mut backend =
@@ -335,7 +409,13 @@ impl Server {
             self.backend.rack_mut().link_totals().dropped;
         backend.wire_decode_errors = srv.decode_errors;
         backend.wire_busy = srv.busy;
-        SrvSummary { engine: engine_report, srv, backend }
+        SrvSummary {
+            engine: engine_report,
+            srv,
+            backend,
+            serving_ms: serving.as_secs_f64() * 1e3,
+            drain_ms: drain.as_secs_f64() * 1e3,
+        }
     }
 }
 
@@ -461,7 +541,10 @@ fn writer_loop(
     }
 }
 
-fn completion_frame(c: &Completion) -> Frame {
+/// Engine completion → wire frame, shared verbatim by the event-loop
+/// sessions and the legacy writer so both paths answer identical
+/// bytes for identical completions.
+pub(crate) fn completion_frame(c: &Completion) -> Frame {
     match c.code {
         CompletionCode::Done(status) => Frame::Response {
             status,

@@ -1,0 +1,480 @@
+//! `srv::runtime` — the thread-per-core event-loop serving tier.
+//!
+//! The legacy model spends two OS threads per connection (a blocking
+//! reader and a blocking writer); at a thousand connections that is two
+//! thousand stacks and a scheduler full of parked threads. This module
+//! replaces it with a small **worker pool**: each worker owns a slice
+//! of the connections outright and multiplexes them over one readiness
+//! wait ([`Readiness`], `poll(2)` by default). Nothing about the wire
+//! protocol, the counter discipline, or the backpressure edges changes
+//! — `tests/integration_srv.rs` runs against this runtime unmodified.
+//!
+//! Topology per worker:
+//!
+//! ```text
+//!             accept loop                engine dispatcher
+//!                  │ adopt(stream)            │ done(completion)
+//!                  ▼                          ▼
+//!            ┌──────────── WorkerShared ────────────┐
+//!            │  mailbox (mutex): newconns, comps    │
+//!            │  signaled flag + wake socketpair ────┼──┐ one byte,
+//!            └──────────────────────────────────────┘  │ only when
+//!                  ▲                                   │ not already
+//!                  │ drain mailbox                     │ signaled
+//!            ┌─────┴─────── worker thread ◄────────────┘
+//!            │ poll(wake, conn fds) → read/decode/submit, flush
+//!            │ sessions: slab of per-connection state machines
+//!            └───────────────────────────────────────
+//! ```
+//!
+//! **Wakeup protocol.** Producers (the accept loop handing over a
+//! connection, the engine dispatcher delivering a completion) push into
+//! the mailbox, then write one byte to the wake pipe — but only if a
+//! `signaled` flag was clear, so a burst of completions costs one
+//! syscall, not one per completion. The worker drains the pipe, clears
+//! `signaled`, *then* takes the mailbox: anything pushed after the take
+//! finds the flag clear and writes a fresh byte, so no wakeup is ever
+//! lost.
+//!
+//! **Identity.** Sessions are addressed by a `(generation << 32) |
+//! slot` token baked into each submission's completion callback. A
+//! completion for a connection that died while its traversal was in
+//! flight carries a stale token and is dropped — the slot may already
+//! host a new connection, which must never receive a dead client's
+//! response.
+//!
+//! **Drain.** `Server::run` stops accepting, shuts the engine down and
+//! joins it (every completion is delivered into worker mailboxes
+//! first), then calls [`Runtime::finish`]: workers drain their final
+//! mailbox, half-close every session's read side, flush the remaining
+//! write backlogs (the per-session 5 s stall guard bounds a client
+//! that stopped reading), close, and exit. A client that keeps reading
+//! therefore sees every response for every admitted op before EOF —
+//! the same clean-EOF invariant the threaded tier guaranteed.
+
+mod poll;
+pub(crate) mod session;
+
+pub use self::poll::{Interest, PollBackend, Readied, Readiness};
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::live::engine::{Completion, EngineHandle};
+use crate::obs::MetricsRegistry;
+use crate::srv::metrics::SrvMetrics;
+use crate::srv::SrvConfig;
+
+pub(crate) use super::completion_frame;
+
+use self::session::Session;
+
+/// One engine completion routed back to the worker that owns the
+/// originating session.
+pub(crate) struct CompletionMsg {
+    /// Session identity at submit time; stale tokens are dropped.
+    pub(crate) token: u64,
+    /// Request sequence number (echoed in the response frame).
+    pub(crate) seq: u64,
+    /// Decode instant — the e2e latency measurement origin.
+    pub(crate) t0: Instant,
+    pub(crate) c: Completion,
+}
+
+#[derive(Default)]
+struct Mailbox {
+    completions: Vec<CompletionMsg>,
+    newconns: Vec<TcpStream>,
+}
+
+/// The producer-facing half of one worker: mailbox + wakeup.
+pub(crate) struct WorkerShared {
+    inbox: Mutex<Mailbox>,
+    /// True once a wake byte is pending; collapses a burst of pushes
+    /// into a single pipe write.
+    signaled: AtomicBool,
+    finish: AtomicBool,
+    wake_w: UnixStream,
+}
+
+impl WorkerShared {
+    fn wake(&self) {
+        if !self.signaled.swap(true, Ordering::SeqCst) {
+            // nonblocking; a full pipe already guarantees a wakeup
+            let _ = (&self.wake_w).write(&[1u8]);
+        }
+    }
+
+    /// Engine-dispatcher side: deliver a completion. Must stay cheap —
+    /// it runs on the dispatcher's critical path (one mailbox push
+    /// plus, at most, one one-byte write per burst).
+    pub(crate) fn complete(&self, msg: CompletionMsg) {
+        self.inbox.lock().unwrap().completions.push(msg);
+        self.wake();
+    }
+
+    /// Accept-loop side: hand a fresh connection to this worker.
+    fn adopt(&self, stream: TcpStream) {
+        self.inbox.lock().unwrap().newconns.push(stream);
+        self.wake();
+    }
+}
+
+/// Hard ceiling on the finishing flush: even if every remaining client
+/// wedges in a way the per-session stall guard somehow misses, the
+/// worker still exits.
+const FINISH_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Everything a session needs from its surroundings, owned once per
+/// worker (config copy, counter handles, engine endpoint, and the
+/// worker's own mailbox for completion callbacks).
+pub(crate) struct Ctx {
+    pub(crate) cfg: SrvConfig,
+    pub(crate) metrics: Arc<SrvMetrics>,
+    pub(crate) registry: Arc<MetricsRegistry>,
+    pub(crate) engine: EngineHandle,
+    pub(crate) shared: Arc<WorkerShared>,
+}
+
+struct Worker {
+    wake_r: UnixStream,
+    ctx: Ctx,
+    /// Session slab; `gens[slot]` bumps on reuse so stale completion
+    /// tokens miss.
+    sessions: Vec<Option<Session>>,
+    gens: Vec<u32>,
+    free: Vec<usize>,
+    backend: PollBackend,
+    // reused poll-round scratch (clear-don't-free)
+    interests: Vec<Interest>,
+    idx_slots: Vec<usize>,
+    events: Vec<Readied>,
+    comp_scratch: Vec<CompletionMsg>,
+    conn_scratch: Vec<TcpStream>,
+    finishing: bool,
+    finish_deadline: Option<Instant>,
+}
+
+impl Worker {
+    fn new(wake_r: UnixStream, ctx: Ctx) -> Worker {
+        Worker {
+            wake_r,
+            ctx,
+            sessions: Vec::new(),
+            gens: Vec::new(),
+            free: Vec::new(),
+            backend: PollBackend::default(),
+            interests: Vec::new(),
+            idx_slots: Vec::new(),
+            events: Vec::new(),
+            comp_scratch: Vec::new(),
+            conn_scratch: Vec::new(),
+            finishing: false,
+            finish_deadline: None,
+        }
+    }
+
+    fn live_sessions(&self) -> usize {
+        self.sessions.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Pull every pending wake byte off the pipe.
+    fn drain_wake_pipe(&mut self) {
+        let mut buf = [0u8; 256];
+        loop {
+            match (&self.wake_r).read(&mut buf) {
+                Ok(0) => break, // producer side gone: nothing to drain
+                Ok(_) => continue,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    break;
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted =>
+                {
+                    continue;
+                }
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Take the mailbox. Pipe-drain and `signaled` clear happen
+    /// *before* the take: a producer pushing after the take sees the
+    /// flag clear and writes a fresh wake byte, so the missed-wakeup
+    /// window is provably empty.
+    fn take_mailbox(&mut self) {
+        self.drain_wake_pipe();
+        self.ctx.shared.signaled.store(false, Ordering::SeqCst);
+        self.comp_scratch.clear();
+        self.conn_scratch.clear();
+        let mut mb = self.ctx.shared.inbox.lock().unwrap();
+        std::mem::swap(&mut mb.completions, &mut self.comp_scratch);
+        std::mem::swap(&mut mb.newconns, &mut self.conn_scratch);
+    }
+
+    fn adopt_new(&mut self) {
+        while let Some(stream) = self.conn_scratch.pop() {
+            let slot = self.free.pop().unwrap_or_else(|| {
+                self.sessions.push(None);
+                self.gens.push(0);
+                self.sessions.len() - 1
+            });
+            let token =
+                ((self.gens[slot] as u64) << 32) | slot as u64;
+            match Session::new(stream, token) {
+                Ok(sess) => {
+                    // ledger: accepted == opened + failed (the accept
+                    // loop counted conn_accepted before handing over)
+                    self.ctx.metrics.conn_opened();
+                    self.sessions[slot] = Some(sess);
+                }
+                Err(_) => {
+                    self.ctx.metrics.conn_spawn_failed();
+                    self.free.push(slot);
+                }
+            }
+        }
+    }
+
+    fn route_completions(&mut self) {
+        for msg in self.comp_scratch.drain(..) {
+            let slot = (msg.token & 0xffff_ffff) as usize;
+            let live = self
+                .sessions
+                .get(slot)
+                .and_then(|s| s.as_ref())
+                .is_some_and(|s| s.token == msg.token);
+            if live {
+                // stale tokens (connection died mid-traversal, slot
+                // possibly reused) fall through silently — exactly the
+                // legacy writer's behavior when its channel was gone
+                self.sessions[slot]
+                    .as_mut()
+                    .unwrap()
+                    .apply_completion(msg);
+            }
+        }
+    }
+
+    fn flush_pending(&mut self) {
+        let ctx = &self.ctx;
+        for sess in self.sessions.iter_mut().flatten() {
+            if sess.wants_write() {
+                sess.try_flush(ctx);
+            }
+        }
+    }
+
+    fn check_timeouts(&mut self) {
+        let read_timeout =
+            Duration::from_secs(self.ctx.cfg.read_timeout_secs);
+        for sess in self.sessions.iter_mut().flatten() {
+            sess.check_timeouts(read_timeout);
+        }
+    }
+
+    fn reap_closable(&mut self) {
+        for (slot, entry) in self.sessions.iter_mut().enumerate() {
+            if entry.as_ref().is_some_and(|s| s.closable()) {
+                // dropping the session closes the stream; count the
+                // close on the same side that counted the open
+                *entry = None;
+                self.ctx.metrics.conn_closed();
+                self.gens[slot] = self.gens[slot].wrapping_add(1);
+                self.free.push(slot);
+            }
+        }
+    }
+
+    fn build_interests(&mut self) {
+        self.interests.clear();
+        self.idx_slots.clear();
+        self.interests.push(Interest {
+            fd: self.wake_r.as_raw_fd(),
+            readable: true,
+            writable: false,
+        });
+        self.idx_slots.push(usize::MAX);
+        for (slot, sess) in self.sessions.iter().enumerate() {
+            let Some(sess) = sess else { continue };
+            let r = sess.wants_read();
+            let w = sess.wants_write();
+            if r || w {
+                self.interests.push(Interest {
+                    fd: sess.fd,
+                    readable: r,
+                    writable: w,
+                });
+                self.idx_slots.push(slot);
+            }
+            // neither: parked awaiting engine completions only — the
+            // mailbox wakeup covers it, no fd interest needed
+        }
+    }
+
+    fn dispatch_events(&mut self) {
+        let events = std::mem::take(&mut self.events);
+        for ev in &events {
+            if ev.idx == 0 {
+                continue; // wake pipe: drained at the loop top
+            }
+            let slot = self.idx_slots[ev.idx];
+            let Some(sess) = self.sessions[slot].as_mut() else {
+                continue;
+            };
+            if ev.readable || ev.closed {
+                sess.on_readable(&self.ctx);
+            }
+            if ev.writable || ev.closed {
+                // a closed event on the write side surfaces through
+                // the failing flush and marks the session Dead
+                sess.try_flush(&self.ctx);
+            }
+        }
+        self.events = events; // hand the scratch buffer back
+    }
+
+    fn run(mut self) {
+        loop {
+            self.take_mailbox();
+            self.adopt_new();
+            self.route_completions();
+            if self.ctx.shared.finish.load(Ordering::SeqCst)
+                && !self.finishing
+            {
+                self.finishing = true;
+                self.finish_deadline =
+                    Some(Instant::now() + FINISH_DEADLINE);
+            }
+            if self.finishing {
+                // idempotent: only Open sessions transition; anything
+                // adopted in the final mailbox drains and closes too
+                for sess in self.sessions.iter_mut().flatten() {
+                    sess.input_close();
+                }
+                if self
+                    .finish_deadline
+                    .is_some_and(|d| Instant::now() >= d)
+                {
+                    break; // hard stop: drop whatever remains
+                }
+            }
+            self.flush_pending();
+            self.check_timeouts();
+            self.reap_closable();
+            if self.finishing && self.live_sessions() == 0 {
+                break;
+            }
+            self.build_interests();
+            let wait = self
+                .backend
+                .wait(
+                    &self.interests,
+                    Duration::from_millis(100),
+                    &mut self.events,
+                )
+                .is_ok();
+            if !wait {
+                // a failing readiness syscall would otherwise spin;
+                // degrade to a coarse tick and keep serving
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            self.dispatch_events();
+        }
+        // hard-stop stragglers still count in the connection ledger
+        for entry in self.sessions.iter_mut() {
+            if entry.take().is_some() {
+                self.ctx.metrics.conn_closed();
+            }
+        }
+    }
+}
+
+/// The worker pool: started once per [`super::Server::run`], fed by
+/// the accept loop, torn down after the engine drains.
+pub(crate) struct Runtime {
+    workers: Vec<(Arc<WorkerShared>, JoinHandle<()>)>,
+    next: usize,
+}
+
+impl Runtime {
+    /// Spawn `threads` workers (each with its own wake socketpair).
+    pub(crate) fn start(
+        threads: usize,
+        engine: EngineHandle,
+        metrics: Arc<SrvMetrics>,
+        registry: Arc<MetricsRegistry>,
+        cfg: SrvConfig,
+    ) -> std::io::Result<Runtime> {
+        let threads = threads.max(1);
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let (wake_r, wake_w) = UnixStream::pair()?;
+            wake_r.set_nonblocking(true)?;
+            wake_w.set_nonblocking(true)?;
+            let shared = Arc::new(WorkerShared {
+                inbox: Mutex::new(Mailbox::default()),
+                signaled: AtomicBool::new(false),
+                finish: AtomicBool::new(false),
+                wake_w,
+            });
+            let ctx = Ctx {
+                cfg,
+                metrics: Arc::clone(&metrics),
+                registry: Arc::clone(&registry),
+                engine: engine.clone(),
+                shared: Arc::clone(&shared),
+            };
+            let h = std::thread::Builder::new()
+                .name(format!("srv-io-{i}"))
+                .spawn(move || Worker::new(wake_r, ctx).run())?;
+            workers.push((shared, h));
+        }
+        Ok(Runtime { workers, next: 0 })
+    }
+
+    /// Hand an accepted connection to a worker (round-robin: every
+    /// worker's poll set stays the same size, so tail latency does
+    /// not depend on which connection a client happened to get).
+    pub(crate) fn adopt(&mut self, stream: TcpStream) {
+        let idx = self.next % self.workers.len();
+        self.next = self.next.wrapping_add(1);
+        self.workers[idx].0.adopt(stream);
+    }
+
+    /// Graceful teardown. Call only after the engine has been joined:
+    /// every completion is then already in a worker mailbox, so the
+    /// final flush writes every admitted op's response before EOF.
+    pub(crate) fn finish(self) {
+        for (shared, _) in &self.workers {
+            shared.finish.store(true, Ordering::SeqCst);
+            shared.wake();
+        }
+        for (_, h) in self.workers {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Resolve the configured worker count: explicit wins; `0` means
+/// auto — `min(4, available_parallelism)`, enough to saturate the
+/// wire tier without stealing cores from the engine's shard workers.
+pub(crate) fn resolve_io_threads(configured: usize) -> usize {
+    if configured > 0 {
+        return configured;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .clamp(1, 4)
+}

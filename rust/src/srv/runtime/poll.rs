@@ -1,0 +1,210 @@
+//! Readiness backend: which fds can make progress right now?
+//!
+//! The event loop is written against the [`Readiness`] trait so the
+//! multiplexing syscall is a pluggable detail — `poll(2)` today,
+//! epoll/kqueue/io_uring backends can slot in later without touching
+//! the session state machines or the worker loop. The default
+//! [`PollBackend`] declares `poll(2)` directly (std exposes no
+//! readiness API and this build links no libc crate; libc itself is
+//! always linked, so a one-line `extern "C"` declaration is all the
+//! FFI there is). `poll` is in POSIX and behaves identically across
+//! Linux and the BSDs; O(n) per wait is irrelevant at the few hundred
+//! fds each worker owns (connections are spread across the pool).
+
+use std::io;
+use std::os::raw::{c_int, c_ulong};
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+// poll(2) event bits (POSIX values, identical on Linux and the BSDs).
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+/// `struct pollfd` — layout fixed by POSIX.
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: c_int,
+    events: i16,
+    revents: i16,
+}
+
+extern "C" {
+    /// `int poll(struct pollfd *fds, nfds_t nfds, int timeout);`
+    /// (`nfds_t` is `unsigned long` on every platform this builds on.)
+    fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+}
+
+/// One fd the caller wants readiness for, with its interest set.
+#[derive(Debug, Clone, Copy)]
+pub struct Interest {
+    pub fd: RawFd,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// One readiness event. `idx` indexes the caller's interest slice —
+/// the backend never needs an fd→session map of its own.
+#[derive(Debug, Clone, Copy)]
+pub struct Readied {
+    pub idx: usize,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error/hangup on the fd (POLLERR/POLLHUP/POLLNVAL). The caller
+    /// should attempt a read — it will surface the error or EOF — and
+    /// tear the session down through the normal path.
+    pub closed: bool,
+}
+
+/// A blocking "wait until some fd is ready" primitive.
+pub trait Readiness: Send {
+    /// Wait up to `timeout` for readiness on `interests`, appending
+    /// events to `out` (cleared first). Returning with `out` empty
+    /// means the timeout elapsed (or a signal interrupted the wait) —
+    /// both are normal; the caller runs its tick work and re-polls.
+    fn wait(
+        &mut self,
+        interests: &[Interest],
+        timeout: Duration,
+        out: &mut Vec<Readied>,
+    ) -> io::Result<()>;
+}
+
+/// The `poll(2)` readiness backend. Owns a reused `pollfd` scratch
+/// array (clear-don't-free, PR 6 discipline), so steady-state waits
+/// allocate nothing.
+#[derive(Default)]
+pub struct PollBackend {
+    scratch: Vec<PollFd>,
+}
+
+impl Readiness for PollBackend {
+    fn wait(
+        &mut self,
+        interests: &[Interest],
+        timeout: Duration,
+        out: &mut Vec<Readied>,
+    ) -> io::Result<()> {
+        out.clear();
+        self.scratch.clear();
+        for it in interests {
+            let mut events = 0i16;
+            if it.readable {
+                events |= POLLIN;
+            }
+            if it.writable {
+                events |= POLLOUT;
+            }
+            self.scratch.push(PollFd { fd: it.fd, events, revents: 0 });
+        }
+        let ms: c_int = timeout
+            .as_millis()
+            .min(c_int::MAX as u128)
+            .try_into()
+            .unwrap_or(c_int::MAX);
+        let n = unsafe {
+            poll(
+                self.scratch.as_mut_ptr(),
+                self.scratch.len() as c_ulong,
+                ms,
+            )
+        };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            // a signal mid-wait is a spurious wakeup, not a failure
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        if n == 0 {
+            return Ok(()); // timeout tick
+        }
+        for (idx, pfd) in self.scratch.iter().enumerate() {
+            if pfd.revents == 0 {
+                continue;
+            }
+            out.push(Readied {
+                idx,
+                readable: pfd.revents & POLLIN != 0,
+                writable: pfd.revents & POLLOUT != 0,
+                closed: pfd.revents & (POLLERR | POLLHUP | POLLNVAL)
+                    != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn readable_after_write_and_timeout_when_idle() {
+        let (a, mut b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        let mut be = PollBackend::default();
+        let interests = [Interest {
+            fd: a.as_raw_fd(),
+            readable: true,
+            writable: false,
+        }];
+        let mut out = Vec::new();
+        // idle: the wait times out with no events
+        be.wait(&interests, Duration::from_millis(10), &mut out)
+            .unwrap();
+        assert!(out.is_empty(), "idle socket reported ready: {out:?}");
+        // one byte lands -> readable fires with the right index
+        b.write_all(&[7u8]).unwrap();
+        be.wait(&interests, Duration::from_millis(1000), &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].idx, 0);
+        assert!(out[0].readable);
+        let mut buf = [0u8; 8];
+        let mut ar = &a;
+        assert_eq!(ar.read(&mut buf).unwrap(), 1);
+    }
+
+    #[test]
+    fn hangup_reports_closed_or_readable() {
+        let (a, b) = UnixStream::pair().unwrap();
+        drop(b);
+        let mut be = PollBackend::default();
+        let interests = [Interest {
+            fd: a.as_raw_fd(),
+            readable: true,
+            writable: false,
+        }];
+        let mut out = Vec::new();
+        be.wait(&interests, Duration::from_millis(1000), &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        // a peer hangup must wake the waiter (as EOF-readable and/or
+        // POLLHUP); either way the read path observes the close
+        assert!(out[0].readable || out[0].closed);
+    }
+
+    #[test]
+    fn writable_fires_on_an_unfilled_socket() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut be = PollBackend::default();
+        let interests = [Interest {
+            fd: a.as_raw_fd(),
+            readable: false,
+            writable: true,
+        }];
+        let mut out = Vec::new();
+        be.wait(&interests, Duration::from_millis(1000), &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].writable);
+    }
+}

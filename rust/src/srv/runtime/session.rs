@@ -1,0 +1,573 @@
+//! Per-connection session state machine for the event-loop runtime.
+//!
+//! One [`Session`] replaces the legacy reader+writer thread pair. Its
+//! life is a small state machine driven by readiness events:
+//!
+//! * **reading-prefix / reading-body** — bytes accumulate in `rbuf`;
+//!   the incremental framer pulls out complete `len`-prefixed payloads
+//!   (the nonblocking analogue of `wire::read_frame_into`, sharing
+//!   `wire::prefix_len_ok` so both paths reject identical prefixes)
+//!   and hands them to `wire::decode_payload` unchanged;
+//! * **executing** — decoded REQUESTs are `try_submit`ted; the engine
+//!   completion comes back through the worker's completion mailbox
+//!   (`inflight` counts submissions whose completion is still out);
+//! * **writing-backlog** — every outbound frame is encoded straight
+//!   into the reused `wbuf` (`wire::encode_frame_into`, PR 6
+//!   discipline: clear-don't-free, no per-frame allocation) and
+//!   flushed opportunistically; unflushed bytes register POLLOUT
+//!   interest.
+//!
+//! Sent-side counters keep the legacy writer's honesty rule: frames
+//! (and their BUSY/ERROR/response splits, and e2e latencies) are
+//! counted only once their bytes are fully on the wire — a torn
+//! connection never reports unsent frames as sent.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::compiler::CompiledIter;
+use crate::live::engine::{Submission, SubmitError};
+use crate::srv::wire::{
+    decode_payload, encode_frame_into, prefix_len_ok, ErrCode, Frame,
+};
+
+use super::{completion_frame, CompletionMsg, Ctx};
+
+/// How much of the connection is still live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Gate {
+    /// Reading and writing.
+    Open,
+    /// No more input (EOF, fatal frame, backlog cut, drain): finish
+    /// in-flight ops, flush the write backlog, then close.
+    InputClosed,
+    /// Transport is gone (write failure / reset): drop immediately.
+    Dead,
+}
+
+/// Sent-side accounting for one queued frame: `end` is the absolute
+/// outbound byte offset at which the frame is fully on the wire.
+struct SentRec {
+    end: u64,
+    busy: bool,
+    error: bool,
+    /// RESPONSE frames carry their decode→encode e2e latency, reported
+    /// to the histogram once the bytes flush.
+    e2e_ns: Option<u64>,
+}
+
+/// How many bytes one readiness event may pull off a socket before
+/// yielding to the other sessions (fairness under pipelined bursts).
+const READ_CHUNK: usize = 16 * 1024;
+const MAX_READ_PER_EVENT: usize = 256 * 1024;
+
+/// A stalled write (no forward progress while bytes are pending) cuts
+/// the connection after this long — the event-loop analogue of the
+/// legacy writer's 5 s socket write timeout.
+pub(crate) const WRITE_STALL: Duration = Duration::from_secs(5);
+
+pub(crate) struct Session {
+    stream: TcpStream,
+    pub(crate) fd: RawFd,
+    /// Worker-local identity (slot | generation) echoed by engine
+    /// completions; a stale token from a closed session misses.
+    pub(crate) token: u64,
+    pub(crate) gate: Gate,
+    // ---- reading-prefix / reading-body ----
+    rbuf: Vec<u8>,
+    rpos: usize,
+    /// Partial frame buffered (prefix or body): a read timeout now is
+    /// a torn/corrupted stream, not idleness.
+    mid_frame: bool,
+    last_read: Instant,
+    // ---- writing-backlog ----
+    wbuf: Vec<u8>,
+    wpos: usize,
+    last_write_progress: Instant,
+    /// Absolute outbound byte counters (queued vs flushed); survive
+    /// `wbuf` compaction, so `SentRec::end` never needs rebasing.
+    queued_total: u64,
+    written_total: u64,
+    sent: VecDeque<SentRec>,
+    /// Reused e2e scratch for the flush path.
+    e2e_scratch: Vec<u64>,
+    // ---- executing ----
+    programs: HashMap<u32, Arc<CompiledIter>>,
+    /// Submissions whose completion has not yet come back.
+    pub(crate) inflight: u64,
+}
+
+impl Session {
+    pub(crate) fn new(
+        stream: TcpStream,
+        token: u64,
+    ) -> std::io::Result<Session> {
+        let _ = stream.set_nodelay(true);
+        stream.set_nonblocking(true)?;
+        let fd = stream.as_raw_fd();
+        let now = Instant::now();
+        Ok(Session {
+            stream,
+            fd,
+            token,
+            gate: Gate::Open,
+            rbuf: Vec::new(),
+            rpos: 0,
+            mid_frame: false,
+            last_read: now,
+            wbuf: Vec::new(),
+            wpos: 0,
+            last_write_progress: now,
+            queued_total: 0,
+            written_total: 0,
+            sent: VecDeque::new(),
+            e2e_scratch: Vec::new(),
+            programs: HashMap::new(),
+            inflight: 0,
+        })
+    }
+
+    pub(crate) fn wants_read(&self) -> bool {
+        self.gate == Gate::Open
+    }
+
+    pub(crate) fn wants_write(&self) -> bool {
+        self.gate != Gate::Dead && self.wpos < self.wbuf.len()
+    }
+
+    /// Finished: nothing left to read, execute, or flush.
+    pub(crate) fn closable(&self) -> bool {
+        match self.gate {
+            Gate::Dead => true,
+            Gate::InputClosed => {
+                self.inflight == 0 && !self.wants_write()
+            }
+            Gate::Open => false,
+        }
+    }
+
+    /// Stop consuming input; the session lingers until in-flight ops
+    /// complete and the write backlog flushes.
+    pub(crate) fn input_close(&mut self) {
+        if self.gate == Gate::Open {
+            self.gate = Gate::InputClosed;
+            // half-close the read side so the peer's sends stop
+            // accumulating in kernel buffers we will never drain
+            let _ = self.stream.shutdown(std::net::Shutdown::Read);
+        }
+    }
+
+    /// Mid-frame read timeout / write stall bookkeeping, run on every
+    /// worker tick. Mirrors the legacy semantics exactly: a timeout at
+    /// a frame *boundary* is idleness (connection stays open); a
+    /// timeout mid-frame means a torn stream or a corrupted length
+    /// prefix promising bytes that never come — close it. A write
+    /// with pending bytes and no progress for [`WRITE_STALL`] is a
+    /// non-reading client: cut it.
+    pub(crate) fn check_timeouts(&mut self, read_timeout: Duration) {
+        if self.gate == Gate::Open
+            && self.mid_frame
+            && !read_timeout.is_zero()
+            && self.last_read.elapsed() >= read_timeout
+        {
+            self.input_close();
+        }
+        if self.wants_write()
+            && self.last_write_progress.elapsed() >= WRITE_STALL
+        {
+            self.gate = Gate::Dead;
+        }
+    }
+
+    /// Drain whatever the socket has, then pump the framer. Returns
+    /// after `MAX_READ_PER_EVENT` bytes to keep one chatty connection
+    /// from starving the rest of the worker's poll set.
+    pub(crate) fn on_readable(&mut self, ctx: &Ctx) {
+        if self.gate != Gate::Open {
+            return;
+        }
+        let mut eof = false;
+        let mut total = 0usize;
+        loop {
+            let start = self.rbuf.len();
+            self.rbuf.resize(start + READ_CHUNK, 0);
+            match self.stream.read(&mut self.rbuf[start..]) {
+                Ok(0) => {
+                    self.rbuf.truncate(start);
+                    eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.truncate(start + n);
+                    self.last_read = Instant::now();
+                    total += n;
+                    if total >= MAX_READ_PER_EVENT {
+                        break;
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    self.rbuf.truncate(start);
+                    break;
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted =>
+                {
+                    self.rbuf.truncate(start);
+                }
+                Err(_) => {
+                    // reset/torn transport: same as the legacy
+                    // reader's Io exit — stop reading; in-flight
+                    // completions still get a best-effort flush
+                    self.rbuf.truncate(start);
+                    eof = true;
+                    break;
+                }
+            }
+        }
+        self.pump(ctx);
+        if eof && self.gate == Gate::Open {
+            self.gate = Gate::InputClosed;
+        }
+    }
+
+    /// The incremental framer: reading-prefix → reading-body →
+    /// dispatch, repeated while complete frames are buffered.
+    fn pump(&mut self, ctx: &Ctx) {
+        while self.gate == Gate::Open {
+            let avail = self.rbuf.len() - self.rpos;
+            if avail < 4 {
+                self.mid_frame = avail > 0;
+                break;
+            }
+            let len = u32::from_le_bytes(
+                self.rbuf[self.rpos..self.rpos + 4].try_into().unwrap(),
+            );
+            if !prefix_len_ok(len, ctx.cfg.max_frame) {
+                // unframeable: best-effort ERROR, then the stream is
+                // done (the prefix cannot be resynchronized)
+                ctx.metrics.decode_error();
+                self.queue_frame(
+                    0,
+                    &Frame::Error {
+                        code: ErrCode::Oversize,
+                        msg: format!("unframeable length {len}"),
+                    },
+                    None,
+                );
+                self.input_close();
+                break;
+            }
+            let len = len as usize;
+            if avail < 4 + len {
+                self.mid_frame = true;
+                break;
+            }
+            self.mid_frame = false;
+            let body = self.rpos + 4;
+            self.rpos = body + len;
+            self.handle_payload(body..body + len, ctx);
+        }
+        // compact: consumed bytes leave; a partial frame's prefix/body
+        // slides to the front (small — at most one frame)
+        if self.rpos > 0 {
+            if self.rpos == self.rbuf.len() {
+                self.rbuf.clear();
+            } else {
+                self.rbuf.copy_within(self.rpos.., 0);
+                let keep = self.rbuf.len() - self.rpos;
+                self.rbuf.truncate(keep);
+            }
+            self.rpos = 0;
+        }
+    }
+
+    /// One complete payload: decode and dispatch. Mirrors the legacy
+    /// `reader_loop` frame-for-frame so every counter and every answer
+    /// byte stays identical.
+    fn handle_payload(
+        &mut self,
+        range: std::ops::Range<usize>,
+        ctx: &Ctx,
+    ) {
+        ctx.metrics.frame_in();
+        // non-draining-client guard, on EVERY frame kind: once the
+        // unflushed response backlog passes the cap the client is cut
+        // loose instead of growing the write buffer without bound
+        if self.sent.len() as u64 >= ctx.cfg.max_conn_backlog {
+            ctx.metrics.backlog_drop();
+            self.queue_frame(
+                0,
+                &Frame::Error {
+                    code: ErrCode::Backlog,
+                    msg: "response backlog exceeded; closing".into(),
+                },
+                None,
+            );
+            self.input_close();
+            return;
+        }
+        let env = match decode_payload(&self.rbuf[range]) {
+            Ok(env) => env,
+            Err(e) => {
+                ctx.metrics.decode_error();
+                self.queue_frame(
+                    e.seq,
+                    &Frame::Error {
+                        code: e.kind.err_code(),
+                        msg: format!("{:?}", e.kind),
+                    },
+                    None,
+                );
+                if e.kind.is_fatal() {
+                    self.input_close();
+                }
+                return;
+            }
+        };
+        match env.frame {
+            Frame::Register { id, program } => {
+                // semantic rejection, not wire corruption: answers
+                // ERROR without touching decode_errors
+                if let Err(e) = crate::isa::verify(&program) {
+                    self.queue_frame(
+                        env.seq,
+                        &Frame::Error {
+                            code: ErrCode::BadProgram,
+                            msg: format!("verify failed: {e:?}"),
+                        },
+                        None,
+                    );
+                    return;
+                }
+                // bounded like every other client-controlled edge
+                if !self.programs.contains_key(&id)
+                    && self.programs.len() >= ctx.cfg.max_programs
+                {
+                    self.queue_frame(
+                        env.seq,
+                        &Frame::Error {
+                            code: ErrCode::Backlog,
+                            msg: "program table full".into(),
+                        },
+                        None,
+                    );
+                    return;
+                }
+                self.programs
+                    .insert(id, Arc::new(CompiledIter::new(program)));
+                ctx.metrics.program_registered();
+                self.queue_frame(
+                    env.seq,
+                    &Frame::RegisterOk { id },
+                    None,
+                );
+            }
+            Frame::Request { prog, budget, start, sp } => {
+                ctx.metrics.request();
+                // clone the Arc out first so the program-table borrow
+                // ends before the error path needs `&mut self`
+                let iter = self.programs.get(&prog).map(Arc::clone);
+                let Some(iter) = iter else {
+                    self.queue_frame(
+                        env.seq,
+                        &Frame::Error {
+                            code: ErrCode::UnknownProgram,
+                            msg: format!(
+                                "program id {prog} not registered"
+                            ),
+                        },
+                        None,
+                    );
+                    return;
+                };
+                let seq = env.seq;
+                let t0 = Instant::now();
+                let shared = Arc::clone(&ctx.shared);
+                let token = self.token;
+                let sub = Submission {
+                    iter,
+                    start,
+                    sp,
+                    budget,
+                    tag: seq,
+                    // the engine invokes this on its dispatcher
+                    // thread: one mailbox push + one conditional
+                    // one-byte wakeup write — as cheap as the legacy
+                    // channel send, and batched across a burst of
+                    // completions by the dirty flag
+                    done: Box::new(move |c| {
+                        shared.complete(CompletionMsg {
+                            token,
+                            seq,
+                            t0,
+                            c,
+                        });
+                    }),
+                };
+                match ctx.engine.try_submit(sub) {
+                    Ok(()) => self.inflight += 1,
+                    Err(SubmitError::Busy(_)) => {
+                        self.queue_frame(seq, &Frame::Busy, None)
+                    }
+                    Err(SubmitError::Down(_)) => {
+                        self.queue_frame(
+                            seq,
+                            &Frame::Error {
+                                code: ErrCode::ShuttingDown,
+                                msg: "server draining".into(),
+                            },
+                            None,
+                        );
+                        self.input_close();
+                    }
+                }
+            }
+            Frame::Stats => {
+                self.queue_frame(
+                    env.seq,
+                    &Frame::StatsOk {
+                        body: ctx.registry.snapshot().render(),
+                    },
+                    None,
+                );
+            }
+            // a server never expects client-bound kinds
+            Frame::RegisterOk { .. }
+            | Frame::Response { .. }
+            | Frame::Busy
+            | Frame::Error { .. }
+            | Frame::StatsOk { .. } => {
+                self.queue_frame(
+                    env.seq,
+                    &Frame::Error {
+                        code: ErrCode::UnexpectedKind,
+                        msg: "client sent a server-to-client frame"
+                            .into(),
+                    },
+                    None,
+                );
+            }
+        }
+    }
+
+    /// An engine completion for this session: encode its frame into
+    /// the write backlog. e2e latency (decode → encode, the legacy
+    /// writer's measurement point) rides on the sent record and hits
+    /// the histogram when the bytes flush.
+    pub(crate) fn apply_completion(&mut self, msg: CompletionMsg) {
+        self.inflight = self.inflight.saturating_sub(1);
+        let frame = completion_frame(&msg.c);
+        let e2e = matches!(frame, Frame::Response { .. })
+            .then(|| msg.t0.elapsed().as_nanos() as u64);
+        self.queue_frame(msg.seq, &frame, e2e);
+    }
+
+    /// Append one frame to the write backlog (no allocation in steady
+    /// state: `wbuf` is compacted, never freed).
+    fn queue_frame(
+        &mut self,
+        seq: u64,
+        frame: &Frame,
+        e2e_ns: Option<u64>,
+    ) {
+        if self.gate == Gate::Dead {
+            return;
+        }
+        if !self.wants_write() {
+            // backlog was empty: restart the stall clock
+            self.last_write_progress = Instant::now();
+        }
+        let before = self.wbuf.len();
+        encode_frame_into(seq, frame, &mut self.wbuf);
+        self.queued_total += (self.wbuf.len() - before) as u64;
+        self.sent.push_back(SentRec {
+            end: self.queued_total,
+            busy: matches!(frame, Frame::Busy),
+            error: matches!(frame, Frame::Error { .. }),
+            e2e_ns,
+        });
+    }
+
+    /// Opportunistic nonblocking flush; counts frames as sent only
+    /// once their last byte is on the wire.
+    pub(crate) fn try_flush(&mut self, ctx: &Ctx) {
+        if self.gate == Gate::Dead {
+            return;
+        }
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.gate = Gate::Dead;
+                    break;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    self.written_total += n as u64;
+                    self.last_write_progress = Instant::now();
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    break;
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    // dead or stalled-past-timeout client: the whole
+                    // connection goes (legacy writer shut both halves
+                    // down) — unflushed frames are never counted
+                    let _ =
+                        self.stream.shutdown(std::net::Shutdown::Both);
+                    self.gate = Gate::Dead;
+                    break;
+                }
+            }
+        }
+        // compact once fully flushed; otherwise only when the flushed
+        // prefix has grown large (a slow client must not pin memory)
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos >= 64 * 1024 {
+            self.wbuf.copy_within(self.wpos.., 0);
+            let keep = self.wbuf.len() - self.wpos;
+            self.wbuf.truncate(keep);
+            self.wpos = 0;
+        }
+        // honesty rule: counters fire only for fully-written frames
+        let mut frames = 0u64;
+        let mut busy = 0u64;
+        let mut errors = 0u64;
+        self.e2e_scratch.clear();
+        while let Some(rec) = self.sent.front() {
+            if rec.end > self.written_total {
+                break;
+            }
+            let rec = self.sent.pop_front().unwrap();
+            frames += 1;
+            if rec.busy {
+                busy += 1;
+            }
+            if rec.error {
+                errors += 1;
+            }
+            if let Some(ns) = rec.e2e_ns {
+                self.e2e_scratch.push(ns);
+            }
+        }
+        if frames > 0 {
+            ctx.metrics.sent_batch(frames, busy, errors);
+            for &ns in &self.e2e_scratch {
+                ctx.metrics.response(ns);
+            }
+        }
+    }
+}

@@ -472,6 +472,16 @@ pub enum FrameEvent {
     Io(std::io::Error),
 }
 
+/// Is a length prefix inside the codec's `[MIN_PAYLOAD, max_frame]`
+/// window? This is exactly the check [`read_frame_into`] applies; the
+/// nonblocking runtime's incremental framer shares it so the blocking
+/// and event-loop paths can never disagree on which prefixes are
+/// unframeable garbage.
+#[inline]
+pub fn prefix_len_ok(len: u32, max_frame: u32) -> bool {
+    (len as usize) >= MIN_PAYLOAD && len <= max_frame
+}
+
 /// Read one length-prefixed frame. Blocking; safe to call repeatedly
 /// on a `BufReader`-wrapped socket (with or without a read timeout —
 /// see [`FrameRead::Idle`]). Allocates the payload; hot loops use

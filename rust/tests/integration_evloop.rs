@@ -1,0 +1,544 @@
+//! Event-loop runtime tests: the serving semantics of
+//! `integration_srv.rs` hold at scales and in configurations the
+//! threaded tier never faced — a thousand concurrent connections,
+//! everything multiplexed through a single worker, connection churn,
+//! the legacy baseline, and the connection-ledger / serving-window
+//! accounting the runtime rework exposed.
+//!
+//! (`integration_srv.rs` itself also runs against the event loop —
+//! it is the default serving path — and stays byte-for-byte
+//! unmodified; this file covers what that harness does not reach.)
+
+#![cfg(unix)]
+
+use std::thread::JoinHandle;
+
+use pulse::backend::TraversalBackend;
+use pulse::bench_support::{
+    build_serving_ops, check_stats_partition, make_backend, ServingSpec,
+};
+use pulse::ds::ForwardList;
+use pulse::isa::{Status, SP_WORDS};
+use pulse::rack::{Rack, RackConfig};
+use pulse::srv::loadgen::WireClient;
+use pulse::srv::wire::Frame;
+use pulse::srv::{
+    fetch_stats, run_loadgen, LoadgenConfig, Server, ServerHandle,
+    SrvConfig, SrvSummary,
+};
+
+const NODES: usize = 2;
+
+fn rack_cfg() -> RackConfig {
+    RackConfig::small(NODES)
+}
+
+fn start_server(
+    backend_kind: &str,
+    spec: &ServingSpec,
+    cfg: SrvConfig,
+) -> (ServerHandle, JoinHandle<SrvSummary>, Vec<pulse::rack::Op>) {
+    let mut backend = make_backend(backend_kind, rack_cfg());
+    let _ = build_serving_ops(backend.rack_mut(), spec);
+    let (server, handle) =
+        Server::bind(backend, "127.0.0.1:0", cfg).expect("bind");
+    let join = std::thread::spawn(move || server.run());
+    let mut shadow = Rack::new(rack_cfg());
+    let ops = build_serving_ops(&mut shadow, spec);
+    (handle, join, ops)
+}
+
+fn expected_sps(
+    spec: &ServingSpec,
+    ops: &[pulse::rack::Op],
+) -> Vec<[i64; SP_WORDS]> {
+    let mut rack = Rack::new(rack_cfg());
+    let _ = build_serving_ops(&mut rack, spec);
+    ops.iter().map(|op| rack.run_op_functional(op)).collect()
+}
+
+/// The connection ledger must reconcile after any run:
+/// `accepted == opened + failed` and `opened == closed + active`.
+fn assert_ledger_reconciles(summary: &SrvSummary, ctx: &str) {
+    let s = &summary.srv;
+    assert_eq!(
+        s.conns_accepted,
+        s.conns_opened + s.conns_failed,
+        "{ctx}: accepted != opened+failed ({s:?})"
+    );
+    assert_eq!(
+        s.conns_opened,
+        s.conns_closed + s.conns_active,
+        "{ctx}: opened != closed+active ({s:?})"
+    );
+    assert_eq!(
+        s.conns_active, 0,
+        "{ctx}: sessions leaked past drain ({s:?})"
+    );
+}
+
+#[test]
+fn thousand_connections_complete_cleanly() {
+    // ≥1k concurrent loopback connections, all served by a handful of
+    // event-loop workers. The window admits every in-flight op
+    // (conns × depth == window), so a clean run is exact: every op
+    // completes, nothing sheds, no decode errors, and the connection
+    // ledger balances to zero leaked sessions.
+    const CONNS: usize = 1024;
+    const DEPTH: usize = 2;
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 8_000,
+        ops: 4 * CONNS,
+        ..ServingSpec::default()
+    };
+    let cfg = SrvConfig {
+        window: CONNS * DEPTH,
+        ..SrvConfig::default()
+    };
+    let (handle, join, ops) = start_server("live", &spec, cfg);
+    let report = run_loadgen(
+        &LoadgenConfig {
+            addr: handle.addr().to_string(),
+            conns: CONNS,
+            depth: DEPTH,
+            ..LoadgenConfig::default()
+        },
+        ops.clone(),
+    )
+    .expect("loadgen");
+    assert_eq!(report.completed as usize, ops.len());
+    assert_eq!(report.busy, 0, "window covers all in-flight ops");
+    assert_eq!(report.errors, 0);
+    // tail sanity at scale: not a flatness proof (the bench sweeps
+    // that), but a runaway event loop fails this by orders of
+    // magnitude
+    assert!(
+        report.latency.p99() < 30_000_000_000,
+        "p99 {}ns at {CONNS} conns",
+        report.latency.p99()
+    );
+
+    handle.shutdown();
+    let summary = join.join().unwrap();
+    assert_eq!(summary.engine.report.completed as usize, ops.len());
+    assert_eq!(summary.srv.decode_errors, 0);
+    assert_eq!(summary.srv.backlog_drops, 0);
+    assert!(summary.srv.conns_accepted >= CONNS as u64);
+    assert_ledger_reconciles(&summary, "1k conns");
+    // serving-window accounting: both windows measured, and the rate
+    // denominator is the serving window, not serve+drain
+    assert!(summary.serving_ms > 0.0);
+    assert!(summary.drain_ms >= 0.0);
+    let implied = summary.engine.report.completed as f64
+        / (summary.engine.report.wall_ms / 1e3);
+    assert!(
+        (summary.engine.report.tput_ops_per_s - implied).abs()
+            < implied * 1e-6,
+        "tput {} not computed over the serving window {}ms",
+        summary.engine.report.tput_ops_per_s,
+        summary.engine.report.wall_ms
+    );
+}
+
+#[test]
+fn single_worker_multiplexes_busy_edges_and_out_of_order() {
+    // io_threads=1: every connection shares ONE event-loop worker.
+    // The BUSY discipline (window/pending/inbox edges) and pipelined
+    // out-of-order completion must hold with zero per-connection
+    // threads to hide behind.
+    let cfg = SrvConfig {
+        window: 1,
+        pending_cap: 1,
+        inbox_capacity: 2,
+        io_threads: 1,
+        ..SrvConfig::default()
+    };
+    let mut backend = make_backend("live", rack_cfg());
+    let (head, near_tail, iter) = {
+        let rack = backend.rack_mut();
+        let mut l = ForwardList::new();
+        let mut last = 0u64;
+        for i in 1..=20_000i64 {
+            last = l.push(rack, i);
+        }
+        (l.head, last, l.sum_program())
+    };
+    let (server, handle) =
+        Server::bind(backend, "127.0.0.1:0", cfg).expect("bind");
+    let join = std::thread::spawn(move || server.run());
+
+    // burst of 10 slow walks through capacity ~3: explicit BUSY for
+    // the shed ones, full responses for the served ones, no hangs
+    let mut c = WireClient::connect(handle.addr()).unwrap();
+    c.register(1, &iter.program).unwrap();
+    let sp0 = [0i64; SP_WORDS];
+    let n = 10u64;
+    for _ in 0..n {
+        let seq = c.next_seq();
+        c.send(
+            seq,
+            &Frame::Request { prog: 1, budget: 0, start: head, sp: sp0 },
+        )
+        .unwrap();
+    }
+    let mut done = 0u64;
+    let mut busy = 0u64;
+    for _ in 0..n {
+        match c.recv().unwrap().expect("frame").frame {
+            Frame::Response { status, sp, .. } => {
+                assert_eq!(status, Status::Return);
+                assert_eq!(sp[3], (1..=20_000i64).sum::<i64>());
+                done += 1;
+            }
+            Frame::Busy => busy += 1,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(done + busy, n);
+    assert!(busy >= 1, "burst through capacity ~3 never shed");
+    assert!(done >= 1, "backpressure starved the engine entirely");
+
+    // out-of-order pipelining on the SAME single-worker connection: a
+    // near-tail walk issued second must overtake the full 20k-hop walk
+    let slow_seq = c.next_seq();
+    c.send(
+        slow_seq,
+        &Frame::Request { prog: 1, budget: 0, start: head, sp: sp0 },
+    )
+    .unwrap();
+    let fast_seq = c.next_seq();
+    c.send(
+        fast_seq,
+        &Frame::Request {
+            prog: 1,
+            budget: 0,
+            start: near_tail,
+            sp: sp0,
+        },
+    )
+    .unwrap();
+    let first = c.recv().unwrap().expect("frame");
+    let second = c.recv().unwrap().expect("frame");
+    assert_eq!(
+        first.seq, fast_seq,
+        "short walk did not overtake the 20k-hop walk"
+    );
+    assert_eq!(second.seq, slow_seq);
+
+    handle.shutdown();
+    let summary = join.join().unwrap();
+    assert_eq!(summary.srv.busy, busy);
+    assert_ledger_reconciles(&summary, "single worker");
+}
+
+#[test]
+fn graceful_drain_flushes_every_admitted_op_across_connections() {
+    // pipelined slow ops spread over several connections, shutdown
+    // mid-stream: every client that keeps reading sees one decodable
+    // frame per request (Response, BUSY, or ShuttingDown) and then a
+    // clean EOF — the event-loop final flush may not drop completions
+    let cfg = SrvConfig::default();
+    let mut backend = make_backend("live", rack_cfg());
+    let (head, iter) = {
+        let rack = backend.rack_mut();
+        let mut l = ForwardList::new();
+        for i in 1..=15_000i64 {
+            l.push(rack, i);
+        }
+        (l.head, l.sum_program())
+    };
+    let (server, handle) =
+        Server::bind(backend, "127.0.0.1:0", cfg).expect("bind");
+    let join = std::thread::spawn(move || server.run());
+
+    const CONNS: usize = 4;
+    const PER_CONN: u64 = 8;
+    let sp0 = [0i64; SP_WORDS];
+    let mut clients = Vec::new();
+    for _ in 0..CONNS {
+        let mut c = WireClient::connect(handle.addr()).unwrap();
+        c.register(1, &iter.program).unwrap();
+        for _ in 0..PER_CONN {
+            let seq = c.next_seq();
+            c.send(
+                seq,
+                &Frame::Request {
+                    prog: 1,
+                    budget: 0,
+                    start: head,
+                    sp: sp0,
+                },
+            )
+            .unwrap();
+        }
+        clients.push(c);
+    }
+    // first response proves ops are flowing, then drain mid-stream
+    let first = clients[0].recv().unwrap().expect("first response");
+    assert!(matches!(first.frame, Frame::Response { .. }));
+    handle.shutdown();
+
+    let mut responses = 1u64; // the one already read
+    let mut rejected = 0u64;
+    let mut torn = false;
+    for c in &mut clients {
+        loop {
+            match c.recv() {
+                Ok(Some(env)) => match env.frame {
+                    Frame::Response { status, sp, .. } => {
+                        assert_eq!(status, Status::Return);
+                        assert_eq!(
+                            sp[3],
+                            (1..=15_000i64).sum::<i64>()
+                        );
+                        responses += 1;
+                    }
+                    Frame::Error { .. } | Frame::Busy => {
+                        rejected += 1
+                    }
+                    other => panic!("unexpected {other:?}"),
+                },
+                Ok(None) => break,
+                Err(_) => {
+                    torn = true;
+                    break;
+                }
+            }
+        }
+    }
+    let summary = join.join().unwrap();
+    assert!(
+        responses + rejected <= CONNS as u64 * PER_CONN,
+        "more answers than requests"
+    );
+    if torn {
+        // frames can be lost on a torn teardown; only the inequality
+        // survives
+        assert!(summary.engine.report.completed >= responses);
+    } else {
+        // clean EOFs everywhere: every admitted op's response reached
+        // a client — the event-loop drain invariant
+        assert_eq!(summary.engine.report.completed, responses);
+    }
+    assert_ledger_reconciles(&summary, "graceful drain");
+}
+
+#[test]
+fn connection_churn_keeps_the_ledger_balanced() {
+    // connections that speak, connections that connect and leave
+    // without a byte, connections torn mid-register: after the dust
+    // settles, accepted == opened + failed and opened == closed
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 1_000,
+        ops: 200,
+        ..ServingSpec::default()
+    };
+    let (handle, join, ops) =
+        start_server("live", &spec, SrvConfig::default());
+    let addr = handle.addr();
+
+    // silent visitors: connect, never write, hang up
+    for _ in 0..16 {
+        let s = std::net::TcpStream::connect(addr).unwrap();
+        drop(s);
+    }
+    // real traffic among the churn
+    let report = run_loadgen(
+        &LoadgenConfig {
+            addr: addr.to_string(),
+            conns: 4,
+            depth: 4,
+            ..LoadgenConfig::default()
+        },
+        ops.clone(),
+    )
+    .expect("loadgen");
+    assert_eq!(report.completed as usize, ops.len());
+    assert_eq!(report.errors, 0);
+    // more silent churn after the load
+    for _ in 0..16 {
+        let s = std::net::TcpStream::connect(addr).unwrap();
+        drop(s);
+    }
+
+    // churned conns close asynchronously; poll the live gauges until
+    // the ledger balances rather than racing the reaper
+    let mut balanced = false;
+    for _ in 0..200 {
+        let m = handle.metrics();
+        if m.conns_opened == m.conns_closed + m.conns_active
+            && m.conns_active == 0
+            && m.conns_accepted >= 32 + 4
+        {
+            balanced = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    handle.shutdown();
+    let summary = join.join().unwrap();
+    assert!(
+        balanced,
+        "ledger never balanced while live: {:?}",
+        summary.srv
+    );
+    assert_ledger_reconciles(&summary, "churn");
+}
+
+#[test]
+fn stats_partition_holds_through_the_event_loop() {
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 1_000,
+        ops: 300,
+        ..ServingSpec::default()
+    };
+    let (handle, join, ops) =
+        start_server("live", &spec, SrvConfig::default());
+    let addr = handle.addr().to_string();
+
+    let report = run_loadgen(
+        &LoadgenConfig {
+            addr: addr.clone(),
+            conns: 3,
+            depth: 4,
+            ..LoadgenConfig::default()
+        },
+        ops.clone(),
+    )
+    .expect("loadgen");
+    assert_eq!(report.completed as usize, ops.len());
+    assert_eq!(report.errors, 0);
+
+    // sent-side counters land after the bytes flush; poll briefly
+    let mut ok = false;
+    let mut last = String::new();
+    for _ in 0..100 {
+        let snap = fetch_stats(&addr).expect("stats poll");
+        let requests = snap
+            .get("srv.requests")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(-1.0);
+        match check_stats_partition(&snap) {
+            Ok(()) if requests >= ops.len() as f64 => {
+                // the new ledger gauges ride in the same snapshot
+                for key in
+                    ["srv.conns_opened", "srv.conns_closed", "srv.conns_failed"]
+                {
+                    assert!(
+                        snap.get(key).is_some(),
+                        "{key} missing from snapshot"
+                    );
+                }
+                ok = true;
+                break;
+            }
+            Ok(()) => last = format!("requests={requests}"),
+            Err(e) => last = e,
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(ok, "stats never partitioned through the event loop: {last}");
+
+    handle.shutdown();
+    let summary = join.join().unwrap();
+    assert_eq!(summary.srv.requests, ops.len() as u64);
+}
+
+#[test]
+fn legacy_threaded_path_still_serves_bit_identically() {
+    // the two-threads-per-connection baseline stays selectable (it is
+    // the old side of the net_serving old-vs-new sweep) and must keep
+    // producing bit-identical scratchpads and a balanced ledger
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 2_000,
+        ops: 400,
+        ..ServingSpec::default()
+    };
+    let cfg = SrvConfig { legacy_threads: true, ..SrvConfig::default() };
+    let (handle, join, ops) = start_server("live", &spec, cfg);
+    let want = expected_sps(&spec, &ops);
+    let report = run_loadgen(
+        &LoadgenConfig {
+            addr: handle.addr().to_string(),
+            conns: 3,
+            depth: 8,
+            record_results: true,
+            ..LoadgenConfig::default()
+        },
+        ops.clone(),
+    )
+    .expect("loadgen");
+    assert_eq!(report.completed as usize, ops.len());
+    assert_eq!(report.busy, 0);
+    assert_eq!(report.errors, 0);
+    for (i, got) in report.results.iter().enumerate() {
+        assert_eq!(
+            got.as_ref(),
+            Some(&want[i]),
+            "legacy path op {i} diverged"
+        );
+    }
+    handle.shutdown();
+    let summary = join.join().unwrap();
+    assert_eq!(summary.engine.report.completed as usize, ops.len());
+    assert_ledger_reconciles(&summary, "legacy");
+    // the serving-window split reports on this path too
+    assert!(summary.serving_ms > 0.0);
+    assert!(summary.drain_ms >= 0.0);
+}
+
+/// Cross-mode conformance: the same op stream through the event loop
+/// and through the legacy threaded tier must yield identical final
+/// scratchpads (both equal to the functional oracle).
+#[test]
+fn event_loop_and_legacy_agree_with_the_oracle() {
+    let spec = ServingSpec {
+        workload: "skiplist".into(),
+        keys: 1_200,
+        ops: 250,
+        max_scan: 30,
+        ..ServingSpec::default()
+    };
+    let want = {
+        let mut shadow = Rack::new(rack_cfg());
+        let ops = build_serving_ops(&mut shadow, &spec);
+        expected_sps(&spec, &ops)
+    };
+    for legacy in [false, true] {
+        let cfg = SrvConfig {
+            legacy_threads: legacy,
+            ..SrvConfig::default()
+        };
+        let (handle, join, ops) = start_server("live", &spec, cfg);
+        let report = run_loadgen(
+            &LoadgenConfig {
+                addr: handle.addr().to_string(),
+                conns: 2,
+                depth: 4,
+                record_results: true,
+                ..LoadgenConfig::default()
+            },
+            ops.clone(),
+        )
+        .expect("loadgen");
+        assert_eq!(
+            report.completed as usize,
+            ops.len(),
+            "legacy={legacy}"
+        );
+        assert_eq!(report.errors, 0, "legacy={legacy}");
+        for (i, got) in report.results.iter().enumerate() {
+            assert_eq!(
+                got.as_ref(),
+                Some(&want[i]),
+                "legacy={legacy} op {i} diverged"
+            );
+        }
+        handle.shutdown();
+        let _ = join.join().unwrap();
+    }
+}
