@@ -1,7 +1,7 @@
 //! Structured iterator builder: the DSL surface of the PULSE compiler.
 
-use super::CompiledIter;
-use crate::isa::{Asm, Program, VerifyError, DATA_WORDS, NREG, SP_WORDS};
+use super::{CompileError, CompiledIter};
+use crate::isa::{analyze, Asm, Program, DATA_WORDS, NREG, SP_WORDS};
 
 /// A value handle — a register holding a computed value. Copy-type and
 /// immutable-by-convention (re-assignments produce new handles), which
@@ -21,6 +21,9 @@ pub struct IterBuilder {
     next_reg: u8,
     max_field: i64,
     writes: bool,
+    /// Host-seeded scratchpad words (analyzer `sp_inputs`): reads of
+    /// declared words are not `ReadBeforeWrite`.
+    sp_inputs: u32,
 }
 
 impl Default for IterBuilder {
@@ -31,7 +34,13 @@ impl Default for IterBuilder {
 
 impl IterBuilder {
     pub fn new() -> Self {
-        Self { asm: Asm::new(), next_reg: 1, max_field: 0, writes: false }
+        Self {
+            asm: Asm::new(),
+            next_reg: 1,
+            max_field: 0,
+            writes: false,
+            sp_inputs: 0,
+        }
     }
 
     fn alloc(&mut self) -> Val {
@@ -92,6 +101,30 @@ impl IterBuilder {
         self.max_field = self.max_field.max(span_hint as i64);
         self.writes = true;
         self.asm.stx(v.0, idx.0, base as i64);
+    }
+
+    /// Declare a scratchpad word as host-seeded: the caller's `init()`
+    /// fills it before the first iteration, so the analyzer's
+    /// read-before-write pass treats it as initialized.
+    pub fn declare_sp_input(&mut self, word: u32) {
+        assert!((word as usize) < SP_WORDS);
+        self.sp_inputs |= 1 << word;
+    }
+
+    /// Declare the half-open range `lo..hi` as host-seeded (bulk draw
+    /// buffers like the graph walk's `sp[8..]`).
+    pub fn declare_sp_input_range(&mut self, lo: u32, hi: u32) {
+        assert!(lo <= hi && (hi as usize) <= SP_WORDS);
+        for w in lo..hi {
+            self.declare_sp_input(w);
+        }
+    }
+
+    /// Declare + read a host-seeded scratchpad word in one step (the
+    /// idiomatic first read of a traversal argument).
+    pub fn sp_input(&mut self, word: u32) -> Val {
+        self.declare_sp_input(word);
+        self.sp(word)
     }
 
     /// Scratchpad read / write (the iterator's persistent state, §3).
@@ -322,12 +355,21 @@ impl IterBuilder {
         self.asm.trap();
     }
 
-    /// Lower + verify. `load_words` is inferred from the aggregated
-    /// field accesses.
-    pub fn finish(self) -> Result<CompiledIter, VerifyError> {
+    /// Lower + verify + analyze. `load_words` is inferred from the
+    /// aggregated field accesses; Deny-severity analyzer diagnostics
+    /// (certain trap on a reachable path) fail the build fast, before
+    /// the program can reach any executor.
+    pub fn finish(self) -> Result<CompiledIter, CompileError> {
         let load_words = (self.max_field + 1).clamp(1, DATA_WORDS as i64) as u8;
-        let program: Program = self.asm.finish(load_words)?;
-        Ok(CompiledIter::new(program))
+        let program: Program =
+            self.asm.finish(load_words).map_err(CompileError::Verify)?;
+        let analysis = analyze(&program, self.sp_inputs);
+        if analysis.has_deny() {
+            return Err(CompileError::Deny(analysis.diags));
+        }
+        let mut it = CompiledIter::new(program);
+        it.sp_inputs = self.sp_inputs;
+        Ok(it)
     }
 }
 
@@ -484,5 +526,34 @@ mod tests {
         b.ret();
         let it = b.finish().unwrap();
         assert!(it.program.writes_data);
+    }
+
+    #[test]
+    fn finish_denies_certain_traps() {
+        // a provable div-by-zero fails the build, not the executor
+        let mut b = IterBuilder::new();
+        let x = b.imm(5);
+        let z = b.imm(0);
+        let q = b.div(x, z);
+        b.sp_store(1, q);
+        b.ret();
+        match b.finish() {
+            Err(super::CompileError::Deny(diags)) => {
+                assert!(!diags.is_empty());
+                assert_eq!(diags[0].kind.name(), "PossibleDivByZero");
+            }
+            other => panic!("expected Deny, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sp_input_declarations_reach_the_compiled_iter() {
+        let mut b = IterBuilder::new();
+        let k = b.sp_input(0);
+        b.declare_sp_input_range(8, 10);
+        b.sp_store(1, k);
+        b.ret();
+        let it = b.finish().unwrap();
+        assert_eq!(it.sp_inputs, (1 << 0) | (1 << 8) | (1 << 9));
     }
 }

@@ -23,7 +23,35 @@ pub use builder::{IterBuilder, Val};
 
 use std::sync::Arc;
 
-use crate::isa::{CostModel, Program};
+use crate::isa::{CostModel, Diag, Program, VerifyError, SP_INPUTS_ALL};
+
+/// Why `IterBuilder::finish` rejected a program: either the structural
+/// verifier or the abstract-interpretation analyzer (`isa::analyze`)
+/// said no. Compile-time is the first of the three enforcement layers
+/// (compile → wire admission → `pulse lint`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CompileError {
+    Verify(VerifyError),
+    /// Deny-severity analyzer diagnostics (certain trap / no-progress).
+    Deny(Vec<Diag>),
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::Verify(e) => write!(f, "verify failed: {e}"),
+            CompileError::Deny(diags) => {
+                write!(f, "analysis denied the program:")?;
+                for d in diags {
+                    write!(f, " [{d}]")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
 
 /// A compiled iterator: the offloadable program plus its cost estimate.
 ///
@@ -36,6 +64,12 @@ pub struct CompiledIter {
     pub program: Arc<Program>,
     pub t_c_ns: f64,
     pub t_d_ns: f64,
+    /// Host-seeded scratchpad words (the analyzer's `sp_inputs` mask).
+    /// Builder-made iterators carry the mask their scenario declared;
+    /// `new` defaults to `SP_INPUTS_ALL`, the right admission posture
+    /// for wire-registered programs (the REQUEST frame ships the full
+    /// 256 B scratchpad, so any word may legitimately be read).
+    pub sp_inputs: u32,
 }
 
 impl CompiledIter {
@@ -45,6 +79,7 @@ impl CompiledIter {
             program: Arc::new(program),
             t_c_ns: cost.t_c_ns,
             t_d_ns: cost.t_d_ns,
+            sp_inputs: SP_INPUTS_ALL,
         }
     }
 

@@ -49,7 +49,7 @@ fn emit_key_scan(b: &mut IterBuilder, needle: crate::compiler::Val) -> crate::co
 /// Full point lookup in one program (paper Table 3 row: WiredTiger).
 pub fn get_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let needle = b.sp(SP_KEY);
+    let needle = b.sp_input(SP_KEY);
     let idx = emit_key_scan(&mut b, needle);
     let tag = b.field(0);
     let one = b.imm(1);
@@ -85,7 +85,7 @@ pub fn get_iter() -> CompiledIter {
 /// streamed-words term charges.
 pub fn update_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let needle = b.sp(SP_KEY);
+    let needle = b.sp_input(SP_KEY);
     let idx = emit_key_scan(&mut b, needle);
     let tag = b.field(0);
     let one = b.imm(1);
@@ -100,7 +100,7 @@ pub fn update_iter() -> CompiledIter {
         let im1 = b.addi(idx, -1);
         let k = b.field_dyn(im1, KEYS, 8);
         b.if_eq(k, needle, |b| {
-            let newv = b.sp(SP_RESULT);
+            let newv = b.sp_input(SP_RESULT);
             b.store_field_dyn(im1, VALS, 15, newv);
             let z = b.imm(0);
             b.sp_store(SP_FLAG, z);
@@ -123,7 +123,7 @@ pub fn locate_iter() -> CompiledIter {
         b.sp_store(SP_RESULT, me);
         b.ret();
     });
-    let needle = b.sp(SP_KEY);
+    let needle = b.sp_input(SP_KEY);
     let idx = emit_key_scan(&mut b, needle);
     let child = b.field_dyn(idx, VALS, NODE_WORDS as u32 - 1);
     b.advance(child);
@@ -137,7 +137,7 @@ pub fn locate_iter() -> CompiledIter {
 /// continuation (paper §3 bounded execution).
 pub fn scan_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let i = b.sp(SP_CURSOR);
+    let i = b.sp_input(SP_CURSOR);
     {
         let mark = b.temp_mark();
         let seven = b.imm(FANOUT as i64);
@@ -165,7 +165,7 @@ pub fn scan_iter() -> CompiledIter {
         b.temp_release(mark);
     }
     let v = b.field_dyn(i, VALS, 15);
-    let oc = b.sp(3);
+    let oc = b.sp_input(3);
     b.sp_store_dyn(oc, SP_BUF_BASE, v);
     let oc2 = b.addi(oc, 1);
     b.sp_store(3, oc2);
@@ -175,7 +175,7 @@ pub fn scan_iter() -> CompiledIter {
         b.sp_store(SP_CURSOR, i2);
         b.temp_release(mark);
     }
-    let rem = b.sp(2);
+    let rem = b.sp_input(2);
     let rem2 = b.addi(rem, -1);
     b.sp_store(2, rem2);
     {
@@ -203,8 +203,8 @@ pub fn scan_iter() -> CompiledIter {
 /// partial boundary leaf). Accumulates into sp[ACC_SUM].
 pub fn sum_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let hi = b.sp(SP_KEY);
-    let sum = b.sp(SP_ACC_SUM);
+    let hi = b.sp_input(SP_KEY);
+    let sum = b.sp_input(SP_ACC_SUM);
     let done = b.make_label();
     let mark = b.temp_mark();
     b.for_fixed(FANOUT, |b, j| {

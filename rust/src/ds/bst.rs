@@ -43,7 +43,7 @@ pub enum BstKind {
 /// sp[KEY] = needle; sp[RESULT] = value on hit; sp[FLAG] = NOT_FOUND.
 pub fn lower_bound_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let needle = b.sp(SP_KEY);
+    let needle = b.sp_input(SP_KEY);
     let key = b.field(0);
     // child = (needle <= key) ? (y = cur; left) : right
     let child = b.var(0);

@@ -32,7 +32,7 @@ pub fn locate_iter() -> CompiledIter {
         b.sp_store(SP_RESULT, me);
         b.ret();
     });
-    let needle = b.sp(SP_KEY);
+    let needle = b.sp_input(SP_KEY);
     let idx = b.var(0);
     let mark = b.temp_mark();
     b.for_fixed(FANOUT, |b, j| {

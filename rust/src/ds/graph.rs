@@ -51,7 +51,10 @@ pub const MAX_HOPS: usize = SP_BUF_LEN;
 /// sp[RESULT] tracks the last vertex id.
 pub fn khop_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let phase = b.sp(SP_PHASE);
+    // The draw buffer sp[BUF_BASE..BUF_BASE+MAX_HOPS] is host-seeded and
+    // read via a dynamic (Splx) index — declare the whole range.
+    b.declare_sp_input_range(SP_BUF_BASE, SP_BUF_BASE + SP_BUF_LEN as u32);
+    let phase = b.sp_input(SP_PHASE);
     let zero = b.imm(0);
     let one = b.imm(1);
     b.if_eq(phase, zero, |b| {
@@ -60,11 +63,11 @@ pub fn khop_iter() -> CompiledIter {
         let id = b.field(0);
         b.sp_store(SP_RESULT, id);
         let v = b.field(1);
-        let sum = b.sp(SP_ACC_SUM);
+        let sum = b.sp_input(SP_ACC_SUM);
         b.add_to(sum, v);
         b.sp_store(SP_ACC_SUM, sum);
         b.temp_release(mark);
-        let hops = b.sp(SP_HOPS);
+        let hops = b.sp_input(SP_HOPS);
         b.if_le(hops, zero, |b| b.ret());
         let deg = b.field(2);
         b.if_eq(deg, zero, |b| b.ret()); // sink

@@ -37,7 +37,7 @@ pub struct HashMapDs {
 /// The bucket sentinel's key never matches, so it walks through.
 pub fn chain_find_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let needle = b.sp(SP_KEY);
+    let needle = b.sp_input(SP_KEY);
     let key = b.field(0);
     b.if_eq(needle, key, |b| {
         let val = b.field(1);
@@ -61,10 +61,10 @@ pub fn chain_find_iter() -> CompiledIter {
 /// update operations; exercises the write-back path, Appendix C.2).
 pub fn chain_update_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let needle = b.sp(SP_KEY);
+    let needle = b.sp_input(SP_KEY);
     let key = b.field(0);
     b.if_eq(needle, key, |b| {
-        let newval = b.sp(SP_RESULT);
+        let newval = b.sp_input(SP_RESULT);
         b.store_field(1, newval);
         let zero = b.imm(0);
         b.sp_store(SP_FLAG, zero);

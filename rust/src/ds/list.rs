@@ -46,7 +46,7 @@ pub struct LinkedList {
 /// hit, sp[FLAG] = KEY_NOT_FOUND on miss.
 pub fn find_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let needle = b.sp(SP_KEY);
+    let needle = b.sp_input(SP_KEY);
     let val = b.field(0);
     b.if_eq(needle, val, |b| {
         let me = b.cur_ptr();
@@ -81,17 +81,17 @@ pub fn find_iter() -> CompiledIter {
 /// in `rack/README.md`).
 pub fn push_front_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let phase = b.sp(SP_CURSOR);
+    let phase = b.sp_input(SP_CURSOR);
     let one = b.imm(1);
     b.if_eq(phase, one, |b| {
         // second iteration: we *are* the new node; link to old head
-        let old = b.sp(SP_RESULT);
+        let old = b.sp_input(SP_RESULT);
         b.store_field(1, old);
         b.ret();
     });
     // first iteration: at the sentinel
     let old = b.field(1);
-    let newn = b.sp(SP_KEY);
+    let newn = b.sp_input(SP_KEY);
     b.store_field(1, newn);
     b.sp_store(SP_RESULT, old);
     b.sp_store(SP_CURSOR, one);
@@ -103,11 +103,11 @@ pub fn push_front_iter() -> CompiledIter {
 /// Appendix C.2): sp[SUM] += value, sp[CNT] += 1.
 pub fn sum_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let acc = b.sp(SP_ACC_SUM);
+    let acc = b.sp_input(SP_ACC_SUM);
     let val = b.field(0);
     let acc2 = b.add(acc, val);
     b.sp_store(SP_ACC_SUM, acc2);
-    let cnt = b.sp(SP_ACC_CNT);
+    let cnt = b.sp_input(SP_ACC_CNT);
     let cnt2 = b.addi(cnt, 1);
     b.sp_store(SP_ACC_CNT, cnt2);
     let next = b.field(1);

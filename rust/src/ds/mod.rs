@@ -82,3 +82,29 @@ pub const SP_BUF_LEN: usize = 24;
 
 /// Sentinel for missing keys.
 pub const KEY_NOT_FOUND: i64 = i64::MAX;
+
+/// Every built-in scenario iterator, by CLI name. One authoritative
+/// list shared by `pulse inspect`, `pulse lint --all-scenarios`, the
+/// CI lint smoke step, and the "all builtins analyze clean" unit test
+/// in `isa::analyze` — adding a scenario here enrolls it everywhere.
+pub fn builtin_iters() -> Vec<(&'static str, crate::compiler::CompiledIter)> {
+    vec![
+        ("list-find", list::find_iter()),
+        ("list-sum", list::sum_iter()),
+        ("list-push-front", list::push_front_iter()),
+        ("chain-find", hashmap::chain_find_iter()),
+        ("chain-update", hashmap::chain_update_iter()),
+        ("bst-lower-bound", bst::lower_bound_iter()),
+        ("btree-locate", btree::locate_iter()),
+        ("bplustree-get", bplustree::get_iter()),
+        ("bplustree-locate", bplustree::locate_iter()),
+        ("bplustree-scan", bplustree::scan_iter()),
+        ("bplustree-sum", bplustree::sum_iter()),
+        ("bplustree-update", bplustree::update_iter()),
+        ("skiplist-find", skiplist::find_iter()),
+        ("skiplist-locate", skiplist::locate_iter()),
+        ("skiplist-scan", skiplist::scan_iter()),
+        ("radixtrie-lookup", radixtrie::lookup_iter()),
+        ("graph-khop", graph::khop_iter()),
+    ]
+}

@@ -47,7 +47,7 @@ pub const SP_PHASE: u32 = SP_ACC_CNT;
 /// sp[FLAG] = KEY_NOT_FOUND.
 pub fn lookup_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let phase = b.sp(SP_PHASE);
+    let phase = b.sp_input(SP_PHASE);
     let zero = b.imm(0);
     b.if_eq(phase, zero, |b| {
         // header visit
@@ -66,7 +66,7 @@ pub fn lookup_iter() -> CompiledIter {
             b.ret();
         });
         // consume the top byte: slot = children + (rem >> 56) * 8
-        let rem = b.sp(SP_REM);
+        let rem = b.sp_input(SP_REM);
         let top = b.shr(rem, 56); // logical shift: byte in 0..=255
         let rem2 = b.shl(rem, 8);
         b.sp_store(SP_REM, rem2);

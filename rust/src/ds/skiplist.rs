@@ -48,8 +48,8 @@ const NKEY0: u32 = NEXT0 + MAX_LEVEL as u32; // 11
 /// sp[FLAG] = KEY_NOT_FOUND.
 pub fn find_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let needle = b.sp(SP_KEY);
-    let lvl = b.sp(SP_CURSOR);
+    let needle = b.sp_input(SP_KEY);
+    let lvl = b.sp_input(SP_CURSOR);
     let nk = b.field_dyn(lvl, NKEY0, NODE_WORDS as u32 - 1);
     let np = b.field_dyn(lvl, NEXT0, NKEY0 - 1);
     // fence key covers the successor: move right without touching it
@@ -81,8 +81,8 @@ pub fn find_iter() -> CompiledIter {
 /// precedes everything) into sp[RESULT] — the scan entry point.
 pub fn locate_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let needle = b.sp(SP_KEY);
-    let lvl = b.sp(SP_CURSOR);
+    let needle = b.sp_input(SP_KEY);
+    let lvl = b.sp_input(SP_CURSOR);
     let nk = b.field_dyn(lvl, NKEY0, NODE_WORDS as u32 - 1);
     let np = b.field_dyn(lvl, NEXT0, NKEY0 - 1);
     b.if_le(nk, needle, |b| b.advance(np));
@@ -106,7 +106,7 @@ pub fn locate_iter() -> CompiledIter {
 /// ends — the same continuation protocol as `bplustree::scan_iter`.
 pub fn scan_iter() -> CompiledIter {
     let mut b = IterBuilder::new();
-    let lo = b.sp(SP_KEY);
+    let lo = b.sp_input(SP_KEY);
     let k = b.field(0);
     let np = b.field(NEXT0);
     let zero = b.imm(0);
@@ -119,11 +119,11 @@ pub fn scan_iter() -> CompiledIter {
         b.advance(np);
     });
     let v = b.field(1);
-    let oc = b.sp(3);
+    let oc = b.sp_input(3);
     b.sp_store_dyn(oc, SP_BUF_BASE, v);
     let oc2 = b.addi(oc, 1);
     b.sp_store(3, oc2);
-    let rem = b.sp(2);
+    let rem = b.sp_input(2);
     let rem2 = b.addi(rem, -1);
     b.sp_store(2, rem2);
     b.sp_store(SP_RESULT, np);

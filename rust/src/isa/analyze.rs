@@ -1,0 +1,1193 @@
+//! Abstract-interpretation analyzer: the dataflow extension of
+//! [`verify`] (paper §4.1).
+//!
+//! `verify` bounds *structure* (forward jumps, static offsets, terminal
+//! tails); this module bounds *behavior*. A single forward pass — sound
+//! and complete as a fixpoint because verified programs have forward-only
+//! control flow, so every predecessor of a pc has a smaller pc and no
+//! widening is needed — runs four analyses at once:
+//!
+//! 1. **Interval analysis** over registers and scratchpad words, with
+//!    branch refinement: proves computed window indices in-bounds (the
+//!    radix trie's `slot = children + 8·byte` with `byte ∈ [0,255]`) and
+//!    divisors nonzero (the graph k-hop `modu` lowering's guard).
+//! 2. **Initialization analysis** over the scratchpad: reads of words no
+//!    prior instruction wrote and the host did not declare as seeded
+//!    (the `sp_inputs` mask) flag `ReadBeforeWrite`.
+//! 3. **Trap-freedom**: `Analysis::trap_free` holds iff no reachable
+//!    trap source survives — explicit TRAP, feasible jump past the end,
+//!    unproven divisor, unproven dynamic window index.
+//! 4. **Write-effect inference**: `Analysis::writes_dram` is true iff a
+//!    reachable data-window store may execute (contrast
+//!    `Program::writes_data`, a flat opcode scan that counts dead code).
+//!
+//! Severity calibration: a diagnostic is `Deny` only when the defect is
+//! certain on some reachable path (provably-zero divisor, provably
+//! out-of-bounds index); possible-but-unproven defects are `Warn`
+//! (divisor that may be zero, undeclared scratchpad read) or silent but
+//! reflected in `trap_free` (an index the analysis simply cannot bound —
+//! data-dependent traversals like skip-list level picks are legitimate).
+//! Progress analysis over `repeat_while` stage chains builds on the
+//! per-program facts here; see `rack::request::Op::lint`.
+
+#![deny(clippy::redundant_clone)]
+
+use super::op::{Instr, Op};
+use super::program::Program;
+use super::verify::{verify, VerifyError};
+use super::{DATA_WORDS, NREG, SP_WORDS};
+
+/// `sp_inputs` mask declaring every scratchpad word host-seeded. The
+/// right default for wire-registered programs: the REQUEST frame ships
+/// the full 256 B scratchpad, so any word may legitimately be read.
+pub const SP_INPUTS_ALL: u32 = u32::MAX;
+
+// ---------------------------------------------------------------------
+// Abstract domain: signed intervals + a path-derived nonzero flag.
+// ---------------------------------------------------------------------
+
+/// Abstract value of one 64-bit register or scratchpad word: a closed
+/// signed interval `[lo, hi]`, plus a `nonzero` flag for path conditions
+/// (`x != 0`) that an interval spanning zero cannot express.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AbsVal {
+    pub lo: i64,
+    pub hi: i64,
+    pub nonzero: bool,
+}
+
+impl AbsVal {
+    pub const TOP: AbsVal =
+        AbsVal { lo: i64::MIN, hi: i64::MAX, nonzero: false };
+
+    pub fn exact(k: i64) -> AbsVal {
+        AbsVal { lo: k, hi: k, nonzero: k != 0 }
+    }
+
+    pub fn range(lo: i64, hi: i64) -> AbsVal {
+        debug_assert!(lo <= hi);
+        AbsVal { lo, hi, nonzero: lo > 0 || hi < 0 }
+    }
+
+    pub fn is_const(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    pub fn proves_nonzero(&self) -> bool {
+        self.nonzero || self.lo > 0 || self.hi < 0
+    }
+
+    fn join(self, o: AbsVal) -> AbsVal {
+        AbsVal {
+            lo: self.lo.min(o.lo),
+            hi: self.hi.max(o.hi),
+            nonzero: self.nonzero && o.nonzero,
+        }
+    }
+
+    /// Greatest lower bound; `None` when the intersection is empty (an
+    /// infeasible path condition).
+    fn meet(self, o: AbsVal) -> Option<AbsVal> {
+        let lo = self.lo.max(o.lo);
+        let hi = self.hi.min(o.hi);
+        if lo > hi {
+            return None;
+        }
+        AbsVal { lo, hi, nonzero: self.nonzero || o.nonzero }.normalize()
+    }
+
+    /// Tighten endpoints against the nonzero flag; `None` if the value
+    /// is contradictory (nonzero yet exactly `[0,0]`).
+    fn normalize(mut self) -> Option<AbsVal> {
+        if self.nonzero {
+            if self.lo == 0 && self.hi == 0 {
+                return None;
+            }
+            if self.lo == 0 {
+                self.lo = 1;
+            }
+            if self.hi == 0 {
+                self.hi = -1;
+            }
+        }
+        Some(self)
+    }
+
+    /// The same value under an established "is nonzero" path condition
+    /// (the caller has ruled out the exactly-zero case).
+    fn assume_nonzero(mut self) -> AbsVal {
+        self.nonzero = true;
+        self.normalize().unwrap_or(AbsVal {
+            lo: 1,
+            hi: i64::MAX,
+            nonzero: true,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Transfer functions, pinned to `interp::logic_pass` semantics: exact
+// (wrapping) folds when both operands are constants, checked interval
+// arithmetic otherwise (any overflow at an interval bound widens to
+// TOP, which always contains the wrapped runtime value).
+// ---------------------------------------------------------------------
+
+fn tr_add(x: AbsVal, y: AbsVal) -> AbsVal {
+    if x.is_const() && y.is_const() {
+        return AbsVal::exact(x.lo.wrapping_add(y.lo));
+    }
+    match (x.lo.checked_add(y.lo), x.hi.checked_add(y.hi)) {
+        (Some(lo), Some(hi)) => AbsVal::range(lo, hi),
+        _ => AbsVal::TOP,
+    }
+}
+
+fn tr_sub(x: AbsVal, y: AbsVal) -> AbsVal {
+    if x.is_const() && y.is_const() {
+        return AbsVal::exact(x.lo.wrapping_sub(y.lo));
+    }
+    match (x.lo.checked_sub(y.hi), x.hi.checked_sub(y.lo)) {
+        (Some(lo), Some(hi)) => AbsVal::range(lo, hi),
+        _ => AbsVal::TOP,
+    }
+}
+
+fn tr_mul(x: AbsVal, y: AbsVal) -> AbsVal {
+    if x.is_const() && y.is_const() {
+        return AbsVal::exact(x.lo.wrapping_mul(y.lo));
+    }
+    // Exact products over a box peak at the corners; if every corner is
+    // representable, no interior product wraps either.
+    let corners = [
+        x.lo.checked_mul(y.lo),
+        x.lo.checked_mul(y.hi),
+        x.hi.checked_mul(y.lo),
+        x.hi.checked_mul(y.hi),
+    ];
+    let mut lo = i64::MAX;
+    let mut hi = i64::MIN;
+    for c in corners {
+        match c {
+            Some(v) => {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            None => return AbsVal::TOP,
+        }
+    }
+    AbsVal::range(lo, hi)
+}
+
+/// Divisor proven nonzero by the caller (the trap edge is split off).
+fn tr_div(x: AbsVal, y: AbsVal) -> AbsVal {
+    if x.is_const() && y.is_const() && y.lo != 0 {
+        return AbsVal::exact(x.lo.wrapping_div(y.lo));
+    }
+    AbsVal::TOP
+}
+
+fn tr_and(x: AbsVal, y: AbsVal) -> AbsVal {
+    if x.is_const() && y.is_const() {
+        return AbsVal::exact(x.lo & y.lo);
+    }
+    // Non-negative & anything non-negative stays within [0, min-hi];
+    // with one non-negative operand the result is bounded by it.
+    match (x.lo >= 0, y.lo >= 0) {
+        (true, true) => AbsVal::range(0, x.hi.min(y.hi)),
+        (true, false) => AbsVal::range(0, x.hi),
+        (false, true) => AbsVal::range(0, y.hi),
+        (false, false) => AbsVal::TOP,
+    }
+}
+
+fn tr_or(x: AbsVal, y: AbsVal) -> AbsVal {
+    if x.is_const() && y.is_const() {
+        return AbsVal::exact(x.lo | y.lo);
+    }
+    AbsVal::TOP
+}
+
+fn tr_xor(x: AbsVal, y: AbsVal) -> AbsVal {
+    if x.is_const() && y.is_const() {
+        return AbsVal::exact(x.lo ^ y.lo);
+    }
+    AbsVal::TOP
+}
+
+fn tr_not(x: AbsVal) -> AbsVal {
+    // !v == -1 - v, exactly; the endpoints can never overflow.
+    AbsVal::range((-1i64).wrapping_sub(x.hi), (-1i64).wrapping_sub(x.lo))
+}
+
+fn tr_shl(x: AbsVal, imm: i64) -> AbsVal {
+    let k = (imm & 63) as u32;
+    if x.is_const() {
+        return AbsVal::exact(x.lo.wrapping_shl(k));
+    }
+    if k == 0 {
+        return x;
+    }
+    if x.lo >= 0 && x.hi <= (i64::MAX >> k) {
+        // whole interval shifts without wrapping; monotone for x >= 0
+        AbsVal::range(x.lo << k, x.hi << k)
+    } else {
+        AbsVal::TOP
+    }
+}
+
+fn tr_shr(x: AbsVal, imm: i64) -> AbsVal {
+    let k = (imm & 63) as u32;
+    if k == 0 {
+        // logical shift by 0 is the identity even for negative values
+        return x;
+    }
+    if x.lo >= 0 {
+        // logical == arithmetic for non-negative values; monotone
+        AbsVal::range(x.lo >> k, x.hi >> k)
+    } else {
+        AbsVal::range(0, (u64::MAX >> k) as i64)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Branch refinement.
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum Rel {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+}
+
+/// The relation `rel(x, y)` that HOLDS on the given edge of a
+/// conditional jump comparing `(r[a], r[b])`; `swap` means
+/// `(x, y) = (r[b], r[a])`.
+fn rel_of(op: Op, taken: bool) -> (Rel, bool) {
+    match (op, taken) {
+        (Op::Jeq, true) | (Op::Jne, false) => (Rel::Eq, false),
+        (Op::Jeq, false) | (Op::Jne, true) => (Rel::Ne, false),
+        (Op::Jlt, true) | (Op::Jge, false) => (Rel::Lt, false),
+        (Op::Jlt, false) | (Op::Jge, true) => (Rel::Le, true),
+        (Op::Jle, true) | (Op::Jgt, false) => (Rel::Le, false),
+        (Op::Jle, false) | (Op::Jgt, true) => (Rel::Lt, true),
+        _ => unreachable!("rel_of on non-conditional op"),
+    }
+}
+
+/// Exclude `k` from `v`'s endpoints; `None` if `v` is exactly `k`.
+fn trim_ne(v: AbsVal, k: i64) -> Option<AbsVal> {
+    let mut v = v;
+    if v.is_const() && v.lo == k {
+        return None;
+    }
+    if v.lo == k {
+        v.lo = k + 1; // hi > k, so k < i64::MAX
+    }
+    if v.hi == k {
+        v.hi = k - 1; // lo < k, so k > i64::MIN
+    }
+    if k == 0 {
+        v.nonzero = true;
+    }
+    v.normalize()
+}
+
+// ---------------------------------------------------------------------
+// Per-pc abstract state.
+// ---------------------------------------------------------------------
+
+#[derive(Clone)]
+struct State {
+    regs: [AbsVal; NREG],
+    sp: [AbsVal; SP_WORDS],
+    /// Bit i set: sp[i] definitely written on every path here, or
+    /// declared host-seeded via `sp_inputs`.
+    init: u32,
+    /// A dynamic sp store with unproven index ran: any word may have
+    /// been written (suppresses ReadBeforeWrite from here on).
+    dyn_write: bool,
+}
+
+impl State {
+    /// Registers are TOP at entry, not zero: within one traversal the
+    /// workspace persists across iterations, so a later pass observes
+    /// whatever the previous pass left behind.
+    fn entry(sp_inputs: u32) -> State {
+        State {
+            regs: [AbsVal::TOP; NREG],
+            sp: [AbsVal::TOP; SP_WORDS],
+            init: sp_inputs,
+            dyn_write: false,
+        }
+    }
+
+    fn join_into(&mut self, o: &State) {
+        for (d, s) in self.regs.iter_mut().zip(&o.regs) {
+            *d = d.join(*s);
+        }
+        for (d, s) in self.sp.iter_mut().zip(&o.sp) {
+            *d = d.join(*s);
+        }
+        self.init &= o.init;
+        self.dyn_write |= o.dyn_write;
+    }
+}
+
+/// Refine `st` along one edge of a conditional jump; `None` means the
+/// edge is infeasible.
+fn refine(st: &State, op: Op, taken: bool, a: u8, b: u8) -> Option<State> {
+    let (rel, swap) = rel_of(op, taken);
+    let (ra, rb) = if swap {
+        (b as usize, a as usize)
+    } else {
+        (a as usize, b as usize)
+    };
+    let x = st.regs[ra];
+    let y = st.regs[rb];
+    match rel {
+        Rel::Eq => {
+            if ra == rb {
+                return Some(st.clone());
+            }
+            let m = x.meet(y)?;
+            let mut st = st.clone();
+            st.regs[ra] = m;
+            st.regs[rb] = m;
+            Some(st)
+        }
+        Rel::Ne => {
+            if ra == rb {
+                return None;
+            }
+            if x.is_const() && y.is_const() && x.lo == y.lo {
+                return None;
+            }
+            let mut st = st.clone();
+            if y.is_const() {
+                st.regs[ra] = trim_ne(x, y.lo)?;
+            }
+            if x.is_const() {
+                st.regs[rb] = trim_ne(y, x.lo)?;
+            }
+            Some(st)
+        }
+        Rel::Lt => {
+            // x < y
+            if ra == rb {
+                return None;
+            }
+            let xh = y.hi.checked_sub(1)?; // y.hi == MIN: nothing below
+            let nx = AbsVal { hi: x.hi.min(xh), ..x };
+            if nx.lo > nx.hi {
+                return None;
+            }
+            let yl = x.lo.checked_add(1)?; // x.lo == MAX: nothing above
+            let ny = AbsVal { lo: y.lo.max(yl), ..y };
+            if ny.lo > ny.hi {
+                return None;
+            }
+            let mut st = st.clone();
+            st.regs[ra] = nx.normalize()?;
+            st.regs[rb] = ny.normalize()?;
+            Some(st)
+        }
+        Rel::Le => {
+            // x <= y
+            if ra == rb {
+                return Some(st.clone());
+            }
+            let nx = AbsVal { hi: x.hi.min(y.hi), ..x };
+            if nx.lo > nx.hi {
+                return None;
+            }
+            let ny = AbsVal { lo: y.lo.max(x.lo), ..y };
+            if ny.lo > ny.hi {
+                return None;
+            }
+            let mut st = st.clone();
+            st.regs[ra] = nx.normalize()?;
+            st.regs[rb] = ny.normalize()?;
+            Some(st)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Diagnostics.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Certain defect on a reachable path — reject at admission.
+    Deny,
+    /// Possible defect the analysis cannot rule out — report, admit.
+    Warn,
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Severity::Deny => write!(f, "deny"),
+            Severity::Warn => write!(f, "warn"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DiagKind {
+    /// Structural verification failure (the analyzer runs `verify`
+    /// first; dataflow needs a well-formed program).
+    Verify(VerifyError),
+    PossibleDivByZero { divisor: u8 },
+    ReadBeforeWrite { word: u32 },
+    ComputedOffsetOob { window: &'static str, lo: i64, hi: i64 },
+    NoProgressRepeat { stage: usize, addr_word: u32, guard_word: u32 },
+}
+
+impl DiagKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DiagKind::Verify(_) => "Verify",
+            DiagKind::PossibleDivByZero { .. } => "PossibleDivByZero",
+            DiagKind::ReadBeforeWrite { .. } => "ReadBeforeWrite",
+            DiagKind::ComputedOffsetOob { .. } => "ComputedOffsetOob",
+            DiagKind::NoProgressRepeat { .. } => "NoProgressRepeat",
+        }
+    }
+}
+
+impl std::fmt::Display for DiagKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DiagKind::Verify(e) => write!(f, "{e}"),
+            DiagKind::PossibleDivByZero { divisor } => {
+                write!(f, "divisor r{divisor} is not provably nonzero")
+            }
+            DiagKind::ReadBeforeWrite { word } => write!(
+                f,
+                "scratchpad word {word} read before any write \
+                 (not declared in sp_inputs)"
+            ),
+            DiagKind::ComputedOffsetOob { window, lo, hi } => write!(
+                f,
+                "computed {window}-window index provably out of bounds \
+                 ({lo}..={hi})"
+            ),
+            DiagKind::NoProgressRepeat { stage, addr_word, guard_word } => {
+                write!(
+                    f,
+                    "stage {stage} repeats while sp[{addr_word}] != 0 && \
+                     sp[{guard_word}] > 0 but no path updates either word"
+                )
+            }
+        }
+    }
+}
+
+/// One structured diagnostic, carrying the disassembly of the offending
+/// instruction so every consumer (compile error, wire ERROR frame,
+/// `pulse lint`) renders identically.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diag {
+    pub pc: usize,
+    pub severity: Severity,
+    pub kind: DiagKind,
+    pub rendered_instr: String,
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} @pc {} [{}]: {} | {}",
+            self.severity,
+            self.pc,
+            self.kind.name(),
+            self.kind,
+            self.rendered_instr
+        )
+    }
+}
+
+impl Diag {
+    /// Wrap a structural `VerifyError` in the shared diagnostic
+    /// rendering, pointing at the offending instruction when the error
+    /// names a pc.
+    pub fn from_verify(p: &Program, e: VerifyError) -> Diag {
+        let pc = match &e {
+            VerifyError::BadRegister { pc, .. }
+            | VerifyError::StaticOffsetOob { pc, .. }
+            | VerifyError::NonForwardJump { pc, .. } => *pc,
+            VerifyError::NonTerminalTail => p.instrs.len().saturating_sub(1),
+            _ => 0,
+        };
+        Diag {
+            pc,
+            severity: Severity::Deny,
+            rendered_instr: render_instr(p, pc),
+            kind: DiagKind::Verify(e),
+        }
+    }
+}
+
+/// Disassemble one instruction for diagnostics.
+pub fn render_instr(p: &Program, pc: usize) -> String {
+    match p.instrs.get(pc) {
+        Some(i) => i.to_string(),
+        None => "<no instruction>".to_string(),
+    }
+}
+
+/// The one shared formatter for verify failures: severity, pc, message,
+/// and the disassembled offending instruction.
+pub fn render_verify_error(p: &Program, e: &VerifyError) -> String {
+    Diag::from_verify(p, e.clone()).to_string()
+}
+
+// ---------------------------------------------------------------------
+// Analysis result + driver.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    /// All diagnostics, in program order (progress diagnostics are
+    /// appended by `Op::lint`, which sees the whole stage chain).
+    pub diags: Vec<Diag>,
+    /// A reachable data-window store may execute.
+    pub writes_dram: bool,
+    /// Bit i: some reachable instruction may write sp[i] (static SPS,
+    /// or a dynamic SPSX whose index interval covers i).
+    pub sp_writes: u32,
+    /// A reachable dynamic sp store whose index could not be bounded —
+    /// any word may be written.
+    pub sp_dyn_write: bool,
+    /// No reachable trap source survives the analysis.
+    pub trap_free: bool,
+    /// No reachable NEXT: the program finishes in a single iteration.
+    pub returns_only: bool,
+    reg_in: Vec<Option<[AbsVal; NREG]>>,
+}
+
+impl Analysis {
+    pub fn has_deny(&self) -> bool {
+        self.diags.iter().any(|d| d.severity == Severity::Deny)
+    }
+
+    /// Joined interval of `reg` on entry to `pc`; `None` if `pc` is
+    /// unreachable (or out of range).
+    pub fn interval_before(&self, pc: usize, reg: u8) -> Option<(i64, i64)> {
+        let regs = self.reg_in.get(pc)?.as_ref()?;
+        let v = regs[reg as usize];
+        Some((v.lo, v.hi))
+    }
+}
+
+fn mk(p: &Program, pc: usize, severity: Severity, kind: DiagKind) -> Diag {
+    Diag { pc, severity, kind, rendered_instr: render_instr(p, pc) }
+}
+
+fn flow(states: &mut [Option<State>], target: usize, st: State) {
+    match &mut states[target] {
+        Some(cur) => cur.join_into(&st),
+        slot @ None => *slot = Some(st),
+    }
+}
+
+/// Analyze `p` under the host-seeded scratchpad declaration
+/// `sp_inputs`. Runs `verify` first: a structurally invalid program
+/// yields a single Deny diagnostic and no dataflow facts.
+pub fn analyze(p: &Program, sp_inputs: u32) -> Analysis {
+    let mut out = Analysis {
+        diags: Vec::new(),
+        writes_dram: false,
+        sp_writes: 0,
+        sp_dyn_write: false,
+        trap_free: true,
+        returns_only: true,
+        reg_in: vec![None; p.instrs.len()],
+    };
+    if let Err(e) = verify(p) {
+        out.diags.push(Diag::from_verify(p, e));
+        // analysis did not run: stay conservative
+        out.writes_dram = p.writes_data;
+        out.trap_free = false;
+        out.returns_only = false;
+        return out;
+    }
+    let n = p.instrs.len();
+    let mut states: Vec<Option<State>> = vec![None; n];
+    states[0] = Some(State::entry(sp_inputs));
+    for pc in 0..n {
+        let Some(mut st) = states[pc].take() else {
+            continue; // unreachable pc
+        };
+        out.reg_in[pc] = Some(st.regs);
+        let Instr { op, a, b, c, imm } = p.instrs[pc];
+        let (ai, bi, ci) = (a as usize, b as usize, c as usize);
+        match op {
+            Op::Nop => flow(&mut states, pc + 1, st),
+            Op::Ldd => {
+                st.regs[ai] = AbsVal::TOP;
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Std => {
+                out.writes_dram = true;
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Spl => {
+                let w = imm as usize;
+                if !st.dyn_write && st.init & (1 << w) == 0 {
+                    out.diags.push(mk(
+                        p,
+                        pc,
+                        Severity::Warn,
+                        DiagKind::ReadBeforeWrite { word: w as u32 },
+                    ));
+                    // one warning per word per path
+                    st.init |= 1 << w;
+                }
+                st.regs[ai] = st.sp[w];
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Sps => {
+                let w = imm as usize;
+                st.sp[w] = st.regs[ai];
+                st.init |= 1 << w;
+                out.sp_writes |= 1 << w;
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Ldx | Op::Stx | Op::Splx | Op::Spsx => {
+                let data = op.touches_data();
+                let window = if data { "data" } else { "sp" };
+                let words =
+                    if data { DATA_WORDS as i64 } else { SP_WORDS as i64 };
+                let base = st.regs[bi];
+                let idx = tr_add(base, AbsVal::exact(imm));
+                if idx.hi < 0 || idx.lo >= words {
+                    // every execution reaching here traps
+                    out.diags.push(mk(
+                        p,
+                        pc,
+                        Severity::Deny,
+                        DiagKind::ComputedOffsetOob {
+                            window,
+                            lo: idx.lo,
+                            hi: idx.hi,
+                        },
+                    ));
+                    out.trap_free = false;
+                    continue; // no successor
+                }
+                let proven = idx.lo >= 0 && idx.hi < words;
+                if !proven {
+                    out.trap_free = false;
+                    // Surviving the runtime check implies base+imm landed
+                    // in-window; refine the base register when no value
+                    // in its interval can wrap in the add.
+                    if base.lo.checked_add(imm).is_some()
+                        && base.hi.checked_add(imm).is_some()
+                    {
+                        let lo = 0i64.checked_sub(imm);
+                        let hi = (words - 1).checked_sub(imm);
+                        if let (Some(lo), Some(hi)) = (lo, hi) {
+                            if let Some(r) =
+                                st.regs[bi].meet(AbsVal::range(lo, hi))
+                            {
+                                st.regs[bi] = r;
+                            }
+                        }
+                    }
+                }
+                match op {
+                    Op::Ldx => st.regs[ai] = AbsVal::TOP,
+                    Op::Stx => out.writes_dram = true,
+                    Op::Splx => {
+                        if proven && idx.is_const() {
+                            let w = idx.lo as usize;
+                            if !st.dyn_write && st.init & (1 << w) == 0 {
+                                out.diags.push(mk(
+                                    p,
+                                    pc,
+                                    Severity::Warn,
+                                    DiagKind::ReadBeforeWrite {
+                                        word: w as u32,
+                                    },
+                                ));
+                                st.init |= 1 << w;
+                            }
+                            st.regs[ai] = st.sp[w];
+                        } else {
+                            st.regs[ai] = AbsVal::TOP;
+                        }
+                    }
+                    Op::Spsx => {
+                        if proven {
+                            let v = st.regs[ai];
+                            let (lo, hi) = (idx.lo as usize, idx.hi as usize);
+                            for w in lo..=hi {
+                                if idx.is_const() {
+                                    st.sp[w] = v;
+                                    st.init |= 1 << w;
+                                } else {
+                                    // may-write: weak update
+                                    st.sp[w] = st.sp[w].join(v);
+                                }
+                                out.sp_writes |= 1 << w;
+                            }
+                        } else {
+                            st.dyn_write = true;
+                            out.sp_dyn_write = true;
+                            for w in st.sp.iter_mut() {
+                                *w = AbsVal::TOP;
+                            }
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Mov => {
+                st.regs[ai] = st.regs[bi];
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Movi => {
+                st.regs[ai] = AbsVal::exact(imm);
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Add => {
+                st.regs[ai] = tr_add(st.regs[bi], st.regs[ci]);
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Sub => {
+                st.regs[ai] = tr_sub(st.regs[bi], st.regs[ci]);
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Mul => {
+                st.regs[ai] = tr_mul(st.regs[bi], st.regs[ci]);
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Div => {
+                let d = st.regs[ci];
+                if d.proves_nonzero() {
+                    // statically safe
+                } else if d.is_const() && d.lo == 0 {
+                    out.diags.push(mk(
+                        p,
+                        pc,
+                        Severity::Deny,
+                        DiagKind::PossibleDivByZero { divisor: c },
+                    ));
+                    out.trap_free = false;
+                    continue; // provably traps — no successor
+                } else {
+                    out.diags.push(mk(
+                        p,
+                        pc,
+                        Severity::Warn,
+                        DiagKind::PossibleDivByZero { divisor: c },
+                    ));
+                    out.trap_free = false;
+                }
+                // the surviving path has a nonzero divisor
+                st.regs[ci] = st.regs[ci].assume_nonzero();
+                st.regs[ai] = tr_div(st.regs[bi], st.regs[ci]);
+                flow(&mut states, pc + 1, st);
+            }
+            Op::And => {
+                st.regs[ai] = tr_and(st.regs[bi], st.regs[ci]);
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Or => {
+                st.regs[ai] = tr_or(st.regs[bi], st.regs[ci]);
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Xor => {
+                st.regs[ai] = tr_xor(st.regs[bi], st.regs[ci]);
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Not => {
+                st.regs[ai] = tr_not(st.regs[bi]);
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Shl => {
+                st.regs[ai] = tr_shl(st.regs[bi], imm);
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Shr => {
+                st.regs[ai] = tr_shr(st.regs[bi], imm);
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Addi => {
+                st.regs[ai] = tr_add(st.regs[bi], AbsVal::exact(imm));
+                flow(&mut states, pc + 1, st);
+            }
+            Op::Jmp => {
+                let t = imm as usize;
+                if t < n {
+                    flow(&mut states, t, st);
+                } else {
+                    // verify allows target == n; jumping there traps
+                    out.trap_free = false;
+                }
+            }
+            Op::Jeq | Op::Jne | Op::Jlt | Op::Jle | Op::Jgt | Op::Jge => {
+                let t = imm as usize;
+                if let Some(taken) = refine(&st, op, true, a, b) {
+                    if t < n {
+                        flow(&mut states, t, taken);
+                    } else {
+                        out.trap_free = false;
+                    }
+                }
+                if let Some(fall) = refine(&st, op, false, a, b) {
+                    flow(&mut states, pc + 1, fall);
+                }
+            }
+            Op::Next => out.returns_only = false,
+            Op::Ret => {}
+            Op::Trap => out.trap_free = false,
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Asm;
+    use std::sync::Arc;
+
+    fn prog(f: impl FnOnce(&mut Asm)) -> Program {
+        let mut a = Asm::new();
+        f(&mut a);
+        a.finish(32).unwrap()
+    }
+
+    #[test]
+    fn provable_div_by_zero_is_denied() {
+        let p = prog(|a| {
+            a.movi(1, 5);
+            a.movi(2, 0);
+            a.div(3, 1, 2);
+            a.ret();
+        });
+        let an = analyze(&p, SP_INPUTS_ALL);
+        assert!(!an.trap_free);
+        assert!(an.has_deny());
+        assert_eq!(an.diags.len(), 1);
+        let d = &an.diags[0];
+        assert_eq!(d.pc, 2);
+        assert_eq!(d.severity, Severity::Deny);
+        assert_eq!(d.kind, DiagKind::PossibleDivByZero { divisor: 2 });
+        assert!(d.rendered_instr.contains("Div"), "{}", d.rendered_instr);
+    }
+
+    #[test]
+    fn possible_div_by_zero_warns_once_then_refines() {
+        let p = prog(|a| {
+            a.spl(1, 0);
+            a.spl(2, 1);
+            a.div(3, 1, 2);
+            // the surviving path has r2 != 0: no second warning
+            a.div(4, 1, 2);
+            a.ret();
+        });
+        let an = analyze(&p, SP_INPUTS_ALL);
+        assert_eq!(an.diags.len(), 1, "{:?}", an.diags);
+        assert_eq!(an.diags[0].severity, Severity::Warn);
+        assert_eq!(
+            an.diags[0].kind,
+            DiagKind::PossibleDivByZero { divisor: 2 }
+        );
+        assert!(!an.trap_free);
+        assert!(!an.has_deny());
+    }
+
+    #[test]
+    fn proven_nonzero_divisor_is_clean() {
+        let p = prog(|a| {
+            a.spl(1, 0);
+            a.movi(2, 7);
+            a.div(3, 1, 2);
+            a.ret();
+        });
+        let an = analyze(&p, SP_INPUTS_ALL);
+        assert!(an.diags.is_empty(), "{:?}", an.diags);
+        assert!(an.trap_free);
+    }
+
+    #[test]
+    fn read_before_write_flags_undeclared_word() {
+        let p = prog(|a| {
+            a.spl(1, 3);
+            a.ret();
+        });
+        let an = analyze(&p, 0);
+        assert_eq!(an.diags.len(), 1);
+        assert_eq!(an.diags[0].severity, Severity::Warn);
+        assert_eq!(an.diags[0].kind, DiagKind::ReadBeforeWrite { word: 3 });
+        // declared as host-seeded: clean
+        let an = analyze(&p, 1 << 3);
+        assert!(an.diags.is_empty(), "{:?}", an.diags);
+        // written first: clean without any declaration
+        let p = prog(|a| {
+            a.movi(1, 9);
+            a.sps(1, 3);
+            a.spl(2, 3);
+            a.ret();
+        });
+        let an = analyze(&p, 0);
+        assert!(an.diags.is_empty(), "{:?}", an.diags);
+        assert_eq!(an.sp_writes, 1 << 3);
+    }
+
+    #[test]
+    fn computed_offset_provably_oob_is_denied() {
+        for k in [40i64, -1] {
+            let p = prog(|a| {
+                a.movi(1, k);
+                a.ldx(2, 1, 0);
+                a.ret();
+            });
+            let an = analyze(&p, SP_INPUTS_ALL);
+            assert!(an.has_deny(), "k={k}");
+            assert!(!an.trap_free);
+            let d = &an.diags[0];
+            assert_eq!(d.pc, 1);
+            assert_eq!(
+                d.kind,
+                DiagKind::ComputedOffsetOob { window: "data", lo: k, hi: k }
+            );
+            assert!(d.rendered_instr.contains("Ldx"));
+        }
+    }
+
+    #[test]
+    fn computed_offset_proved_in_bounds_is_clean() {
+        let p = prog(|a| {
+            a.movi(1, 3);
+            a.ldx(2, 1, 4); // data[7]
+            a.ret();
+        });
+        let an = analyze(&p, SP_INPUTS_ALL);
+        assert!(an.diags.is_empty(), "{:?}", an.diags);
+        assert!(an.trap_free);
+    }
+
+    #[test]
+    fn unknown_offset_is_silent_but_not_trap_free() {
+        let p = prog(|a| {
+            a.spl(1, 0);
+            a.ldx(2, 1, 0);
+            a.ret();
+        });
+        let an = analyze(&p, SP_INPUTS_ALL);
+        assert!(an.diags.is_empty(), "{:?}", an.diags);
+        assert!(!an.trap_free);
+    }
+
+    #[test]
+    fn branch_refinement_proves_dynamic_bounds() {
+        // guard an unknown index into [0, 32) by explicit branches; the
+        // guarded load must be *proved* safe, keeping trap_free
+        let p = prog(|a| {
+            a.spl(1, 0);
+            a.movi(2, 0);
+            a.movi(3, 32);
+            let skip = a.label();
+            a.jlt(1, 2, skip); // idx < 0  -> skip
+            a.jge(1, 3, skip); // idx >= 32 -> skip
+            a.ldx(4, 1, 0);
+            a.bind(skip);
+            a.ret();
+        });
+        let an = analyze(&p, SP_INPUTS_ALL);
+        assert!(an.diags.is_empty(), "{:?}", an.diags);
+        assert!(an.trap_free, "guarded dynamic load must be proved safe");
+        // entering the load, the index is pinned to [0, 31]
+        let ldx_pc = p
+            .instrs
+            .iter()
+            .position(|i| i.op == Op::Ldx)
+            .unwrap();
+        assert_eq!(an.interval_before(ldx_pc, 1), Some((0, 31)));
+    }
+
+    #[test]
+    fn verify_failure_renders_offending_instruction() {
+        let p = Program::new(vec![Instr::new(Op::Add, 1, 2, 3, 0)], 1);
+        let an = analyze(&p, SP_INPUTS_ALL);
+        assert!(an.has_deny());
+        assert_eq!(an.diags.len(), 1);
+        assert!(matches!(
+            an.diags[0].kind,
+            DiagKind::Verify(VerifyError::NonTerminalTail)
+        ));
+        assert!(an.diags[0].rendered_instr.contains("Add"));
+        // the standalone formatter produces the same line
+        let msg = render_verify_error(&p, &VerifyError::NonTerminalTail);
+        assert_eq!(msg, an.diags[0].to_string());
+        assert!(msg.contains("deny"));
+    }
+
+    #[test]
+    fn writes_dram_is_reachability_aware() {
+        // flat scan says "writes"; the dead store never executes
+        let p = prog(|a| {
+            let over = a.label();
+            a.jmp(over);
+            a.std_(1, 0);
+            a.bind(over);
+            a.ret();
+        });
+        assert!(p.writes_data);
+        let an = analyze(&p, SP_INPUTS_ALL);
+        assert!(!an.writes_dram);
+        assert!(an.trap_free);
+
+        let p = prog(|a| {
+            a.movi(1, 7);
+            a.std_(1, 0);
+            a.ret();
+        });
+        let an = analyze(&p, SP_INPUTS_ALL);
+        assert!(an.writes_dram);
+    }
+
+    #[test]
+    fn explicit_trap_and_next_update_flags() {
+        let p = prog(|a| {
+            a.trap();
+        });
+        let an = analyze(&p, SP_INPUTS_ALL);
+        assert!(!an.trap_free);
+        assert!(an.diags.is_empty(), "explicit TRAP is legal, not a lint");
+
+        let p = prog(|a| {
+            a.movi(0, 0x1000);
+            a.next();
+        });
+        let an = analyze(&p, SP_INPUTS_ALL);
+        assert!(!an.returns_only);
+        assert!(an.trap_free);
+    }
+
+    #[test]
+    fn radix_trie_computed_offset_is_proved_in_bounds() {
+        let it = crate::ds::radixtrie::lookup_iter();
+        let an = analyze(&it.program, it.sp_inputs);
+        assert!(an.diags.is_empty(), "{:?}", an.diags);
+        let instrs = &it.program.instrs;
+        // slot = children + (byte << 3), byte = rem >> 56
+        let (shl_pc, shl) = instrs
+            .iter()
+            .enumerate()
+            .find(|(_, i)| i.op == Op::Shl && i.imm == 3)
+            .expect("slot-offset shl");
+        assert_eq!(
+            an.interval_before(shl_pc, shl.b),
+            Some((0, 255)),
+            "byte from the 56-bit logical shift"
+        );
+        let (add_pc, _) = instrs
+            .iter()
+            .enumerate()
+            .skip(shl_pc + 1)
+            .find(|(_, i)| i.op == Op::Add && (i.b == shl.a || i.c == shl.a))
+            .expect("slot add");
+        assert_eq!(
+            an.interval_before(add_pc, shl.a),
+            Some((0, 2040)),
+            "slot offset proved in [0, 8*255]"
+        );
+    }
+
+    #[test]
+    fn graph_khop_is_clean_via_nonzero_refinement() {
+        // the modu lowering divides by the vertex degree, which is only
+        // safe because the deg == 0 path returns before the DIV
+        let it = crate::ds::graph::khop_iter();
+        let an = analyze(&it.program, it.sp_inputs);
+        assert!(an.diags.is_empty(), "{:?}", an.diags);
+        assert!(!an.trap_free, "explicit corrupt-adjacency TRAP remains");
+        assert!(!an.writes_dram);
+    }
+
+    #[test]
+    fn all_builtin_programs_analyze_clean() {
+        for (name, it) in crate::ds::builtin_iters() {
+            let an = analyze(&it.program, it.sp_inputs);
+            assert!(
+                an.diags.is_empty(),
+                "{name}: {:?}",
+                an.diags
+            );
+            assert!(!an.has_deny(), "{name}");
+        }
+    }
+
+    #[test]
+    fn no_progress_repeat_is_denied_with_escapes() {
+        use crate::compiler::CompiledIter;
+        use crate::isa::SP_WORDS;
+
+        let read_only = Arc::new(CompiledIter::new(prog(|a| {
+            a.spl(1, 0);
+            a.ret();
+        })));
+        let mut op = crate::rack::Op::new(
+            read_only.clone(),
+            0x1000,
+            [0i64; SP_WORDS],
+        );
+        op.stages[0].repeat_while = Some((1, 2));
+        let diags = op.lint();
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].severity, Severity::Deny);
+        assert_eq!(
+            diags[0].kind,
+            DiagKind::NoProgressRepeat {
+                stage: 0,
+                addr_word: 1,
+                guard_word: 2
+            }
+        );
+
+        // escape 1: an sp_override pins the predicate off each round
+        let mut op2 = crate::rack::Op::new(
+            read_only,
+            0x1000,
+            [0i64; SP_WORDS],
+        );
+        op2.stages[0].repeat_while = Some((1, 2));
+        op2.stages[0].sp_overrides = vec![(2, 0)];
+        assert!(op2.lint().is_empty(), "{:?}", op2.lint());
+
+        // escape 2: the program writes a predicate word
+        let writer = Arc::new(CompiledIter::new(prog(|a| {
+            a.movi(1, 7);
+            a.sps(1, 1);
+            a.ret();
+        })));
+        let mut op3 =
+            crate::rack::Op::new(writer, 0x1000, [0i64; SP_WORDS]);
+        op3.stages[0].repeat_while = Some((1, 2));
+        assert!(op3.lint().is_empty(), "{:?}", op3.lint());
+    }
+
+    #[test]
+    fn scan_op_chains_pass_progress_lint() {
+        // the two real repeat_while users must keep passing Op::lint
+        let sk = crate::ds::skiplist::scan_iter();
+        let an = analyze(&sk.program, sk.sp_inputs);
+        assert!(
+            an.sp_writes & (1 << 1) != 0,
+            "skiplist scan updates its continuation word"
+        );
+        let bp = crate::ds::bplustree::scan_iter();
+        let an = analyze(&bp.program, bp.sp_inputs);
+        assert!(an.sp_writes & (1 << 1) != 0 || an.sp_dyn_write);
+    }
+}

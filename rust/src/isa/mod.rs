@@ -11,12 +11,17 @@
 //! by `rust/tests/integration_runtime.rs` (native interpreter vs the AOT
 //! XLA artifact) and the pytest suite (Pallas kernel vs oracle).
 
+pub mod analyze;
 pub mod asm;
 pub mod cost;
 pub mod op;
 pub mod program;
 pub mod verify;
 
+pub use analyze::{
+    analyze, render_verify_error, AbsVal, Analysis, Diag, DiagKind,
+    Severity, SP_INPUTS_ALL,
+};
 pub use asm::Asm;
 pub use cost::{CostModel, IterCost, DEFAULT_ETA};
 pub use op::{Instr, Op};

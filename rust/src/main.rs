@@ -51,10 +51,12 @@ fn main() -> CliResult {
         Some("loadgen") => loadgen(&args),
         Some("stats") => stats(&args),
         Some("inspect") => inspect(&args),
+        Some("lint") => lint(&args),
         Some("selftest") => selftest(),
         _ => {
             eprintln!(
-                "usage: pulse <serve|loadgen|stats|inspect|selftest>\n\
+                "usage: pulse <serve|loadgen|stats|inspect|lint|\
+                 selftest>\n\
                  serve:   [--app webservice|wiredtiger|btrdb|skiplist|\
                  radixtrie|graph] [--backend pulse|pulse-acc|cache|rpc|\
                  rpc-arm|cache-rpc|live] [--mix a|b|c] [--nodes N] \
@@ -70,6 +72,8 @@ fn main() -> CliResult {
                  sets the admission window; --io-threads N sizes the \
                  event-loop worker pool (0 = auto), --legacy-threads \
                  serves with the old two-threads-per-connection tier; \
+                 --read-only rejects REGISTERs of programs that may \
+                 write node DRAM; \
                  observability: \
                  [--trace-out PATH [--trace-sample N] [--trace-seed S]] \
                  [--stats-out PATH --stats-interval-s S]\n\
@@ -80,7 +84,10 @@ fn main() -> CliResult {
                  OPS_PER_S (open loop)] [--keys N] [--ops N] [--seed S] \
                  [--json NAME] — rack/workload flags must match the \
                  server's\n\
-                 inspect: [--iter NAME]"
+                 inspect: [--iter NAME]\n\
+                 lint: [--app NAME | --all-scenarios] [--json] — run \
+                 the abstract-interpretation analyzer over built-in \
+                 scenario programs; exits nonzero on any deny"
             );
             std::process::exit(2);
         }
@@ -160,6 +167,9 @@ fn serve_listen(args: &Args, listen: &str) -> CliResult {
         // legacy thread-pair tier for A/B comparison
         io_threads: args.usize_or("io-threads", 0),
         legacy_threads: args.flag("legacy-threads"),
+        // read-only serving: the analyzer's write-effect inference
+        // gates mutating REGISTERs at wire admission
+        allow_writes: !args.flag("read-only"),
         ..SrvConfig::default()
     };
     let (mut server, handle) = Server::bind(backend, listen, cfg)?;
@@ -499,37 +509,26 @@ fn print_report(
     print_live_counters(&m);
 }
 
+/// Look a built-in scenario iterator up by CLI name (the shared
+/// `ds::builtin_iters` registry), with a name listing on miss.
+fn named_iter(
+    name: &str,
+) -> Result<pulse::compiler::CompiledIter, Box<dyn std::error::Error>> {
+    let mut all = pulse::ds::builtin_iters();
+    if let Some(pos) = all.iter().position(|(n, _)| *n == name) {
+        return Ok(all.swap_remove(pos).1);
+    }
+    let names: Vec<&str> = all.iter().map(|(n, _)| *n).collect();
+    Err(format!(
+        "unknown iterator {name:?} (try one of: {})",
+        names.join(", ")
+    )
+    .into())
+}
+
 fn inspect(args: &Args) -> CliResult {
     let name = args.str_or("iter", "list-find");
-    let iter = match name.as_str() {
-        "list-find" => pulse::ds::list::find_iter(),
-        "list-sum" => pulse::ds::list::sum_iter(),
-        "chain-find" => pulse::ds::hashmap::chain_find_iter(),
-        "chain-update" => pulse::ds::hashmap::chain_update_iter(),
-        "bst-lower-bound" => pulse::ds::bst::lower_bound_iter(),
-        "btree-locate" => pulse::ds::btree::locate_iter(),
-        "bplustree-get" => pulse::ds::bplustree::get_iter(),
-        "bplustree-scan" => pulse::ds::bplustree::scan_iter(),
-        "bplustree-sum" => pulse::ds::bplustree::sum_iter(),
-        "bplustree-update" => pulse::ds::bplustree::update_iter(),
-        "list-push-front" => pulse::ds::list::push_front_iter(),
-        "skiplist-find" => pulse::ds::skiplist::find_iter(),
-        "skiplist-locate" => pulse::ds::skiplist::locate_iter(),
-        "skiplist-scan" => pulse::ds::skiplist::scan_iter(),
-        "radixtrie-lookup" => pulse::ds::radixtrie::lookup_iter(),
-        "graph-khop" => pulse::ds::graph::khop_iter(),
-        other => {
-            return Err(format!(
-                "unknown iterator {other:?} (try list-find, \
-                 list-push-front, chain-find, chain-update, \
-                 bst-lower-bound, btree-locate, bplustree-get, \
-                 bplustree-scan, bplustree-sum, bplustree-update, \
-                 skiplist-find, skiplist-scan, radixtrie-lookup, \
-                 graph-khop)"
-            )
-            .into())
-        }
-    };
+    let iter = named_iter(&name)?;
     println!(
         "{name}: {} instructions, loads {} words/iteration{}",
         iter.program.len(),
@@ -549,6 +548,87 @@ fn inspect(args: &Args) -> CliResult {
     );
     for (pc, i) in iter.program.instrs.iter().enumerate() {
         println!("  {pc:2}: {i}");
+    }
+    Ok(())
+}
+
+/// `pulse lint` — run the abstract-interpretation analyzer
+/// (`isa::analyze`) over built-in scenario programs and report every
+/// diagnostic. The third enforcement layer (compile → wire admission →
+/// **lint**): CI runs `pulse lint --all-scenarios --json` and fails
+/// the build on any deny-severity finding.
+fn lint(args: &Args) -> CliResult {
+    use pulse::util::json::Json;
+
+    let iters = if let Some(name) = args.get("app") {
+        vec![(String::from(name), named_iter(name)?)]
+    } else {
+        // `--all-scenarios` is also the default when no --app is given
+        pulse::ds::builtin_iters()
+            .into_iter()
+            .map(|(n, it)| (n.to_string(), it))
+            .collect()
+    };
+
+    let mut denies = 0usize;
+    let mut warns = 0usize;
+    let mut rows = Vec::new();
+    for (name, iter) in &iters {
+        let a = pulse::isa::analyze(&iter.program, iter.sp_inputs);
+        let deny =
+            a.diags.iter().filter(|d| {
+                d.severity == pulse::isa::Severity::Deny
+            }).count();
+        let warn = a.diags.len() - deny;
+        denies += deny;
+        warns += warn;
+        if args.flag("json") {
+            let mut row = Json::obj();
+            row.set("scenario", name.as_str());
+            row.set("instructions", iter.program.len());
+            row.set("writes_dram", a.writes_dram);
+            row.set("trap_free", a.trap_free);
+            row.set("deny", deny);
+            row.set("warn", warn);
+            row.set(
+                "diags",
+                a.diags
+                    .iter()
+                    .map(|d| Json::from(d.to_string()))
+                    .collect::<Vec<Json>>(),
+            );
+            rows.push(row);
+        } else {
+            println!(
+                "{name}: {} instructions, {} deny, {} warn{}{}",
+                iter.program.len(),
+                deny,
+                warn,
+                if a.writes_dram { ", writes DRAM" } else { "" },
+                if a.trap_free { ", trap-free" } else { "" },
+            );
+            for d in &a.diags {
+                println!("  {d}");
+            }
+        }
+    }
+    if args.flag("json") {
+        let mut out = Json::obj();
+        out.set("scenarios", rows);
+        out.set("deny", denies);
+        out.set("warn", warns);
+        println!("{}", out.render());
+    } else {
+        println!(
+            "lint: {} scenario(s), {denies} deny, {warns} warn",
+            iters.len()
+        );
+    }
+    if denies > 0 {
+        return Err(format!(
+            "lint failed: {denies} deny-severity diagnostic(s)"
+        )
+        .into());
     }
     Ok(())
 }

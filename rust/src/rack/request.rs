@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use crate::compiler::CompiledIter;
-use crate::isa::SP_WORDS;
+use crate::isa::{Diag, DiagKind, Severity, SP_WORDS};
 use crate::mem::GAddr;
 use crate::sim::Ns;
 
@@ -184,6 +184,52 @@ impl Op {
             stage.validate()?;
         }
         Ok(())
+    }
+
+    /// Static lint over the whole stage chain: every stage's analyzer
+    /// diagnostics, plus the chain-level **progress analysis** — a
+    /// `repeat_while` stage whose program on no path updates the
+    /// continuation pointer or the guard counter, and whose
+    /// `sp_overrides` (re-applied every round) don't pin the predicate
+    /// off, is a guaranteed-infinite loop under budget:
+    /// `NoProgressRepeat`, Deny.
+    pub fn lint(&self) -> Vec<Diag> {
+        let mut out = Vec::new();
+        for (si, stage) in self.stages.iter().enumerate() {
+            let analysis = crate::isa::analyze(
+                &stage.iter.program,
+                stage.iter.sp_inputs,
+            );
+            if let Some((aw, gw)) = stage.repeat_while {
+                if (aw as usize) < SP_WORDS && (gw as usize) < SP_WORDS {
+                    let may_update = analysis.sp_dyn_write
+                        || analysis.sp_writes & (1 << aw) != 0
+                        || analysis.sp_writes & (1 << gw) != 0;
+                    let pinned_off = stage.sp_overrides.iter().any(
+                        |&(w, v)| {
+                            (w == aw && v == 0) || (w == gw && v <= 0)
+                        },
+                    );
+                    if !may_update && !pinned_off {
+                        out.push(Diag {
+                            pc: 0,
+                            severity: Severity::Deny,
+                            kind: DiagKind::NoProgressRepeat {
+                                stage: si,
+                                addr_word: aw,
+                                guard_word: gw,
+                            },
+                            rendered_instr: format!(
+                                "repeat_while(sp[{aw}] != 0 && \
+                                 sp[{gw}] > 0)"
+                            ),
+                        });
+                    }
+                }
+            }
+            out.extend(analysis.diags);
+        }
+        out
     }
 }
 

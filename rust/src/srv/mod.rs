@@ -116,6 +116,11 @@ pub struct SrvConfig {
     /// of the event-loop runtime (the `net_serving` old-vs-new
     /// baseline; also the forced fallback on non-unix targets).
     pub legacy_threads: bool,
+    /// Admit programs whose analysis proves they may store into node
+    /// DRAM (`Analysis::writes_dram`). `false` = read-only serving:
+    /// mutating REGISTERs are rejected with a structured ERROR
+    /// (`pulse serve --read-only`).
+    pub allow_writes: bool,
 }
 
 impl Default for SrvConfig {
@@ -134,8 +139,39 @@ impl Default for SrvConfig {
             trace: None,
             io_threads: 0,
             legacy_threads: false,
+            allow_writes: true,
         }
     }
+}
+
+/// Wire-admission vetting shared by both serving tiers (the second of
+/// the three enforcement layers: compile → **wire admission** → `pulse
+/// lint`). Runs the structural verifier *and* the abstract
+/// interpreter; any deny-severity diagnostic — certain trap, provably
+/// out-of-bounds computed offset — rejects the REGISTER, as does a
+/// proven DRAM write under read-only serving. The returned string
+/// carries the rendered diagnostic (pc + disassembled instruction)
+/// back to the client in the ERROR frame.
+pub(crate) fn vet_program(
+    program: &crate::isa::Program,
+    allow_writes: bool,
+) -> Result<(), String> {
+    let analysis = crate::isa::analyze(program, crate::isa::SP_INPUTS_ALL);
+    if let Some(d) = analysis
+        .diags
+        .iter()
+        .find(|d| d.severity == crate::isa::Severity::Deny)
+    {
+        return Err(format!("program rejected: {d}"));
+    }
+    if !allow_writes && analysis.writes_dram {
+        return Err(
+            "program rejected: writes to node DRAM, but this server \
+             is read-only (--read-only)"
+                .to_string(),
+        );
+    }
+    Ok(())
 }
 
 /// Everything one server run observed, returned by [`Server::run`].
@@ -626,17 +662,14 @@ fn reader_loop(
         };
         match env.frame {
             Frame::Register { id, program } => {
-                // a frame that decoded but carries an unverifiable
-                // program is a semantic rejection, not wire
-                // corruption: it answers ERROR (counted by the
+                // a frame that decoded but carries an unverifiable or
+                // analyzer-denied program is a semantic rejection, not
+                // wire corruption: it answers ERROR (counted by the
                 // writer as errors_sent) without touching the
                 // decode_errors counter
-                if let Err(e) = crate::isa::verify(&program) {
-                    err(
-                        env.seq,
-                        ErrCode::BadProgram,
-                        &format!("verify failed: {e:?}"),
-                    );
+                if let Err(e) = vet_program(&program, cfg.allow_writes)
+                {
+                    err(env.seq, ErrCode::BadProgram, &e);
                     continue;
                 }
                 // bounded like every other client-controlled edge:

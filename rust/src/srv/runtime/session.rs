@@ -333,14 +333,19 @@ impl Session {
         };
         match env.frame {
             Frame::Register { id, program } => {
-                // semantic rejection, not wire corruption: answers
-                // ERROR without touching decode_errors
-                if let Err(e) = crate::isa::verify(&program) {
+                // semantic rejection (verifier or analyzer deny, or
+                // a write under read-only serving), not wire
+                // corruption: answers ERROR without touching
+                // decode_errors
+                if let Err(msg) = crate::srv::vet_program(
+                    &program,
+                    ctx.cfg.allow_writes,
+                ) {
                     self.queue_frame(
                         env.seq,
                         &Frame::Error {
                             code: ErrCode::BadProgram,
-                            msg: format!("verify failed: {e:?}"),
+                            msg,
                         },
                         None,
                     );

@@ -128,6 +128,136 @@ pub fn random_verified_program(rng: &mut Rng, max_len: usize) -> Program {
     p
 }
 
+/// Generate a random program the abstract interpreter
+/// (`isa::analyze`) can *prove* trap-free: every potentially-trapping
+/// construct is emitted as an atomic movi-then-use unit (constant
+/// nonzero divisor, constant in-bounds dynamic index) and jumps land
+/// only on unit boundaries, so the constant facts are re-established
+/// after every control-flow join. The differential-soundness property
+/// test (`rust/tests/proptest_ds.rs`) feeds these to the engines:
+/// `trap_free` must never be contradicted at runtime.
+pub fn random_provable_program(rng: &mut Rng, max_units: usize) -> Program {
+    let reg = |rng: &mut Rng| rng.below(NREG as u64) as u8;
+    let n_units = rng.range_u64(1, max_units as u64 + 1) as usize;
+    // (instructions, forward-jump target as a *unit* index for the
+    // unit's last instruction) — flattened and patched below
+    let mut units: Vec<(Vec<Instr>, Option<usize>)> = Vec::new();
+    for u in 0..n_units {
+        let unit = match rng.below(6) {
+            0 | 1 => {
+                // ALU: wrapping semantics, never traps
+                let op = *rng.choose(&[
+                    Op::Add,
+                    Op::Sub,
+                    Op::Mul,
+                    Op::And,
+                    Op::Or,
+                    Op::Xor,
+                    Op::Mov,
+                    Op::Not,
+                    Op::Shl,
+                    Op::Shr,
+                    Op::Addi,
+                ]);
+                let imm = match op {
+                    Op::Shl | Op::Shr => rng.below(64) as i64,
+                    _ => rng.range_u64(0, 2001) as i64 - 1000,
+                };
+                (
+                    vec![Instr::new(op, reg(rng), reg(rng), reg(rng), imm)],
+                    None,
+                )
+            }
+            2 => (
+                vec![Instr::new(Op::Movi, reg(rng), 0, 0, rng.next_i64())],
+                None,
+            ),
+            3 => {
+                // provably safe division: constant nonzero divisor
+                let d = reg(rng);
+                let mag = rng.range_u64(1, 1000) as i64;
+                let k = if rng.chance(0.5) { mag } else { -mag };
+                (
+                    vec![
+                        Instr::new(Op::Movi, d, 0, 0, k),
+                        Instr::new(Op::Div, reg(rng), reg(rng), d, 0),
+                    ],
+                    None,
+                )
+            }
+            4 => {
+                // provably in-bounds dynamic access: constant base
+                let op =
+                    *rng.choose(&[Op::Ldx, Op::Stx, Op::Splx, Op::Spsx]);
+                let window = if op.touches_data() {
+                    DATA_WORDS as u64
+                } else {
+                    SP_WORDS as u64
+                };
+                let b = reg(rng);
+                let base = rng.below(window);
+                let imm = rng.below(window - base) as i64;
+                (
+                    vec![
+                        Instr::new(Op::Movi, b, 0, 0, base as i64),
+                        Instr::new(op, reg(rng), b, 0, imm),
+                    ],
+                    None,
+                )
+            }
+            _ => {
+                // forward jump to a later unit boundary (incl. the
+                // terminal unit) — never to pc == n, the trap edge
+                let op = *rng.choose(&[
+                    Op::Jeq,
+                    Op::Jne,
+                    Op::Jlt,
+                    Op::Jle,
+                    Op::Jgt,
+                    Op::Jge,
+                    Op::Jmp,
+                ]);
+                let tgt = rng.range_u64(u as u64 + 1, n_units as u64 + 1)
+                    as usize;
+                (
+                    vec![Instr::new(op, reg(rng), reg(rng), 0, 0)],
+                    Some(tgt),
+                )
+            }
+        };
+        units.push(unit);
+    }
+    // terminal unit: Ret/Next only — an explicit Trap would (rightly)
+    // spoil the trap-free proof
+    units.push((
+        vec![Instr::new(*rng.choose(&[Op::Next, Op::Ret]), 0, 0, 0, 0)],
+        None,
+    ));
+    let starts: Vec<usize> = units
+        .iter()
+        .scan(0usize, |acc, (is, _)| {
+            let s = *acc;
+            *acc += is.len();
+            Some(s)
+        })
+        .collect();
+    let mut instrs = Vec::new();
+    for (is, tgt) in &units {
+        for (j, ins) in is.iter().enumerate() {
+            let mut ins = *ins;
+            if j == is.len() - 1 {
+                if let Some(t) = tgt {
+                    ins.imm = starts[*t] as i64;
+                }
+            }
+            instrs.push(ins);
+        }
+    }
+    let p = Program::new(instrs, DATA_WORDS as u8);
+    verify(&p).expect("provable generator made an unverifiable program");
+    p
+}
+
 /// Random workspace with full-range register/window contents.
 pub fn random_workspace(rng: &mut Rng) -> Workspace {
     let mut w = Workspace::new();

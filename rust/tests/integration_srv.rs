@@ -845,3 +845,109 @@ fn min_payload_constant_matches_the_codec() {
     let wire = encode_frame(0, &Frame::Busy);
     assert_eq!(wire.len() - 4, MIN_PAYLOAD);
 }
+
+/// Wire admission, on BOTH serving tiers: a program that decodes and
+/// verifies fine but that the abstract interpreter denies — here a
+/// division by a constant zero — must be rejected with
+/// ERROR(BadProgram) carrying the rendered diagnostic; and under
+/// `--read-only` serving a program the analyzer proves may write node
+/// DRAM must be rejected while read-only programs still register.
+/// These are semantic rejections (answered ERROR, counted as
+/// errors_sent), not wire corruption: decode_errors must stay 0 and
+/// the connection must keep working.
+#[test]
+fn analyzer_deny_and_read_only_are_enforced_at_wire_admission() {
+    use pulse::isa::{Instr, Op, Program};
+    for legacy in [false, true] {
+        let spec = ServingSpec {
+            workload: "mix-c".into(),
+            keys: 200,
+            ops: 10,
+            ..ServingSpec::default()
+        };
+        let cfg = SrvConfig {
+            legacy_threads: legacy,
+            allow_writes: false,
+            ..SrvConfig::default()
+        };
+        let (handle, join, _ops) = start_server("live", &spec, cfg);
+        let mut c = WireClient::connect(handle.addr()).unwrap();
+
+        // (a) analyzer deny: r3 = r1 / 0 — passes the structural
+        // verifier, certainly traps at runtime
+        let denied = Program::new(
+            vec![
+                Instr::new(Op::Movi, 1, 0, 0, 5),
+                Instr::new(Op::Movi, 2, 0, 0, 0),
+                Instr::new(Op::Div, 3, 1, 2, 0),
+                Instr::new(Op::Ret, 0, 0, 0, 0),
+            ],
+            1,
+        );
+        assert!(
+            pulse::isa::verify(&denied).is_ok(),
+            "the deny exemplar must be verifier-clean"
+        );
+        let seq = c.next_seq();
+        c.send(seq, &Frame::Register { id: 7, program: denied })
+            .unwrap();
+        let env = c.recv().unwrap().expect("deny reply");
+        assert_eq!(env.seq, seq);
+        match env.frame {
+            Frame::Error { code, msg } => {
+                assert_eq!(
+                    code,
+                    ErrCode::BadProgram,
+                    "legacy={legacy}: wrong code: {msg}"
+                );
+                assert!(
+                    msg.contains("PossibleDivByZero"),
+                    "legacy={legacy}: diagnostic text missing: {msg}"
+                );
+                assert!(
+                    msg.contains("Div"),
+                    "legacy={legacy}: rendered instruction missing: \
+                     {msg}"
+                );
+            }
+            other => panic!("legacy={legacy}: expected ERROR: {other:?}"),
+        }
+
+        // (b) read-only serving rejects a proven-mutating program...
+        let mutating = pulse::ds::list::push_front_iter();
+        let seq = c.next_seq();
+        c.send(
+            seq,
+            &Frame::Register {
+                id: 8,
+                program: (*mutating.program).clone(),
+            },
+        )
+        .unwrap();
+        let env = c.recv().unwrap().expect("read-only reply");
+        match env.frame {
+            Frame::Error { code, msg } => {
+                assert_eq!(code, ErrCode::BadProgram);
+                assert!(
+                    msg.contains("read-only"),
+                    "legacy={legacy}: want read-only rejection: {msg}"
+                );
+            }
+            other => panic!("legacy={legacy}: expected ERROR: {other:?}"),
+        }
+
+        // (c) ...and still admits a read-only program on the very
+        // same connection
+        let find = pulse::ds::list::find_iter();
+        c.register(9, &find.program).unwrap();
+
+        drop(c);
+        handle.shutdown();
+        let summary = join.join().unwrap();
+        assert_eq!(
+            summary.srv.decode_errors, 0,
+            "legacy={legacy}: semantic rejections must not count as \
+             decode errors"
+        );
+    }
+}

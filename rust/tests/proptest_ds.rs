@@ -253,3 +253,67 @@ fn prop_results_agnostic_to_granularity() {
         Ok(())
     });
 }
+
+/// Differential soundness of the abstract interpreter: whenever
+/// `isa::analyze` proves a program trap-free, no engine may trap on
+/// it, for any workspace. Two generators feed the property — the
+/// dedicated provable generator (every case exercises the proof) and
+/// the unrestricted may-trap generator (whatever the analyzer happens
+/// to certify must hold up). Pinned seeds; `PULSE_TEST_SCALE` deepens
+/// both the case count (via `run_prop`) as in the rest of this suite.
+#[test]
+fn prop_analyzer_trap_free_proof_is_sound() {
+    use pulse::interp::logic_pass;
+    use pulse::isa::{analyze, Status, SP_INPUTS_ALL};
+    use pulse::testgen::{random_provable_program, random_workspace};
+    use pulse::util::ptest::run_prop;
+
+    run_prop("analyzer-soundness-provable", 0x50AD, 40, |rng| {
+        let p = random_provable_program(rng, 10);
+        let a = analyze(&p, SP_INPUTS_ALL);
+        prop_assert!(
+            !a.has_deny(),
+            "provable program denied: {:?}",
+            a.diags
+        );
+        prop_assert!(
+            a.trap_free,
+            "provable program not proved trap-free:\n{p:?}"
+        );
+        for _ in 0..8 {
+            let mut w = random_workspace(rng);
+            let r = logic_pass(&p, &mut w);
+            prop_assert!(
+                r.status != Status::Trap,
+                "analyzer-certified program trapped:\n{p:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_analyzer_never_falsely_certifies_random_programs() {
+    use pulse::interp::logic_pass;
+    use pulse::isa::{analyze, Status, SP_INPUTS_ALL};
+    use pulse::testgen::{random_verified_program, random_workspace};
+    use pulse::util::ptest::run_prop;
+
+    run_prop("analyzer-soundness-random", 0x50AE, 60, |rng| {
+        let p = random_verified_program(rng, 24);
+        let a = analyze(&p, SP_INPUTS_ALL);
+        if !a.trap_free {
+            // nothing was certified; nothing to contradict
+            return Ok(());
+        }
+        for _ in 0..8 {
+            let mut w = random_workspace(rng);
+            let r = logic_pass(&p, &mut w);
+            prop_assert!(
+                r.status != Status::Trap,
+                "analyzer certified a trapping program:\n{p:?}"
+            );
+        }
+        Ok(())
+    });
+}
