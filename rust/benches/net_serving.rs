@@ -119,8 +119,22 @@ fn run_config(kind: &str, shards: usize, conns: usize, tbl: &mut Table) -> Json 
         .set("busy", report.busy)
         .set("errors", report.errors)
         .set("server", summary.srv.to_json())
-        .set("engine", summary.engine.run.to_json());
+        .set("engine", summary.engine.run.to_json())
+        .set("live", live_counters_json(&summary.backend))
+        .set("registry", summary.registry);
     row
+}
+
+/// The live engine's dataplane counters as a JSON fragment (all zero
+/// for the inline backends).
+fn live_counters_json(b: &pulse::backend::BackendMetrics) -> Json {
+    let mut j = Json::obj();
+    j.set("forwards", b.live_forwards)
+        .set("yields", b.live_yields)
+        .set("traps", b.live_traps)
+        .set("drops", b.live_drops)
+        .set("max_queue_depth", b.live_max_queue_depth);
+    j
 }
 
 /// One old-vs-new round trip at high connection count. Unlike the
@@ -204,7 +218,9 @@ fn run_high_conn(legacy: bool, conns: usize, tbl: &mut Table) -> Json {
         .set("serving_ms", summary.serving_ms)
         .set("drain_ms", summary.drain_ms)
         .set("server", summary.srv.to_json())
-        .set("engine", summary.engine.run.to_json());
+        .set("engine", summary.engine.run.to_json())
+        .set("live", live_counters_json(&summary.backend))
+        .set("registry", summary.registry);
     row
 }
 

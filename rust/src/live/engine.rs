@@ -52,15 +52,15 @@ use crate::isa::{Status, SP_WORDS};
 use crate::mem::GAddr;
 use crate::net::{RequestId, TraversalMsg};
 use crate::obs::{
-    MetricsRegistry, OpTrace, Span, SpanKind, Trace, TraceConfig,
-    TraceRing, Tracer,
+    AtomicHist, MetricsRegistry, OpTrace, Span, SpanKind, Trace,
+    TraceConfig, TraceRing, Tracer,
 };
 use crate::rack::{Rack, ServeReport};
 
 use super::metrics::{LiveRunStats, ShardStats};
 use super::queue::{self, QueueSnapshot, QueueTx, TrySend};
 use super::router::Router;
-use super::shard::{run_shard, LiveJob, Reply, ShardMsg};
+use super::shard::{run_shard, JobTiming, LiveJob, Reply, ShardMsg};
 
 /// Tunables of the persistent engine.
 #[derive(Debug, Clone, Copy)]
@@ -110,6 +110,29 @@ pub enum CompletionCode {
     ShuttingDown,
 }
 
+/// Phase-sliced engine-side latency breakdown of one served op,
+/// present on a [`Completion`] only when its [`Submission`] carried an
+/// admission stamp (`t0`). Slices are disjoint:
+/// `queue_ns + exec_ns + transit_ns <= latency_ns`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseSlices {
+    /// Submission stamp → first shard pop (engine inbox + shard
+    /// queue wait).
+    pub queue_ns: u64,
+    /// Sum of measured accelerator visit durations.
+    pub exec_ns: u64,
+    /// Inter-shard transit (forward/bounce/boost legs) plus the
+    /// final reply leg back to the dispatcher.
+    pub transit_ns: u64,
+    /// Shard visits (pops) the traversal made.
+    pub visits: u32,
+    /// Engine admission index — joins the sampled-trace span stream
+    /// (`obs::Span::op`) when `traced`.
+    pub op: u64,
+    /// Whether the tracer sampled this op.
+    pub traced: bool,
+}
+
 /// Terminal result of one submission, delivered through its `done`
 /// callback on the dispatcher thread (keep the callback cheap — it
 /// runs inside the serving loop; a channel send is the intended use).
@@ -124,6 +147,8 @@ pub struct Completion {
     pub crossings: u32,
     /// Dispatcher-observed service time (admission -> completion).
     pub latency_ns: u64,
+    /// Phase attribution; `Some` iff the submission set `t0`.
+    pub phases: Option<PhaseSlices>,
 }
 
 /// One offloaded traversal, submitted from any thread.
@@ -135,6 +160,15 @@ pub struct Submission {
     pub budget: u32,
     /// Correlation tag echoed in the [`Completion`].
     pub tag: u64,
+    /// Admission stamp (wire decode time). `Some` opts this op into
+    /// phase-sliced attribution: the job carries a [`JobTiming`]
+    /// through every hop and the completion carries [`PhaseSlices`].
+    /// `None` (the default) keeps the hot path free of extra clock
+    /// reads and histogram records.
+    pub t0: Option<Instant>,
+    /// Per-program execute histogram (`engine.execute.prog{id}`),
+    /// recorded at completion when attribution is on.
+    pub exec_hist: Option<Arc<AtomicHist>>,
     /// Invoked exactly once with the terminal result.
     pub done: Box<dyn FnOnce(Completion) + Send>,
 }
@@ -231,6 +265,33 @@ pub struct EngineReport {
     pub trace: Trace,
 }
 
+/// The engine-side per-phase histograms (`engine.phase.*`), created
+/// eagerly in [`Engine::run`] when a registry is attached so the
+/// names are always present in STATS snapshots; they only accumulate
+/// records for submissions that opted into attribution (`t0` set) —
+/// an unattributed workload leaves every count at zero.
+struct EnginePhaseHists {
+    queue: Arc<AtomicHist>,
+    execute: Arc<AtomicHist>,
+    transit: Arc<AtomicHist>,
+}
+
+impl EnginePhaseHists {
+    fn new(reg: &MetricsRegistry) -> Self {
+        Self {
+            queue: reg.hist("engine.phase.queue_wait"),
+            execute: reg.hist("engine.phase.execute"),
+            transit: reg.hist("engine.phase.transit"),
+        }
+    }
+
+    fn record(&self, ph: &PhaseSlices) {
+        self.queue.record(ph.queue_ns.max(1));
+        self.execute.record(ph.exec_ns.max(1));
+        self.transit.record(ph.transit_ns.max(1));
+    }
+}
+
 /// The dispatcher side; create with [`Engine::new`], then call
 /// [`Engine::run`] on the thread that owns the rack (it blocks until
 /// the drain completes).
@@ -284,12 +345,13 @@ impl Engine {
             Some(c) => Tracer::new(c),
             None => Tracer::disabled(),
         };
-        if let Some(reg) = &self.registry {
+        let phase_hists = self.registry.as_ref().map(|reg| {
             let inbox = Arc::clone(&inbox_stats);
             reg.gauge_fn("engine.inbox.depth", move || {
                 inbox.snapshot().depth() as f64
             });
-        }
+            EnginePhaseHists::new(reg)
+        });
 
         let mut report = EngineReport::default();
         if self.cfg.sharded {
@@ -354,6 +416,7 @@ impl Engine {
                         draining: false,
                         tracer,
                         ring: tracer.make_ring(),
+                        phase: phase_hists.as_ref(),
                     };
                     loop {
                         match self.rx.recv() {
@@ -418,6 +481,12 @@ impl Engine {
                         let op = inline_seq;
                         inline_seq += 1;
                         let traced = tracer.sampled(op);
+                        // attribution: inbox wait is the queue slice;
+                        // the whole traversal is one "visit"
+                        let queue_ns = sub.t0.map(|t0| {
+                            born.saturating_duration_since(t0)
+                                .as_nanos() as u64
+                        });
                         let o = if traced {
                             let mut ot = OpTrace {
                                 ring: &mut ring,
@@ -463,6 +532,16 @@ impl Engine {
                             report.report.net_bytes += wire * 2
                                 + o.crossings as u64 * wire;
                         }
+                        let phases = queue_ns.map(|q| PhaseSlices {
+                            queue_ns: q,
+                            exec_ns: (born.elapsed().as_nanos()
+                                as u64)
+                                .max(1),
+                            transit_ns: 0,
+                            visits: 1,
+                            op,
+                            traced,
+                        });
                         complete_done(
                             &mut report,
                             sub,
@@ -471,6 +550,8 @@ impl Engine {
                             o.iters as u64,
                             o.crossings,
                             born,
+                            phases,
+                            phase_hists.as_ref(),
                         );
                     }
                     Some(EngineMsg::Reply(_)) => {
@@ -497,6 +578,7 @@ impl Engine {
 /// Deliver a served completion and fold it into the report (shared by
 /// the sharded dispatcher and the inline executor so their accounting
 /// cannot drift).
+#[allow(clippy::too_many_arguments)]
 fn complete_done(
     report: &mut EngineReport,
     sub: Submission,
@@ -505,6 +587,8 @@ fn complete_done(
     iters: u64,
     crossings: u32,
     born: Instant,
+    phases: Option<PhaseSlices>,
+    phase_hists: Option<&EnginePhaseHists>,
 ) {
     let lat = (born.elapsed().as_nanos() as u64).max(1);
     let r = &mut report.report;
@@ -519,6 +603,16 @@ fn complete_done(
     }
     r.total_iters += iters;
     r.mem_bytes += iters * sub.iter.program.dram_bytes_per_iter();
+    // attribution sinks: phase hists + the per-program execute
+    // series. Both are no-ops (one test) on unattributed ops.
+    if let Some(ph) = &phases {
+        if let Some(h) = phase_hists {
+            h.record(ph);
+        }
+        if let Some(h) = &sub.exec_hist {
+            h.record(ph.exec_ns.max(1));
+        }
+    }
     (sub.done)(Completion {
         tag: sub.tag,
         code: CompletionCode::Done(status),
@@ -526,6 +620,7 @@ fn complete_done(
         iters,
         crossings,
         latency_ns: lat,
+        phases,
     });
 }
 
@@ -539,6 +634,7 @@ fn finish_unserved(sub: Submission, code: CompletionCode) {
         iters: 0,
         crossings: 0,
         latency_ns: 0,
+        phases: None,
     });
 }
 
@@ -552,6 +648,9 @@ struct EngSlot {
     /// Causal span counter, synced from each reply's job.
     trace_k: u32,
     traced: bool,
+    /// Phase accounting, synced from each reply's job (Some iff the
+    /// submission opted in via `t0`).
+    timing: Option<JobTiming>,
 }
 
 /// The CPU-node role over the persistent inbox: admission window,
@@ -575,6 +674,8 @@ struct Dispatcher<'a> {
     tracer: &'a Tracer,
     /// Dispatcher-side span ring (dispatch/boost/finish hops).
     ring: TraceRing,
+    /// Engine-phase histograms (present when a registry is attached).
+    phase: Option<&'a EnginePhaseHists>,
 }
 
 impl Dispatcher<'_> {
@@ -593,7 +694,8 @@ impl Dispatcher<'_> {
         }
     }
 
-    /// Wrap a message with its slot's trace identity for the wire.
+    /// Wrap a message with its slot's trace identity (and phase
+    /// accounting) for the wire.
     fn job(&self, token: u32, msg: TraversalMsg) -> LiveJob {
         let slot = self.slots[token as usize].as_ref().unwrap();
         LiveJob {
@@ -601,16 +703,19 @@ impl Dispatcher<'_> {
             op: slot.op,
             trace_k: slot.trace_k,
             traced: slot.traced,
+            timing: slot.timing,
             msg,
         }
     }
 
-    /// Resume span emission where the shard left off for this op.
+    /// Resume span emission (and phase accounting) where the shard
+    /// left off for this op.
     fn sync_trace(&mut self, job: &LiveJob) {
-        if job.traced {
+        if job.traced || job.timing.is_some() {
             let slot =
                 self.slots[job.token as usize].as_mut().unwrap();
             slot.trace_k = job.trace_k;
+            slot.timing = job.timing;
         }
     }
     fn on_submit(&mut self, sub: Submission) {
@@ -649,6 +754,9 @@ impl Dispatcher<'_> {
             sub.sp,
             budget,
         );
+        // the timing clock starts at the submitter's t0, so the
+        // engine inbox wait lands in the queue slice
+        let timing = sub.t0.map(JobTiming::start);
         self.slots[token as usize] = Some(EngSlot {
             sub,
             born: Instant::now(),
@@ -656,6 +764,7 @@ impl Dispatcher<'_> {
             op,
             trace_k: 0,
             traced: self.tracer.sampled(op),
+            timing,
         });
         self.inflight += 1;
         self.emit(token, SpanKind::Dispatch { stage: 0 });
@@ -720,12 +829,30 @@ impl Dispatcher<'_> {
             token,
             SpanKind::Finish { trapped: status == Status::Trap },
         );
-        let slot = self.slots[token as usize].take().unwrap();
+        let mut slot = self.slots[token as usize].take().unwrap();
         self.free.push(token);
         self.inflight -= 1;
         let wire = msg.wire_size() as u64;
         self.report.report.net_bytes +=
             wire * 2 + msg.node_crossings as u64 * wire;
+        let phases = slot.timing.take().map(|mut t| {
+            // close the last open leg (shard → dispatcher reply, or
+            // admission → trap when the op never reached a shard)
+            let d = t.enq.elapsed().as_nanos() as u64;
+            if t.visits == 0 {
+                t.queue_ns += d;
+            } else {
+                t.transit_ns += d;
+            }
+            PhaseSlices {
+                queue_ns: t.queue_ns,
+                exec_ns: t.exec_ns,
+                transit_ns: t.transit_ns,
+                visits: t.visits,
+                op: slot.op,
+                traced: slot.traced,
+            }
+        });
         complete_done(
             self.report,
             slot.sub,
@@ -734,6 +861,8 @@ impl Dispatcher<'_> {
             msg.iters_done as u64,
             msg.node_crossings,
             slot.born,
+            phases,
+            self.phase,
         );
         if let Some(next) = self.pending.pop_front() {
             self.admit(next);
@@ -785,6 +914,8 @@ mod tests {
                     sp,
                     budget: 0,
                     tag: tag as u64,
+                    t0: None,
+                    exec_hist: None,
                     done: Box::new(move |c| {
                         let _ = ctx.send(c);
                     }),
@@ -837,6 +968,100 @@ mod tests {
         }
     }
 
+    /// Queue-wait sanity (both executor modes): a submission carrying
+    /// an admission stamp gets back monotone, disjoint phase slices
+    /// that sum to at most the dispatcher-observed latency, with at
+    /// least one shard visit — and the stamp is the only trigger (no
+    /// stamp → no phases).
+    #[test]
+    fn attribution_slices_are_monotone_and_bounded() {
+        for sharded in [true, false] {
+            let mut rack = Rack::new(RackConfig::small(2));
+            let mut m = HashMapDs::build(&mut rack, 32);
+            for i in 0..64 {
+                m.insert(&mut rack, i, i + 100);
+            }
+            let (engine, handle) = Engine::new(EngineConfig {
+                window: 4,
+                sharded,
+                ..EngineConfig::default()
+            });
+            let (ctx, crx) = mpsc::channel::<Completion>();
+            std::thread::scope(|s| {
+                let eng = s.spawn(|| engine.run(&mut rack));
+                let mut starts = Vec::with_capacity(32);
+                for tag in 0..32u64 {
+                    let mut sp = [0i64; SP_WORDS];
+                    sp[0] = (tag % 64) as i64;
+                    let ctx = ctx.clone();
+                    let t0 = Instant::now();
+                    starts.push(t0);
+                    let mut sub = Submission {
+                        iter: m.find_program(),
+                        start: m.bucket_ptr((tag % 64) as i64),
+                        sp,
+                        budget: 0,
+                        tag,
+                        // even tags opt in, odd tags stay dark
+                        t0: (tag % 2 == 0).then_some(t0),
+                        exec_hist: None,
+                        done: Box::new(move |c| {
+                            let _ = ctx.send(c);
+                        }),
+                    };
+                    loop {
+                        match handle.try_submit(sub) {
+                            Ok(()) => break,
+                            Err(SubmitError::Busy(s)) => {
+                                sub = s;
+                                std::thread::yield_now();
+                            }
+                            Err(SubmitError::Down(_)) => {
+                                panic!("engine exited early")
+                            }
+                        }
+                    }
+                }
+                for _ in 0..32 {
+                    let c = crx.recv().unwrap();
+                    assert_eq!(
+                        c.code,
+                        CompletionCode::Done(Status::Return)
+                    );
+                    if c.tag % 2 == 0 {
+                        let ph = c.phases.unwrap_or_else(|| {
+                            panic!("tag {} lost its phases", c.tag)
+                        });
+                        let sum = ph.queue_ns
+                            + ph.exec_ns
+                            + ph.transit_ns;
+                        // slices partition [t0, done], so their sum
+                        // is bounded by any wall clock that brackets
+                        // that interval (client-side here — latency_ns
+                        // starts later, at admission)
+                        let wall = starts[c.tag as usize]
+                            .elapsed()
+                            .as_nanos() as u64;
+                        assert!(
+                            sum <= wall,
+                            "slices {sum} exceed wall {wall} \
+                             (sharded {sharded})"
+                        );
+                        assert!(ph.visits >= 1);
+                        assert!(ph.exec_ns >= 1);
+                    } else {
+                        assert!(
+                            c.phases.is_none(),
+                            "unstamped op grew phases"
+                        );
+                    }
+                }
+                handle.shutdown();
+                let _ = eng.join().unwrap();
+            });
+        }
+    }
+
     /// Both executor modes must honor the per-request budget and the
     /// boost cap identically: a walk longer than budget × (boosts+1)
     /// traps in sharded AND inline mode, with matching iteration
@@ -868,6 +1093,8 @@ mod tests {
                         sp: [0i64; SP_WORDS],
                         budget: 50,
                         tag: 0,
+                        t0: None,
+                        exec_hist: None,
                         done: Box::new(move |c| {
                             let _ = ctx.send(c);
                         }),
@@ -924,6 +1151,8 @@ mod tests {
                         sp: [0i64; SP_WORDS],
                         budget: 0,
                         tag,
+                        t0: None,
+                        exec_hist: None,
                         done: Box::new(move |c| {
                             let _ = ctx.send(c);
                         }),
@@ -975,6 +1204,8 @@ mod tests {
                 sp: [0i64; SP_WORDS],
                 budget: 0,
                 tag: 9,
+                t0: None,
+                exec_hist: None,
                 done: Box::new(move |c| {
                     let _ = ctx2.send(c);
                 }),

@@ -505,6 +505,9 @@ impl<'a> Coordinator<'a> {
             op: slot.op_index,
             trace_k: slot.trace_k,
             traced: slot.traced,
+            // per-run coordinator has no wire clients: attribution
+            // rides only through the persistent engine
+            timing: None,
             msg,
         }
     }

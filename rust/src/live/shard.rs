@@ -24,6 +24,7 @@
 //! safe even if a future caller relaxes that ordering.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::accel::{Accelerator, VisitEnd};
 use crate::isa::Status;
@@ -33,6 +34,34 @@ use crate::obs::{Span, SpanKind, TraceRing, Tracer};
 use super::metrics::ShardStats;
 use super::queue::{QueueRx, QueueTx};
 use super::router::Router;
+
+/// Phase-sliced latency accounting that travels with a job when the
+/// submitter asked for attribution (`Submission::t0` set). `enq` is
+/// re-stamped at every queue push; the pop-side delta lands in
+/// `queue_ns` on the first visit (admission → first pop, engine inbox
+/// wait included) and in `transit_ns` on every later hop
+/// (forward/bounce/boost legs). `exec_ns` accumulates measured
+/// `Accelerator::visit` durations. All slices are disjoint by
+/// construction, so `queue + exec + transit <= wall`.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct JobTiming {
+    /// Last enqueue stamp (admission t0 before the first pop).
+    pub enq: Instant,
+    /// Admission → first shard pop.
+    pub queue_ns: u64,
+    /// Sum of measured visit durations.
+    pub exec_ns: u64,
+    /// Inter-hop transit after the first pop.
+    pub transit_ns: u64,
+    /// Shard pops this traversal made.
+    pub visits: u32,
+}
+
+impl JobTiming {
+    pub fn start(t0: Instant) -> Self {
+        Self { enq: t0, queue_ns: 0, exec_ns: 0, transit_ns: 0, visits: 0 }
+    }
+}
 
 /// One in-flight traversal: the dispatcher-side slot token + the
 /// self-contained request/continuation message (same wire format on
@@ -47,13 +76,15 @@ pub(crate) struct LiveJob {
     pub trace_k: u32,
     /// Whether this op was sampled for tracing.
     pub traced: bool,
+    /// Phase accounting; `None` (the default) costs one test per hop.
+    pub timing: Option<JobTiming>,
     pub msg: TraversalMsg,
 }
 
 impl LiveJob {
     /// An untraced job (the default when tracing is disabled).
     pub fn untraced(token: u32, msg: TraversalMsg) -> Self {
-        Self { token, op: 0, trace_k: 0, traced: false, msg }
+        Self { token, op: 0, trace_k: 0, traced: false, timing: None, msg }
     }
 
     /// Emit one span for this job into `ring` and advance its causal
@@ -132,7 +163,26 @@ pub(crate) fn run_shard<R: From<Reply>>(
             ShardMsg::Job(job) => job,
         };
         stats.jobs += 1;
+        // attribution: charge the pop-side wait to queue (first pop)
+        // or transit (later hops), then time the visit itself
+        let exec_start = job.timing.as_mut().map(|t| {
+            let now = Instant::now();
+            let d = now.saturating_duration_since(t.enq).as_nanos() as u64;
+            if t.visits == 0 {
+                t.queue_ns += d;
+            } else {
+                t.transit_ns += d;
+            }
+            t.visits += 1;
+            now
+        });
         let out = accel.visit(&mut job.msg);
+        if let (Some(t), Some(s)) = (job.timing.as_mut(), exec_start) {
+            t.exec_ns += s.elapsed().as_nanos() as u64;
+            // re-stamp for whichever egress leg follows (forward,
+            // bounce, or the reply back to the dispatcher)
+            t.enq = Instant::now();
+        }
         stats.iters += out.iters as u64;
         if job.traced {
             let dram = out.iters as u64

@@ -50,12 +50,13 @@ fn main() -> CliResult {
         Some("serve") => serve(&args),
         Some("loadgen") => loadgen(&args),
         Some("stats") => stats(&args),
+        Some("top") => top(&args),
         Some("inspect") => inspect(&args),
         Some("lint") => lint(&args),
         Some("selftest") => selftest(),
         _ => {
             eprintln!(
-                "usage: pulse <serve|loadgen|stats|inspect|lint|\
+                "usage: pulse <serve|loadgen|stats|top|inspect|lint|\
                  selftest>\n\
                  serve:   [--app webservice|wiredtiger|btrdb|skiplist|\
                  radixtrie|graph] [--backend pulse|pulse-acc|cache|rpc|\
@@ -77,13 +78,22 @@ fn main() -> CliResult {
                  observability: \
                  [--trace-out PATH [--trace-sample N] [--trace-seed S]] \
                  [--stats-out PATH --stats-interval-s S]\n\
-                 stats: --addr ADDR [--raw] — poll a live server's \
-                 metrics registry over a STATS frame\n\
+                 stats: --addr ADDR [--raw] [--watch SECS [--count N]] \
+                 — poll a live server's metrics registry over a STATS \
+                 frame; --watch re-polls every SECS and prints \
+                 per-interval counter rates\n\
+                 top: --addr ADDR [--interval-s S] [--count N] — live \
+                 dashboard: request/response rates, phase-sliced \
+                 latency breakdown, per-program e2e, queue depths, \
+                 connection ledger\n\
                  loadgen: --addr ADDR [--mix a|b|c | --app skiplist|\
                  radixtrie|graph] [--conns N] [--depth D] [--rate \
                  OPS_PER_S (open loop)] [--keys N] [--ops N] [--seed S] \
-                 [--json NAME] — rack/workload flags must match the \
-                 server's\n\
+                 [--json NAME] [--attribution] [--slow-op-log PATH \
+                 [--slow-op-us N]] — rack/workload flags must match \
+                 the server's; --attribution negotiates per-request \
+                 server timing blocks, --slow-op-log writes JSONL rows \
+                 for requests slower than --slow-op-us (0 = all)\n\
                  inspect: [--iter NAME]\n\
                  lint: [--app NAME | --all-scenarios] [--json] — run \
                  the abstract-interpretation analyzer over built-in \
@@ -207,6 +217,29 @@ fn serve_listen(args: &Args, listen: &str) -> CliResult {
         );
     }
     println!("{}", summary.srv.summary());
+    // per-program e2e table (rows exist only when a client negotiated
+    // latency attribution)
+    if let pulse::util::json::Json::Obj(m) = &summary.registry {
+        let g = |k: &str| {
+            m.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
+        };
+        for k in m.keys() {
+            if let Some(prog) = k
+                .strip_prefix("srv.e2e.prog")
+                .and_then(|s| s.strip_suffix(".count"))
+            {
+                println!(
+                    "program {prog}: n={:.0} e2e mean={:.1}us \
+                     p99={:.1}us exec mean={:.1}us",
+                    g(&format!("srv.e2e.prog{prog}.count")),
+                    g(&format!("srv.e2e.prog{prog}.mean")) / 1e3,
+                    g(&format!("srv.e2e.prog{prog}.p99")) / 1e3,
+                    g(&format!("engine.execute.prog{prog}.mean"))
+                        / 1e3,
+                );
+            }
+        }
+    }
     let b = &summary.backend;
     println!(
         "backend {}: ops={} trapped={} ops/s={:.0} p50={:.1}us \
@@ -254,17 +287,49 @@ fn print_live_counters(b: &pulse::backend::BackendMetrics) {
 
 /// `pulse stats --addr HOST:PORT`: poll a live server's metrics
 /// registry (one STATS frame). Default output is an aligned
-/// name/value table; `--raw` prints the snapshot JSON verbatim.
+/// name/value table; `--raw` prints the snapshot JSON verbatim;
+/// `--watch SECS` re-polls on that interval and prints per-interval
+/// counter rates (levels like `.p99` and gauges are delta-meaningless
+/// and are skipped by `snapshot_rates`).
 fn stats(args: &Args) -> CliResult {
     let Some(addr) = args.get("addr") else {
         return Err("stats needs --addr HOST:PORT".into());
     };
+    let watch_s = args.f64_or("watch", 0.0);
+    if watch_s > 0.0 {
+        let count = args.u64_or("count", 0);
+        let mut prev = pulse::srv::fetch_stats(addr)?;
+        let mut prev_t = std::time::Instant::now();
+        let mut rounds = 0u64;
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                watch_s.max(0.1),
+            ));
+            let cur = pulse::srv::fetch_stats(addr)?;
+            let dt = prev_t.elapsed().as_secs_f64();
+            prev_t = std::time::Instant::now();
+            let rates = pulse::obs::snapshot_rates(&prev, &cur, dt);
+            println!("-- {dt:.1}s window --");
+            print_json_table(&rates);
+            prev = cur;
+            rounds += 1;
+            if count > 0 && rounds >= count {
+                return Ok(());
+            }
+        }
+    }
     let snap = pulse::srv::fetch_stats(addr)?;
     if args.flag("raw") {
         println!("{}", snap.render());
         return Ok(());
     }
-    match &snap {
+    print_json_table(&snap);
+    Ok(())
+}
+
+/// Aligned name/value table for a flat snapshot object.
+fn print_json_table(snap: &pulse::util::json::Json) {
+    match snap {
         pulse::util::json::Json::Obj(m) => {
             let width =
                 m.keys().map(|k| k.len()).max().unwrap_or(0);
@@ -274,7 +339,137 @@ fn stats(args: &Args) -> CliResult {
         }
         other => println!("{}", other.render()),
     }
-    Ok(())
+}
+
+/// `pulse top --addr HOST:PORT`: a small live dashboard over the same
+/// STATS frame `pulse stats` polls — request/response rates from
+/// consecutive snapshots, the phase-sliced latency breakdown the
+/// attribution tier records, per-program e2e histograms, engine queue
+/// depths, and the connection ledger.
+fn top(args: &Args) -> CliResult {
+    let Some(addr) = args.get("addr") else {
+        return Err("top needs --addr HOST:PORT".into());
+    };
+    let interval = args.f64_or("interval-s", 2.0).max(0.1);
+    let count = args.u64_or("count", 0);
+    let mut prev = pulse::srv::fetch_stats(addr)?;
+    let mut prev_t = std::time::Instant::now();
+    let mut rounds = 0u64;
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs_f64(
+            interval,
+        ));
+        let cur = pulse::srv::fetch_stats(addr)?;
+        let dt = prev_t.elapsed().as_secs_f64();
+        prev_t = std::time::Instant::now();
+        render_top(addr, &prev, &cur, dt);
+        prev = cur;
+        rounds += 1;
+        if count > 0 && rounds >= count {
+            return Ok(());
+        }
+    }
+}
+
+fn render_top(
+    addr: &str,
+    prev: &pulse::util::json::Json,
+    cur: &pulse::util::json::Json,
+    dt: f64,
+) {
+    use pulse::util::json::Json;
+    let rates = pulse::obs::snapshot_rates(prev, cur, dt);
+    let num = |j: &Json, k: &str| {
+        j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
+    };
+    let r = |k: &str| num(&rates, &format!("{k}_per_s"));
+    let g = |k: &str| num(cur, k);
+    // ANSI clear + home: a refreshing dashboard, not a scroll
+    print!("\x1b[2J\x1b[H");
+    println!("pulse top — {addr} — {dt:.1}s window");
+    println!(
+        "rates   requests={:.0}/s responses={:.0}/s busy={:.0}/s \
+         errors-sent={:.0}/s frames-in={:.0}/s",
+        r("srv.requests"),
+        r("srv.responses"),
+        r("srv.busy"),
+        r("srv.errors_sent"),
+        r("srv.frames_in"),
+    );
+    println!(
+        "conns   active={:.0} opened={:.0} closed={:.0} \
+         accepted={:.0} failed={:.0}",
+        g("srv.conns_active"),
+        g("srv.conns_opened"),
+        g("srv.conns_closed"),
+        g("srv.conns_accepted"),
+        g("srv.conns_failed"),
+    );
+    println!("phases (lifetime, us)");
+    for (label, base) in [
+        ("queue-wait", "engine.phase.queue_wait"),
+        ("execute", "engine.phase.execute"),
+        ("transit", "engine.phase.transit"),
+        ("completion", "srv.phase.completion"),
+        ("write", "srv.phase.write"),
+    ] {
+        let n = g(&format!("{base}.count"));
+        if n > 0.0 {
+            println!(
+                "  {label:<11} mean={:9.1} p99={:9.1} n={:.0}",
+                g(&format!("{base}.mean")) / 1e3,
+                g(&format!("{base}.p99")) / 1e3,
+                n,
+            );
+        }
+    }
+    if let Json::Obj(m) = cur {
+        let mut qline = format!(
+            "queues  inbox={:.0}",
+            g("engine.inbox.depth")
+        );
+        for (k, v) in m {
+            if let Some(shard) = k
+                .strip_prefix("engine.shard")
+                .and_then(|s| s.strip_suffix(".queue_depth"))
+            {
+                let hwm =
+                    g(&format!("engine.shard{shard}.queue_hwm"));
+                qline.push_str(&format!(
+                    " shard{shard}={:.0}/hwm{hwm:.0}",
+                    v.as_f64().unwrap_or(0.0),
+                ));
+            }
+        }
+        println!("{qline}");
+        let mut any = false;
+        for k in m.keys() {
+            if let Some(prog) = k
+                .strip_prefix("srv.e2e.prog")
+                .and_then(|s| s.strip_suffix(".count"))
+            {
+                if !any {
+                    println!("programs (e2e, us)");
+                    any = true;
+                }
+                println!(
+                    "  prog{prog:<7} n={:<10.0} mean={:9.1} \
+                     p99={:9.1} exec-mean={:9.1}",
+                    g(&format!("srv.e2e.prog{prog}.count")),
+                    g(&format!("srv.e2e.prog{prog}.mean")) / 1e3,
+                    g(&format!("srv.e2e.prog{prog}.p99")) / 1e3,
+                    g(&format!("engine.execute.prog{prog}.mean"))
+                        / 1e3,
+                );
+            }
+        }
+        if !any {
+            println!(
+                "programs: none attributed (loadgen --attribution \
+                 arms per-program histograms)"
+            );
+        }
+    }
 }
 
 /// `pulse loadgen`: materialize the workload against a shadow rack and
@@ -305,6 +500,9 @@ fn loadgen(args: &Args) -> CliResult {
             b.min(u32::MAX as u64) as u32
         },
         record_results: false,
+        attribution: args.flag("attribution"),
+        slow_op_log: args.get("slow-op-log").map(String::from),
+        slow_op_us: args.u64_or("slow-op-us", 1000),
     };
     eprintln!(
         "pulse loadgen: {} -> {} workload={} conns={} depth={} {}",

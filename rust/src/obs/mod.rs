@@ -20,7 +20,8 @@ pub mod registry;
 pub mod trace;
 
 pub use registry::{
-    AtomicHist, Counter, Instrument, MetricsRegistry, SnapshotSampler,
+    snapshot_rates, AtomicHist, Counter, Instrument, MetricsRegistry,
+    SnapshotSampler,
 };
 pub use trace::{
     OpTrace, Span, SpanKind, Trace, TraceConfig, TraceRing, Tracer,

@@ -210,6 +210,40 @@ impl MetricsRegistry {
         j
     }
 
+    /// Get-or-create a **labeled** histogram `{base}.prog{label}` with
+    /// bounded cardinality: once `cap` distinct labels exist under
+    /// `base`, new labels get `None` (callers fall back to the
+    /// unlabeled aggregate) — a misbehaving client registering
+    /// thousands of programs cannot grow the registry without bound.
+    /// The cap is global per `base`, not per caller, so every
+    /// connection sees the same label set.
+    pub fn labeled_hist(
+        &self,
+        base: &str,
+        label: u32,
+        cap: usize,
+    ) -> Option<Arc<AtomicHist>> {
+        let name = format!("{base}.prog{label}");
+        let prefix = format!("{base}.prog");
+        let mut m = self.entries.lock().unwrap();
+        if let Some(Instrument::Hist(h)) = m.get(&name) {
+            return Some(h.clone());
+        }
+        let labels = m
+            .iter()
+            .filter(|(n, i)| {
+                n.starts_with(&prefix)
+                    && matches!(i, Instrument::Hist(_))
+            })
+            .count();
+        if labels >= cap {
+            return None;
+        }
+        let h = Arc::new(AtomicHist::new());
+        m.insert(name, Instrument::Hist(h.clone()));
+        Some(h)
+    }
+
     /// Current counter values only (the sampler's rate base).
     fn counter_values(&self) -> BTreeMap<String, u64> {
         self.entries
@@ -222,6 +256,42 @@ impl MetricsRegistry {
             })
             .collect()
     }
+}
+
+/// Per-interval rates from two registry snapshot JSONs (as returned
+/// by [`MetricsRegistry::snapshot`] or fetched over the STATS frame):
+/// for every numeric key that did not decrease over the interval,
+/// emit `{name}_per_s = delta / dt`. Histogram summary fields
+/// (`.mean/.p50/.p95/.p99/.max`) are skipped — they are levels, not
+/// totals — while `.count` keys stay (records per second). Gauges
+/// that moved down (queue depths shrinking) are skipped rather than
+/// reported as negative rates. This is the rate math behind both
+/// `pulse stats --watch` and `pulse top`; `SnapshotSampler` keeps its
+/// cheaper in-process counter path.
+pub fn snapshot_rates(prev: &Json, cur: &Json, dt_s: f64) -> Json {
+    let mut rates = Json::obj();
+    if dt_s <= 0.0 {
+        return rates;
+    }
+    let (Json::Obj(p), Json::Obj(c)) = (prev, cur) else {
+        return rates;
+    };
+    const LEVEL_SUFFIXES: [&str; 5] =
+        [".mean", ".p50", ".p95", ".p99", ".max"];
+    for (name, v) in c {
+        if LEVEL_SUFFIXES.iter().any(|s| name.ends_with(s)) {
+            continue;
+        }
+        let (Some(cv), Some(pv)) =
+            (v.as_f64(), p.get(name).and_then(|v| v.as_f64()))
+        else {
+            continue;
+        };
+        if cv >= pv {
+            rates.set(&format!("{name}_per_s"), (cv - pv) / dt_s);
+        }
+    }
+    rates
 }
 
 /// Periodic snapshot sampler: a background thread that appends one
@@ -393,6 +463,64 @@ mod tests {
         );
         assert!(snap.get("srv.e2e_ns.p99").is_some());
         assert!(snap.get("srv.e2e_ns.mean").is_some());
+    }
+
+    #[test]
+    fn labeled_hists_are_capped_and_stable() {
+        let r = MetricsRegistry::new();
+        let a = r.labeled_hist("srv.e2e", 0, 2).expect("under cap");
+        let b = r.labeled_hist("srv.e2e", 1, 2).expect("under cap");
+        // cap reached: a third label is refused…
+        assert!(r.labeled_hist("srv.e2e", 2, 2).is_none());
+        // …but existing labels keep resolving to the same cell
+        a.record(10);
+        r.labeled_hist("srv.e2e", 0, 2).unwrap().record(20);
+        assert_eq!(a.count(), 2);
+        b.record(5);
+        // an unrelated base has its own budget
+        assert!(r.labeled_hist("engine.execute", 9, 2).is_some());
+        let snap = r.snapshot();
+        assert_eq!(
+            snap.get("srv.e2e.prog0.count").and_then(|v| v.as_f64()),
+            Some(2.0)
+        );
+        assert_eq!(
+            snap.get("srv.e2e.prog1.count").and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+        assert!(snap.get("srv.e2e.prog2.count").is_none());
+    }
+
+    #[test]
+    fn snapshot_rates_deltas_counters_and_skips_levels() {
+        let mut prev = Json::obj();
+        prev.set("srv.requests", 100.0)
+            .set("srv.e2e.p99", 5_000.0)
+            .set("srv.e2e.count", 10.0)
+            .set("engine.inbox.depth", 8.0);
+        let mut cur = Json::obj();
+        cur.set("srv.requests", 300.0)
+            .set("srv.e2e.p99", 9_000.0)
+            .set("srv.e2e.count", 50.0)
+            .set("engine.inbox.depth", 2.0) // gauge moved down
+            .set("srv.busy", 4.0); // new key, no prev: skipped
+        let rates = snapshot_rates(&prev, &cur, 2.0);
+        assert_eq!(
+            rates.get("srv.requests_per_s").and_then(|v| v.as_f64()),
+            Some(100.0)
+        );
+        assert_eq!(
+            rates.get("srv.e2e.count_per_s").and_then(|v| v.as_f64()),
+            Some(20.0)
+        );
+        assert!(rates.get("srv.e2e.p99_per_s").is_none());
+        assert!(rates.get("engine.inbox.depth_per_s").is_none());
+        assert!(rates.get("srv.busy_per_s").is_none());
+        // degenerate interval yields no rates at all
+        assert!(matches!(
+            snapshot_rates(&prev, &cur, 0.0),
+            Json::Obj(m) if m.is_empty()
+        ));
     }
 
     #[test]

@@ -41,7 +41,7 @@ use crate::util::json::Json;
 
 use super::wire::{
     decode_payload, encode_frame_into, read_frame_into, Envelope, Frame,
-    FrameEvent, DEFAULT_MAX_FRAME,
+    FrameEvent, RespTiming, DEFAULT_MAX_FRAME, REGISTER_FLAG_TIMING,
 };
 
 // ---------------------------------------------------------------------
@@ -195,15 +195,39 @@ impl WireClient {
         id: u32,
         program: &Program,
     ) -> io::Result<()> {
+        self.register_opts(id, program, false)
+    }
+
+    /// [`WireClient::register`] with the latency-attribution opt-in.
+    /// The timing flag rides the high bit of the REGISTER id; a server
+    /// that understands it masks the bit and echoes the bare id back,
+    /// while a server that predates it echoes the flagged value
+    /// verbatim — so a flagged echo means "unsupported" and the
+    /// negotiation fails loudly instead of silently measuring nothing.
+    pub fn register_opts(
+        &mut self,
+        id: u32,
+        program: &Program,
+        timing: bool,
+    ) -> io::Result<()> {
+        let wire_id =
+            if timing { id | REGISTER_FLAG_TIMING } else { id };
         let seq = self.next_seq();
         self.send(
             seq,
-            &Frame::Register { id, program: program.clone() },
+            &Frame::Register { id: wire_id, program: program.clone() },
         )?;
         match self.recv()? {
             Some(Envelope {
                 frame: Frame::RegisterOk { id: got }, ..
             }) if got == id => Ok(()),
+            Some(Envelope {
+                frame: Frame::RegisterOk { id: got }, ..
+            }) if timing && got == wire_id => Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "server echoed the timing flag: \
+                 latency attribution not supported",
+            )),
             Some(Envelope { frame: Frame::Error { code, msg }, .. }) => {
                 Err(io::Error::new(
                     io::ErrorKind::InvalidInput,
@@ -377,6 +401,17 @@ pub struct LoadgenConfig {
     pub budget: u32,
     /// Capture every op's final scratchpad (conformance tests).
     pub record_results: bool,
+    /// Negotiate per-request latency attribution: RESPONSE frames grow
+    /// the fixed-width timing block and the report gains the
+    /// network+queueing residue (client RTT − server time).
+    pub attribution: bool,
+    /// JSONL sink for per-request slow-op records (implies
+    /// `attribution`): each row joins the client seq + RTT with the
+    /// server's phase breakdown and the PR 7 trace op id.
+    pub slow_op_log: Option<String>,
+    /// Threshold (µs of client RTT) above which a request is logged
+    /// to `slow_op_log`; 0 logs every request.
+    pub slow_op_us: u64,
 }
 
 impl Default for LoadgenConfig {
@@ -388,6 +423,9 @@ impl Default for LoadgenConfig {
             open_rate: 0.0,
             budget: 0,
             record_results: false,
+            attribution: false,
+            slow_op_log: None,
+            slow_op_us: 1000,
         }
     }
 }
@@ -410,6 +448,11 @@ pub struct LoadReport {
     pub ops_per_s: f64,
     /// Client-observed per-op latency (first request → op complete).
     pub latency: Histogram,
+    /// Requests that came back with a server timing block.
+    pub timed: u64,
+    /// Per-request network+queueing residue: client RTT minus the
+    /// server's own decode→encode time (attribution runs only).
+    pub residue: Histogram,
     /// Final scratchpads by original op index (only with
     /// `record_results`; `None` for ops that did not complete).
     pub results: Vec<Option<[i64; SP_WORDS]>>,
@@ -430,11 +473,17 @@ impl LoadReport {
             .set("p95_ns", self.latency.p95())
             .set("p99_ns", self.latency.p99())
             .set("mean_ns", self.latency.mean());
+        if self.timed > 0 {
+            j.set("timed_ops", self.timed)
+                .set("residue_p50_ns", self.residue.p50())
+                .set("residue_p99_ns", self.residue.p99())
+                .set("residue_mean_ns", self.residue.mean());
+        }
         j
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "ops={} completed={} trapped={} busy={} errors={}\n\
              wall={:.3}s throughput={:.0} ops/s\n\
              client latency: p50={:.1}us p95={:.1}us p99={:.1}us \
@@ -450,7 +499,18 @@ impl LoadReport {
             self.latency.p95() as f64 / 1e3,
             self.latency.p99() as f64 / 1e3,
             self.latency.mean() / 1e3,
-        )
+        );
+        if self.timed > 0 {
+            s.push_str(&format!(
+                "\nattributed requests={} network+queueing residue: \
+                 p50={:.1}us p99={:.1}us mean={:.1}us",
+                self.timed,
+                self.residue.p50() as f64 / 1e3,
+                self.residue.p99() as f64 / 1e3,
+                self.residue.mean() / 1e3,
+            ));
+        }
+        s
     }
 }
 
@@ -472,6 +532,56 @@ impl FrameSink for &Mutex<WireSender> {
     }
 }
 
+/// Shared slow-request JSONL sink: one file, one mutex, rows from
+/// every connection. Each row is one request that crossed the RTT
+/// threshold, joining the client-side view (seq, op index, RTT,
+/// residue) with the server's wire-propagated phase breakdown and the
+/// trace op id (joinable against the PR 7 trace JSONL).
+struct SlowLog {
+    threshold_ns: u64,
+    sink: Mutex<std::io::BufWriter<std::fs::File>>,
+}
+
+impl SlowLog {
+    fn create(path: &str, threshold_us: u64) -> io::Result<SlowLog> {
+        Ok(SlowLog {
+            threshold_ns: threshold_us.saturating_mul(1000),
+            sink: Mutex::new(std::io::BufWriter::new(
+                std::fs::File::create(path)?,
+            )),
+        })
+    }
+
+    fn record(
+        &self,
+        seq: u64,
+        op: usize,
+        rtt_ns: u64,
+        crossings: u32,
+        t: &RespTiming,
+    ) {
+        if rtt_ns < self.threshold_ns {
+            return;
+        }
+        let mut j = Json::obj();
+        j.set("seq", seq)
+            .set("op", op as u64)
+            .set("rtt_ns", rtt_ns)
+            .set("server_ns", t.server_ns)
+            .set("queue_ns", t.queue_ns)
+            .set("exec_ns", t.exec_ns)
+            .set("transit_ns", t.transit_ns)
+            .set("completion_ns", t.completion_ns)
+            .set("visits", t.visits as u64)
+            .set("crossings", crossings as u64)
+            .set("residue_ns", rtt_ns.saturating_sub(t.server_ns))
+            .set("traced", t.traced)
+            .set("trace_op", t.op);
+        let mut w = self.sink.lock().unwrap();
+        let _ = writeln!(w, "{}", j.render());
+    }
+}
+
 /// Per-connection stats folded into the final report.
 #[derive(Debug, Default)]
 struct ConnStats {
@@ -481,6 +591,8 @@ struct ConnStats {
     busy: u64,
     errors: u64,
     hist: Histogram,
+    timed: u64,
+    residue: Histogram,
 }
 
 /// One connection's serving state: its slice of the op stream, the
@@ -489,11 +601,14 @@ struct ConnRun {
     work: Vec<(usize, OpDriver)>,
     t0: Vec<Option<Instant>>,
     results: Vec<Option<[i64; SP_WORDS]>>,
-    inflight: HashMap<u64, usize>,
+    /// seq → (local op index, request send instant): the send stamp
+    /// closes the per-request RTT when the response correlates back.
+    inflight: HashMap<u64, (usize, Instant)>,
     next: usize,
     seq: u64,
     budget: u32,
     ids: Arc<HashMap<ProgramId, u32>>,
+    slow: Option<Arc<SlowLog>>,
     stats: ConnStats,
 }
 
@@ -502,6 +617,7 @@ impl ConnRun {
         work: Vec<(usize, OpDriver)>,
         budget: u32,
         ids: Arc<HashMap<ProgramId, u32>>,
+        slow: Option<Arc<SlowLog>>,
     ) -> Self {
         let n = work.len();
         Self {
@@ -513,6 +629,7 @@ impl ConnRun {
             seq: 1,
             budget,
             ids,
+            slow,
             stats: ConnStats::default(),
         }
     }
@@ -559,7 +676,7 @@ impl ConnRun {
                 // is still in `inflight`, so the unconditional
                 // abort_inflight sweep folds it into the error count
                 // instead of dropping it from every counter
-                self.inflight.insert(seq, li);
+                self.inflight.insert(seq, (li, Instant::now()));
                 w.put(
                     seq,
                     &Frame::Request {
@@ -596,13 +713,32 @@ impl ConnRun {
         w: &mut impl FrameSink,
     ) -> io::Result<()> {
         match env.frame {
-            Frame::Response { status, sp, .. } => {
+            Frame::Response { status, sp, crossings, timing, .. } => {
                 // uncorrelated (duplicate/late) responses are ignored
                 // like uncorrelated BUSY/ERROR frames: the error count
                 // stays a partition of ops, never of stray frames
-                let Some(li) = self.inflight.remove(&env.seq) else {
+                let Some((li, sent_at)) =
+                    self.inflight.remove(&env.seq)
+                else {
                     return Ok(());
                 };
+                if let Some(t) = &timing {
+                    let rtt = (sent_at.elapsed().as_nanos() as u64)
+                        .max(1);
+                    self.stats.timed += 1;
+                    self.stats.residue.record(
+                        rtt.saturating_sub(t.server_ns).max(1),
+                    );
+                    if let Some(slow) = &self.slow {
+                        slow.record(
+                            env.seq,
+                            self.work[li].0,
+                            rtt,
+                            crossings,
+                            t,
+                        );
+                    }
+                }
                 self.work[li].1.on_response(status, sp);
                 self.pump_op(li, w)?;
             }
@@ -777,6 +913,16 @@ pub fn run_loadgen(
     let ids = Arc::new(ids);
     let plan = Arc::new(plan);
 
+    // a slow-op log is meaningless without the wire breakdown, so it
+    // implies the negotiation
+    let attribution = cfg.attribution || cfg.slow_op_log.is_some();
+    let slow: Option<Arc<SlowLog>> = match &cfg.slow_op_log {
+        Some(path) => {
+            Some(Arc::new(SlowLog::create(path, cfg.slow_op_us)?))
+        }
+        None => None,
+    };
+
     let conns = cfg.conns.max(1);
     // round-robin split preserves per-connection issue order
     let mut slices: Vec<Vec<(usize, OpDriver)>> =
@@ -791,9 +937,11 @@ pub fn run_loadgen(
         for work in slices {
             let ids = Arc::clone(&ids);
             let plan = Arc::clone(&plan);
+            let slow = slow.clone();
             let cfg = cfg.clone();
             handles.push(s.spawn(move || -> ConnRun {
-                let mut run = ConnRun::new(work, cfg.budget, ids);
+                let mut run =
+                    ConnRun::new(work, cfg.budget, ids, slow);
                 // one dead connection must not discard every other
                 // connection's stats: fold its loss into this run's
                 // error count and keep aggregating
@@ -805,7 +953,11 @@ pub fn run_loadgen(
                     let mut client =
                         WireClient::connect_retry(&cfg.addr, 40)?;
                     for (wire_id, program) in plan.iter() {
-                        client.register(*wire_id, program)?;
+                        client.register_opts(
+                            *wire_id,
+                            program,
+                            attribution,
+                        )?;
                     }
                     // continue the connection's seq space past the
                     // registration handshakes so request ids can
@@ -871,6 +1023,8 @@ pub fn run_loadgen(
         report.busy += run.stats.busy;
         report.errors += run.stats.errors;
         report.latency.merge(&run.stats.hist);
+        report.timed += run.stats.timed;
+        report.residue.merge(&run.stats.residue);
         if cfg.record_results {
             for (li, (gi, _)) in run.work.iter().enumerate() {
                 report.results[*gi] = run.results[li];
@@ -879,6 +1033,9 @@ pub fn run_loadgen(
     }
     if wall_s > 0.0 {
         report.ops_per_s = report.completed as f64 / wall_s;
+    }
+    if let Some(slow) = &slow {
+        slow.sink.lock().unwrap().flush()?;
     }
     Ok(report)
 }

@@ -67,11 +67,14 @@ use crate::live::engine::{
     Completion, CompletionCode, Engine, EngineConfig, EngineHandle,
     EngineReport, Submission, SubmitError,
 };
-use crate::obs::{MetricsRegistry, SnapshotSampler, TraceConfig};
+use crate::obs::{
+    AtomicHist, MetricsRegistry, SnapshotSampler, TraceConfig,
+};
+use crate::util::json::Json;
 
 use self::wire::{
     decode_payload, encode_frame_into, read_frame_into, ErrCode, Frame,
-    FrameEvent,
+    FrameEvent, RespTiming, REGISTER_FLAG_TIMING,
 };
 
 /// Tunables of the serving tier.
@@ -174,6 +177,41 @@ pub(crate) fn vet_program(
     Ok(())
 }
 
+/// Serving-tier per-phase histograms (`srv.phase.*`), created eagerly
+/// in [`Server::run`] so the names always appear in STATS snapshots;
+/// both serving tiers record into them only for requests on
+/// connections that negotiated timing — an unattributed workload
+/// leaves every count at zero.
+#[derive(Debug)]
+pub(crate) struct SrvPhaseHists {
+    /// Completion-mailbox delivery: engine done-callback → writer /
+    /// session pickup.
+    pub(crate) completion: Arc<AtomicHist>,
+    /// Write backlog: response encode → flushed to the socket.
+    pub(crate) write: Arc<AtomicHist>,
+}
+
+impl SrvPhaseHists {
+    pub(crate) fn new(reg: &MetricsRegistry) -> Self {
+        Self {
+            completion: reg.hist("srv.phase.completion"),
+            write: reg.hist("srv.phase.write"),
+        }
+    }
+}
+
+/// One registered program on a connection: the compiled iterator plus
+/// its per-program latency series (`srv.e2e.prog{id}`,
+/// `engine.execute.prog{id}`), resolved at REGISTER time only when
+/// the connection negotiated timing and the label-cardinality cap
+/// (`max_programs`) has room. `None` hists mean "aggregate only".
+#[derive(Clone)]
+pub(crate) struct ProgEntry {
+    pub(crate) iter: Arc<CompiledIter>,
+    pub(crate) e2e: Option<Arc<AtomicHist>>,
+    pub(crate) exec: Option<Arc<AtomicHist>>,
+}
+
 /// Everything one server run observed, returned by [`Server::run`].
 #[derive(Debug)]
 pub struct SrvSummary {
@@ -193,6 +231,11 @@ pub struct SrvSummary {
     pub serving_ms: f64,
     /// Teardown tail: engine drain + final response flush + close.
     pub drain_ms: f64,
+    /// Final metrics-registry snapshot (phase histograms, per-program
+    /// series, queue gauges), taken after the drain — the same JSON a
+    /// STATS poll would have returned, preserved so bench artifacts
+    /// carry attribution.
+    pub registry: Json,
 }
 
 /// Control half handed back by [`Server::bind`]: lives on any thread,
@@ -286,6 +329,7 @@ impl Server {
         let registry = Arc::new(MetricsRegistry::new());
         self.metrics.register_into(&registry);
         engine.set_registry(Arc::clone(&registry));
+        let phase = Arc::new(SrvPhaseHists::new(&registry));
         let sampler = match (&self.stats_out, cfg.stats_interval_s > 0.0)
         {
             (Some(path), true) => SnapshotSampler::start(
@@ -318,6 +362,7 @@ impl Server {
                     ehandle.clone(),
                     Arc::clone(&metrics),
                     Arc::clone(&registry),
+                    Arc::clone(&phase),
                     cfg,
                 )
                 .ok()
@@ -363,6 +408,7 @@ impl Server {
                             ehandle.clone(),
                             Arc::clone(&metrics),
                             Arc::clone(&registry),
+                            Arc::clone(&phase),
                             cfg,
                         ) {
                             Ok(pair) => conns.push(pair),
@@ -451,6 +497,7 @@ impl Server {
             backend,
             serving_ms: serving.as_secs_f64() * 1e3,
             drain_ms: drain.as_secs_f64() * 1e3,
+            registry: registry.snapshot(),
         }
     }
 }
@@ -458,7 +505,16 @@ impl Server {
 /// What the writer thread emits on one connection.
 enum WriterMsg {
     /// Engine completion for request `seq` (decoded at `t0`).
-    Done { seq: u64, t0: Instant, c: Completion },
+    /// `t_done` is the done-callback stamp and `prog_e2e` the
+    /// per-program latency series — both `Some` only on attributed
+    /// requests (negotiated timing).
+    Done {
+        seq: u64,
+        t0: Instant,
+        t_done: Option<Instant>,
+        prog_e2e: Option<Arc<AtomicHist>>,
+        c: Completion,
+    },
     /// Reader-originated control frame (RegisterOk / Busy / Error).
     Ctrl { seq: u64, frame: Frame },
 }
@@ -471,6 +527,7 @@ fn spawn_connection(
     engine: EngineHandle,
     metrics: Arc<SrvMetrics>,
     registry: Arc<MetricsRegistry>,
+    phase: Arc<SrvPhaseHists>,
     cfg: SrvConfig,
 ) -> std::io::Result<(JoinHandle<()>, TcpStream)> {
     let _ = stream.set_nodelay(true);
@@ -494,8 +551,9 @@ fn spawn_connection(
     metrics.conn_opened();
     let wmetrics = Arc::clone(&metrics);
     let wbacklog = Arc::clone(&backlog);
+    let wphase = Arc::clone(&phase);
     let writer = std::thread::spawn(move || {
-        writer_loop(wstream, wrx, wmetrics, wbacklog)
+        writer_loop(wstream, wrx, wmetrics, wbacklog, wphase)
     });
     let h = std::thread::spawn(move || {
         reader_loop(stream, engine, wtx, &metrics, &registry, backlog, cfg);
@@ -518,6 +576,7 @@ fn writer_loop(
     rx: mpsc::Receiver<WriterMsg>,
     metrics: Arc<SrvMetrics>,
     backlog: Arc<AtomicU64>,
+    phase: Arc<SrvPhaseHists>,
 ) {
     let mut buf: Vec<u8> = Vec::with_capacity(4096);
     loop {
@@ -529,21 +588,32 @@ fn writer_loop(
         let mut batch = Some(first);
         // all sent-side counters (frames out, busy, errors, response
         // latencies) are applied only after write_all succeeds — a
-        // torn connection must not report unsent frames as sent
-        let mut pending_e2e: Vec<u64> = Vec::new();
+        // torn connection must not report unsent frames as sent.
+        // Per entry: e2e ns, the per-program series, the encode stamp
+        // (attributed responses only — the write-backlog slice).
+        let mut pending_e2e: Vec<(
+            u64,
+            Option<Arc<AtomicHist>>,
+            Option<Instant>,
+        )> = Vec::new();
         let mut frames = 0u64;
         let mut busy = 0u64;
         let mut errors = 0u64;
         while let Some(m) = batch.take() {
             backlog.fetch_sub(1, Ordering::Relaxed);
             match m {
-                WriterMsg::Done { seq, t0, c } => {
-                    let frame = completion_frame(&c);
+                WriterMsg::Done { seq, t0, t_done, prog_e2e, c } => {
+                    let timing =
+                        resp_timing(&c, t0, t_done, &phase);
+                    let frame = completion_frame(&c, timing);
                     match &frame {
                         Frame::Busy => busy += 1,
                         Frame::Error { .. } => errors += 1,
-                        _ => pending_e2e
-                            .push(t0.elapsed().as_nanos() as u64),
+                        _ => pending_e2e.push((
+                            t0.elapsed().as_nanos() as u64,
+                            prog_e2e,
+                            timing.map(|_| Instant::now()),
+                        )),
                     }
                     encode_frame_into(seq, &frame, &mut buf);
                 }
@@ -571,22 +641,64 @@ fn writer_loop(
             return;
         }
         metrics.sent_batch(frames, busy, errors);
-        for ns in pending_e2e {
+        for (ns, prog_e2e, encoded_at) in pending_e2e {
             metrics.response(ns);
+            if let Some(h) = prog_e2e {
+                h.record(ns.max(1));
+            }
+            if let Some(t) = encoded_at {
+                phase
+                    .write
+                    .record((t.elapsed().as_nanos() as u64).max(1));
+            }
         }
     }
 }
 
+/// Build the wire timing block for an attributed completion: the
+/// engine's phase slices plus the serving-tier completion slice
+/// (done-callback → pickup, recorded into `srv.phase.completion`
+/// here) and the total server residence at encode time. `None` for
+/// unattributed completions — the caller emits the legacy frame.
+pub(crate) fn resp_timing(
+    c: &Completion,
+    t0: Instant,
+    t_done: Option<Instant>,
+    phase: &SrvPhaseHists,
+) -> Option<RespTiming> {
+    let ph = c.phases.as_ref()?;
+    let completion_ns = t_done
+        .map(|t| t.elapsed().as_nanos() as u64)
+        .unwrap_or(0);
+    phase.completion.record(completion_ns.max(1));
+    Some(RespTiming {
+        queue_ns: ph.queue_ns,
+        exec_ns: ph.exec_ns,
+        transit_ns: ph.transit_ns,
+        completion_ns,
+        server_ns: (t0.elapsed().as_nanos() as u64).max(1),
+        op: ph.op,
+        visits: ph.visits,
+        traced: ph.traced,
+    })
+}
+
 /// Engine completion → wire frame, shared verbatim by the event-loop
 /// sessions and the legacy writer so both paths answer identical
-/// bytes for identical completions.
-pub(crate) fn completion_frame(c: &Completion) -> Frame {
+/// bytes for identical completions. `timing` is `Some` only for
+/// attributed responses (BUSY / shutting-down frames never carry a
+/// block — those ops never executed).
+pub(crate) fn completion_frame(
+    c: &Completion,
+    timing: Option<RespTiming>,
+) -> Frame {
     match c.code {
         CompletionCode::Done(status) => Frame::Response {
             status,
             crossings: c.crossings,
             iters: c.iters,
             sp: c.sp,
+            timing,
         },
         CompletionCode::Busy => Frame::Busy,
         CompletionCode::ShuttingDown => Frame::Error {
@@ -609,7 +721,10 @@ fn reader_loop(
     backlog: Arc<AtomicU64>,
     cfg: SrvConfig,
 ) {
-    let mut programs: HashMap<u32, Arc<CompiledIter>> = HashMap::new();
+    let mut programs: HashMap<u32, ProgEntry> = HashMap::new();
+    // per-connection attribution mode, armed by the REGISTER flag bit
+    // (negotiated once; stays on for the connection's lifetime)
+    let mut timing = false;
     let mut r = BufReader::new(stream);
     // per-connection decode scratch, reused across frames (capacity
     // settles at the connection's largest frame and stays there)
@@ -661,7 +776,17 @@ fn reader_loop(
             }
         };
         match env.frame {
-            Frame::Register { id, program } => {
+            Frame::Register { id: raw_id, program } => {
+                // bit 31 of the id is the timing-attribution flag: it
+                // arms per-request breakdowns for this connection and
+                // is masked off before the id is used — the masked id
+                // is echoed in REGISTER_OK, which is how the client
+                // learns the server understood the negotiation (an
+                // old server would echo the flagged value verbatim)
+                let id = raw_id & !REGISTER_FLAG_TIMING;
+                if raw_id & REGISTER_FLAG_TIMING != 0 {
+                    timing = true;
+                }
                 // a frame that decoded but carries an unverifiable or
                 // analyzer-denied program is a semantic rejection, not
                 // wire corruption: it answers ERROR (counted by the
@@ -685,14 +810,39 @@ fn reader_loop(
                     );
                     continue;
                 }
-                programs
-                    .insert(id, Arc::new(CompiledIter::new(program)));
+                // per-program latency series exist only for timed
+                // connections, bounded by the same max_programs cap
+                // (labeled_hist returns None past it — aggregate only)
+                let (e2e, exec) = if timing {
+                    (
+                        registry.labeled_hist(
+                            "srv.e2e",
+                            id,
+                            cfg.max_programs,
+                        ),
+                        registry.labeled_hist(
+                            "engine.execute",
+                            id,
+                            cfg.max_programs,
+                        ),
+                    )
+                } else {
+                    (None, None)
+                };
+                programs.insert(
+                    id,
+                    ProgEntry {
+                        iter: Arc::new(CompiledIter::new(program)),
+                        e2e,
+                        exec,
+                    },
+                );
                 metrics.program_registered();
                 ctrl(env.seq, Frame::RegisterOk { id });
             }
             Frame::Request { prog, budget, start, sp } => {
                 metrics.request();
-                let Some(iter) = programs.get(&prog) else {
+                let Some(entry) = programs.get(&prog) else {
                     err(
                         env.seq,
                         ErrCode::UnknownProgram,
@@ -704,16 +854,33 @@ fn reader_loop(
                 let t0 = Instant::now();
                 let done_tx = wtx.clone();
                 let done_backlog = Arc::clone(&backlog);
+                let prog_e2e =
+                    if timing { entry.e2e.clone() } else { None };
                 let sub = Submission {
-                    iter: Arc::clone(iter),
+                    iter: Arc::clone(&entry.iter),
                     start,
                     sp,
                     budget,
                     tag: seq,
+                    t0: timing.then_some(t0),
+                    exec_hist: if timing {
+                        entry.exec.clone()
+                    } else {
+                        None
+                    },
                     done: Box::new(move |c| {
+                        // the extra clock read exists only on
+                        // attributed completions
+                        let t_done =
+                            c.phases.is_some().then(Instant::now);
                         done_backlog.fetch_add(1, Ordering::Relaxed);
-                        let _ = done_tx
-                            .send(WriterMsg::Done { seq, t0, c });
+                        let _ = done_tx.send(WriterMsg::Done {
+                            seq,
+                            t0,
+                            t_done,
+                            prog_e2e,
+                            c,
+                        });
                     }),
                 };
                 match engine.try_submit(sub) {

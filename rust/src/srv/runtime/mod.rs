@@ -67,11 +67,11 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::live::engine::{Completion, EngineHandle};
-use crate::obs::MetricsRegistry;
+use crate::obs::{AtomicHist, MetricsRegistry};
 use crate::srv::metrics::SrvMetrics;
-use crate::srv::SrvConfig;
+use crate::srv::{SrvConfig, SrvPhaseHists};
 
-pub(crate) use super::completion_frame;
+pub(crate) use super::{completion_frame, resp_timing};
 
 use self::session::Session;
 
@@ -84,6 +84,11 @@ pub(crate) struct CompletionMsg {
     pub(crate) seq: u64,
     /// Decode instant — the e2e latency measurement origin.
     pub(crate) t0: Instant,
+    /// Done-callback stamp (attributed ops only): the completion-slice
+    /// origin, closed when the response frame is built.
+    pub(crate) t_done: Option<Instant>,
+    /// Per-program e2e histogram, recorded when the bytes flush.
+    pub(crate) prog_e2e: Option<Arc<AtomicHist>>,
     pub(crate) c: Completion,
 }
 
@@ -139,6 +144,7 @@ pub(crate) struct Ctx {
     pub(crate) metrics: Arc<SrvMetrics>,
     pub(crate) registry: Arc<MetricsRegistry>,
     pub(crate) engine: EngineHandle,
+    pub(crate) phase: Arc<SrvPhaseHists>,
     pub(crate) shared: Arc<WorkerShared>,
 }
 
@@ -246,10 +252,11 @@ impl Worker {
     }
 
     fn route_completions(&mut self) {
+        let ctx = &self.ctx;
+        let sessions = &mut self.sessions;
         for msg in self.comp_scratch.drain(..) {
             let slot = (msg.token & 0xffff_ffff) as usize;
-            let live = self
-                .sessions
+            let live = sessions
                 .get(slot)
                 .and_then(|s| s.as_ref())
                 .is_some_and(|s| s.token == msg.token);
@@ -257,10 +264,10 @@ impl Worker {
                 // stale tokens (connection died mid-traversal, slot
                 // possibly reused) fall through silently — exactly the
                 // legacy writer's behavior when its channel was gone
-                self.sessions[slot]
+                sessions[slot]
                     .as_mut()
                     .unwrap()
-                    .apply_completion(msg);
+                    .apply_completion(msg, ctx);
             }
         }
     }
@@ -414,6 +421,7 @@ impl Runtime {
         engine: EngineHandle,
         metrics: Arc<SrvMetrics>,
         registry: Arc<MetricsRegistry>,
+        phase: Arc<SrvPhaseHists>,
         cfg: SrvConfig,
     ) -> std::io::Result<Runtime> {
         let threads = threads.max(1);
@@ -433,6 +441,7 @@ impl Runtime {
                 metrics: Arc::clone(&metrics),
                 registry: Arc::clone(&registry),
                 engine: engine.clone(),
+                phase: Arc::clone(&phase),
                 shared: Arc::clone(&shared),
             };
             let h = std::thread::Builder::new()

@@ -31,11 +31,14 @@ use std::time::{Duration, Instant};
 
 use crate::compiler::CompiledIter;
 use crate::live::engine::{Submission, SubmitError};
+use crate::obs::AtomicHist;
 use crate::srv::wire::{
     decode_payload, encode_frame_into, prefix_len_ok, ErrCode, Frame,
+    REGISTER_FLAG_TIMING,
 };
+use crate::srv::ProgEntry;
 
-use super::{completion_frame, CompletionMsg, Ctx};
+use super::{completion_frame, resp_timing, CompletionMsg, Ctx};
 
 /// How much of the connection is still live.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,9 +58,22 @@ struct SentRec {
     end: u64,
     busy: bool,
     error: bool,
-    /// RESPONSE frames carry their decode→encode e2e latency, reported
-    /// to the histogram once the bytes flush.
-    e2e_ns: Option<u64>,
+    /// RESPONSE frames carry latency accounting, reported once the
+    /// bytes flush.
+    resp: Option<RespMeta>,
+}
+
+/// Response-frame accounting queued alongside the bytes; recorded only
+/// when the frame fully flushes (the honesty rule covers histograms
+/// the same way it covers counters).
+struct RespMeta {
+    /// decode → encode e2e latency (the legacy writer's measurement).
+    e2e_ns: u64,
+    /// Per-program e2e histogram (attributed connections only).
+    prog_e2e: Option<Arc<AtomicHist>>,
+    /// Encode stamp for attributed ops: closes the write-backlog
+    /// slice (`srv.phase.write`) when the bytes hit the wire.
+    queued_at: Option<Instant>,
 }
 
 /// How many bytes one readiness event may pull off a socket before
@@ -93,10 +109,12 @@ pub(crate) struct Session {
     queued_total: u64,
     written_total: u64,
     sent: VecDeque<SentRec>,
-    /// Reused e2e scratch for the flush path.
-    e2e_scratch: Vec<u64>,
     // ---- executing ----
-    programs: HashMap<u32, Arc<CompiledIter>>,
+    programs: HashMap<u32, ProgEntry>,
+    /// Latency attribution armed (REGISTER carried the timing flag
+    /// bit): submissions are stamped and responses grow the fixed-
+    /// width timing block.
+    timing: bool,
     /// Submissions whose completion has not yet come back.
     pub(crate) inflight: u64,
 }
@@ -125,8 +143,8 @@ impl Session {
             queued_total: 0,
             written_total: 0,
             sent: VecDeque::new(),
-            e2e_scratch: Vec::new(),
             programs: HashMap::new(),
+            timing: false,
             inflight: 0,
         })
     }
@@ -332,7 +350,14 @@ impl Session {
             }
         };
         match env.frame {
-            Frame::Register { id, program } => {
+            Frame::Register { id: raw_id, program } => {
+                // the high id bit is the attribution opt-in, not part
+                // of the program id; echoing the masked id back tells
+                // the client the flag was understood
+                let id = raw_id & !REGISTER_FLAG_TIMING;
+                if raw_id & REGISTER_FLAG_TIMING != 0 {
+                    self.timing = true;
+                }
                 // semantic rejection (verifier or analyzer deny, or
                 // a write under read-only serving), not wire
                 // corruption: answers ERROR without touching
@@ -365,8 +390,30 @@ impl Session {
                     );
                     return;
                 }
-                self.programs
-                    .insert(id, Arc::new(CompiledIter::new(program)));
+                let (e2e, exec) = if self.timing {
+                    (
+                        ctx.registry.labeled_hist(
+                            "srv.e2e",
+                            id,
+                            ctx.cfg.max_programs,
+                        ),
+                        ctx.registry.labeled_hist(
+                            "engine.execute",
+                            id,
+                            ctx.cfg.max_programs,
+                        ),
+                    )
+                } else {
+                    (None, None)
+                };
+                self.programs.insert(
+                    id,
+                    ProgEntry {
+                        iter: Arc::new(CompiledIter::new(program)),
+                        e2e,
+                        exec,
+                    },
+                );
                 ctx.metrics.program_registered();
                 self.queue_frame(
                     env.seq,
@@ -376,10 +423,10 @@ impl Session {
             }
             Frame::Request { prog, budget, start, sp } => {
                 ctx.metrics.request();
-                // clone the Arc out first so the program-table borrow
-                // ends before the error path needs `&mut self`
-                let iter = self.programs.get(&prog).map(Arc::clone);
-                let Some(iter) = iter else {
+                // clone the entry out first so the program-table
+                // borrow ends before the error path needs `&mut self`
+                let entry = self.programs.get(&prog).cloned();
+                let Some(entry) = entry else {
                     self.queue_frame(
                         env.seq,
                         &Frame::Error {
@@ -396,22 +443,37 @@ impl Session {
                 let t0 = Instant::now();
                 let shared = Arc::clone(&ctx.shared);
                 let token = self.token;
+                let prog_e2e = if self.timing {
+                    entry.e2e.clone()
+                } else {
+                    None
+                };
                 let sub = Submission {
-                    iter,
+                    iter: entry.iter,
                     start,
                     sp,
                     budget,
                     tag: seq,
+                    t0: self.timing.then_some(t0),
+                    exec_hist: if self.timing {
+                        entry.exec
+                    } else {
+                        None
+                    },
                     // the engine invokes this on its dispatcher
                     // thread: one mailbox push + one conditional
                     // one-byte wakeup write — as cheap as the legacy
                     // channel send, and batched across a burst of
                     // completions by the dirty flag
                     done: Box::new(move |c| {
+                        let t_done =
+                            c.phases.is_some().then(Instant::now);
                         shared.complete(CompletionMsg {
                             token,
                             seq,
                             t0,
+                            t_done,
+                            prog_e2e,
                             c,
                         });
                     }),
@@ -465,13 +527,27 @@ impl Session {
     /// An engine completion for this session: encode its frame into
     /// the write backlog. e2e latency (decode → encode, the legacy
     /// writer's measurement point) rides on the sent record and hits
-    /// the histogram when the bytes flush.
-    pub(crate) fn apply_completion(&mut self, msg: CompletionMsg) {
+    /// the histogram when the bytes flush. Attributed completions
+    /// additionally close their completion slice here (`resp_timing`,
+    /// shared with the legacy writer) and carry the timing block out
+    /// on the RESPONSE frame.
+    pub(crate) fn apply_completion(
+        &mut self,
+        msg: CompletionMsg,
+        ctx: &Ctx,
+    ) {
         self.inflight = self.inflight.saturating_sub(1);
-        let frame = completion_frame(&msg.c);
-        let e2e = matches!(frame, Frame::Response { .. })
-            .then(|| msg.t0.elapsed().as_nanos() as u64);
-        self.queue_frame(msg.seq, &frame, e2e);
+        let timing =
+            resp_timing(&msg.c, msg.t0, msg.t_done, &ctx.phase);
+        let frame = completion_frame(&msg.c, timing);
+        let resp = matches!(frame, Frame::Response { .. }).then(|| {
+            RespMeta {
+                e2e_ns: msg.t0.elapsed().as_nanos() as u64,
+                prog_e2e: msg.prog_e2e,
+                queued_at: timing.map(|_| Instant::now()),
+            }
+        });
+        self.queue_frame(msg.seq, &frame, resp);
     }
 
     /// Append one frame to the write backlog (no allocation in steady
@@ -480,7 +556,7 @@ impl Session {
         &mut self,
         seq: u64,
         frame: &Frame,
-        e2e_ns: Option<u64>,
+        resp: Option<RespMeta>,
     ) {
         if self.gate == Gate::Dead {
             return;
@@ -496,7 +572,7 @@ impl Session {
             end: self.queued_total,
             busy: matches!(frame, Frame::Busy),
             error: matches!(frame, Frame::Error { .. }),
-            e2e_ns,
+            resp,
         });
     }
 
@@ -551,7 +627,6 @@ impl Session {
         let mut frames = 0u64;
         let mut busy = 0u64;
         let mut errors = 0u64;
-        self.e2e_scratch.clear();
         while let Some(rec) = self.sent.front() {
             if rec.end > self.written_total {
                 break;
@@ -564,15 +639,20 @@ impl Session {
             if rec.error {
                 errors += 1;
             }
-            if let Some(ns) = rec.e2e_ns {
-                self.e2e_scratch.push(ns);
+            if let Some(m) = rec.resp {
+                ctx.metrics.response(m.e2e_ns);
+                if let Some(h) = m.prog_e2e {
+                    h.record(m.e2e_ns.max(1));
+                }
+                if let Some(t) = m.queued_at {
+                    ctx.phase.write.record(
+                        (t.elapsed().as_nanos() as u64).max(1),
+                    );
+                }
             }
         }
         if frames > 0 {
             ctx.metrics.sent_batch(frames, busy, errors);
-            for &ns in &self.e2e_scratch {
-                ctx.metrics.response(ns);
-            }
         }
     }
 }

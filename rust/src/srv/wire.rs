@@ -18,11 +18,30 @@
 //! REGISTER_OK  prog_id:u32
 //! REQUEST      prog_id:u32 budget:u32 cur_ptr:u64 sp[32]:i64
 //! RESPONSE     status:u8 pad:u8x3 crossings:u32 iters:u64 sp[32]:i64
+//!              [timing]                       only when negotiated
 //! BUSY         (empty)
 //! ERROR        code:u8 pad:u8 msg_len:u16 msg[msg_len]      utf-8
 //! STATS        (empty)
 //! STATS_OK     body_len:u32 body[body_len]                  utf-8 JSON
+//!
+//! timing      := queue_ns:u64 exec_ns:u64 transit_ns:u64
+//!                completion_ns:u64 server_ns:u64 op:u64
+//!                visits:u32 traced:u32                      (56 B)
 //! ```
+//!
+//! Latency attribution is **negotiated, default off**: a client sets
+//! the [`REGISTER_FLAG_TIMING`] bit (bit 31) of the REGISTER prog_id;
+//! a timing-aware server masks the flag off, registers the program
+//! under the low 31 bits, arms per-request attribution for that
+//! connection, and echoes the *masked* id in REGISTER_OK. An old
+//! server treats the flagged value as an opaque id and echoes it back
+//! verbatim — the client detects the un-masked echo and knows timing
+//! is unsupported. Once negotiated, every RESPONSE body carries the
+//! fixed 56-byte timing block after the scratchpad; un-negotiated
+//! connections produce byte-identical frames to the pre-timing
+//! protocol. `traced` is 0 or 1 (canonical form: other values are
+//! rejected); when 1, `op` joins the sampled-trace span stream
+//! (`obs::Span::op`) emitted by `--trace-out`.
 //!
 //! STATS polls the server's metrics registry: the reply body is one
 //! JSON object (`obs::MetricsRegistry::snapshot`), so `pulse stats
@@ -57,6 +76,16 @@ pub const MIN_PAYLOAD: usize = HEADER_BYTES + CRC_BYTES;
 /// Default cap on a payload; anything larger is unframeable garbage
 /// (a max-size program + scratchpad request is ~1.4 KB).
 pub const DEFAULT_MAX_FRAME: u32 = 256 * 1024;
+
+/// REGISTER prog_id flag bit: the client requests per-request latency
+/// attribution for this connection (see module docs). Program ids are
+/// confined to the low 31 bits.
+pub const REGISTER_FLAG_TIMING: u32 = 1 << 31;
+
+/// RESPONSE body length without the timing block.
+pub const RESPONSE_BASE_BYTES: usize = 16 + SP_WORDS * 8;
+/// Fixed width of the negotiated timing block.
+pub const TIMING_BLOCK_BYTES: usize = 56;
 
 const KIND_REGISTER: u8 = 1;
 const KIND_REGISTER_OK: u8 = 2;
@@ -104,6 +133,34 @@ impl ErrCode {
     }
 }
 
+/// Per-request server-side latency breakdown, appended to RESPONSE
+/// bodies on connections that negotiated [`REGISTER_FLAG_TIMING`].
+/// All slices are nanoseconds measured on the server; they satisfy
+/// `queue + exec + transit + completion <= server_ns` (write-backlog
+/// time after encode is server-side-only and not in the block).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RespTiming {
+    /// Admission (wire decode) → first shard pop (includes the engine
+    /// inbox wait).
+    pub queue_ns: u64,
+    /// Sum of measured accelerator visit durations across all shards.
+    pub exec_ns: u64,
+    /// Inter-shard forward/bounce transit plus the final reply leg
+    /// back to the dispatcher.
+    pub transit_ns: u64,
+    /// Completion-mailbox delivery: done-callback → writer pickup.
+    pub completion_ns: u64,
+    /// Total server residence: admission → response encode.
+    pub server_ns: u64,
+    /// Engine admission index (joins `--trace-out` spans when
+    /// `traced`).
+    pub op: u64,
+    /// Shard visits (pops) this traversal made.
+    pub visits: u32,
+    /// Whether the PR-7 sampler traced this op.
+    pub traced: bool,
+}
+
 /// One decoded frame body.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
@@ -120,6 +177,8 @@ pub enum Frame {
         crossings: u32,
         iters: u64,
         sp: [i64; SP_WORDS],
+        /// `Some` only on connections that negotiated timing.
+        timing: Option<RespTiming>,
     },
     Busy,
     Error { code: ErrCode, msg: String },
@@ -259,13 +318,23 @@ pub fn encode_frame_into(seq: u64, frame: &Frame, out: &mut Vec<u8>) {
                 p.extend_from_slice(&w.to_le_bytes());
             }
         }
-        Frame::Response { status, crossings, iters, sp } => {
+        Frame::Response { status, crossings, iters, sp, timing } => {
             p.push(*status as i32 as u8);
             p.extend_from_slice(&[0u8; 3]);
             p.extend_from_slice(&crossings.to_le_bytes());
             p.extend_from_slice(&iters.to_le_bytes());
             for w in sp {
                 p.extend_from_slice(&w.to_le_bytes());
+            }
+            if let Some(t) = timing {
+                p.extend_from_slice(&t.queue_ns.to_le_bytes());
+                p.extend_from_slice(&t.exec_ns.to_le_bytes());
+                p.extend_from_slice(&t.transit_ns.to_le_bytes());
+                p.extend_from_slice(&t.completion_ns.to_le_bytes());
+                p.extend_from_slice(&t.server_ns.to_le_bytes());
+                p.extend_from_slice(&t.op.to_le_bytes());
+                p.extend_from_slice(&t.visits.to_le_bytes());
+                p.extend_from_slice(&(t.traced as u32).to_le_bytes());
             }
         }
         Frame::Busy => {}
@@ -370,9 +439,27 @@ pub fn decode_payload(p: &[u8]) -> Result<Envelope, WireError> {
             }
         }
         KIND_RESPONSE => {
-            if body.len() != 16 + SP_WORDS * 8 {
-                return bad("response body length");
-            }
+            let timing = match body.len() {
+                RESPONSE_BASE_BYTES => None,
+                n if n == RESPONSE_BASE_BYTES + TIMING_BLOCK_BYTES => {
+                    let t = &body[RESPONSE_BASE_BYTES..];
+                    let traced = le_u32(&t[52..]);
+                    if traced > 1 {
+                        return bad("timing traced flag out of range");
+                    }
+                    Some(RespTiming {
+                        queue_ns: le_u64(t),
+                        exec_ns: le_u64(&t[8..]),
+                        transit_ns: le_u64(&t[16..]),
+                        completion_ns: le_u64(&t[24..]),
+                        server_ns: le_u64(&t[32..]),
+                        op: le_u64(&t[40..]),
+                        visits: le_u32(&t[48..]),
+                        traced: traced == 1,
+                    })
+                }
+                _ => return bad("response body length"),
+            };
             if body[0] > 3 {
                 return bad("status out of range");
             }
@@ -384,6 +471,7 @@ pub fn decode_payload(p: &[u8]) -> Result<Envelope, WireError> {
                 crossings: le_u32(&body[4..]),
                 iters: le_u64(&body[8..]),
                 sp: read_sp(&body[16..]).unwrap(),
+                timing,
             }
         }
         KIND_BUSY => {
@@ -573,6 +661,7 @@ mod tests {
                     crossings: 3,
                     iters: 41,
                     sp,
+                    timing: None,
                 },
             ),
             (3, Frame::Busy),
@@ -745,6 +834,172 @@ mod tests {
         assert!(matches!(
             decode_payload(&p).unwrap_err().kind,
             WireErrorKind::BadBody("stats-ok body not utf-8")
+        ));
+    }
+
+    fn sample_timing() -> RespTiming {
+        RespTiming {
+            queue_ns: 1_200,
+            exec_ns: 48_000,
+            transit_ns: 9_999,
+            completion_ns: 310,
+            server_ns: 61_000,
+            op: 0xFEED_F00D,
+            visits: 5,
+            traced: true,
+        }
+    }
+
+    fn timed_response() -> Frame {
+        let mut sp = [0i64; SP_WORDS];
+        sp[1] = -77;
+        Frame::Response {
+            status: Status::Return,
+            crossings: 2,
+            iters: 17,
+            sp,
+            timing: Some(sample_timing()),
+        }
+    }
+
+    /// The negotiated timing block round-trips and is exactly 56
+    /// bytes on the wire (the body grows by TIMING_BLOCK_BYTES, no
+    /// more, no less).
+    #[test]
+    fn timing_block_round_trips_at_fixed_width() {
+        let frame = timed_response();
+        let wire = encode_frame(6, &frame);
+        let bare = {
+            let Frame::Response { status, crossings, iters, sp, .. } =
+                frame.clone()
+            else {
+                unreachable!()
+            };
+            encode_frame(
+                6,
+                &Frame::Response {
+                    status,
+                    crossings,
+                    iters,
+                    sp,
+                    timing: None,
+                },
+            )
+        };
+        assert_eq!(wire.len(), bare.len() + TIMING_BLOCK_BYTES);
+        let env = decode_payload(&wire[4..]).unwrap();
+        assert_eq!(env.frame, frame);
+        // untraced variant round-trips too (traced encodes as 0)
+        let mut t = sample_timing();
+        t.traced = false;
+        let f2 = Frame::Response {
+            status: Status::Trap,
+            crossings: 0,
+            iters: 1,
+            sp: [0; SP_WORDS],
+            timing: Some(t),
+        };
+        let wire = encode_frame(7, &f2);
+        assert_eq!(decode_payload(&wire[4..]).unwrap().frame, f2);
+    }
+
+    /// Wire-compat pin: the untimed RESPONSE body is byte-for-byte
+    /// the pre-attribution layout (272 B: status, 3 pad, crossings,
+    /// iters, 32 sp words) — a client that never sets the REGISTER
+    /// flag can never observe a changed frame.
+    #[test]
+    fn untimed_response_bytes_pin_the_legacy_layout() {
+        let mut sp = [0i64; SP_WORDS];
+        sp[0] = 0x0102_0304_0506_0708;
+        let wire = encode_frame(
+            0x1122_3344_5566_7788,
+            &Frame::Response {
+                status: Status::Return,
+                crossings: 0xA1B2_C3D4,
+                iters: 0x0908_0706_0504_0302,
+                sp,
+                timing: None,
+            },
+        );
+        let body =
+            &wire[4 + HEADER_BYTES..wire.len() - CRC_BYTES];
+        assert_eq!(body.len(), RESPONSE_BASE_BYTES);
+        // hand-assembled golden bytes for the fixed-width prefix
+        let mut golden = vec![Status::Return as i32 as u8, 0, 0, 0];
+        golden.extend_from_slice(&0xA1B2_C3D4u32.to_le_bytes());
+        golden
+            .extend_from_slice(&0x0908_0706_0504_0302u64.to_le_bytes());
+        assert_eq!(&body[..16], &golden[..]);
+        assert_eq!(
+            &body[16..24],
+            &0x0102_0304_0506_0708i64.to_le_bytes()
+        );
+        assert!(body[24..].iter().all(|&b| b == 0));
+        // header: magic, version, kind, zero pad, seq
+        let payload = &wire[4..];
+        assert_eq!(le_u32(payload), MAGIC);
+        assert_eq!(payload[4], VERSION);
+        assert_eq!(payload[5], KIND_RESPONSE);
+        assert_eq!(&payload[6..8], &[0, 0]);
+        assert_eq!(le_u64(&payload[8..]), 0x1122_3344_5566_7788);
+    }
+
+    /// The corruption sweep extended to the timing block: any single
+    /// flipped byte in a timed RESPONSE is caught (CRC covers the
+    /// block too).
+    #[test]
+    fn crc_catches_corruption_in_the_timing_block() {
+        let wire = encode_frame(8, &timed_response());
+        let payload = &wire[4..];
+        for pos in 0..payload.len() {
+            let mut bad = payload.to_vec();
+            bad[pos] ^= 0x41;
+            assert!(
+                decode_payload(&bad).is_err(),
+                "flip at byte {pos} went undetected"
+            );
+        }
+    }
+
+    /// Canonical-form discipline for the block: traced must be 0|1
+    /// even under a valid CRC, and a body that is neither the bare
+    /// nor the timed length is rejected.
+    #[test]
+    fn timing_block_rejects_noncanonical_forms() {
+        let restamp = |p: &mut [u8]| {
+            let body_end = p.len() - CRC_BYTES;
+            let crc = crc32(&p[..body_end]).to_le_bytes();
+            p[body_end..].copy_from_slice(&crc);
+        };
+        // traced = 2 with a recomputed CRC
+        let wire = encode_frame(3, &timed_response());
+        let mut p = wire[4..].to_vec();
+        let traced_at = HEADER_BYTES + RESPONSE_BASE_BYTES + 52;
+        p[traced_at] = 2;
+        restamp(&mut p);
+        assert!(matches!(
+            decode_payload(&p).unwrap_err().kind,
+            WireErrorKind::BadBody("timing traced flag out of range")
+        ));
+        // a truncated block (one byte short) is not a valid body
+        let wire = encode_frame(3, &timed_response());
+        let mut p = wire[4..].to_vec();
+        let crc_at = p.len() - CRC_BYTES;
+        p.remove(crc_at - 1);
+        restamp(&mut p);
+        assert!(matches!(
+            decode_payload(&p).unwrap_err().kind,
+            WireErrorKind::BadBody("response body length")
+        ));
+        // one stray byte after the block is trailing garbage
+        let wire = encode_frame(3, &timed_response());
+        let mut p = wire[4..].to_vec();
+        let crc_at = p.len() - CRC_BYTES;
+        p.insert(crc_at, 0xEE);
+        restamp(&mut p);
+        assert!(matches!(
+            decode_payload(&p).unwrap_err().kind,
+            WireErrorKind::BadBody("response body length")
         ));
     }
 

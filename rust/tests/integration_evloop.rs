@@ -542,3 +542,69 @@ fn event_loop_and_legacy_agree_with_the_oracle() {
         let _ = join.join().unwrap();
     }
 }
+
+#[test]
+fn phase_attribution_parity_across_serving_tiers() {
+    // the same attributed stream through the event loop and the
+    // legacy thread-pair tier must land the same number of samples in
+    // every phase histogram and the same per-program counts — the
+    // timing negotiation and phase stamping are tier-independent
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 1_000,
+        ops: 300,
+        ..ServingSpec::default()
+    };
+    for legacy in [false, true] {
+        let cfg = SrvConfig {
+            legacy_threads: legacy,
+            ..SrvConfig::default()
+        };
+        let (handle, join, ops) = start_server("live", &spec, cfg);
+        let report = run_loadgen(
+            &LoadgenConfig {
+                addr: handle.addr().to_string(),
+                conns: 2,
+                depth: 4,
+                attribution: true,
+                ..LoadgenConfig::default()
+            },
+            ops.clone(),
+        )
+        .expect("loadgen");
+        assert_eq!(report.completed as usize, ops.len(), "legacy={legacy}");
+        assert_eq!(report.busy, 0, "legacy={legacy}");
+        assert_eq!(
+            report.timed as usize,
+            ops.len(),
+            "legacy={legacy}: every response must carry a timing block"
+        );
+
+        handle.shutdown();
+        let summary = join.join().unwrap();
+        let g = |k: &str| {
+            summary
+                .registry
+                .get(k)
+                .and_then(|v| v.as_f64())
+                .unwrap_or(-1.0)
+        };
+        for key in [
+            "engine.phase.queue_wait.count",
+            "engine.phase.execute.count",
+            "srv.phase.completion.count",
+            "srv.phase.write.count",
+            "srv.e2e.prog0.count",
+            "engine.execute.prog0.count",
+        ] {
+            assert_eq!(
+                g(key) as usize,
+                ops.len(),
+                "legacy={legacy}: {key}"
+            );
+        }
+        check_stats_partition(&summary.registry)
+            .unwrap_or_else(|e| panic!("legacy={legacy}: {e}"));
+        assert_ledger_reconciles(&summary, "attribution parity");
+    }
+}

@@ -951,3 +951,230 @@ fn analyzer_deny_and_read_only_are_enforced_at_wire_admission() {
         );
     }
 }
+
+#[test]
+fn attribution_off_keeps_legacy_frames_and_records_nothing() {
+    // pay-for-what-you-ask: a run that never sets the REGISTER timing
+    // flag must see zero timing blocks on the wire (report.timed == 0
+    // — the decoder would hand Some(..) to the client if the server
+    // grew the frame), zero samples in every phase histogram (the
+    // names still exist: hists are created eagerly so dashboards see
+    // stable schemas), and no per-program labeled histograms at all
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 1_000,
+        ops: 300,
+        ..ServingSpec::default()
+    };
+    let (handle, join, ops) =
+        start_server("live", &spec, SrvConfig::default());
+    let addr = handle.addr().to_string();
+    let report = run_loadgen(
+        &LoadgenConfig {
+            addr: addr.clone(),
+            conns: 2,
+            depth: 8,
+            ..LoadgenConfig::default()
+        },
+        ops.clone(),
+    )
+    .expect("loadgen");
+    assert_eq!(report.completed as usize, ops.len());
+    assert_eq!(
+        report.timed, 0,
+        "server attached timing blocks without negotiation"
+    );
+
+    let snap = fetch_stats(&addr).expect("stats");
+    for key in [
+        "engine.phase.queue_wait.count",
+        "engine.phase.execute.count",
+        "engine.phase.transit.count",
+        "srv.phase.completion.count",
+        "srv.phase.write.count",
+    ] {
+        assert_eq!(
+            snap.get(key).and_then(|v| v.as_f64()),
+            Some(0.0),
+            "{key} recorded samples on an unattributed run"
+        );
+    }
+    assert!(
+        snap.get("srv.e2e.prog0.count").is_none(),
+        "per-program histogram materialized without the timing flag"
+    );
+
+    handle.shutdown();
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn attribution_slices_bound_rtt_and_fill_per_program_hists() {
+    // the full attributed path: flagged REGISTER, timing block on
+    // every RESPONSE, slow-op log at threshold 0 (log everything).
+    // Nesting invariant per row: queue + exec + transit + completion
+    // <= server_ns <= client RTT; residue is exactly the difference.
+    let spec = ServingSpec {
+        workload: "mix-c".into(),
+        keys: 1_000,
+        ops: 400,
+        ..ServingSpec::default()
+    };
+    let (handle, join, ops) =
+        start_server("live", &spec, SrvConfig::default());
+    let log_path = std::env::temp_dir()
+        .join(format!("pulse_slow_{}.jsonl", std::process::id()));
+    let report = run_loadgen(
+        &LoadgenConfig {
+            // one connection: wire seqs are per-connection, and the
+            // uniqueness check below joins rows on seq
+            addr: handle.addr().to_string(),
+            conns: 1,
+            depth: 8,
+            attribution: true,
+            slow_op_log: Some(log_path.to_str().unwrap().to_string()),
+            slow_op_us: 0,
+            ..LoadgenConfig::default()
+        },
+        ops.clone(),
+    )
+    .expect("loadgen");
+    assert_eq!(report.completed as usize, ops.len());
+    assert_eq!(report.busy, 0);
+    assert_eq!(report.errors, 0);
+    // mix-c ops are single-stage: one attributed response per op
+    assert_eq!(report.timed as usize, ops.len());
+
+    let text = std::fs::read_to_string(&log_path).expect("slow log");
+    let mut seqs = std::collections::HashSet::new();
+    let mut rows = 0usize;
+    for line in text.lines() {
+        let row = pulse::util::json::Json::parse(line)
+            .unwrap_or_else(|e| panic!("bad row {e}: {line}"));
+        let g = |k: &str| {
+            row.get(k)
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("row missing {k}: {line}"))
+        };
+        let slices = g("queue_ns")
+            + g("exec_ns")
+            + g("transit_ns")
+            + g("completion_ns");
+        assert!(
+            slices <= g("server_ns"),
+            "slices exceed server time: {line}"
+        );
+        assert!(
+            g("server_ns") <= g("rtt_ns"),
+            "server time exceeds client RTT: {line}"
+        );
+        assert_eq!(
+            g("residue_ns"),
+            g("rtt_ns") - g("server_ns"),
+            "residue is not rtt - server: {line}"
+        );
+        assert!(g("visits") >= 1.0, "attributed op with no visits: {line}");
+        assert!(
+            seqs.insert(g("seq").to_bits()),
+            "duplicate seq in slow-op log: {line}"
+        );
+        rows += 1;
+    }
+    assert_eq!(
+        rows, report.timed as usize,
+        "threshold 0 must log every attributed op"
+    );
+    let _ = std::fs::remove_file(&log_path);
+
+    handle.shutdown();
+    let summary = join.join().unwrap();
+    let g = |k: &str| {
+        summary
+            .registry
+            .get(k)
+            .and_then(|v| v.as_f64())
+            .unwrap_or(-1.0)
+    };
+    // loadgen assigns wire ids in first-appearance order: mix-c's one
+    // program is prog0
+    assert_eq!(g("srv.e2e.prog0.count") as usize, ops.len());
+    assert_eq!(g("engine.execute.prog0.count") as usize, ops.len());
+    for key in [
+        "engine.phase.queue_wait.count",
+        "engine.phase.execute.count",
+        "srv.phase.completion.count",
+        "srv.phase.write.count",
+    ] {
+        assert_eq!(g(key) as usize, ops.len(), "{key}");
+    }
+    check_stats_partition(&summary.registry).expect("partition");
+}
+
+#[test]
+fn queue_wait_slice_reflects_serialized_admission() {
+    // window 1 with a roomy pending buffer serializes 20k-hop walks:
+    // a pipelined burst all completes, and the most-queued op must
+    // have waited at least one full execution in the queue slice —
+    // queue-wait shows up exactly where queueing happens
+    let cfg = SrvConfig {
+        window: 1,
+        pending_cap: 16,
+        ..SrvConfig::default()
+    };
+    let SlowListServer { handle, join, iter, head } =
+        slow_list_server(cfg, 20_000);
+    let mut c = WireClient::connect(handle.addr()).unwrap();
+    c.register_opts(1, &iter.program, true).unwrap();
+
+    let n = 8u64;
+    let wall = std::time::Instant::now();
+    for _ in 0..n {
+        let seq = c.next_seq();
+        c.send(
+            seq,
+            &Frame::Request {
+                prog: 1,
+                budget: 0,
+                start: head,
+                sp: request_sp(),
+            },
+        )
+        .unwrap();
+    }
+    let mut timings = Vec::new();
+    for _ in 0..n {
+        match c.recv().unwrap().expect("frame").frame {
+            Frame::Response { status, timing, .. } => {
+                assert_eq!(status, Status::Return);
+                timings.push(
+                    timing.expect("negotiated conn lost its timing block"),
+                );
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let wall_ns = wall.elapsed().as_nanos() as u64;
+    for t in &timings {
+        let slices =
+            t.queue_ns + t.exec_ns + t.transit_ns + t.completion_ns;
+        assert!(
+            slices <= t.server_ns,
+            "slices {slices} > server {}",
+            t.server_ns
+        );
+        assert!(
+            t.server_ns <= wall_ns,
+            "server time {} exceeds client wall clock {wall_ns}",
+            t.server_ns
+        );
+        assert!(t.visits >= 1);
+    }
+    let qmax = timings.iter().map(|t| t.queue_ns).max().unwrap();
+    let emin = timings.iter().map(|t| t.exec_ns).min().unwrap();
+    assert!(
+        qmax > emin,
+        "serialized burst shows no queue wait (qmax={qmax} emin={emin})"
+    );
+    handle.shutdown();
+    let _ = join.join().unwrap();
+}
